@@ -1,0 +1,30 @@
+//! Ablation driver: effect of progressive model shrinking on the final
+//! model (a focused, faster version of Table 3 over one model).
+//!
+//!   cargo run --release --example ablation_shrinking -- [--profile smoke]
+
+use anyhow::Result;
+use profl::harness::ExpOpts;
+use profl::methods::{Method, ProFL};
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let model = opts
+        .models
+        .clone()
+        .and_then(|m| m.first().cloned())
+        .unwrap_or_else(|| "resnet18_w8_c10".into());
+    let cfg = opts.cfg(&model);
+    for shrink in [true, false] {
+        let s = ProFL { shrinking_override: Some(shrink), ..Default::default() }.run(&rt, &cfg)?;
+        println!(
+            "shrinking={shrink:<5} acc={:.2}%  comm={:.1}MB  rounds={}",
+            s.final_acc * 100.0,
+            s.comm_total() as f64 / 1e6,
+            s.rounds
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Figures 4 & 5 — effective movement + test accuracy vs round, per step.
+//!
+//! Runs ProFL and emits a per-round CSV (round, stage, step, EM, test_acc)
+//! under artifacts/results/fig4_<model>_<partition>.csv — the exact series
+//! the paper plots. The claim to check: EM starts high at each step,
+//! decays to a plateau, and the plateau coincides with the accuracy curve
+//! flattening (EM is a robust convergence indicator).
+//!
+//!   cargo run --release --example fig4_5 -- [--profile ...] [--models ...]
+
+use anyhow::Result;
+use profl::harness::{results_dir, ExpOpts};
+use profl::methods::{Method, ProFL};
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let models = opts.models.clone().unwrap_or_else(|| vec!["resnet18_w8_c10".into()]);
+
+    for model in &models {
+        for alpha in [None, Some(1.0)] {
+            let mut o = ExpOpts { alpha, ..ExpOpts::from_env()? };
+            o.alpha = alpha;
+            let cfg = o.cfg(model);
+            let label = if alpha.is_none() { "iid" } else { "noniid" };
+            let s = ProFL::default().run(&rt, &cfg)?;
+            let mut sink = profl::metrics::MetricsSink::new();
+            for r in &s.history {
+                sink.push(r.clone());
+            }
+            let path = results_dir().join(format!("fig4_{model}_{label}.csv"));
+            sink.write_csv(&path)?;
+            // Shape summary: per grow-step first/last EM.
+            println!("== {model} {label}");
+            for t in 1..=rt.model(model)?.num_blocks {
+                let ems: Vec<f64> = s
+                    .history
+                    .iter()
+                    .filter(|r| r.stage == "grow" && r.step == t && !r.effective_movement.is_nan())
+                    .map(|r| r.effective_movement)
+                    .collect();
+                if let (Some(first), Some(last)) = (ems.first(), ems.last()) {
+                    println!(
+                        "  step{t}: EM {first:.3} -> {last:.3} over {} evals ({})",
+                        ems.len(),
+                        if first > last { "decaying ✓" } else { "NOT decaying ✗" }
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Figure 6 — per-block training memory usage and participation rate.
+//!
+//! Pure memory-model experiment (no training): for each ProFL step
+//! artifact, report the paper-twin footprint at the accounting batch and
+//! the fraction of a 100-client U[100,900]MB fleet that can train it.
+//! Expected shape: early blocks cost the most memory (activations) and
+//! admit the fewest clients; the output layer admits ~everyone.
+//!
+//!   cargo run --release --example fig6
+
+use anyhow::Result;
+use profl::clients::ClientPool;
+use profl::config::RunConfig;
+use profl::data::SyntheticDataset;
+use profl::harness::{save_text, ExpOpts};
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let models = opts
+        .models
+        .clone()
+        .unwrap_or_else(|| vec!["resnet18_w8_c10".into(), "resnet34_w8_c10".into()]);
+
+    let mut out = String::from("Fig 6 — memory usage + participation rate per trained block\n");
+    for model in &models {
+        let cfg = RunConfig { model_tag: model.clone(), ..Default::default() };
+        let entry = rt.model(model)?;
+        let dataset = SyntheticDataset::new(entry.num_classes, cfg.seed);
+        let pool = ClientPool::build(
+            cfg.num_clients,
+            cfg.total_samples,
+            &dataset,
+            cfg.partition(),
+            cfg.memory.into(),
+            cfg.seed,
+        );
+        out.push_str(&format!("\n== {model} (accounting batch {})\n", cfg.memory.accounting_batch));
+        let mut rows: Vec<(String, String)> = vec![("Full".into(), "train_full".into())];
+        for t in 1..=entry.num_blocks {
+            rows.push((format!("{t}st B"), format!("train_t{t}")));
+        }
+        rows.push(("op".into(), format!("train_op_t{}", entry.num_blocks)));
+        for (label, art_name) in rows {
+            let art = entry.artifact(&art_name)?;
+            let mem = art.participation_mem();
+            let bytes = mem.bytes_at(cfg.memory.accounting_batch);
+            let pr = pool.participation_rate(&mem);
+            let line = format!(
+                "  {label:<7} {:>8.1} MB   PR={:>5.1}%   {}",
+                bytes as f64 / 1e6,
+                pr * 100.0,
+                "#".repeat((bytes / 20_000_000) as usize)
+            );
+            println!("{line}");
+            out.push_str(&line);
+            out.push('\n');
+        }
+    }
+    save_text("fig6", &out)
+}

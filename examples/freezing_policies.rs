@@ -1,0 +1,38 @@
+//! Freezing-policy driver: effective movement vs ParamAware vs no freezing
+//! at all (each step runs its full budget). Extends Table 4 with the
+//! "never freeze early" control.
+//!
+//!   cargo run --release --example freezing_policies -- [--profile smoke]
+
+use anyhow::Result;
+use profl::harness::ExpOpts;
+use profl::methods::{FreezePolicy, Method, ProFL};
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let model = opts
+        .models
+        .clone()
+        .and_then(|m| m.first().cloned())
+        .unwrap_or_else(|| "resnet18_w8_c10".into());
+    let cfg = opts.cfg(&model);
+
+    // Effective movement (ours)
+    let ours = ProFL::default().run(&rt, &cfg)?;
+    println!("effective-movement: acc={:.2}% rounds={}", ours.final_acc * 100.0, ours.rounds);
+
+    // ParamAware (Table 4 baseline)
+    let pa = ProFL { policy: FreezePolicy::ParamAware, ..Default::default() }.run(&rt, &cfg)?;
+    println!("param-aware:        acc={:.2}% rounds={}", pa.final_acc * 100.0, pa.rounds);
+
+    // Never-freeze-early control: disable the detector via a huge phi and
+    // patience so every step consumes its whole round budget.
+    let mut ctrl_cfg = cfg.clone();
+    ctrl_cfg.freeze.phi = 0.0; // slope is never considered flat
+    ctrl_cfg.freeze.patience_w = usize::MAX / 2;
+    let ctrl = ProFL::default().run(&rt, &ctrl_cfg)?;
+    println!("full-budget:        acc={:.2}% rounds={}", ctrl.final_acc * 100.0, ctrl.rounds);
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: the smallest end-to-end ProFL run.
+//!
+//! Loads the AOT artifacts, builds a 12-device fleet with heterogeneous
+//! 100-900 MB memory budgets, and runs the full ProFL pipeline —
+//! progressive model shrinking, per-block distillation, progressive model
+//! growing with effective-movement freezing — then prints the loss curve
+//! and final accuracy.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use profl::methods::{Method, ProFL};
+use profl::{artifacts_dir, RunConfig, Runtime};
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(&artifacts_dir())?;
+    let cfg = RunConfig::smoke("resnet18_w8_c10");
+    println!(
+        "ProFL quickstart: {} | {} clients, {}/round, budgets {}-{} MB",
+        cfg.model_tag, cfg.num_clients, cfg.per_round, cfg.memory.budget_min_mb, cfg.memory.budget_max_mb
+    );
+
+    let summary = ProFL::default().run(&rt, &cfg)?;
+
+    println!("\nstage/step  round  loss    train_acc  test_acc  EM      participants");
+    for r in &summary.history {
+        if r.round % 2 != 0 && r.test_acc.is_nan() {
+            continue; // keep the printout short
+        }
+        println!(
+            "{:<7}/{:<3} {:>5}  {:<7.3} {:<9.3} {:<9} {:<7} {}+{}",
+            r.stage,
+            r.step,
+            r.round,
+            r.train_loss,
+            r.train_acc,
+            if r.test_acc.is_nan() { "-".into() } else { format!("{:.3}", r.test_acc) },
+            if r.effective_movement.is_nan() { "-".into() } else { format!("{:.3}", r.effective_movement) },
+            r.participants,
+            r.fallback_participants,
+        );
+    }
+    println!(
+        "\nfinal: acc={:.2}%  participation={:.0}%  peak_client_mem={:.1}MB  comm={:.1}MB  rounds={}",
+        summary.final_acc * 100.0,
+        summary.participation_rate * 100.0,
+        summary.peak_client_mem as f64 / 1e6,
+        summary.comm_total() as f64 / 1e6,
+        summary.rounds
+    );
+    Ok(())
+}

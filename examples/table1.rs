@@ -1,0 +1,48 @@
+//! Table 1 — ResNet18/ResNet34 × {C10, C100} × {IID, Non-IID(α=1)} across
+//! AllSmall / ExclusiveFL / HeteroFL / DepthFL / ProFL: accuracy + PR.
+//!
+//!   cargo run --release --example table1 -- [--profile smoke|fast|paper]
+//!                                            [--models resnet18_w8_c10,...]
+//!
+//! Paper reference values are printed next to measured ones; the claim
+//! being reproduced is the *shape* (who wins, what collapses, PR column),
+//! not absolute accuracy (synthetic data, mini widths — DESIGN.md).
+
+use anyhow::Result;
+use profl::harness::{fmt_row, paper_reference, save_text, ExpOpts};
+use profl::methods::table_methods;
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let models = opts
+        .models
+        .clone()
+        .unwrap_or_else(|| vec!["resnet18_w8_c10".into(), "resnet34_w8_c10".into()]);
+    let alphas = [None, Some(1.0)];
+
+    let mut out = String::from("Table 1 — accuracy / participation rate\n");
+    for model in &models {
+        for alpha in alphas {
+            let mut o = ExpOpts { alpha, ..ExpOpts::from_env()? };
+            o.alpha = alpha;
+            let cfg = o.cfg(model);
+            let entry = rt.model(model)?;
+            out.push_str(&format!("\n== {model} {}\n", cfg.partition().label()));
+            for m in table_methods() {
+                let s = m.run(&rt, &cfg)?;
+                let mut line = fmt_row(&s);
+                if let Some((pa, ppr)) =
+                    paper_reference(&entry.family, entry.num_classes, alpha.is_none(), &s.method)
+                {
+                    line.push_str(&format!("   [paper: {pa:.1}% PR={ppr:.0}%]"));
+                }
+                println!("{line}");
+                out.push_str(&line);
+                out.push('\n');
+            }
+        }
+    }
+    save_text("table1", &out)
+}

@@ -1,0 +1,42 @@
+//! Table 2 — VGG11_bn/VGG16_bn rows (same protocol as Table 1).
+//!
+//!   cargo run --release --example table2 -- [--profile ...] [--models ...]
+
+use anyhow::Result;
+use profl::harness::{fmt_row, paper_reference, save_text, ExpOpts};
+use profl::methods::table_methods;
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let models = opts
+        .models
+        .clone()
+        .unwrap_or_else(|| vec!["vgg11_w8_c10".into(), "vgg16_w8_c10".into()]);
+    let alphas = [None, Some(1.0)];
+
+    let mut out = String::from("Table 2 — accuracy / participation rate (VGG)\n");
+    for model in &models {
+        for alpha in alphas {
+            let mut o = ExpOpts { alpha, ..ExpOpts::from_env()? };
+            o.alpha = alpha;
+            let cfg = o.cfg(model);
+            let entry = rt.model(model)?;
+            out.push_str(&format!("\n== {model} {}\n", cfg.partition().label()));
+            for m in table_methods() {
+                let s = m.run(&rt, &cfg)?;
+                let mut line = fmt_row(&s);
+                if let Some((pa, ppr)) =
+                    paper_reference(&entry.family, entry.num_classes, alpha.is_none(), &s.method)
+                {
+                    line.push_str(&format!("   [paper: {pa:.1}% PR={ppr:.0}%]"));
+                }
+                println!("{line}");
+                out.push_str(&line);
+                out.push('\n');
+            }
+        }
+    }
+    save_text("table2", &out)
+}

@@ -1,0 +1,50 @@
+//! Table 3 — ablation: progressive model shrinking ON vs OFF, per-step
+//! sub-model accuracy + final global accuracy.
+//!
+//!   cargo run --release --example table3 -- [--profile ...] [--models ...]
+
+use anyhow::Result;
+use profl::harness::{save_text, ExpOpts};
+use profl::methods::{Method, ProFL};
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let models = opts.models.clone().unwrap_or_else(|| vec!["resnet18_w8_c10".into()]);
+
+    let mut out = String::from("Table 3 — progressive model shrinking ablation\n");
+    for model in &models {
+        for alpha in [None, Some(1.0)] {
+            let mut o = ExpOpts { alpha, ..ExpOpts::from_env()? };
+            o.alpha = alpha;
+            let cfg = o.cfg(model);
+            out.push_str(&format!("\n== {model} {}\n", cfg.partition().label()));
+            for shrink in [true, false] {
+                let m = ProFL { shrinking_override: Some(shrink), ..Default::default() };
+                let s = m.run(&rt, &cfg)?;
+                // Per-step sub-model accuracy: last grow-stage eval per step.
+                let steps = s
+                    .history
+                    .iter()
+                    .filter(|r| r.stage == "grow" && !r.test_acc.is_nan())
+                    .fold(std::collections::BTreeMap::new(), |mut m, r| {
+                        m.insert(r.step, r.test_acc);
+                        m
+                    });
+                let step_str: Vec<String> =
+                    steps.iter().map(|(t, a)| format!("step{t}={:.1}%", a * 100.0)).collect();
+                let line = format!(
+                    "shrinking={:<5}  {}  global={:.1}%",
+                    shrink,
+                    step_str.join(" "),
+                    s.final_acc * 100.0
+                );
+                println!("{line}");
+                out.push_str(&line);
+                out.push('\n');
+            }
+        }
+    }
+    save_text("table3", &out)
+}

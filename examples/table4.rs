@@ -1,0 +1,37 @@
+//! Table 4 — freezing policies: effective movement (ours) vs ParamAware
+//! (round budget ∝ block parameter count).
+//!
+//!   cargo run --release --example table4 -- [--profile ...] [--models ...]
+
+use anyhow::Result;
+use profl::harness::{save_text, ExpOpts};
+use profl::methods::{FreezePolicy, Method, ProFL};
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let opts = ExpOpts::from_env()?;
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let models = opts.models.clone().unwrap_or_else(|| vec!["resnet18_w8_c10".into()]);
+
+    let mut out = String::from("Table 4 — block freezing determination vs ParamAware\n");
+    for model in &models {
+        for alpha in [None, Some(1.0)] {
+            let mut o = ExpOpts { alpha, ..ExpOpts::from_env()? };
+            o.alpha = alpha;
+            let cfg = o.cfg(model);
+            out.push_str(&format!("\n== {model} {}\n", cfg.partition().label()));
+            for (label, policy) in
+                [("Ours", FreezePolicy::EffectiveMovement), ("ParamAware", FreezePolicy::ParamAware)]
+            {
+                let m = ProFL { policy, ..Default::default() };
+                let s = m.run(&rt, &cfg)?;
+                let line =
+                    format!("{label:<12} acc={:.1}%  rounds={}", s.final_acc * 100.0, s.rounds);
+                println!("{line}");
+                out.push_str(&line);
+                out.push('\n');
+            }
+        }
+    }
+    save_text("table4", &out)
+}

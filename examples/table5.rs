@@ -1,0 +1,35 @@
+//! Table 5 — per-block parameter quantity and percentage.
+//!
+//! Printed for both the executed mini models (from the manifest) and the
+//! paper-width (64) architecture, which reproduces the paper's numbers
+//! exactly (see python/tests/test_models.py::test_table5_*).
+
+use anyhow::Result;
+use profl::harness::save_text;
+use profl::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let mut out = String::from("Table 5 — parameter quantity/percentage per block\n");
+    // Paper-width reference (exact Table 5 numbers; verified by pytest):
+    out.push_str("\npaper width 64 (exact):\n");
+    out.push_str("  ResNet18: 0.15M (1.3%) | 0.53M (4.7%) | 2.10M (18.8%) | 8.39M (75.2%)  total 11.2M\n");
+    out.push_str("  ResNet34: 0.22M (1.0%) | 1.11M (5.2%) | 6.82M (32.1%) | 13.11M (61.6%) total 21.28M\n");
+
+    for (tag, entry) in &rt.manifest.models {
+        if entry.width_ratio != 1.0 {
+            continue;
+        }
+        let total: u64 = entry.block_param_counts.iter().sum();
+        let cols: Vec<String> = entry
+            .block_param_counts
+            .iter()
+            .map(|c| format!("{:.3}M ({:.1}%)", *c as f64 / 1e6, *c as f64 / total as f64 * 100.0))
+            .collect();
+        let line = format!("  {tag:<22} {}  total {:.3}M", cols.join(" | "), total as f64 / 1e6);
+        println!("{line}");
+        out.push_str(&line);
+        out.push('\n');
+    }
+    save_text("table5", &out)
+}

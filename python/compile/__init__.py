@@ -1,0 +1,3 @@
+"""Build-time-only Python: L1 Pallas kernels + L2 JAX model graphs + the
+AOT pipeline that lowers them to HLO-text artifacts for the Rust runtime.
+Never imported on the request path."""

@@ -1,0 +1,399 @@
+"""AOT compiler: lower every ProFL artifact to HLO text + manifest.json.
+
+This is the *only* place Python runs — once, at build time (`make
+artifacts`). The Rust coordinator is self-contained afterwards: it reads
+``artifacts/manifest.json``, loads each ``*.hlo.txt`` through
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client and
+executes on the round path.
+
+Interchange is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids.
+
+Artifact inventory per model tag (family × width × classes):
+
+  train_t{t}       step-t sub-model SGD (ProFL grow & shrink; §3.1/3.2)
+  train_op_t{t}    output-module-only SGD (clients below every block; §4.1)
+  distill_t{t}     block→surrogate Map step (§3.2), t = 2..T
+  eval_t{t}        step-t sub-model test pass (t = T ⇒ full model)
+  train_full       end-to-end SGD (ExclusiveFL; HeteroFL/AllSmall on
+                   width-ratio variant tags)
+  depthfl_train_d{d}, depthfl_eval   DepthFL baseline
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts                # default set
+  python -m compile.aot --set full                            # all tables
+  python -m compile.aot --kernels pallas --models resnet18:8:10
+  python -m compile.aot --report                              # L1 perf report
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import graphs, memory
+from .graphs import InSpec
+from .kernels import conv as kconv
+from .kernels.matmul import mxu_utilization, vmem_bytes
+from .models import ModelCfg, ModelDef, build, block_param_counts
+
+# Static execution geometry, shared with Rust via the manifest.
+# Sized for the single-core CPU PJRT testbed: one train call = SCAN_STEPS
+# SGD steps over TRAIN_BATCH samples (~0.2s on one core for the mini
+# ResNet18); the paper-twin memory accounting uses its own batch (128).
+TRAIN_BATCH = 16
+SCAN_STEPS = 2  # local batches per executable call (one "epoch chunk")
+EVAL_BATCH = 128
+
+# Width ratios offered to HeteroFL / AllSmall (HeteroFL's 4 complexity
+# levels; AllSmall uses whichever its min-memory client affords).
+WIDTH_RATIOS = (0.5, 0.25, 0.125)
+
+DEFAULT_SET = ["resnet18:8:10"]
+FULL_SET = [
+    "resnet18:8:10",
+    "resnet18:8:100",
+    "resnet34:8:10",
+    "resnet34:8:100",
+    "vgg11:8:10",
+    "vgg11:8:100",
+    "vgg16:8:10",
+    "vgg16:8:100",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shaped(spec: InSpec, names: list[str]):
+    return [jnp.zeros(spec.shapes[n], jnp.float32) for n in names]
+
+
+def _train_example_args(spec: InSpec):
+    xs = jnp.zeros((SCAN_STEPS, TRAIN_BATCH, 32, 32, 3), jnp.float32)
+    ys = jnp.zeros((SCAN_STEPS, TRAIN_BATCH), jnp.int32)
+    lr = jnp.float32(0.0)
+    return _shaped(spec, spec.trainable) + _shaped(spec, spec.frozen) + [xs, ys, lr]
+
+
+def _distill_example_args(spec: InSpec):
+    xs = jnp.zeros((SCAN_STEPS, TRAIN_BATCH, 32, 32, 3), jnp.float32)
+    lr = jnp.float32(0.0)
+    return _shaped(spec, spec.trainable) + _shaped(spec, spec.frozen) + [xs, lr]
+
+
+def _eval_example_args(spec: InSpec):
+    x = jnp.zeros((EVAL_BATCH, 32, 32, 3), jnp.float32)
+    y = jnp.zeros((EVAL_BATCH,), jnp.int32)
+    return _shaped(spec, spec.frozen) + [x, y]
+
+
+def _input_entries(spec: InSpec, kind: str) -> list[dict]:
+    ins = []
+    for n in spec.trainable:
+        ins.append({"name": n, "role": "trainable", "shape": list(spec.shapes[n])})
+    for n in spec.frozen:
+        role = "param" if kind.startswith("eval") else "frozen"
+        ins.append({"name": n, "role": role, "shape": list(spec.shapes[n])})
+    if kind == "train":
+        ins.append({"name": "xs", "role": "data_x", "shape": [SCAN_STEPS, TRAIN_BATCH, 32, 32, 3]})
+        ins.append({"name": "ys", "role": "data_y", "shape": [SCAN_STEPS, TRAIN_BATCH]})
+        ins.append({"name": "lr", "role": "lr", "shape": []})
+    elif kind == "distill":
+        ins.append({"name": "xs", "role": "data_x", "shape": [SCAN_STEPS, TRAIN_BATCH, 32, 32, 3]})
+        ins.append({"name": "lr", "role": "lr", "shape": []})
+    elif kind == "eval":
+        ins.append({"name": "x", "role": "data_x", "shape": [EVAL_BATCH, 32, 32, 3]})
+        ins.append({"name": "y", "role": "data_y", "shape": [EVAL_BATCH]})
+    return ins
+
+
+def _outputs(spec: InSpec, kind: str) -> list[str]:
+    if kind == "train":
+        return spec.trainable + ["loss", "correct"]
+    if kind == "distill":
+        return spec.trainable + ["loss"]
+    return ["loss_sum", "correct"]
+
+
+class Builder:
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out_dir = out_dir
+        self.verbose = verbose
+        self.manifest: dict = {
+            "version": 1,
+            "kernel_backend": kconv.get_default_backend(),
+            "train_batch": TRAIN_BATCH,
+            "scan_steps": SCAN_STEPS,
+            "eval_batch": EVAL_BATCH,
+            "models": {},
+        }
+
+    def _lower(self, tag: str, name: str, fn, args, spec: InSpec, kind: str, extra: dict):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        rel = f"{tag}/{name}.hlo.txt"
+        path = os.path.join(self.out_dir, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "path": rel,
+            "kind": kind,
+            "inputs": _input_entries(spec, kind),
+            "outputs": _outputs(spec, kind),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            **extra,
+        }
+        self.manifest["models"][tag]["artifacts"][name] = entry
+        if self.verbose:
+            print(f"  {tag}/{name}: {len(text)/1e6:.2f} MB HLO in {time.time()-t0:.1f}s")
+
+    def build_model(self, cfg: ModelCfg, profl: bool = True, depthfl: bool = True):
+        """Lower every artifact for one model tag.
+
+        Memory coefficients are computed twice: for the mini model actually
+        executed (``mem``) and for its paper-width twin at width 64
+        (``mem_paper``). The Rust memory substrate uses ``mem_paper`` so
+        client participation reproduces the paper's 100-900 MB device
+        dynamics while the compute stays laptop-scale (DESIGN.md
+        §Substitutions).
+        """
+        mdl = build(cfg)
+        paper = build(ModelCfg(cfg.family, 64, cfg.num_classes, width_ratio=cfg.width_ratio))
+        tag = cfg.tag
+        T = mdl.num_blocks
+        full_spec = graphs.submodel_shapes(mdl, T)
+        paper_full_spec = graphs.submodel_shapes(paper, T)
+
+        # Union of every parameter the Rust store must hold for this tag.
+        all_params: dict[str, list[int]] = {}
+
+        def note(spec: InSpec):
+            for n in spec.trainable + spec.frozen:
+                all_params[n] = list(spec.shapes[n])
+
+        block_names = []
+        for t in range(1, T + 1):
+            from . import ops as O
+
+            names = list(O.param_shapes(mdl.blocks[t - 1], mdl.block_prefix(t)).keys())
+            block_names.append(names)
+
+        self.manifest["models"][tag] = {
+            "family": cfg.family,
+            "width": cfg.width,
+            "num_classes": cfg.num_classes,
+            "width_ratio": cfg.width_ratio,
+            "image_size": cfg.image_size,
+            "num_blocks": T,
+            "block_param_counts": block_param_counts(mdl),
+            "block_params": block_names,
+            "artifacts": {},
+            "mem": {
+                "train_full": memory.train_full_mem(mdl).to_json(),
+                "eval_full": memory.eval_mem(mdl, full_spec).to_json(),
+                "output_layer": memory.output_layer_mem(mdl).to_json(),
+            },
+            "mem_paper": {
+                "train_full": memory.train_full_mem(paper).to_json(),
+                "eval_full": memory.eval_mem(paper, paper_full_spec).to_json(),
+                "output_layer": memory.output_layer_mem(paper).to_json(),
+            },
+        }
+
+        if profl:
+            for t in range(1, T + 1):
+                fn, spec = graphs.make_train_step(mdl, t)
+                note(spec)
+                self._lower(
+                    tag, f"train_t{t}", fn, _train_example_args(spec), spec, "train",
+                    {"step": t, "mem": memory.train_step_mem(mdl, t, spec).to_json(),
+                     "mem_paper": memory.train_step_mem(paper, t).to_json()},
+                )
+                # Output-module-only variant (lowest-memory clients).
+                fo, so = self._op_only(mdl, t, spec)
+                self._lower(
+                    tag, f"train_op_t{t}", fo, _train_example_args(so), so, "train",
+                    {"step": t, "mem": memory.output_layer_mem(mdl).to_json(),
+                     "mem_paper": memory.output_layer_mem(paper).to_json()},
+                )
+                fe, se = graphs.make_eval_sub(mdl, t)
+                self._lower(
+                    tag, f"eval_t{t}", fe, _eval_example_args(se), se, "eval",
+                    {"step": t, "mem": memory.eval_mem(mdl, se).to_json(),
+                     "mem_paper": memory.eval_mem(paper, graphs.submodel_shapes(paper, t)).to_json()},
+                )
+            for t in range(2, T + 1):
+                fd, sd = graphs.make_distill_step(mdl, t)
+                note(sd)
+                _, psd = graphs.make_distill_step(paper, t)
+                self._lower(
+                    tag, f"distill_t{t}", fd, _distill_example_args(sd), sd, "distill",
+                    {"step": t, "mem": memory.distill_mem(mdl, t, sd).to_json(),
+                     "mem_paper": memory.distill_mem(paper, t, psd).to_json()},
+                )
+
+        # Full-model end-to-end (ExclusiveFL on r=1; HeteroFL/AllSmall on
+        # their width-ratio variant tags).
+        ff, sf = graphs.make_train_full(mdl)
+        note(sf)
+        self._lower(
+            tag, "train_full", ff, _train_example_args(sf), sf, "train",
+            {"mem": memory.train_full_mem(mdl).to_json(),
+             "mem_paper": memory.train_full_mem(paper).to_json()},
+        )
+        if not profl:
+            fe, se = graphs.make_eval_sub(mdl, T)
+            self._lower(
+                tag, f"eval_t{T}", fe, _eval_example_args(se), se, "eval",
+                {"step": T, "mem": memory.eval_mem(mdl, se).to_json(),
+                 "mem_paper": memory.eval_mem(paper, paper_full_spec).to_json()},
+            )
+
+        if depthfl:
+            for d in range(1, T + 1):
+                fd, sd = graphs.make_depthfl_train(mdl, d)
+                note(sd)
+                self._lower(
+                    tag, f"depthfl_train_d{d}", fd, _train_example_args(sd), sd, "train",
+                    {"depth": d, "mem": memory.depthfl_mem(mdl, d).to_json(),
+                     "mem_paper": memory.depthfl_mem(paper, d).to_json()},
+                )
+            fe, se = graphs.make_depthfl_eval(mdl)
+            self._lower(
+                tag, "depthfl_eval", fe, _eval_example_args(se), se, "eval",
+                {"mem": memory.eval_mem(mdl, se).to_json(),
+                 "mem_paper": memory.eval_mem(paper, graphs.depthfl_shapes(paper, T)).to_json()},
+            )
+
+        self.manifest["models"][tag]["params"] = all_params
+
+    @staticmethod
+    def _op_only(mdl: ModelDef, t: int, spec: InSpec):
+        """Variant of train_t{t} with only the output-module linear (or the
+        head at t=T) trainable; everything else frozen."""
+        op_names = [n for n in spec.trainable if n.startswith(("op/", "head/fc"))]
+        so = InSpec(
+            trainable=op_names,
+            frozen=[n for n in spec.trainable if n not in op_names] + spec.frozen,
+            shapes=spec.shapes,
+        )
+        fn, _ = graphs.make_train_step(mdl, t)
+        # Re-wrap: the underlying graph is the same; we re-partition args.
+        full = spec
+
+        def fo(*args):
+            nt, nf = len(so.trainable), len(so.frozen)
+            by_name = dict(zip(so.trainable + so.frozen, args[: nt + nf]))
+            xs, ys, lr = args[nt + nf :]
+            inner_args = (
+                [by_name[n] for n in full.trainable]
+                + [by_name[n] for n in full.frozen]
+                + [xs, ys, lr]
+            )
+            out = fn(*inner_args)
+            new_by_name = dict(zip(full.trainable, out[: len(full.trainable)]))
+            # Only the op params take their updated values.
+            return tuple(new_by_name[n] for n in so.trainable) + out[-2:]
+
+        return fo, so
+
+    def write(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        os.makedirs(self.out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        n_art = sum(len(m["artifacts"]) for m in self.manifest["models"].values())
+        print(f"wrote {path}: {len(self.manifest['models'])} models, {n_art} artifacts")
+
+
+def parse_model(s: str) -> ModelCfg:
+    """'resnet18:8:10' -> ModelCfg(family, width, classes)."""
+    fam, width, classes = s.split(":")
+    return ModelCfg(fam, int(width), int(classes))
+
+
+def perf_report(width: int = 8):
+    """L1 perf accounting: VMEM footprint + MXU utilization of the GEMM
+    schedule for every conv (DESIGN.md §Perf). `width` selects the model
+    scale: 8 = the executed minis, 64 = the paper-width architecture the
+    schedule is actually designed for (K/N reach the 128-wide MXU tiles)."""
+    cfg = ModelCfg("resnet18", width, 10)
+    mdl = build(cfg)
+    print(f"Pallas GEMM tile 128x128x128: VMEM {vmem_bytes()/1024:.0f} KiB (budget ~16 MiB)")
+    print(f"{'conv (block)':<28}{'M':>8}{'K':>7}{'N':>6}{'MXU util':>10}")
+    from . import ops as O
+
+    hwc = (32, 32, 3)
+    for t, blk in enumerate(mdl.blocks, 1):
+        for op in blk:
+            convs = []
+            if op.kind == "conv":
+                convs = [(op.k, op.ci, op.co, op.stride)]
+            elif op.kind == "basic":
+                convs = [(op.k, op.ci, op.co, op.stride), (op.k, op.co, op.co, 1)]
+            o = O.out_shape(op, hwc)
+            for k, ci, co, s in convs:
+                m = TRAIN_BATCH * o[0] * o[1]
+                kk = k * k * ci
+                print(
+                    f"{'b'+str(t)+'/'+op.name:<28}{m:>8}{kk:>7}{co:>6}"
+                    f"{mxu_utilization(m, co, kk):>10.2f}"
+                )
+            hwc = o
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default=None, help="comma list fam:width:classes")
+    ap.add_argument("--set", choices=["default", "full"], default="default")
+    ap.add_argument("--kernels", choices=["native", "pallas"], default="native")
+    ap.add_argument("--no-depthfl", action="store_true")
+    ap.add_argument("--no-ratios", action="store_true")
+    ap.add_argument("--report", action="store_true", help="print L1 perf accounting and exit")
+    ap.add_argument("--report-width", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.report:
+        perf_report(args.report_width)
+        return
+
+    kconv.set_default_backend(args.kernels)
+    specs = (
+        [parse_model(s) for s in args.models.split(",")]
+        if args.models
+        else [parse_model(s) for s in (FULL_SET if args.set == "full" else DEFAULT_SET)]
+    )
+
+    b = Builder(os.path.abspath(args.out_dir))
+    for cfg in specs:
+        print(f"[{cfg.tag}]")
+        b.build_model(cfg, profl=True, depthfl=not args.no_depthfl)
+        if not args.no_ratios:
+            for r in WIDTH_RATIOS:
+                rcfg = ModelCfg(cfg.family, cfg.width, cfg.num_classes, width_ratio=r)
+                print(f"[{rcfg.tag}]")
+                b.build_model(rcfg, profl=False, depthfl=False)
+    b.write()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,311 @@
+"""Step-wise training/eval/distillation graphs (L2 → HLO artifacts).
+
+Every function here returns ``(fn, in_spec)`` where ``fn`` is the jax
+function ``aot.py`` lowers and ``in_spec`` names the ordered parameter
+lists so the Rust runtime can marshal flat f32 buffers positionally:
+
+  train:   (trainable…, frozen…, xs, ys, lr) -> (new_trainable…, loss, correct)
+  distill: (trainable…, frozen…, xs, lr)     -> (new_trainable…, loss)
+  eval:    (params…, x, y)                   -> (loss_sum, correct)
+
+``xs``/``ys`` are *stacked* local batches ``(S, B, …)`` consumed by a
+``lax.scan`` of S plain-SGD steps — one executable call per local epoch
+chunk, which keeps the Rust↔PJRT crossing off the per-batch path (see
+DESIGN.md §Perf).
+
+Sub-model composition (paper §3.1/3.2): the step-t sub-model is
+``[θ*_{1,F}, …, θ*_{t-1,F}, θ_t, θ_op]`` with
+``θ_op = [θ_{t+1,Conv}, …, θ_{T,Conv}, θ_L]`` — frozen prefix, trainable
+block, surrogate tail + linear. The same graph serves both progressive
+model *shrinking* and *growing*; the two stages differ only in which
+parameter values Rust feeds (random-init vs trained prefix) and in the
+step order (T→2 vs 1→T).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import ops as O
+from .models import ModelDef
+
+
+@dataclass
+class InSpec:
+    """Ordered parameter-name lists for an artifact (goes in the manifest)."""
+
+    trainable: list[str] = field(default_factory=list)
+    frozen: list[str] = field(default_factory=list)
+    # name -> shape for everything above
+    shapes: dict[str, tuple[int, ...]] = field(default_factory=dict)
+
+
+def _ordered(shapes: dict[str, tuple[int, ...]]) -> list[str]:
+    """Deterministic parameter order: insertion order of the op-lists
+    (layer order), which both sides reproduce from the manifest."""
+    return list(shapes.keys())
+
+
+# ---------------------------------------------------------------------------
+# Sub-model forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _forward_blocks(mdl: ModelDef, params, x, upto: int):
+    """Blocks 1..upto (inclusive)."""
+    for t in range(1, upto + 1):
+        x = O.forward_ops(params, mdl.blocks[t - 1], x, mdl.block_prefix(t))
+    return x
+
+
+def _forward_output_module(mdl: ModelDef, params, x, t: int):
+    """Surrogates t+1..T, then gap + the module's own linear ``op/fc``;
+    at t == T this is the model head itself."""
+    T = mdl.num_blocks
+    if t == T:
+        return O.forward_ops(params, mdl.head, x, "head/")
+    for u in range(t + 1, T + 1):
+        x = O.forward_ops(params, mdl.surrogates[u - 1], x, f"s{u}/")
+    # gap + the output module's own linear θ_L:
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["op/fc/w"] + params["op/fc/b"]
+
+
+def submodel_shapes(mdl: ModelDef, t: int) -> InSpec:
+    """Parameter inventory for the step-t sub-model (grow or shrink)."""
+    T = mdl.num_blocks
+    spec = InSpec()
+    shapes: dict[str, tuple[int, ...]] = {}
+    for u in range(1, t + 1):
+        shapes.update(O.param_shapes(mdl.blocks[u - 1], mdl.block_prefix(u)))
+    if t == T:
+        shapes.update(O.param_shapes(mdl.head, "head/"))
+    else:
+        for u in range(t + 1, T + 1):
+            shapes.update(O.param_shapes(mdl.surrogates[u - 1], f"s{u}/"))
+        c_last = mdl.block_out_hwc(T)[2]
+        shapes["op/fc/w"] = (c_last, mdl.cfg.num_classes)
+        shapes["op/fc/b"] = (mdl.cfg.num_classes,)
+    spec.shapes = shapes
+    frozen_pref = tuple(mdl.block_prefix(u) for u in range(1, t))
+    for name in _ordered(shapes):
+        (spec.frozen if name.startswith(frozen_pref) else spec.trainable).append(name)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Loss / step helpers
+# ---------------------------------------------------------------------------
+
+
+def _ce_loss(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _correct(logits: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+def _sgd_scan(loss_fn, trainable: dict, frozen: dict, xs, ys, lr):
+    """S steps of plain SGD over stacked batches via lax.scan.
+
+    Plain (momentum-free) local SGD is the FedAvg-standard client
+    optimizer and keeps executable I/O to parameters only.
+    """
+
+    def step(tr, batch):
+        x, y = batch
+        (loss, corr), grads = jax.value_and_grad(loss_fn, has_aux=True)(tr, frozen, x, y)
+        tr = jax.tree.map(lambda p, g: p - lr * g, tr, grads)
+        return tr, (loss, corr)
+
+    trainable, (losses, corrs) = jax.lax.scan(step, trainable, (xs, ys))
+    return trainable, jnp.mean(losses), jnp.sum(corrs)
+
+
+def _pack(names: list[str], arrays: tuple) -> dict[str, jax.Array]:
+    return dict(zip(names, arrays))
+
+
+# ---------------------------------------------------------------------------
+# Artifact graph builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(mdl: ModelDef, t: int):
+    """Step-t sub-model training (ProFL grow & shrink share this graph)."""
+    spec = submodel_shapes(mdl, t)
+
+    def loss_fn(tr, fr, x, y):
+        params = {**tr, **fr}
+        h = _forward_blocks(mdl, params, x, t)
+        logits = _forward_output_module(mdl, params, h, t)
+        return _ce_loss(logits, y), _correct(logits, y)
+
+    def fn(*args):
+        nt, nf = len(spec.trainable), len(spec.frozen)
+        tr = _pack(spec.trainable, args[:nt])
+        fr = _pack(spec.frozen, args[nt : nt + nf])
+        xs, ys, lr = args[nt + nf :]
+        tr, loss, corr = _sgd_scan(loss_fn, tr, fr, xs, ys, lr)
+        return tuple(tr[n] for n in spec.trainable) + (loss, corr)
+
+    return fn, spec
+
+
+def make_train_full(mdl: ModelDef):
+    """Full-model end-to-end training (ExclusiveFL, HeteroFL and AllSmall
+    width variants use this on their respective ModelCfg)."""
+    T = mdl.num_blocks
+    spec = submodel_shapes(mdl, T)
+    spec.trainable = spec.trainable + spec.frozen  # everything updates
+    spec.frozen = []
+
+    def loss_fn(tr, fr, x, y):
+        h = _forward_blocks(mdl, tr, x, T)
+        logits = O.forward_ops(tr, mdl.head, h, "head/")
+        return _ce_loss(logits, y), _correct(logits, y)
+
+    def fn(*args):
+        nt = len(spec.trainable)
+        tr = _pack(spec.trainable, args[:nt])
+        xs, ys, lr = args[nt:]
+        tr, loss, corr = _sgd_scan(loss_fn, tr, {}, xs, ys, lr)
+        return tuple(tr[n] for n in spec.trainable) + (loss, corr)
+
+    return fn, spec
+
+
+def make_distill_step(mdl: ModelDef, t: int):
+    """§3.2 *Map*: distill trained block t into its surrogate θ_{t,Conv}.
+
+    trainable = surrogate-t params; frozen = blocks 1..t (prefix feeds the
+    data forward, block t produces the target features). MSE objective.
+    """
+    assert 2 <= t <= mdl.num_blocks, "block 1 is never replaced by a surrogate"
+    spec = InSpec()
+    shapes: dict[str, tuple[int, ...]] = {}
+    shapes.update(O.param_shapes(mdl.surrogates[t - 1], f"s{t}/"))
+    spec.trainable = _ordered(shapes)
+    fro: dict[str, tuple[int, ...]] = {}
+    for u in range(1, t + 1):
+        fro.update(O.param_shapes(mdl.blocks[u - 1], mdl.block_prefix(u)))
+    spec.frozen = _ordered(fro)
+    shapes.update(fro)
+    spec.shapes = shapes
+
+    def loss_fn(tr, fr, x, _y):
+        a = _forward_blocks(mdl, fr, x, t - 1)
+        target = O.forward_ops(fr, mdl.blocks[t - 1], a, mdl.block_prefix(t))
+        pred = O.forward_ops(tr, mdl.surrogates[t - 1], a, f"s{t}/")
+        return jnp.mean((pred - jax.lax.stop_gradient(target)) ** 2), jnp.float32(0.0)
+
+    def fn(*args):
+        nt, nf = len(spec.trainable), len(spec.frozen)
+        tr = _pack(spec.trainable, args[:nt])
+        fr = _pack(spec.frozen, args[nt : nt + nf])
+        xs, lr = args[nt + nf :]
+        ys = jnp.zeros(xs.shape[:2], jnp.int32)  # unused by the MSE loss
+        tr, loss, _ = _sgd_scan(loss_fn, tr, fr, xs, ys, lr)
+        return tuple(tr[n] for n in spec.trainable) + (loss,)
+
+    return fn, spec
+
+
+def make_eval_sub(mdl: ModelDef, t: int):
+    """Step-t sub-model evaluation (Fig 4/5 curves, Table 3 rows); at
+    t == T this is full-model evaluation."""
+    spec = submodel_shapes(mdl, t)
+    names = spec.trainable + spec.frozen  # single ordered list for eval
+    order = _ordered(spec.shapes)
+
+    def fn(*args):
+        params = _pack(order, args[: len(order)])
+        x, y = args[len(order) :]
+        h = _forward_blocks(mdl, params, x, t)
+        logits = _forward_output_module(mdl, params, h, t)
+        loss = _ce_loss(logits, y) * x.shape[0]  # sum-form for exact averaging
+        return loss, _correct(logits, y)
+
+    eval_spec = InSpec(trainable=[], frozen=order, shapes=spec.shapes)
+    return fn, eval_spec
+
+
+# ---------------------------------------------------------------------------
+# DepthFL (baseline): depth-d prefix + per-block classifiers + self-distill
+# ---------------------------------------------------------------------------
+
+
+def depthfl_shapes(mdl: ModelDef, d: int) -> InSpec:
+    spec = InSpec()
+    shapes: dict[str, tuple[int, ...]] = {}
+    for u in range(1, d + 1):
+        shapes.update(O.param_shapes(mdl.blocks[u - 1], mdl.block_prefix(u)))
+        c = mdl.block_out_hwc(u)[2]
+        shapes[f"cls{u}/fc/w"] = (c, mdl.cfg.num_classes)
+        shapes[f"cls{u}/fc/b"] = (mdl.cfg.num_classes,)
+    spec.shapes = shapes
+    spec.trainable = _ordered(shapes)
+    return spec
+
+
+def _depthfl_logits(mdl: ModelDef, params, x, d: int) -> list[jax.Array]:
+    outs = []
+    h = x
+    for u in range(1, d + 1):
+        h = O.forward_ops(params, mdl.blocks[u - 1], h, mdl.block_prefix(u))
+        feat = jnp.mean(h, axis=(1, 2))
+        outs.append(feat @ params[f"cls{u}/fc/w"] + params[f"cls{u}/fc/b"])
+    return outs
+
+
+def make_depthfl_train(mdl: ModelDef, d: int, kd_weight: float = 0.3):
+    """DepthFL local objective: Σ_i CE(cls_i) + mutual self-distillation
+    (KL of each classifier against the stop-gradient consensus)."""
+    spec = depthfl_shapes(mdl, d)
+
+    def loss_fn(tr, fr, x, y):
+        logits = _depthfl_logits(mdl, tr, x, d)
+        ce = sum(_ce_loss(lg, y) for lg in logits) / len(logits)
+        kd = jnp.float32(0.0)
+        if len(logits) > 1:
+            probs = [jax.nn.softmax(lg) for lg in logits]
+            consensus = jax.lax.stop_gradient(sum(probs) / len(probs))
+            for lg in logits:
+                logp = jax.nn.log_softmax(lg)
+                kd += -jnp.mean(jnp.sum(consensus * logp, axis=1))
+            kd = kd / len(logits)
+        return ce + kd_weight * kd, _correct(logits[-1], y)
+
+    def fn(*args):
+        nt = len(spec.trainable)
+        tr = _pack(spec.trainable, args[:nt])
+        xs, ys, lr = args[nt:]
+        tr, loss, corr = _sgd_scan(loss_fn, tr, {}, xs, ys, lr)
+        return tuple(tr[n] for n in spec.trainable) + (loss, corr)
+
+    return fn, spec
+
+
+def make_depthfl_eval(mdl: ModelDef):
+    """DepthFL global inference: ensemble (mean softmax) of all T
+    classifiers — the paper evaluates DepthFL this way (Table 1 note)."""
+    T = mdl.num_blocks
+    spec = depthfl_shapes(mdl, T)
+    order = _ordered(spec.shapes)
+
+    def fn(*args):
+        params = _pack(order, args[: len(order)])
+        x, y = args[len(order) :]
+        logits = _depthfl_logits(mdl, params, x, T)
+        probs = sum(jax.nn.softmax(lg) for lg in logits) / len(logits)
+        logp = jnp.log(probs + 1e-9)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1)) * x.shape[0]
+        corr = jnp.sum((jnp.argmax(probs, axis=1) == y).astype(jnp.float32))
+        return loss, corr
+
+    return fn, InSpec(trainable=[], frozen=order, shapes=spec.shapes)

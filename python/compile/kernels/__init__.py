@@ -1,0 +1,9 @@
+"""L1 — Pallas kernels for the ProFL compute hot-spots.
+
+Modules:
+  matmul — tiled GEMM (the im2col conv core), MXU/VMEM-shaped BlockSpec.
+  fused  — BN-apply+ReLU and residual+ReLU epilogues.
+  conv   — conv2d front-end dispatching native (XLA) vs pallas backends.
+  ref    — pure-jnp oracles; the single source of truth for numerics.
+"""
+from . import conv, fused, matmul, ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""Convolution front-end with selectable backend (L1 dispatch).
+
+``conv2d(x, w, stride, backend=...)``:
+
+* ``"native"`` — ``lax.conv_general_dilated`` (XLA's fused conv). Default
+  for the table-scale benches: on the CPU PJRT backend it is orders of
+  magnitude faster than interpret-mode Pallas, and pytest pins the two
+  backends to identical numerics, so the FL results are backend-invariant.
+* ``"pallas"`` — im2col + the tiled Pallas GEMM (`kernels.matmul`), the
+  TPU-shaped decomposition of the paper's conv hot-spot. Used by the
+  kernel-variant artifacts and the quickstart e2e path.
+
+The backend is threaded through the model as a module-level default so the
+whole network lowers with one choice (set by ``aot.py --kernels``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .matmul import matmul_grad
+
+# Mutated only by aot.py / tests before tracing; never at runtime (the HLO
+# is lowered once with whichever backend is active).
+_DEFAULT_BACKEND = "native"
+
+
+def set_default_backend(backend: str) -> None:
+    """Select the conv backend used by subsequent model tracing."""
+    global _DEFAULT_BACKEND
+    assert backend in ("native", "pallas"), backend
+    _DEFAULT_BACKEND = backend
+
+
+def get_default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    backend: str | None = None,
+) -> jax.Array:
+    """SAME-padded NHWC x HWIO conv through the selected backend."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "native":
+        return ref.conv2d_ref(x, w, stride=stride, padding="SAME")
+    return conv2d_pallas(x, w, stride=stride)
+
+
+def conv2d_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """im2col + tiled Pallas GEMM. Numerically pinned to ``conv2d_ref``.
+
+    GEMM dims: M = N*OH*OW (output pixels), K = KH*KW*Cin, N = Cout.
+    For the mini models M dominates (batch 32 @ 32x32 -> M = 32768), which
+    is exactly the axis the 128-row MXU tile wants to stream over.
+    """
+    n, h, w_, _ = x.shape
+    kh, kw, _, co = w.shape
+    oh = -(-h // stride)
+    ow = -(-w_ // stride)
+    patches = ref.im2col_patches(x, kh, kw, stride)  # (N*OH*OW, KH*KW*C)
+    out = matmul_grad(patches, w.reshape(-1, co))
+    return out.reshape(n, oh, ow, co)

@@ -1,0 +1,144 @@
+"""Fused element-wise Pallas kernels (BN-apply + ReLU, residual join).
+
+On GPU the paper's models interleave conv → BN → ReLU, each a separate
+global-memory round trip. The TPU re-think keeps the conv output tile in
+VMEM and applies the normalize/activate epilogue before it is written back:
+one HBM store instead of three loads + three stores. We express that as a
+standalone row-tiled kernel here (composable with any producer) and fuse it
+after the im2col GEMM in ``conv.py``.
+
+Both kernels are 1-D row-tiled over a (R, C) view of the activation tensor:
+grid = (R / br,), block = (br, C). C (the channel dim) is the minor axis so
+the per-channel scale/shift vectors broadcast along lanes — the layout the
+VPU wants. Run under ``interpret=True`` on this CPU testbed (see matmul.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scale_shift_relu_kernel(x_ref, scale_ref, shift_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] * scale_ref[...] + shift_ref[...], 0.0)
+
+
+def _residual_add_relu_kernel(x_ref, s_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + s_ref[...], 0.0)
+
+
+@jax.custom_vjp
+def scale_shift_relu_grad(x, scale, shift):
+    """Differentiable fused BN-apply+ReLU (backward in plain jnp — the
+    backward is bandwidth-bound elementwise work XLA fuses fine)."""
+    return scale_shift_relu(x, scale, shift)
+
+
+def _ssr_fwd(x, scale, shift):
+    y = scale_shift_relu(x, scale, shift)
+    return y, (x, scale, y)
+
+
+def _ssr_bwd(res, g):
+    x, scale, y = res
+    m = (y > 0).astype(g.dtype) * g
+    axes = tuple(range(x.ndim - 1))
+    return m * scale, jnp.sum(m * x, axis=axes), jnp.sum(m, axis=axes)
+
+
+scale_shift_relu_grad.defvjp(_ssr_fwd, _ssr_bwd)
+
+
+@jax.custom_vjp
+def residual_add_relu_grad(x, skip):
+    """Differentiable fused residual join."""
+    return residual_add_relu(x, skip)
+
+
+def _rar_fwd(x, skip):
+    y = residual_add_relu(x, skip)
+    return y, (y,)
+
+
+def _rar_bwd(res, g):
+    (y,) = res
+    m = (y > 0).astype(g.dtype) * g
+    return m, m
+
+
+residual_add_relu_grad.defvjp(_rar_fwd, _rar_bwd)
+
+
+def _row_grid(r: int, br: int) -> tuple[int, int]:
+    """Clamp the row tile to the problem and return (tile, steps)."""
+    br = min(br, max(8, 1 << (r - 1).bit_length()))
+    steps = -(-r // br)
+    return br, steps
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def scale_shift_relu(
+    x: jax.Array, scale: jax.Array, shift: jax.Array, *, br: int = 256
+) -> jax.Array:
+    """``relu(x * scale + shift)`` with (C,) scale/shift over (..., C) x.
+
+    Matches ``ref.scale_shift_relu_ref``. The leading dims are flattened to
+    rows; rows are tiled so each grid step touches br*C elements in VMEM.
+    """
+    orig_shape = x.shape
+    c = x.shape[-1]
+    xr = x.reshape(-1, c)
+    r = xr.shape[0]
+    br, steps = _row_grid(r, br)
+    pad = steps * br - r
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _scale_shift_relu_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            # scale/shift are tiny; replicate the whole vector to every step.
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=True,
+    )(xr, scale.astype(x.dtype), shift.astype(x.dtype))
+    if pad:
+        out = out[:r]
+    return out.reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def residual_add_relu(x: jax.Array, skip: jax.Array, *, br: int = 256) -> jax.Array:
+    """``relu(x + skip)`` — the ResNet basic-block tail, fused in VMEM."""
+    assert x.shape == skip.shape, (x.shape, skip.shape)
+    orig_shape = x.shape
+    c = x.shape[-1]
+    xr = x.reshape(-1, c)
+    sr = skip.reshape(-1, c)
+    r = xr.shape[0]
+    br, steps = _row_grid(r, br)
+    pad = steps * br - r
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+        sr = jnp.pad(sr, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _residual_add_relu_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=True,
+    )(xr, sr)
+    if pad:
+        out = out[:r]
+    return out.reshape(orig_shape)

@@ -1,0 +1,147 @@
+"""Tiled Pallas GEMM — the L1 compute hot-spot.
+
+ProFL's per-round compute is dominated by the convolutions of the block
+being trained. On TPU the right decomposition is im2col + GEMM on the MXU
+(not the CUDA threadblock/shared-memory scheme of GPU conv papers): the
+systolic array wants dense (bm, bk) x (bk, bn) tiles streamed through VMEM.
+
+BlockSpec schedule
+------------------
+grid = (M/bm, N/bn, K/bk), with K innermost so each (i, j) output tile stays
+resident in VMEM while partial products accumulate over k — one HBM write
+per output tile. Default tiles are 128x128x128: 3 * 128*128 * 4B = 192 KiB
+of VMEM (f32), far under the ~16 MiB budget, and M/N/K multiples of 128 map
+1:1 onto the 128x128 MXU. Inputs with ragged edges are zero-padded up front
+and the result is cropped (padding waste is reported by ``aot.py --report``).
+
+On this testbed the kernel runs under ``interpret=True`` (the CPU PJRT
+client cannot execute Mosaic custom-calls), which lowers the same schedule
+to plain HLO — numerics are identical to a real-TPU build, wall-clock is
+not. Structure (tiling/fusion/traffic) is what we optimize here; see
+DESIGN.md §Perf for the VMEM/MXU accounting.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """One (bm, bn) output tile; grid axis 2 walks the K dimension.
+
+    acc_ref is a VMEM scratch accumulator in f32; the output tile is only
+    written on the last K step, so the kernel performs exactly one HBM
+    store per output element.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, m: int, axis: int) -> jax.Array:
+    rem = x.shape[axis] % m
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - rem)
+    return jnp.pad(x, pad)
+
+
+@jax.custom_vjp
+def matmul_grad(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Differentiable wrapper: both the forward GEMM and the two backward
+    GEMMs (dA = g @ Bᵀ, dB = Aᵀ @ g) run through the Pallas kernel, so the
+    training hot path stays on the MXU schedule in both directions."""
+    return matmul(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return matmul(g, b.T), matmul(a.T, g)
+
+
+matmul_grad.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """``a @ b`` via the tiled Pallas kernel. a: (M, K), b: (K, N).
+
+    Ragged shapes are zero-padded to tile multiples and cropped after;
+    accumulation is always f32 (matches ``ref.matmul_ref``).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    # Shrink tiles for small problems so the grid is never empty and we do
+    # not inflate tiny GEMMs to 128^2 (keeps interpret-mode tests fast).
+    bm = min(bm, max(8, 1 << (m - 1).bit_length()))
+    bn = min(bn, max(8, 1 << (n - 1).bit_length()))
+    bk = min(bk, max(8, 1 << (k - 1).bit_length()))
+    ap = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    bp = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = 128, bn: int = 128, bk: int = 128, itemsize: int = 4) -> int:
+    """VMEM footprint of one grid step: A-tile + B-tile + accumulator.
+
+    Used by ``aot.py --report`` and DESIGN.md §Perf to check the schedule
+    against the ~16 MiB/core VMEM budget.
+    """
+    return (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int = 128, bn: int = 128, bk: int = 128) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding).
+
+    The kernel pads each dim up to its tile multiple; utilization is
+    useful_macs / issued_macs. 1.0 when m, n, k are tile multiples.
+    """
+    ceil = lambda x, t: -(-x // t) * t
+    useful = m * n * k
+    issued = ceil(m, bm) * ceil(n, bn) * ceil(k, bk)
+    return useful / issued

@@ -1,0 +1,127 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an entry here with identical
+semantics, written only with `jax.numpy` / `jax.lax` primitives. The pytest
+suite asserts `assert_allclose(kernel(...), ref(...))` over a hypothesis
+sweep of shapes and dtypes; these functions are the single source of truth
+for kernel numerics.
+
+They are also used directly by the L2 model when the aot pipeline is run
+with ``--kernels native`` (the default for the large table benches, where
+XLA's fused convolutions are much faster on the CPU PJRT backend than
+interpret-mode Pallas). ``--kernels pallas`` swaps in the real kernels; the
+lowered HLO is numerically pinned against this module by
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain GEMM: ``a @ b`` with f32 accumulation.
+
+    a: (M, K), b: (K, N) -> (M, N). Mirrors the Pallas kernel's behaviour of
+    accumulating in float32 regardless of input dtype.
+    """
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    ).astype(a.dtype)
+
+
+def scale_shift_relu_ref(
+    x: jax.Array, scale: jax.Array, shift: jax.Array
+) -> jax.Array:
+    """Fused BN-apply epilogue: ``relu(x * scale + shift)``.
+
+    x: (..., C); scale/shift: (C,) broadcast over leading dims. This is the
+    inference-form batch-norm (statistics already folded into scale/shift)
+    followed by ReLU — the epilogue the Pallas kernel fuses so the
+    activation tensor makes a single HBM round trip.
+    """
+    return jax.nn.relu(x * scale + shift)
+
+
+def residual_add_relu_ref(x: jax.Array, skip: jax.Array) -> jax.Array:
+    """Fused residual join: ``relu(x + skip)`` (ResNet basic-block tail)."""
+    return jax.nn.relu(x + skip)
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str | int = "SAME",
+) -> jax.Array:
+    """NHWC x HWIO convolution via ``lax.conv_general_dilated``.
+
+    This is both the oracle for the im2col+GEMM Pallas path and the
+    production conv used by the ``native`` kernel backend.
+    """
+    if isinstance(padding, int):
+        pad = [(padding, padding), (padding, padding)]
+    else:
+        pad = padding
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def im2col_patches(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """Extract SAME-padded conv patches: (N,H,W,C) -> (N*OH*OW, KH*KW*C).
+
+    The GEMM view of convolution: ``patches @ w.reshape(KH*KW*C, O)`` equals
+    ``conv2d_ref(x, w, stride=stride, padding="SAME")`` (see tests). Used by
+    the Pallas conv path so the only hot compute is the tiled matmul kernel.
+    """
+    n, h, w_, c = x.shape
+    oh = -(-h // stride)
+    ow = -(-w_ // stride)
+    # SAME padding amounts (TF convention).
+    pad_h = max((oh - 1) * stride + kh - h, 0)
+    pad_w = max((ow - 1) * stride + kw - w_, 0)
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pad_h // 2, pad_h - pad_h // 2),
+            (pad_w // 2, pad_w - pad_w // 2),
+            (0, 0),
+        ),
+    )
+    patches = jax.lax.conv_general_dilated_patches(
+        xp,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # conv_general_dilated_patches returns channels ordered as (C, KH, KW)
+    # on the last axis; reorder to (KH, KW, C) to match w.reshape(-1, O).
+    patches = patches.reshape(n, oh, ow, c, kh, kw)
+    patches = patches.transpose(0, 1, 2, 4, 5, 3)
+    return patches.reshape(n * oh * ow, kh * kw * c)
+
+
+def global_avg_pool_ref(x: jax.Array) -> jax.Array:
+    """AdaptiveAvgPool2d((1,1)) over NHWC -> (N, C)."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def max_pool_2x2_ref(x: jax.Array) -> jax.Array:
+    """2x2/stride-2 max pool over NHWC (VGG downsampling)."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

@@ -1,0 +1,190 @@
+"""Analytical training-memory model (the paper's "memory wall").
+
+The peak training footprint of a sub-model is decomposed exactly the way
+the paper reasons about it (§1, §4.5 / Fig 6):
+
+  peak = P_all·4          (parameters, frozen + trainable)
+       + P_tr·4           (gradients for the trainable part; plain SGD —
+                           no optimizer state)
+       + A_tr·4·batch     (activations retained for backward through the
+                           trainable sub-graph — the dominant term for
+                           early blocks, whose spatial dims are largest)
+       + S_fr·4·batch     (streaming peak of the frozen forward prefix:
+                           only in+out of one layer live at a time)
+
+Freezing a block removes its A term entirely and leaves only the S term —
+that is the mechanism by which ProFL "breaks the memory wall".
+
+These coefficients are computed from the op-list IR (ops.analyze_ops) and
+exported per-artifact into the manifest; the Rust `memory` module applies
+them (with batch size + contention jitter) to decide client participation.
+Fig 6 is regenerated from exactly these numbers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from . import ops as O
+from .graphs import InSpec, depthfl_shapes, submodel_shapes
+from .models import ModelDef
+
+BYTES = 4  # f32
+
+
+@dataclass
+class MemCoeffs:
+    """Manifest entry: bytes = fixed_bytes + per_sample_bytes * batch."""
+
+    fixed_bytes: int
+    per_sample_bytes: int
+    params_total: int
+    params_trainable: int
+
+    def bytes_at(self, batch: int) -> int:
+        return self.fixed_bytes + self.per_sample_bytes * batch
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+def _count(shapes: dict[str, tuple[int, ...]], names: list[str]) -> int:
+    total = 0
+    for n in names:
+        c = 1
+        for d in shapes[n]:
+            c *= d
+        total += c
+    return total
+
+
+def _trainable_act_per_sample(mdl: ModelDef, t: int) -> int:
+    """Retained-for-backward activations of the step-t trainable sub-graph:
+    block t + surrogate tail + head/op linear."""
+    T = mdl.num_blocks
+    in_hwc = mdl.block_in_hwc(t)
+    acts = O.analyze_ops(mdl.blocks[t - 1], in_hwc).stored_act_per_sample
+    hwc = mdl.block_out_hwc(t)
+    if t == T:
+        acts += O.analyze_ops(mdl.head, hwc).stored_act_per_sample
+    else:
+        for u in range(t + 1, T + 1):
+            st = O.analyze_ops(mdl.surrogates[u - 1], hwc)
+            acts += st.stored_act_per_sample
+            hwc = st.out_hwc
+        acts += hwc[2] + mdl.cfg.num_classes  # gap + op/fc
+    return acts
+
+
+def _frozen_stream_per_sample(mdl: ModelDef, t: int) -> int:
+    """Peak live set while streaming the frozen prefix (blocks 1..t-1)."""
+    peak = mdl.cfg.image_size * mdl.cfg.image_size * 3  # the input batch
+    hwc = (mdl.cfg.image_size, mdl.cfg.image_size, 3)
+    for u in range(1, t):
+        st = O.analyze_ops(mdl.blocks[u - 1], hwc)
+        peak = max(peak, st.peak_stream_per_sample)
+        hwc = st.out_hwc
+    return peak
+
+
+def train_step_mem(mdl: ModelDef, t: int, spec: InSpec | None = None) -> MemCoeffs:
+    """Memory model for the step-t sub-model train step (grow/shrink)."""
+    spec = spec or submodel_shapes(mdl, t)
+    p_all = _count(spec.shapes, spec.trainable + spec.frozen)
+    p_tr = _count(spec.shapes, spec.trainable)
+    acts = _trainable_act_per_sample(mdl, t)
+    stream = _frozen_stream_per_sample(mdl, t)
+    return MemCoeffs(
+        fixed_bytes=(p_all + p_tr) * BYTES,
+        per_sample_bytes=(acts + stream) * BYTES,
+        params_total=p_all,
+        params_trainable=p_tr,
+    )
+
+
+def train_full_mem(mdl: ModelDef) -> MemCoeffs:
+    """Full end-to-end training: every block's activations are retained."""
+    T = mdl.num_blocks
+    spec = submodel_shapes(mdl, T)
+    p_all = _count(spec.shapes, spec.trainable + spec.frozen)
+    acts = 0
+    hwc = (mdl.cfg.image_size, mdl.cfg.image_size, 3)
+    acts += hwc[0] * hwc[1] * hwc[2]  # input batch
+    for u in range(1, T + 1):
+        st = O.analyze_ops(mdl.blocks[u - 1], hwc)
+        acts += st.stored_act_per_sample
+        hwc = st.out_hwc
+    acts += O.analyze_ops(mdl.head, hwc).stored_act_per_sample
+    return MemCoeffs(
+        fixed_bytes=2 * p_all * BYTES,
+        per_sample_bytes=acts * BYTES,
+        params_total=p_all,
+        params_trainable=p_all,
+    )
+
+
+def distill_mem(mdl: ModelDef, t: int, spec: InSpec) -> MemCoeffs:
+    """Distilling block t into its surrogate: frozen forward through
+    blocks 1..t (streaming) + backward through the single surrogate conv."""
+    p_all = _count(spec.shapes, spec.trainable + spec.frozen)
+    p_tr = _count(spec.shapes, spec.trainable)
+    in_hwc = mdl.block_in_hwc(t)
+    st = O.analyze_ops(mdl.surrogates[t - 1], in_hwc)
+    acts = st.stored_act_per_sample + st.peak_stream_per_sample
+    stream = _frozen_stream_per_sample(mdl, t + 1)
+    return MemCoeffs(
+        fixed_bytes=(p_all + p_tr) * BYTES,
+        per_sample_bytes=(acts + stream) * BYTES,
+        params_total=p_all,
+        params_trainable=p_tr,
+    )
+
+
+def depthfl_mem(mdl: ModelDef, d: int) -> MemCoeffs:
+    """DepthFL depth-d local model: blocks 1..d all trainable (activations
+    retained everywhere — DepthFL does not freeze, which is why its
+    first-block memory demand excludes low-memory clients; §4.2)."""
+    spec = depthfl_shapes(mdl, d)
+    p_all = _count(spec.shapes, spec.trainable)
+    acts = mdl.cfg.image_size * mdl.cfg.image_size * 3
+    hwc = (mdl.cfg.image_size, mdl.cfg.image_size, 3)
+    for u in range(1, d + 1):
+        st = O.analyze_ops(mdl.blocks[u - 1], hwc)
+        acts += st.stored_act_per_sample
+        hwc = st.out_hwc
+        acts += hwc[2] + mdl.cfg.num_classes  # per-block classifier
+    return MemCoeffs(
+        fixed_bytes=2 * p_all * BYTES,
+        per_sample_bytes=acts * BYTES,
+        params_total=p_all,
+        params_trainable=p_all,
+    )
+
+
+def eval_mem(mdl: ModelDef, spec: InSpec) -> MemCoeffs:
+    """Inference: params + streaming peak (no retained activations)."""
+    p_all = _count(spec.shapes, spec.trainable + spec.frozen)
+    T = mdl.num_blocks
+    return MemCoeffs(
+        fixed_bytes=p_all * BYTES,
+        per_sample_bytes=_frozen_stream_per_sample(mdl, T + 1) * BYTES,
+        params_total=p_all,
+        params_trainable=0,
+    )
+
+
+def output_layer_mem(mdl: ModelDef) -> MemCoeffs:
+    """§4.1 fallback: clients too small for any block train only the output
+    layer (frozen streaming forward + linear-layer backward)."""
+    T = mdl.num_blocks
+    c_last = mdl.block_out_hwc(T)[2]
+    p_head = c_last * mdl.cfg.num_classes + mdl.cfg.num_classes
+    spec = submodel_shapes(mdl, T)
+    p_all = _count(spec.shapes, spec.trainable + spec.frozen)
+    stream = _frozen_stream_per_sample(mdl, T + 1)
+    return MemCoeffs(
+        fixed_bytes=(p_all + p_head) * BYTES,
+        per_sample_bytes=(stream + c_last + mdl.cfg.num_classes) * BYTES,
+        params_total=p_all,
+        params_trainable=p_head,
+    )

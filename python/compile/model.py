@@ -1,0 +1,13 @@
+"""Compatibility shim: the L2 model lives in `models` (zoo) + `graphs`
+(step-wise training graphs). This module re-exports the public surface
+under the layout name `compile.model`."""
+from .graphs import (  # noqa: F401
+    make_depthfl_eval,
+    make_depthfl_train,
+    make_distill_step,
+    make_eval_sub,
+    make_train_full,
+    make_train_step,
+    submodel_shapes,
+)
+from .models import ModelCfg, ModelDef, build  # noqa: F401

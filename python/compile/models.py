@@ -1,0 +1,221 @@
+"""Model zoo: block-partitioned ResNet18/34 and VGG11/16_bn (L2).
+
+Block partitioning follows the paper exactly (§4.1):
+
+* ResNet18/34 — 4 blocks = the 4 residual stages; the stem conv travels
+  with block 1 (this reproduces Table 5's per-block parameter ratios).
+* VGG11_bn — 8 convs, maxpool after every 2; 2 blocks = convs 1-4 / 5-8.
+* VGG16_bn — 13 convs, maxpool after every 4; 3 blocks = 4 / 4 / 5 convs.
+* Heads are AdaptiveAvgPool((1,1)) + a single linear layer (paper §4.1).
+
+``width`` is the base channel count (64 in the paper; the mini defaults
+used by the benches keep the same topology at reduced width — ratios, not
+absolute sizes, drive every paper claim we reproduce; see DESIGN.md).
+
+Surrogates: each block t has a θ_{t,Conv} output-module component — a
+single stride-matched conv+bn_relu mapping the block's input shape to its
+output shape, preserving the block's "position" in the network (§3.2).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from . import ops as O
+
+FAMILIES = ("resnet18", "resnet34", "vgg11", "vgg16")
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    family: str
+    width: int  # base channels (paper: 64)
+    num_classes: int
+    image_size: int = 32
+    width_ratio: float = 1.0  # HeteroFL/AllSmall channel scaling
+
+    @property
+    def tag(self) -> str:
+        r = f"_r{self.width_ratio:g}" if self.width_ratio != 1.0 else ""
+        return f"{self.family}_w{self.width}_c{self.num_classes}{r}"
+
+
+def _scale(c: int, ratio: float) -> int:
+    """HeteroFL-style channel scaling: first ⌈ratio·C⌉ channels."""
+    return max(1, math.ceil(c * ratio))
+
+
+@dataclass
+class ModelDef:
+    """Blocks + head + surrogates, all as op-lists (see ops.py)."""
+
+    cfg: ModelCfg
+    blocks: list[list[O.Op]]
+    head: list[O.Op]  # gap + dense(Ct -> classes)
+    surrogates: list[list[O.Op] | None]  # per block; [0] unused (never distilled)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+    def block_prefix(self, t: int) -> str:
+        """Parameter prefix of block t (1-based, like the paper)."""
+        return f"b{t}/"
+
+    def block_in_hwc(self, t: int) -> tuple[int, int, int]:
+        hwc = (self.cfg.image_size, self.cfg.image_size, 3)
+        for i in range(t - 1):
+            hwc = O.analyze_ops(self.blocks[i], hwc).out_hwc
+        return hwc
+
+    def block_out_hwc(self, t: int) -> tuple[int, int, int]:
+        return O.analyze_ops(self.blocks[t - 1], self.block_in_hwc(t)).out_hwc
+
+
+def build(cfg: ModelCfg) -> ModelDef:
+    if cfg.family in ("resnet18", "resnet34"):
+        return _build_resnet(cfg)
+    if cfg.family in ("vgg11", "vgg16"):
+        return _build_vgg(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# ---------------------------------------------------------------------------
+# ResNet
+# ---------------------------------------------------------------------------
+
+_RESNET_DEPTHS = {"resnet18": [2, 2, 2, 2], "resnet34": [3, 4, 6, 3]}
+
+
+def _build_resnet(cfg: ModelCfg) -> ModelDef:
+    depths = _RESNET_DEPTHS[cfg.family]
+    w = cfg.width
+    r = cfg.width_ratio
+    widths = [_scale(w, r), _scale(2 * w, r), _scale(4 * w, r), _scale(8 * w, r)]
+
+    blocks: list[list[O.Op]] = []
+    # Block 1: stem + stage 1 (stride 1).
+    b1: list[O.Op] = [
+        O.conv_op("stem/conv", 3, widths[0], k=3, stride=1),
+        O.bn_relu_op("stem/bn", widths[0]),
+    ]
+    ci = widths[0]
+    for i in range(depths[0]):
+        b1.append(O.basic_op(f"u{i}", ci, widths[0], stride=1))
+        ci = widths[0]
+    blocks.append(b1)
+    # Blocks 2..4: stages 2..4, first unit stride 2.
+    for s in range(1, 4):
+        blk: list[O.Op] = []
+        for i in range(depths[s]):
+            stride = 2 if i == 0 else 1
+            blk.append(O.basic_op(f"u{i}", ci, widths[s], stride=stride))
+            ci = widths[s]
+        blocks.append(blk)
+
+    head = [O.gap_op(), O.dense_op("fc", widths[3], cfg.num_classes)]
+    surrogates = _make_surrogates(cfg, blocks)
+    return ModelDef(cfg, blocks, head, surrogates)
+
+
+# ---------------------------------------------------------------------------
+# VGG
+# ---------------------------------------------------------------------------
+
+_VGG_CHANNELS = {
+    # paper-modified variants: VGG11 pools after every 2 convs,
+    # VGG16 after every 4 (see §4.1).
+    "vgg11": ([64, 128, 256, 256, 512, 512, 512, 512], 2, [4, 4]),
+    "vgg16": ([64, 64, 128, 128, 256, 256, 256, 512, 512, 512, 512, 512, 512], 4, [4, 4, 5]),
+}
+
+
+def _build_vgg(cfg: ModelCfg) -> ModelDef:
+    chans, pool_every, block_sizes = _VGG_CHANNELS[cfg.family]
+    r = cfg.width_ratio
+    base = cfg.width  # paper width 64; mini widths scale all channels by w/64
+    chans = [_scale(c * base // 64 if base != 64 else c, r) for c in chans]
+
+    convs: list[O.Op] = []
+    ci = 3
+    for i, co in enumerate(chans):
+        convs.append(O.conv_op(f"conv{i}", ci, co, k=3, stride=1))
+        convs.append(O.bn_relu_op(f"bn{i}", co))
+        if (i + 1) % pool_every == 0:
+            convs.append(O.maxpool_op())
+        ci = co
+
+    # Split the flat conv list into the paper's blocks by conv count.
+    blocks: list[list[O.Op]] = []
+    it = iter(convs)
+    flat = list(convs)
+    idx = 0
+    for nconvs in block_sizes:
+        blk: list[O.Op] = []
+        seen = 0
+        while idx < len(flat) and seen < nconvs:
+            op = flat[idx]
+            blk.append(op)
+            if op.kind == "conv":
+                seen += 1
+            idx += 1
+        # carry trailing bn/pool ops that belong to the last conv.
+        while idx < len(flat) and flat[idx].kind in ("bn_relu", "maxpool"):
+            blk.append(flat[idx])
+            idx += 1
+        blocks.append(blk)
+    assert idx == len(flat), "vgg split lost ops"
+
+    head = [O.gap_op(), O.dense_op("fc", chans[-1], cfg.num_classes)]
+    surrogates = _make_surrogates(cfg, blocks)
+    return ModelDef(cfg, blocks, head, surrogates)
+
+
+# ---------------------------------------------------------------------------
+# Surrogates (θ_Conv output-module components)
+# ---------------------------------------------------------------------------
+
+
+def _make_surrogates(cfg: ModelCfg, blocks: list[list[O.Op]]) -> list[list[O.Op] | None]:
+    """One conv+bn_relu per block, stride = the block's total downsampling,
+    channels = block in→out. Mimics the block's position (§3.2)."""
+    surrogates: list[list[O.Op] | None] = [None]  # block 1 is never replaced
+    hwc = (cfg.image_size, cfg.image_size, 3)
+    for t, blk in enumerate(blocks, start=1):
+        out = O.analyze_ops(blk, hwc).out_hwc
+        if t >= 2:
+            stride = hwc[0] // out[0] if out[0] else 1
+            surrogates.append(
+                [
+                    O.conv_op("conv", hwc[2], out[2], k=3, stride=max(1, stride)),
+                    O.bn_relu_op("bn", out[2]),
+                ]
+            )
+        hwc = out
+    return surrogates
+
+
+# ---------------------------------------------------------------------------
+# Whole-model parameter helpers
+# ---------------------------------------------------------------------------
+
+
+def model_param_shapes(mdl: ModelDef) -> dict[str, tuple[int, ...]]:
+    """All block + head parameters (no surrogates), in block order."""
+    shapes: dict[str, tuple[int, ...]] = {}
+    for t, blk in enumerate(mdl.blocks, start=1):
+        shapes.update(O.param_shapes(blk, mdl.block_prefix(t)))
+    shapes.update(O.param_shapes(mdl.head, "head/"))
+    return shapes
+
+
+def block_param_counts(mdl: ModelDef) -> list[int]:
+    """Per-block parameter totals (Table 5)."""
+    import numpy as np
+
+    counts = []
+    for t, blk in enumerate(mdl.blocks, start=1):
+        shapes = O.param_shapes(blk, mdl.block_prefix(t))
+        counts.append(int(sum(np.prod(s) for s in shapes.values())))
+    return counts

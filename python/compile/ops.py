@@ -1,0 +1,277 @@
+"""Op-list model IR — the single source of truth for L2 model structure.
+
+Every model family (ResNet18/34, VGG11/16_bn) is described as a list of
+*blocks* (the paper's θ_1..θ_T), each a flat list of ``Op`` records, plus a
+head (global-avg-pool + linear) and one *surrogate* op per block (the
+``θ_{t,Conv}`` output-module component of §3.2).
+
+From this one IR we derive, with no duplicated shape logic:
+
+* parameter initialization (``init_ops``)
+* the forward pass (``forward_ops`` — dispatches L1 kernels)
+* static activation shapes (``out_shape`` — feeds the memory model)
+* per-block parameter inventories (the artifact manifest, Table 5)
+
+Normalization note: we use *static* batch-norm (batch statistics in both
+train and eval, no running stats), the standard choice for FL
+reproductions (HeteroFL does the same): aggregated running stats are
+ill-defined across Non-IID clients and would add mutable state to every
+artifact signature. BN scale/shift remain learnable parameters.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import fused, ref
+
+EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class Op:
+    """One layer. ``kind`` ∈ conv | bn_relu | bn | relu | maxpool | gap |
+    dense | basic (ResNet basic block, composite)."""
+
+    kind: str
+    name: str = ""
+    k: int = 3
+    stride: int = 1
+    ci: int = 0
+    co: int = 0
+    downsample: bool = False  # basic: 1x1 conv on the skip path
+
+
+def conv_op(name: str, ci: int, co: int, k: int = 3, stride: int = 1) -> Op:
+    return Op("conv", name, k=k, stride=stride, ci=ci, co=co)
+
+
+def bn_relu_op(name: str, c: int) -> Op:
+    return Op("bn_relu", name, ci=c, co=c)
+
+
+def basic_op(name: str, ci: int, co: int, stride: int = 1) -> Op:
+    return Op("basic", name, ci=ci, co=co, stride=stride, downsample=(stride != 1 or ci != co))
+
+
+def maxpool_op() -> Op:
+    return Op("maxpool")
+
+
+def gap_op() -> Op:
+    return Op("gap")
+
+
+def dense_op(name: str, ci: int, co: int) -> Op:
+    return Op("dense", name, ci=ci, co=co)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs / init
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(ops: list[Op], prefix: str = "") -> dict[str, tuple[int, ...]]:
+    """Name → shape for every parameter an op-list owns, in layer order."""
+    shapes: dict[str, tuple[int, ...]] = {}
+    for op in ops:
+        p = f"{prefix}{op.name}"
+        if op.kind == "conv":
+            shapes[f"{p}/w"] = (op.k, op.k, op.ci, op.co)
+        elif op.kind in ("bn_relu", "bn"):
+            shapes[f"{p}/scale"] = (op.ci,)
+            shapes[f"{p}/shift"] = (op.ci,)
+        elif op.kind == "dense":
+            shapes[f"{p}/w"] = (op.ci, op.co)
+            shapes[f"{p}/b"] = (op.co,)
+        elif op.kind == "basic":
+            shapes[f"{p}/conv1/w"] = (op.k, op.k, op.ci, op.co)
+            shapes[f"{p}/bn1/scale"] = (op.co,)
+            shapes[f"{p}/bn1/shift"] = (op.co,)
+            shapes[f"{p}/conv2/w"] = (op.k, op.k, op.co, op.co)
+            shapes[f"{p}/bn2/scale"] = (op.co,)
+            shapes[f"{p}/bn2/shift"] = (op.co,)
+            if op.downsample:
+                shapes[f"{p}/ds/w"] = (1, 1, op.ci, op.co)
+                shapes[f"{p}/dsbn/scale"] = (op.co,)
+                shapes[f"{p}/dsbn/shift"] = (op.co,)
+    return shapes
+
+
+def init_ops(key: jax.Array, ops: list[Op], prefix: str = "") -> dict[str, jax.Array]:
+    """He-init convs/dense, unit/zero BN — matches torchvision defaults."""
+    params: dict[str, jax.Array] = {}
+    for name, shape in param_shapes(ops, prefix).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("/w") and len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        elif name.endswith("/w"):
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        elif name.endswith("/scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:  # shift / bias
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _batch_norm(x: jax.Array) -> jax.Array:
+    """Normalize over (N, H, W) with batch statistics (static BN)."""
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + EPS)
+
+
+def _bn_relu(params, p: str, x: jax.Array) -> jax.Array:
+    xn = _batch_norm(x)
+    if kconv.get_default_backend() == "pallas":
+        return fused.scale_shift_relu_grad(xn, params[f"{p}/scale"], params[f"{p}/shift"])
+    return ref.scale_shift_relu_ref(xn, params[f"{p}/scale"], params[f"{p}/shift"])
+
+
+def _bn(params, p: str, x: jax.Array) -> jax.Array:
+    return _batch_norm(x) * params[f"{p}/scale"] + params[f"{p}/shift"]
+
+
+def _add_relu(x: jax.Array, skip: jax.Array) -> jax.Array:
+    if kconv.get_default_backend() == "pallas":
+        return fused.residual_add_relu_grad(x, skip)
+    return ref.residual_add_relu_ref(x, skip)
+
+
+def forward_ops(
+    params: dict[str, jax.Array], ops: list[Op], x: jax.Array, prefix: str = ""
+) -> jax.Array:
+    """Interpret an op-list. x is NHWC (or (N, C) once past a ``gap``)."""
+    for op in ops:
+        p = f"{prefix}{op.name}"
+        if op.kind == "conv":
+            x = kconv.conv2d(x, params[f"{p}/w"], stride=op.stride)
+        elif op.kind == "bn_relu":
+            x = _bn_relu(params, p, x)
+        elif op.kind == "bn":
+            x = _bn(params, p, x)
+        elif op.kind == "relu":
+            x = jax.nn.relu(x)
+        elif op.kind == "maxpool":
+            x = ref.max_pool_2x2_ref(x)
+        elif op.kind == "gap":
+            x = ref.global_avg_pool_ref(x)
+        elif op.kind == "dense":
+            x = x @ params[f"{p}/w"] + params[f"{p}/b"]
+        elif op.kind == "basic":
+            h = kconv.conv2d(x, params[f"{p}/conv1/w"], stride=op.stride)
+            h = _bn_relu(params, f"{p}/bn1", h)
+            h = kconv.conv2d(h, params[f"{p}/conv2/w"], stride=1)
+            h = _bn(params, f"{p}/bn2", h)
+            if op.downsample:
+                skip = kconv.conv2d(x, params[f"{p}/ds/w"], stride=op.stride)
+                skip = _bn(params, f"{p}/dsbn", skip)
+            else:
+                skip = x
+            x = _add_relu(h, skip)
+        else:  # pragma: no cover - construction bug
+            raise ValueError(f"unknown op kind {op.kind}")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Static shape / memory accounting
+# ---------------------------------------------------------------------------
+
+
+def out_shape(op: Op, hwc: tuple[int, int, int]) -> tuple[int, int, int]:
+    """Output (H, W, C) of one op given its input (H, W, C). (N,C) tensors
+    are modelled as (1, 1, C)."""
+    h, w, c = hwc
+    if op.kind == "conv":
+        s = op.stride
+        return (-(-h // s), -(-w // s), op.co)
+    if op.kind in ("bn_relu", "bn", "relu"):
+        return (h, w, c)
+    if op.kind == "maxpool":
+        return (h // 2, w // 2, c)
+    if op.kind == "gap":
+        return (1, 1, c)
+    if op.kind == "dense":
+        return (1, 1, op.co)
+    if op.kind == "basic":
+        s = op.stride
+        return (-(-h // s), -(-w // s), op.co)
+    raise ValueError(op.kind)
+
+
+def stored_activations(op: Op, in_hwc: tuple[int, int, int]) -> int:
+    """Per-sample element count of intermediates that must be *retained for
+    backward* through this op (the paper's memory-wall term).
+
+    Rough but layer-faithful: each conv/bn/relu keeps its output; a basic
+    block keeps conv1/bn1/conv2/skip/out. The frozen prefix keeps nothing
+    (forward-only, buffers freed as consumed) — that asymmetry is exactly
+    what ProFL exploits.
+    """
+    h, w, c = in_hwc
+    oh, ow, oc = out_shape(op, in_hwc)
+    if op.kind == "conv":
+        return oh * ow * oc
+    if op.kind in ("bn_relu", "bn", "relu"):
+        return oh * ow * oc
+    if op.kind == "maxpool":
+        return oh * ow * oc
+    if op.kind == "gap":
+        return oc
+    if op.kind == "dense":
+        return op.co
+    if op.kind == "basic":
+        mid = oh * ow * oc
+        skip = mid if op.downsample else 0
+        return 4 * mid + skip  # conv1, bn1-relu, conv2-bn2, out (+ ds skip)
+    raise ValueError(op.kind)
+
+
+@dataclass
+class OpListStats:
+    """Aggregate accounting for an op-list at a given input shape."""
+
+    params: int = 0
+    stored_act_per_sample: int = 0  # elements kept for backward
+    peak_stream_per_sample: int = 0  # max in+out live set (forward-only)
+    flops_per_sample: int = 0
+    out_hwc: tuple[int, int, int] = field(default=(0, 0, 0))
+
+
+def analyze_ops(ops: list[Op], in_hwc: tuple[int, int, int]) -> OpListStats:
+    st = OpListStats(out_hwc=in_hwc)
+    hwc = in_hwc
+    for op in ops:
+        o = out_shape(op, hwc)
+        st.params += sum(
+            int(jnp.prod(jnp.array(s))) for s in param_shapes([op]).values()
+        )
+        st.stored_act_per_sample += stored_activations(op, hwc)
+        live = hwc[0] * hwc[1] * hwc[2] + o[0] * o[1] * o[2]
+        st.peak_stream_per_sample = max(st.peak_stream_per_sample, live)
+        # MACs: convs + dense dominate.
+        if op.kind == "conv":
+            st.flops_per_sample += 2 * o[0] * o[1] * op.co * op.k * op.k * op.ci
+        elif op.kind == "dense":
+            st.flops_per_sample += 2 * op.ci * op.co
+        elif op.kind == "basic":
+            st.flops_per_sample += 2 * o[0] * o[1] * op.co * op.k * op.k * op.ci
+            st.flops_per_sample += 2 * o[0] * o[1] * op.co * op.k * op.k * op.co
+            if op.downsample:
+                st.flops_per_sample += 2 * o[0] * o[1] * op.co * op.ci
+        hwc = o
+    st.out_hwc = hwc
+    return st

@@ -1,0 +1,190 @@
+"""L2 graph-builder semantics: freezing, training-makes-progress, spec
+partitioning — the contracts the Rust coordinator relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import graphs
+from compile.models import ModelCfg, build
+from compile import ops as O
+
+CFG = ModelCfg("resnet18", 8, 10)
+
+
+@pytest.fixture(scope="module")
+def mdl():
+    return build(CFG)
+
+
+def init_for(spec, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in spec.shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith("/scale"):
+            params[name] = jnp.ones(shape)
+        elif name.endswith(("/shift", "/b")):
+            params[name] = jnp.zeros(shape)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            params[name] = jax.random.normal(sub, shape) * np.sqrt(2.0 / fan_in)
+    return params
+
+
+def fake_batches(seed=0, steps=2, batch=8, structured=True):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    ys = jax.random.randint(ky, (steps, batch), 0, 10)
+    xs = jax.random.normal(kx, (steps, batch, 32, 32, 3)) * 0.3
+    if structured:
+        # class-dependent mean so the task is learnable
+        xs = xs + ys[..., None, None, None].astype(jnp.float32) * 0.3
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# submodel_shapes partitioning
+# ---------------------------------------------------------------------------
+
+
+def test_submodel_spec_partition(mdl):
+    T = mdl.num_blocks
+    for t in range(1, T + 1):
+        spec = graphs.submodel_shapes(mdl, t)
+        # frozen = exactly blocks 1..t-1
+        for n in spec.frozen:
+            assert any(n.startswith(f"b{u}/") for u in range(1, t)), (t, n)
+        # trainable = block t + output module (or head at T)
+        for n in spec.trainable:
+            ok = n.startswith(f"b{t}/") or n.startswith(("op/", "head/")) or any(
+                n.startswith(f"s{u}/") for u in range(t + 1, T + 1)
+            )
+            assert ok, (t, n)
+        if t < T:
+            assert "op/fc/w" in spec.trainable
+            assert not any(n.startswith("head/") for n in spec.trainable)
+        else:
+            assert "head/fc/w" in spec.trainable
+            assert not any(n.startswith("s") and "/conv" in n for n in spec.trainable)
+
+
+def test_submodel_t4_equals_full_params(mdl):
+    spec = graphs.submodel_shapes(mdl, 4)
+    names = set(spec.trainable) | set(spec.frozen)
+    assert all(n.startswith(("b1/", "b2/", "b3/", "b4/", "head/")) for n in names)
+
+
+# ---------------------------------------------------------------------------
+# train step semantics
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_decreases_loss(mdl):
+    fn, spec = graphs.make_train_step(mdl, 1)
+    fn = jax.jit(fn)
+    params = init_for(spec)
+    xs, ys = fake_batches(steps=2)
+    losses = []
+    for it in range(8):
+        args = [params[n] for n in spec.trainable] + [params[n] for n in spec.frozen] + [xs, ys, jnp.float32(0.05)]
+        out = fn(*args)
+        for i, n in enumerate(spec.trainable):
+            params[n] = out[i]
+        losses.append(float(out[-2]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_train_step_frozen_not_returned(mdl):
+    fn, spec = graphs.make_train_step(mdl, 3)
+    assert len(spec.frozen) > 0
+    out_names = spec.trainable + ["loss", "correct"]
+    params = init_for(spec)
+    xs, ys = fake_batches(steps=1)
+    out = fn(*([params[n] for n in spec.trainable] + [params[n] for n in spec.frozen] + [xs, ys, jnp.float32(0.1)]))
+    assert len(out) == len(out_names)
+
+
+def test_train_step_lr_zero_is_identity(mdl):
+    fn, spec = graphs.make_train_step(mdl, 2)
+    params = init_for(spec)
+    xs, ys = fake_batches(steps=1)
+    out = fn(*([params[n] for n in spec.trainable] + [params[n] for n in spec.frozen] + [xs, ys, jnp.float32(0.0)]))
+    for i, n in enumerate(spec.trainable):
+        np.testing.assert_allclose(out[i], params[n], rtol=0, atol=0)
+
+
+def test_train_full_updates_everything(mdl):
+    fn, spec = graphs.make_train_full(mdl)
+    assert spec.frozen == []
+    params = init_for(spec)
+    xs, ys = fake_batches(steps=1)
+    out = fn(*([params[n] for n in spec.trainable] + [xs, ys, jnp.float32(0.1)]))
+    changed = sum(
+        1
+        for i, n in enumerate(spec.trainable)
+        if not np.allclose(out[i], params[n])
+    )
+    # every conv/dense weight must move (scale/shift may have tiny grads)
+    assert changed > len(spec.trainable) * 0.8
+
+
+def test_distill_reduces_mse(mdl):
+    fn, spec = graphs.make_distill_step(mdl, 2)
+    fn = jax.jit(fn)
+    params = init_for(spec, seed=3)
+    xs, _ = fake_batches(steps=2)
+    losses = []
+    for it in range(20):
+        out = fn(*([params[n] for n in spec.trainable] + [params[n] for n in spec.frozen] + [xs, jnp.float32(0.3)]))
+        for i, n in enumerate(spec.trainable):
+            params[n] = out[i]
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.9, losses
+    assert all(b <= a * 1.02 for a, b in zip(losses, losses[1:])), losses
+
+
+def test_eval_sub_counts_bounded(mdl):
+    fn, spec = graphs.make_eval_sub(mdl, 2)
+    params = init_for(spec)
+    xs, ys = fake_batches(steps=1, batch=16)
+    loss_sum, correct = fn(*([params[n] for n in spec.frozen] + [xs[0], ys[0]]))
+    assert 0 <= float(correct) <= 16
+    assert float(loss_sum) > 0
+
+
+def test_grow_and_shrink_share_graph(mdl):
+    """The same executable serves both stages: calling train_t with a
+    different frozen-prefix value changes outputs but not structure."""
+    fn, spec = graphs.make_train_step(mdl, 2)
+    p1 = init_for(spec, seed=0)
+    p2 = init_for(spec, seed=9)
+    xs, ys = fake_batches(steps=1)
+    o1 = fn(*([p1[n] for n in spec.trainable] + [p1[n] for n in spec.frozen] + [xs, ys, jnp.float32(0.1)]))
+    o2 = fn(*([p1[n] for n in spec.trainable] + [p2[n] for n in spec.frozen] + [xs, ys, jnp.float32(0.1)]))
+    assert not np.allclose(o1[-2], o2[-2])  # prefix matters
+
+
+# ---------------------------------------------------------------------------
+# DepthFL graphs
+# ---------------------------------------------------------------------------
+
+
+def test_depthfl_shapes_nested(mdl):
+    s1 = graphs.depthfl_shapes(mdl, 1)
+    s4 = graphs.depthfl_shapes(mdl, 4)
+    assert set(s1.shapes) < set(s4.shapes)
+    assert "cls1/fc/w" in s1.shapes and "cls4/fc/w" in s4.shapes
+
+
+def test_depthfl_train_and_eval(mdl):
+    fn, spec = graphs.make_depthfl_train(mdl, 2)
+    params = init_for(spec)
+    xs, ys = fake_batches(steps=1)
+    out = fn(*([params[n] for n in spec.trainable] + [xs, ys, jnp.float32(0.05)]))
+    assert float(out[-2]) > 0
+    fe, se = graphs.make_depthfl_eval(mdl)
+    pe = init_for(se)
+    loss_sum, correct = fe(*([pe[n] for n in se.frozen] + [xs[0], ys[0]]))
+    assert 0 <= float(correct) <= xs.shape[1]

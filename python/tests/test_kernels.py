@@ -1,0 +1,190 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+The hypothesis sweeps are the contract: any (shape, dtype, seed) drawn here
+must agree with ref.py to float32 tolerance. These tests gate `make test`
+before artifacts are trusted.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, fused, ref
+from compile.kernels.matmul import matmul, matmul_grad, mxu_utilization, vmem_bytes
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref_sweep(m, k, n, seed):
+    a = rand(seed, (m, k))
+    b = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), **TOL)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128), (130, 257, 65)])
+def test_matmul_tile_multiples_and_ragged(shape):
+    m, k, n = shape
+    a = rand(0, (m, k))
+    b = rand(1, (k, n))
+    np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), **TOL)
+
+
+def test_matmul_grad_matches_jnp_grads():
+    a = rand(2, (33, 47))
+    b = rand(3, (47, 21))
+
+    def f_kernel(a, b):
+        return jnp.sum(matmul_grad(a, b) ** 2)
+
+    def f_ref(a, b):
+        return jnp.sum((a @ b) ** 2)
+
+    ga_k, gb_k = jax.grad(f_kernel, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(ga_k, ga_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gb_k, gb_r, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_identity_and_zero():
+    a = rand(4, (16, 16))
+    eye = jnp.eye(16)
+    np.testing.assert_allclose(matmul(a, eye), a, **TOL)
+    np.testing.assert_allclose(matmul(a, jnp.zeros((16, 8))), jnp.zeros((16, 8)), **TOL)
+
+
+def test_vmem_budget_and_mxu_accounting():
+    # The default schedule must fit VMEM with big margin and be fully dense
+    # at tile multiples.
+    assert vmem_bytes() < 16 * 1024 * 1024 / 8
+    assert mxu_utilization(256, 256, 256) == 1.0
+    assert 0 < mxu_utilization(130, 130, 130) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogues
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    c=st.integers(1, 64),
+    seed=st.integers(0, 2**16),
+)
+def test_scale_shift_relu_sweep(rows, c, seed):
+    x = rand(seed, (rows, c))
+    sc = rand(seed + 1, (c,))
+    sh = rand(seed + 2, (c,))
+    np.testing.assert_allclose(
+        fused.scale_shift_relu(x, sc, sh), ref.scale_shift_relu_ref(x, sc, sh), **TOL
+    )
+
+
+def test_scale_shift_relu_4d_and_grads():
+    x = rand(5, (2, 9, 9, 12))
+    sc = rand(6, (12,))
+    sh = rand(7, (12,))
+    np.testing.assert_allclose(
+        fused.scale_shift_relu_grad(x, sc, sh),
+        ref.scale_shift_relu_ref(x, sc, sh),
+        **TOL,
+    )
+    g_k = jax.grad(lambda x, sc, sh: jnp.sum(fused.scale_shift_relu_grad(x, sc, sh) ** 2), (0, 1, 2))(x, sc, sh)
+    g_r = jax.grad(lambda x, sc, sh: jnp.sum(ref.scale_shift_relu_ref(x, sc, sh) ** 2), (0, 1, 2))(x, sc, sh)
+    for k, r in zip(g_k, g_r):
+        np.testing.assert_allclose(k, r, rtol=1e-3, atol=1e-3)
+
+
+def test_residual_add_relu_matches_and_grads():
+    x = rand(8, (3, 8, 8, 16))
+    s = rand(9, (3, 8, 8, 16))
+    np.testing.assert_allclose(
+        fused.residual_add_relu(x, s), ref.residual_add_relu_ref(x, s), **TOL
+    )
+    g_k = jax.grad(lambda x, s: jnp.sum(fused.residual_add_relu_grad(x, s) ** 2), (0, 1))(x, s)
+    g_r = jax.grad(lambda x, s: jnp.sum(ref.residual_add_relu_ref(x, s) ** 2), (0, 1))(x, s)
+    for k, r in zip(g_k, g_r):
+        np.testing.assert_allclose(k, r, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Convolution (im2col + GEMM vs lax.conv)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([4, 8, 16, 32]),
+    ci=st.integers(1, 8),
+    co=st.integers(1, 8),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_pallas_matches_native_sweep(n, hw, ci, co, k, stride, seed):
+    x = rand(seed, (n, hw, hw, ci))
+    w = rand(seed + 1, (k, k, ci, co))
+    np.testing.assert_allclose(
+        conv.conv2d_pallas(x, w, stride=stride),
+        ref.conv2d_ref(x, w, stride=stride, padding="SAME"),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+def test_im2col_patches_equals_conv():
+    x = rand(10, (2, 16, 16, 4))
+    w = rand(11, (3, 3, 4, 6))
+    patches = ref.im2col_patches(x, 3, 3, 1)
+    out = (patches @ w.reshape(-1, 6)).reshape(2, 16, 16, 6)
+    np.testing.assert_allclose(out, ref.conv2d_ref(x, w, stride=1), rtol=1e-4, atol=1e-4)
+
+
+def test_conv_grad_through_pallas():
+    x = rand(12, (2, 8, 8, 3))
+    w = rand(13, (3, 3, 3, 4))
+    gk = jax.grad(lambda w: jnp.sum(conv.conv2d_pallas(x, w) ** 2))(w)
+    gr = jax.grad(lambda w: jnp.sum(ref.conv2d_ref(x, w) ** 2))(w)
+    np.testing.assert_allclose(gk, gr, rtol=1e-3, atol=1e-3)
+
+
+def test_backend_dispatch_roundtrip():
+    assert conv.get_default_backend() == "native"
+    conv.set_default_backend("pallas")
+    try:
+        x = rand(14, (1, 8, 8, 2))
+        w = rand(15, (3, 3, 2, 2))
+        np.testing.assert_allclose(
+            conv.conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-3, atol=1e-3
+        )
+    finally:
+        conv.set_default_backend("native")
+
+
+def test_maxpool_and_gap_refs():
+    x = jnp.arange(16.0).reshape(1, 4, 4, 1)
+    pooled = ref.max_pool_2x2_ref(x)
+    assert pooled.shape == (1, 2, 2, 1)
+    assert float(pooled[0, 0, 0, 0]) == 5.0
+    g = ref.global_avg_pool_ref(x)
+    assert g.shape == (1, 1)
+    assert float(g[0, 0]) == pytest.approx(7.5)

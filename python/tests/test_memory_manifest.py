@@ -1,0 +1,138 @@
+"""Memory-model invariants + manifest integrity (the L3 contract)."""
+
+import json
+import os
+
+import pytest
+
+from compile import graphs, memory
+from compile.models import ModelCfg, build
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def mdl():
+    return build(ModelCfg("resnet18", 8, 10))
+
+
+# ---------------------------------------------------------------------------
+# Memory model invariants (what makes the paper's Fig 6 shape)
+# ---------------------------------------------------------------------------
+
+
+def test_freezing_reduces_memory(mdl):
+    """Peak memory of every ProFL step must be below full-model training —
+    the paper's headline (up to 57.4% reduction)."""
+    full = memory.train_full_mem(mdl).bytes_at(32)
+    for t in range(1, 5):
+        step = memory.train_step_mem(mdl, t).bytes_at(32)
+        assert step < full, t
+
+
+def test_early_blocks_cost_most_activation_memory(mdl):
+    """Fig 6: the 1st block dominates activation memory even though it has
+    the fewest parameters."""
+    m1 = memory.train_step_mem(mdl, 1)
+    m4 = memory.train_step_mem(mdl, 4)
+    assert m1.per_sample_bytes > m4.per_sample_bytes
+    assert m1.params_trainable < m4.params_trainable
+
+
+def test_peak_reduction_magnitude(mdl):
+    """ProFL's peak across steps should cut ≥40% vs full training at the
+    paper's batch size (paper: up to 57.4%)."""
+    full = memory.train_full_mem(mdl).bytes_at(32)
+    peak = max(memory.train_step_mem(mdl, t).bytes_at(32) for t in range(1, 5))
+    assert peak < 0.65 * full, (peak, full)
+
+
+def test_output_layer_mem_smallest(mdl):
+    op = memory.output_layer_mem(mdl).bytes_at(32)
+    b1 = memory.train_step_mem(mdl, 1).bytes_at(32)
+    assert op < b1
+
+
+def test_eval_mem_below_train(mdl):
+    spec = graphs.submodel_shapes(mdl, 4)
+    ev = memory.eval_mem(mdl, spec).bytes_at(32)
+    tr = memory.train_full_mem(mdl).bytes_at(32)
+    assert ev < tr
+
+
+def test_depthfl_first_block_heavier_than_profl_step1(mdl):
+    """§4.2: DepthFL's smallest model (depth 1) still trains block 1 without
+    freezing — ProFL step 1 costs the same or less, later steps much less."""
+    d1 = memory.depthfl_mem(mdl, 1).bytes_at(32)
+    p4 = memory.train_step_mem(mdl, 4).bytes_at(32)
+    assert p4 < d1 or p4 < memory.depthfl_mem(mdl, 4).bytes_at(32)
+
+
+def test_mem_coeffs_linear(mdl):
+    m = memory.train_step_mem(mdl, 2)
+    assert m.bytes_at(64) - m.bytes_at(32) == 32 * m.per_sample_bytes
+
+
+# ---------------------------------------------------------------------------
+# Manifest integrity (requires `make artifacts` to have run)
+# ---------------------------------------------------------------------------
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_structure():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert man["train_batch"] > 0 and man["scan_steps"] > 0
+    assert len(man["models"]) >= 1
+    for tag, m in man["models"].items():
+        assert m["num_blocks"] == len(m["block_param_counts"])
+        assert len(m["block_params"]) == m["num_blocks"]
+        for name, art in m["artifacts"].items():
+            path = os.path.join(ART, art["path"])
+            assert os.path.exists(path), path
+            assert art["kind"] in ("train", "distill", "eval")
+            roles = [i["role"] for i in art["inputs"]]
+            if art["kind"] == "train":
+                assert roles.count("lr") == 1 and "data_x" in roles and "data_y" in roles
+                n_tr = sum(1 for r in roles if r == "trainable")
+                assert art["outputs"][:n_tr] == [
+                    i["name"] for i in art["inputs"] if i["role"] == "trainable"
+                ]
+                assert art["outputs"][-2:] == ["loss", "correct"]
+            if art["kind"] == "eval":
+                assert art["outputs"] == ["loss_sum", "correct"]
+            assert "mem" in art or art["kind"] == "eval"
+
+
+@needs_artifacts
+def test_manifest_trainable_roundtrip_order():
+    """Input trainable order must equal output order — Rust updates its
+    store positionally."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    m = man["models"]["resnet18_w8_c10"]
+    art = m["artifacts"]["train_t2"]
+    tr_in = [i["name"] for i in art["inputs"] if i["role"] == "trainable"]
+    assert art["outputs"][: len(tr_in)] == tr_in
+    # step-2 trainables are block 2 + output module, frozen is block 1
+    assert all(n.startswith(("b2/", "s3/", "s4/", "op/")) for n in tr_in)
+    fr = [i["name"] for i in art["inputs"] if i["role"] == "frozen"]
+    assert all(n.startswith("b1/") for n in fr)
+
+
+@needs_artifacts
+def test_manifest_params_cover_artifacts():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for tag, m in man["models"].items():
+        declared = set(m["params"])
+        for art in m["artifacts"].values():
+            for i in art["inputs"]:
+                if i["role"] in ("trainable", "frozen", "param"):
+                    assert i["name"] in declared, (tag, i["name"])

@@ -1,0 +1,118 @@
+"""L2 model-zoo structure tests: Table 5 parameter counts must be exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, ops as O
+from compile.models import ModelCfg, build, block_param_counts, model_param_shapes
+
+
+# ---------------------------------------------------------------------------
+# Table 5 — per-block parameter quantity/percentage at paper width (64)
+# ---------------------------------------------------------------------------
+
+
+def test_table5_resnet18_exact():
+    mdl = build(ModelCfg("resnet18", 64, 10))
+    counts = block_param_counts(mdl)
+    assert [round(c / 1e6, 2) for c in counts] == [0.15, 0.53, 2.10, 8.39]
+    total = sum(counts)
+    pct = [round(c / total * 100, 1) for c in counts]
+    assert pct == [1.3, 4.7, 18.8, 75.2]
+    assert round(total / 1e6, 1) == 11.2
+
+
+def test_table5_resnet34_exact():
+    mdl = build(ModelCfg("resnet34", 64, 10))
+    counts = block_param_counts(mdl)
+    assert round(sum(counts) / 1e6, 2) == 21.28
+    pct = [round(c / sum(counts) * 100, 1) for c in counts]
+    # paper: 1.0/5.2/32.1/61.6 (their Block1 rounds to 0.22M)
+    assert pct[2] == 32.1 and pct[3] == 61.6
+
+
+@pytest.mark.parametrize("fam,T", [("resnet18", 4), ("resnet34", 4), ("vgg11", 2), ("vgg16", 3)])
+def test_block_counts_per_family(fam, T):
+    mdl = build(ModelCfg(fam, 16, 10))
+    assert mdl.num_blocks == T
+    assert len(mdl.surrogates) == T
+    assert mdl.surrogates[0] is None
+    assert all(s is not None for s in mdl.surrogates[1:])
+
+
+@pytest.mark.parametrize("fam", models.FAMILIES)
+def test_forward_shapes(fam):
+    cfg = ModelCfg(fam, 8, 10)
+    mdl = build(cfg)
+    shapes = model_param_shapes(mdl)
+    key = jax.random.PRNGKey(0)
+    params = {}
+    for t, blk in enumerate(mdl.blocks, 1):
+        params.update(O.init_ops(key, blk, mdl.block_prefix(t)))
+    params.update(O.init_ops(key, mdl.head, "head/"))
+    x = jnp.zeros((2, 32, 32, 3))
+    for t, blk in enumerate(mdl.blocks, 1):
+        x = O.forward_ops(params, blk, x, mdl.block_prefix(t))
+        assert x.shape[1:] == mdl.block_out_hwc(t), (fam, t)
+    logits = O.forward_ops(params, mdl.head, x, "head/")
+    assert logits.shape == (2, 10)
+
+
+def test_width_ratio_scales_channels():
+    full = build(ModelCfg("resnet18", 8, 10))
+    half = build(ModelCfg("resnet18", 8, 10, width_ratio=0.5))
+    cf = block_param_counts(full)
+    ch = block_param_counts(half)
+    assert all(h < f for h, f in zip(ch, cf))
+    # Every half-model param must be a leading-corner slice of the full one.
+    sf = model_param_shapes(full)
+    sh = model_param_shapes(half)
+    assert set(sh) == set(sf)
+    for name in sf:
+        assert all(a <= b for a, b in zip(sh[name], sf[name])), name
+
+
+def test_surrogate_maps_block_geometry():
+    mdl = build(ModelCfg("resnet18", 8, 10))
+    for t in range(2, 5):
+        sur = mdl.surrogates[t - 1]
+        in_hwc = mdl.block_in_hwc(t)
+        out = O.analyze_ops(sur, in_hwc).out_hwc
+        assert out == mdl.block_out_hwc(t), t
+
+
+def test_vgg_paper_modifications():
+    # VGG11: pool after every 2 convs -> 32/2^4 = 2 spatial; VGG16: every 4 -> 4.
+    v11 = build(ModelCfg("vgg11", 64, 10))
+    assert v11.block_out_hwc(2)[:2] == (2, 2)
+    v16 = build(ModelCfg("vgg16", 64, 10))
+    assert v16.block_out_hwc(3)[:2] == (4, 4)
+    # single linear classifier
+    head_shapes = O.param_shapes(v16.head, "head/")
+    assert list(head_shapes) == ["head/fc/w", "head/fc/b"]
+
+
+def test_init_ops_statistics():
+    mdl = build(ModelCfg("resnet18", 16, 10))
+    params = O.init_ops(jax.random.PRNGKey(1), mdl.blocks[0], "b1/")
+    for name, v in params.items():
+        if name.endswith("/scale"):
+            assert np.all(np.asarray(v) == 1.0)
+        elif name.endswith(("/shift", "/b")):
+            assert np.all(np.asarray(v) == 0.0)
+        else:
+            fan_in = np.prod(v.shape[:-1])
+            std = float(np.std(np.asarray(v)))
+            assert 0.2 * np.sqrt(2 / fan_in) < std < 3 * np.sqrt(2 / fan_in), name
+
+
+def test_analyze_ops_flops_positive_and_monotone():
+    mdl = build(ModelCfg("resnet18", 8, 10))
+    st1 = O.analyze_ops(mdl.blocks[0], (32, 32, 3))
+    st4 = O.analyze_ops(mdl.blocks[3], mdl.block_in_hwc(4))
+    assert st1.flops_per_sample > 0 and st4.flops_per_sample > 0
+    # early blocks dominate activations, late blocks dominate params
+    assert st1.stored_act_per_sample > st4.stored_act_per_sample
+    assert st1.params < st4.params

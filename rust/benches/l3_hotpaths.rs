@@ -1,0 +1,93 @@
+//! L3 hot-path microbenches: aggregation bandwidth, effective-movement
+//! computation, corner slicing, synthetic batch generation, store init.
+//!
+//! These are the per-round coordinator costs that must stay negligible
+//! next to the PJRT executions (DESIGN.md §Perf: aggregation is
+//! memcpy-bound; target multi-GB/s on one core).
+//!
+//!   cargo bench --bench l3_hotpaths
+
+use profl::aggregate::{Aggregator, SlicedAggregator};
+use profl::bench_util::{bench, throughput};
+use profl::data::{partition, Partition, SyntheticDataset};
+use profl::freezing::EffectiveMovement;
+use profl::rng::Rng;
+use profl::store::{ParamStore, Tensor};
+use std::collections::BTreeMap;
+
+fn big_store(n_params: usize, elems_each: usize) -> (ParamStore, Vec<String>) {
+    let shapes: BTreeMap<String, Vec<usize>> =
+        (0..n_params).map(|i| (format!("p{i:03}"), vec![elems_each])).collect();
+    let names: Vec<String> = shapes.keys().cloned().collect();
+    (ParamStore::init(&shapes, 1), names)
+}
+
+fn main() {
+    // ---- FedAvg aggregation: 10 clients × 1M scalars -----------------------
+    let (mut store, names) = big_store(32, 32_768); // ≈1M f32 total
+    let total_elems: usize = 32 * 32_768;
+    let mut rng = Rng::new(2);
+    let updates: Vec<Vec<Vec<f32>>> = (0..10)
+        .map(|_| names.iter().map(|_| (0..32_768).map(|_| rng.normal()).collect()).collect())
+        .collect();
+    let r = bench("fedavg_10clients_1M_scalars", 3, 20, || {
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        for u in &updates {
+            agg.add(u, 1.0);
+        }
+        agg.finish(&mut store).unwrap();
+    });
+    println!(
+        "  -> {:.2} GB/s aggregated\n",
+        throughput(&r, total_elems * 10 * 4) / 1e9
+    );
+
+    // ---- HeteroFL sliced aggregation ---------------------------------------
+    let shapes: Vec<Vec<usize>> = (0..16).map(|_| vec![3, 3, 64, 64]).collect();
+    let sub_shapes: Vec<Vec<usize>> = shapes.iter().map(|s| vec![3, 3, 32, 32]).collect();
+    let shapes_map: BTreeMap<String, Vec<usize>> =
+        shapes.iter().enumerate().map(|(i, s)| (format!("c{i:02}"), s.clone())).collect();
+    let cnames: Vec<String> = shapes_map.keys().cloned().collect();
+    let mut cstore = ParamStore::init(&shapes_map, 3);
+    let subs: Vec<Vec<f32>> =
+        sub_shapes.iter().map(|s| vec![0.5; s.iter().product()]).collect();
+    bench("heterofl_sliced_agg_16convs", 3, 20, || {
+        let mut agg = SlicedAggregator::new(&cnames, &cstore).unwrap();
+        for _ in 0..8 {
+            agg.add(&sub_shapes, &subs, 1.0);
+        }
+        agg.finish(&mut cstore).unwrap();
+    });
+
+    // ---- Effective movement over a 131k-param block ------------------------
+    let mut em = EffectiveMovement::new(3);
+    let mut v = vec![0.0f32; 131_712]; // ResNet18-mini block 4
+    let mut erng = Rng::new(4);
+    bench("effective_movement_block4", 3, 30, || {
+        for x in v.iter_mut() {
+            *x += erng.normal() * 0.01;
+        }
+        let _ = em.push(&v);
+    });
+
+    // ---- Corner slicing (HeteroFL client dispatch) --------------------------
+    let t = Tensor { shape: vec![3, 3, 64, 64], data: vec![1.0; 3 * 3 * 64 * 64] };
+    bench("slice_corner_conv64_to_32", 3, 50, || {
+        let _ = t.slice_corner(&[3, 3, 32, 32]).unwrap();
+    });
+
+    // ---- Synthetic batch generation ----------------------------------------
+    let data = SyntheticDataset::new(10, 5);
+    let mut shards = partition(&data, 4, 400, Partition::Dirichlet { alpha: 1.0 }, 5);
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    bench("fill_batches_2x16_images", 3, 30, || {
+        shards[0].fill_batches(&data, 2, 16, &mut xs, &mut ys);
+    });
+
+    // ---- Store init (run setup cost) ----------------------------------------
+    let shapes: BTreeMap<String, Vec<usize>> =
+        (0..64).map(|i| (format!("w{i:02}"), vec![3, 3, 16, 16])).collect();
+    bench("param_store_init_64tensors", 2, 20, || {
+        let _ = ParamStore::init(&shapes, 9);
+    });
+}

@@ -1,0 +1,60 @@
+//! Runtime bench: PJRT execution latency per artifact kind — the dominant
+//! per-round cost. Measures the full L3-side path: literal creation from
+//! the store, execution, output unpacking.
+//!
+//!   cargo bench --bench runtime_exec
+
+use profl::bench_util::bench;
+use profl::runtime::{literal_f32, literal_i32, Runtime};
+use profl::store::ParamStore;
+
+fn main() {
+    let dir = profl::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let tag = "resnet18_w8_c10";
+    let model = rt.model(tag).unwrap().clone();
+    let store = ParamStore::init(&model.params, 1);
+    let scan = rt.manifest.scan_steps;
+    let batch = rt.manifest.train_batch;
+    let eval_batch = rt.manifest.eval_batch;
+
+    for art_name in ["train_t1", "train_t4", "train_full", "distill_t2"] {
+        let art = rt.load(tag, art_name).unwrap();
+        let params = rt.param_literals(&art.meta, &store).unwrap();
+        let xs = literal_f32(&[scan, batch, 32, 32, 3], &vec![0.1; scan * batch * 3072]).unwrap();
+        let ys = literal_i32(&[scan, batch], &vec![1; scan * batch]).unwrap();
+        let lr = xla::Literal::scalar(0.01f32);
+        bench(&format!("exec_{art_name}"), 2, 10, || {
+            let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+            inputs.push(&xs);
+            if art_name != "distill_t2" {
+                inputs.push(&ys);
+            }
+            inputs.push(&lr);
+            let outs = art.execute(&inputs).unwrap();
+            let _ = Runtime::unpack_train_outputs(&art.meta, outs).unwrap();
+        });
+    }
+
+    // Eval path
+    let art = rt.load(tag, "eval_t4").unwrap();
+    let params = rt.param_literals(&art.meta, &store).unwrap();
+    let x = literal_f32(&[eval_batch, 32, 32, 3], &vec![0.1; eval_batch * 3072]).unwrap();
+    let y = literal_i32(&[eval_batch], &vec![1; eval_batch]).unwrap();
+    bench("exec_eval_t4_batch", 2, 10, || {
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+        let _ = art.execute(&inputs).unwrap();
+    });
+
+    // Literal marshalling alone (the Rust-side overhead to minimize)
+    let art = rt.load(tag, "train_t4").unwrap();
+    bench("param_literals_train_t4", 2, 30, || {
+        let _ = rt.param_literals(&art.meta, &store).unwrap();
+    });
+}

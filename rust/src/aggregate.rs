@@ -1,0 +1,198 @@
+//! FedAvg aggregation (Eq. 1) — the per-round L3 hot path.
+//!
+//! Standard path: weighted average of same-shape client updates,
+//! accumulated in-place (`Aggregator`). HeteroFL path: width-scaled
+//! updates are corner-scattered into the full tensor with per-position
+//! weight normalization (`SlicedAggregator`) — positions no client
+//! covered keep the previous global value, exactly HeteroFL's rule.
+
+use crate::store::{ParamStore, Tensor};
+use anyhow::Result;
+
+/// In-place weighted-average accumulator over a fixed parameter list.
+pub struct Aggregator {
+    names: Vec<String>,
+    acc: Vec<Vec<f32>>,
+    shapes: Vec<Vec<usize>>,
+    total_weight: f64,
+}
+
+impl Aggregator {
+    pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
+        let mut acc = Vec::with_capacity(names.len());
+        let mut shapes = Vec::with_capacity(names.len());
+        for n in names {
+            let t = store.get(n)?;
+            acc.push(vec![0.0; t.len()]);
+            shapes.push(t.shape.clone());
+        }
+        Ok(Aggregator { names: names.to_vec(), acc, shapes, total_weight: 0.0 })
+    }
+
+    /// Add one client's update set (tensors in `names` order). Accepts any
+    /// slice-of-slices so the round loop can feed PJRT outputs without
+    /// cloning (EXPERIMENTS.md §Perf iteration 3).
+    pub fn add<T: AsRef<[f32]>>(&mut self, tensors: &[T], weight: f64) {
+        debug_assert_eq!(tensors.len(), self.acc.len());
+        let w = weight as f32;
+        for (a, t) in self.acc.iter_mut().zip(tensors) {
+            let t = t.as_ref();
+            debug_assert_eq!(a.len(), t.len());
+            for (x, v) in a.iter_mut().zip(t) {
+                *x += w * v;
+            }
+        }
+        self.total_weight += weight;
+    }
+
+    /// Normalize and write back into the store.
+    pub fn finish(self, store: &mut ParamStore) -> Result<()> {
+        debug_assert!(self.total_weight > 0.0, "aggregating zero clients");
+        let inv = 1.0 / self.total_weight as f32;
+        for ((name, mut a), shape) in self.names.into_iter().zip(self.acc).zip(self.shapes) {
+            for x in &mut a {
+                *x *= inv;
+            }
+            store.set(&name, Tensor { shape, data: a });
+        }
+        Ok(())
+    }
+
+    pub fn clients_added(&self) -> f64 {
+        self.total_weight
+    }
+}
+
+/// HeteroFL-style aggregation over width-heterogeneous updates.
+pub struct SlicedAggregator {
+    names: Vec<String>,
+    full_shapes: Vec<Vec<usize>>,
+    acc: Vec<Vec<f32>>,
+    wacc: Vec<Vec<f32>>,
+}
+
+impl SlicedAggregator {
+    pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
+        let mut full_shapes = Vec::new();
+        let mut acc = Vec::new();
+        let mut wacc = Vec::new();
+        for n in names {
+            let t = store.get(n)?;
+            full_shapes.push(t.shape.clone());
+            acc.push(vec![0.0; t.len()]);
+            wacc.push(vec![0.0; t.len()]);
+        }
+        Ok(SlicedAggregator { names: names.to_vec(), full_shapes, acc, wacc })
+    }
+
+    /// Add a client's update whose tensors are corner slices of the full
+    /// shapes (sub_shapes[i] element-wise ≤ full_shapes[i]).
+    pub fn add(&mut self, sub_shapes: &[Vec<usize>], tensors: &[Vec<f32>], weight: f64) {
+        for i in 0..self.names.len() {
+            Tensor::accumulate_corner(
+                &self.full_shapes[i],
+                &mut self.acc[i],
+                &mut self.wacc[i],
+                &sub_shapes[i],
+                &tensors[i],
+                weight as f32,
+            );
+        }
+    }
+
+    /// Positions with weight keep the normalized average; untouched
+    /// positions keep the previous global value.
+    pub fn finish(self, store: &mut ParamStore) -> Result<()> {
+        for (i, name) in self.names.iter().enumerate() {
+            let prev = store.get(name)?.clone();
+            let mut out = prev.data;
+            for j in 0..out.len() {
+                if self.wacc[i][j] > 0.0 {
+                    out[j] = self.acc[i][j] / self.wacc[i][j];
+                }
+            }
+            store.set(name, Tensor { shape: self.full_shapes[i].clone(), data: out });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn store_with(pairs: &[(&str, Vec<usize>, Vec<f32>)]) -> ParamStore {
+        let shapes: BTreeMap<String, Vec<usize>> =
+            pairs.iter().map(|(n, s, _)| (n.to_string(), s.clone())).collect();
+        let mut store = ParamStore::init(&shapes, 0);
+        for (n, s, d) in pairs {
+            store.set(n, Tensor { shape: s.clone(), data: d.clone() });
+        }
+        store
+    }
+
+    #[test]
+    fn weighted_average_exact() {
+        let mut store = store_with(&[("w", vec![2], vec![0.0, 0.0])]);
+        let names = vec!["w".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add(&[vec![1.0, 2.0]], 1.0);
+        agg.add(&[vec![3.0, 6.0]], 3.0);
+        agg.finish(&mut store).unwrap();
+        let t = store.get("w").unwrap();
+        assert_eq!(t.data, vec![2.5, 5.0]); // (1*1+3*3)/4, (2*1+6*3)/4
+    }
+
+    #[test]
+    fn single_client_identity() {
+        let mut store = store_with(&[("w", vec![3], vec![0.0; 3])]);
+        let names = vec!["w".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add(&[vec![7.0, 8.0, 9.0]], 0.123);
+        agg.finish(&mut store).unwrap();
+        let t = store.get("w").unwrap();
+        for (a, b) in t.data.iter().zip([7.0, 8.0, 9.0]) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sliced_aggregation_covers_and_preserves() {
+        // full (2,4); client A covers (2,2) corner, client B covers (2,3).
+        let mut store = store_with(&[("w", vec![2, 4], vec![9.0; 8])]);
+        let names = vec!["w".to_string()];
+        let mut agg = SlicedAggregator::new(&names, &store).unwrap();
+        agg.add(&[vec![2, 2]], &[vec![1.0, 1.0, 1.0, 1.0]], 1.0);
+        agg.add(&[vec![2, 3]], &[vec![2.0, 2.0, 2.0, 2.0, 2.0, 2.0]], 1.0);
+        agg.finish(&mut store).unwrap();
+        let t = store.get("w").unwrap();
+        // col 0,1: avg(1,2)=1.5; col 2: only B -> 2.0; col 3: untouched -> 9.0
+        assert_eq!(t.data, vec![1.5, 1.5, 2.0, 9.0, 1.5, 1.5, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn sliced_full_cover_equals_plain_fedavg() {
+        let mut s1 = store_with(&[("w", vec![2, 2], vec![0.0; 4])]);
+        let mut s2 = s1.clone();
+        let names = vec!["w".to_string()];
+        let u1 = vec![1.0, 2.0, 3.0, 4.0];
+        let u2 = vec![5.0, 6.0, 7.0, 8.0];
+
+        let mut plain = Aggregator::new(&names, &s1).unwrap();
+        plain.add(&[u1.clone()], 2.0);
+        plain.add(&[u2.clone()], 1.0);
+        plain.finish(&mut s1).unwrap();
+
+        let mut sliced = SlicedAggregator::new(&names, &s2).unwrap();
+        sliced.add(&[vec![2, 2]], &[u1], 2.0);
+        sliced.add(&[vec![2, 2]], &[u2], 1.0);
+        sliced.finish(&mut s2).unwrap();
+
+        let a = &s1.get("w").unwrap().data;
+        let b = &s2.get("w").unwrap().data;
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+}

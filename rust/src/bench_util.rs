@@ -1,0 +1,91 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Criterion-style protocol: warm-up iterations, then timed samples,
+//! reporting min / mean / median / p95 / max. Deterministic sample counts
+//! so bench output is comparable across commits; used by every target in
+//! `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} mean {:>12?}  median {:>12?}  p95 {:>12?}  min {:>12?}  (n={})",
+            self.name,
+            self.mean(),
+            self.percentile(0.5),
+            self.percentile(0.95),
+            self.percentile(0.0),
+            self.samples.len()
+        );
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs then `iters` samples.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    let r = BenchResult { name: name.to_string(), samples };
+    r.report();
+    r
+}
+
+/// Throughput helper: elements per second at the mean sample.
+pub fn throughput(result: &BenchResult, elems: usize) -> f64 {
+    elems as f64 / result.mean().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mean() < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: (1..=100).map(Duration::from_micros).collect(),
+        };
+        assert!(r.percentile(0.0) <= r.percentile(0.5));
+        assert!(r.percentile(0.5) <= r.percentile(0.95));
+        assert!(r.percentile(0.95) <= r.percentile(1.0));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult { name: "x".into(), samples: vec![Duration::from_secs(1); 3] };
+        assert!((throughput(&r, 1000) - 1000.0).abs() < 1e-6);
+    }
+}

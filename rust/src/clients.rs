@@ -1,0 +1,192 @@
+//! Client pool: device fleet with heterogeneous memory + data shards,
+//! memory-aware selection (the paper's per-step eligibility filter).
+
+use crate::data::{partition, ClientShard, Partition, SyntheticDataset};
+use crate::manifest::MemCoeffs;
+use crate::memory::{can_train, DeviceMemory, MemoryConfig};
+use crate::rng::Rng;
+
+/// One simulated device.
+pub struct Client {
+    pub id: usize,
+    pub memory: DeviceMemory,
+    pub shard: ClientShard,
+    /// Version of the frozen prefix this client has cached (comm
+    /// accounting: the prefix is re-downloaded only when it changes).
+    pub prefix_version: u64,
+}
+
+pub struct ClientPool {
+    pub clients: Vec<Client>,
+    pub mem_cfg: MemoryConfig,
+    rng: Rng,
+}
+
+/// Outcome of one round's selection.
+pub struct Selection {
+    /// Clients that can train the target artifact this round.
+    pub trainers: Vec<usize>,
+    /// Sampled clients that could NOT fit it (they fall back to the
+    /// output-layer artifact under ProFL; other methods drop them).
+    pub fallback: Vec<usize>,
+    /// Round availability snapshot (bytes) for the sampled set.
+    pub availability: Vec<(usize, u64)>,
+}
+
+impl ClientPool {
+    pub fn build(
+        num_clients: usize,
+        total_samples: usize,
+        dataset: &SyntheticDataset,
+        scheme: Partition,
+        mem_cfg: MemoryConfig,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5e1e_c7ed);
+        let shards = partition(dataset, num_clients, total_samples, scheme, seed);
+        let clients = shards
+            .into_iter()
+            .enumerate()
+            .map(|(id, shard)| Client {
+                id,
+                memory: DeviceMemory::sample(&mem_cfg, &mut rng, id),
+                shard,
+                prefix_version: u64::MAX,
+            })
+            .collect();
+        ClientPool { clients, mem_cfg, rng: rng.fork(0x5e1) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.clients.iter().map(|c| c.shard.num_samples()).sum()
+    }
+
+    /// Sample `per_round` clients uniformly, then split by whether each can
+    /// fit `mem` under this round's contention — the paper's selection:
+    /// "select the client set S from the pool of clients who can afford
+    /// training for the current block".
+    pub fn select(&mut self, per_round: usize, mem: &MemCoeffs) -> Selection {
+        let ids = self.rng.sample_indices(self.clients.len(), per_round.min(self.clients.len()));
+        let mut sel = Selection { trainers: Vec::new(), fallback: Vec::new(), availability: Vec::new() };
+        for id in ids {
+            let avail = self.clients[id].memory.available(&self.mem_cfg);
+            sel.availability.push((id, avail));
+            if can_train(avail, &self.mem_cfg, mem) {
+                sel.trainers.push(id);
+            } else {
+                sel.fallback.push(id);
+            }
+        }
+        sel
+    }
+
+    /// Fraction of the whole fleet that could train `mem` at static budget
+    /// (the PR column of Tables 1/2).
+    pub fn participation_rate(&self, mem: &MemCoeffs) -> f64 {
+        let n = self
+            .clients
+            .iter()
+            .filter(|c| c.memory.fits_static(&self.mem_cfg, mem))
+            .count();
+        n as f64 / self.clients.len() as f64
+    }
+
+    /// Largest option (by index into `options`, assumed sorted ascending by
+    /// memory need) each client can statically afford — HeteroFL's
+    /// complexity assignment and AllSmall's global-model pick.
+    pub fn capability_assignment(&self, options: &[MemCoeffs]) -> Vec<Option<usize>> {
+        self.clients
+            .iter()
+            .map(|c| {
+                let mut best = None;
+                for (i, m) in options.iter().enumerate() {
+                    if c.memory.fits_static(&self.mem_cfg, m) {
+                        best = Some(i);
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::MB;
+
+    fn pool(seed: u64) -> ClientPool {
+        let data = SyntheticDataset::new(10, seed);
+        ClientPool::build(50, 5_000, &data, Partition::Iid, MemoryConfig::default(), seed)
+    }
+
+    fn coeffs(total_mb: u64) -> MemCoeffs {
+        MemCoeffs { fixed_bytes: total_mb * MB, per_sample_bytes: 0, params_total: 0, params_trainable: 0 }
+    }
+
+    #[test]
+    fn pool_construction() {
+        let p = pool(1);
+        assert_eq!(p.len(), 50);
+        assert!(p.total_samples() > 2_000);
+    }
+
+    #[test]
+    fn selection_splits_by_memory() {
+        let mut p = pool(2);
+        let sel = p.select(20, &coeffs(500));
+        assert_eq!(sel.trainers.len() + sel.fallback.len(), 20);
+        assert!(!sel.trainers.is_empty());
+        assert!(!sel.fallback.is_empty());
+        // tiny artifact: everyone trains
+        let sel2 = p.select(20, &coeffs(10));
+        assert!(sel2.fallback.is_empty());
+    }
+
+    #[test]
+    fn participation_rate_monotone_in_memory() {
+        let p = pool(3);
+        let pr_small = p.participation_rate(&coeffs(50));
+        let pr_mid = p.participation_rate(&coeffs(500));
+        let pr_big = p.participation_rate(&coeffs(950));
+        assert!(pr_small >= pr_mid && pr_mid >= pr_big);
+        assert_eq!(pr_small, 1.0);
+        assert_eq!(pr_big, 0.0);
+    }
+
+    #[test]
+    fn capability_assignment_orders() {
+        let p = pool(4);
+        let opts = vec![coeffs(80), coeffs(300), coeffs(700)];
+        let assign = p.capability_assignment(&opts);
+        for (c, a) in p.clients.iter().zip(&assign) {
+            match a {
+                Some(i) => assert!(c.memory.budget >= opts[*i].fixed_bytes),
+                None => assert!(c.memory.budget < 80 * MB),
+            }
+        }
+        // heterogeneity: at least two distinct tiers present
+        let mut tiers: Vec<_> = assign.iter().flatten().collect();
+        tiers.sort();
+        tiers.dedup();
+        assert!(tiers.len() >= 2);
+    }
+
+    #[test]
+    fn selection_deterministic_per_seed() {
+        let mut a = pool(5);
+        let mut b = pool(5);
+        let s1 = a.select(10, &coeffs(400));
+        let s2 = b.select(10, &coeffs(400));
+        assert_eq!(s1.trainers, s2.trainers);
+        assert_eq!(s1.fallback, s2.fallback);
+    }
+}

@@ -1,0 +1,186 @@
+//! Run configuration: one struct drives every method/bench/example.
+//!
+//! The CLI exposes the common knobs. Defaults are the
+//! "fast-table" profile: paper topology (100 clients, 20/round) at
+//! bench-feasible round counts. `--profile paper` scales rounds up.
+
+use crate::data::Partition;
+use crate::freezing::FreezeConfig;
+use crate::memory::MemoryConfig;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Manifest model tag, e.g. "resnet18_w8_c10".
+    pub model_tag: String,
+    /// Device fleet size (paper: 100).
+    pub num_clients: usize,
+    /// Clients sampled per round (paper: 20).
+    pub per_round: usize,
+    /// Total training samples across the federation.
+    pub total_samples: usize,
+    /// IID or Dirichlet alpha.
+    pub dirichlet_alpha: Option<f64>,
+    /// Client learning rate.
+    pub lr: f32,
+    /// LR decay multiplier applied per step transition.
+    pub lr_step_decay: f32,
+    /// Evaluate every k rounds.
+    pub eval_every: usize,
+    /// Max rounds per progressive step (freezing usually fires earlier).
+    pub max_rounds_per_step: usize,
+    /// Min rounds per progressive step before freezing may fire.
+    pub min_rounds_per_step: usize,
+    /// Rounds cap for non-progressive baselines (≈ T × per-step cap).
+    pub max_rounds_total: usize,
+    /// Distillation rounds per shrink Map step.
+    pub distill_rounds: usize,
+    /// Run the progressive-model-shrinking stage (ablation switch).
+    pub shrinking: bool,
+    /// Freezing policy knobs.
+    pub freeze: FreezeCfg,
+    /// Memory substrate knobs.
+    pub memory: MemCfg,
+    /// Tail length for the final-accuracy statistic (paper: 10).
+    pub acc_tail: usize,
+    pub seed: u64,
+}
+
+/// Plain-data twin of freezing::FreezeConfig.
+#[derive(Debug, Clone, Copy)]
+pub struct FreezeCfg {
+    pub window_h: usize,
+    pub phi: f64,
+    pub patience_w: usize,
+    pub fit_points: usize,
+    pub min_observations: usize,
+}
+
+impl From<FreezeCfg> for FreezeConfig {
+    fn from(c: FreezeCfg) -> Self {
+        FreezeConfig {
+            window_h: c.window_h,
+            phi: c.phi,
+            patience_w: c.patience_w,
+            fit_points: c.fit_points,
+            min_observations: c.min_observations,
+        }
+    }
+}
+
+/// Plain-data twin of memory::MemoryConfig.
+#[derive(Debug, Clone, Copy)]
+pub struct MemCfg {
+    pub budget_min_mb: u64,
+    pub budget_max_mb: u64,
+    pub contention_lo: f64,
+    pub accounting_batch: u64,
+}
+
+impl From<MemCfg> for MemoryConfig {
+    fn from(c: MemCfg) -> Self {
+        MemoryConfig {
+            budget_min_mb: c.budget_min_mb,
+            budget_max_mb: c.budget_max_mb,
+            contention_lo: c.contention_lo,
+            accounting_batch: c.accounting_batch,
+        }
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model_tag: "resnet18_w8_c10".into(),
+            num_clients: 100,
+            per_round: 10,
+            total_samples: 10_000,
+            dirichlet_alpha: None,
+            lr: 0.08,
+            lr_step_decay: 1.0,
+            eval_every: 5,
+            max_rounds_per_step: 40,
+            min_rounds_per_step: 10,
+            max_rounds_total: 160,
+            distill_rounds: 4,
+            shrinking: true,
+            freeze: FreezeCfg { window_h: 3, phi: 0.01, patience_w: 3, fit_points: 5, min_observations: 6 },
+            memory: MemCfg { budget_min_mb: 100, budget_max_mb: 900, contention_lo: 0.7, accounting_batch: 128 },
+            acc_tail: 10,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn partition(&self) -> Partition {
+        match self.dirichlet_alpha {
+            Some(alpha) => Partition::Dirichlet { alpha },
+            None => Partition::Iid,
+        }
+    }
+
+    /// A smoke-test profile: tiny rounds, quick everything. Used by
+    /// integration tests and the quickstart example.
+    pub fn smoke(model_tag: &str) -> Self {
+        RunConfig {
+            model_tag: model_tag.into(),
+            num_clients: 12,
+            per_round: 4,
+            total_samples: 1_200,
+            eval_every: 4,
+            max_rounds_per_step: 8,
+            min_rounds_per_step: 3,
+            max_rounds_total: 32,
+            distill_rounds: 2,
+            ..Default::default()
+        }
+    }
+
+    /// Longer-run profile closer to the paper's regime (for EXPERIMENTS.md
+    /// headline runs; still CPU-tractable).
+    pub fn paper(model_tag: &str) -> Self {
+        RunConfig {
+            model_tag: model_tag.into(),
+            per_round: 20,
+            total_samples: 20_000,
+            max_rounds_per_step: 100,
+            min_rounds_per_step: 15,
+            max_rounds_total: 400,
+            distill_rounds: 8,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_topology() {
+        // Fleet + memory topology follow the paper; per-round cohort is
+        // reduced in the fast profile (single-core testbed) and restored
+        // to the paper's 20 by the `paper` profile.
+        let c = RunConfig::default();
+        assert_eq!(c.num_clients, 100);
+        assert_eq!(c.memory.budget_min_mb, 100);
+        assert_eq!(c.memory.budget_max_mb, 900);
+        assert_eq!(c.acc_tail, 10);
+        assert_eq!(RunConfig::paper("m").per_round, 20);
+    }
+
+    #[test]
+    fn partition_mapping() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.partition(), Partition::Iid);
+        c.dirichlet_alpha = Some(1.0);
+        assert_eq!(c.partition(), Partition::Dirichlet { alpha: 1.0 });
+    }
+
+    #[test]
+    fn smoke_profile_is_small() {
+        let c = RunConfig::smoke("resnet18_w8_c10");
+        assert!(c.max_rounds_total <= 64);
+        assert!(c.num_clients <= 20);
+    }
+}

@@ -1,0 +1,89 @@
+//! The federated coordinator (L3) — round execution, aggregation, eval.
+//!
+//! `ServerCtx` owns the global parameter store, the client pool, the PJRT
+//! runtime and the metrics sink. One `run_train_round` is the paper's
+//! §3.1 round: (1) pick the round's sub-model artifact, (2) sample clients
+//! and filter by memory, (3) ship parameters (comm-accounted), (4) each
+//! client runs the AOT train step on its local batches, (5) weighted
+//! FedAvg (Eq. 1) back into the store.
+//!
+//! The progressive schedule itself (shrink → grow, freezing) lives in
+//! `methods::profl`; baselines drive the same primitives.
+
+pub mod round;
+
+use crate::clients::ClientPool;
+use crate::config::RunConfig;
+use crate::data::SyntheticDataset;
+use crate::manifest::ModelEntry;
+use crate::metrics::MetricsSink;
+use crate::runtime::Runtime;
+use crate::store::ParamStore;
+use anyhow::Result;
+
+pub use round::{EvalResult, RoundOutcome};
+
+/// Test-set size = 8 eval batches (balanced classes).
+pub const TEST_BATCHES: usize = 8;
+
+pub struct ServerCtx<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub store: ParamStore,
+    pub pool: ClientPool,
+    pub dataset: SyntheticDataset,
+    pub metrics: MetricsSink,
+    pub round: usize,
+    /// Version stamp of the frozen prefix currently in the store; clients
+    /// cache the prefix and only re-download when this changes.
+    pub prefix_version: u64,
+    /// Scratch buffers reused across rounds (no allocation on the hot path).
+    pub(crate) xs_buf: Vec<f32>,
+    pub(crate) ys_buf: Vec<i32>,
+}
+
+impl<'rt> ServerCtx<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Result<Self> {
+        let model = rt.model(&cfg.model_tag)?;
+        let dataset = SyntheticDataset::new(model.num_classes, cfg.seed ^ 0xda7a);
+        let pool = ClientPool::build(
+            cfg.num_clients,
+            cfg.total_samples,
+            &dataset,
+            cfg.partition(),
+            cfg.memory.into(),
+            cfg.seed,
+        );
+        let store = ParamStore::init(&model.params, cfg.seed ^ 0x1417);
+        Ok(ServerCtx {
+            rt,
+            cfg,
+            store,
+            pool,
+            dataset,
+            metrics: MetricsSink::new(),
+            round: 0,
+            prefix_version: 0,
+            xs_buf: Vec::new(),
+            ys_buf: Vec::new(),
+        })
+    }
+
+    pub fn model(&self) -> Result<&ModelEntry> {
+        self.rt.model(&self.cfg.model_tag)
+    }
+
+    /// Initialize an auxiliary store for a width-ratio variant tag
+    /// (HeteroFL/AllSmall local models). Seeded identically so slices of
+    /// the full init match the variant's init distribution family.
+    pub fn variant_store(&self, tag: &str) -> Result<ParamStore> {
+        let model = self.rt.model(tag)?;
+        Ok(ParamStore::init(&model.params, self.cfg.seed ^ 0x1417))
+    }
+
+    /// Bump the frozen-prefix version (called at step/stage transitions);
+    /// forces prefix re-download for every client on next contact.
+    pub fn bump_prefix_version(&mut self) {
+        self.prefix_version += 1;
+    }
+}

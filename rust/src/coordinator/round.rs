@@ -1,0 +1,280 @@
+//! Round execution primitives: train rounds, distill rounds, evaluation.
+
+use super::{ServerCtx, TEST_BATCHES};
+use crate::aggregate::Aggregator;
+use crate::manifest::Artifact;
+use crate::metrics::RoundRecord;
+use crate::runtime::{literal_f32, literal_i32, Runtime};
+use anyhow::{bail, Result};
+
+/// What a train round produced (before the metrics record is finalized).
+pub struct RoundOutcome {
+    pub mean_loss: f32,
+    pub mean_acc: f32,
+    pub participants: usize,
+    pub fallback: usize,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub client_mem_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+impl<'rt> ServerCtx<'rt> {
+    /// One FL train round on `artifact` (tag = cfg.model_tag) with the given
+    /// participating clients. `fallback_artifact` (e.g. `train_op_t{t}`)
+    /// absorbs memory-constrained clients when provided (ProFL §4.1).
+    pub fn run_train_round(
+        &mut self,
+        artifact: &str,
+        fallback_artifact: Option<&str>,
+        lr: f32,
+        _stage: &str,
+        _step: usize,
+    ) -> Result<RoundOutcome> {
+        let tag = self.cfg.model_tag.clone();
+        let art = self.rt.load(&tag, artifact)?;
+        let mem = art.meta.participation_mem();
+        let sel = self.pool.select(self.cfg.per_round, &mem);
+
+        let mut outcome = RoundOutcome {
+            mean_loss: f32::NAN,
+            mean_acc: f32::NAN,
+            participants: sel.trainers.len(),
+            fallback: 0,
+            bytes_up: 0,
+            bytes_down: 0,
+            client_mem_bytes: mem.bytes_at(self.cfg.memory.accounting_batch),
+        };
+
+        // --- primary cohort -------------------------------------------------
+        if !sel.trainers.is_empty() {
+            let (loss, acc) = self.train_cohort(&tag, &art.meta, artifact, &sel.trainers, lr, &mut outcome)?;
+            outcome.mean_loss = loss;
+            outcome.mean_acc = acc;
+        }
+
+        // --- fallback cohort (output-layer-only training) -------------------
+        if let (Some(fb), false) = (fallback_artifact, sel.fallback.is_empty()) {
+            let fb_art = self.rt.load(&tag, fb)?;
+            let fb_clients: Vec<usize> = sel.fallback.clone();
+            let mut fb_out = RoundOutcome {
+                mean_loss: f32::NAN,
+                mean_acc: f32::NAN,
+                participants: 0,
+                fallback: 0,
+                bytes_up: 0,
+                bytes_down: 0,
+                client_mem_bytes: 0,
+            };
+            self.train_cohort(&tag, &fb_art.meta, fb, &fb_clients, lr, &mut fb_out)?;
+            outcome.fallback = fb_clients.len();
+            outcome.bytes_up += fb_out.bytes_up;
+            outcome.bytes_down += fb_out.bytes_down;
+        }
+
+        self.round += 1;
+        Ok(outcome)
+    }
+
+    /// Train one artifact over a cohort and FedAvg the result into the store.
+    fn train_cohort(
+        &mut self,
+        tag: &str,
+        meta: &Artifact,
+        artifact: &str,
+        cohort: &[usize],
+        lr: f32,
+        outcome: &mut RoundOutcome,
+    ) -> Result<(f32, f32)> {
+        if cohort.is_empty() {
+            bail!("empty cohort for {artifact}");
+        }
+        let art = self.rt.load(tag, artifact)?;
+        let scan = self.rt.manifest.scan_steps;
+        let batch = self.rt.manifest.train_batch;
+
+        // Parameter literals built once, shared by every client this round.
+        let param_lits = self.rt.param_literals(meta, &self.store)?;
+        let lr_lit = xla::Literal::scalar(lr);
+
+        let trainable: Vec<String> = meta.trainable_names().iter().map(|s| s.to_string()).collect();
+        let mut agg = Aggregator::new(&trainable, &self.store)?;
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+
+        let tr_bytes = meta.trainable_bytes();
+        let fr_bytes = meta.frozen_bytes();
+
+        for &cid in cohort {
+            // Assemble this client's local batches.
+            let weight = {
+                let data = &self.dataset;
+                let client = &mut self.pool.clients[cid];
+                client.shard.fill_batches(data, scan, batch, &mut self.xs_buf, &mut self.ys_buf);
+                client.shard.num_samples() as f64
+            };
+            let xs = literal_f32(&[scan, batch, 32, 32, 3], &self.xs_buf)?;
+            let ys = literal_i32(&[scan, batch], &self.ys_buf)?;
+
+            // Borrowed inputs: the shared parameter literals are not cloned
+            // per client (L3 hot-path optimization, see EXPERIMENTS.md §Perf).
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 3);
+            inputs.extend(param_lits.iter());
+            inputs.push(&xs);
+            inputs.push(&ys);
+            inputs.push(&lr_lit);
+
+            let outs = art.execute(&inputs)?;
+            let (updated, scalars) = Runtime::unpack_train_outputs(meta, outs)?;
+            loss_sum += scalars[0] as f64 * weight;
+            if scalars.len() > 1 {
+                acc_sum += scalars[1] as f64 / (scan * batch) as f64 * weight;
+            }
+            // No clone: hand the PJRT output buffers to the accumulator.
+            let views: Vec<&[f32]> = updated.iter().map(|(_, v)| v.as_slice()).collect();
+            agg.add(&views, weight);
+
+            // Comm accounting: upload trainables; download trainables plus
+            // the frozen prefix only when the client's cached copy is stale.
+            outcome.bytes_up += tr_bytes;
+            outcome.bytes_down += tr_bytes;
+            let client = &mut self.pool.clients[cid];
+            if client.prefix_version != self.prefix_version {
+                outcome.bytes_down += fr_bytes;
+                client.prefix_version = self.prefix_version;
+            }
+        }
+
+        let total_w = agg.clients_added();
+        agg.finish(&mut self.store)?;
+        Ok(((loss_sum / total_w) as f32, (acc_sum / total_w) as f32))
+    }
+
+    /// One federated distillation round (§3.2 Map): same cohort mechanics,
+    /// MSE objective, updates only the surrogate parameters.
+    pub fn run_distill_round(&mut self, artifact: &str, lr: f32) -> Result<RoundOutcome> {
+        let tag = self.cfg.model_tag.clone();
+        let art = self.rt.load(&tag, artifact)?;
+        let mem = art.meta.participation_mem();
+        let sel = self.pool.select(self.cfg.per_round, &mem);
+        let scan = self.rt.manifest.scan_steps;
+        let batch = self.rt.manifest.train_batch;
+
+        let mut outcome = RoundOutcome {
+            mean_loss: f32::NAN,
+            mean_acc: f32::NAN,
+            participants: sel.trainers.len(),
+            fallback: 0,
+            bytes_up: 0,
+            bytes_down: 0,
+            client_mem_bytes: mem.bytes_at(self.cfg.memory.accounting_batch),
+        };
+        if sel.trainers.is_empty() {
+            self.round += 1;
+            return Ok(outcome);
+        }
+
+        let param_lits = self.rt.param_literals(&art.meta, &self.store)?;
+        let lr_lit = xla::Literal::scalar(lr);
+        let trainable: Vec<String> = art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
+        let mut agg = Aggregator::new(&trainable, &self.store)?;
+        let mut loss_sum = 0.0f64;
+        let tr_bytes = art.meta.trainable_bytes();
+
+        for &cid in &sel.trainers {
+            let weight = {
+                let data = &self.dataset;
+                let client = &mut self.pool.clients[cid];
+                client.shard.fill_batches(data, scan, batch, &mut self.xs_buf, &mut self.ys_buf);
+                client.shard.num_samples() as f64
+            };
+            let xs = literal_f32(&[scan, batch, 32, 32, 3], &self.xs_buf)?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 2);
+            inputs.extend(param_lits.iter());
+            inputs.push(&xs);
+            inputs.push(&lr_lit);
+            let outs = art.execute(&inputs)?;
+            let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
+            loss_sum += scalars[0] as f64 * weight;
+            let views: Vec<&[f32]> = updated.iter().map(|(_, v)| v.as_slice()).collect();
+            agg.add(&views, weight);
+            outcome.bytes_up += tr_bytes;
+            outcome.bytes_down += tr_bytes;
+        }
+        let total_w = agg.clients_added();
+        agg.finish(&mut self.store)?;
+        outcome.mean_loss = (loss_sum / total_w) as f32;
+        self.round += 1;
+        Ok(outcome)
+    }
+
+    /// Evaluate an eval artifact over the balanced held-out test set.
+    pub fn evaluate(&mut self, artifact: &str) -> Result<EvalResult> {
+        let tag = self.cfg.model_tag.clone();
+        self.evaluate_tag(&tag, artifact, None)
+    }
+
+    /// Evaluate against an arbitrary (tag, artifact) with an optional
+    /// replacement store (HeteroFL/AllSmall variant evaluation).
+    pub fn evaluate_tag(
+        &mut self,
+        tag: &str,
+        artifact: &str,
+        store: Option<&crate::store::ParamStore>,
+    ) -> Result<EvalResult> {
+        let art = self.rt.load(tag, artifact)?;
+        let eval_batch = self.rt.manifest.eval_batch;
+        let store = store.unwrap_or(&self.store);
+        let param_lits = self.rt.param_literals(&art.meta, store)?;
+
+        let mut total_correct = 0.0f64;
+        let mut total_loss = 0.0f64;
+        let mut n = 0usize;
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        for b in 0..TEST_BATCHES {
+            self.dataset.test_batch(b * eval_batch, eval_batch, &mut xs, &mut ys);
+            let x = literal_f32(&[eval_batch, 32, 32, 3], &xs)?;
+            let y = literal_i32(&[eval_batch], &ys)?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 2);
+            inputs.extend(param_lits.iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            let outs = art.execute(&inputs)?;
+            total_loss += outs[0].to_vec::<f32>()?[0] as f64;
+            total_correct += outs[1].to_vec::<f32>()?[0] as f64;
+            n += eval_batch;
+        }
+        Ok(EvalResult { loss: (total_loss / n as f64) as f32, acc: (total_correct / n as f64) as f32 })
+    }
+
+    /// Push a metrics record for a completed round.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_round(
+        &mut self,
+        stage: &str,
+        step: usize,
+        out: &RoundOutcome,
+        test_acc: f32,
+        em: f64,
+    ) {
+        self.metrics.push(RoundRecord {
+            round: self.round,
+            stage: stage.to_string(),
+            step,
+            train_loss: out.mean_loss,
+            train_acc: out.mean_acc,
+            test_acc,
+            effective_movement: em,
+            participants: out.participants,
+            fallback_participants: out.fallback,
+            bytes_up: out.bytes_up,
+            bytes_down: out.bytes_down,
+            client_mem_bytes: out.client_mem_bytes,
+        });
+    }
+}

@@ -1,0 +1,197 @@
+//! Federated data partitioning: IID and Dirichlet Non-IID (paper §4.1,
+//! α = 1 by default), plus client-shard batch assembly.
+
+use super::{SyntheticDataset, IMG_ELEMS};
+use crate::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    Iid,
+    /// Dirichlet(alpha) label-distribution skew per client.
+    Dirichlet { alpha: f64 },
+}
+
+impl Partition {
+    pub fn label(&self) -> String {
+        match self {
+            Partition::Iid => "IID".into(),
+            Partition::Dirichlet { alpha } => format!("Non-IID(α={alpha})"),
+        }
+    }
+}
+
+/// One client's local dataset: a label sequence + a private index stream.
+/// Images are regenerated on demand from (class, global index) so shards
+/// cost O(samples) u16 labels, not O(samples × 3072) floats.
+#[derive(Debug, Clone)]
+pub struct ClientShard {
+    pub client_id: usize,
+    pub labels: Vec<u16>,
+    /// Global sample indices (unique across clients, disjoint from test).
+    pub indices: Vec<u64>,
+    cursor: usize,
+}
+
+impl ClientShard {
+    pub fn num_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Fill a stacked (steps × batch) training chunk, cycling through the
+    /// shard (clients train multiple local epochs over few samples, as in
+    /// cross-device FL). Advances the shard cursor; the epoch RNG reshuffles
+    /// nothing — order is the partition order, which is already random.
+    pub fn fill_batches(
+        &mut self,
+        data: &SyntheticDataset,
+        steps: usize,
+        batch: usize,
+        xs: &mut Vec<f32>,
+        ys: &mut Vec<i32>,
+    ) {
+        let n = steps * batch;
+        xs.resize(n * IMG_ELEMS, 0.0);
+        ys.resize(n, 0);
+        for i in 0..n {
+            let j = (self.cursor + i) % self.labels.len();
+            let class = self.labels[j] as usize;
+            data.write_sample(class, self.indices[j], &mut xs[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]);
+            ys[i] = class as i32;
+        }
+        self.cursor = (self.cursor + n) % self.labels.len();
+    }
+}
+
+/// Split `total_samples` across `num_clients`. Sample counts get a mild
+/// random spread (clients differ in data volume, as in production
+/// federations); labels per client come from the partition scheme.
+pub fn partition(
+    data: &SyntheticDataset,
+    num_clients: usize,
+    total_samples: usize,
+    scheme: Partition,
+    seed: u64,
+) -> Vec<ClientShard> {
+    let mut rng = Rng::new(seed ^ 0x9a7c_55aa_1234_5678);
+    let k = data.num_classes;
+
+    // Per-client sample counts: uniform share ± 50% jitter, min 8.
+    let base = total_samples / num_clients;
+    let mut counts: Vec<usize> = (0..num_clients)
+        .map(|_| ((base as f64 * rng.uniform(0.5, 1.5)) as usize).max(8))
+        .collect();
+    // Renormalize roughly to the requested total.
+    let s: usize = counts.iter().sum();
+    for c in &mut counts {
+        *c = (*c * total_samples / s).max(8);
+    }
+
+    let mut shards = Vec::with_capacity(num_clients);
+    let mut next_index: u64 = 0;
+    for (cid, &n) in counts.iter().enumerate() {
+        let probs: Vec<f64> = match scheme {
+            Partition::Iid => vec![1.0 / k as f64; k],
+            Partition::Dirichlet { alpha } => rng.dirichlet(alpha, k),
+        };
+        let mut labels = Vec::with_capacity(n);
+        let mut indices = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = rng.categorical(&probs);
+            labels.push(class as u16);
+            indices.push(next_index);
+            next_index += 1;
+        }
+        shards.push(ClientShard { client_id: cid, labels, indices, cursor: 0 });
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset() -> SyntheticDataset {
+        SyntheticDataset::new(10, 1)
+    }
+
+    #[test]
+    fn partition_covers_all_clients() {
+        let shards = partition(&dataset(), 100, 10_000, Partition::Iid, 1);
+        assert_eq!(shards.len(), 100);
+        assert!(shards.iter().all(|s| s.num_samples() >= 8));
+        let total: usize = shards.iter().map(|s| s.num_samples()).sum();
+        assert!((8_000..=12_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn indices_globally_unique() {
+        let shards = partition(&dataset(), 20, 2_000, Partition::Iid, 2);
+        let mut all: Vec<u64> = shards.iter().flat_map(|s| s.indices.iter().copied()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+
+    #[test]
+    fn iid_shards_are_roughly_balanced() {
+        let shards = partition(&dataset(), 10, 20_000, Partition::Iid, 3);
+        for s in &shards {
+            let mut hist = [0usize; 10];
+            for &l in &s.labels {
+                hist[l as usize] += 1;
+            }
+            let n = s.num_samples() as f64;
+            for h in hist {
+                let frac = h as f64 / n;
+                assert!((0.04..0.25).contains(&frac), "iid frac {frac}");
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_skews_labels() {
+        let shards = partition(&dataset(), 30, 30_000, Partition::Dirichlet { alpha: 0.1 }, 4);
+        // With α=0.1 most clients should be dominated by few classes.
+        let mut dominated = 0;
+        for s in &shards {
+            let mut hist = [0usize; 10];
+            for &l in &s.labels {
+                hist[l as usize] += 1;
+            }
+            let max = *hist.iter().max().unwrap() as f64;
+            if max / s.num_samples() as f64 > 0.5 {
+                dominated += 1;
+            }
+        }
+        assert!(dominated > 15, "only {dominated}/30 skewed");
+    }
+
+    #[test]
+    fn deterministic_partitioning() {
+        let a = partition(&dataset(), 10, 1_000, Partition::Dirichlet { alpha: 1.0 }, 5);
+        let b = partition(&dataset(), 10, 1_000, Partition::Dirichlet { alpha: 1.0 }, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+        }
+    }
+
+    #[test]
+    fn fill_batches_cycles_and_advances() {
+        let data = dataset();
+        let mut shards = partition(&data, 2, 40, Partition::Iid, 6);
+        let s = &mut shards[0];
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        s.fill_batches(&data, 2, 8, &mut xs, &mut ys);
+        assert_eq!(xs.len(), 16 * IMG_ELEMS);
+        assert_eq!(ys.len(), 16);
+        let first = ys.clone();
+        s.fill_batches(&data, 2, 8, &mut xs, &mut ys);
+        // cursor advanced: different windows unless shard length divides 16
+        if s.num_samples() % 16 != 0 {
+            assert_ne!(first, ys);
+        }
+        // labels valid
+        assert!(ys.iter().all(|&y| (0..10).contains(&y)));
+    }
+}

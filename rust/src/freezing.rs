@@ -1,0 +1,263 @@
+//! Block freezing determination (paper §3.3).
+//!
+//! Server-side convergence tracking from the *scalar* perspective:
+//!
+//! * Scalar update at round k:    U_s^k = s^k − s^{k−1}
+//! * Windowed movement:           D_{s,k}^H = ‖Σ_{h=0}^{H−1} U_s^{k−h}‖
+//! * Block movement:              D_{B,k}^H = Σ_{s∈B} D_{s,k}^H
+//! * **Effective movement**:      D_{B,k}^H / Σ_{s∈B} Σ_h ‖U_s^{k−h}‖
+//!
+//! Early in training gradients push scalars consistently in one direction,
+//! so the numerator ≈ denominator and EM ≈ 1; near convergence scalars
+//! oscillate around the optimum, displacements cancel inside the window
+//! and EM → 0. The server fits a least-squares line to the EM series and
+//! freezes the block once |slope| stays below φ for W consecutive
+//! evaluations (the curve has flattened out).
+
+use std::collections::VecDeque;
+
+/// Sliding-window effective-movement tracker for one block vector.
+pub struct EffectiveMovement {
+    window_h: usize,
+    /// Last H deltas (each Vec is U^k over all scalars of the block).
+    deltas: VecDeque<Vec<f32>>,
+    prev: Option<Vec<f32>>,
+}
+
+impl EffectiveMovement {
+    pub fn new(window_h: usize) -> Self {
+        assert!(window_h >= 1);
+        EffectiveMovement { window_h, deltas: VecDeque::new(), prev: None }
+    }
+
+    /// Feed the block's aggregated parameter vector after round k.
+    /// Returns EM once H deltas have accumulated.
+    pub fn push(&mut self, snapshot: &[f32]) -> Option<f64> {
+        if let Some(prev) = &self.prev {
+            debug_assert_eq!(prev.len(), snapshot.len());
+            let delta: Vec<f32> = snapshot.iter().zip(prev).map(|(a, b)| a - b).collect();
+            if self.deltas.len() == self.window_h {
+                self.deltas.pop_front();
+            }
+            self.deltas.push_back(delta);
+        }
+        self.prev = Some(snapshot.to_vec());
+        if self.deltas.len() < self.window_h {
+            return None;
+        }
+        Some(self.compute())
+    }
+
+    fn compute(&self) -> f64 {
+        let n = self.prev.as_ref().map_or(0, |p| p.len());
+        let mut num = 0.0f64; // Σ_s |Σ_h U_s|
+        let mut den = 0.0f64; // Σ_s Σ_h |U_s|
+        for s in 0..n {
+            let mut acc = 0.0f64;
+            for d in &self.deltas {
+                let u = d[s] as f64;
+                acc += u;
+                den += u.abs();
+            }
+            num += acc.abs();
+        }
+        if den <= 1e-12 {
+            0.0 // block did not move at all: converged
+        } else {
+            num / den
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.deltas.clear();
+        self.prev = None;
+    }
+}
+
+/// Least-squares slope of y over x = 0..n-1.
+pub fn ls_slope(ys: &[f64]) -> f64 {
+    let n = ys.len() as f64;
+    if ys.len() < 2 {
+        return f64::INFINITY;
+    }
+    let xm = (n - 1.0) / 2.0;
+    let ym: f64 = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (i, y) in ys.iter().enumerate() {
+        let dx = i as f64 - xm;
+        sxy += dx * (y - ym);
+        sxx += dx * dx;
+    }
+    sxy / sxx
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct FreezeConfig {
+    /// Delta window H for effective movement.
+    pub window_h: usize,
+    /// Slope threshold φ.
+    pub phi: f64,
+    /// Consecutive below-threshold evaluations required (patience W).
+    pub patience_w: usize,
+    /// Points used in each slope fit.
+    pub fit_points: usize,
+    /// Never freeze before this many EM observations (warm-up).
+    pub min_observations: usize,
+}
+
+impl Default for FreezeConfig {
+    fn default() -> Self {
+        FreezeConfig { window_h: 3, phi: 0.01, patience_w: 3, fit_points: 5, min_observations: 6 }
+    }
+}
+
+/// The freeze decision engine for one block/step.
+pub struct FreezeDetector {
+    cfg: FreezeConfig,
+    em: EffectiveMovement,
+    history: Vec<f64>,
+    consecutive: usize,
+}
+
+impl FreezeDetector {
+    pub fn new(cfg: FreezeConfig) -> Self {
+        FreezeDetector { em: EffectiveMovement::new(cfg.window_h), cfg, history: Vec::new(), consecutive: 0 }
+    }
+
+    /// Observe the post-aggregation block vector; returns (em, freeze?).
+    pub fn observe(&mut self, block_vec: &[f32]) -> (Option<f64>, bool) {
+        let Some(em) = self.em.push(block_vec) else {
+            return (None, false);
+        };
+        self.history.push(em);
+        if self.history.len() < self.cfg.min_observations {
+            return (Some(em), false);
+        }
+        let tail = &self.history[self.history.len().saturating_sub(self.cfg.fit_points)..];
+        let slope = ls_slope(tail);
+        if slope.abs() < self.cfg.phi {
+            self.consecutive += 1;
+        } else {
+            self.consecutive = 0;
+        }
+        (Some(em), self.consecutive >= self.cfg.patience_w)
+    }
+
+    pub fn history(&self) -> &[f64] {
+        &self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn em_is_one_for_consistent_motion() {
+        let mut em = EffectiveMovement::new(3);
+        let mut v = vec![0.0f32; 100];
+        let mut out = None;
+        for _ in 0..6 {
+            for x in &mut v {
+                *x += 0.1; // every scalar moves the same direction
+            }
+            out = em.push(&v);
+        }
+        assert!((out.unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn em_near_zero_for_oscillation() {
+        let mut em = EffectiveMovement::new(4);
+        let mut out = None;
+        for k in 0..10 {
+            let v: Vec<f32> = (0..100).map(|s| if (k + s) % 2 == 0 { 0.1 } else { -0.1 }).collect();
+            out = em.push(&v);
+        }
+        // alternating ±0.2 deltas cancel pairwise inside the even window
+        assert!(out.unwrap() < 0.05, "em {:?}", out);
+    }
+
+    #[test]
+    fn em_zero_when_frozen_vector() {
+        let mut em = EffectiveMovement::new(3);
+        let v = vec![1.0f32; 10];
+        let mut out = None;
+        for _ in 0..5 {
+            out = em.push(&v);
+        }
+        assert_eq!(out.unwrap(), 0.0);
+    }
+
+    #[test]
+    fn em_decreases_on_synthetic_convergence() {
+        // Simulate SGD-like decay: deltas shrink and decorrelate over time.
+        let mut em = EffectiveMovement::new(3);
+        let mut rng = Rng::new(1);
+        let mut v = vec![0.0f32; 500];
+        let mut first = None;
+        let mut last = 0.0;
+        for k in 0..60 {
+            let drift = 1.0 / (1.0 + k as f32 * 0.3); // coherent part decays
+            for x in v.iter_mut() {
+                *x += drift * 0.1 + 0.05 * rng.normal();
+            }
+            if let Some(e) = em.push(&v) {
+                if first.is_none() {
+                    first = Some(e);
+                }
+                last = e;
+            }
+        }
+        assert!(first.unwrap() > 0.5, "first {:?}", first);
+        assert!(last < first.unwrap(), "no decrease: {last} vs {first:?}");
+    }
+
+    #[test]
+    fn ls_slope_basics() {
+        assert!((ls_slope(&[0.0, 1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert!(ls_slope(&[5.0, 5.0, 5.0]).abs() < 1e-12);
+        assert!(ls_slope(&[3.0, 2.0, 1.0]) < 0.0);
+    }
+
+    #[test]
+    fn detector_freezes_flat_series_only_after_patience() {
+        let cfg = FreezeConfig { window_h: 2, phi: 0.01, patience_w: 3, fit_points: 4, min_observations: 4 };
+        let mut det = FreezeDetector::new(cfg);
+        // Phase 1: strong coherent motion — must not freeze.
+        let mut v = vec![0.0f32; 50];
+        let mut frozen = false;
+        for _ in 0..6 {
+            for x in &mut v {
+                *x += 0.5;
+            }
+            let (_, f) = det.observe(&v);
+            frozen |= f;
+        }
+        assert!(!frozen, "froze during active training");
+        // Phase 2: stalled — should freeze after ≥ patience evaluations.
+        let mut rounds_to_freeze = 0;
+        for k in 1..20 {
+            let (_, f) = det.observe(&v); // vector no longer moves
+            if f {
+                rounds_to_freeze = k;
+                break;
+            }
+        }
+        assert!(rounds_to_freeze >= 3, "froze too fast: {rounds_to_freeze}");
+        assert!(rounds_to_freeze > 0, "never froze");
+    }
+
+    #[test]
+    fn detector_respects_min_observations() {
+        let cfg = FreezeConfig { window_h: 1, phi: 1e9, patience_w: 1, fit_points: 3, min_observations: 10 };
+        let mut det = FreezeDetector::new(cfg);
+        let v = vec![0.0f32; 10];
+        for _ in 0..9 {
+            let (_, f) = det.observe(&v);
+            assert!(!f);
+        }
+    }
+}

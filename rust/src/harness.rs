@@ -1,0 +1,147 @@
+//! Experiment harness shared by the table/figure examples.
+//!
+//! Each paper table/figure has an `examples/` binary; this module holds
+//! the common machinery: budget-profile handling (so the same binary can
+//! run a 2-minute shape check or a paper-scale sweep), table formatting,
+//! and result persistence under `artifacts/results/`.
+
+use crate::cli::Args;
+use crate::config::RunConfig;
+use crate::metrics::RunSummary;
+use anyhow::Result;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Parse the standard example flags: --profile fast|smoke|paper,
+/// --alpha <f64>, --seed, --models a,b,c (model tags).
+pub struct ExpOpts {
+    pub profile: String,
+    pub alpha: Option<f64>,
+    pub seed: Option<u64>,
+    pub models: Option<Vec<String>>,
+    pub rounds: Option<usize>,
+}
+
+impl ExpOpts {
+    pub fn from_env() -> Result<Self> {
+        let args = Args::parse(std::env::args().skip(1))?;
+        Ok(ExpOpts {
+            profile: args.get_or("profile", "fast").to_string(),
+            alpha: args.parse_opt("alpha")?,
+            seed: args.parse_opt("seed")?,
+            models: args.get("models").map(|s| s.split(',').map(String::from).collect()),
+            rounds: args.parse_opt("rounds")?,
+        })
+    }
+
+    pub fn cfg(&self, model: &str) -> RunConfig {
+        let mut cfg = match self.profile.as_str() {
+            "smoke" => RunConfig::smoke(model),
+            "paper" => RunConfig::paper(model),
+            _ => RunConfig { model_tag: model.into(), ..Default::default() },
+        };
+        cfg.dirichlet_alpha = self.alpha;
+        if let Some(s) = self.seed {
+            cfg.seed = s;
+        }
+        if let Some(r) = self.rounds {
+            cfg.max_rounds_total = r;
+            cfg.max_rounds_per_step = (r / 4).max(4);
+        }
+        cfg
+    }
+}
+
+/// Results directory: artifacts/results/ (gitignored with the artifacts).
+pub fn results_dir() -> PathBuf {
+    let dir = crate::artifacts_dir().join("results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Format one summary as a paper-table row.
+pub fn fmt_row(s: &RunSummary) -> String {
+    let acc = if s.final_acc.is_nan() { "   NA ".to_string() } else { format!("{:5.1}%", s.final_acc * 100.0) };
+    format!(
+        "{:<14} {:<10} {:>6}  PR={:>4.0}%  peak={:>6.1}MB  comm={:>8.1}MB",
+        s.method,
+        s.partition,
+        acc,
+        s.participation_rate * 100.0,
+        s.peak_client_mem as f64 / 1e6,
+        s.comm_total() as f64 / 1e6,
+    )
+}
+
+/// Append a block of results to artifacts/results/<name>.txt (and echo).
+pub fn save_text(name: &str, text: &str) -> Result<()> {
+    let path = results_dir().join(format!("{name}.txt"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(text.as_bytes())?;
+    eprintln!("[harness] wrote {path:?}");
+    Ok(())
+}
+
+/// The paper's Table 1/2 reference values (accuracy %, PR %) for shape
+/// comparison printouts. Keyed (family, classes, iid?, method).
+pub fn paper_reference(family: &str, classes: usize, iid: bool, method: &str) -> Option<(f64, f64)> {
+    // (acc, pr) from Tables 1 and 2 of the paper.
+    let t: &[(&str, usize, bool, &str, f64, f64)] = &[
+        ("resnet18", 10, true, "AllSmall", 76.7, 100.0),
+        ("resnet18", 10, true, "ExclusiveFL", 65.3, 8.0),
+        ("resnet18", 10, true, "HeteroFL", 75.5, 100.0),
+        ("resnet18", 10, true, "DepthFL", 70.4, 47.0),
+        ("resnet18", 10, true, "ProFL", 84.1, 100.0),
+        ("resnet18", 10, false, "AllSmall", 69.2, 100.0),
+        ("resnet18", 10, false, "ExclusiveFL", 58.6, 8.0),
+        ("resnet18", 10, false, "HeteroFL", 62.9, 100.0),
+        ("resnet18", 10, false, "DepthFL", 60.8, 47.0),
+        ("resnet18", 10, false, "ProFL", 78.4, 100.0),
+        ("resnet18", 100, true, "ProFL", 55.4, 100.0),
+        ("resnet18", 100, false, "ProFL", 48.3, 100.0),
+        ("resnet34", 10, true, "AllSmall", 66.9, 100.0),
+        ("resnet34", 10, true, "ExclusiveFL", f64::NAN, 0.0),
+        ("resnet34", 10, true, "HeteroFL", 9.8, 100.0),
+        ("resnet34", 10, true, "DepthFL", 71.7, 34.0),
+        ("resnet34", 10, true, "ProFL", 82.2, 100.0),
+        ("vgg11", 10, true, "AllSmall", 82.1, 100.0),
+        ("vgg11", 10, true, "ExclusiveFL", 83.7, 24.0),
+        ("vgg11", 10, true, "HeteroFL", 83.9, 100.0),
+        ("vgg11", 10, true, "DepthFL", 86.4, 43.0),
+        ("vgg11", 10, true, "ProFL", 87.6, 100.0),
+        ("vgg16", 10, true, "AllSmall", 78.8, 100.0),
+        ("vgg16", 10, true, "ExclusiveFL", f64::NAN, 0.0),
+        ("vgg16", 10, true, "HeteroFL", 11.6, 100.0),
+        ("vgg16", 10, true, "DepthFL", 76.9, 37.0),
+        ("vgg16", 10, true, "ProFL", 82.4, 100.0),
+    ];
+    t.iter()
+        .find(|(f, c, i, m, _, _)| *f == family && *c == classes && *i == iid && *m == method)
+        .map(|(_, _, _, _, a, p)| (*a, *p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_reference_lookup() {
+        let (acc, pr) = paper_reference("resnet18", 10, true, "ProFL").unwrap();
+        assert_eq!(acc, 84.1);
+        assert_eq!(pr, 100.0);
+        assert!(paper_reference("resnet18", 10, true, "Nope").is_none());
+        // ResNet34 ExclusiveFL is the NA cell
+        let (acc, pr) = paper_reference("resnet34", 10, true, "ExclusiveFL").unwrap();
+        assert!(acc.is_nan());
+        assert_eq!(pr, 0.0);
+    }
+
+    #[test]
+    fn cfg_profiles() {
+        let o = ExpOpts { profile: "smoke".into(), alpha: Some(0.5), seed: Some(7), models: None, rounds: None };
+        let c = o.cfg("m");
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.dirichlet_alpha, Some(0.5));
+        assert!(c.num_clients <= 20);
+    }
+}

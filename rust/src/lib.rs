@@ -1,0 +1,56 @@
+//! # ProFL — breaking the memory wall for heterogeneous federated learning
+//!
+//! Production-grade reproduction of *"Breaking the Memory Wall for
+//! Heterogeneous Federated Learning via Progressive Training"* (KDD 2025)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated coordinator: memory-aware client
+//!   selection, progressive shrink/grow scheduling, block freezing
+//!   determination (effective movement), FedAvg aggregation, all
+//!   baselines, metrics. Python never runs on the round path.
+//! * **L2/L1 (`python/compile`)** — JAX block models + Pallas kernels,
+//!   AOT-lowered once to HLO-text artifacts (`make artifacts`).
+//! * **Runtime bridge** — [`runtime::Runtime`] loads the artifacts through
+//!   the PJRT C API (`xla` crate) and executes them from the round loop.
+//!
+//! ## Quick start
+//!
+//! ```bash
+//! make artifacts                      # python AOT (once)
+//! cargo run --release --example quickstart
+//! cargo run --release -- run --method profl --model resnet18_w8_c10
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod aggregate;
+pub mod bench_util;
+pub mod cli;
+pub mod clients;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod freezing;
+pub mod harness;
+pub mod json;
+pub mod manifest;
+pub mod memory;
+pub mod methods;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod store;
+
+pub use config::RunConfig;
+pub use coordinator::ServerCtx;
+pub use metrics::RunSummary;
+pub use runtime::Runtime;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$PROFL_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("PROFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

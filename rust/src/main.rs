@@ -1,0 +1,153 @@
+//! `profl` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   run        one FL run (method × model × partition), CSV + summary out
+//!   compare    all Table-1 methods on one model/partition
+//!   inspect    print manifest inventory + memory model (Fig 6 numbers)
+//!   blocks     per-block parameter table (Table 5)
+//!
+//! The table/figure harnesses live in `examples/` (one binary per paper
+//! table/figure); this binary is the operational front door.
+
+use anyhow::{bail, Result};
+use profl::cli::Args;
+use profl::methods::{by_name, table_methods};
+use profl::{artifacts_dir, RunConfig, Runtime};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+profl — ProFL progressive federated learning coordinator
+
+USAGE: profl <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  run       Run one method end-to-end and print its summary
+  compare   Run every Table-1 method on one model/partition
+  inspect   Print manifest inventory with the memory model
+  blocks    Table 5: per-block parameter quantity/percentage
+
+COMMON OPTIONS:
+  --artifacts <dir>   Artifacts dir (default $PROFL_ARTIFACTS or ./artifacts)
+  --model <tag>       Manifest model tag        [default: resnet18_w8_c10]
+  --alpha <f64>       Dirichlet alpha (Non-IID); omit for IID
+  --profile <name>    fast | smoke | paper      [default: fast]
+  --seed <u64>        RNG seed
+  --method <name>     run only: profl | profl-noshrink | paramaware |
+                      allsmall | exclusivefl | heterofl | depthfl
+  --csv <path>        run only: write per-round CSV
+";
+
+fn make_cfg(args: &Args) -> Result<RunConfig> {
+    let model = args.get_or("model", "resnet18_w8_c10");
+    let mut cfg = match args.get_or("profile", "fast") {
+        "fast" => RunConfig { model_tag: model.into(), ..Default::default() },
+        "smoke" => RunConfig::smoke(model),
+        "paper" => RunConfig::paper(model),
+        other => bail!("unknown profile `{other}` (fast|smoke|paper)"),
+    };
+    cfg.dirichlet_alpha = args.parse_opt("alpha")?;
+    if let Some(s) = args.parse_opt("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(r) = args.parse_opt("rounds")? {
+        cfg.max_rounds_total = r;
+    }
+    Ok(cfg)
+}
+
+fn print_summary(s: &profl::RunSummary) {
+    println!(
+        "{:<14} {:<22} {:<14} acc={:>6.2}%  PR={:>5.1}%  peak_mem={:>6.1}MB  comm={:>8.1}MB  rounds={}",
+        s.method,
+        s.model_tag,
+        s.partition,
+        s.final_acc * 100.0,
+        s.participation_rate * 100.0,
+        s.peak_client_mem as f64 / 1e6,
+        s.comm_total() as f64 / 1e6,
+        s.rounds
+    );
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    if args.flag("help") || args.subcommand.is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let dir = args.get("artifacts").map(PathBuf::from).unwrap_or_else(artifacts_dir);
+    let rt = Runtime::new(&dir)?;
+
+    match args.subcommand.as_deref().unwrap() {
+        "run" => {
+            let method = args.get_or("method", "profl");
+            let m = by_name(method).ok_or_else(|| anyhow::anyhow!("unknown method `{method}`"))?;
+            let cfg = make_cfg(&args)?;
+            eprintln!(
+                "[profl] running {} on {} ({})",
+                m.name(),
+                cfg.model_tag,
+                cfg.partition().label()
+            );
+            let summary = m.run(&rt, &cfg)?;
+            print_summary(&summary);
+            if let Some(path) = args.get("csv") {
+                let mut sink = profl::metrics::MetricsSink::new();
+                for r in &summary.history {
+                    sink.push(r.clone());
+                }
+                sink.write_csv(std::path::Path::new(path))?;
+                eprintln!("[profl] wrote {path}");
+            }
+        }
+        "compare" => {
+            let cfg = make_cfg(&args)?;
+            for m in table_methods() {
+                let s = m.run(&rt, &cfg)?;
+                print_summary(&s);
+            }
+        }
+        "inspect" => {
+            let filter = args.get("model");
+            for (tag, entry) in &rt.manifest.models {
+                if let Some(m) = filter {
+                    if m != tag {
+                        continue;
+                    }
+                }
+                println!(
+                    "{tag}: {} blocks, {} classes, {} artifacts",
+                    entry.num_blocks,
+                    entry.num_classes,
+                    entry.artifacts.len()
+                );
+                for (name, art) in &entry.artifacts {
+                    let mem = art.participation_mem();
+                    println!(
+                        "  {:<22} kind={:<8} mem@128={:>7.1}MB  train_params={:>9}",
+                        name,
+                        art.kind,
+                        mem.bytes_at(128) as f64 / 1e6,
+                        mem.params_trainable,
+                    );
+                }
+            }
+        }
+        "blocks" => {
+            let model = args.get_or("model", "resnet18_w8_c10");
+            let entry = rt.model(model)?;
+            let total: u64 = entry.block_param_counts.iter().sum();
+            println!("Table 5 — {model} (total {:.2}M params)", total as f64 / 1e6);
+            for (i, c) in entry.block_param_counts.iter().enumerate() {
+                println!(
+                    "  Block{}: {:>10} params ({:>5.1}%)",
+                    i + 1,
+                    c,
+                    *c as f64 / total as f64 * 100.0
+                );
+            }
+        }
+        other => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,330 @@
+//! Manifest: the contract between the AOT pipeline and the Rust runtime.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.json` describing every
+//! lowered HLO artifact: ordered input/output parameter lists (positional
+//! marshalling), shapes, memory coefficients (both the executed mini model
+//! and its paper-width twin), and per-model block inventories. This module
+//! is the serde mirror plus lookup helpers; nothing here touches PJRT.
+
+use crate::json::Value;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// bytes = fixed_bytes + per_sample_bytes * batch (see python/compile/memory.py).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemCoeffs {
+    pub fixed_bytes: u64,
+    pub per_sample_bytes: u64,
+    pub params_total: u64,
+    pub params_trainable: u64,
+}
+
+impl MemCoeffs {
+    pub fn bytes_at(&self, batch: u64) -> u64 {
+        self.fixed_bytes + self.per_sample_bytes * batch
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct InputEntry {
+    pub name: String,
+    pub role: String, // trainable | frozen | param | data_x | data_y | lr
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub path: String,
+    pub kind: String, // train | distill | eval
+    pub inputs: Vec<InputEntry>,
+    pub outputs: Vec<String>,
+    pub step: Option<usize>,
+    pub depth: Option<usize>,
+    pub mem: Option<MemCoeffs>,
+    /// Paper-width-twin coefficients: what the memory substrate uses for
+    /// participation decisions (DESIGN.md §Substitutions).
+    pub mem_paper: Option<MemCoeffs>,
+    pub sha256: String,
+}
+
+impl Artifact {
+    pub fn trainable_names(&self) -> Vec<&str> {
+        self.inputs.iter().filter(|i| i.role == "trainable").map(|i| i.name.as_str()).collect()
+    }
+    pub fn frozen_names(&self) -> Vec<&str> {
+        self.inputs
+            .iter()
+            .filter(|i| i.role == "frozen" || i.role == "param")
+            .map(|i| i.name.as_str())
+            .collect()
+    }
+    /// Bytes of one direction of parameter traffic for the trainable set
+    /// (what clients upload each round).
+    pub fn trainable_bytes(&self) -> u64 {
+        self.inputs
+            .iter()
+            .filter(|i| i.role == "trainable")
+            .map(|i| 4 * i.shape.iter().product::<usize>() as u64)
+            .sum()
+    }
+    pub fn frozen_bytes(&self) -> u64 {
+        self.inputs
+            .iter()
+            .filter(|i| i.role == "frozen" || i.role == "param")
+            .map(|i| 4 * i.shape.iter().product::<usize>() as u64)
+            .sum()
+    }
+    /// Memory coefficients used for participation (paper twin preferred).
+    pub fn participation_mem(&self) -> MemCoeffs {
+        self.mem_paper.or(self.mem).unwrap_or_default()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub family: String,
+    pub width: usize,
+    pub num_classes: usize,
+    pub width_ratio: f64,
+    pub image_size: usize,
+    pub num_blocks: usize,
+    pub block_param_counts: Vec<u64>,
+    /// Parameter names belonging to each block (index 0 = block 1).
+    pub block_params: Vec<Vec<String>>,
+    pub artifacts: BTreeMap<String, Artifact>,
+    /// Union of every parameter name -> shape the store must hold.
+    pub params: BTreeMap<String, Vec<usize>>,
+    pub mem: BTreeMap<String, MemCoeffs>,
+    pub mem_paper: BTreeMap<String, MemCoeffs>,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+    /// Which block (1-based) a parameter belongs to, if any.
+    pub fn block_of(&self, param: &str) -> Option<usize> {
+        for (i, names) in self.block_params.iter().enumerate() {
+            if names.iter().any(|n| n == param) {
+                return Some(i + 1);
+            }
+        }
+        None
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub kernel_backend: String,
+    pub train_batch: usize,
+    pub scan_steps: usize,
+    pub eval_batch: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl MemCoeffs {
+    fn from_value(v: &Value) -> Result<Self> {
+        Ok(MemCoeffs {
+            fixed_bytes: v.get("fixed_bytes")?.as_u64()?,
+            per_sample_bytes: v.get("per_sample_bytes")?.as_u64()?,
+            params_total: v.get("params_total")?.as_u64()?,
+            params_trainable: v.get("params_trainable")?.as_u64()?,
+        })
+    }
+}
+
+impl Artifact {
+    fn from_value(v: &Value) -> Result<Self> {
+        let inputs = v
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(InputEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    role: e.get("role")?.as_str()?.to_string(),
+                    shape: e.get("shape")?.as_shape()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|o| Ok(o.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Artifact {
+            path: v.get("path")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            inputs,
+            outputs,
+            step: v.opt("step").map(|s| s.as_usize()).transpose()?,
+            depth: v.opt("depth").map(|s| s.as_usize()).transpose()?,
+            mem: v.opt("mem").map(MemCoeffs::from_value).transpose()?,
+            mem_paper: v.opt("mem_paper").map(MemCoeffs::from_value).transpose()?,
+            sha256: v.opt("sha256").map(|s| s.as_str().map(String::from)).transpose()?.unwrap_or_default(),
+        })
+    }
+}
+
+impl ModelEntry {
+    fn from_value(v: &Value) -> Result<Self> {
+        let block_params = v
+            .get("block_params")?
+            .as_arr()?
+            .iter()
+            .map(|blk| {
+                blk.as_arr()?
+                    .iter()
+                    .map(|n| Ok(n.as_str()?.to_string()))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), Artifact::from_value(a).with_context(|| format!("artifact {name}"))?);
+        }
+        let mut params = BTreeMap::new();
+        for (name, shape) in v.get("params")?.as_obj()? {
+            params.insert(name.clone(), shape.as_shape()?);
+        }
+        let mut mem = BTreeMap::new();
+        if let Some(m) = v.opt("mem") {
+            for (k, c) in m.as_obj()? {
+                mem.insert(k.clone(), MemCoeffs::from_value(c)?);
+            }
+        }
+        let mut mem_paper = BTreeMap::new();
+        if let Some(m) = v.opt("mem_paper") {
+            for (k, c) in m.as_obj()? {
+                mem_paper.insert(k.clone(), MemCoeffs::from_value(c)?);
+            }
+        }
+        Ok(ModelEntry {
+            family: v.get("family")?.as_str()?.to_string(),
+            width: v.get("width")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            width_ratio: v.get("width_ratio")?.as_f64()?,
+            image_size: v.get("image_size")?.as_usize()?,
+            num_blocks: v.get("num_blocks")?.as_usize()?,
+            block_param_counts: v
+                .get("block_param_counts")?
+                .as_arr()?
+                .iter()
+                .map(|c| c.as_u64())
+                .collect::<Result<Vec<_>>>()?,
+            block_params,
+            artifacts,
+            params,
+            mem,
+            mem_paper,
+        })
+    }
+}
+
+impl Manifest {
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Value::parse(text).context("parsing manifest.json")?;
+        let version = v.get("version")?.as_u64()? as u32;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut models = BTreeMap::new();
+        for (tag, m) in v.get("models")?.as_obj()? {
+            models.insert(tag.clone(), ModelEntry::from_value(m).with_context(|| format!("model {tag}"))?);
+        }
+        Ok(Manifest {
+            version,
+            kernel_backend: v.get("kernel_backend")?.as_str()?.to_string(),
+            train_batch: v.get("train_batch")?.as_usize()?,
+            scan_steps: v.get("scan_steps")?.as_usize()?,
+            eval_batch: v.get("eval_batch")?.as_usize()?,
+            models,
+        })
+    }
+
+    pub fn load(artifacts_dir: &Path) -> Result<(Self, PathBuf)> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Ok((Manifest::from_json(&text)?, artifacts_dir.to_path_buf()))
+    }
+
+    pub fn model(&self, tag: &str) -> Result<&ModelEntry> {
+        self.models.get(tag).with_context(|| {
+            format!(
+                "model `{tag}` not in manifest (have: {:?}); re-run `make artifacts` with the right --models",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// The width-ratio variant tag of a base tag, e.g. ("resnet18_w8_c10", 0.25).
+    pub fn ratio_tag(base: &str, ratio: f64) -> String {
+        if (ratio - 1.0).abs() < 1e-9 {
+            base.to_string()
+        } else {
+            format!("{base}_r{ratio}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_coeffs_linear() {
+        let m = MemCoeffs { fixed_bytes: 100, per_sample_bytes: 7, params_total: 0, params_trainable: 0 };
+        assert_eq!(m.bytes_at(0), 100);
+        assert_eq!(m.bytes_at(10), 170);
+    }
+
+    #[test]
+    fn ratio_tag_format() {
+        assert_eq!(Manifest::ratio_tag("resnet18_w8_c10", 1.0), "resnet18_w8_c10");
+        assert_eq!(Manifest::ratio_tag("resnet18_w8_c10", 0.25), "resnet18_w8_c10_r0.25");
+        assert_eq!(Manifest::ratio_tag("resnet18_w8_c10", 0.5), "resnet18_w8_c10_r0.5");
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let json = r#"{
+            "version": 1, "kernel_backend": "native",
+            "train_batch": 32, "scan_steps": 4, "eval_batch": 256,
+            "models": {
+                "m": {
+                    "family": "resnet18", "width": 8, "num_classes": 10,
+                    "width_ratio": 1.0, "image_size": 32, "num_blocks": 2,
+                    "block_param_counts": [10, 20],
+                    "block_params": [["b1/w"], ["b2/w"]],
+                    "artifacts": {
+                        "train_t1": {
+                            "path": "m/train_t1.hlo.txt", "kind": "train",
+                            "inputs": [
+                                {"name": "b1/w", "role": "trainable", "shape": [3,3,1,2]},
+                                {"name": "xs", "role": "data_x", "shape": [4,32,32,32,3]},
+                                {"name": "ys", "role": "data_y", "shape": [4,32]},
+                                {"name": "lr", "role": "lr", "shape": []}
+                            ],
+                            "outputs": ["b1/w", "loss", "correct"],
+                            "mem": {"fixed_bytes": 8, "per_sample_bytes": 2,
+                                    "params_total": 2, "params_trainable": 2}
+                        }
+                    },
+                    "params": {"b1/w": [3,3,1,2], "b2/w": [3,3,2,2]}
+                }
+            }
+        }"#;
+        let m = Manifest::from_json(json).unwrap();
+        let me = m.model("m").unwrap();
+        let a = me.artifact("train_t1").unwrap();
+        assert_eq!(a.trainable_names(), vec!["b1/w"]);
+        assert_eq!(a.trainable_bytes(), 4 * 18);
+        assert_eq!(me.block_of("b2/w"), Some(2));
+        assert_eq!(me.block_of("head/fc/w"), None);
+        assert!(me.artifact("nope").is_err());
+    }
+}

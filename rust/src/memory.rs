@@ -1,0 +1,143 @@
+//! Device-memory substrate: budgets, contention, participation decisions.
+//!
+//! Mirrors the paper's setup (§4.1): each of the N devices gets an
+//! available-memory budget drawn uniformly from 100–900 MB "while
+//! considering resource contention" — we model contention as a per-round
+//! multiplicative factor U[contention_lo, 1.0] on the static budget
+//! (co-resident apps steal a varying slice). A client can train an
+//! artifact in round r iff the artifact's analytical training footprint
+//! (paper-width-twin coefficients × accounting batch) fits its available
+//! memory that round.
+
+use crate::manifest::MemCoeffs;
+use crate::rng::Rng;
+
+pub const MB: u64 = 1_000_000;
+
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryConfig {
+    /// Static budget range (paper: 100–900 MB).
+    pub budget_min_mb: u64,
+    pub budget_max_mb: u64,
+    /// Per-round contention factor lower bound (available = budget × U[lo, 1]).
+    pub contention_lo: f64,
+    /// Batch size used for footprint accounting (paper-scale, decoupled
+    /// from the mini models' execution batch).
+    pub accounting_batch: u64,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig { budget_min_mb: 100, budget_max_mb: 900, contention_lo: 0.7, accounting_batch: 128 }
+    }
+}
+
+/// One device's memory state.
+#[derive(Debug, Clone)]
+pub struct DeviceMemory {
+    /// Static installed budget (bytes).
+    pub budget: u64,
+    rng: Rng,
+}
+
+impl DeviceMemory {
+    pub fn sample(cfg: &MemoryConfig, rng: &mut Rng, client_id: usize) -> Self {
+        let budget = (rng.uniform(cfg.budget_min_mb as f64, cfg.budget_max_mb as f64) * MB as f64) as u64;
+        DeviceMemory { budget, rng: rng.fork(0xc0ffee ^ client_id as u64) }
+    }
+
+    /// Available memory this round (contention resampled per call).
+    pub fn available(&mut self, cfg: &MemoryConfig) -> u64 {
+        (self.budget as f64 * self.rng.uniform(cfg.contention_lo, 1.0)) as u64
+    }
+
+    /// Would `mem` fit statically (ignoring contention)? Used for stable
+    /// capability grouping (e.g. HeteroFL ratio assignment).
+    pub fn fits_static(&self, cfg: &MemoryConfig, mem: &MemCoeffs) -> bool {
+        mem.bytes_at(cfg.accounting_batch) <= self.budget
+    }
+}
+
+/// Round-level participation decision for a concrete artifact.
+pub fn can_train(avail: u64, cfg: &MemoryConfig, mem: &MemCoeffs) -> bool {
+    mem.bytes_at(cfg.accounting_batch) <= avail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coeffs(fixed_mb: u64, per_sample_kb: u64) -> MemCoeffs {
+        MemCoeffs {
+            fixed_bytes: fixed_mb * MB,
+            per_sample_bytes: per_sample_kb * 1000,
+            params_total: 0,
+            params_trainable: 0,
+        }
+    }
+
+    #[test]
+    fn budgets_in_range() {
+        let cfg = MemoryConfig::default();
+        let mut rng = Rng::new(1);
+        for i in 0..200 {
+            let d = DeviceMemory::sample(&cfg, &mut rng, i);
+            assert!((100 * MB..=900 * MB).contains(&d.budget));
+        }
+    }
+
+    #[test]
+    fn contention_reduces_availability() {
+        let cfg = MemoryConfig::default();
+        let mut rng = Rng::new(2);
+        let mut d = DeviceMemory::sample(&cfg, &mut rng, 0);
+        for _ in 0..50 {
+            let a = d.available(&cfg);
+            assert!(a <= d.budget);
+            assert!(a as f64 >= d.budget as f64 * cfg.contention_lo * 0.999);
+        }
+    }
+
+    #[test]
+    fn participation_thresholds() {
+        let cfg = MemoryConfig::default();
+        // 691 MB full-model footprint (ResNet18 paper twin at batch 128)
+        let full = coeffs(131, 4375); // 131MB fixed + 4.375MB/sample*128 = 691MB
+        assert!(!can_train(600 * MB, &cfg, &full));
+        assert!(can_train(700 * MB, &cfg, &full));
+    }
+
+    #[test]
+    fn accounting_batch_scales_footprint() {
+        let mut cfg = MemoryConfig::default();
+        let m = coeffs(10, 1000);
+        let at128 = m.bytes_at(cfg.accounting_batch);
+        cfg.accounting_batch = 32;
+        assert!(m.bytes_at(cfg.accounting_batch) < at128);
+    }
+
+    #[test]
+    fn fleet_participation_rates_match_paper_shape() {
+        // With U[100,900] budgets: a 691MB artifact should admit few
+        // clients; a 112MB one nearly all — Table 1's PR column shape.
+        let cfg = MemoryConfig::default();
+        let mut rng = Rng::new(3);
+        let mut devices: Vec<DeviceMemory> = (0..1000).map(|i| DeviceMemory::sample(&cfg, &mut rng, i)).collect();
+        let full = coeffs(131, 4375); // ~691MB
+        let op = coeffs(12, 780); // ~112MB
+        let pr = |devices: &mut Vec<DeviceMemory>, m: &MemCoeffs| {
+            let mut n = 0;
+            for d in devices.iter_mut() {
+                let a = d.available(&cfg);
+                if can_train(a, &cfg, m) {
+                    n += 1;
+                }
+            }
+            n as f64 / 1000.0
+        };
+        let pr_full = pr(&mut devices, &full);
+        let pr_op = pr(&mut devices, &op);
+        assert!(pr_full < 0.25, "full PR {pr_full}");
+        assert!(pr_op > 0.9, "op PR {pr_op}");
+    }
+}

@@ -1,0 +1,93 @@
+//! AllSmall baseline: the global model is width-scaled down until the
+//! minimum-memory client can train it, so every device participates —
+//! at the cost of a severely limited architecture (paper §4.1).
+
+use super::Method;
+use crate::config::RunConfig;
+use crate::coordinator::ServerCtx;
+use crate::manifest::Manifest;
+use crate::metrics::RunSummary;
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+
+pub struct AllSmall {
+    /// Width ratios to consider, descending (the first that fits ~everyone
+    /// wins; the paper sizes by the minimum client memory).
+    pub ratios: Vec<f64>,
+}
+
+impl Default for AllSmall {
+    fn default() -> Self {
+        AllSmall { ratios: vec![0.5, 0.25, 0.125] }
+    }
+}
+
+impl Method for AllSmall {
+    fn name(&self) -> &'static str {
+        "AllSmall"
+    }
+
+    fn inclusive(&self) -> bool {
+        true
+    }
+
+    fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary> {
+        // Probe a throwaway pool (same seed ⇒ same device budgets as every
+        // other method) to size the global model by the minimum client.
+        let probe = ServerCtx::new(rt, cfg.clone())?;
+        let mut chosen: Option<(String, f64)> = None;
+        for &r in &self.ratios {
+            let tag = Manifest::ratio_tag(&cfg.model_tag, r);
+            let Ok(model) = rt.model(&tag) else { continue };
+            let mem = model.artifact("train_full")?.participation_mem();
+            if probe.pool.participation_rate(&mem) >= 1.0 {
+                chosen = Some((tag, r));
+                break;
+            }
+        }
+        // Nothing fits everyone: take the smallest available ratio.
+        let (tag, _ratio) = match chosen {
+            Some(c) => c,
+            None => {
+                let r = *self.ratios.last().context("no ratios configured")?;
+                (Manifest::ratio_tag(&cfg.model_tag, r), r)
+            }
+        };
+        drop(probe);
+
+        // Train the small global model end-to-end with everyone.
+        let mut small_cfg = cfg.clone();
+        small_cfg.model_tag = tag.clone();
+        let mut ctx = ServerCtx::new(rt, small_cfg)?;
+        let model = rt.model(&tag)?;
+        let num_blocks = model.num_blocks;
+        let full_mem = model.artifact("train_full")?.participation_mem();
+        let pr = ctx.pool.participation_rate(&full_mem);
+        let eval_art = format!("eval_t{num_blocks}");
+
+        ctx.bump_prefix_version();
+        for r in 0..ctx.cfg.max_rounds_total {
+            let out = ctx.run_train_round("train_full", None, ctx.cfg.lr, "allsmall", 0)?;
+            let test_acc = if r % ctx.cfg.eval_every == 0 || r + 1 == ctx.cfg.max_rounds_total {
+                ctx.evaluate(&eval_art)?.acc
+            } else {
+                f32::NAN
+            };
+            ctx.record_round("allsmall", 0, &out, test_acc, f64::NAN);
+        }
+
+        let (up, down) = ctx.metrics.total_bytes();
+        Ok(RunSummary {
+            method: self.name().into(),
+            model_tag: cfg.model_tag.clone(),
+            partition: cfg.partition().label(),
+            final_acc: ctx.metrics.final_acc(ctx.cfg.acc_tail),
+            participation_rate: pr,
+            peak_client_mem: ctx.metrics.peak_client_mem(),
+            total_bytes_up: up,
+            total_bytes_down: down,
+            rounds: ctx.round,
+            history: ctx.metrics.records.clone(),
+        })
+    }
+}

@@ -1,0 +1,148 @@
+//! DepthFL baseline: depth scaling. Each client trains the deepest prefix
+//! (blocks 1..d with a classifier per block, mutual self-distillation)
+//! its memory affords; clients that cannot fit even depth 1 are dropped —
+//! which is what caps DepthFL's participation (§4.2), since depth-1 still
+//! retains the memory-heavy first block's activations. Inference is the
+//! ensemble (mean softmax) of all classifiers.
+
+use super::Method;
+use crate::config::RunConfig;
+use crate::coordinator::ServerCtx;
+use crate::manifest::MemCoeffs;
+use crate::metrics::RunSummary;
+use crate::runtime::{literal_f32, literal_i32, Runtime};
+use anyhow::Result;
+use std::collections::HashMap;
+
+pub struct DepthFL;
+
+impl Method for DepthFL {
+    fn name(&self) -> &'static str {
+        "DepthFL"
+    }
+
+    fn inclusive(&self) -> bool {
+        false
+    }
+
+    fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary> {
+        let mut ctx = ServerCtx::new(rt, cfg.clone())?;
+        let model = rt.model(&cfg.model_tag)?;
+        let num_blocks = model.num_blocks;
+        let scan = rt.manifest.scan_steps;
+        let batch = rt.manifest.train_batch;
+
+        // Depth options ascending: depth d needs depthfl_train_d{d}.
+        let mut mems = Vec::new();
+        for d in 1..=num_blocks {
+            mems.push(model.artifact(&format!("depthfl_train_d{d}"))?.participation_mem());
+        }
+        let assignment = ctx.pool.capability_assignment(&mems);
+        let pr = assignment.iter().filter(|a| a.is_some()).count() as f64 / assignment.len() as f64;
+
+        if pr == 0.0 {
+            return Ok(RunSummary {
+                method: self.name().into(),
+                model_tag: cfg.model_tag.clone(),
+                partition: cfg.partition().label(),
+                final_acc: f64::NAN,
+                participation_rate: 0.0,
+                peak_client_mem: 0,
+                total_bytes_up: 0,
+                total_bytes_down: 0,
+                rounds: 0,
+                history: Vec::new(),
+            });
+        }
+
+        let zero = MemCoeffs::default();
+        ctx.bump_prefix_version();
+        for round in 0..ctx.cfg.max_rounds_total {
+            let sel = ctx.pool.select(ctx.cfg.per_round, &zero);
+            let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
+            // Per-parameter weighted accumulation: clients contribute only
+            // the parameters their depth covers.
+            let mut acc: HashMap<String, (Vec<f32>, f64)> = HashMap::new();
+            let mut participants = 0usize;
+            let (mut bytes_up, mut bytes_down) = (0u64, 0u64);
+            let (mut loss_sum, mut w_sum) = (0.0f64, 0.0f64);
+            let mut mem_peak = 0u64;
+
+            for &cid in &sel.trainers {
+                let Some(di) = assignment[cid] else { continue };
+                let d = di + 1;
+                let art = ctx.rt.load(&ctx.cfg.model_tag.clone(), &format!("depthfl_train_d{d}"))?;
+                let param_lits = ctx.rt.param_literals(&art.meta, &ctx.store)?;
+                let weight = {
+                    let data = &ctx.dataset;
+                    let client = &mut ctx.pool.clients[cid];
+                    client.shard.fill_batches(data, scan, batch, &mut ctx.xs_buf, &mut ctx.ys_buf);
+                    client.shard.num_samples() as f64
+                };
+                let xs = literal_f32(&[scan, batch, 32, 32, 3], &ctx.xs_buf)?;
+                let ys = literal_i32(&[scan, batch], &ctx.ys_buf)?;
+                let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
+                inputs.push(&xs);
+                inputs.push(&ys);
+                inputs.push(&lr_lit);
+                let outs = art.execute(&inputs)?;
+                let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
+                loss_sum += scalars[0] as f64 * weight;
+                w_sum += weight;
+                for (name, data) in updated {
+                    let e = acc.entry(name).or_insert_with(|| (vec![0.0; data.len()], 0.0));
+                    for (a, v) in e.0.iter_mut().zip(&data) {
+                        *a += weight as f32 * v;
+                    }
+                    e.1 += weight;
+                }
+                let b = art.meta.trainable_bytes();
+                bytes_up += b;
+                bytes_down += b;
+                mem_peak = mem_peak.max(mems[di].bytes_at(ctx.cfg.memory.accounting_batch));
+                participants += 1;
+            }
+
+            // Write back the parameters that received any updates.
+            for (name, (sum, w)) in acc {
+                if w > 0.0 {
+                    let t = ctx.store.get_mut(&name)?;
+                    for (dst, s) in t.data.iter_mut().zip(&sum) {
+                        *dst = s / w as f32;
+                    }
+                }
+            }
+            ctx.round += 1;
+
+            let test_acc = if round % ctx.cfg.eval_every == 0 || round + 1 == ctx.cfg.max_rounds_total {
+                ctx.evaluate("depthfl_eval")?.acc
+            } else {
+                f32::NAN
+            };
+            let out = crate::coordinator::RoundOutcome {
+                mean_loss: if w_sum > 0.0 { (loss_sum / w_sum) as f32 } else { f32::NAN },
+                mean_acc: f32::NAN,
+                participants,
+                fallback: 0,
+                bytes_up,
+                bytes_down,
+                client_mem_bytes: mem_peak,
+            };
+            ctx.record_round("depthfl", 0, &out, test_acc, f64::NAN);
+        }
+
+        let (up, down) = ctx.metrics.total_bytes();
+        Ok(RunSummary {
+            method: self.name().into(),
+            model_tag: cfg.model_tag.clone(),
+            partition: cfg.partition().label(),
+            final_acc: ctx.metrics.final_acc(ctx.cfg.acc_tail),
+            participation_rate: pr,
+            peak_client_mem: ctx.metrics.peak_client_mem(),
+            total_bytes_up: up,
+            total_bytes_down: down,
+            rounds: ctx.round,
+            history: ctx.metrics.records.clone(),
+        })
+    }
+}

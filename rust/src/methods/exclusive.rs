@@ -1,0 +1,74 @@
+//! ExclusiveFL baseline: only clients with enough memory for the *full*
+//! model participate; everyone else is simply dropped (paper §4.1). On
+//! large models no client qualifies and training is impossible (the "NA"
+//! cells of Tables 1/2).
+
+use super::Method;
+use crate::config::RunConfig;
+use crate::coordinator::ServerCtx;
+use crate::metrics::RunSummary;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+pub struct ExclusiveFL;
+
+impl Method for ExclusiveFL {
+    fn name(&self) -> &'static str {
+        "ExclusiveFL"
+    }
+
+    fn inclusive(&self) -> bool {
+        false
+    }
+
+    fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary> {
+        let mut ctx = ServerCtx::new(rt, cfg.clone())?;
+        let model = rt.model(&cfg.model_tag)?;
+        let num_blocks = model.num_blocks;
+        let full_mem = model.artifact("train_full")?.participation_mem();
+        let pr = ctx.pool.participation_rate(&full_mem);
+
+        if pr == 0.0 {
+            // No client can train the full model: the method cannot run.
+            return Ok(RunSummary {
+                method: self.name().into(),
+                model_tag: cfg.model_tag.clone(),
+                partition: cfg.partition().label(),
+                final_acc: f64::NAN,
+                participation_rate: 0.0,
+                peak_client_mem: 0,
+                total_bytes_up: 0,
+                total_bytes_down: 0,
+                rounds: 0,
+                history: Vec::new(),
+            });
+        }
+
+        let eval_art = format!("eval_t{num_blocks}");
+        ctx.bump_prefix_version();
+        for r in 0..ctx.cfg.max_rounds_total {
+            // No fallback: memory-constrained sampled clients are dropped.
+            let out = ctx.run_train_round("train_full", None, ctx.cfg.lr, "exclusive", 0)?;
+            let test_acc = if r % ctx.cfg.eval_every == 0 || r + 1 == ctx.cfg.max_rounds_total {
+                ctx.evaluate(&eval_art)?.acc
+            } else {
+                f32::NAN
+            };
+            ctx.record_round("exclusive", 0, &out, test_acc, f64::NAN);
+        }
+
+        let (up, down) = ctx.metrics.total_bytes();
+        Ok(RunSummary {
+            method: self.name().into(),
+            model_tag: cfg.model_tag.clone(),
+            partition: cfg.partition().label(),
+            final_acc: ctx.metrics.final_acc(ctx.cfg.acc_tail),
+            participation_rate: pr,
+            peak_client_mem: ctx.metrics.peak_client_mem(),
+            total_bytes_up: up,
+            total_bytes_down: down,
+            rounds: ctx.round,
+            history: ctx.metrics.records.clone(),
+        })
+    }
+}

@@ -1,0 +1,153 @@
+//! HeteroFL baseline: static width scaling. Each client is assigned the
+//! largest channel-scaled variant of the full model its memory affords
+//! and always trains that variant; the server keeps the full-width global
+//! model and aggregates channel slices position-wise (untouched channels
+//! keep their previous value). Reproduces the paper's observation that
+//! when no client affords high ratios, most of the model never trains and
+//! accuracy collapses (ResNet34/VGG16 rows of Tables 1/2).
+
+use super::Method;
+use crate::aggregate::SlicedAggregator;
+use crate::config::RunConfig;
+use crate::coordinator::ServerCtx;
+use crate::manifest::{Manifest, MemCoeffs};
+use crate::metrics::RunSummary;
+use crate::runtime::{literal_f32, literal_i32, Runtime};
+use anyhow::{Context, Result};
+
+pub struct HeteroFL {
+    /// Complexity levels, ascending by cost (the paper's 4 levels).
+    pub ratios: Vec<f64>,
+}
+
+impl Default for HeteroFL {
+    fn default() -> Self {
+        HeteroFL { ratios: vec![0.125, 0.25, 0.5, 1.0] }
+    }
+}
+
+impl Method for HeteroFL {
+    fn name(&self) -> &'static str {
+        "HeteroFL"
+    }
+
+    fn inclusive(&self) -> bool {
+        true
+    }
+
+    fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary> {
+        let mut ctx = ServerCtx::new(rt, cfg.clone())?;
+        let base = rt.model(&cfg.model_tag)?;
+        let num_blocks = base.num_blocks;
+        let scan = rt.manifest.scan_steps;
+        let batch = rt.manifest.train_batch;
+
+        // Resolve each ratio's tag + memory need (ascending order).
+        let mut options: Vec<(String, MemCoeffs)> = Vec::new();
+        for &r in &self.ratios {
+            let tag = Manifest::ratio_tag(&cfg.model_tag, r);
+            let model = rt.model(&tag).with_context(|| format!("HeteroFL needs ratio tag {tag}"))?;
+            options.push((tag, model.artifact("train_full")?.participation_mem()));
+        }
+        let mems: Vec<MemCoeffs> = options.iter().map(|(_, m)| *m).collect();
+        let assignment = ctx.pool.capability_assignment(&mems);
+        let pr = assignment.iter().filter(|a| a.is_some()).count() as f64 / assignment.len() as f64;
+
+        // Full-model trainable list (order = train_full input order).
+        let full_art = base.artifact("train_full")?.clone();
+        let trainable: Vec<String> = full_art.trainable_names().iter().map(|s| s.to_string()).collect();
+        let eval_art = format!("eval_t{num_blocks}");
+        let zero = MemCoeffs::default();
+
+        ctx.bump_prefix_version();
+        for round in 0..ctx.cfg.max_rounds_total {
+            let sel = ctx.pool.select(ctx.cfg.per_round, &zero); // uniform sample
+            let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
+            let mut agg = SlicedAggregator::new(&trainable, &ctx.store)?;
+            let mut participants = 0usize;
+            let (mut bytes_up, mut bytes_down) = (0u64, 0u64);
+            let (mut loss_sum, mut w_sum) = (0.0f64, 0.0f64);
+            let mut mem_peak = 0u64;
+
+            for &cid in &sel.trainers {
+                let Some(opt_i) = assignment[cid] else { continue }; // too small: dropped
+                let (tag, mem) = &options[opt_i];
+                let art = ctx.rt.load(tag, "train_full")?;
+
+                // Slice the full global model down to this variant's shapes.
+                let mut param_lits = Vec::with_capacity(art.meta.inputs.len());
+                let mut sub_shapes = Vec::new();
+                for entry in &art.meta.inputs {
+                    if entry.role != "trainable" {
+                        break;
+                    }
+                    let sub = ctx.store.get(&entry.name)?.slice_corner(&entry.shape)?;
+                    param_lits.push(literal_f32(&sub.shape, &sub.data)?);
+                    sub_shapes.push(sub.shape);
+                }
+
+                let weight = {
+                    let data = &ctx.dataset;
+                    let client = &mut ctx.pool.clients[cid];
+                    client.shard.fill_batches(data, scan, batch, &mut ctx.xs_buf, &mut ctx.ys_buf);
+                    client.shard.num_samples() as f64
+                };
+                let xs = literal_f32(&[scan, batch, 32, 32, 3], &ctx.xs_buf)?;
+                let ys = literal_i32(&[scan, batch], &ctx.ys_buf)?;
+                let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
+                inputs.push(&xs);
+                inputs.push(&ys);
+                inputs.push(&lr_lit);
+                let outs = art.execute(&inputs)?;
+                let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
+                loss_sum += scalars[0] as f64 * weight;
+                w_sum += weight;
+                agg.add(
+                    &sub_shapes,
+                    &updated.into_iter().map(|(_, v)| v).collect::<Vec<_>>(),
+                    weight,
+                );
+                let b = art.meta.trainable_bytes();
+                bytes_up += b;
+                bytes_down += b;
+                mem_peak = mem_peak.max(mem.bytes_at(ctx.cfg.memory.accounting_batch));
+                participants += 1;
+            }
+
+            if participants > 0 {
+                agg.finish(&mut ctx.store)?;
+            }
+            ctx.round += 1;
+
+            let test_acc = if round % ctx.cfg.eval_every == 0 || round + 1 == ctx.cfg.max_rounds_total {
+                ctx.evaluate(&eval_art)?.acc
+            } else {
+                f32::NAN
+            };
+            let out = crate::coordinator::RoundOutcome {
+                mean_loss: if w_sum > 0.0 { (loss_sum / w_sum) as f32 } else { f32::NAN },
+                mean_acc: f32::NAN,
+                participants,
+                fallback: 0,
+                bytes_up,
+                bytes_down,
+                client_mem_bytes: mem_peak,
+            };
+            ctx.record_round("heterofl", 0, &out, test_acc, f64::NAN);
+        }
+
+        let (up, down) = ctx.metrics.total_bytes();
+        Ok(RunSummary {
+            method: self.name().into(),
+            model_tag: cfg.model_tag.clone(),
+            partition: cfg.partition().label(),
+            final_acc: ctx.metrics.final_acc(ctx.cfg.acc_tail),
+            participation_rate: pr,
+            peak_client_mem: ctx.metrics.peak_client_mem(),
+            total_bytes_up: up,
+            total_bytes_down: down,
+            rounds: ctx.round,
+            history: ctx.metrics.records.clone(),
+        })
+    }
+}

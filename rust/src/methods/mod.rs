@@ -1,0 +1,55 @@
+//! FL methods: ProFL (the paper) + all four baselines (Tables 1/2) and the
+//! ParamAware freezing baseline (Table 4).
+//!
+//! Every method consumes the same primitives (`ServerCtx` rounds) and
+//! produces a `RunSummary`, so the table benches are a cartesian product
+//! of (method × model × dataset × partition) over one interface.
+
+pub mod allsmall;
+pub mod depthfl;
+pub mod exclusive;
+pub mod heterofl;
+pub mod profl;
+
+use crate::config::RunConfig;
+use crate::metrics::RunSummary;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+pub use allsmall::AllSmall;
+pub use depthfl::DepthFL;
+pub use exclusive::ExclusiveFL;
+pub use heterofl::HeteroFL;
+pub use profl::{FreezePolicy, ProFL};
+
+pub trait Method {
+    fn name(&self) -> &'static str;
+    /// Whether the method can use every client (the paper's "Inclusive?").
+    fn inclusive(&self) -> bool;
+    fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary>;
+}
+
+/// All Table-1/2 methods in paper order.
+pub fn table_methods() -> Vec<Box<dyn Method>> {
+    vec![
+        Box::new(AllSmall::default()),
+        Box::new(ExclusiveFL),
+        Box::new(HeteroFL::default()),
+        Box::new(DepthFL),
+        Box::new(ProFL::default()),
+    ]
+}
+
+/// Look up a method by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn Method>> {
+    match name.to_ascii_lowercase().as_str() {
+        "profl" => Some(Box::new(ProFL::default())),
+        "profl-noshrink" => Some(Box::new(ProFL { shrinking_override: Some(false), ..Default::default() })),
+        "paramaware" => Some(Box::new(ProFL { policy: FreezePolicy::ParamAware, ..Default::default() })),
+        "allsmall" => Some(Box::new(AllSmall::default())),
+        "exclusivefl" | "exclusive" => Some(Box::new(ExclusiveFL)),
+        "heterofl" => Some(Box::new(HeteroFL::default())),
+        "depthfl" => Some(Box::new(DepthFL)),
+        _ => None,
+    }
+}

@@ -1,0 +1,194 @@
+//! Metrics: per-round records, run summaries, CSV emission, comm accounting.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One FL round's observables (a row of the Fig 4/5 CSVs).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Stage: "shrink", "grow", or the method name for baselines.
+    pub stage: String,
+    /// Step/block index (1-based) for progressive methods, 0 otherwise.
+    pub step: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    /// Test accuracy (only on eval rounds; NaN otherwise).
+    pub test_acc: f32,
+    /// Effective movement (NaN before the window fills / for baselines).
+    pub effective_movement: f64,
+    pub participants: usize,
+    pub fallback_participants: usize,
+    /// Bytes moved this round.
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Analytical peak client memory for this round's artifact (bytes).
+    pub client_mem_bytes: u64,
+}
+
+/// Whole-run result: what the table benches consume.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub method: String,
+    pub model_tag: String,
+    pub partition: String,
+    /// Final test accuracy (mean of last `tail` evals, paper-style).
+    pub final_acc: f64,
+    /// Fleet fraction that could participate in at least one stage.
+    pub participation_rate: f64,
+    /// Peak per-client training memory across the run (bytes).
+    pub peak_client_mem: u64,
+    pub total_bytes_up: u64,
+    pub total_bytes_down: u64,
+    pub rounds: usize,
+    pub history: Vec<RoundRecord>,
+}
+
+impl RunSummary {
+    pub fn comm_total(&self) -> u64 {
+        self.total_bytes_up + self.total_bytes_down
+    }
+}
+
+/// Collects rounds, computes the paper's "average accuracy of the last 10
+/// evals" summary statistic.
+pub struct MetricsSink {
+    pub records: Vec<RoundRecord>,
+    eval_accs: Vec<f64>,
+}
+
+impl Default for MetricsSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsSink {
+    pub fn new() -> Self {
+        MetricsSink { records: Vec::new(), eval_accs: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        if !rec.test_acc.is_nan() {
+            self.eval_accs.push(rec.test_acc as f64);
+        }
+        self.records.push(rec);
+    }
+
+    /// Paper: "average accuracy of the last 10 rounds after convergence".
+    pub fn final_acc(&self, tail: usize) -> f64 {
+        if self.eval_accs.is_empty() {
+            return 0.0;
+        }
+        let k = tail.min(self.eval_accs.len());
+        self.eval_accs[self.eval_accs.len() - k..].iter().sum::<f64>() / k as f64
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.eval_accs.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn total_bytes(&self) -> (u64, u64) {
+        let up = self.records.iter().map(|r| r.bytes_up).sum();
+        let down = self.records.iter().map(|r| r.bytes_down).sum();
+        (up, down)
+    }
+
+    pub fn peak_client_mem(&self) -> u64 {
+        self.records.iter().map(|r| r.client_mem_bytes).max().unwrap_or(0)
+    }
+
+    /// Write the full history as CSV (Fig 4/5/6 inputs).
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                r.round,
+                r.stage,
+                r.step,
+                r.train_loss,
+                r.train_acc,
+                r.test_acc,
+                r.effective_movement,
+                r.participants,
+                r.fallback_participants,
+                r.bytes_up,
+                r.bytes_down,
+                r.client_mem_bytes
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, test_acc: f32, up: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            stage: "grow".into(),
+            step: 1,
+            train_loss: 1.0,
+            train_acc: 0.5,
+            test_acc,
+            effective_movement: 0.5,
+            participants: 10,
+            fallback_participants: 0,
+            bytes_up: up,
+            bytes_down: up,
+            client_mem_bytes: round as u64 * 100,
+        }
+    }
+
+    #[test]
+    fn final_acc_tail_mean() {
+        let mut m = MetricsSink::new();
+        for i in 0..20 {
+            m.push(rec(i, if i < 15 { 0.1 } else { 0.8 }, 10));
+        }
+        assert!((m.final_acc(5) - 0.8).abs() < 1e-6);
+        assert!((m.final_acc(100) - (15.0 * 0.1 + 5.0 * 0.8) / 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_evals_excluded() {
+        let mut m = MetricsSink::new();
+        m.push(rec(0, 0.5, 1));
+        m.push(rec(1, f32::NAN, 1));
+        m.push(rec(2, 0.7, 1));
+        assert!((m.final_acc(10) - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn totals_and_peaks() {
+        let mut m = MetricsSink::new();
+        m.push(rec(1, 0.5, 100));
+        m.push(rec(2, 0.6, 50));
+        assert_eq!(m.total_bytes(), (150, 150));
+        assert_eq!(m.peak_client_mem(), 200);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut m = MetricsSink::new();
+        m.push(rec(1, 0.5, 10));
+        let dir = std::env::temp_dir().join("profl_test_metrics");
+        let path = dir.join("run.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() == 2);
+        assert!(text.starts_with("round,stage"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

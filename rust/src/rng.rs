@@ -1,0 +1,222 @@
+//! Deterministic RNG substrate (SplitMix64).
+//!
+//! Every stochastic decision in the simulator — device memory budgets,
+//! contention jitter, client sampling, Dirichlet partitioning, synthetic
+//! image noise, parameter init — flows from seeded `SplitMix64` streams,
+//! so whole FL runs are bit-reproducible from a single config seed. No
+//! wall-clock, no global state, no external RNG crates.
+
+/// SplitMix64: tiny, fast, splittable, passes BigCrush. Used as both the
+/// base generator and the stream-splitting mechanism (`fork`).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avalanche the seed once so small seeds diverge immediately.
+        let mut r = Rng { state: seed ^ 0x9e37_79b9_7f4a_7c15 };
+        r.next_u64();
+        r
+    }
+
+    /// Derive an independent stream for a named sub-purpose. Streams are
+    /// stable across runs: fork(seed, purpose) is a pure function.
+    pub fn fork(&self, purpose: u64) -> Rng {
+        Rng::new(self.state.wrapping_mul(0xbf58_476d_1ce4_e5b9) ^ purpose.wrapping_mul(0x94d0_49bb_1331_11eb))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free for our n << 2^64 use cases.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Gamma(alpha, 1) via Marsaglia-Tsang (with Johnk boost for alpha<1).
+    pub fn gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(alpha + 1.0);
+            return g * self.f64().max(1e-12).powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal() as f64;
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha) over k categories — the Non-IID label partitioner.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-12)).collect();
+        let s: f64 = g.iter().sum();
+        for v in &mut g {
+            *v /= s;
+        }
+        g
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k ≤ n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample {k} from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        // partial Fisher-Yates: first k positions
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Weighted categorical draw.
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let mut u = self.f64();
+        for (i, p) in probs.iter().enumerate() {
+            if u < *p {
+                return i;
+            }
+            u -= p;
+        }
+        probs.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fork_is_pure_and_divergent() {
+        let base = Rng::new(7);
+        let mut f1 = base.fork(1);
+        let mut f1b = base.fork(1);
+        let mut f2 = base.fork(2);
+        assert_eq!(f1.next_u64(), f1b.next_u64());
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.uniform(100.0, 900.0);
+            assert!((100.0..900.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 500.0).abs() < 10.0, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = r.normal() as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_alpha_controls_skew() {
+        let mut r = Rng::new(3);
+        let p = r.dirichlet(1.0, 10);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // small alpha → skewed: max prob should usually dominate
+        let mut max_small = 0.0;
+        let mut max_large = 0.0;
+        for _ in 0..50 {
+            max_small += r.dirichlet(0.1, 10).iter().cloned().fold(0.0, f64::max);
+            max_large += r.dirichlet(100.0, 10).iter().cloned().fold(0.0, f64::max);
+        }
+        assert!(max_small > max_large, "{max_small} vs {max_large}");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(4);
+        for _ in 0..20 {
+            let s = r.sample_indices(100, 20);
+            assert_eq!(s.len(), 20);
+            let mut u = s.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), 20);
+        }
+    }
+
+    #[test]
+    fn gamma_positive_mean_close() {
+        let mut r = Rng::new(5);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.1, "mean {mean}");
+    }
+}

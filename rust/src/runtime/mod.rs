@@ -1,0 +1,159 @@
+//! PJRT runtime: load AOT artifacts, execute them from the round path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API): CPU client →
+//! `HloModuleProto::from_text_file` → compile → execute. Executables are
+//! compiled lazily and cached per artifact name; parameter literals are
+//! built once per round and shared across all client executions of that
+//! round (clients differ only in their data literals).
+//!
+//! Python never appears here — this module plus `artifacts/` is the whole
+//! deployment surface.
+
+use crate::manifest::{Artifact, Manifest, ModelEntry};
+use crate::store::{ParamStore, Tensor};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Convert an f32 tensor to an XLA literal.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("literal_f32 {shape:?}: {e}"))
+}
+
+/// Convert an i32 tensor to an XLA literal.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow::anyhow!("literal_i32 {shape:?}: {e}"))
+}
+
+/// One compiled artifact, ready to execute.
+pub struct LoadedArtifact {
+    pub name: String,
+    pub meta: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with positional literals (owned or borrowed); returns the
+    /// flattened output tuple (aot.py lowers with return_tuple=True).
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(&self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Runtime = PJRT client + artifact cache + manifest.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    root: PathBuf,
+    cache: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Self> {
+        let (manifest, root) = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, manifest, root, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn model(&self, tag: &str) -> Result<&ModelEntry> {
+        self.manifest.model(tag)
+    }
+
+    /// Load (compile-and-cache) an artifact.
+    pub fn load(&self, tag: &str, artifact: &str) -> Result<Rc<LoadedArtifact>> {
+        let key = format!("{tag}/{artifact}");
+        if let Some(a) = self.cache.borrow().get(&key) {
+            return Ok(a.clone());
+        }
+        let meta = self.manifest.model(tag)?.artifact(artifact)?.clone();
+        let path = self.root.join(&meta.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {key}: {e}"))?;
+        let loaded = Rc::new(LoadedArtifact { name: key.clone(), meta, exe });
+        self.cache.borrow_mut().insert(key, loaded.clone());
+        Ok(loaded)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Build the parameter literals for an artifact in input order
+    /// (trainable then frozen), reading values from the store.
+    pub fn param_literals(&self, art: &Artifact, store: &ParamStore) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::new();
+        for entry in &art.inputs {
+            match entry.role.as_str() {
+                "trainable" | "frozen" | "param" => {
+                    let t = store.get(&entry.name)?;
+                    if t.shape != entry.shape {
+                        bail!(
+                            "shape mismatch for `{}`: store {:?} vs artifact {:?}",
+                            entry.name,
+                            t.shape,
+                            entry.shape
+                        );
+                    }
+                    lits.push(literal_f32(&t.shape, &t.data)?);
+                }
+                _ => break, // data inputs always trail the parameters
+            }
+        }
+        Ok(lits)
+    }
+
+    /// Unpack train-step outputs: updated trainables (by name) + scalar
+    /// tail. `outputs` layout: [trainable..., loss, correct] or [..., loss].
+    pub fn unpack_train_outputs(
+        art: &Artifact,
+        outs: Vec<xla::Literal>,
+    ) -> Result<(Vec<(String, Vec<f32>)>, Vec<f32>)> {
+        let tr_names = art.trainable_names();
+        if outs.len() < tr_names.len() {
+            bail!("artifact returned {} outputs, expected ≥ {}", outs.len(), tr_names.len());
+        }
+        let n_tr = tr_names.len();
+        let mut updated = Vec::with_capacity(n_tr);
+        for (i, name) in tr_names.iter().enumerate() {
+            updated.push((name.to_string(), outs[i].to_vec::<f32>()?));
+        }
+        let mut scalars = Vec::new();
+        for lit in &outs[n_tr..] {
+            scalars.push(lit.to_vec::<f32>()?[0]);
+        }
+        Ok((updated, scalars))
+    }
+}
+
+/// Write updated trainables into a store (shapes come from the artifact).
+pub fn apply_updates(
+    store: &mut ParamStore,
+    art: &Artifact,
+    updated: Vec<(String, Vec<f32>)>,
+) -> Result<()> {
+    for (name, data) in updated {
+        let shape = art
+            .inputs
+            .iter()
+            .find(|i| i.name == name)
+            .map(|i| i.shape.clone())
+            .with_context(|| format!("output `{name}` not among inputs"))?;
+        store.set(&name, Tensor { shape, data });
+    }
+    Ok(())
+}

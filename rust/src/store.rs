@@ -1,0 +1,297 @@
+//! Named parameter store: the server-side global model state.
+//!
+//! Parameters live as flat `f32` vectors keyed by the manifest's names
+//! (`b2/u0/conv1/w`, `op/fc/b`, …). The store owns initialization (He for
+//! conv/dense weights, 1/0 for BN scale/shift — mirroring
+//! `compile/ops.init_ops`), snapshotting for the effective-movement
+//! metric, and the corner-slicing used by HeteroFL width aggregation.
+
+use crate::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Extract the leading-corner sub-tensor of `sub_shape` — HeteroFL's
+    /// "first ⌈r·C⌉ channels" slicing, generalized to every axis.
+    pub fn slice_corner(&self, sub_shape: &[usize]) -> Result<Tensor> {
+        if sub_shape.len() != self.shape.len() {
+            bail!("rank mismatch: {:?} vs {:?}", sub_shape, self.shape);
+        }
+        for (s, f) in sub_shape.iter().zip(&self.shape) {
+            if s > f {
+                bail!("sub shape {:?} exceeds {:?}", sub_shape, self.shape);
+            }
+        }
+        let mut out = Tensor::zeros(sub_shape);
+        copy_corner(&self.shape, &self.data, sub_shape, &mut out.data, CopyDir::FullToSub);
+        Ok(out)
+    }
+
+    /// Scatter-add a corner sub-tensor (weighted) into `acc`, bumping the
+    /// per-position weight accumulator `wacc` (same layout as self).
+    pub fn accumulate_corner(
+        full_shape: &[usize],
+        acc: &mut [f32],
+        wacc: &mut [f32],
+        sub_shape: &[usize],
+        sub_data: &[f32],
+        weight: f32,
+    ) {
+        accumulate_corner_rec(full_shape, acc, wacc, sub_shape, sub_data, weight, 0, 0, 0);
+    }
+}
+
+enum CopyDir {
+    FullToSub,
+}
+
+fn copy_corner(full_shape: &[usize], full: &[f32], sub_shape: &[usize], sub: &mut [f32], _dir: CopyDir) {
+    // Iterate sub positions in row-major order, mapping to full offsets.
+    let rank = full_shape.len();
+    if rank == 0 {
+        sub[0] = full[0];
+        return;
+    }
+    let full_strides = strides(full_shape);
+    let sub_strides = strides(sub_shape);
+    let total: usize = sub_shape.iter().product();
+    let mut idx = vec![0usize; rank];
+    for s_off in 0..total {
+        // decode s_off -> idx
+        let mut rem = s_off;
+        for d in 0..rank {
+            idx[d] = rem / sub_strides[d];
+            rem %= sub_strides[d];
+        }
+        let f_off: usize = idx.iter().zip(&full_strides).map(|(i, st)| i * st).sum();
+        sub[s_off] = full[f_off];
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accumulate_corner_rec(
+    full_shape: &[usize],
+    acc: &mut [f32],
+    wacc: &mut [f32],
+    sub_shape: &[usize],
+    sub: &[f32],
+    w: f32,
+    dim: usize,
+    full_off: usize,
+    sub_off: usize,
+) {
+    if dim == full_shape.len() {
+        acc[full_off] += w * sub[sub_off];
+        wacc[full_off] += w;
+        return;
+    }
+    let fs = strides(full_shape);
+    let ss = strides(sub_shape);
+    for i in 0..sub_shape[dim] {
+        accumulate_corner_rec(
+            full_shape,
+            acc,
+            wacc,
+            sub_shape,
+            sub,
+            w,
+            dim + 1,
+            full_off + i * fs[dim],
+            sub_off + i * ss[dim],
+        );
+    }
+}
+
+fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut st = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        st[d] = st[d + 1] * shape[d + 1];
+    }
+    st
+}
+
+/// The global model parameter store.
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    params: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    /// Initialize every parameter from the manifest inventory.
+    /// Rules mirror `compile/ops.init_ops`: He-normal for weights
+    /// (fan_in = prod(shape[..-1])), scale=1, shift/bias=0.
+    pub fn init(shapes: &BTreeMap<String, Vec<usize>>, seed: u64) -> Self {
+        let base = Rng::new(seed);
+        let mut params = BTreeMap::new();
+        for (i, (name, shape)) in shapes.iter().enumerate() {
+            let mut rng = base.fork(i as u64 + 1);
+            let n: usize = shape.iter().product();
+            let data = if name.ends_with("/scale") {
+                vec![1.0; n]
+            } else if name.ends_with("/shift") || name.ends_with("/b") {
+                vec![0.0; n]
+            } else {
+                let fan_in: usize = shape[..shape.len().saturating_sub(1)].iter().product::<usize>().max(1);
+                let std = (2.0 / fan_in as f64).sqrt() as f32;
+                (0..n).map(|_| rng.normal() * std).collect()
+            };
+            params.insert(name.clone(), Tensor { shape: shape.clone(), data });
+        }
+        ParamStore { params }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.params.get(name).with_context(|| format!("param `{name}` not in store"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.params.get_mut(name).with_context(|| format!("param `{name}` not in store"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.params.insert(name.to_string(), t);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.params.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.params.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Flat concatenation of a set of parameters (effective-movement
+    /// snapshots operate on these block vectors).
+    pub fn flatten(&self, names: &[String]) -> Vec<f32> {
+        let mut out = Vec::new();
+        for n in names {
+            if let Some(t) = self.params.get(n) {
+                out.extend_from_slice(&t.data);
+            }
+        }
+        out
+    }
+
+    /// Re-initialize a subset (used by ablations / seed sweeps).
+    pub fn reinit(&mut self, names: &[String], seed: u64) {
+        let shapes: BTreeMap<String, Vec<usize>> =
+            names.iter().filter_map(|n| self.params.get(n).map(|t| (n.clone(), t.shape.clone()))).collect();
+        let fresh = ParamStore::init(&shapes, seed);
+        for (n, t) in fresh.params {
+            self.params.insert(n, t);
+        }
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.params.values().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes(pairs: &[(&str, &[usize])]) -> BTreeMap<String, Vec<usize>> {
+        pairs.iter().map(|(n, s)| (n.to_string(), s.to_vec())).collect()
+    }
+
+    #[test]
+    fn init_rules() {
+        let s = shapes(&[
+            ("b1/conv/w", &[3, 3, 4, 8]),
+            ("b1/bn/scale", &[8]),
+            ("b1/bn/shift", &[8]),
+            ("head/fc/b", &[10]),
+        ]);
+        let store = ParamStore::init(&s, 1);
+        assert!(store.get("b1/bn/scale").unwrap().data.iter().all(|&v| v == 1.0));
+        assert!(store.get("b1/bn/shift").unwrap().data.iter().all(|&v| v == 0.0));
+        assert!(store.get("head/fc/b").unwrap().data.iter().all(|&v| v == 0.0));
+        let w = store.get("b1/conv/w").unwrap();
+        let std: f32 = {
+            let m = w.data.iter().sum::<f32>() / w.len() as f32;
+            (w.data.iter().map(|v| (v - m) * (v - m)).sum::<f32>() / w.len() as f32).sqrt()
+        };
+        let expect = (2.0f32 / 36.0).sqrt();
+        assert!((std - expect).abs() < expect * 0.3, "std {std} vs {expect}");
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let s = shapes(&[("w", &[4, 4])]);
+        let a = ParamStore::init(&s, 9);
+        let b = ParamStore::init(&s, 9);
+        let c = ParamStore::init(&s, 10);
+        assert_eq!(a.get("w").unwrap().data, b.get("w").unwrap().data);
+        assert_ne!(a.get("w").unwrap().data, c.get("w").unwrap().data);
+    }
+
+    #[test]
+    fn slice_corner_2d() {
+        let t = Tensor { shape: vec![3, 4], data: (0..12).map(|v| v as f32).collect() };
+        let s = t.slice_corner(&[2, 2]).unwrap();
+        assert_eq!(s.data, vec![0.0, 1.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn slice_corner_4d_conv() {
+        // (2,2,2,2) kernel, slice to (2,2,1,1): keep first in/out channel.
+        let t = Tensor { shape: vec![2, 2, 2, 2], data: (0..16).map(|v| v as f32).collect() };
+        let s = t.slice_corner(&[2, 2, 1, 1]).unwrap();
+        assert_eq!(s.data, vec![0.0, 4.0, 8.0, 12.0]);
+    }
+
+    #[test]
+    fn slice_rejects_bad_shapes() {
+        let t = Tensor::zeros(&[2, 2]);
+        assert!(t.slice_corner(&[3, 1]).is_err());
+        assert!(t.slice_corner(&[2]).is_err());
+    }
+
+    #[test]
+    fn accumulate_corner_roundtrip() {
+        let full_shape = vec![2, 3];
+        let mut acc = vec![0.0; 6];
+        let mut wacc = vec![0.0; 6];
+        let sub = vec![1.0, 2.0, 3.0, 4.0]; // (2,2)
+        Tensor::accumulate_corner(&full_shape, &mut acc, &mut wacc, &[2, 2], &sub, 0.5);
+        assert_eq!(acc, vec![0.5, 1.0, 0.0, 1.5, 2.0, 0.0]);
+        assert_eq!(wacc, vec![0.5, 0.5, 0.0, 0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn flatten_order_stable() {
+        let s = shapes(&[("a", &[2]), ("b", &[2])]);
+        let mut store = ParamStore::init(&s, 1);
+        store.set("a", Tensor { shape: vec![2], data: vec![1.0, 2.0] });
+        store.set("b", Tensor { shape: vec![2], data: vec![3.0, 4.0] });
+        assert_eq!(store.flatten(&["a".into(), "b".into()]), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(store.flatten(&["b".into(), "a".into()]), vec![3.0, 4.0, 1.0, 2.0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Integration tests over the real artifacts: runtime → coordinator →
+//! methods. Require `make artifacts` (skipped gracefully otherwise).
+//!
+//! These are the cross-layer contracts: HLO loads + executes, lr=0 is an
+//! identity, frozen params never change, training actually learns, runs
+//! are deterministic per seed.
+
+use profl::config::RunConfig;
+use profl::coordinator::ServerCtx;
+use profl::methods::{by_name, Method, ProFL};
+use profl::runtime::{literal_f32, literal_i32, Runtime};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var_os("PROFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+const TAG: &str = "resnet18_w8_c10";
+
+/// Tiny-but-real config used by the training integration tests.
+fn tiny() -> RunConfig {
+    let mut c = RunConfig::smoke(TAG);
+    c.num_clients = 6;
+    c.per_round = 3;
+    c.total_samples = 600;
+    c.max_rounds_per_step = 3;
+    c.min_rounds_per_step = 1;
+    c.max_rounds_total = 6;
+    c.distill_rounds = 1;
+    c.eval_every = 3;
+    c
+}
+
+#[test]
+fn manifest_loads_and_inventories_models() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let m = rt.model(TAG).unwrap();
+    assert_eq!(m.num_blocks, 4);
+    assert_eq!(m.block_params.len(), 4);
+    assert!(m.artifacts.contains_key("train_t1"));
+    assert!(m.artifacts.contains_key("distill_t2"));
+    assert!(m.artifacts.contains_key("depthfl_eval"));
+    // paper-twin memory must be present and larger than mini memory
+    let a = m.artifact("train_t1").unwrap();
+    assert!(a.mem_paper.unwrap().bytes_at(128) > a.mem.unwrap().bytes_at(128));
+}
+
+#[test]
+fn train_step_lr_zero_is_identity_through_pjrt() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let model = rt.model(TAG).unwrap().clone();
+    let art = rt.load(TAG, "train_t2").unwrap();
+    let store = profl::store::ParamStore::init(&model.params, 7);
+    let params = rt.param_literals(&art.meta, &store).unwrap();
+    let scan = rt.manifest.scan_steps;
+    let batch = rt.manifest.train_batch;
+    let xs = literal_f32(&[scan, batch, 32, 32, 3], &vec![0.1; scan * batch * 3072]).unwrap();
+    let ys = literal_i32(&[scan, batch], &vec![1; scan * batch]).unwrap();
+    let lr = xla::Literal::scalar(0.0f32);
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&xs);
+    inputs.push(&ys);
+    inputs.push(&lr);
+    let outs = art.execute(&inputs).unwrap();
+    let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs).unwrap();
+    assert!(scalars[0].is_finite(), "loss {}", scalars[0]);
+    for (name, data) in updated {
+        let orig = &store.get(&name).unwrap().data;
+        assert_eq!(&data, orig, "lr=0 changed `{name}`");
+    }
+}
+
+#[test]
+fn train_round_updates_trainable_and_preserves_frozen() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut ctx = ServerCtx::new(&rt, tiny()).unwrap();
+    let before_b1 = ctx.store.flatten(&["b1/stem/conv/w".to_string()]);
+    let before_b2 = ctx.store.flatten(&rt.model(TAG).unwrap().block_params[1].clone());
+    let out = ctx.run_train_round("train_t2", None, 0.1, "test", 2).unwrap();
+    assert!(out.participants > 0);
+    assert!(out.mean_loss.is_finite());
+    let after_b1 = ctx.store.flatten(&["b1/stem/conv/w".to_string()]);
+    let after_b2 = ctx.store.flatten(&rt.model(TAG).unwrap().block_params[1].clone());
+    assert_eq!(before_b1, after_b1, "frozen block 1 changed");
+    assert_ne!(before_b2, after_b2, "trainable block 2 did not change");
+}
+
+#[test]
+fn evaluation_counts_are_sane() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut ctx = ServerCtx::new(&rt, tiny()).unwrap();
+    let ev = ctx.evaluate("eval_t4").unwrap();
+    assert!(ev.loss.is_finite() && ev.loss > 0.0);
+    assert!((0.0..=1.0).contains(&ev.acc));
+    // Untrained model ≈ chance on 10 classes.
+    assert!(ev.acc < 0.35, "untrained acc suspiciously high: {}", ev.acc);
+}
+
+#[test]
+fn distill_round_moves_surrogate_only() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut ctx = ServerCtx::new(&rt, tiny()).unwrap();
+    let s_names: Vec<String> =
+        ctx.store.names().filter(|n| n.starts_with("s2/")).cloned().collect();
+    let b2_names = rt.model(TAG).unwrap().block_params[1].clone();
+    let s_before = ctx.store.flatten(&s_names);
+    let b_before = ctx.store.flatten(&b2_names);
+    let out = ctx.run_distill_round("distill_t2", 0.1).unwrap();
+    assert!(out.mean_loss.is_finite());
+    assert_ne!(s_before, ctx.store.flatten(&s_names), "surrogate did not move");
+    assert_eq!(b_before, ctx.store.flatten(&b2_names), "frozen block moved");
+}
+
+#[test]
+fn profl_smoke_learns_above_chance_and_is_deterministic() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = tiny();
+    let s1 = ProFL::default().run(&rt, &cfg).unwrap();
+    assert!(s1.final_acc > 0.2, "no learning: {}", s1.final_acc);
+    assert!(s1.participation_rate > 0.9);
+    assert!(s1.rounds > 0);
+    let s2 = ProFL::default().run(&rt, &cfg).unwrap();
+    assert_eq!(s1.final_acc, s2.final_acc, "non-deterministic run");
+    assert_eq!(s1.rounds, s2.rounds);
+}
+
+#[test]
+fn baselines_run_one_tiny_round_each() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut cfg = tiny();
+    cfg.max_rounds_total = 2;
+    cfg.eval_every = 2;
+    for name in ["allsmall", "heterofl", "depthfl", "exclusivefl"] {
+        let m = by_name(name).unwrap();
+        let s = m.run(&rt, &cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        // ExclusiveFL may be NA (acc NaN) if no client fits — that is valid.
+        if !s.final_acc.is_nan() {
+            assert!((0.0..=1.0).contains(&s.final_acc), "{name}: {}", s.final_acc);
+        }
+        assert!((0.0..=1.0).contains(&s.participation_rate), "{name}");
+    }
+}
+
+#[test]
+fn heterofl_memory_collapse_on_big_model() {
+    // On ResNet34 paper-twin footprints, no 100-900MB client fits r=1.0 —
+    // HeteroFL's largest-ratio channels can never train (Table 1's 9.8%).
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    if rt.model("resnet34_w8_c10").is_err() {
+        eprintln!("skipping: resnet34 artifacts not built");
+        return;
+    }
+    let full = rt.model("resnet34_w8_c10").unwrap().artifact("train_full").unwrap().participation_mem();
+    let cfg = RunConfig { model_tag: "resnet34_w8_c10".into(), ..Default::default() };
+    let ctx = ServerCtx::new(&rt, cfg).unwrap();
+    assert_eq!(ctx.pool.participation_rate(&full), 0.0, "resnet34 full model should fit nobody");
+}
+
+#[test]
+fn comm_accounting_prefix_cached_after_first_download() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut cfg = tiny();
+    cfg.per_round = cfg.num_clients; // everyone sampled every round
+    let mut ctx = ServerCtx::new(&rt, cfg).unwrap();
+    ctx.bump_prefix_version();
+    let r1 = ctx.run_train_round("train_t3", None, 0.05, "t", 3).unwrap();
+    let r2 = ctx.run_train_round("train_t3", None, 0.05, "t", 3).unwrap();
+    // Round 1 ships the frozen prefix; round 2 should not (cached).
+    assert!(r1.bytes_down > r2.bytes_down, "{} vs {}", r1.bytes_down, r2.bytes_down);
+    assert_eq!(r1.bytes_up, r2.bytes_up);
+}

@@ -1,0 +1,327 @@
+//! Property-based tests over the pure-Rust L3 substrates.
+//!
+//! The offline image has no proptest crate, so this file carries a small
+//! seeded-random property harness (`cases`): each property runs across a
+//! few hundred randomized cases drawn from `profl::rng::Rng`; failures
+//! print the case seed for deterministic replay.
+
+use profl::aggregate::{Aggregator, SlicedAggregator};
+use profl::data::{partition, Partition, SyntheticDataset};
+use profl::freezing::{ls_slope, EffectiveMovement};
+use profl::json::Value;
+use profl::rng::Rng;
+use profl::store::{ParamStore, Tensor};
+use std::collections::BTreeMap;
+
+/// Run `f` over `n` seeded cases; panics include the failing seed.
+fn cases(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xabcd_0000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property failed at case seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn rand_shape(rng: &mut Rng) -> Vec<usize> {
+    let rank = 1 + rng.below(3);
+    (0..rank).map(|_| 1 + rng.below(6)).collect()
+}
+
+fn rand_tensor(rng: &mut Rng, shape: &[usize]) -> Vec<f32> {
+    (0..shape.iter().product::<usize>()).map(|_| rng.normal()).collect()
+}
+
+fn store_with(name: &str, shape: &[usize], data: Vec<f32>) -> ParamStore {
+    let shapes: BTreeMap<String, Vec<usize>> = [(name.to_string(), shape.to_vec())].into();
+    let mut s = ParamStore::init(&shapes, 0);
+    s.set(name, Tensor { shape: shape.to_vec(), data });
+    s
+}
+
+// ---------------------------------------------------------------------------
+// FedAvg aggregation invariants (Eq. 1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_aggregate_within_envelope() {
+    // The weighted mean of client updates is bounded by their min/max.
+    cases(200, |rng| {
+        let shape = rand_shape(rng);
+        let n: usize = shape.iter().product();
+        let mut store = store_with("w", &shape, vec![0.0; n]);
+        let names = vec!["w".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        let k = 1 + rng.below(5);
+        let mut lo = vec![f32::MAX; n];
+        let mut hi = vec![f32::MIN; n];
+        for _ in 0..k {
+            let t = rand_tensor(rng, &shape);
+            for i in 0..n {
+                lo[i] = lo[i].min(t[i]);
+                hi[i] = hi[i].max(t[i]);
+            }
+            agg.add(&[t], rng.uniform(0.1, 10.0));
+        }
+        agg.finish(&mut store).unwrap();
+        let out = &store.get("w").unwrap().data;
+        for i in 0..n {
+            assert!(out[i] >= lo[i] - 1e-4 && out[i] <= hi[i] + 1e-4, "i={i}");
+        }
+    });
+}
+
+#[test]
+fn prop_aggregate_equal_weights_is_mean() {
+    cases(100, |rng| {
+        let shape = rand_shape(rng);
+        let n: usize = shape.iter().product();
+        let mut store = store_with("w", &shape, vec![0.0; n]);
+        let names = vec!["w".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        let k = 1 + rng.below(4);
+        let mut mean = vec![0.0f64; n];
+        for _ in 0..k {
+            let t = rand_tensor(rng, &shape);
+            for i in 0..n {
+                mean[i] += t[i] as f64 / k as f64;
+            }
+            agg.add(&[t], 1.0);
+        }
+        agg.finish(&mut store).unwrap();
+        let out = &store.get("w").unwrap().data;
+        for i in 0..n {
+            assert!((out[i] as f64 - mean[i]).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_sliced_full_cover_equals_plain() {
+    cases(100, |rng| {
+        let shape = rand_shape(rng);
+        let mut s1 = store_with("w", &shape, vec![0.0; shape.iter().product()]);
+        let mut s2 = s1.clone();
+        let names = vec!["w".to_string()];
+        let mut plain = Aggregator::new(&names, &s1).unwrap();
+        let mut sliced = SlicedAggregator::new(&names, &s2).unwrap();
+        for _ in 0..(1 + rng.below(4)) {
+            let t = rand_tensor(rng, &shape);
+            let w = rng.uniform(0.5, 3.0);
+            plain.add(&[t.clone()], w);
+            sliced.add(&[shape.clone()], &[t], w);
+        }
+        plain.finish(&mut s1).unwrap();
+        sliced.finish(&mut s2).unwrap();
+        for (a, b) in s1.get("w").unwrap().data.iter().zip(&s2.get("w").unwrap().data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn prop_slice_corner_roundtrip() {
+    // slicing then scatter-accumulating with weight 1 reproduces the slice
+    // region and leaves the rest untouched.
+    cases(200, |rng| {
+        let shape = rand_shape(rng);
+        let full = rand_tensor(rng, &shape);
+        let t = Tensor { shape: shape.clone(), data: full.clone() };
+        let sub_shape: Vec<usize> = shape.iter().map(|&d| 1 + rng.below(d)).collect();
+        let sub = t.slice_corner(&sub_shape).unwrap();
+        assert_eq!(sub.data.len(), sub_shape.iter().product::<usize>());
+        let mut acc = vec![0.0; full.len()];
+        let mut wacc = vec![0.0; full.len()];
+        Tensor::accumulate_corner(&shape, &mut acc, &mut wacc, &sub_shape, &sub.data, 1.0);
+        for i in 0..full.len() {
+            if wacc[i] > 0.0 {
+                assert!((acc[i] - full[i]).abs() < 1e-6);
+            } else {
+                assert_eq!(acc[i], 0.0);
+            }
+        }
+        let covered: f32 = wacc.iter().sum();
+        assert_eq!(covered as usize, sub.data.len());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Effective movement invariants (§3.3)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_effective_movement_bounded() {
+    cases(100, |rng| {
+        let n = 1 + rng.below(200);
+        let h = 1 + rng.below(5);
+        let mut em = EffectiveMovement::new(h);
+        let mut v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        for _ in 0..(h + 3 + rng.below(5)) {
+            for x in v.iter_mut() {
+                *x += rng.normal() * 0.1;
+            }
+            if let Some(e) = em.push(&v) {
+                assert!((0.0..=1.0 + 1e-9).contains(&e), "em={e}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_effective_movement_one_for_monotone() {
+    // Any per-scalar *consistent-sign* motion gives EM == 1 regardless of
+    // magnitudes (the numerator equals the denominator scalar-wise).
+    cases(100, |rng| {
+        let n = 1 + rng.below(100);
+        let h = 1 + rng.below(4);
+        let signs: Vec<f32> = (0..n).map(|_| if rng.f64() < 0.5 { -1.0 } else { 1.0 }).collect();
+        let mut em = EffectiveMovement::new(h);
+        let mut v = vec![0.0f32; n];
+        let mut last = None;
+        for _ in 0..(h + 2) {
+            for (x, s) in v.iter_mut().zip(&signs) {
+                *x += s * (0.01 + rng.f32().abs());
+            }
+            last = em.push(&v).or(last);
+        }
+        let e = last.unwrap();
+        assert!((e - 1.0).abs() < 1e-6, "em={e}");
+    });
+}
+
+#[test]
+fn prop_ls_slope_exact_on_lines() {
+    cases(200, |rng| {
+        let n = 2 + rng.below(20);
+        let a = rng.normal() as f64 * 3.0;
+        let b = rng.normal() as f64;
+        let ys: Vec<f64> = (0..n).map(|i| a * i as f64 + b).collect();
+        assert!((ls_slope(&ys) - a).abs() < 1e-6 * (1.0 + a.abs()));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data partition invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_partition_indices_unique_and_labels_valid() {
+    cases(30, |rng| {
+        let classes = 2 + rng.below(20);
+        let data = SyntheticDataset::new(classes, rng.next_u64());
+        let clients = 2 + rng.below(30);
+        let scheme = if rng.f64() < 0.5 {
+            Partition::Iid
+        } else {
+            Partition::Dirichlet { alpha: rng.uniform(0.05, 10.0) }
+        };
+        let shards = partition(&data, clients, 50 * clients, scheme, rng.next_u64());
+        assert_eq!(shards.len(), clients);
+        let mut seen = std::collections::HashSet::new();
+        for s in &shards {
+            assert!(s.num_samples() >= 8);
+            for &l in &s.labels {
+                assert!((l as usize) < classes);
+            }
+            for &i in &s.indices {
+                assert!(seen.insert(i), "duplicate index {i}");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ParamStore init invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_store_init_finite_and_rule_based() {
+    cases(50, |rng| {
+        let mut shapes = BTreeMap::new();
+        for i in 0..(1 + rng.below(6)) {
+            let kind = rng.below(3);
+            let name = match kind {
+                0 => format!("b1/l{i}/w"),
+                1 => format!("b1/l{i}/scale"),
+                _ => format!("b1/l{i}/shift"),
+            };
+            shapes.insert(name, rand_shape(rng));
+        }
+        let store = ParamStore::init(&shapes, rng.next_u64());
+        for name in shapes.keys() {
+            let t = store.get(name).unwrap();
+            for &v in &t.data {
+                assert!(v.is_finite());
+                if name.ends_with("/scale") {
+                    assert_eq!(v, 1.0);
+                }
+                if name.ends_with("/shift") {
+                    assert_eq!(v, 0.0);
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON parser invariants
+// ---------------------------------------------------------------------------
+
+fn rand_json(rng: &mut Rng, depth: usize) -> Value {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Value::Null,
+            1 => Value::Bool(rng.f64() < 0.5),
+            2 => Value::Num((rng.normal() as f64 * 100.0).round()),
+            _ => Value::Str(format!("s{}", rng.below(1000))),
+        };
+    }
+    match rng.below(2) {
+        0 => Value::Arr((0..rng.below(4)).map(|_| rand_json(rng, depth - 1)).collect()),
+        _ => Value::Obj(
+            (0..rng.below(4)).map(|i| (format!("k{i}"), rand_json(rng, depth - 1))).collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    cases(300, |rng| {
+        let v = rand_json(rng, 3);
+        let text = v.to_json();
+        let v2 = Value::parse(&text).unwrap();
+        assert_eq!(v, v2, "text: {text}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// RNG invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dirichlet_valid_simplex() {
+    cases(100, |rng| {
+        let k = 2 + rng.below(50);
+        let alpha = rng.uniform(0.01, 20.0);
+        let p = rng.dirichlet(alpha, k);
+        assert_eq!(p.len(), k);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x > 0.0));
+    });
+}
+
+#[test]
+fn prop_sample_indices_is_permutation_prefix() {
+    cases(100, |rng| {
+        let n = 1 + rng.below(100);
+        let k = rng.below(n + 1);
+        let s = rng.sample_indices(n, k);
+        assert_eq!(s.len(), k);
+        let mut u: Vec<_> = s.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert_eq!(u.len(), k);
+        assert!(s.iter().all(|&i| i < n));
+    });
+}
