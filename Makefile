@@ -1,0 +1,13 @@
+# Top-level convenience targets. `make check` is the pre-PR gate
+# (fmt + clippy + tests); see ROADMAP.md.
+
+.PHONY: check artifacts
+
+check:
+	./rust/check.sh
+
+# AOT-lower the JAX/Pallas models to HLO artifacts consumed by the Rust
+# runtime (L2/L1; see python/compile). The `compile` package lives under
+# python/; its default --out-dir already resolves to ./artifacts here.
+artifacts:
+	cd python && python -m compile.aot

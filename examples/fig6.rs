@@ -34,6 +34,7 @@ fn main() -> Result<()> {
             &dataset,
             cfg.partition(),
             cfg.memory.into(),
+            &cfg.fleet_profile()?,
             cfg.seed,
         );
         out.push_str(&format!("\n== {model} (accounting batch {})\n", cfg.memory.accounting_batch));

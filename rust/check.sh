@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Pre-PR gate for the Rust L3 coordinator (see ROADMAP.md):
+#   fmt → clippy (warnings are errors) → tests.
+#
+# Run from anywhere: `./rust/check.sh` or `make check`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy -D warnings"
+# No allowlist needed today; append `-A clippy::<lint>` here (with a
+# comment) if a pre-existing lint must be grandfathered.
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "check: OK"

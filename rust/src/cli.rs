@@ -6,6 +6,13 @@
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+/// Can `tok` serve as an option's value? Anything not `-`-prefixed, plus
+/// `-`-prefixed tokens that parse as numbers (`--lr -0.1`); other
+/// `-`-prefixed tokens are treated as the next flag.
+fn is_value_token(tok: &str) -> bool {
+    !tok.starts_with('-') || tok.parse::<f64>().is_ok()
+}
+
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
@@ -22,7 +29,7 @@ impl Args {
             if let Some(stripped) = tok.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     out.values.insert(k.to_string(), v.to_string());
-                } else if argv.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if argv.peek().map(|n| is_value_token(n)).unwrap_or(false) {
                     out.values.insert(stripped.to_string(), argv.next().unwrap());
                 } else {
                     out.flags.push(stripped.to_string());
@@ -82,6 +89,18 @@ mod tests {
 
     #[test]
     fn trailing_flag_not_eaten() {
+        let a = args(&["run", "--fast", "--model", "m"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("model"), Some("m"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = args(&["run", "--lr", "-0.1", "--delta", "-3", "--verbose"]);
+        assert_eq!(a.parse_opt::<f32>("lr").unwrap(), Some(-0.1));
+        assert_eq!(a.get("delta"), Some("-3"));
+        assert!(a.flag("verbose"));
+        // Non-numeric dash tokens still aren't eaten as values.
         let a = args(&["run", "--fast", "--model", "m"]);
         assert!(a.flag("fast"));
         assert_eq!(a.get("model"), Some("m"));

@@ -2,6 +2,7 @@
 //! memory-aware selection (the paper's per-step eligibility filter).
 
 use crate::data::{partition, ClientShard, Partition, SyntheticDataset};
+use crate::fleet::{DeviceProfile, FleetProfileConfig};
 use crate::manifest::MemCoeffs;
 use crate::memory::{can_train, DeviceMemory, MemoryConfig};
 use crate::rng::Rng;
@@ -10,6 +11,9 @@ use crate::rng::Rng;
 pub struct Client {
     pub id: usize,
     pub memory: DeviceMemory,
+    /// Fleet-simulator characteristics: compute/link speeds, availability,
+    /// dropout (see `fleet::profile`).
+    pub profile: DeviceProfile,
     pub shard: ClientShard,
     /// Version of the frozen prefix this client has cached (comm
     /// accounting: the prefix is re-downloaded only when it changes).
@@ -40,9 +44,13 @@ impl ClientPool {
         dataset: &SyntheticDataset,
         scheme: Partition,
         mem_cfg: MemoryConfig,
+        fleet: &FleetProfileConfig,
         seed: u64,
     ) -> Self {
         let mut rng = Rng::new(seed ^ 0x5e1e_c7ed);
+        // Separate stream for device profiles: memory budgets stay
+        // bit-identical to the pre-fleet seed for any given run seed.
+        let mut prof_rng = Rng::new(seed ^ 0xf1ee_7000);
         let shards = partition(dataset, num_clients, total_samples, scheme, seed);
         let clients = shards
             .into_iter()
@@ -50,6 +58,7 @@ impl ClientPool {
             .map(|(id, shard)| Client {
                 id,
                 memory: DeviceMemory::sample(&mem_cfg, &mut rng, id),
+                profile: DeviceProfile::sample(fleet, &mut prof_rng, id),
                 shard,
                 prefix_version: u64::MAX,
             })
@@ -124,8 +133,13 @@ mod tests {
     use crate::memory::MB;
 
     fn pool(seed: u64) -> ClientPool {
+        pool_with(seed, "uniform")
+    }
+
+    fn pool_with(seed: u64, profile: &str) -> ClientPool {
         let data = SyntheticDataset::new(10, seed);
-        ClientPool::build(50, 5_000, &data, Partition::Iid, MemoryConfig::default(), seed)
+        let fleet = FleetProfileConfig::named(profile).unwrap();
+        ClientPool::build(50, 5_000, &data, Partition::Iid, MemoryConfig::default(), &fleet, seed)
     }
 
     fn coeffs(total_mb: u64) -> MemCoeffs {
@@ -178,6 +192,20 @@ mod tests {
         tiers.sort();
         tiers.dedup();
         assert!(tiers.len() >= 2);
+    }
+
+    #[test]
+    fn device_profiles_deterministic_and_heterogeneous() {
+        let a = pool_with(6, "mobile");
+        let b = pool_with(6, "mobile");
+        for (ca, cb) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(ca.profile, cb.profile, "client {}", ca.id);
+        }
+        // The mobile fleet must actually mix device tiers.
+        let mut tiers: Vec<String> = a.clients.iter().map(|c| format!("{:?}", c.profile.tier)).collect();
+        tiers.sort();
+        tiers.dedup();
+        assert!(tiers.len() >= 2, "expected tier diversity, got {tiers:?}");
     }
 
     #[test]

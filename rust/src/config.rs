@@ -5,8 +5,10 @@
 //! bench-feasible round counts. `--profile paper` scales rounds up.
 
 use crate::data::Partition;
+use crate::fleet::{FleetProfileConfig, RoundPolicy};
 use crate::freezing::FreezeConfig;
 use crate::memory::MemoryConfig;
+use anyhow::Result;
 
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -40,9 +42,51 @@ pub struct RunConfig {
     pub freeze: FreezeCfg,
     /// Memory substrate knobs.
     pub memory: MemCfg,
+    /// Fleet simulator knobs (device profiles + round policy).
+    pub fleet: FleetCfg,
     /// Tail length for the final-accuracy statistic (paper: 10).
     pub acc_tail: usize,
     pub seed: u64,
+}
+
+/// Fleet-dynamics section: drives the `fleet` discrete-event simulator
+/// (see `fleet::` module docs). Strings here are resolved once at
+/// `ServerCtx::new` via [`RunConfig::fleet_profile`] /
+/// [`RunConfig::round_policy`].
+#[derive(Debug, Clone)]
+pub struct FleetCfg {
+    /// Named device-profile family: `uniform` (homogeneous, always-on,
+    /// no dropout — the backwards-compatible default), `mobile`
+    /// (three-tier phones, intermittent availability, 10% dropout), or
+    /// `datacenter` (fast, wired, reliable). CLI: `--fleet-profile`.
+    pub profile: String,
+    /// Aggregation policy per train round: `sync` (wait for all),
+    /// `deadline` (cut stragglers at `deadline_s`), `over-select`
+    /// (sample `per_round + over_select_extra`, keep the first
+    /// `per_round` finishers). Also accepts `deadline:SECS` and
+    /// `over-select:K` spellings. CLI: `--round-policy`.
+    pub round_policy: String,
+    /// Deadline in virtual seconds for the `deadline` policy.
+    /// CLI: `--deadline-s`.
+    pub deadline_s: f64,
+    /// Extra clients sampled beyond `per_round` under `over-select`.
+    /// CLI: `--over-select`.
+    pub over_select_extra: usize,
+    /// Per-round dropout probability override; `None` keeps the named
+    /// profile's default. CLI: `--dropout`.
+    pub dropout_p: Option<f64>,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        FleetCfg {
+            profile: "uniform".into(),
+            round_policy: "sync".into(),
+            deadline_s: 60.0,
+            over_select_extra: 4,
+            dropout_p: None,
+        }
+    }
 }
 
 /// Plain-data twin of freezing::FreezeConfig.
@@ -105,6 +149,7 @@ impl Default for RunConfig {
             shrinking: true,
             freeze: FreezeCfg { window_h: 3, phi: 0.01, patience_w: 3, fit_points: 5, min_observations: 6 },
             memory: MemCfg { budget_min_mb: 100, budget_max_mb: 900, contention_lo: 0.7, accounting_batch: 128 },
+            fleet: FleetCfg::default(),
             acc_tail: 10,
             seed: 42,
         }
@@ -117,6 +162,20 @@ impl RunConfig {
             Some(alpha) => Partition::Dirichlet { alpha },
             None => Partition::Iid,
         }
+    }
+
+    /// Resolve the named fleet profile, applying the dropout override.
+    pub fn fleet_profile(&self) -> Result<FleetProfileConfig> {
+        let mut p = FleetProfileConfig::named(&self.fleet.profile)?;
+        if let Some(d) = self.fleet.dropout_p {
+            p.dropout_p = d;
+        }
+        Ok(p)
+    }
+
+    /// Resolve the configured round policy string.
+    pub fn round_policy(&self) -> Result<RoundPolicy> {
+        RoundPolicy::parse(&self.fleet.round_policy, self.fleet.deadline_s, self.fleet.over_select_extra)
     }
 
     /// A smoke-test profile: tiny rounds, quick everything. Used by
@@ -182,5 +241,31 @@ mod tests {
         let c = RunConfig::smoke("resnet18_w8_c10");
         assert!(c.max_rounds_total <= 64);
         assert!(c.num_clients <= 20);
+    }
+
+    #[test]
+    fn fleet_defaults_are_backwards_compatible() {
+        // Default fleet: sync policy + uniform always-on profile with no
+        // dropout, so pre-fleet round semantics are preserved.
+        let c = RunConfig::default();
+        assert_eq!(c.round_policy().unwrap(), RoundPolicy::Sync);
+        let p = c.fleet_profile().unwrap();
+        assert_eq!(p.name, "uniform");
+        assert_eq!(p.dropout_p, 0.0);
+        assert!(p.duty >= 1.0);
+    }
+
+    #[test]
+    fn fleet_overrides_resolve() {
+        let mut c = RunConfig::default();
+        c.fleet.round_policy = "deadline".into();
+        c.fleet.deadline_s = 45.0;
+        c.fleet.dropout_p = Some(0.25);
+        assert_eq!(c.round_policy().unwrap(), RoundPolicy::Deadline { secs: 45.0 });
+        assert_eq!(c.fleet_profile().unwrap().dropout_p, 0.25);
+        c.fleet.round_policy = "warp".into();
+        assert!(c.round_policy().is_err());
+        c.fleet.profile = "quantum".into();
+        assert!(c.fleet_profile().is_err());
     }
 }

@@ -1,11 +1,14 @@
 //! The federated coordinator (L3) — round execution, aggregation, eval.
 //!
 //! `ServerCtx` owns the global parameter store, the client pool, the PJRT
-//! runtime and the metrics sink. One `run_train_round` is the paper's
-//! §3.1 round: (1) pick the round's sub-model artifact, (2) sample clients
-//! and filter by memory, (3) ship parameters (comm-accounted), (4) each
-//! client runs the AOT train step on its local batches, (5) weighted
-//! FedAvg (Eq. 1) back into the store.
+//! runtime, the fleet simulator state, and the metrics sink. One
+//! `run_train_round` is the paper's §3.1 round: (1) pick the round's
+//! sub-model artifact, (2) sample clients and filter by memory, (3)
+//! dispatch the cohort as fleet events (download → local train → upload
+//! on each device's virtual timeline), (4) the round policy decides who
+//! aggregates (sync / deadline / over-select), (5) weighted FedAvg
+//! (Eq. 1) back into the store, with comm accounting and the virtual
+//! clock advanced to the aggregation instant.
 //!
 //! The progressive schedule itself (shrink → grow, freezing) lives in
 //! `methods::profl`; baselines drive the same primitives.
@@ -15,8 +18,10 @@ pub mod round;
 use crate::clients::ClientPool;
 use crate::config::RunConfig;
 use crate::data::SyntheticDataset;
-use crate::manifest::ModelEntry;
+use crate::fleet::{self, ClientWork, RoundPlan, RoundPolicy};
+use crate::manifest::{MemCoeffs, ModelEntry};
 use crate::metrics::MetricsSink;
+use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::store::ParamStore;
 use anyhow::Result;
@@ -34,9 +39,17 @@ pub struct ServerCtx<'rt> {
     pub dataset: SyntheticDataset,
     pub metrics: MetricsSink,
     pub round: usize,
+    /// Resolved round policy (from `cfg.fleet.round_policy`).
+    pub policy: RoundPolicy,
+    /// Virtual fleet clock: seconds of simulated wall time since run
+    /// start, advanced by each round's event simulation.
+    pub sim_time_s: f64,
     /// Version stamp of the frozen prefix currently in the store; clients
     /// cache the prefix and only re-download when this changes.
     pub prefix_version: u64,
+    /// Dedicated stream for fleet stochastics (dropout draws), forked off
+    /// the run seed so event traces are reproducible.
+    pub(crate) fleet_rng: Rng,
     /// Scratch buffers reused across rounds (no allocation on the hot path).
     pub(crate) xs_buf: Vec<f32>,
     pub(crate) ys_buf: Vec<i32>,
@@ -46,15 +59,19 @@ impl<'rt> ServerCtx<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Result<Self> {
         let model = rt.model(&cfg.model_tag)?;
         let dataset = SyntheticDataset::new(model.num_classes, cfg.seed ^ 0xda7a);
+        let fleet_profile = cfg.fleet_profile()?;
+        let policy = cfg.round_policy()?;
         let pool = ClientPool::build(
             cfg.num_clients,
             cfg.total_samples,
             &dataset,
             cfg.partition(),
             cfg.memory.into(),
+            &fleet_profile,
             cfg.seed,
         );
         let store = ParamStore::init(&model.params, cfg.seed ^ 0x1417);
+        let fleet_rng = Rng::new(cfg.seed ^ 0xf1ee_7c10);
         Ok(ServerCtx {
             rt,
             cfg,
@@ -63,7 +80,10 @@ impl<'rt> ServerCtx<'rt> {
             dataset,
             metrics: MetricsSink::new(),
             round: 0,
+            policy,
+            sim_time_s: 0.0,
             prefix_version: 0,
+            fleet_rng,
             xs_buf: Vec::new(),
             ys_buf: Vec::new(),
         })
@@ -85,5 +105,48 @@ impl<'rt> ServerCtx<'rt> {
     /// forces prefix re-download for every client on next contact.
     pub fn bump_prefix_version(&mut self) {
         self.prefix_version += 1;
+    }
+
+    /// How many clients to sample for a round: `per_round`, plus the
+    /// over-commitment margin under the over-select policy.
+    pub fn sample_size(&self) -> usize {
+        match self.policy {
+            RoundPolicy::OverSelect { extra } => self.cfg.per_round + extra,
+            _ => self.cfg.per_round,
+        }
+    }
+
+    /// Precompute one cohort member's round timing from its device
+    /// profile: availability-gated dispatch, artifact download, local
+    /// training (shard size × FLOPs proxy), update upload.
+    pub fn client_work(
+        &self,
+        cid: usize,
+        mem: &MemCoeffs,
+        bytes_up: u64,
+        bytes_down: u64,
+    ) -> ClientWork {
+        let c = &self.pool.clients[cid];
+        ClientWork {
+            id: cid,
+            ready_s: c.profile.trace.next_online(self.sim_time_s),
+            down_s: c.profile.down_time_s(bytes_down),
+            train_s: c.profile.train_time_s(c.shard.num_samples(), mem),
+            up_s: c.profile.up_time_s(bytes_up),
+            dropout_p: c.profile.dropout_p,
+        }
+    }
+
+    /// Run one round's cohort through the discrete-event simulator under
+    /// the configured policy, advancing the virtual clock to the
+    /// aggregation instant.
+    pub fn run_fleet(&mut self, works: &[ClientWork]) -> RoundPlan {
+        let keep = match self.policy {
+            RoundPolicy::OverSelect { .. } => self.cfg.per_round,
+            _ => usize::MAX,
+        };
+        let plan = fleet::simulate_round(self.sim_time_s, works, self.policy, keep, &mut self.fleet_rng);
+        self.sim_time_s = plan.end_s;
+        plan
     }
 }

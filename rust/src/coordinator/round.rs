@@ -16,6 +16,31 @@ pub struct RoundOutcome {
     pub bytes_up: u64,
     pub bytes_down: u64,
     pub client_mem_bytes: u64,
+    /// Virtual duration of this round (seconds) under the fleet simulator.
+    pub sim_time_s: f64,
+    /// Clients cut by the round policy before aggregation.
+    pub stragglers: usize,
+    /// Clients that dropped out after dispatch.
+    pub dropouts: usize,
+}
+
+impl Default for RoundOutcome {
+    /// The "nothing happened yet" round: NaN losses (no cohort trained),
+    /// zero counters.
+    fn default() -> Self {
+        RoundOutcome {
+            mean_loss: f32::NAN,
+            mean_acc: f32::NAN,
+            participants: 0,
+            fallback: 0,
+            bytes_up: 0,
+            bytes_down: 0,
+            client_mem_bytes: 0,
+            sim_time_s: 0.0,
+            stragglers: 0,
+            dropouts: 0,
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -39,40 +64,70 @@ impl<'rt> ServerCtx<'rt> {
         let tag = self.cfg.model_tag.clone();
         let art = self.rt.load(&tag, artifact)?;
         let mem = art.meta.participation_mem();
-        let sel = self.pool.select(self.cfg.per_round, &mem);
+        let sel = self.pool.select(self.sample_size(), &mem);
+
+        // --- fleet dispatch: virtual-time the memory-eligible cohort --------
+        // Each trainer's timeline = availability-gated dispatch → download
+        // (trainables, plus the frozen prefix when its cache is stale) →
+        // local pass over its shard → upload. The round policy then picks
+        // the aggregation cohort.
+        let tr_bytes = art.meta.trainable_bytes();
+        let fr_bytes = art.meta.frozen_bytes();
+        let works: Vec<_> = sel
+            .trainers
+            .iter()
+            .map(|&cid| {
+                let stale = self.pool.clients[cid].prefix_version != self.prefix_version;
+                let down = tr_bytes + if stale { fr_bytes } else { 0 };
+                self.client_work(cid, &mem, tr_bytes, down)
+            })
+            .collect();
+        let plan = self.run_fleet(&works);
+
+        // Aggregate in *selection* order, not upload-arrival order: float
+        // accumulation is order-sensitive, and with the default
+        // uniform/sync fleet this keeps FedAvg bit-identical to the
+        // pre-fleet coordinator.
+        let completers: Vec<usize> =
+            sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
 
         let mut outcome = RoundOutcome {
-            mean_loss: f32::NAN,
-            mean_acc: f32::NAN,
-            participants: sel.trainers.len(),
-            fallback: 0,
-            bytes_up: 0,
-            bytes_down: 0,
+            participants: completers.len(),
             client_mem_bytes: mem.bytes_at(self.cfg.memory.accounting_batch),
+            sim_time_s: plan.duration_s(),
+            stragglers: plan.stragglers.len(),
+            dropouts: plan.dropouts.len(),
+            ..RoundOutcome::default()
         };
 
-        // --- primary cohort -------------------------------------------------
-        if !sel.trainers.is_empty() {
-            let (loss, acc) = self.train_cohort(&tag, &art.meta, artifact, &sel.trainers, lr, &mut outcome)?;
+        // --- primary cohort: only policy-accepted finishers aggregate -------
+        if !completers.is_empty() {
+            let (loss, acc) =
+                self.train_cohort(&tag, &art.meta, artifact, &completers, lr, &mut outcome)?;
             outcome.mean_loss = loss;
             outcome.mean_acc = acc;
         }
 
         // --- fallback cohort (output-layer-only training) -------------------
-        if let (Some(fb), false) = (fallback_artifact, sel.fallback.is_empty()) {
+        // The op artifact is tiny (§4.1), so fallback clients are assumed to
+        // fit inside the primary round window; they are not separately
+        // policy-filtered. Over-select over-commits the *trainer* cohort
+        // only: the fallback cohort is restricted to the first `per_round`
+        // sampled clients (exactly the plain sample — the first k draws of
+        // a k+extra Fisher-Yates sample are the k-sample), so fallback
+        // participation and comm stay comparable across policies.
+        let fallback: Vec<usize> = sel
+            .availability
+            .iter()
+            .take(self.cfg.per_round)
+            .map(|&(id, _)| id)
+            .filter(|id| sel.fallback.contains(id))
+            .collect();
+        if let (Some(fb), false) = (fallback_artifact, fallback.is_empty()) {
             let fb_art = self.rt.load(&tag, fb)?;
-            let fb_clients: Vec<usize> = sel.fallback.clone();
-            let mut fb_out = RoundOutcome {
-                mean_loss: f32::NAN,
-                mean_acc: f32::NAN,
-                participants: 0,
-                fallback: 0,
-                bytes_up: 0,
-                bytes_down: 0,
-                client_mem_bytes: 0,
-            };
-            self.train_cohort(&tag, &fb_art.meta, fb, &fb_clients, lr, &mut fb_out)?;
-            outcome.fallback = fb_clients.len();
+            let mut fb_out = RoundOutcome::default();
+            self.train_cohort(&tag, &fb_art.meta, fb, &fallback, lr, &mut fb_out)?;
+            outcome.fallback = fallback.len();
             outcome.bytes_up += fb_out.bytes_up;
             outcome.bytes_down += fb_out.bytes_down;
         }
@@ -161,20 +216,32 @@ impl<'rt> ServerCtx<'rt> {
         let tag = self.cfg.model_tag.clone();
         let art = self.rt.load(&tag, artifact)?;
         let mem = art.meta.participation_mem();
-        let sel = self.pool.select(self.cfg.per_round, &mem);
+        let sel = self.pool.select(self.sample_size(), &mem);
         let scan = self.rt.manifest.scan_steps;
         let batch = self.rt.manifest.train_batch;
+        let tr_bytes = art.meta.trainable_bytes();
+
+        // Distillation rounds run under the same fleet policy as train
+        // rounds (the Map stage costs virtual time too).
+        let works: Vec<_> = sel
+            .trainers
+            .iter()
+            .map(|&cid| self.client_work(cid, &mem, tr_bytes, tr_bytes))
+            .collect();
+        let plan = self.run_fleet(&works);
+        // Selection-order aggregation (see run_train_round).
+        let completers: Vec<usize> =
+            sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
 
         let mut outcome = RoundOutcome {
-            mean_loss: f32::NAN,
-            mean_acc: f32::NAN,
-            participants: sel.trainers.len(),
-            fallback: 0,
-            bytes_up: 0,
-            bytes_down: 0,
+            participants: completers.len(),
             client_mem_bytes: mem.bytes_at(self.cfg.memory.accounting_batch),
+            sim_time_s: plan.duration_s(),
+            stragglers: plan.stragglers.len(),
+            dropouts: plan.dropouts.len(),
+            ..RoundOutcome::default()
         };
-        if sel.trainers.is_empty() {
+        if completers.is_empty() {
             self.round += 1;
             return Ok(outcome);
         }
@@ -184,9 +251,8 @@ impl<'rt> ServerCtx<'rt> {
         let trainable: Vec<String> = art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
         let mut agg = Aggregator::new(&trainable, &self.store)?;
         let mut loss_sum = 0.0f64;
-        let tr_bytes = art.meta.trainable_bytes();
 
-        for &cid in &sel.trainers {
+        for &cid in &completers {
             let weight = {
                 let data = &self.dataset;
                 let client = &mut self.pool.clients[cid];
@@ -275,6 +341,11 @@ impl<'rt> ServerCtx<'rt> {
             bytes_up: out.bytes_up,
             bytes_down: out.bytes_down,
             client_mem_bytes: out.client_mem_bytes,
+            // Cumulative fleet clock: the ctx has already advanced past
+            // this round's simulation when the record is pushed.
+            sim_time_s: self.sim_time_s,
+            stragglers: out.stragglers,
+            dropouts: out.dropouts,
         });
     }
 }

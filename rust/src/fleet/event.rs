@@ -1,0 +1,161 @@
+//! Discrete-event substrate: virtual clock + deterministic event queue.
+//!
+//! The queue is a binary min-heap ordered by `(time_s, seq)`: ties on
+//! virtual time break by insertion order, so a round's event trace is a
+//! pure function of the inputs — no wall clock, no hash-map iteration
+//! order, nothing platform-dependent.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// What can happen to a dispatched client during one simulated round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Server ships the round's sub-model to the client.
+    Dispatch { client: usize },
+    /// Client finished its local training pass.
+    TrainDone { client: usize },
+    /// Client's update arrived back at the server.
+    UploadDone { client: usize },
+    /// The round policy's aggregation deadline fired.
+    Deadline,
+}
+
+impl EventKind {
+    /// The client this event concerns, if any.
+    pub fn client(&self) -> Option<usize> {
+        match *self {
+            EventKind::Dispatch { client }
+            | EventKind::TrainDone { client }
+            | EventKind::UploadDone { client } => Some(client),
+            EventKind::Deadline => None,
+        }
+    }
+}
+
+/// One scheduled occurrence. `seq` is the queue-assigned insertion index
+/// (unique per queue), which doubles as the deterministic tie-breaker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub time_s: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+// Times are finite by construction (virtual seconds), so total_cmp gives
+// a genuine total order and Eq is sound.
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time_s.total_cmp(&other.time_s).then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue with deterministic FIFO tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` at absolute virtual time `time_s`.
+    pub fn push(&mut self, time_s: f64, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Event { time_s, seq, kind }));
+    }
+
+    /// Earliest event (ties in insertion order), removing it.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Monotone virtual clock (seconds since run start). The event loop is
+/// the only writer; `advance_to` enforces monotonicity in debug builds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now_s: f64,
+}
+
+impl VirtualClock {
+    pub fn new(start_s: f64) -> Self {
+        VirtualClock { now_s: start_s }
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn advance_to(&mut self, t: f64) {
+        debug_assert!(t >= self.now_s, "clock moved backwards: {} -> {t}", self.now_s);
+        self.now_s = self.now_s.max(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::Deadline);
+        q.push(1.0, EventKind::Dispatch { client: 0 });
+        q.push(3.0, EventKind::TrainDone { client: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time_s).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for c in 0..5 {
+            q.push(2.0, EventKind::Dispatch { client: c });
+        }
+        let clients: Vec<usize> =
+            std::iter::from_fn(|| q.pop()).filter_map(|e| e.kind.client()).collect();
+        assert_eq!(clients, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(10.0, EventKind::UploadDone { client: 1 });
+        q.push(4.0, EventKind::Dispatch { client: 2 });
+        assert_eq!(q.pop().unwrap().time_s, 4.0);
+        q.push(6.0, EventKind::TrainDone { client: 2 });
+        assert_eq!(q.pop().unwrap().time_s, 6.0);
+        assert_eq!(q.pop().unwrap().time_s, 10.0);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let mut c = VirtualClock::new(1.0);
+        c.advance_to(3.5);
+        assert_eq!(c.now_s(), 3.5);
+        c.advance_to(3.5); // equal is allowed
+        assert_eq!(c.now_s(), 3.5);
+    }
+}

@@ -1,0 +1,436 @@
+//! Fleet simulator (L3): deterministic discrete-event engine for
+//! heterogeneous-device round dynamics.
+//!
+//! The seed coordinator modelled the fleet as a memoryless synchronous
+//! loop — every sampled client trained "instantly", so the system could
+//! say nothing about wall-clock time-to-accuracy, stragglers, or
+//! dropout. This module adds the missing dimension: every client carries
+//! a [`DeviceProfile`] (compute throughput, link speeds, availability
+//! trace, dropout probability), a train round dispatches its cohort as
+//! events on a virtual clock, and a [`RoundPolicy`] decides who makes it
+//! into the aggregate:
+//!
+//! * [`RoundPolicy::Sync`] — wait for every dispatched client; round
+//!   time is the slowest participant's finish time.
+//! * [`RoundPolicy::Deadline`] — aggregate whatever has arrived when the
+//!   deadline fires; the rest are counted as stragglers.
+//! * [`RoundPolicy::OverSelect`] — sample `per_round + extra` clients
+//!   and keep the first `per_round` finishers (FedScale-style
+//!   over-commitment).
+//!
+//! Everything is seeded: same config + seed ⇒ identical event order,
+//! `sim_time_s`, and straggler/dropout counts, bit for bit.
+
+pub mod event;
+pub mod profile;
+pub mod trace;
+
+pub use event::{Event, EventKind, EventQueue, VirtualClock};
+pub use profile::{DeviceProfile, DeviceTier, FleetProfileConfig, TierSpec};
+pub use trace::AvailabilityTrace;
+
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// How a train round decides when to aggregate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoundPolicy {
+    /// Wait for every dispatched client (classic synchronous FedAvg).
+    Sync,
+    /// Aggregate at `start + secs`; unfinished clients become stragglers.
+    Deadline { secs: f64 },
+    /// Sample `extra` clients beyond `per_round`, keep the first
+    /// `per_round` finishers, count the rest as stragglers.
+    OverSelect { extra: usize },
+}
+
+impl RoundPolicy {
+    /// Parse a CLI/config spelling. Accepts `sync`, `deadline`,
+    /// `deadline:SECS`, `over-select`, `over-select:K`; the bare forms
+    /// take `default_deadline_s` / `default_extra`.
+    pub fn parse(s: &str, default_deadline_s: f64, default_extra: usize) -> Result<Self> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "sync" => Ok(RoundPolicy::Sync),
+            "deadline" => {
+                let secs: f64 = match arg {
+                    Some(a) => a.parse().map_err(|e| anyhow::anyhow!("bad deadline `{a}`: {e}"))?,
+                    None => default_deadline_s,
+                };
+                if !secs.is_finite() || secs < 0.0 {
+                    bail!("deadline must be a finite non-negative number of seconds, got {secs}");
+                }
+                Ok(RoundPolicy::Deadline { secs })
+            }
+            "over-select" | "overselect" => {
+                let extra = match arg {
+                    Some(a) => a.parse().map_err(|e| anyhow::anyhow!("bad over-select `{a}`: {e}"))?,
+                    None => default_extra,
+                };
+                Ok(RoundPolicy::OverSelect { extra })
+            }
+            other => bail!("unknown round policy `{other}` (sync|deadline[:S]|over-select[:K])"),
+        }
+    }
+}
+
+/// One cohort member's precomputed timing for a round: when it can be
+/// dispatched and how long each leg takes. Built by
+/// `ServerCtx::client_work` from the client's [`DeviceProfile`], shard
+/// size, and the round artifact's byte/FLOP footprint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientWork {
+    pub id: usize,
+    /// Earliest dispatch time (availability-gated), absolute seconds.
+    pub ready_s: f64,
+    /// Sub-model download time.
+    pub down_s: f64,
+    /// Local training time.
+    pub train_s: f64,
+    /// Update upload time.
+    pub up_s: f64,
+    /// Probability the client vanishes after dispatch this round.
+    pub dropout_p: f64,
+}
+
+/// What the simulator decided for one round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundPlan {
+    /// Clients whose updates are aggregated, in upload-arrival order.
+    /// (The coordinator re-sorts these into selection order before
+    /// FedAvg so float accumulation stays reproducible across policies.)
+    pub completers: Vec<usize>,
+    /// Dispatched-or-selected clients cut by the round policy.
+    pub stragglers: Vec<usize>,
+    /// Clients that dropped out after dispatch.
+    pub dropouts: Vec<usize>,
+    pub start_s: f64,
+    /// Virtual time at which the server aggregates.
+    pub end_s: f64,
+    /// Processed events in execution order (determinism witnesses).
+    pub events: Vec<Event>,
+}
+
+impl RoundPlan {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// Run one round's cohort through the event loop. `keep` caps how many
+/// finishers are aggregated (`usize::MAX` for sync/deadline;
+/// `per_round` for over-select). Dropout draws happen in event order
+/// from `rng`, so the whole plan is a pure function of its arguments.
+pub fn simulate_round(
+    start_s: f64,
+    works: &[ClientWork],
+    policy: RoundPolicy,
+    keep: usize,
+    rng: &mut Rng,
+) -> RoundPlan {
+    // An empty cohort is a no-op round: nothing to dispatch, so no
+    // deadline wait either (the server has nobody to wait for).
+    if works.is_empty() {
+        return RoundPlan {
+            completers: Vec::new(),
+            stragglers: Vec::new(),
+            dropouts: Vec::new(),
+            start_s,
+            end_s: start_s,
+            events: Vec::new(),
+        };
+    }
+    let by_id: HashMap<usize, &ClientWork> = works.iter().map(|w| (w.id, w)).collect();
+    let mut q = EventQueue::new();
+    // Clients still owing an upload; the loop may stop early once none remain.
+    let mut outstanding = 0usize;
+    for w in works {
+        // A non-finite ready time (zero-duty availability trace) means the
+        // client can never be dispatched: it falls through to the straggler
+        // set below instead of poisoning the clock with an INF event.
+        if w.ready_s.is_finite() {
+            q.push(start_s.max(w.ready_s), EventKind::Dispatch { client: w.id });
+            outstanding += 1;
+        }
+    }
+    if outstanding > 0 {
+        if let RoundPolicy::Deadline { secs } = policy {
+            q.push(start_s + secs, EventKind::Deadline);
+        }
+    }
+
+    let mut clock = VirtualClock::new(start_s);
+    let mut events = Vec::new();
+    let mut completers = Vec::new();
+    let mut dropouts = Vec::new();
+    let mut end_s = start_s;
+
+    while let Some(ev) = q.pop() {
+        clock.advance_to(ev.time_s);
+        match ev.kind {
+            EventKind::Dispatch { client } => {
+                events.push(ev);
+                let w = by_id[&client];
+                if rng.f64() < w.dropout_p {
+                    dropouts.push(client);
+                    outstanding -= 1;
+                } else {
+                    q.push(ev.time_s + w.down_s + w.train_s, EventKind::TrainDone { client });
+                }
+            }
+            EventKind::TrainDone { client } => {
+                events.push(ev);
+                q.push(ev.time_s + by_id[&client].up_s, EventKind::UploadDone { client });
+            }
+            EventKind::UploadDone { client } => {
+                events.push(ev);
+                completers.push(client);
+                outstanding -= 1;
+                end_s = clock.now_s();
+                if completers.len() >= keep {
+                    break; // over-select: cohort is full
+                }
+            }
+            EventKind::Deadline => {
+                events.push(ev);
+                end_s = clock.now_s();
+                break; // everyone still in flight is a straggler
+            }
+        }
+        if outstanding == 0 {
+            break; // all uploads in (or dropped) — don't wait for a deadline
+        }
+    }
+
+    let stragglers: Vec<usize> = works
+        .iter()
+        .map(|w| w.id)
+        .filter(|id| !completers.contains(id) && !dropouts.contains(id))
+        .collect();
+    RoundPlan { completers, stragglers, dropouts, start_s, end_s, events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clients::ClientPool;
+    use crate::data::{Partition, SyntheticDataset};
+    use crate::manifest::MemCoeffs;
+    use crate::memory::MemoryConfig;
+
+    fn work(id: usize, ready: f64, down: f64, train: f64, up: f64, drop_p: f64) -> ClientWork {
+        ClientWork { id, ready_s: ready, down_s: down, train_s: train, up_s: up, dropout_p: drop_p }
+    }
+
+    #[test]
+    fn sync_waits_for_slowest() {
+        let works =
+            vec![work(0, 0.0, 1.0, 5.0, 1.0, 0.0), work(1, 0.0, 2.0, 80.0, 3.0, 0.0)];
+        let plan =
+            simulate_round(10.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(1));
+        assert_eq!(plan.completers, vec![0, 1]);
+        assert!(plan.stragglers.is_empty() && plan.dropouts.is_empty());
+        // sim time = slowest participant's finish: 10 + 2 + 80 + 3.
+        assert!((plan.end_s - 95.0).abs() < 1e-9);
+        assert!((plan.duration_s() - 85.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_cuts_slow_clients_as_stragglers() {
+        let works =
+            vec![work(0, 0.0, 1.0, 5.0, 1.0, 0.0), work(1, 0.0, 2.0, 80.0, 3.0, 0.0)];
+        let plan = simulate_round(
+            0.0,
+            &works,
+            RoundPolicy::Deadline { secs: 20.0 },
+            usize::MAX,
+            &mut Rng::new(1),
+        );
+        assert_eq!(plan.completers, vec![0]);
+        assert_eq!(plan.stragglers, vec![1]);
+        assert!((plan.end_s - 20.0).abs() < 1e-9, "round ends at the deadline");
+    }
+
+    #[test]
+    fn deadline_ends_early_when_everyone_finishes() {
+        let works = vec![work(0, 0.0, 1.0, 2.0, 1.0, 0.0)];
+        let plan = simulate_round(
+            0.0,
+            &works,
+            RoundPolicy::Deadline { secs: 100.0 },
+            usize::MAX,
+            &mut Rng::new(1),
+        );
+        assert_eq!(plan.completers, vec![0]);
+        assert!((plan.end_s - 4.0).abs() < 1e-9, "no idle wait until the deadline");
+    }
+
+    #[test]
+    fn over_select_keeps_first_finishers() {
+        let works = vec![
+            work(0, 0.0, 0.0, 30.0, 0.0, 0.0),
+            work(1, 0.0, 0.0, 10.0, 0.0, 0.0),
+            work(2, 0.0, 0.0, 20.0, 0.0, 0.0),
+        ];
+        let plan = simulate_round(
+            0.0,
+            &works,
+            RoundPolicy::OverSelect { extra: 1 },
+            2,
+            &mut Rng::new(1),
+        );
+        assert_eq!(plan.completers, vec![1, 2], "fastest two win");
+        assert_eq!(plan.stragglers, vec![0]);
+        assert!((plan.end_s - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn certain_dropout_is_counted_not_straggled() {
+        let works = vec![work(0, 0.0, 1.0, 1.0, 1.0, 1.0), work(1, 0.0, 1.0, 1.0, 1.0, 0.0)];
+        let plan =
+            simulate_round(0.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(3));
+        assert_eq!(plan.dropouts, vec![0]);
+        assert_eq!(plan.completers, vec![1]);
+        assert!(plan.stragglers.is_empty());
+    }
+
+    #[test]
+    fn availability_delays_dispatch() {
+        // Client 0 only becomes reachable at t=50.
+        let works = vec![work(0, 50.0, 1.0, 2.0, 1.0, 0.0)];
+        let plan =
+            simulate_round(0.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(1));
+        assert_eq!(plan.events[0].time_s, 50.0);
+        assert!((plan.end_s - 54.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_cohort_is_a_noop_round() {
+        // Under every policy — in particular, an empty deadline round must
+        // not burn deadline_s of virtual time waiting for nobody.
+        for policy in
+            [RoundPolicy::Sync, RoundPolicy::Deadline { secs: 60.0 }, RoundPolicy::OverSelect { extra: 2 }]
+        {
+            let plan = simulate_round(7.0, &[], policy, usize::MAX, &mut Rng::new(1));
+            assert!(plan.completers.is_empty() && plan.events.is_empty());
+            assert_eq!(plan.end_s, 7.0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn unreachable_client_is_a_straggler_not_a_completer() {
+        // Zero-duty trace ⇒ ready_s = INFINITY: the client must not be
+        // dispatched (sync would otherwise wait forever / poison the clock).
+        let works = vec![
+            work(0, f64::INFINITY, 1.0, 2.0, 1.0, 0.0),
+            work(1, 0.0, 1.0, 2.0, 1.0, 0.0),
+        ];
+        for policy in [RoundPolicy::Sync, RoundPolicy::Deadline { secs: 100.0 }] {
+            let plan = simulate_round(0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+            assert_eq!(plan.completers, vec![1], "{policy:?}");
+            assert_eq!(plan.stragglers, vec![0], "{policy:?}");
+            assert!(plan.end_s.is_finite() && (plan.end_s - 4.0).abs() < 1e-9, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(RoundPolicy::parse("sync", 60.0, 4).unwrap(), RoundPolicy::Sync);
+        assert_eq!(
+            RoundPolicy::parse("deadline", 60.0, 4).unwrap(),
+            RoundPolicy::Deadline { secs: 60.0 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("deadline:12.5", 60.0, 4).unwrap(),
+            RoundPolicy::Deadline { secs: 12.5 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("over-select", 60.0, 4).unwrap(),
+            RoundPolicy::OverSelect { extra: 4 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("over-select:9", 60.0, 4).unwrap(),
+            RoundPolicy::OverSelect { extra: 9 }
+        );
+        assert!(RoundPolicy::parse("async", 60.0, 4).is_err());
+        assert!(RoundPolicy::parse("deadline:abc", 60.0, 4).is_err());
+        assert!(RoundPolicy::parse("deadline:-5", 60.0, 4).is_err(), "negative deadline");
+        assert!(RoundPolicy::parse("deadline:NaN", 60.0, 4).is_err(), "non-finite deadline");
+    }
+
+    /// Build a realistic cohort plan end-to-end from a seeded pool
+    /// (profiles sampled with the `Rng` fork discipline) — the fleet
+    /// determinism contract: same seed + config ⇒ identical event order,
+    /// sim time, and straggler/dropout counts.
+    fn plan_from_pool(seed: u64, policy: RoundPolicy) -> RoundPlan {
+        let data = SyntheticDataset::new(10, seed);
+        let fleet = FleetProfileConfig::named("mobile").unwrap();
+        let pool = ClientPool::build(
+            30,
+            3_000,
+            &data,
+            Partition::Iid,
+            MemoryConfig::default(),
+            &fleet,
+            seed,
+        );
+        let mem = MemCoeffs {
+            fixed_bytes: 0,
+            per_sample_bytes: 0,
+            params_total: 11_000_000,
+            params_trainable: 11_000_000,
+        };
+        let bytes = 44_000_000u64;
+        let works: Vec<ClientWork> = (0..10)
+            .map(|cid| {
+                let p = &pool.clients[cid].profile;
+                ClientWork {
+                    id: cid,
+                    ready_s: p.trace.next_online(0.0),
+                    down_s: p.down_time_s(bytes),
+                    train_s: p.train_time_s(pool.clients[cid].shard.num_samples(), &mem),
+                    up_s: p.up_time_s(bytes),
+                    dropout_p: p.dropout_p,
+                }
+            })
+            .collect();
+        simulate_round(0.0, &works, policy, usize::MAX, &mut Rng::new(seed ^ 0xf1ee))
+    }
+
+    #[test]
+    fn same_seed_same_plan_bit_for_bit() {
+        for policy in [RoundPolicy::Sync, RoundPolicy::Deadline { secs: 300.0 }] {
+            let a = plan_from_pool(9, policy);
+            let b = plan_from_pool(9, policy);
+            assert_eq!(a.events, b.events, "event order diverged");
+            assert_eq!(a.end_s.to_bits(), b.end_s.to_bits(), "sim time diverged");
+            assert_eq!(a.completers, b.completers);
+            assert_eq!(a.stragglers, b.stragglers);
+            assert_eq!(a.dropouts, b.dropouts);
+        }
+    }
+
+    #[test]
+    fn seeds_actually_change_the_plan() {
+        let a = plan_from_pool(9, RoundPolicy::Sync);
+        let b = plan_from_pool(10, RoundPolicy::Sync);
+        assert_ne!(a.end_s.to_bits(), b.end_s.to_bits());
+    }
+
+    #[test]
+    fn mobile_deadline_produces_stragglers() {
+        // 60s is below the mobile slow tier's minimum possible round
+        // (download > 5.5s, train > 44s, upload > 22s at 11 Mparams /
+        // 100 samples / 44MB), so any slow-tier or offline client in the
+        // cohort must straggle.
+        let plan = plan_from_pool(9, RoundPolicy::Deadline { secs: 60.0 });
+        assert!(!plan.stragglers.is_empty(), "60s deadline on mobile should straggle");
+        let sync = plan_from_pool(9, RoundPolicy::Sync);
+        assert!(sync.stragglers.is_empty());
+        assert!(sync.end_s > plan.end_s, "sync waits longer than the deadline cut");
+    }
+}

@@ -1,0 +1,285 @@
+//! Device profiles: compute throughput, link speeds, availability,
+//! dropout — the per-client half of the fleet simulator.
+//!
+//! Profiles are sampled per client at pool construction with the same
+//! fork discipline as `DeviceMemory::sample`: every client draws from its
+//! own forked `Rng` stream, so profiles are a pure function of
+//! `(fleet profile, seed, client_id)` regardless of fleet size or draw
+//! counts elsewhere.
+//!
+//! Training time uses the artifact's parameter count as a FLOPs proxy:
+//! a device with `throughput` processes `throughput` sample·Mparam units
+//! per virtual second, so one local pass over `n` samples of an
+//! `M`-Mparam sub-model takes `n * M / throughput` seconds. This is the
+//! standard linear device model used by heterogeneity-aware FL simulators
+//! (cf. arXiv:2408.09101 §5, arXiv:2408.10826 §4).
+
+use super::trace::AvailabilityTrace;
+use crate::manifest::MemCoeffs;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Coarse device class, assigned by weighted draw at sampling time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceTier {
+    Low,
+    Mid,
+    High,
+}
+
+impl DeviceTier {
+    fn from_index(i: usize) -> Self {
+        match i {
+            0 => DeviceTier::Low,
+            1 => DeviceTier::Mid,
+            _ => DeviceTier::High,
+        }
+    }
+}
+
+/// One tier's sampling ranges. Throughput is in sample·Mparam units per
+/// virtual second; links are in MB/s.
+#[derive(Debug, Clone, Copy)]
+pub struct TierSpec {
+    pub weight: f64,
+    pub throughput: (f64, f64),
+    pub uplink_mbs: (f64, f64),
+    pub downlink_mbs: (f64, f64),
+}
+
+/// A named fleet composition: tier mix + shared availability/dropout
+/// behaviour. Resolved from `RunConfig.fleet.profile`.
+#[derive(Debug, Clone)]
+pub struct FleetProfileConfig {
+    pub name: String,
+    /// Tier specs, index-aligned with [`DeviceTier`].
+    pub tiers: Vec<TierSpec>,
+    /// Per-round probability that a dispatched client silently vanishes.
+    pub dropout_p: f64,
+    /// Availability duty cycle (`>= 1.0` = always on).
+    pub duty: f64,
+    /// Availability period (virtual seconds).
+    pub period_s: f64,
+}
+
+impl FleetProfileConfig {
+    /// Resolve a named profile: `uniform` | `mobile` | `datacenter`.
+    pub fn named(name: &str) -> Result<Self> {
+        let p = match name {
+            // Homogeneous mid-range fleet, always reachable, no dropout —
+            // the backwards-compatible default: under the `sync` policy it
+            // reproduces the pre-fleet round semantics exactly (every
+            // memory-eligible sampled client aggregates).
+            "uniform" => FleetProfileConfig {
+                name: name.into(),
+                tiers: vec![TierSpec {
+                    weight: 1.0,
+                    throughput: (80.0, 120.0),
+                    uplink_mbs: (5.0, 15.0),
+                    downlink_mbs: (10.0, 30.0),
+                }],
+                dropout_p: 0.0,
+                duty: 1.0,
+                period_s: 1.0,
+            },
+            // The paper's regime: a long tail of slow phones on slow
+            // uplinks with intermittent availability — deadline pressure
+            // bites here.
+            "mobile" => FleetProfileConfig {
+                name: name.into(),
+                tiers: vec![
+                    TierSpec {
+                        weight: 0.5,
+                        throughput: (8.0, 25.0),
+                        uplink_mbs: (0.5, 2.0),
+                        downlink_mbs: (2.0, 8.0),
+                    },
+                    TierSpec {
+                        weight: 0.35,
+                        throughput: (25.0, 80.0),
+                        uplink_mbs: (1.0, 4.0),
+                        downlink_mbs: (4.0, 16.0),
+                    },
+                    TierSpec {
+                        weight: 0.15,
+                        throughput: (80.0, 200.0),
+                        uplink_mbs: (2.0, 8.0),
+                        downlink_mbs: (8.0, 32.0),
+                    },
+                ],
+                dropout_p: 0.1,
+                duty: 0.85,
+                period_s: 900.0,
+            },
+            // Fast, wired, reliable — the degenerate case where every
+            // policy behaves like `sync`.
+            "datacenter" => FleetProfileConfig {
+                name: name.into(),
+                tiers: vec![
+                    TierSpec {
+                        weight: 0.2,
+                        throughput: (150.0, 250.0),
+                        uplink_mbs: (50.0, 120.0),
+                        downlink_mbs: (50.0, 120.0),
+                    },
+                    TierSpec {
+                        weight: 0.8,
+                        throughput: (250.0, 500.0),
+                        uplink_mbs: (50.0, 120.0),
+                        downlink_mbs: (50.0, 120.0),
+                    },
+                ],
+                dropout_p: 0.0,
+                duty: 1.0,
+                period_s: 1.0,
+            },
+            other => bail!("unknown fleet profile `{other}` (uniform|mobile|datacenter)"),
+        };
+        Ok(p)
+    }
+}
+
+/// One device's simulator-facing characteristics (sampled once per run).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub tier: DeviceTier,
+    /// sample·Mparam per virtual second.
+    pub throughput: f64,
+    /// Bytes per virtual second.
+    pub uplink_bps: f64,
+    pub downlink_bps: f64,
+    /// Per-round dropout probability once dispatched.
+    pub dropout_p: f64,
+    pub trace: AvailabilityTrace,
+}
+
+impl DeviceProfile {
+    /// Sample a client's profile from its own forked stream (see module
+    /// docs; mirrors `DeviceMemory::sample`).
+    pub fn sample(cfg: &FleetProfileConfig, rng: &mut Rng, client_id: usize) -> Self {
+        let mut r = rng.fork(0xdec1_ce00 ^ client_id as u64);
+        let total: f64 = cfg.tiers.iter().map(|t| t.weight).sum();
+        let probs: Vec<f64> = cfg.tiers.iter().map(|t| t.weight / total.max(1e-12)).collect();
+        let ti = r.categorical(&probs);
+        let spec = cfg.tiers[ti];
+        let throughput = r.uniform(spec.throughput.0, spec.throughput.1);
+        let uplink_bps = r.uniform(spec.uplink_mbs.0, spec.uplink_mbs.1) * 1e6;
+        let downlink_bps = r.uniform(spec.downlink_mbs.0, spec.downlink_mbs.1) * 1e6;
+        let trace = if cfg.duty >= 1.0 {
+            AvailabilityTrace::always_on()
+        } else {
+            AvailabilityTrace::sample(cfg.period_s, cfg.duty, &mut r)
+        };
+        DeviceProfile {
+            tier: DeviceTier::from_index(ti),
+            throughput,
+            uplink_bps,
+            downlink_bps,
+            dropout_p: cfg.dropout_p,
+            trace,
+        }
+    }
+
+    /// Virtual seconds for one local pass over `samples` of an artifact
+    /// with memory coefficients `mem` (params_total as the FLOPs proxy;
+    /// floored at 0.01 Mparam so metadata-free test artifacts still cost
+    /// nonzero time).
+    pub fn train_time_s(&self, samples: usize, mem: &MemCoeffs) -> f64 {
+        let mparams = (mem.params_total as f64 / 1e6).max(0.01);
+        samples as f64 * mparams / self.throughput.max(1e-9)
+    }
+
+    pub fn up_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.uplink_bps.max(1.0)
+    }
+
+    pub fn down_time_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.downlink_bps.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coeffs(mparams: u64) -> MemCoeffs {
+        MemCoeffs {
+            fixed_bytes: 0,
+            per_sample_bytes: 0,
+            params_total: mparams * 1_000_000,
+            params_trainable: mparams * 1_000_000,
+        }
+    }
+
+    #[test]
+    fn named_profiles_resolve() {
+        for name in ["uniform", "mobile", "datacenter"] {
+            let p = FleetProfileConfig::named(name).unwrap();
+            assert_eq!(p.name, name);
+            assert!(!p.tiers.is_empty());
+        }
+        assert!(FleetProfileConfig::named("nope").is_err());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_client_fork() {
+        let cfg = FleetProfileConfig::named("mobile").unwrap();
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for id in 0..20 {
+            let pa = DeviceProfile::sample(&cfg, &mut a, id);
+            let pb = DeviceProfile::sample(&cfg, &mut b, id);
+            assert_eq!(pa, pb, "client {id}");
+        }
+        // Different clients diverge.
+        let p0 = DeviceProfile::sample(&cfg, &mut a, 0);
+        let p1 = DeviceProfile::sample(&cfg, &mut a, 1);
+        assert_ne!(p0.throughput, p1.throughput);
+    }
+
+    #[test]
+    fn sampled_values_in_tier_ranges() {
+        let cfg = FleetProfileConfig::named("mobile").unwrap();
+        let mut rng = Rng::new(7);
+        let mut tiers_seen = std::collections::BTreeSet::new();
+        for id in 0..200 {
+            let p = DeviceProfile::sample(&cfg, &mut rng, id);
+            let spec = cfg.tiers[match p.tier {
+                DeviceTier::Low => 0,
+                DeviceTier::Mid => 1,
+                DeviceTier::High => 2,
+            }];
+            assert!(p.throughput >= spec.throughput.0 && p.throughput < spec.throughput.1);
+            assert!(p.uplink_bps >= spec.uplink_mbs.0 * 1e6);
+            assert!(p.downlink_bps >= spec.downlink_mbs.0 * 1e6);
+            tiers_seen.insert(format!("{:?}", p.tier));
+        }
+        assert!(tiers_seen.len() >= 2, "mobile fleet should mix tiers");
+    }
+
+    #[test]
+    fn train_time_scales_with_model_and_samples() {
+        let cfg = FleetProfileConfig::named("uniform").unwrap();
+        let mut rng = Rng::new(9);
+        let p = DeviceProfile::sample(&cfg, &mut rng, 0);
+        let small = p.train_time_s(100, &coeffs(1));
+        let big = p.train_time_s(100, &coeffs(10));
+        let more = p.train_time_s(200, &coeffs(1));
+        assert!(big > small * 9.0);
+        assert!((more - 2.0 * small).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_times_follow_link_speeds() {
+        let p = DeviceProfile {
+            tier: DeviceTier::Mid,
+            throughput: 100.0,
+            uplink_bps: 1e6,
+            downlink_bps: 2e6,
+            dropout_p: 0.0,
+            trace: AvailabilityTrace::always_on(),
+        };
+        assert!((p.up_time_s(2_000_000) - 2.0).abs() < 1e-9);
+        assert!((p.down_time_s(2_000_000) - 1.0).abs() < 1e-9);
+    }
+}

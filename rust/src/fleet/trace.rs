@@ -1,0 +1,117 @@
+//! Availability traces: when is a device reachable for dispatch?
+//!
+//! Devices follow a per-client periodic on/off square wave (charging /
+//! screen-off windows in the mobile profile): within each `period_s`
+//! window the device is online for the first `duty` fraction, shifted by
+//! a client-specific `phase_s` sampled at fleet construction. The trace
+//! gates *dispatch* only — a device that goes offline mid-round is
+//! modelled by the dropout probability instead, which keeps the event
+//! algebra simple while still producing realistic cohort skew.
+
+use crate::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AvailabilityTrace {
+    /// On/off cycle length (virtual seconds).
+    pub period_s: f64,
+    /// Fraction of each period the device is online; `>= 1.0` = always on.
+    pub duty: f64,
+    /// Per-client phase offset into the cycle.
+    pub phase_s: f64,
+}
+
+impl AvailabilityTrace {
+    /// A device that never leaves the fleet (uniform/datacenter profiles).
+    pub fn always_on() -> Self {
+        AvailabilityTrace { period_s: 1.0, duty: 1.0, phase_s: 0.0 }
+    }
+
+    /// Sample a client's trace: fixed period/duty, random phase.
+    pub fn sample(period_s: f64, duty: f64, rng: &mut Rng) -> Self {
+        let phase_s = rng.uniform(0.0, period_s.max(1e-9));
+        AvailabilityTrace { period_s, duty, phase_s }
+    }
+
+    /// Position inside the current cycle at virtual time `t`.
+    fn cycle_pos(&self, t: f64) -> f64 {
+        (t + self.phase_s).rem_euclid(self.period_s)
+    }
+
+    pub fn is_online(&self, t: f64) -> bool {
+        if self.duty >= 1.0 {
+            return true;
+        }
+        if self.duty <= 0.0 {
+            return false;
+        }
+        self.cycle_pos(t) < self.duty * self.period_s
+    }
+
+    /// Earliest time `>= t` at which the device is online. A zero-duty
+    /// trace returns `f64::INFINITY` (the client can never be dispatched;
+    /// deadline policies turn it into a straggler).
+    pub fn next_online(&self, t: f64) -> f64 {
+        if self.duty >= 1.0 {
+            return t;
+        }
+        if self.duty <= 0.0 {
+            return f64::INFINITY;
+        }
+        if self.is_online(t) {
+            t
+        } else {
+            t + (self.period_s - self.cycle_pos(t))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_on_is_always_on() {
+        let tr = AvailabilityTrace::always_on();
+        for t in [0.0, 17.3, 1e9] {
+            assert!(tr.is_online(t));
+            assert_eq!(tr.next_online(t), t);
+        }
+    }
+
+    #[test]
+    fn duty_cycle_toggles() {
+        // period 100, duty 0.6, phase 0: online on [0,60), offline [60,100).
+        let tr = AvailabilityTrace { period_s: 100.0, duty: 0.6, phase_s: 0.0 };
+        assert!(tr.is_online(0.0));
+        assert!(tr.is_online(59.9));
+        assert!(!tr.is_online(60.0));
+        assert!(!tr.is_online(99.9));
+        assert!(tr.is_online(100.0));
+    }
+
+    #[test]
+    fn next_online_jumps_to_cycle_start() {
+        let tr = AvailabilityTrace { period_s: 100.0, duty: 0.6, phase_s: 0.0 };
+        assert_eq!(tr.next_online(30.0), 30.0);
+        assert!((tr.next_online(75.0) - 100.0).abs() < 1e-9);
+        assert!((tr.next_online(175.0) - 200.0).abs() < 1e-9);
+        assert!(tr.is_online(tr.next_online(75.0)));
+    }
+
+    #[test]
+    fn zero_duty_never_online() {
+        let tr = AvailabilityTrace { period_s: 100.0, duty: 0.0, phase_s: 0.0 };
+        assert!(!tr.is_online(5.0));
+        assert_eq!(tr.next_online(5.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn sampled_phase_in_period_and_deterministic() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let ta = AvailabilityTrace::sample(600.0, 0.8, &mut a);
+        let tb = AvailabilityTrace::sample(600.0, 0.8, &mut b);
+        assert_eq!(ta, tb);
+        assert!((0.0..600.0).contains(&ta.phase_s));
+    }
+}

@@ -13,24 +13,41 @@ use std::io::Write;
 use std::path::PathBuf;
 
 /// Parse the standard example flags: --profile fast|smoke|paper,
-/// --alpha <f64>, --seed, --models a,b,c (model tags).
+/// --alpha <f64>, --seed, --models a,b,c (model tags), plus the fleet
+/// flags (--round-policy, --deadline-s, --over-select, --fleet-profile,
+/// --dropout).
 pub struct ExpOpts {
     pub profile: String,
     pub alpha: Option<f64>,
     pub seed: Option<u64>,
     pub models: Option<Vec<String>>,
     pub rounds: Option<usize>,
+    pub round_policy: Option<String>,
+    pub deadline_s: Option<f64>,
+    pub over_select: Option<usize>,
+    pub fleet_profile: Option<String>,
+    pub dropout_p: Option<f64>,
 }
 
 impl ExpOpts {
     pub fn from_env() -> Result<Self> {
-        let args = Args::parse(std::env::args().skip(1))?;
+        Self::from_args(&Args::parse(std::env::args().skip(1))?)
+    }
+
+    /// Build from an already-parsed `Args` (examples that also read their
+    /// own flags parse argv once and share it).
+    pub fn from_args(args: &Args) -> Result<Self> {
         Ok(ExpOpts {
             profile: args.get_or("profile", "fast").to_string(),
             alpha: args.parse_opt("alpha")?,
             seed: args.parse_opt("seed")?,
             models: args.get("models").map(|s| s.split(',').map(String::from).collect()),
             rounds: args.parse_opt("rounds")?,
+            round_policy: args.get("round-policy").map(String::from),
+            deadline_s: args.parse_opt("deadline-s")?,
+            over_select: args.parse_opt("over-select")?,
+            fleet_profile: args.get("fleet-profile").map(String::from),
+            dropout_p: args.parse_opt("dropout")?,
         })
     }
 
@@ -48,6 +65,19 @@ impl ExpOpts {
             cfg.max_rounds_total = r;
             cfg.max_rounds_per_step = (r / 4).max(4);
         }
+        if let Some(p) = &self.round_policy {
+            cfg.fleet.round_policy = p.clone();
+        }
+        if let Some(d) = self.deadline_s {
+            cfg.fleet.deadline_s = d;
+        }
+        if let Some(k) = self.over_select {
+            cfg.fleet.over_select_extra = k;
+        }
+        if let Some(f) = &self.fleet_profile {
+            cfg.fleet.profile = f.clone();
+        }
+        cfg.fleet.dropout_p = self.dropout_p.or(cfg.fleet.dropout_p);
         cfg
     }
 }
@@ -63,13 +93,14 @@ pub fn results_dir() -> PathBuf {
 pub fn fmt_row(s: &RunSummary) -> String {
     let acc = if s.final_acc.is_nan() { "   NA ".to_string() } else { format!("{:5.1}%", s.final_acc * 100.0) };
     format!(
-        "{:<14} {:<10} {:>6}  PR={:>4.0}%  peak={:>6.1}MB  comm={:>8.1}MB",
+        "{:<14} {:<10} {:>6}  PR={:>4.0}%  peak={:>6.1}MB  comm={:>8.1}MB  sim={:>8.0}s",
         s.method,
         s.partition,
         acc,
         s.participation_rate * 100.0,
         s.peak_client_mem as f64 / 1e6,
         s.comm_total() as f64 / 1e6,
+        s.sim_time_s,
     )
 }
 
@@ -138,10 +169,24 @@ mod tests {
 
     #[test]
     fn cfg_profiles() {
-        let o = ExpOpts { profile: "smoke".into(), alpha: Some(0.5), seed: Some(7), models: None, rounds: None };
+        let o = ExpOpts {
+            profile: "smoke".into(),
+            alpha: Some(0.5),
+            seed: Some(7),
+            models: None,
+            rounds: None,
+            round_policy: Some("deadline".into()),
+            deadline_s: Some(90.0),
+            over_select: None,
+            fleet_profile: Some("mobile".into()),
+            dropout_p: None,
+        };
         let c = o.cfg("m");
         assert_eq!(c.seed, 7);
         assert_eq!(c.dirichlet_alpha, Some(0.5));
         assert!(c.num_clients <= 20);
+        assert_eq!(c.fleet.round_policy, "deadline");
+        assert_eq!(c.fleet.deadline_s, 90.0);
+        assert_eq!(c.fleet.profile, "mobile");
     }
 }

@@ -8,6 +8,16 @@
 //!   selection, progressive shrink/grow scheduling, block freezing
 //!   determination (effective movement), FedAvg aggregation, all
 //!   baselines, metrics. Python never runs on the round path.
+//! * **L3 fleet simulator (`fleet`)** — a deterministic discrete-event
+//!   engine (virtual clock + binary-heap event queue) behind every train
+//!   round: each client carries a [`fleet::DeviceProfile`] (compute
+//!   throughput, link speeds, availability trace, dropout), rounds
+//!   dispatch their cohort as events, and a [`fleet::RoundPolicy`]
+//!   (`sync` wait-for-all / `deadline{secs}` cut stragglers /
+//!   `over-select{k}` keep first finishers) decides who aggregates.
+//!   Summaries report simulated time-to-accuracy (`sim_time_s`,
+//!   stragglers, dropouts) alongside accuracy/memory/comm. CLI:
+//!   `--round-policy`, `--deadline-s`, `--fleet-profile`.
 //! * **L2/L1 (`python/compile`)** — JAX block models + Pallas kernels,
 //!   AOT-lowered once to HLO-text artifacts (`make artifacts`).
 //! * **Runtime bridge** — [`runtime::Runtime`] loads the artifacts through
@@ -30,6 +40,7 @@ pub mod clients;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod freezing;
 pub mod harness;
 pub mod json;

@@ -35,6 +35,13 @@ COMMON OPTIONS:
   --method <name>     run only: profl | profl-noshrink | paramaware |
                       allsmall | exclusivefl | heterofl | depthfl
   --csv <path>        run only: write per-round CSV
+
+FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
+  --round-policy <p>  sync | deadline[:S] | over-select[:K] [default: sync]
+  --deadline-s <f64>  Deadline (virtual s) for the deadline policy
+  --over-select <k>   Extra clients sampled under over-select
+  --fleet-profile <p> uniform | mobile | datacenter  [default: uniform]
+  --dropout <f64>     Per-round dropout probability override
 ";
 
 fn make_cfg(args: &Args) -> Result<RunConfig> {
@@ -52,12 +59,29 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     if let Some(r) = args.parse_opt("rounds")? {
         cfg.max_rounds_total = r;
     }
+    if let Some(p) = args.get("round-policy") {
+        cfg.fleet.round_policy = p.into();
+    }
+    if let Some(d) = args.parse_opt("deadline-s")? {
+        cfg.fleet.deadline_s = d;
+    }
+    if let Some(k) = args.parse_opt("over-select")? {
+        cfg.fleet.over_select_extra = k;
+    }
+    if let Some(f) = args.get("fleet-profile") {
+        cfg.fleet.profile = f.into();
+    }
+    cfg.fleet.dropout_p = args.parse_opt("dropout")?.or(cfg.fleet.dropout_p);
+    // Fail fast on bad fleet spellings (before artifacts load).
+    cfg.round_policy()?;
+    cfg.fleet_profile()?;
     Ok(cfg)
 }
 
 fn print_summary(s: &profl::RunSummary) {
+    let (stragglers, dropouts) = s.fleet_losses();
     println!(
-        "{:<14} {:<22} {:<14} acc={:>6.2}%  PR={:>5.1}%  peak_mem={:>6.1}MB  comm={:>8.1}MB  rounds={}",
+        "{:<14} {:<22} {:<14} acc={:>6.2}%  PR={:>5.1}%  peak_mem={:>6.1}MB  comm={:>8.1}MB  rounds={}  sim_time={:.0}s (stragglers={} dropouts={})",
         s.method,
         s.model_tag,
         s.partition,
@@ -65,7 +89,10 @@ fn print_summary(s: &profl::RunSummary) {
         s.participation_rate * 100.0,
         s.peak_client_mem as f64 / 1e6,
         s.comm_total() as f64 / 1e6,
-        s.rounds
+        s.rounds,
+        s.sim_time_s,
+        stragglers,
+        dropouts
     );
 }
 

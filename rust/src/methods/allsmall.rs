@@ -87,6 +87,7 @@ impl Method for AllSmall {
             total_bytes_up: up,
             total_bytes_down: down,
             rounds: ctx.round,
+            sim_time_s: ctx.sim_time_s,
             history: ctx.metrics.records.clone(),
         })
     }

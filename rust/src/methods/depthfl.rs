@@ -34,8 +34,11 @@ impl Method for DepthFL {
 
         // Depth options ascending: depth d needs depthfl_train_d{d}.
         let mut mems = Vec::new();
+        let mut depth_bytes = Vec::new();
         for d in 1..=num_blocks {
-            mems.push(model.artifact(&format!("depthfl_train_d{d}"))?.participation_mem());
+            let art = model.artifact(&format!("depthfl_train_d{d}"))?;
+            mems.push(art.participation_mem());
+            depth_bytes.push(art.trainable_bytes());
         }
         let assignment = ctx.pool.capability_assignment(&mems);
         let pr = assignment.iter().filter(|a| a.is_some()).count() as f64 / assignment.len() as f64;
@@ -51,6 +54,7 @@ impl Method for DepthFL {
                 total_bytes_up: 0,
                 total_bytes_down: 0,
                 rounds: 0,
+                sim_time_s: 0.0,
                 history: Vec::new(),
             });
         }
@@ -58,7 +62,19 @@ impl Method for DepthFL {
         let zero = MemCoeffs::default();
         ctx.bump_prefix_version();
         for round in 0..ctx.cfg.max_rounds_total {
-            let sel = ctx.pool.select(ctx.cfg.per_round, &zero);
+            let sel = ctx.pool.select(ctx.sample_size(), &zero);
+            // Fleet dispatch: a client's depth sets its FLOPs proxy and
+            // comm bytes; the round policy trims the cohort.
+            let mut works = Vec::new();
+            for &cid in &sel.trainers {
+                let Some(di) = assignment[cid] else { continue };
+                works.push(ctx.client_work(cid, &mems[di], depth_bytes[di], depth_bytes[di]));
+            }
+            let plan = ctx.run_fleet(&works);
+            // Selection-order aggregation (see coordinator::round).
+            let completers: Vec<usize> =
+                sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
+
             let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
             // Per-parameter weighted accumulation: clients contribute only
             // the parameters their depth covers.
@@ -68,7 +84,7 @@ impl Method for DepthFL {
             let (mut loss_sum, mut w_sum) = (0.0f64, 0.0f64);
             let mut mem_peak = 0u64;
 
-            for &cid in &sel.trainers {
+            for &cid in &completers {
                 let Some(di) = assignment[cid] else { continue };
                 let d = di + 1;
                 let art = ctx.rt.load(&ctx.cfg.model_tag.clone(), &format!("depthfl_train_d{d}"))?;
@@ -121,12 +137,14 @@ impl Method for DepthFL {
             };
             let out = crate::coordinator::RoundOutcome {
                 mean_loss: if w_sum > 0.0 { (loss_sum / w_sum) as f32 } else { f32::NAN },
-                mean_acc: f32::NAN,
                 participants,
-                fallback: 0,
                 bytes_up,
                 bytes_down,
                 client_mem_bytes: mem_peak,
+                sim_time_s: plan.duration_s(),
+                stragglers: plan.stragglers.len(),
+                dropouts: plan.dropouts.len(),
+                ..Default::default()
             };
             ctx.record_round("depthfl", 0, &out, test_acc, f64::NAN);
         }
@@ -142,6 +160,7 @@ impl Method for DepthFL {
             total_bytes_up: up,
             total_bytes_down: down,
             rounds: ctx.round,
+            sim_time_s: ctx.sim_time_s,
             history: ctx.metrics.records.clone(),
         })
     }

@@ -40,6 +40,7 @@ impl Method for ExclusiveFL {
                 total_bytes_up: 0,
                 total_bytes_down: 0,
                 rounds: 0,
+                sim_time_s: 0.0,
                 history: Vec::new(),
             });
         }
@@ -68,6 +69,7 @@ impl Method for ExclusiveFL {
             total_bytes_up: up,
             total_bytes_down: down,
             rounds: ctx.round,
+            sim_time_s: ctx.sim_time_s,
             history: ctx.metrics.records.clone(),
         })
     }

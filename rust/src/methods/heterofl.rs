@@ -42,14 +42,15 @@ impl Method for HeteroFL {
         let scan = rt.manifest.scan_steps;
         let batch = rt.manifest.train_batch;
 
-        // Resolve each ratio's tag + memory need (ascending order).
-        let mut options: Vec<(String, MemCoeffs)> = Vec::new();
+        // Resolve each ratio's tag + memory need + comm bytes (ascending).
+        let mut options: Vec<(String, MemCoeffs, u64)> = Vec::new();
         for &r in &self.ratios {
             let tag = Manifest::ratio_tag(&cfg.model_tag, r);
             let model = rt.model(&tag).with_context(|| format!("HeteroFL needs ratio tag {tag}"))?;
-            options.push((tag, model.artifact("train_full")?.participation_mem()));
+            let art = model.artifact("train_full")?;
+            options.push((tag, art.participation_mem(), art.trainable_bytes()));
         }
-        let mems: Vec<MemCoeffs> = options.iter().map(|(_, m)| *m).collect();
+        let mems: Vec<MemCoeffs> = options.iter().map(|(_, m, _)| *m).collect();
         let assignment = ctx.pool.capability_assignment(&mems);
         let pr = assignment.iter().filter(|a| a.is_some()).count() as f64 / assignment.len() as f64;
 
@@ -61,7 +62,20 @@ impl Method for HeteroFL {
 
         ctx.bump_prefix_version();
         for round in 0..ctx.cfg.max_rounds_total {
-            let sel = ctx.pool.select(ctx.cfg.per_round, &zero); // uniform sample
+            let sel = ctx.pool.select(ctx.sample_size(), &zero); // uniform sample
+            // Fleet dispatch: each assigned client's variant sets its FLOPs
+            // proxy and comm bytes; the round policy trims the cohort.
+            let mut works = Vec::new();
+            for &cid in &sel.trainers {
+                let Some(opt_i) = assignment[cid] else { continue }; // too small: dropped
+                let (_, mem, tr_b) = &options[opt_i];
+                works.push(ctx.client_work(cid, mem, *tr_b, *tr_b));
+            }
+            let plan = ctx.run_fleet(&works);
+            // Selection-order aggregation (see coordinator::round).
+            let completers: Vec<usize> =
+                sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
+
             let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
             let mut agg = SlicedAggregator::new(&trainable, &ctx.store)?;
             let mut participants = 0usize;
@@ -69,9 +83,9 @@ impl Method for HeteroFL {
             let (mut loss_sum, mut w_sum) = (0.0f64, 0.0f64);
             let mut mem_peak = 0u64;
 
-            for &cid in &sel.trainers {
-                let Some(opt_i) = assignment[cid] else { continue }; // too small: dropped
-                let (tag, mem) = &options[opt_i];
+            for &cid in &completers {
+                let Some(opt_i) = assignment[cid] else { continue };
+                let (tag, mem, _) = &options[opt_i];
                 let art = ctx.rt.load(tag, "train_full")?;
 
                 // Slice the full global model down to this variant's shapes.
@@ -126,12 +140,14 @@ impl Method for HeteroFL {
             };
             let out = crate::coordinator::RoundOutcome {
                 mean_loss: if w_sum > 0.0 { (loss_sum / w_sum) as f32 } else { f32::NAN },
-                mean_acc: f32::NAN,
                 participants,
-                fallback: 0,
                 bytes_up,
                 bytes_down,
                 client_mem_bytes: mem_peak,
+                sim_time_s: plan.duration_s(),
+                stragglers: plan.stragglers.len(),
+                dropouts: plan.dropouts.len(),
+                ..Default::default()
             };
             ctx.record_round("heterofl", 0, &out, test_acc, f64::NAN);
         }
@@ -147,6 +163,7 @@ impl Method for HeteroFL {
             total_bytes_up: up,
             total_bytes_down: down,
             rounds: ctx.round,
+            sim_time_s: ctx.sim_time_s,
             history: ctx.metrics.records.clone(),
         })
     }

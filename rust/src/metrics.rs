@@ -24,6 +24,13 @@ pub struct RoundRecord {
     pub bytes_down: u64,
     /// Analytical peak client memory for this round's artifact (bytes).
     pub client_mem_bytes: u64,
+    /// Cumulative virtual fleet time at the end of this round (seconds);
+    /// the x-axis of time-to-accuracy curves.
+    pub sim_time_s: f64,
+    /// Clients cut by the round policy (deadline/over-select).
+    pub stragglers: usize,
+    /// Clients that dropped out after dispatch.
+    pub dropouts: usize,
 }
 
 /// Whole-run result: what the table benches consume.
@@ -41,12 +48,30 @@ pub struct RunSummary {
     pub total_bytes_up: u64,
     pub total_bytes_down: u64,
     pub rounds: usize,
+    /// Total virtual fleet time consumed by the run (seconds).
+    pub sim_time_s: f64,
     pub history: Vec<RoundRecord>,
 }
 
 impl RunSummary {
     pub fn comm_total(&self) -> u64 {
         self.total_bytes_up + self.total_bytes_down
+    }
+
+    /// Simulated time-to-accuracy: virtual seconds until the first eval
+    /// reaching `target` (None if the run never got there).
+    pub fn time_to_acc(&self, target: f64) -> Option<f64> {
+        self.history
+            .iter()
+            .find(|r| !r.test_acc.is_nan() && r.test_acc as f64 >= target)
+            .map(|r| r.sim_time_s)
+    }
+
+    /// Total stragglers/dropouts across the run's history.
+    pub fn fleet_losses(&self) -> (usize, usize) {
+        let s = self.history.iter().map(|r| r.stragglers).sum();
+        let d = self.history.iter().map(|r| r.dropouts).sum();
+        (s, d)
     }
 }
 
@@ -98,6 +123,11 @@ impl MetricsSink {
         self.records.iter().map(|r| r.client_mem_bytes).max().unwrap_or(0)
     }
 
+    /// Virtual fleet time at the last recorded round (seconds).
+    pub fn total_sim_time(&self) -> f64 {
+        self.records.last().map(|r| r.sim_time_s).unwrap_or(0.0)
+    }
+
     /// Write the full history as CSV (Fig 4/5/6 inputs).
     pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
@@ -106,12 +136,12 @@ impl MetricsSink {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes"
+            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.stage,
                 r.step,
@@ -123,7 +153,10 @@ impl MetricsSink {
                 r.fallback_participants,
                 r.bytes_up,
                 r.bytes_down,
-                r.client_mem_bytes
+                r.client_mem_bytes,
+                r.sim_time_s,
+                r.stragglers,
+                r.dropouts
             )?;
         }
         Ok(())
@@ -148,6 +181,9 @@ mod tests {
             bytes_up: up,
             bytes_down: up,
             client_mem_bytes: round as u64 * 100,
+            sim_time_s: round as f64 * 30.0,
+            stragglers: 1,
+            dropouts: 0,
         }
     }
 
@@ -177,6 +213,31 @@ mod tests {
         m.push(rec(2, 0.6, 50));
         assert_eq!(m.total_bytes(), (150, 150));
         assert_eq!(m.peak_client_mem(), 200);
+    }
+
+    #[test]
+    fn sim_time_and_time_to_acc() {
+        let mut m = MetricsSink::new();
+        for i in 1..=4 {
+            m.push(rec(i, if i >= 3 { 0.6 } else { 0.1 }, 1));
+        }
+        assert_eq!(m.total_sim_time(), 120.0);
+        let s = RunSummary {
+            method: "t".into(),
+            model_tag: "m".into(),
+            partition: "IID".into(),
+            final_acc: 0.6,
+            participation_rate: 1.0,
+            peak_client_mem: 0,
+            total_bytes_up: 0,
+            total_bytes_down: 0,
+            rounds: 4,
+            sim_time_s: m.total_sim_time(),
+            history: m.records.clone(),
+        };
+        assert_eq!(s.time_to_acc(0.5), Some(90.0));
+        assert_eq!(s.time_to_acc(0.9), None);
+        assert_eq!(s.fleet_losses(), (4, 0));
     }
 
     #[test]

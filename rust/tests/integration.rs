@@ -180,6 +180,49 @@ fn heterofl_memory_collapse_on_big_model() {
 }
 
 #[test]
+fn fleet_sync_round_advances_virtual_time_deterministically() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut a = ServerCtx::new(&rt, tiny()).unwrap();
+    let mut b = ServerCtx::new(&rt, tiny()).unwrap();
+    let oa = a.run_train_round("train_t2", None, 0.05, "t", 2).unwrap();
+    let ob = b.run_train_round("train_t2", None, 0.05, "t", 2).unwrap();
+    assert!(oa.sim_time_s > 0.0, "sync round must cost virtual time");
+    assert_eq!(oa.sim_time_s.to_bits(), ob.sim_time_s.to_bits(), "non-deterministic sim time");
+    assert_eq!(a.sim_time_s.to_bits(), b.sim_time_s.to_bits());
+    // Default fleet (uniform/sync/no dropout): nobody is lost.
+    assert_eq!((oa.stragglers, oa.dropouts), (0, 0));
+}
+
+#[test]
+fn fleet_deadline_policy_cuts_mobile_stragglers() {
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut cfg = tiny();
+    // Whole fleet sampled; ~15% of mobile devices are offline at t=0 and
+    // only return after the availability period, so a short deadline is
+    // guaranteed to cut somebody.
+    cfg.num_clients = 30;
+    cfg.per_round = 30;
+    cfg.fleet.profile = "mobile".into();
+    cfg.fleet.round_policy = "deadline".into();
+    cfg.fleet.deadline_s = 2.0;
+    cfg.fleet.dropout_p = Some(0.0); // isolate straggling from dropout
+    let mut ctx = ServerCtx::new(&rt, cfg.clone()).unwrap();
+    let out = ctx.run_train_round("train_t1", None, 0.05, "t", 1).unwrap();
+    assert!(out.stragglers > 0, "2s deadline on a mobile fleet should cut somebody");
+    assert!(out.sim_time_s <= 2.0 + 1e-9, "round cannot outlive its deadline");
+
+    // The same fleet under sync keeps everyone and takes at least as long.
+    cfg.fleet.round_policy = "sync".into();
+    let mut sync_ctx = ServerCtx::new(&rt, cfg).unwrap();
+    let sync_out = sync_ctx.run_train_round("train_t1", None, 0.05, "t", 1).unwrap();
+    assert_eq!(sync_out.stragglers, 0);
+    assert!(sync_out.participants >= out.participants);
+    assert!(sync_out.sim_time_s >= out.sim_time_s);
+}
+
+#[test]
 fn comm_accounting_prefix_cached_after_first_download() {
     let dir = require_artifacts!();
     let rt = Runtime::new(&dir).unwrap();
