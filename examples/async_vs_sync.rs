@@ -1,0 +1,107 @@
+//! Async vs. sync — time-to-accuracy under FedBuff-style buffering.
+//!
+//! Runs every Table-1 method three times through the discrete-event
+//! fleet simulator on the `mobile` device profile — under `sync` (wait
+//! for the slowest device), `deadline` (cut stragglers and discard
+//! their work), and `async` (close the round at the `buffer_k`-th
+//! arrival, keep straggler uploads in flight, merge them on arrival
+//! with staleness-discounted weights) — and reports simulated
+//! time-to-target-accuracy alongside straggler/late-merge counts.
+//! Everything is seeded: with a fixed seed the output is byte-identical
+//! across runs.
+//!
+//!   cargo run --release --example async_vs_sync
+//!   cargo run --release --example async_vs_sync -- --profile smoke \
+//!       --buffer-k 5 --staleness-alpha 0.5 --target 0.25
+//!
+//! The degenerate configuration (`--buffer-k` = per_round,
+//! `--staleness-alpha 0`) reproduces the sync rows bit for bit — see
+//! the lib.rs sync-degeneracy guarantee.
+
+use anyhow::Result;
+use profl::cli::Args;
+use profl::harness::{save_text, ExpOpts};
+use profl::methods::table_methods;
+use profl::Runtime;
+
+fn fmt_time(secs: f64) -> String {
+    if secs >= 3600.0 {
+        format!("{:.1}h", secs / 3600.0)
+    } else {
+        format!("{:.0}s", secs)
+    }
+}
+
+fn main() -> Result<()> {
+    // One argv parse shared by the harness options and the example's own
+    // --target flag.
+    let args = Args::parse(std::env::args().skip(1))?;
+    let mut opts = ExpOpts::from_args(&args)?;
+    // Fleet-stressed defaults (overridable): heterogeneous mobile fleet.
+    if opts.fleet_profile.is_none() {
+        opts.fleet_profile = Some("mobile".into());
+    }
+    let target: f64 = args.parse_opt("target")?.unwrap_or(0.3);
+
+    let rt = Runtime::new(&profl::artifacts_dir())?;
+    let model = opts
+        .models
+        .clone()
+        .and_then(|m| m.first().cloned())
+        .unwrap_or_else(|| "resnet18_w8_c10".into());
+
+    let probe = opts.cfg(&model);
+    // Semi-synchronous default: close at half the cohort (a full buffer
+    // would just be sync). Overridable with --buffer-k.
+    let buffer_k = probe.fleet.buffer_k.unwrap_or((probe.per_round / 2).max(1));
+
+    let mut out = String::from("Async vs sync — FedBuff-style buffering on a heterogeneous fleet\n");
+    out.push_str(&format!(
+        "model={model} fleet={} deadline={}s buffer_k={} alpha={} max_staleness={} \
+         target_acc={:.0}% seed={}\n\n",
+        opts.fleet_profile.as_deref().unwrap_or("uniform"),
+        probe.fleet.deadline_s,
+        buffer_k,
+        probe.fleet.staleness_alpha,
+        probe.fleet.max_staleness,
+        target * 100.0,
+        probe.seed,
+    ));
+    out.push_str(&format!(
+        "{:<14} {:<10} {:>6}  {:>10}  {:>10}  {:>10} {:>11}  {}\n",
+        "method", "policy", "acc", "sim_time", "t@target", "stragglers", "late_merged", "rounds"
+    ));
+
+    for m in table_methods() {
+        for policy in ["sync", "deadline", "async"] {
+            let mut cfg = opts.cfg(&model);
+            cfg.fleet.round_policy = policy.into();
+            if policy == "async" {
+                cfg.fleet.buffer_k = Some(buffer_k);
+            }
+            let s = m.run(&rt, &cfg)?;
+            let acc = if s.final_acc.is_nan() {
+                "    NA".to_string()
+            } else {
+                format!("{:5.1}%", s.final_acc * 100.0)
+            };
+            let tta = s.time_to_acc(target).map(fmt_time).unwrap_or_else(|| "never".into());
+            let (stragglers, _dropouts) = s.fleet_losses();
+            out.push_str(&format!(
+                "{:<14} {:<10} {:>6}  {:>10}  {:>10}  {:>10} {:>11}  {}\n",
+                s.method,
+                policy,
+                acc,
+                fmt_time(s.sim_time_s),
+                tta,
+                stragglers,
+                s.late_merges(),
+                s.rounds,
+            ));
+        }
+    }
+
+    print!("{out}");
+    save_text("async_vs_sync", &out)?;
+    Ok(())
+}

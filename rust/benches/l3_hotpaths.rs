@@ -44,7 +44,7 @@ fn main() {
 
     // ---- HeteroFL sliced aggregation ---------------------------------------
     let shapes: Vec<Vec<usize>> = (0..16).map(|_| vec![3, 3, 64, 64]).collect();
-    let sub_shapes: Vec<Vec<usize>> = shapes.iter().map(|s| vec![3, 3, 32, 32]).collect();
+    let sub_shapes: Vec<Vec<usize>> = shapes.iter().map(|_| vec![3, 3, 32, 32]).collect();
     let shapes_map: BTreeMap<String, Vec<usize>> =
         shapes.iter().enumerate().map(|(i, s)| (format!("c{i:02}"), s.clone())).collect();
     let cnames: Vec<String> = shapes_map.keys().cloned().collect();

@@ -5,9 +5,24 @@
 //! updates are corner-scattered into the full tensor with per-position
 //! weight normalization (`SlicedAggregator`) — positions no client
 //! covered keep the previous global value, exactly HeteroFL's rule.
+//! Async path: [`BufferedAggregator`] adds FedBuff-style
+//! staleness-discounted merging on top of the standard accumulator and
+//! can `finish` after any `buffer_k` arrivals instead of a fixed cohort.
+//!
+//! Every `finish` hard-fails on a zero total weight: in release builds a
+//! zero-weight cohort would otherwise multiply the store by `inf` and
+//! silently NaN-corrupt every global parameter.
 
 use crate::store::{ParamStore, Tensor};
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+/// FedBuff-style staleness discount: an update dispatched `staleness`
+/// rounds ago keeps `1 / (1 + staleness)^alpha` of its sample weight.
+/// `alpha = 0` (or `staleness = 0`) is exactly 1.0, bit-for-bit — the
+/// degeneracy the async round policy's sync-equivalence relies on.
+pub fn staleness_discount(staleness: usize, alpha: f64) -> f64 {
+    1.0 / (1.0 + staleness as f64).powf(alpha)
+}
 
 /// In-place weighted-average accumulator over a fixed parameter list.
 pub struct Aggregator {
@@ -45,9 +60,12 @@ impl Aggregator {
         self.total_weight += weight;
     }
 
-    /// Normalize and write back into the store.
+    /// Normalize and write back into the store. Fails on a zero total
+    /// weight instead of scaling the store by `inf`.
     pub fn finish(self, store: &mut ParamStore) -> Result<()> {
-        debug_assert!(self.total_weight > 0.0, "aggregating zero clients");
+        if self.total_weight <= 0.0 {
+            bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
+        }
         let inv = 1.0 / self.total_weight as f32;
         for ((name, mut a), shape) in self.names.into_iter().zip(self.acc).zip(self.shapes) {
             for x in &mut a {
@@ -58,8 +76,70 @@ impl Aggregator {
         Ok(())
     }
 
-    pub fn clients_added(&self) -> f64 {
+    /// Total sample weight accumulated so far (NOT a client count: `add`
+    /// weights are shard sample counts).
+    pub fn total_weight(&self) -> f64 {
         self.total_weight
+    }
+}
+
+/// FedBuff-style buffered accumulator (async round policy): updates merge
+/// on arrival with a staleness-discounted weight
+/// (`w / (1 + staleness)^alpha`), and the buffer is ready to `finish`
+/// after any `buffer_k` arrivals — there is no fixed cohort.
+///
+/// Internally this composes the plain [`Aggregator`], so a merge at
+/// staleness 0 (discount exactly 1.0) is arithmetically identical to the
+/// synchronous FedAvg path, bit for bit.
+pub struct BufferedAggregator {
+    inner: Aggregator,
+    alpha: f64,
+    merged: usize,
+    staleness_sum: usize,
+}
+
+impl BufferedAggregator {
+    pub fn new(names: &[String], store: &ParamStore, alpha: f64) -> Result<Self> {
+        let inner = Aggregator::new(names, store)?;
+        Ok(BufferedAggregator { inner, alpha, merged: 0, staleness_sum: 0 })
+    }
+
+    /// Merge one update that was dispatched `staleness` rounds ago.
+    pub fn add<T: AsRef<[f32]>>(&mut self, tensors: &[T], weight: f64, staleness: usize) {
+        let w = weight * staleness_discount(staleness, self.alpha);
+        self.inner.add(tensors, w);
+        self.merged += 1;
+        self.staleness_sum += staleness;
+    }
+
+    /// Number of updates merged so far.
+    pub fn merged(&self) -> usize {
+        self.merged
+    }
+
+    /// Mean staleness (rounds) of the merged updates; 0.0 when empty.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.merged == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.merged as f64
+        }
+    }
+
+    /// FedBuff's trigger: the server may aggregate once `buffer_k`
+    /// updates have arrived, regardless of who they came from.
+    pub fn ready(&self, buffer_k: usize) -> bool {
+        self.merged >= buffer_k
+    }
+
+    /// Total (discounted) weight accumulated so far.
+    pub fn total_weight(&self) -> f64 {
+        self.inner.total_weight()
+    }
+
+    /// Normalize and write back; fails on a zero-weight buffer.
+    pub fn finish(self, store: &mut ParamStore) -> Result<()> {
+        self.inner.finish(store)
     }
 }
 
@@ -69,6 +149,7 @@ pub struct SlicedAggregator {
     full_shapes: Vec<Vec<usize>>,
     acc: Vec<Vec<f32>>,
     wacc: Vec<Vec<f32>>,
+    total_weight: f64,
 }
 
 impl SlicedAggregator {
@@ -82,7 +163,7 @@ impl SlicedAggregator {
             acc.push(vec![0.0; t.len()]);
             wacc.push(vec![0.0; t.len()]);
         }
-        Ok(SlicedAggregator { names: names.to_vec(), full_shapes, acc, wacc })
+        Ok(SlicedAggregator { names: names.to_vec(), full_shapes, acc, wacc, total_weight: 0.0 })
     }
 
     /// Add a client's update whose tensors are corner slices of the full
@@ -98,11 +179,22 @@ impl SlicedAggregator {
                 weight as f32,
             );
         }
+        self.total_weight += weight;
+    }
+
+    /// Total sample weight accumulated so far (across all positions).
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
     }
 
     /// Positions with weight keep the normalized average; untouched
-    /// positions keep the previous global value.
+    /// positions keep the previous global value. Fails if no weight was
+    /// ever added (a zero-weight cohort would silently no-op and mask
+    /// the caller's bug).
     pub fn finish(self, store: &mut ParamStore) -> Result<()> {
+        if self.total_weight <= 0.0 {
+            bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
+        }
         for (i, name) in self.names.iter().enumerate() {
             let prev = store.get(name)?.clone();
             let mut out = prev.data;
@@ -155,6 +247,109 @@ mod tests {
         for (a, b) in t.data.iter().zip([7.0, 8.0, 9.0]) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn zero_weight_cohort_fails_instead_of_corrupting() {
+        // Release builds used to scale the store by `inf` here (the
+        // debug_assert was compiled out); now every finish hard-fails.
+        let mut store = store_with(&[("w", vec![2], vec![5.0, 5.0])]);
+        let names = vec!["w".to_string()];
+
+        let agg = Aggregator::new(&names, &store).unwrap();
+        assert!(agg.finish(&mut store).is_err(), "no adds at all");
+
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add(&[vec![1.0, 1.0]], 0.0); // empty-shard client
+        assert!(agg.finish(&mut store).is_err(), "only zero-weight adds");
+
+        let sliced = SlicedAggregator::new(&names, &store).unwrap();
+        assert!(sliced.finish(&mut store).is_err(), "sliced: no adds");
+        let mut sliced = SlicedAggregator::new(&names, &store).unwrap();
+        sliced.add(&[vec![2]], &[vec![1.0, 1.0]], 0.0);
+        assert!(sliced.finish(&mut store).is_err(), "sliced: zero-weight adds");
+
+        let buffered = BufferedAggregator::new(&names, &store, 0.5).unwrap();
+        assert!(buffered.finish(&mut store).is_err(), "buffered: empty buffer");
+
+        // The store is untouched either way.
+        assert_eq!(store.get("w").unwrap().data, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn total_weight_is_sample_weight_not_client_count() {
+        let store = store_with(&[("w", vec![1], vec![0.0])]);
+        let names = vec!["w".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add(&[vec![1.0]], 100.0);
+        agg.add(&[vec![1.0]], 50.0);
+        assert_eq!(agg.total_weight(), 150.0, "two clients, 150 samples");
+    }
+
+    #[test]
+    fn buffered_at_zero_staleness_matches_plain_bit_for_bit() {
+        // The sync-degeneracy contract: staleness 0 (any alpha) and
+        // alpha 0 (any staleness... of 0) leave weights untouched, so the
+        // buffered path accumulates exactly like the plain path.
+        for alpha in [0.0, 0.5, 1.0] {
+            let mut s1 = store_with(&[("w", vec![3], vec![0.0; 3])]);
+            let mut s2 = s1.clone();
+            let names = vec!["w".to_string()];
+            let u1 = vec![0.1, -2.0, 3.5];
+            let u2 = vec![7.25, 0.5, -1.0];
+
+            let mut plain = Aggregator::new(&names, &s1).unwrap();
+            plain.add(&[u1.clone()], 17.0);
+            plain.add(&[u2.clone()], 3.0);
+            plain.finish(&mut s1).unwrap();
+
+            let mut buffered = BufferedAggregator::new(&names, &s2, alpha).unwrap();
+            buffered.add(&[u1.clone()], 17.0, 0);
+            buffered.add(&[u2.clone()], 3.0, 0);
+            assert_eq!(buffered.merged(), 2);
+            assert_eq!(buffered.mean_staleness(), 0.0);
+            buffered.finish(&mut s2).unwrap();
+
+            let a = &s1.get("w").unwrap().data;
+            let b = &s2.get("w").unwrap().data;
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "alpha={alpha}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn staleness_discount_down_weights_old_updates() {
+        assert_eq!(staleness_discount(0, 0.7), 1.0, "fresh updates keep full weight");
+        assert_eq!(staleness_discount(5, 0.0), 1.0, "alpha 0 disables discounting");
+        assert!((staleness_discount(1, 1.0) - 0.5).abs() < 1e-12);
+        assert!((staleness_discount(3, 0.5) - 0.5).abs() < 1e-12); // 1/sqrt(4)
+        assert!(staleness_discount(10, 0.5) < staleness_discount(2, 0.5));
+
+        // Weighted-mean check: fresh update (w=1) and staleness-1 update
+        // (w=1, alpha=1 → effective 0.5): mean = (0*1 + 3*0.5) / 1.5 = 1.
+        let mut store = store_with(&[("w", vec![1], vec![0.0])]);
+        let names = vec!["w".to_string()];
+        let mut agg = BufferedAggregator::new(&names, &store, 1.0).unwrap();
+        agg.add(&[vec![0.0]], 1.0, 0);
+        agg.add(&[vec![3.0]], 1.0, 1);
+        assert!((agg.total_weight() - 1.5).abs() < 1e-12);
+        assert!((agg.mean_staleness() - 0.5).abs() < 1e-12);
+        agg.finish(&mut store).unwrap();
+        assert!((store.get("w").unwrap().data[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn buffered_ready_after_buffer_k_arrivals() {
+        let store = store_with(&[("w", vec![1], vec![0.0])]);
+        let names = vec!["w".to_string()];
+        let mut agg = BufferedAggregator::new(&names, &store, 0.5).unwrap();
+        assert!(!agg.ready(2));
+        agg.add(&[vec![1.0]], 1.0, 0);
+        assert!(!agg.ready(2), "one arrival is not enough");
+        agg.add(&[vec![2.0]], 1.0, 3);
+        assert!(agg.ready(2), "any buffer_k arrivals suffice — no fixed cohort");
+        assert_eq!(agg.merged(), 2);
     }
 
     #[test]

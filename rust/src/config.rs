@@ -5,7 +5,7 @@
 //! bench-feasible round counts. `--profile paper` scales rounds up.
 
 use crate::data::Partition;
-use crate::fleet::{FleetProfileConfig, RoundPolicy};
+use crate::fleet::{FleetProfileConfig, PolicyDefaults, RoundPolicy};
 use crate::freezing::FreezeConfig;
 use crate::memory::MemoryConfig;
 use anyhow::Result;
@@ -63,8 +63,11 @@ pub struct FleetCfg {
     /// Aggregation policy per train round: `sync` (wait for all),
     /// `deadline` (cut stragglers at `deadline_s`), `over-select`
     /// (sample `per_round + over_select_extra`, keep the first
-    /// `per_round` finishers). Also accepts `deadline:SECS` and
-    /// `over-select:K` spellings. CLI: `--round-policy`.
+    /// `per_round` finishers), `async` (FedBuff-style: close the round
+    /// at the `buffer_k`-th arrival and keep straggler uploads in flight
+    /// across rounds instead of discarding them). Also accepts
+    /// `deadline:SECS`, `over-select:K`, and `async:K` spellings.
+    /// CLI: `--round-policy`.
     pub round_policy: String,
     /// Deadline in virtual seconds for the `deadline` policy.
     /// CLI: `--deadline-s`.
@@ -75,6 +78,19 @@ pub struct FleetCfg {
     /// Per-round dropout probability override; `None` keeps the named
     /// profile's default. CLI: `--dropout`.
     pub dropout_p: Option<f64>,
+    /// Arrivals needed to close an `async` round; `None` defaults to
+    /// `per_round` — which, with `staleness_alpha = 0`, makes `async`
+    /// reproduce the `sync` policy's round records bit-for-bit (the
+    /// degeneracy guarantee, see `lib.rs` docs). CLI: `--buffer-k`.
+    pub buffer_k: Option<usize>,
+    /// Staleness-discount exponent for late merges under `async`:
+    /// an update dispatched `s` rounds ago keeps `1 / (1 + s)^alpha` of
+    /// its sample weight (FedBuff-style; 0 disables discounting).
+    /// CLI: `--staleness-alpha`.
+    pub staleness_alpha: f64,
+    /// Late updates older than this many rounds are dropped instead of
+    /// merged under `async`. CLI: `--max-staleness`.
+    pub max_staleness: usize,
 }
 
 impl Default for FleetCfg {
@@ -85,6 +101,9 @@ impl Default for FleetCfg {
             deadline_s: 60.0,
             over_select_extra: 4,
             dropout_p: None,
+            buffer_k: None,
+            staleness_alpha: 0.5,
+            max_staleness: 8,
         }
     }
 }
@@ -168,14 +187,37 @@ impl RunConfig {
     pub fn fleet_profile(&self) -> Result<FleetProfileConfig> {
         let mut p = FleetProfileConfig::named(&self.fleet.profile)?;
         if let Some(d) = self.fleet.dropout_p {
+            if !(0.0..=1.0).contains(&d) {
+                anyhow::bail!("dropout probability must be in [0, 1], got {d}");
+            }
             p.dropout_p = d;
         }
         Ok(p)
     }
 
-    /// Resolve the configured round policy string.
+    /// Resolve the configured round policy string. The bare `async`
+    /// spelling takes its buffer size from `fleet.buffer_k`, defaulting
+    /// to `per_round` (the sync-degenerate buffer).
     pub fn round_policy(&self) -> Result<RoundPolicy> {
-        RoundPolicy::parse(&self.fleet.round_policy, self.fleet.deadline_s, self.fleet.over_select_extra)
+        let policy = RoundPolicy::parse(
+            &self.fleet.round_policy,
+            &PolicyDefaults {
+                deadline_s: self.fleet.deadline_s,
+                over_select_extra: self.fleet.over_select_extra,
+                buffer_k: self.fleet.buffer_k.unwrap_or(self.per_round),
+                max_staleness: self.fleet.max_staleness,
+            },
+        )?;
+        if matches!(policy, RoundPolicy::Async { .. })
+            && !(self.fleet.staleness_alpha.is_finite() && self.fleet.staleness_alpha >= 0.0)
+        {
+            // A negative alpha would *up-weight* stale updates.
+            anyhow::bail!(
+                "staleness_alpha must be finite and >= 0, got {}",
+                self.fleet.staleness_alpha
+            );
+        }
+        Ok(policy)
     }
 
     /// A smoke-test profile: tiny rounds, quick everything. Used by
@@ -267,5 +309,59 @@ mod tests {
         assert!(c.round_policy().is_err());
         c.fleet.profile = "quantum".into();
         assert!(c.fleet_profile().is_err());
+    }
+
+    #[test]
+    fn async_policy_resolves_with_per_round_default_buffer() {
+        let mut c = RunConfig::default();
+        c.fleet.round_policy = "async".into();
+        // buffer_k unset ⇒ per_round (the sync-degenerate buffer).
+        assert_eq!(
+            c.round_policy().unwrap(),
+            RoundPolicy::Async { buffer_k: c.per_round, max_staleness: 8 }
+        );
+        c.fleet.buffer_k = Some(3);
+        c.fleet.max_staleness = 5;
+        assert_eq!(
+            c.round_policy().unwrap(),
+            RoundPolicy::Async { buffer_k: 3, max_staleness: 5 }
+        );
+        // Explicit spelling wins over the config knob.
+        c.fleet.round_policy = "async:7".into();
+        assert_eq!(
+            c.round_policy().unwrap(),
+            RoundPolicy::Async { buffer_k: 7, max_staleness: 5 }
+        );
+        // Rejection cases: a buffer that can never close.
+        c.fleet.round_policy = "async:0".into();
+        assert!(c.round_policy().is_err());
+        c.fleet.round_policy = "async".into();
+        c.fleet.buffer_k = Some(0);
+        assert!(c.round_policy().is_err());
+    }
+
+    #[test]
+    fn bad_fleet_knobs_are_rejected() {
+        // A negative alpha would up-weight stale updates; out-of-range
+        // dropout is a probability typo — both must fail fast.
+        let mut c = RunConfig::default();
+        c.fleet.round_policy = "async".into();
+        c.fleet.staleness_alpha = -1.0;
+        assert!(c.round_policy().is_err(), "negative alpha");
+        c.fleet.staleness_alpha = f64::NAN;
+        assert!(c.round_policy().is_err(), "non-finite alpha");
+        c.fleet.staleness_alpha = 0.0;
+        assert!(c.round_policy().is_ok(), "alpha 0 is the degenerate knob");
+        // Alpha is an async-only knob; sync runs ignore it.
+        c.fleet.staleness_alpha = -1.0;
+        c.fleet.round_policy = "sync".into();
+        assert!(c.round_policy().is_ok());
+
+        c.fleet.dropout_p = Some(1.5);
+        assert!(c.fleet_profile().is_err(), "dropout > 1");
+        c.fleet.dropout_p = Some(-0.2);
+        assert!(c.fleet_profile().is_err(), "negative dropout");
+        c.fleet.dropout_p = Some(0.3);
+        assert_eq!(c.fleet_profile().unwrap().dropout_p, 0.3);
     }
 }

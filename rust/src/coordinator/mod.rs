@@ -6,9 +6,19 @@
 //! sub-model artifact, (2) sample clients and filter by memory, (3)
 //! dispatch the cohort as fleet events (download → local train → upload
 //! on each device's virtual timeline), (4) the round policy decides who
-//! aggregates (sync / deadline / over-select), (5) weighted FedAvg
-//! (Eq. 1) back into the store, with comm accounting and the virtual
-//! clock advanced to the aggregation instant.
+//! aggregates (sync / deadline / over-select / async), (5) weighted
+//! FedAvg (Eq. 1) back into the store, with comm accounting and the
+//! virtual clock advanced to the aggregation instant.
+//!
+//! Under the `async` policy rounds are no longer self-contained: uploads
+//! that miss the `buffer_k` window persist in the [`FleetEngine`]'s
+//! in-flight queue, and the matching *update tensors* persist here in
+//! [`ServerCtx::pending`] — version-stamped with the dispatch round,
+//! artifact, and frozen-prefix version. When the fleet reports a late
+//! arrival, the pending update merges with a staleness-discounted weight
+//! unless it is older than `max_staleness` rounds or was trained against
+//! a block that has since been frozen or remapped (artifact or prefix
+//! version mismatch), in which case it is dropped.
 //!
 //! The progressive schedule itself (shrink → grow, freezing) lives in
 //! `methods::profl`; baselines drive the same primitives.
@@ -18,18 +28,39 @@ pub mod round;
 use crate::clients::ClientPool;
 use crate::config::RunConfig;
 use crate::data::SyntheticDataset;
-use crate::fleet::{self, ClientWork, RoundPlan, RoundPolicy};
+use crate::fleet::{ClientWork, FleetEngine, RoundPlan, RoundPolicy};
 use crate::manifest::{MemCoeffs, ModelEntry};
 use crate::metrics::MetricsSink;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::store::ParamStore;
 use anyhow::Result;
+use std::collections::HashMap;
 
 pub use round::{EvalResult, RoundOutcome};
 
 /// Test-set size = 8 eval batches (balanced classes).
 pub const TEST_BATCHES: usize = 8;
+
+/// A straggler's trained-but-not-yet-merged update, buffered server-side
+/// while its upload is in flight across rounds (async policy). The
+/// version stamps decide mergeability on arrival.
+pub struct PendingUpdate {
+    pub client: usize,
+    /// Artifact the client trained (a late update only merges into the
+    /// same artifact — a frozen/remapped block drops it).
+    pub artifact: String,
+    /// Frozen-prefix version at dispatch; a bump invalidates the update.
+    pub prefix_version: u64,
+    /// Server round index at dispatch (staleness = arrival − dispatch).
+    pub dispatch_round: usize,
+    /// Sample weight (shard size) the update carries.
+    pub weight: f64,
+    /// Updated trainable tensors, in the artifact's trainable order.
+    pub tensors: Vec<Vec<f32>>,
+    /// Upload bytes accounted when the update finally lands.
+    pub bytes_up: u64,
+}
 
 pub struct ServerCtx<'rt> {
     pub rt: &'rt Runtime,
@@ -47,6 +78,11 @@ pub struct ServerCtx<'rt> {
     /// Version stamp of the frozen prefix currently in the store; clients
     /// cache the prefix and only re-download when this changes.
     pub prefix_version: u64,
+    /// Round-spanning fleet state (async in-flight uploads).
+    pub engine: FleetEngine,
+    /// Server-side buffer of straggler updates whose uploads are still in
+    /// flight (async policy), keyed by client id.
+    pub(crate) pending: HashMap<usize, PendingUpdate>,
     /// Dedicated stream for fleet stochastics (dropout draws), forked off
     /// the run seed so event traces are reproducible.
     pub(crate) fleet_rng: Rng,
@@ -83,6 +119,8 @@ impl<'rt> ServerCtx<'rt> {
             policy,
             sim_time_s: 0.0,
             prefix_version: 0,
+            engine: FleetEngine::new(),
+            pending: HashMap::new(),
             fleet_rng,
             xs_buf: Vec::new(),
             ys_buf: Vec::new(),
@@ -102,7 +140,8 @@ impl<'rt> ServerCtx<'rt> {
     }
 
     /// Bump the frozen-prefix version (called at step/stage transitions);
-    /// forces prefix re-download for every client on next contact.
+    /// forces prefix re-download for every client on next contact and
+    /// invalidates in-flight updates trained against the old prefix.
     pub fn bump_prefix_version(&mut self) {
         self.prefix_version += 1;
     }
@@ -113,6 +152,14 @@ impl<'rt> ServerCtx<'rt> {
         match self.policy {
             RoundPolicy::OverSelect { extra } => self.cfg.per_round + extra,
             _ => self.cfg.per_round,
+        }
+    }
+
+    /// `(buffer_k, max_staleness)` when running under the async policy.
+    pub fn async_params(&self) -> Option<(usize, usize)> {
+        match self.policy {
+            RoundPolicy::Async { buffer_k, max_staleness } => Some((buffer_k, max_staleness)),
+            _ => None,
         }
     }
 
@@ -139,14 +186,60 @@ impl<'rt> ServerCtx<'rt> {
 
     /// Run one round's cohort through the discrete-event simulator under
     /// the configured policy, advancing the virtual clock to the
-    /// aggregation instant.
+    /// aggregation instant. Async rounds thread the engine's in-flight
+    /// queue through; a fresh dispatch supersedes the same client's stale
+    /// in-flight upload, so the matching pending update is dropped here.
     pub fn run_fleet(&mut self, works: &[ClientWork]) -> RoundPlan {
         let keep = match self.policy {
             RoundPolicy::OverSelect { .. } => self.cfg.per_round,
             _ => usize::MAX,
         };
-        let plan = fleet::simulate_round(self.sim_time_s, works, self.policy, keep, &mut self.fleet_rng);
+        if self.async_params().is_some() {
+            for w in works {
+                self.pending.remove(&w.id);
+            }
+        }
+        let plan = self.engine.simulate_round(
+            self.round,
+            self.sim_time_s,
+            works,
+            self.policy,
+            keep,
+            &mut self.fleet_rng,
+        );
         self.sim_time_s = plan.end_s;
         plan
+    }
+
+    /// Collect the pending updates behind this round's late arrivals,
+    /// dropping any that are too stale or were trained against a
+    /// since-frozen/remapped block (artifact or prefix-version mismatch).
+    /// Dropped uploads still arrived — their bytes are charged and the
+    /// discard is recorded (`late_dropped`), so the async policy cannot
+    /// under-report its losses. Returns `(update, staleness)` pairs in
+    /// arrival order.
+    pub(crate) fn take_late_arrivals(
+        &mut self,
+        plan: &RoundPlan,
+        artifact: &str,
+        max_staleness: usize,
+        outcome: &mut RoundOutcome,
+    ) -> Vec<(PendingUpdate, usize)> {
+        let mut out = Vec::new();
+        for la in &plan.late_arrivals {
+            if let Some(p) = self.pending.remove(&la.client) {
+                let staleness = self.round.saturating_sub(p.dispatch_round);
+                if staleness <= max_staleness
+                    && p.artifact == artifact
+                    && p.prefix_version == self.prefix_version
+                {
+                    out.push((p, staleness));
+                } else {
+                    outcome.bytes_up += p.bytes_up;
+                    outcome.late_dropped += 1;
+                }
+            }
+        }
+        out
     }
 }

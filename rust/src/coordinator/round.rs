@@ -1,10 +1,17 @@
 //! Round execution primitives: train rounds, distill rounds, evaluation.
+//!
+//! Sync-family policies aggregate a fixed cohort with the plain
+//! [`Aggregator`]; the async policy routes through
+//! [`BufferedAggregator`]: fresh finishers merge at staleness 0 (bit-for
+//! bit the sync arithmetic), this round's stragglers are trained and
+//! buffered as [`PendingUpdate`]s, and earlier rounds' late arrivals
+//! merge with staleness-discounted weights.
 
-use super::{ServerCtx, TEST_BATCHES};
-use crate::aggregate::Aggregator;
-use crate::manifest::Artifact;
+use super::{PendingUpdate, ServerCtx, TEST_BATCHES};
+use crate::aggregate::{Aggregator, BufferedAggregator};
+use crate::fleet::EventKind;
 use crate::metrics::RoundRecord;
-use crate::runtime::{literal_f32, literal_i32, Runtime};
+use crate::runtime::{literal_f32, literal_i32, LoadedArtifact, Runtime};
 use anyhow::{bail, Result};
 
 /// What a train round produced (before the metrics record is finalized).
@@ -22,6 +29,17 @@ pub struct RoundOutcome {
     pub stragglers: usize,
     /// Clients that dropped out after dispatch.
     pub dropouts: usize,
+    /// Async policy: this round's dispatched clients whose uploads moved
+    /// into the in-flight queue instead of being discarded.
+    pub deferred: usize,
+    /// Async policy: straggler updates from earlier rounds merged this
+    /// round on arrival.
+    pub late_merged: usize,
+    /// Async policy: arrived-but-discarded late updates (too stale, or
+    /// trained against a since-frozen/remapped block).
+    pub late_dropped: usize,
+    /// Mean staleness (rounds) of the late-merged updates (0 when none).
+    pub mean_staleness: f64,
 }
 
 impl Default for RoundOutcome {
@@ -39,6 +57,10 @@ impl Default for RoundOutcome {
             sim_time_s: 0.0,
             stragglers: 0,
             dropouts: 0,
+            deferred: 0,
+            late_merged: 0,
+            late_dropped: 0,
+            mean_staleness: 0.0,
         }
     }
 }
@@ -97,16 +119,30 @@ impl<'rt> ServerCtx<'rt> {
             sim_time_s: plan.duration_s(),
             stragglers: plan.stragglers.len(),
             dropouts: plan.dropouts.len(),
+            deferred: plan.deferred.len(),
             ..RoundOutcome::default()
         };
 
-        // --- primary cohort: only policy-accepted finishers aggregate -------
-        if !completers.is_empty() {
-            let (loss, acc) =
-                self.train_cohort(&tag, &art.meta, artifact, &completers, lr, &mut outcome)?;
+        // --- primary cohort ---------------------------------------------------
+        if let Some((_, max_staleness)) = self.async_params() {
+            // Async: fresh finishers merge now; window-missers train and
+            // buffer; earlier rounds' arrivals merge staleness-discounted.
+            let deferred: Vec<usize> =
+                sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
+            let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome);
+            let (loss, acc) = self.run_cohort_async(
+                &tag, artifact, &completers, &deferred, late, lr, true, &mut outcome,
+            )?;
+            outcome.mean_loss = loss;
+            outcome.mean_acc = acc;
+        } else if !completers.is_empty() {
+            let (loss, acc) = self.train_cohort(&tag, artifact, &completers, lr, &mut outcome)?;
             outcome.mean_loss = loss;
             outcome.mean_acc = acc;
         }
+        // Downloads shipped to policy-cut stragglers cost bandwidth even
+        // though their updates never aggregate.
+        self.account_lost_downloads(&plan, tr_bytes, fr_bytes, true, &mut outcome);
 
         // --- fallback cohort (output-layer-only training) -------------------
         // The op artifact is tiny (§4.1), so fallback clients are assumed to
@@ -124,9 +160,8 @@ impl<'rt> ServerCtx<'rt> {
             .filter(|id| sel.fallback.contains(id))
             .collect();
         if let (Some(fb), false) = (fallback_artifact, fallback.is_empty()) {
-            let fb_art = self.rt.load(&tag, fb)?;
             let mut fb_out = RoundOutcome::default();
-            self.train_cohort(&tag, &fb_art.meta, fb, &fallback, lr, &mut fb_out)?;
+            self.train_cohort(&tag, fb, &fallback, lr, &mut fb_out)?;
             outcome.fallback = fallback.len();
             outcome.bytes_up += fb_out.bytes_up;
             outcome.bytes_down += fb_out.bytes_down;
@@ -136,11 +171,104 @@ impl<'rt> ServerCtx<'rt> {
         Ok(outcome)
     }
 
-    /// Train one artifact over a cohort and FedAvg the result into the store.
+    /// Execute one client's local pass on `art` and return its updated
+    /// trainable tensors (artifact order), scalar outputs, and sample
+    /// weight. Shared by the sync, async, and distill paths.
+    fn exec_client(
+        &mut self,
+        art: &LoadedArtifact,
+        param_lits: &[xla::Literal],
+        lr_lit: &xla::Literal,
+        cid: usize,
+        with_labels: bool,
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>, f64)> {
+        let scan = self.rt.manifest.scan_steps;
+        let batch = self.rt.manifest.train_batch;
+        let weight = {
+            let data = &self.dataset;
+            let client = &mut self.pool.clients[cid];
+            client.shard.fill_batches(data, scan, batch, &mut self.xs_buf, &mut self.ys_buf);
+            client.shard.num_samples() as f64
+        };
+        let xs = literal_f32(&[scan, batch, 32, 32, 3], &self.xs_buf)?;
+        let ys = if with_labels { Some(literal_i32(&[scan, batch], &self.ys_buf)?) } else { None };
+
+        // Borrowed inputs: the shared parameter literals are not cloned
+        // per client (L3 hot-path optimization, see EXPERIMENTS.md §Perf).
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 3);
+        inputs.extend(param_lits.iter());
+        inputs.push(&xs);
+        if let Some(ys) = &ys {
+            inputs.push(ys);
+        }
+        inputs.push(lr_lit);
+
+        let outs = art.execute(&inputs)?;
+        let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
+        Ok((updated.into_iter().map(|(_, v)| v).collect(), scalars, weight))
+    }
+
+    /// Charge download bytes for dispatched clients whose updates never
+    /// reached an aggregate: deadline/over-select stragglers received the
+    /// round artifact and trained, so the server's downlink was spent
+    /// either way (otherwise straggler-cutting policies look artificially
+    /// cheap next to sync/async). Completers and async-deferred clients
+    /// are charged on their own paths; dropouts vanish at the dispatch
+    /// instant — before the download — and cost nothing.
+    fn account_lost_downloads(
+        &mut self,
+        plan: &crate::fleet::RoundPlan,
+        tr_bytes: u64,
+        fr_bytes: u64,
+        with_prefix: bool,
+        outcome: &mut RoundOutcome,
+    ) {
+        for ev in &plan.events {
+            if let EventKind::Dispatch { client } = ev.kind {
+                if plan.completers.contains(&client)
+                    || plan.deferred.contains(&client)
+                    || plan.dropouts.contains(&client)
+                {
+                    continue;
+                }
+                if with_prefix {
+                    self.account_comm(client, tr_bytes, fr_bytes, false, outcome);
+                } else {
+                    outcome.bytes_down += tr_bytes;
+                }
+            }
+        }
+    }
+
+    /// Comm accounting for one client's exchange this round: trainables
+    /// travel down (and, when requested, up); the frozen prefix ships
+    /// only while the client's cached copy is stale.
+    fn account_comm(
+        &mut self,
+        cid: usize,
+        tr_bytes: u64,
+        fr_bytes: u64,
+        upload_now: bool,
+        outcome: &mut RoundOutcome,
+    ) {
+        if upload_now {
+            outcome.bytes_up += tr_bytes;
+        }
+        outcome.bytes_down += tr_bytes;
+        let client = &mut self.pool.clients[cid];
+        if client.prefix_version != self.prefix_version {
+            outcome.bytes_down += fr_bytes;
+            client.prefix_version = self.prefix_version;
+        }
+    }
+
+    /// Train one artifact over a cohort and FedAvg the result into the
+    /// store (sync-family policies and the fallback cohort). A
+    /// zero-weight cohort (every shard empty) skips aggregation entirely
+    /// instead of NaN-corrupting the store.
     fn train_cohort(
         &mut self,
         tag: &str,
-        meta: &Artifact,
         artifact: &str,
         cohort: &[usize],
         lr: f32,
@@ -154,60 +282,138 @@ impl<'rt> ServerCtx<'rt> {
         let batch = self.rt.manifest.train_batch;
 
         // Parameter literals built once, shared by every client this round.
-        let param_lits = self.rt.param_literals(meta, &self.store)?;
+        let param_lits = self.rt.param_literals(&art.meta, &self.store)?;
         let lr_lit = xla::Literal::scalar(lr);
 
-        let trainable: Vec<String> = meta.trainable_names().iter().map(|s| s.to_string()).collect();
+        let trainable: Vec<String> =
+            art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
         let mut agg = Aggregator::new(&trainable, &self.store)?;
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
 
-        let tr_bytes = meta.trainable_bytes();
-        let fr_bytes = meta.frozen_bytes();
+        let tr_bytes = art.meta.trainable_bytes();
+        let fr_bytes = art.meta.frozen_bytes();
 
         for &cid in cohort {
-            // Assemble this client's local batches.
-            let weight = {
-                let data = &self.dataset;
-                let client = &mut self.pool.clients[cid];
-                client.shard.fill_batches(data, scan, batch, &mut self.xs_buf, &mut self.ys_buf);
-                client.shard.num_samples() as f64
-            };
-            let xs = literal_f32(&[scan, batch, 32, 32, 3], &self.xs_buf)?;
-            let ys = literal_i32(&[scan, batch], &self.ys_buf)?;
-
-            // Borrowed inputs: the shared parameter literals are not cloned
-            // per client (L3 hot-path optimization, see EXPERIMENTS.md §Perf).
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 3);
-            inputs.extend(param_lits.iter());
-            inputs.push(&xs);
-            inputs.push(&ys);
-            inputs.push(&lr_lit);
-
-            let outs = art.execute(&inputs)?;
-            let (updated, scalars) = Runtime::unpack_train_outputs(meta, outs)?;
+            let (tensors, scalars, weight) =
+                self.exec_client(&art, &param_lits, &lr_lit, cid, true)?;
             loss_sum += scalars[0] as f64 * weight;
             if scalars.len() > 1 {
                 acc_sum += scalars[1] as f64 / (scan * batch) as f64 * weight;
             }
             // No clone: hand the PJRT output buffers to the accumulator.
-            let views: Vec<&[f32]> = updated.iter().map(|(_, v)| v.as_slice()).collect();
-            agg.add(&views, weight);
+            agg.add(&tensors, weight);
+            self.account_comm(cid, tr_bytes, fr_bytes, true, outcome);
+        }
 
-            // Comm accounting: upload trainables; download trainables plus
-            // the frozen prefix only when the client's cached copy is stale.
-            outcome.bytes_up += tr_bytes;
-            outcome.bytes_down += tr_bytes;
-            let client = &mut self.pool.clients[cid];
-            if client.prefix_version != self.prefix_version {
-                outcome.bytes_down += fr_bytes;
-                client.prefix_version = self.prefix_version;
+        let total_w = agg.total_weight();
+        if total_w <= 0.0 {
+            return Ok((f32::NAN, f32::NAN));
+        }
+        agg.finish(&mut self.store)?;
+        Ok(((loss_sum / total_w) as f32, (acc_sum / total_w) as f32))
+    }
+
+    /// Async (FedBuff-style) cohort processing shared by train and
+    /// distill rounds: merge `completers` fresh (staleness 0), train and
+    /// buffer `deferred` (their uploads are in flight), merge `late`
+    /// arrivals staleness-discounted. Returns the fresh cohort's mean
+    /// (loss, acc); with `buffer_k = per_round` and no in-flight traffic
+    /// the arithmetic is bit-identical to [`Self::train_cohort`].
+    #[allow(clippy::too_many_arguments)]
+    fn run_cohort_async(
+        &mut self,
+        tag: &str,
+        artifact: &str,
+        completers: &[usize],
+        deferred: &[usize],
+        late: Vec<(PendingUpdate, usize)>,
+        lr: f32,
+        with_labels: bool,
+        outcome: &mut RoundOutcome,
+    ) -> Result<(f32, f32)> {
+        let art = self.rt.load(tag, artifact)?;
+        let scan = self.rt.manifest.scan_steps;
+        let batch = self.rt.manifest.train_batch;
+        let param_lits = self.rt.param_literals(&art.meta, &self.store)?;
+        let lr_lit = xla::Literal::scalar(lr);
+        let trainable: Vec<String> =
+            art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
+        let alpha = self.cfg.fleet.staleness_alpha;
+        let mut agg = BufferedAggregator::new(&trainable, &self.store, alpha)?;
+        let mut loss_sum = 0.0f64;
+        let mut acc_sum = 0.0f64;
+        let mut fresh_w = 0.0f64;
+        let tr_bytes = art.meta.trainable_bytes();
+        let fr_bytes = art.meta.frozen_bytes();
+
+        // Fresh finishers (selection order, staleness 0 ⇒ undiscounted).
+        for &cid in completers {
+            let (tensors, scalars, weight) =
+                self.exec_client(&art, &param_lits, &lr_lit, cid, with_labels)?;
+            loss_sum += scalars[0] as f64 * weight;
+            if with_labels && scalars.len() > 1 {
+                acc_sum += scalars[1] as f64 / (scan * batch) as f64 * weight;
+            }
+            agg.add(&tensors, weight, 0);
+            fresh_w += weight;
+            // Train rounds do prefix-cache accounting; distill rounds ship
+            // trainables only — exactly mirroring the sync paths, so the
+            // degenerate async run stays byte-identical.
+            if with_labels {
+                self.account_comm(cid, tr_bytes, fr_bytes, true, outcome);
+            } else {
+                outcome.bytes_up += tr_bytes;
+                outcome.bytes_down += tr_bytes;
             }
         }
 
-        let total_w = agg.clients_added();
+        // Window-missers: they did receive this round's model and did
+        // train — the update just hasn't arrived. Buffer it version-
+        // stamped; the upload bytes are accounted when it lands.
+        for &cid in deferred {
+            let (tensors, _scalars, weight) =
+                self.exec_client(&art, &param_lits, &lr_lit, cid, with_labels)?;
+            if with_labels {
+                self.account_comm(cid, tr_bytes, fr_bytes, false, outcome);
+            } else {
+                outcome.bytes_down += tr_bytes;
+            }
+            self.pending.insert(
+                cid,
+                PendingUpdate {
+                    client: cid,
+                    artifact: artifact.to_string(),
+                    prefix_version: self.prefix_version,
+                    dispatch_round: self.round,
+                    weight,
+                    tensors,
+                    bytes_up: tr_bytes,
+                },
+            );
+        }
+
+        // Late arrivals from earlier rounds: staleness-discounted merge.
+        let mut staleness_sum = 0usize;
+        for (p, staleness) in late {
+            agg.add(&p.tensors, p.weight, staleness);
+            outcome.bytes_up += p.bytes_up;
+            outcome.late_merged += 1;
+            staleness_sum += staleness;
+        }
+        if outcome.late_merged > 0 {
+            outcome.mean_staleness = staleness_sum as f64 / outcome.late_merged as f64;
+        }
+
+        if agg.total_weight() <= 0.0 {
+            // Nothing merged (or only zero-weight shards): leave the store
+            // untouched.
+            return Ok((f32::NAN, f32::NAN));
+        }
         agg.finish(&mut self.store)?;
-        Ok(((loss_sum / total_w) as f32, (acc_sum / total_w) as f32))
+        let loss = if fresh_w > 0.0 { (loss_sum / fresh_w) as f32 } else { f32::NAN };
+        let acc = if fresh_w > 0.0 { (acc_sum / fresh_w) as f32 } else { f32::NAN };
+        Ok((loss, acc))
     }
 
     /// One federated distillation round (§3.2 Map): same cohort mechanics,
@@ -217,8 +423,6 @@ impl<'rt> ServerCtx<'rt> {
         let art = self.rt.load(&tag, artifact)?;
         let mem = art.meta.participation_mem();
         let sel = self.pool.select(self.sample_size(), &mem);
-        let scan = self.rt.manifest.scan_steps;
-        let batch = self.rt.manifest.train_batch;
         let tr_bytes = art.meta.trainable_bytes();
 
         // Distillation rounds run under the same fleet policy as train
@@ -239,42 +443,50 @@ impl<'rt> ServerCtx<'rt> {
             sim_time_s: plan.duration_s(),
             stragglers: plan.stragglers.len(),
             dropouts: plan.dropouts.len(),
+            deferred: plan.deferred.len(),
             ..RoundOutcome::default()
         };
+
+        if let Some((_, max_staleness)) = self.async_params() {
+            let deferred: Vec<usize> =
+                sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
+            let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome);
+            let (loss, _) = self.run_cohort_async(
+                &tag, artifact, &completers, &deferred, late, lr, false, &mut outcome,
+            )?;
+            outcome.mean_loss = loss;
+            self.account_lost_downloads(&plan, tr_bytes, 0, false, &mut outcome);
+            self.round += 1;
+            return Ok(outcome);
+        }
+
         if completers.is_empty() {
+            self.account_lost_downloads(&plan, tr_bytes, 0, false, &mut outcome);
             self.round += 1;
             return Ok(outcome);
         }
 
         let param_lits = self.rt.param_literals(&art.meta, &self.store)?;
         let lr_lit = xla::Literal::scalar(lr);
-        let trainable: Vec<String> = art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
+        let trainable: Vec<String> =
+            art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
         let mut agg = Aggregator::new(&trainable, &self.store)?;
         let mut loss_sum = 0.0f64;
 
         for &cid in &completers {
-            let weight = {
-                let data = &self.dataset;
-                let client = &mut self.pool.clients[cid];
-                client.shard.fill_batches(data, scan, batch, &mut self.xs_buf, &mut self.ys_buf);
-                client.shard.num_samples() as f64
-            };
-            let xs = literal_f32(&[scan, batch, 32, 32, 3], &self.xs_buf)?;
-            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(param_lits.len() + 2);
-            inputs.extend(param_lits.iter());
-            inputs.push(&xs);
-            inputs.push(&lr_lit);
-            let outs = art.execute(&inputs)?;
-            let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
+            let (tensors, scalars, weight) =
+                self.exec_client(&art, &param_lits, &lr_lit, cid, false)?;
             loss_sum += scalars[0] as f64 * weight;
-            let views: Vec<&[f32]> = updated.iter().map(|(_, v)| v.as_slice()).collect();
-            agg.add(&views, weight);
+            agg.add(&tensors, weight);
             outcome.bytes_up += tr_bytes;
             outcome.bytes_down += tr_bytes;
         }
-        let total_w = agg.clients_added();
-        agg.finish(&mut self.store)?;
-        outcome.mean_loss = (loss_sum / total_w) as f32;
+        let total_w = agg.total_weight();
+        if total_w > 0.0 {
+            agg.finish(&mut self.store)?;
+            outcome.mean_loss = (loss_sum / total_w) as f32;
+        }
+        self.account_lost_downloads(&plan, tr_bytes, 0, false, &mut outcome);
         self.round += 1;
         Ok(outcome)
     }
@@ -346,6 +558,9 @@ impl<'rt> ServerCtx<'rt> {
             sim_time_s: self.sim_time_s,
             stragglers: out.stragglers,
             dropouts: out.dropouts,
+            late_merged: out.late_merged,
+            late_dropped: out.late_dropped,
+            mean_staleness: out.mean_staleness,
         });
     }
 }

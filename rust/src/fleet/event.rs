@@ -17,6 +17,9 @@ pub enum EventKind {
     TrainDone { client: usize },
     /// Client's update arrived back at the server.
     UploadDone { client: usize },
+    /// An upload dispatched in an *earlier* round arrived at the server
+    /// (async policy: the cross-round in-flight queue).
+    LateUpload { client: usize },
     /// The round policy's aggregation deadline fired.
     Deadline,
 }
@@ -27,7 +30,8 @@ impl EventKind {
         match *self {
             EventKind::Dispatch { client }
             | EventKind::TrainDone { client }
-            | EventKind::UploadDone { client } => Some(client),
+            | EventKind::UploadDone { client }
+            | EventKind::LateUpload { client } => Some(client),
             EventKind::Deadline => None,
         }
     }

@@ -17,9 +17,25 @@
 //! * [`RoundPolicy::OverSelect`] — sample `per_round + extra` clients
 //!   and keep the first `per_round` finishers (FedScale-style
 //!   over-commitment).
+//! * [`RoundPolicy::Async`] — semi-synchronous FedBuff-style buffering:
+//!   the round closes at the `buffer_k`-th upload arrival, and uploads
+//!   that miss the window are *not* discarded — they persist in the
+//!   [`FleetEngine`]'s cross-round in-flight queue and surface as
+//!   [`RoundPlan::late_arrivals`] in the round where they land, tagged
+//!   with their dispatch round so the server can staleness-discount (or
+//!   drop) them.
+//!
+//! `sync`/`deadline`/`over-select` rounds are self-contained, so the
+//! plain [`simulate_round`] function serves them. `async` spans rounds:
+//! the [`FleetEngine`] owns the in-flight uploads between
+//! `simulate_round` calls and is the one entry point that handles every
+//! policy.
 //!
 //! Everything is seeded: same config + seed ⇒ identical event order,
-//! `sim_time_s`, and straggler/dropout counts, bit for bit.
+//! `sim_time_s`, and straggler/dropout counts, bit for bit. With
+//! `buffer_k` ≥ the dispatched cohort size, an async round closes at the
+//! last upload — exactly the sync schedule, which is what makes the
+//! async policy degenerate to `sync` bit-for-bit (see `lib.rs` docs).
 
 pub mod event;
 pub mod profile;
@@ -43,13 +59,33 @@ pub enum RoundPolicy {
     /// Sample `extra` clients beyond `per_round`, keep the first
     /// `per_round` finishers, count the rest as stragglers.
     OverSelect { extra: usize },
+    /// Semi-synchronous FedBuff-style buffering: close the round at the
+    /// `buffer_k`-th arrival; later uploads stay in flight and merge on
+    /// arrival unless older than `max_staleness` rounds.
+    Async { buffer_k: usize, max_staleness: usize },
+}
+
+/// Config-supplied fallbacks for the bare policy spellings
+/// (`deadline`, `over-select`, `async` without a `:K` argument).
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyDefaults {
+    pub deadline_s: f64,
+    pub over_select_extra: usize,
+    pub buffer_k: usize,
+    pub max_staleness: usize,
+}
+
+impl Default for PolicyDefaults {
+    fn default() -> Self {
+        PolicyDefaults { deadline_s: 60.0, over_select_extra: 4, buffer_k: 10, max_staleness: 8 }
+    }
 }
 
 impl RoundPolicy {
     /// Parse a CLI/config spelling. Accepts `sync`, `deadline`,
-    /// `deadline:SECS`, `over-select`, `over-select:K`; the bare forms
-    /// take `default_deadline_s` / `default_extra`.
-    pub fn parse(s: &str, default_deadline_s: f64, default_extra: usize) -> Result<Self> {
+    /// `deadline:SECS`, `over-select`, `over-select:K`, `async`,
+    /// `async:K`; the bare forms take their value from `defaults`.
+    pub fn parse(s: &str, defaults: &PolicyDefaults) -> Result<Self> {
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
             None => (s, None),
@@ -59,7 +95,7 @@ impl RoundPolicy {
             "deadline" => {
                 let secs: f64 = match arg {
                     Some(a) => a.parse().map_err(|e| anyhow::anyhow!("bad deadline `{a}`: {e}"))?,
-                    None => default_deadline_s,
+                    None => defaults.deadline_s,
                 };
                 if !secs.is_finite() || secs < 0.0 {
                     bail!("deadline must be a finite non-negative number of seconds, got {secs}");
@@ -69,11 +105,21 @@ impl RoundPolicy {
             "over-select" | "overselect" => {
                 let extra = match arg {
                     Some(a) => a.parse().map_err(|e| anyhow::anyhow!("bad over-select `{a}`: {e}"))?,
-                    None => default_extra,
+                    None => defaults.over_select_extra,
                 };
                 Ok(RoundPolicy::OverSelect { extra })
             }
-            other => bail!("unknown round policy `{other}` (sync|deadline[:S]|over-select[:K])"),
+            "async" => {
+                let buffer_k = match arg {
+                    Some(a) => a.parse().map_err(|e| anyhow::anyhow!("bad buffer-k `{a}`: {e}"))?,
+                    None => defaults.buffer_k,
+                };
+                if buffer_k == 0 {
+                    bail!("async needs buffer_k >= 1 (the round would never close)");
+                }
+                Ok(RoundPolicy::Async { buffer_k, max_staleness: defaults.max_staleness })
+            }
+            other => bail!("unknown round policy `{other}` (sync|deadline[:S]|over-select[:K]|async[:K])"),
         }
     }
 }
@@ -97,6 +143,16 @@ pub struct ClientWork {
     pub dropout_p: f64,
 }
 
+/// An upload crossing a round boundary (async policy): the client was
+/// dispatched in `dispatch_round` and its update reaches the server at
+/// absolute virtual time `arrive_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InFlightUpload {
+    pub client: usize,
+    pub arrive_s: f64,
+    pub dispatch_round: usize,
+}
+
 /// What the simulator decided for one round.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoundPlan {
@@ -108,10 +164,18 @@ pub struct RoundPlan {
     pub stragglers: Vec<usize>,
     /// Clients that dropped out after dispatch.
     pub dropouts: Vec<usize>,
+    /// Async policy: earlier rounds' uploads that arrived inside this
+    /// round's window (arrival order), tagged with their dispatch round.
+    pub late_arrivals: Vec<InFlightUpload>,
+    /// Async policy: this round's dispatched clients whose uploads missed
+    /// the window and moved into the engine's in-flight queue instead of
+    /// being discarded (arrival order).
+    pub deferred: Vec<usize>,
     pub start_s: f64,
     /// Virtual time at which the server aggregates.
     pub end_s: f64,
-    /// Processed events in execution order (determinism witnesses).
+    /// Processed events in execution order (determinism witnesses),
+    /// truncated to the round window.
     pub events: Vec<Event>,
 }
 
@@ -121,10 +185,188 @@ impl RoundPlan {
     }
 }
 
-/// Run one round's cohort through the event loop. `keep` caps how many
-/// finishers are aggregated (`usize::MAX` for sync/deadline;
-/// `per_round` for over-select). Dropout draws happen in event order
-/// from `rng`, so the whole plan is a pure function of its arguments.
+/// Round-spanning simulator state. Stateless policies (`sync`,
+/// `deadline`, `over-select`) pass straight through to
+/// [`simulate_round`]; the `async` policy keeps its in-flight uploads
+/// here between rounds.
+#[derive(Debug, Default)]
+pub struct FleetEngine {
+    inflight: Vec<InFlightUpload>,
+}
+
+impl FleetEngine {
+    pub fn new() -> Self {
+        FleetEngine::default()
+    }
+
+    /// Uploads currently crossing a round boundary (arrival order).
+    pub fn inflight(&self) -> &[InFlightUpload] {
+        &self.inflight
+    }
+
+    /// Run one round's cohort under `policy`. `round` is the server's
+    /// round index (stamped onto deferred uploads so staleness can be
+    /// computed on arrival); `keep` caps how many finishers aggregate
+    /// under over-select (`usize::MAX` otherwise).
+    pub fn simulate_round(
+        &mut self,
+        round: usize,
+        start_s: f64,
+        works: &[ClientWork],
+        policy: RoundPolicy,
+        keep: usize,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        match policy {
+            RoundPolicy::Async { buffer_k, .. } => {
+                self.simulate_async(round, start_s, works, buffer_k, rng)
+            }
+            _ => {
+                debug_assert!(
+                    self.inflight.is_empty(),
+                    "in-flight uploads exist but the policy is not async"
+                );
+                simulate_round(start_s, works, policy, keep, rng)
+            }
+        }
+    }
+
+    /// Async (FedBuff-style) round: simulate the whole cohort to
+    /// completion — every dispatch/dropout draw happens in the same
+    /// event order as `sync`, so the rng stream stays aligned — then
+    /// close the round at the `buffer_k`-th arrival (fresh uploads and
+    /// in-flight arrivals both count). Fresh uploads after the close
+    /// move into the in-flight queue; in-flight arrivals after the close
+    /// stay queued for a later round.
+    fn simulate_async(
+        &mut self,
+        round: usize,
+        start_s: f64,
+        works: &[ClientWork],
+        buffer_k: usize,
+        rng: &mut Rng,
+    ) -> RoundPlan {
+        // A fresh dispatch supersedes the same client's stale in-flight
+        // upload (the device abandons the old job for the new one).
+        self.inflight.retain(|u| !works.iter().any(|w| w.id == u.client));
+
+        let by_id: HashMap<usize, &ClientWork> = works.iter().map(|w| (w.id, w)).collect();
+        let origin: HashMap<usize, usize> =
+            self.inflight.iter().map(|u| (u.client, u.dispatch_round)).collect();
+
+        let mut q = EventQueue::new();
+        // In-flight arrivals first (stable stored order), then fresh
+        // dispatches — deterministic seq tie-breaking either way.
+        for u in &self.inflight {
+            q.push(u.arrive_s.max(start_s), EventKind::LateUpload { client: u.client });
+        }
+        for w in works {
+            // Non-finite ready time (zero-duty trace): never dispatched,
+            // falls through to the straggler set below.
+            if w.ready_s.is_finite() {
+                q.push(start_s.max(w.ready_s), EventKind::Dispatch { client: w.id });
+            }
+        }
+
+        let mut clock = VirtualClock::new(start_s);
+        let mut events = Vec::new();
+        let mut fresh: Vec<(f64, usize)> = Vec::new();
+        let mut late: Vec<(f64, usize)> = Vec::new();
+        let mut dropouts = Vec::new();
+        let mut arrivals = 0usize;
+        let mut close_s: Option<f64> = None;
+        let mut last_arrival_s: Option<f64> = None;
+
+        while let Some(ev) = q.pop() {
+            clock.advance_to(ev.time_s);
+            events.push(ev);
+            match ev.kind {
+                EventKind::Dispatch { client } => {
+                    let w = by_id[&client];
+                    if rng.f64() < w.dropout_p {
+                        dropouts.push(client);
+                    } else {
+                        q.push(ev.time_s + w.down_s + w.train_s, EventKind::TrainDone { client });
+                    }
+                }
+                EventKind::TrainDone { client } => {
+                    q.push(ev.time_s + by_id[&client].up_s, EventKind::UploadDone { client });
+                }
+                EventKind::UploadDone { client } => {
+                    fresh.push((ev.time_s, client));
+                    arrivals += 1;
+                    last_arrival_s = Some(ev.time_s);
+                    if arrivals == buffer_k && close_s.is_none() {
+                        close_s = Some(ev.time_s);
+                    }
+                }
+                EventKind::LateUpload { client } => {
+                    late.push((ev.time_s, client));
+                    arrivals += 1;
+                    last_arrival_s = Some(ev.time_s);
+                    if arrivals == buffer_k && close_s.is_none() {
+                        close_s = Some(ev.time_s);
+                    }
+                }
+                // Async rounds schedule no deadline events.
+                EventKind::Deadline => {}
+            }
+        }
+
+        // Fewer than buffer_k arrivals possible: the server closes when
+        // nothing more can arrive (the last arrival, or immediately).
+        let close_s = close_s.or(last_arrival_s).unwrap_or(start_s);
+
+        let mut completers = Vec::new();
+        let mut next_inflight: Vec<InFlightUpload> = Vec::new();
+        let mut deferred = Vec::new();
+        // In-flight arrivals keep queue priority over this round's
+        // deferrals in the next round's event order: re-queue them first.
+        for (t, c) in late.iter().copied().filter(|(t, _)| *t > close_s) {
+            let dispatch_round = origin[&c];
+            next_inflight.push(InFlightUpload { client: c, arrive_s: t, dispatch_round });
+        }
+        for (t, c) in fresh {
+            if t <= close_s {
+                completers.push(c);
+            } else {
+                deferred.push(c);
+                let u = InFlightUpload { client: c, arrive_s: t, dispatch_round: round };
+                next_inflight.push(u);
+            }
+        }
+        let late_arrivals: Vec<InFlightUpload> = late
+            .iter()
+            .copied()
+            .filter(|(t, _)| *t <= close_s)
+            .map(|(t, c)| InFlightUpload { client: c, arrive_s: t, dispatch_round: origin[&c] })
+            .collect();
+        self.inflight = next_inflight;
+
+        // Unreachable clients are the only stragglers under async — every
+        // dispatched client either drops out or (eventually) arrives.
+        let stragglers: Vec<usize> =
+            works.iter().filter(|w| !w.ready_s.is_finite()).map(|w| w.id).collect();
+        events.retain(|e| e.time_s <= close_s);
+        RoundPlan {
+            completers,
+            stragglers,
+            dropouts,
+            late_arrivals,
+            deferred,
+            start_s,
+            end_s: close_s,
+            events,
+        }
+    }
+}
+
+/// Run one self-contained round's cohort through the event loop (`sync`,
+/// `deadline`, `over-select` — for `async` use [`FleetEngine`]). `keep`
+/// caps how many finishers are aggregated (`usize::MAX` for
+/// sync/deadline; `per_round` for over-select). Dropout draws happen in
+/// event order from `rng`, so the whole plan is a pure function of its
+/// arguments.
 pub fn simulate_round(
     start_s: f64,
     works: &[ClientWork],
@@ -132,6 +374,10 @@ pub fn simulate_round(
     keep: usize,
     rng: &mut Rng,
 ) -> RoundPlan {
+    debug_assert!(
+        !matches!(policy, RoundPolicy::Async { .. }),
+        "async rounds carry cross-round state; use FleetEngine::simulate_round"
+    );
     // An empty cohort is a no-op round: nothing to dispatch, so no
     // deadline wait either (the server has nobody to wait for).
     if works.is_empty() {
@@ -139,6 +385,8 @@ pub fn simulate_round(
             completers: Vec::new(),
             stragglers: Vec::new(),
             dropouts: Vec::new(),
+            late_arrivals: Vec::new(),
+            deferred: Vec::new(),
             start_s,
             end_s: start_s,
             events: Vec::new(),
@@ -195,6 +443,8 @@ pub fn simulate_round(
                     break; // over-select: cohort is full
                 }
             }
+            // Self-contained rounds never schedule late uploads.
+            EventKind::LateUpload { .. } => {}
             EventKind::Deadline => {
                 events.push(ev);
                 end_s = clock.now_s();
@@ -211,7 +461,16 @@ pub fn simulate_round(
         .map(|w| w.id)
         .filter(|id| !completers.contains(id) && !dropouts.contains(id))
         .collect();
-    RoundPlan { completers, stragglers, dropouts, start_s, end_s, events }
+    RoundPlan {
+        completers,
+        stragglers,
+        dropouts,
+        late_arrivals: Vec::new(),
+        deferred: Vec::new(),
+        start_s,
+        end_s,
+        events,
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +483,10 @@ mod tests {
 
     fn work(id: usize, ready: f64, down: f64, train: f64, up: f64, drop_p: f64) -> ClientWork {
         ClientWork { id, ready_s: ready, down_s: down, train_s: train, up_s: up, dropout_p: drop_p }
+    }
+
+    fn defaults() -> PolicyDefaults {
+        PolicyDefaults { deadline_s: 60.0, over_select_extra: 4, buffer_k: 10, max_staleness: 8 }
     }
 
     #[test]
@@ -319,6 +582,13 @@ mod tests {
             assert!(plan.completers.is_empty() && plan.events.is_empty());
             assert_eq!(plan.end_s, 7.0, "{policy:?}");
         }
+        // Async with nothing dispatched and nothing in flight is also a no-op.
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: 3, max_staleness: 8 };
+        let plan = engine.simulate_round(0, 7.0, &[], policy, usize::MAX, &mut Rng::new(1));
+        assert!(plan.completers.is_empty() && plan.events.is_empty());
+        assert_eq!(plan.end_s, 7.0);
+        assert!(engine.inflight().is_empty());
     }
 
     #[test]
@@ -335,38 +605,151 @@ mod tests {
             assert_eq!(plan.stragglers, vec![0], "{policy:?}");
             assert!(plan.end_s.is_finite() && (plan.end_s - 4.0).abs() < 1e-9, "{policy:?}");
         }
+        // Async: same classification (an unreachable client can never
+        // produce an upload, in flight or otherwise).
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: 2, max_staleness: 8 };
+        let plan = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+        assert_eq!(plan.completers, vec![1]);
+        assert_eq!(plan.stragglers, vec![0]);
+        assert!(engine.inflight().is_empty());
     }
 
     #[test]
     fn policy_parsing() {
-        assert_eq!(RoundPolicy::parse("sync", 60.0, 4).unwrap(), RoundPolicy::Sync);
+        let d = defaults();
+        assert_eq!(RoundPolicy::parse("sync", &d).unwrap(), RoundPolicy::Sync);
         assert_eq!(
-            RoundPolicy::parse("deadline", 60.0, 4).unwrap(),
+            RoundPolicy::parse("deadline", &d).unwrap(),
             RoundPolicy::Deadline { secs: 60.0 }
         );
         assert_eq!(
-            RoundPolicy::parse("deadline:12.5", 60.0, 4).unwrap(),
+            RoundPolicy::parse("deadline:12.5", &d).unwrap(),
             RoundPolicy::Deadline { secs: 12.5 }
         );
         assert_eq!(
-            RoundPolicy::parse("over-select", 60.0, 4).unwrap(),
+            RoundPolicy::parse("over-select", &d).unwrap(),
             RoundPolicy::OverSelect { extra: 4 }
         );
         assert_eq!(
-            RoundPolicy::parse("over-select:9", 60.0, 4).unwrap(),
+            RoundPolicy::parse("over-select:9", &d).unwrap(),
             RoundPolicy::OverSelect { extra: 9 }
         );
-        assert!(RoundPolicy::parse("async", 60.0, 4).is_err());
-        assert!(RoundPolicy::parse("deadline:abc", 60.0, 4).is_err());
-        assert!(RoundPolicy::parse("deadline:-5", 60.0, 4).is_err(), "negative deadline");
-        assert!(RoundPolicy::parse("deadline:NaN", 60.0, 4).is_err(), "non-finite deadline");
+        assert_eq!(
+            RoundPolicy::parse("async", &d).unwrap(),
+            RoundPolicy::Async { buffer_k: 10, max_staleness: 8 }
+        );
+        assert_eq!(
+            RoundPolicy::parse("async:3", &d).unwrap(),
+            RoundPolicy::Async { buffer_k: 3, max_staleness: 8 }
+        );
+        assert!(RoundPolicy::parse("warp", &d).is_err());
+        assert!(RoundPolicy::parse("deadline:abc", &d).is_err());
+        assert!(RoundPolicy::parse("deadline:-5", &d).is_err(), "negative deadline");
+        assert!(RoundPolicy::parse("deadline:NaN", &d).is_err(), "non-finite deadline");
+        assert!(RoundPolicy::parse("async:0", &d).is_err(), "zero buffer_k never closes");
+        assert!(RoundPolicy::parse("async:nope", &d).is_err());
+        let zero_default = PolicyDefaults { buffer_k: 0, ..defaults() };
+        assert!(RoundPolicy::parse("async", &zero_default).is_err(), "bad default buffer_k");
+    }
+
+    #[test]
+    fn async_with_full_buffer_matches_sync_bit_for_bit() {
+        // buffer_k >= cohort size ⇒ the async round closes at the last
+        // upload, i.e. exactly the sync schedule — the degeneracy the
+        // coordinator's record-level guarantee builds on.
+        let works = vec![
+            work(0, 0.0, 1.0, 5.0, 1.0, 0.0),
+            work(1, 3.0, 2.0, 40.0, 3.0, 0.2),
+            work(2, 0.0, 0.5, 9.0, 0.5, 0.2),
+        ];
+        let sync = simulate_round(2.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(5));
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: works.len(), max_staleness: 8 };
+        let a = engine.simulate_round(0, 2.0, &works, policy, usize::MAX, &mut Rng::new(5));
+        assert_eq!(a.completers, sync.completers);
+        assert_eq!(a.stragglers, sync.stragglers);
+        assert_eq!(a.dropouts, sync.dropouts);
+        assert_eq!(a.events, sync.events, "event traces diverged");
+        assert_eq!(a.end_s.to_bits(), sync.end_s.to_bits(), "sim time diverged");
+        assert!(a.late_arrivals.is_empty() && a.deferred.is_empty());
+        assert!(engine.inflight().is_empty());
+    }
+
+    #[test]
+    fn async_defers_slow_uploads_and_merges_them_later() {
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: 1, max_staleness: 8 };
+        let works = vec![
+            work(0, 0.0, 1.0, 2.0, 1.0, 0.0),   // arrives at t=4
+            work(1, 0.0, 1.0, 50.0, 9.0, 0.0),  // arrives at t=60
+        ];
+        let r0 = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+        assert_eq!(r0.completers, vec![0], "buffer_k=1 closes at the first arrival");
+        assert!((r0.end_s - 4.0).abs() < 1e-9);
+        assert_eq!(r0.deferred, vec![1], "slow upload is deferred, not discarded");
+        assert!(r0.stragglers.is_empty(), "async discards nobody reachable");
+        assert_eq!(engine.inflight().len(), 1);
+        assert_eq!(engine.inflight()[0].client, 1);
+        assert_eq!(engine.inflight()[0].dispatch_round, 0);
+        assert!((engine.inflight()[0].arrive_s - 60.0).abs() < 1e-9);
+
+        // Next round: a fast fresh client plus the in-flight upload. The
+        // late upload (t=60) lands after the fresh arrival (t=14) but the
+        // round needs 2 arrivals, so it closes at the late one.
+        let works2 = vec![work(2, 10.0, 1.0, 2.0, 1.0, 0.0)];
+        let policy2 = RoundPolicy::Async { buffer_k: 2, max_staleness: 8 };
+        let r1 = engine.simulate_round(1, r0.end_s, &works2, policy2, usize::MAX, &mut Rng::new(2));
+        assert_eq!(r1.completers, vec![2]);
+        assert_eq!(r1.late_arrivals.len(), 1);
+        assert_eq!(r1.late_arrivals[0].client, 1);
+        assert_eq!(r1.late_arrivals[0].dispatch_round, 0);
+        assert!((r1.end_s - 60.0).abs() < 1e-9, "round closes at the 2nd arrival");
+        assert!(engine.inflight().is_empty(), "merged upload leaves the queue");
+    }
+
+    #[test]
+    fn async_inflight_survives_rounds_that_close_before_it_lands() {
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: 1, max_staleness: 8 };
+        let slow = vec![work(0, 0.0, 1.0, 200.0, 9.0, 0.0), work(1, 0.0, 0.5, 1.0, 0.5, 0.0)];
+        let r0 = engine.simulate_round(0, 0.0, &slow, policy, usize::MAX, &mut Rng::new(1));
+        assert_eq!(r0.deferred, vec![0]);
+        // Round 1 closes on its own fresh arrival long before t=210.
+        let fast = vec![work(2, 0.0, 0.5, 1.0, 0.5, 0.0)];
+        let r1 = engine.simulate_round(1, r0.end_s, &fast, policy, usize::MAX, &mut Rng::new(2));
+        assert_eq!(r1.completers, vec![2]);
+        assert!(r1.late_arrivals.is_empty(), "upload still in flight");
+        assert_eq!(engine.inflight().len(), 1, "carries across multiple rounds");
+        // Round 2 has no fresh cohort: the only possible arrival is the
+        // in-flight upload, so the round closes when it lands.
+        let r2 = engine.simulate_round(2, r1.end_s, &[], policy, usize::MAX, &mut Rng::new(3));
+        assert_eq!(r2.late_arrivals.len(), 1);
+        assert_eq!(r2.late_arrivals[0].dispatch_round, 0, "staleness spans two rounds");
+        assert!(engine.inflight().is_empty());
+    }
+
+    #[test]
+    fn async_redispatch_supersedes_stale_inflight_upload() {
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: 1, max_staleness: 8 };
+        let works = vec![work(0, 0.0, 1.0, 100.0, 1.0, 0.0), work(1, 0.0, 0.5, 1.0, 0.5, 0.0)];
+        let r0 = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+        assert_eq!(r0.deferred, vec![0]);
+        // Client 0 is sampled again: its old upload is abandoned, and the
+        // fresh dispatch re-enters the round normally.
+        let works2 = vec![work(0, 0.0, 0.5, 1.0, 0.5, 0.0)];
+        let r1 = engine.simulate_round(1, r0.end_s, &works2, policy, usize::MAX, &mut Rng::new(2));
+        assert!(r1.late_arrivals.is_empty(), "stale upload must not merge");
+        assert_eq!(r1.completers, vec![0], "fresh dispatch completes normally");
+        assert!(engine.inflight().is_empty());
     }
 
     /// Build a realistic cohort plan end-to-end from a seeded pool
     /// (profiles sampled with the `Rng` fork discipline) — the fleet
     /// determinism contract: same seed + config ⇒ identical event order,
     /// sim time, and straggler/dropout counts.
-    fn plan_from_pool(seed: u64, policy: RoundPolicy) -> RoundPlan {
+    fn pool_works(seed: u64) -> Vec<ClientWork> {
         let data = SyntheticDataset::new(10, seed);
         let fleet = FleetProfileConfig::named("mobile").unwrap();
         let pool = ClientPool::build(
@@ -385,7 +768,7 @@ mod tests {
             params_trainable: 11_000_000,
         };
         let bytes = 44_000_000u64;
-        let works: Vec<ClientWork> = (0..10)
+        (0..10)
             .map(|cid| {
                 let p = &pool.clients[cid].profile;
                 ClientWork {
@@ -397,13 +780,22 @@ mod tests {
                     dropout_p: p.dropout_p,
                 }
             })
-            .collect();
-        simulate_round(0.0, &works, policy, usize::MAX, &mut Rng::new(seed ^ 0xf1ee))
+            .collect()
+    }
+
+    fn plan_from_pool(seed: u64, policy: RoundPolicy) -> RoundPlan {
+        let works = pool_works(seed);
+        let mut engine = FleetEngine::new();
+        engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(seed ^ 0xf1ee))
     }
 
     #[test]
     fn same_seed_same_plan_bit_for_bit() {
-        for policy in [RoundPolicy::Sync, RoundPolicy::Deadline { secs: 300.0 }] {
+        for policy in [
+            RoundPolicy::Sync,
+            RoundPolicy::Deadline { secs: 300.0 },
+            RoundPolicy::Async { buffer_k: 4, max_staleness: 8 },
+        ] {
             let a = plan_from_pool(9, policy);
             let b = plan_from_pool(9, policy);
             assert_eq!(a.events, b.events, "event order diverged");
@@ -411,6 +803,8 @@ mod tests {
             assert_eq!(a.completers, b.completers);
             assert_eq!(a.stragglers, b.stragglers);
             assert_eq!(a.dropouts, b.dropouts);
+            assert_eq!(a.deferred, b.deferred);
+            assert_eq!(a.late_arrivals, b.late_arrivals);
         }
     }
 
@@ -432,5 +826,36 @@ mod tests {
         let sync = plan_from_pool(9, RoundPolicy::Sync);
         assert!(sync.stragglers.is_empty());
         assert!(sync.end_s > plan.end_s, "sync waits longer than the deadline cut");
+    }
+
+    #[test]
+    fn mobile_async_defers_what_deadline_would_cut() {
+        // Where the deadline policy cuts stragglers, the async policy
+        // keeps their uploads in flight and merges them in later rounds —
+        // the fleet-level half of the ISSUE acceptance criterion.
+        let deadline = plan_from_pool(9, RoundPolicy::Deadline { secs: 60.0 });
+        assert!(!deadline.stragglers.is_empty());
+
+        let works = pool_works(9);
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: 4, max_staleness: 8 };
+        let mut rng = Rng::new(9 ^ 0xf1ee);
+        let r0 = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut rng);
+        assert!(!r0.deferred.is_empty(), "slow mobile uploads must miss a k=4 window");
+        assert!(r0.stragglers.is_empty(), "async discards nobody reachable");
+
+        // Drain subsequent no-cohort rounds: every deferred upload must
+        // eventually merge as a late arrival (none are discarded).
+        let mut merged = 0usize;
+        let mut start = r0.end_s;
+        for round in 1..20 {
+            if engine.inflight().is_empty() {
+                break;
+            }
+            let r = engine.simulate_round(round, start, &[], policy, usize::MAX, &mut rng);
+            merged += r.late_arrivals.len();
+            start = r.end_s;
+        }
+        assert_eq!(merged, r0.deferred.len(), "every straggler upload merges eventually");
     }
 }

@@ -14,8 +14,8 @@ use std::path::PathBuf;
 
 /// Parse the standard example flags: --profile fast|smoke|paper,
 /// --alpha <f64>, --seed, --models a,b,c (model tags), plus the fleet
-/// flags (--round-policy, --deadline-s, --over-select, --fleet-profile,
-/// --dropout).
+/// flags (--round-policy, --deadline-s, --over-select, --buffer-k,
+/// --staleness-alpha, --max-staleness, --fleet-profile, --dropout).
 pub struct ExpOpts {
     pub profile: String,
     pub alpha: Option<f64>,
@@ -25,6 +25,9 @@ pub struct ExpOpts {
     pub round_policy: Option<String>,
     pub deadline_s: Option<f64>,
     pub over_select: Option<usize>,
+    pub buffer_k: Option<usize>,
+    pub staleness_alpha: Option<f64>,
+    pub max_staleness: Option<usize>,
     pub fleet_profile: Option<String>,
     pub dropout_p: Option<f64>,
 }
@@ -46,6 +49,9 @@ impl ExpOpts {
             round_policy: args.get("round-policy").map(String::from),
             deadline_s: args.parse_opt("deadline-s")?,
             over_select: args.parse_opt("over-select")?,
+            buffer_k: args.parse_opt("buffer-k")?,
+            staleness_alpha: args.parse_opt("staleness-alpha")?,
+            max_staleness: args.parse_opt("max-staleness")?,
             fleet_profile: args.get("fleet-profile").map(String::from),
             dropout_p: args.parse_opt("dropout")?,
         })
@@ -73,6 +79,13 @@ impl ExpOpts {
         }
         if let Some(k) = self.over_select {
             cfg.fleet.over_select_extra = k;
+        }
+        cfg.fleet.buffer_k = self.buffer_k.or(cfg.fleet.buffer_k);
+        if let Some(a) = self.staleness_alpha {
+            cfg.fleet.staleness_alpha = a;
+        }
+        if let Some(m) = self.max_staleness {
+            cfg.fleet.max_staleness = m;
         }
         if let Some(f) = &self.fleet_profile {
             cfg.fleet.profile = f.clone();
@@ -178,6 +191,9 @@ mod tests {
             round_policy: Some("deadline".into()),
             deadline_s: Some(90.0),
             over_select: None,
+            buffer_k: Some(5),
+            staleness_alpha: Some(0.25),
+            max_staleness: None,
             fleet_profile: Some("mobile".into()),
             dropout_p: None,
         };
@@ -188,5 +204,8 @@ mod tests {
         assert_eq!(c.fleet.round_policy, "deadline");
         assert_eq!(c.fleet.deadline_s, 90.0);
         assert_eq!(c.fleet.profile, "mobile");
+        assert_eq!(c.fleet.buffer_k, Some(5));
+        assert_eq!(c.fleet.staleness_alpha, 0.25);
+        assert_eq!(c.fleet.max_staleness, 8, "unset knob keeps the default");
     }
 }

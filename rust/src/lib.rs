@@ -14,10 +14,30 @@
 //!   throughput, link speeds, availability trace, dropout), rounds
 //!   dispatch their cohort as events, and a [`fleet::RoundPolicy`]
 //!   (`sync` wait-for-all / `deadline{secs}` cut stragglers /
-//!   `over-select{k}` keep first finishers) decides who aggregates.
+//!   `over-select{k}` keep first finishers / `async{buffer_k,
+//!   max_staleness}` FedBuff-style buffering) decides who aggregates.
 //!   Summaries report simulated time-to-accuracy (`sim_time_s`,
-//!   stragglers, dropouts) alongside accuracy/memory/comm. CLI:
-//!   `--round-policy`, `--deadline-s`, `--fleet-profile`.
+//!   stragglers, dropouts, late merges) alongside accuracy/memory/comm.
+//!   CLI: `--round-policy`, `--deadline-s`, `--buffer-k`,
+//!   `--staleness-alpha`, `--fleet-profile`.
+//!
+//!   Under `async`, rounds are semi-synchronous and round-spanning: the
+//!   round closes at the `buffer_k`-th upload arrival, and stragglers'
+//!   uploads are *not* discarded — they persist in the
+//!   [`fleet::FleetEngine`]'s cross-round in-flight queue (timing) and
+//!   the coordinator's version-stamped pending buffer (tensors), then
+//!   merge on arrival with FedBuff weights `w / (1 + staleness)^alpha`
+//!   via [`aggregate::BufferedAggregator`]. Updates older than
+//!   `max_staleness` rounds, or trained against a since-frozen block
+//!   (artifact/prefix-version mismatch — cheap to detect thanks to
+//!   ProFL's frozen-prefix training), are dropped.
+//!
+//!   **Sync-degeneracy guarantee:** `--round-policy async` with
+//!   `buffer_k = per_round` and `staleness_alpha = 0` closes every round
+//!   at its last upload and discounts nothing, reproducing the `sync`
+//!   policy's round records **bit for bit** (same event order, same rng
+//!   stream, same FedAvg accumulation order). Integration tests pin this
+//!   down; it also means the async machinery costs nothing when unused.
 //! * **L2/L1 (`python/compile`)** — JAX block models + Pallas kernels,
 //!   AOT-lowered once to HLO-text artifacts (`make artifacts`).
 //! * **Runtime bridge** — [`runtime::Runtime`] loads the artifacts through

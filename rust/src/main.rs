@@ -37,9 +37,13 @@ COMMON OPTIONS:
   --csv <path>        run only: write per-round CSV
 
 FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
-  --round-policy <p>  sync | deadline[:S] | over-select[:K] [default: sync]
+  --round-policy <p>  sync | deadline[:S] | over-select[:K] | async[:K]
+                      [default: sync]
   --deadline-s <f64>  Deadline (virtual s) for the deadline policy
   --over-select <k>   Extra clients sampled under over-select
+  --buffer-k <k>      async: arrivals that close a round [default: per_round]
+  --staleness-alpha <f64>  async: late-merge discount w/(1+s)^alpha [default: 0.5]
+  --max-staleness <r> async: drop updates older than r rounds [default: 8]
   --fleet-profile <p> uniform | mobile | datacenter  [default: uniform]
   --dropout <f64>     Per-round dropout probability override
 ";
@@ -67,6 +71,13 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     }
     if let Some(k) = args.parse_opt("over-select")? {
         cfg.fleet.over_select_extra = k;
+    }
+    cfg.fleet.buffer_k = args.parse_opt("buffer-k")?.or(cfg.fleet.buffer_k);
+    if let Some(a) = args.parse_opt("staleness-alpha")? {
+        cfg.fleet.staleness_alpha = a;
+    }
+    if let Some(m) = args.parse_opt("max-staleness")? {
+        cfg.fleet.max_staleness = m;
     }
     if let Some(f) = args.get("fleet-profile") {
         cfg.fleet.profile = f.into();

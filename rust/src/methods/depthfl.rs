@@ -4,10 +4,17 @@
 //! which is what caps DepthFL's participation (§4.2), since depth-1 still
 //! retains the memory-heavy first block's activations. Inference is the
 //! ensemble (mean softmax) of all classifiers.
+//!
+//! Under the `async` round policy the per-depth updates buffer like the
+//! coordinator's: window-missers are trained and parked until the fleet
+//! reports their upload's arrival, then merged into the per-parameter
+//! accumulator with a staleness-discounted weight.
 
 use super::Method;
+use crate::aggregate::staleness_discount;
 use crate::config::RunConfig;
 use crate::coordinator::ServerCtx;
+use crate::fleet::EventKind;
 use crate::manifest::MemCoeffs;
 use crate::metrics::RunSummary;
 use crate::runtime::{literal_f32, literal_i32, Runtime};
@@ -15,6 +22,68 @@ use anyhow::Result;
 use std::collections::HashMap;
 
 pub struct DepthFL;
+
+/// One client's executed depth-prefix update (named tensors, since each
+/// depth covers a different parameter subset).
+struct DepthUpdate {
+    updated: Vec<(String, Vec<f32>)>,
+    weight: f64,
+    loss: f32,
+    bytes: u64,
+    mem_bytes: u64,
+}
+
+/// Run one client's local pass on its assigned depth artifact.
+fn run_client(
+    ctx: &mut ServerCtx<'_>,
+    depth_index: usize,
+    mems: &[MemCoeffs],
+    cid: usize,
+    scan: usize,
+    batch: usize,
+    lr_lit: &xla::Literal,
+) -> Result<DepthUpdate> {
+    let d = depth_index + 1;
+    let tag = ctx.cfg.model_tag.clone();
+    let art = ctx.rt.load(&tag, &format!("depthfl_train_d{d}"))?;
+    let param_lits = ctx.rt.param_literals(&art.meta, &ctx.store)?;
+    let weight = {
+        let data = &ctx.dataset;
+        let client = &mut ctx.pool.clients[cid];
+        client.shard.fill_batches(data, scan, batch, &mut ctx.xs_buf, &mut ctx.ys_buf);
+        client.shard.num_samples() as f64
+    };
+    let xs = literal_f32(&[scan, batch, 32, 32, 3], &ctx.xs_buf)?;
+    let ys = literal_i32(&[scan, batch], &ctx.ys_buf)?;
+    let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
+    inputs.push(&xs);
+    inputs.push(&ys);
+    inputs.push(lr_lit);
+    let outs = art.execute(&inputs)?;
+    let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
+    Ok(DepthUpdate {
+        updated,
+        weight,
+        loss: scalars[0],
+        bytes: art.meta.trainable_bytes(),
+        mem_bytes: mems[depth_index].bytes_at(ctx.cfg.memory.accounting_batch),
+    })
+}
+
+/// Merge one update into the per-parameter weighted accumulator.
+fn accumulate(
+    acc: &mut HashMap<String, (Vec<f32>, f64)>,
+    updated: &[(String, Vec<f32>)],
+    weight: f64,
+) {
+    for (name, data) in updated {
+        let e = acc.entry(name.clone()).or_insert_with(|| (vec![0.0; data.len()], 0.0));
+        for (a, v) in e.0.iter_mut().zip(data) {
+            *a += weight as f32 * v;
+        }
+        e.1 += weight;
+    }
+}
 
 impl Method for DepthFL {
     fn name(&self) -> &'static str {
@@ -31,6 +100,7 @@ impl Method for DepthFL {
         let num_blocks = model.num_blocks;
         let scan = rt.manifest.scan_steps;
         let batch = rt.manifest.train_batch;
+        let alpha = ctx.cfg.fleet.staleness_alpha;
 
         // Depth options ascending: depth d needs depthfl_train_d{d}.
         let mut mems = Vec::new();
@@ -59,6 +129,10 @@ impl Method for DepthFL {
             });
         }
 
+        // Async policy: trained-but-not-arrived updates, keyed by client,
+        // stamped with their dispatch round.
+        let mut pending: HashMap<usize, (DepthUpdate, usize)> = HashMap::new();
+
         let zero = MemCoeffs::default();
         ctx.bump_prefix_version();
         for round in 0..ctx.cfg.max_rounds_total {
@@ -70,10 +144,19 @@ impl Method for DepthFL {
                 let Some(di) = assignment[cid] else { continue };
                 works.push(ctx.client_work(cid, &mems[di], depth_bytes[di], depth_bytes[di]));
             }
+            if ctx.async_params().is_some() {
+                // A fresh dispatch supersedes the client's stale buffered
+                // update (mirrors the fleet engine's in-flight queue).
+                for w in &works {
+                    pending.remove(&w.id);
+                }
+            }
             let plan = ctx.run_fleet(&works);
             // Selection-order aggregation (see coordinator::round).
             let completers: Vec<usize> =
                 sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
+            let deferred: Vec<usize> =
+                sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
 
             let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
             // Per-parameter weighted accumulation: clients contribute only
@@ -86,37 +169,64 @@ impl Method for DepthFL {
 
             for &cid in &completers {
                 let Some(di) = assignment[cid] else { continue };
-                let d = di + 1;
-                let art = ctx.rt.load(&ctx.cfg.model_tag.clone(), &format!("depthfl_train_d{d}"))?;
-                let param_lits = ctx.rt.param_literals(&art.meta, &ctx.store)?;
-                let weight = {
-                    let data = &ctx.dataset;
-                    let client = &mut ctx.pool.clients[cid];
-                    client.shard.fill_batches(data, scan, batch, &mut ctx.xs_buf, &mut ctx.ys_buf);
-                    client.shard.num_samples() as f64
-                };
-                let xs = literal_f32(&[scan, batch, 32, 32, 3], &ctx.xs_buf)?;
-                let ys = literal_i32(&[scan, batch], &ctx.ys_buf)?;
-                let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
-                inputs.push(&xs);
-                inputs.push(&ys);
-                inputs.push(&lr_lit);
-                let outs = art.execute(&inputs)?;
-                let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
-                loss_sum += scalars[0] as f64 * weight;
-                w_sum += weight;
-                for (name, data) in updated {
-                    let e = acc.entry(name).or_insert_with(|| (vec![0.0; data.len()], 0.0));
-                    for (a, v) in e.0.iter_mut().zip(&data) {
-                        *a += weight as f32 * v;
-                    }
-                    e.1 += weight;
-                }
-                let b = art.meta.trainable_bytes();
-                bytes_up += b;
-                bytes_down += b;
-                mem_peak = mem_peak.max(mems[di].bytes_at(ctx.cfg.memory.accounting_batch));
+                let u = run_client(&mut ctx, di, &mems, cid, scan, batch, &lr_lit)?;
+                loss_sum += u.loss as f64 * u.weight;
+                w_sum += u.weight;
+                accumulate(&mut acc, &u.updated, u.weight);
+                bytes_up += u.bytes;
+                bytes_down += u.bytes;
+                mem_peak = mem_peak.max(u.mem_bytes);
                 participants += 1;
+            }
+
+            // Async policy: train window-missers now (their upload is in
+            // flight) and merge earlier rounds' arrivals discounted.
+            // NOTE: this mirrors ServerCtx::{run_fleet supersede,
+            // take_late_arrivals} and heterofl's copy — keep the three
+            // consistent when touching staleness/supersede semantics.
+            let (mut late_merged, mut late_dropped, mut staleness_sum) = (0usize, 0usize, 0usize);
+            if let Some((_, max_staleness)) = ctx.async_params() {
+                for &cid in &deferred {
+                    let Some(di) = assignment[cid] else { continue };
+                    let u = run_client(&mut ctx, di, &mems, cid, scan, batch, &lr_lit)?;
+                    bytes_down += u.bytes;
+                    mem_peak = mem_peak.max(u.mem_bytes);
+                    pending.insert(cid, (u, ctx.round));
+                }
+                for la in &plan.late_arrivals {
+                    if let Some((u, dispatched)) = pending.remove(&la.client) {
+                        let staleness = ctx.round.saturating_sub(dispatched);
+                        if staleness <= max_staleness {
+                            let w = u.weight * staleness_discount(staleness, alpha);
+                            accumulate(&mut acc, &u.updated, w);
+                            bytes_up += u.bytes;
+                            late_merged += 1;
+                            staleness_sum += staleness;
+                        } else {
+                            // Arrived but too stale: the upload still
+                            // happened — charge it and record the discard.
+                            bytes_up += u.bytes;
+                            late_dropped += 1;
+                        }
+                    }
+                }
+            }
+
+            // Downloads shipped to policy-cut stragglers cost bandwidth
+            // even though their updates never aggregate (dropouts vanish
+            // at dispatch, before the download).
+            for ev in &plan.events {
+                if let EventKind::Dispatch { client } = ev.kind {
+                    if plan.completers.contains(&client)
+                        || plan.deferred.contains(&client)
+                        || plan.dropouts.contains(&client)
+                    {
+                        continue;
+                    }
+                    if let Some(di) = assignment[client] {
+                        bytes_down += depth_bytes[di];
+                    }
+                }
             }
 
             // Write back the parameters that received any updates.
@@ -144,6 +254,14 @@ impl Method for DepthFL {
                 sim_time_s: plan.duration_s(),
                 stragglers: plan.stragglers.len(),
                 dropouts: plan.dropouts.len(),
+                deferred: plan.deferred.len(),
+                late_merged,
+                late_dropped,
+                mean_staleness: if late_merged > 0 {
+                    staleness_sum as f64 / late_merged as f64
+                } else {
+                    0.0
+                },
                 ..Default::default()
             };
             ctx.record_round("depthfl", 0, &out, test_acc, f64::NAN);

@@ -5,15 +5,22 @@
 //! keep their previous value). Reproduces the paper's observation that
 //! when no client affords high ratios, most of the model never trains and
 //! accuracy collapses (ResNet34/VGG16 rows of Tables 1/2).
+//!
+//! Under the `async` round policy the width-sliced updates buffer the
+//! same way the coordinator's do: window-missers are trained and parked
+//! until the fleet reports their upload's arrival, then merged into the
+//! sliced accumulator with a staleness-discounted weight.
 
 use super::Method;
-use crate::aggregate::SlicedAggregator;
+use crate::aggregate::{staleness_discount, SlicedAggregator};
 use crate::config::RunConfig;
 use crate::coordinator::ServerCtx;
+use crate::fleet::EventKind;
 use crate::manifest::{Manifest, MemCoeffs};
 use crate::metrics::RunSummary;
 use crate::runtime::{literal_f32, literal_i32, Runtime};
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 
 pub struct HeteroFL {
     /// Complexity levels, ascending by cost (the paper's 4 levels).
@@ -24,6 +31,67 @@ impl Default for HeteroFL {
     fn default() -> Self {
         HeteroFL { ratios: vec![0.125, 0.25, 0.5, 1.0] }
     }
+}
+
+/// One client's executed width-sliced update (plus its accounting).
+struct SlicedUpdate {
+    sub_shapes: Vec<Vec<usize>>,
+    tensors: Vec<Vec<f32>>,
+    weight: f64,
+    loss: f32,
+    bytes: u64,
+    mem_bytes: u64,
+}
+
+/// Run one client's local pass on its assigned width variant: slice the
+/// full global model down to the variant's corner shapes, execute, and
+/// return the updated slices.
+fn run_client(
+    ctx: &mut ServerCtx<'_>,
+    options: &[(String, MemCoeffs, u64)],
+    opt_i: usize,
+    cid: usize,
+    scan: usize,
+    batch: usize,
+    lr_lit: &xla::Literal,
+) -> Result<SlicedUpdate> {
+    let (tag, mem, _) = &options[opt_i];
+    let art = ctx.rt.load(tag, "train_full")?;
+
+    // Slice the full global model down to this variant's shapes.
+    let mut param_lits = Vec::with_capacity(art.meta.inputs.len());
+    let mut sub_shapes = Vec::new();
+    for entry in &art.meta.inputs {
+        if entry.role != "trainable" {
+            break;
+        }
+        let sub = ctx.store.get(&entry.name)?.slice_corner(&entry.shape)?;
+        param_lits.push(literal_f32(&sub.shape, &sub.data)?);
+        sub_shapes.push(sub.shape);
+    }
+
+    let weight = {
+        let data = &ctx.dataset;
+        let client = &mut ctx.pool.clients[cid];
+        client.shard.fill_batches(data, scan, batch, &mut ctx.xs_buf, &mut ctx.ys_buf);
+        client.shard.num_samples() as f64
+    };
+    let xs = literal_f32(&[scan, batch, 32, 32, 3], &ctx.xs_buf)?;
+    let ys = literal_i32(&[scan, batch], &ctx.ys_buf)?;
+    let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
+    inputs.push(&xs);
+    inputs.push(&ys);
+    inputs.push(lr_lit);
+    let outs = art.execute(&inputs)?;
+    let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
+    Ok(SlicedUpdate {
+        sub_shapes,
+        tensors: updated.into_iter().map(|(_, v)| v).collect(),
+        weight,
+        loss: scalars[0],
+        bytes: art.meta.trainable_bytes(),
+        mem_bytes: mem.bytes_at(ctx.cfg.memory.accounting_batch),
+    })
 }
 
 impl Method for HeteroFL {
@@ -41,6 +109,7 @@ impl Method for HeteroFL {
         let num_blocks = base.num_blocks;
         let scan = rt.manifest.scan_steps;
         let batch = rt.manifest.train_batch;
+        let alpha = ctx.cfg.fleet.staleness_alpha;
 
         // Resolve each ratio's tag + memory need + comm bytes (ascending).
         let mut options: Vec<(String, MemCoeffs, u64)> = Vec::new();
@@ -56,9 +125,14 @@ impl Method for HeteroFL {
 
         // Full-model trainable list (order = train_full input order).
         let full_art = base.artifact("train_full")?.clone();
-        let trainable: Vec<String> = full_art.trainable_names().iter().map(|s| s.to_string()).collect();
+        let trainable: Vec<String> =
+            full_art.trainable_names().iter().map(|s| s.to_string()).collect();
         let eval_art = format!("eval_t{num_blocks}");
         let zero = MemCoeffs::default();
+
+        // Async policy: trained-but-not-arrived sliced updates, keyed by
+        // client, stamped with their dispatch round.
+        let mut pending: HashMap<usize, (SlicedUpdate, usize)> = HashMap::new();
 
         ctx.bump_prefix_version();
         for round in 0..ctx.cfg.max_rounds_total {
@@ -71,10 +145,19 @@ impl Method for HeteroFL {
                 let (_, mem, tr_b) = &options[opt_i];
                 works.push(ctx.client_work(cid, mem, *tr_b, *tr_b));
             }
+            if ctx.async_params().is_some() {
+                // A fresh dispatch supersedes the client's stale buffered
+                // update (mirrors the fleet engine's in-flight queue).
+                for w in &works {
+                    pending.remove(&w.id);
+                }
+            }
             let plan = ctx.run_fleet(&works);
             // Selection-order aggregation (see coordinator::round).
             let completers: Vec<usize> =
                 sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
+            let deferred: Vec<usize> =
+                sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
 
             let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
             let mut agg = SlicedAggregator::new(&trainable, &ctx.store)?;
@@ -85,50 +168,67 @@ impl Method for HeteroFL {
 
             for &cid in &completers {
                 let Some(opt_i) = assignment[cid] else { continue };
-                let (tag, mem, _) = &options[opt_i];
-                let art = ctx.rt.load(tag, "train_full")?;
-
-                // Slice the full global model down to this variant's shapes.
-                let mut param_lits = Vec::with_capacity(art.meta.inputs.len());
-                let mut sub_shapes = Vec::new();
-                for entry in &art.meta.inputs {
-                    if entry.role != "trainable" {
-                        break;
-                    }
-                    let sub = ctx.store.get(&entry.name)?.slice_corner(&entry.shape)?;
-                    param_lits.push(literal_f32(&sub.shape, &sub.data)?);
-                    sub_shapes.push(sub.shape);
-                }
-
-                let weight = {
-                    let data = &ctx.dataset;
-                    let client = &mut ctx.pool.clients[cid];
-                    client.shard.fill_batches(data, scan, batch, &mut ctx.xs_buf, &mut ctx.ys_buf);
-                    client.shard.num_samples() as f64
-                };
-                let xs = literal_f32(&[scan, batch, 32, 32, 3], &ctx.xs_buf)?;
-                let ys = literal_i32(&[scan, batch], &ctx.ys_buf)?;
-                let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
-                inputs.push(&xs);
-                inputs.push(&ys);
-                inputs.push(&lr_lit);
-                let outs = art.execute(&inputs)?;
-                let (updated, scalars) = Runtime::unpack_train_outputs(&art.meta, outs)?;
-                loss_sum += scalars[0] as f64 * weight;
-                w_sum += weight;
-                agg.add(
-                    &sub_shapes,
-                    &updated.into_iter().map(|(_, v)| v).collect::<Vec<_>>(),
-                    weight,
-                );
-                let b = art.meta.trainable_bytes();
-                bytes_up += b;
-                bytes_down += b;
-                mem_peak = mem_peak.max(mem.bytes_at(ctx.cfg.memory.accounting_batch));
+                let u = run_client(&mut ctx, &options, opt_i, cid, scan, batch, &lr_lit)?;
+                loss_sum += u.loss as f64 * u.weight;
+                w_sum += u.weight;
+                agg.add(&u.sub_shapes, &u.tensors, u.weight);
+                bytes_up += u.bytes;
+                bytes_down += u.bytes;
+                mem_peak = mem_peak.max(u.mem_bytes);
                 participants += 1;
             }
 
-            if participants > 0 {
+            // Async policy: train window-missers now (their upload is in
+            // flight) and merge earlier rounds' arrivals discounted.
+            // NOTE: this mirrors ServerCtx::{run_fleet supersede,
+            // take_late_arrivals} and depthfl's copy — keep the three
+            // consistent when touching staleness/supersede semantics.
+            let (mut late_merged, mut late_dropped, mut staleness_sum) = (0usize, 0usize, 0usize);
+            if let Some((_, max_staleness)) = ctx.async_params() {
+                for &cid in &deferred {
+                    let Some(opt_i) = assignment[cid] else { continue };
+                    let u = run_client(&mut ctx, &options, opt_i, cid, scan, batch, &lr_lit)?;
+                    bytes_down += u.bytes;
+                    mem_peak = mem_peak.max(u.mem_bytes);
+                    pending.insert(cid, (u, ctx.round));
+                }
+                for la in &plan.late_arrivals {
+                    if let Some((u, dispatched)) = pending.remove(&la.client) {
+                        let staleness = ctx.round.saturating_sub(dispatched);
+                        if staleness <= max_staleness {
+                            let w = u.weight * staleness_discount(staleness, alpha);
+                            agg.add(&u.sub_shapes, &u.tensors, w);
+                            bytes_up += u.bytes;
+                            late_merged += 1;
+                            staleness_sum += staleness;
+                        } else {
+                            // Arrived but too stale: the upload still
+                            // happened — charge it and record the discard.
+                            bytes_up += u.bytes;
+                            late_dropped += 1;
+                        }
+                    }
+                }
+            }
+
+            // Downloads shipped to policy-cut stragglers cost bandwidth
+            // even though their updates never aggregate (dropouts vanish
+            // at dispatch, before the download).
+            for ev in &plan.events {
+                if let EventKind::Dispatch { client } = ev.kind {
+                    if plan.completers.contains(&client)
+                        || plan.deferred.contains(&client)
+                        || plan.dropouts.contains(&client)
+                    {
+                        continue;
+                    }
+                    if let Some(opt_i) = assignment[client] {
+                        bytes_down += options[opt_i].2;
+                    }
+                }
+            }
+
+            if agg.total_weight() > 0.0 {
                 agg.finish(&mut ctx.store)?;
             }
             ctx.round += 1;
@@ -147,6 +247,14 @@ impl Method for HeteroFL {
                 sim_time_s: plan.duration_s(),
                 stragglers: plan.stragglers.len(),
                 dropouts: plan.dropouts.len(),
+                deferred: plan.deferred.len(),
+                late_merged,
+                late_dropped,
+                mean_staleness: if late_merged > 0 {
+                    staleness_sum as f64 / late_merged as f64
+                } else {
+                    0.0
+                },
                 ..Default::default()
             };
             ctx.record_round("heterofl", 0, &out, test_acc, f64::NAN);

@@ -31,6 +31,14 @@ pub struct RoundRecord {
     pub stragglers: usize,
     /// Clients that dropped out after dispatch.
     pub dropouts: usize,
+    /// Straggler updates from earlier rounds merged this round (async
+    /// round policy; always 0 under sync/deadline/over-select).
+    pub late_merged: usize,
+    /// Late updates that arrived but were discarded (too stale, or
+    /// trained against a since-frozen block) — async's true losses.
+    pub late_dropped: usize,
+    /// Mean staleness (rounds) of the late-merged updates (0 when none).
+    pub mean_staleness: f64,
 }
 
 /// Whole-run result: what the table benches consume.
@@ -72,6 +80,16 @@ impl RunSummary {
         let s = self.history.iter().map(|r| r.stragglers).sum();
         let d = self.history.iter().map(|r| r.dropouts).sum();
         (s, d)
+    }
+
+    /// Total straggler updates merged late across the run (async policy).
+    pub fn late_merges(&self) -> usize {
+        self.history.iter().map(|r| r.late_merged).sum()
+    }
+
+    /// Total late updates that arrived but were discarded (async policy).
+    pub fn late_drops(&self) -> usize {
+        self.history.iter().map(|r| r.late_dropped).sum()
     }
 }
 
@@ -136,12 +154,12 @@ impl MetricsSink {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts"
+            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts,late_merged,late_dropped,mean_staleness"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.stage,
                 r.step,
@@ -156,7 +174,10 @@ impl MetricsSink {
                 r.client_mem_bytes,
                 r.sim_time_s,
                 r.stragglers,
-                r.dropouts
+                r.dropouts,
+                r.late_merged,
+                r.late_dropped,
+                r.mean_staleness
             )?;
         }
         Ok(())
@@ -184,6 +205,9 @@ mod tests {
             sim_time_s: round as f64 * 30.0,
             stragglers: 1,
             dropouts: 0,
+            late_merged: round % 2,
+            late_dropped: 0,
+            mean_staleness: 0.0,
         }
     }
 
@@ -238,6 +262,7 @@ mod tests {
         assert_eq!(s.time_to_acc(0.5), Some(90.0));
         assert_eq!(s.time_to_acc(0.9), None);
         assert_eq!(s.fleet_losses(), (4, 0));
+        assert_eq!(s.late_merges(), 2, "rounds 1 and 3 each merged one late update");
     }
 
     #[test]

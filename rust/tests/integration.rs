@@ -223,6 +223,91 @@ fn fleet_deadline_policy_cuts_mobile_stragglers() {
 }
 
 #[test]
+fn async_with_full_buffer_degenerates_to_sync_bit_for_bit() {
+    // ISSUE 2 acceptance: `--round-policy async` with buffer_k = per_round
+    // and staleness_alpha = 0 closes every round at its last upload and
+    // discounts nothing — the whole run's round records must reproduce the
+    // sync policy's bit for bit, on the hardest fleet (mobile: stragglers,
+    // dropout, availability gaps).
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut sync_cfg = tiny();
+    sync_cfg.fleet.profile = "mobile".into();
+    let mut async_cfg = sync_cfg.clone();
+    async_cfg.fleet.round_policy = "async".into(); // buffer_k defaults to per_round
+    async_cfg.fleet.staleness_alpha = 0.0;
+
+    let s = ProFL::default().run(&rt, &sync_cfg).unwrap();
+    let a = ProFL::default().run(&rt, &async_cfg).unwrap();
+    assert_eq!(s.rounds, a.rounds, "round schedules diverged");
+    assert_eq!(s.final_acc.to_bits(), a.final_acc.to_bits());
+    assert_eq!(s.sim_time_s.to_bits(), a.sim_time_s.to_bits());
+    assert_eq!(s.history.len(), a.history.len());
+    for (x, y) in s.history.iter().zip(&a.history) {
+        let at = format!("round {} ({} step {})", x.round, x.stage, x.step);
+        assert_eq!((x.round, &x.stage, x.step), (y.round, &y.stage, y.step), "{at}");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{at}: train_loss");
+        assert_eq!(x.train_acc.to_bits(), y.train_acc.to_bits(), "{at}: train_acc");
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{at}: test_acc");
+        assert_eq!(
+            x.effective_movement.to_bits(),
+            y.effective_movement.to_bits(),
+            "{at}: effective_movement"
+        );
+        assert_eq!(x.participants, y.participants, "{at}: participants");
+        assert_eq!(x.fallback_participants, y.fallback_participants, "{at}");
+        assert_eq!((x.bytes_up, x.bytes_down), (y.bytes_up, y.bytes_down), "{at}: comm");
+        assert_eq!(x.client_mem_bytes, y.client_mem_bytes, "{at}");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{at}: sim_time");
+        assert_eq!((x.stragglers, x.dropouts), (y.stragglers, y.dropouts), "{at}");
+        assert_eq!((x.late_merged, y.late_merged), (0, 0), "{at}: degenerate async defers nobody");
+        assert_eq!(y.mean_staleness.to_bits(), 0f64.to_bits(), "{at}");
+    }
+}
+
+#[test]
+fn async_merges_stragglers_where_deadline_cuts_them() {
+    // ISSUE 2 acceptance: on the mobile fleet where `deadline` reports
+    // stragglers cut, `async` must merge at least one straggler update
+    // (non-zero late_merged) instead of discarding the work.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut cfg = tiny();
+    cfg.num_clients = 30;
+    cfg.fleet.profile = "mobile".into();
+    cfg.fleet.dropout_p = Some(0.0); // isolate straggling from dropout
+
+    // Deadline: slow clients are cut and their work is thrown away.
+    let mut dl_cfg = cfg.clone();
+    dl_cfg.per_round = 30;
+    dl_cfg.fleet.round_policy = "deadline".into();
+    dl_cfg.fleet.deadline_s = 2.0;
+    let mut dl = ServerCtx::new(&rt, dl_cfg).unwrap();
+    let dl_out = dl.run_train_round("train_t1", None, 0.05, "t", 1).unwrap();
+    assert!(dl_out.stragglers > 0, "deadline on a mobile fleet must cut stragglers");
+
+    // Async with a small buffer on the same fleet: the window-missers are
+    // deferred (not discarded) and their updates merge in later rounds.
+    // The op artifact fits every device, so all 8 sampled clients train
+    // and the k=3 window must defer the slow tail.
+    let mut a_cfg = cfg.clone();
+    a_cfg.per_round = 8; // keep most deferred clients un-resampled
+    a_cfg.fleet.round_policy = "async".into();
+    a_cfg.fleet.buffer_k = Some(3);
+    a_cfg.fleet.max_staleness = 16;
+    let mut ctx = ServerCtx::new(&rt, a_cfg).unwrap();
+    let r0 = ctx.run_train_round("train_op_t1", None, 0.05, "t", 1).unwrap();
+    assert!(r0.deferred > 0, "a k=3 window on a slow mobile cohort must defer uploads");
+    assert_eq!(r0.stragglers, 0, "async discards nobody reachable");
+    let mut late_total = r0.late_merged;
+    for _ in 0..8 {
+        let out = ctx.run_train_round("train_op_t1", None, 0.05, "t", 1).unwrap();
+        late_total += out.late_merged;
+    }
+    assert!(late_total > 0, "straggler updates must merge on arrival");
+}
+
+#[test]
 fn comm_accounting_prefix_cached_after_first_download() {
     let dir = require_artifacts!();
     let rt = Runtime::new(&dir).unwrap();

@@ -5,7 +5,7 @@
 //! few hundred randomized cases drawn from `profl::rng::Rng`; failures
 //! print the case seed for deterministic replay.
 
-use profl::aggregate::{Aggregator, SlicedAggregator};
+use profl::aggregate::{staleness_discount, Aggregator, BufferedAggregator, SlicedAggregator};
 use profl::data::{partition, Partition, SyntheticDataset};
 use profl::freezing::{ls_slope, EffectiveMovement};
 use profl::json::Value;
@@ -64,6 +64,44 @@ fn prop_aggregate_within_envelope() {
             }
             agg.add(&[t], rng.uniform(0.1, 10.0));
         }
+        agg.finish(&mut store).unwrap();
+        let out = &store.get("w").unwrap().data;
+        for i in 0..n {
+            assert!(out[i] >= lo[i] - 1e-4 && out[i] <= hi[i] + 1e-4, "i={i}");
+        }
+    });
+}
+
+#[test]
+fn prop_buffered_staleness_merge_stays_in_envelope() {
+    // A staleness-discounted weighted mean is still a convex combination:
+    // whatever the alpha/staleness mix, the merge stays inside the
+    // per-position min/max envelope of the contributing updates, and the
+    // total weight equals the sum of discounted weights.
+    cases(150, |rng| {
+        let shape = rand_shape(rng);
+        let n: usize = shape.iter().product();
+        let mut store = store_with("w", &shape, vec![0.0; n]);
+        let names = vec!["w".to_string()];
+        let alpha = rng.uniform(0.0, 2.0);
+        let mut agg = BufferedAggregator::new(&names, &store, alpha).unwrap();
+        let k = 1 + rng.below(5);
+        let mut lo = vec![f32::MAX; n];
+        let mut hi = vec![f32::MIN; n];
+        let mut expect_w = 0.0f64;
+        for _ in 0..k {
+            let t = rand_tensor(rng, &shape);
+            for i in 0..n {
+                lo[i] = lo[i].min(t[i]);
+                hi[i] = hi[i].max(t[i]);
+            }
+            let w = rng.uniform(0.1, 10.0);
+            let staleness = rng.below(6);
+            expect_w += w * staleness_discount(staleness, alpha);
+            agg.add(&[t], w, staleness);
+        }
+        assert_eq!(agg.merged(), k);
+        assert!((agg.total_weight() - expect_w).abs() < 1e-9);
         agg.finish(&mut store).unwrap();
         let out = &store.get("w").unwrap().data;
         for i in 0..n {

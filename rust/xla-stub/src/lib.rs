@@ -1,0 +1,231 @@
+//! Offline stand-in for the `xla` PJRT bindings (xla_extension 0.5.1).
+//!
+//! The coordinator crate (`profl`) executes AOT-lowered HLO artifacts
+//! through the PJRT C API. That native backend cannot be built in an
+//! offline container, so this crate provides the exact API surface the
+//! coordinator uses:
+//!
+//! * the pure-Rust parts — [`Literal`] construction and readback — are
+//!   fully functional, so everything up to (but excluding) device
+//!   execution is testable offline;
+//! * the PJRT entry points ([`PjRtClient::cpu`], compile, execute,
+//!   [`HloModuleProto::from_text_file`]) return a descriptive [`Error`],
+//!   which surfaces as "PJRT runtime unavailable" the moment a run
+//!   actually needs artifacts.
+//!
+//! To run against real hardware, replace the `xla = { path = "xla-stub" }`
+//! dependency in `rust/Cargo.toml` with the real bindings (LaurentMazare's
+//! `xla-rs` exposes this same interface); no coordinator code changes.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' string-y errors; implements
+/// `std::error::Error` so `?` converts into `anyhow::Error` at call sites.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (built with the offline `xla` stub; \
+         swap in the real bindings in rust/Cargo.toml to execute artifacts)"
+    ))
+}
+
+/// Element dtypes the coordinator uses (both 4 bytes wide).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Scalar types readable out of a [`Literal`].
+pub trait NativeType: Sized + Copy {
+    const TY: ElementType;
+    fn from_ne(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_ne(bytes: [u8; 4]) -> Self {
+        f32::from_ne_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_ne(bytes: [u8; 4]) -> Self {
+        i32::from_ne_bytes(bytes)
+    }
+}
+
+/// Host-side tensor value: dtype + shape + native-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    /// A rank-0 f32 literal (learning rates and friends).
+    pub fn scalar(v: f32) -> Literal {
+        Literal { ty: ElementType::F32, shape: Vec::new(), data: v.to_ne_bytes().to_vec() }
+    }
+
+    /// Build a literal from raw bytes (the coordinator's zero-copy entry
+    /// point); validates that the byte length matches the shape.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = shape.iter().product();
+        if elems * 4 != data.len() {
+            return Err(Error(format!(
+                "shape {shape:?} wants {} bytes, got {}",
+                elems * 4,
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Read the literal back as a host vector; dtype-checked.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!("dtype mismatch: literal is {:?}", self.ty)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_ne([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Destructure a tuple literal. Tuples only come out of device
+    /// execution, which the stub cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native tooling).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({:?})", path.as_ref())))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle (stub: construction fails so callers error early
+/// with a clear message instead of at first execution).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled-and-loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data.to_vec());
+        assert!(lit.to_vec::<i32>().is_err(), "dtype-checked readback");
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn scalar_is_rank_zero() {
+        let lit = Literal::scalar(0.5);
+        assert!(lit.shape().is_empty());
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn pjrt_entry_points_fail_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("PJRT runtime unavailable"), "{err}");
+        assert!(HloModuleProto::from_text_file("nope.hlo").is_err());
+    }
+}
