@@ -1,10 +1,27 @@
 # Top-level convenience targets. `make check` is the pre-PR gate
 # (fmt + clippy + tests); see ROADMAP.md.
 
-.PHONY: check artifacts
+.PHONY: check artifacts test-golden test-golden-update smoke-examples
 
 check:
 	./rust/check.sh
+
+# Golden-trace regression tests only (fleet simulator event traces,
+# compared bit-for-bit against rust/tests/golden/). Regenerate with
+# `make test-golden-update` after an intentional engine change and
+# review the diff.
+test-golden:
+	cargo test --test golden_trace
+
+test-golden-update:
+	UPDATE_GOLDEN=1 cargo test --test golden_trace
+	git diff --stat rust/tests/golden/
+
+# Artifact-free example smoke runs (CI uses this so examples can't
+# bit-rot; async_vs_sync skips cleanly when artifacts are absent).
+smoke-examples:
+	cargo run --release --example churn_sweep -- --smoke
+	cargo run --release --example async_vs_sync -- --profile smoke
 
 # AOT-lower the JAX/Pallas models to HLO artifacts consumed by the Rust
 # runtime (L2/L1; see python/compile). The `compile` package lives under

@@ -1,0 +1,179 @@
+//! Mid-round churn sweep — what does device churn cost under each
+//! (round policy × churn policy) combination?
+//!
+//! Drives the discrete-event fleet engine directly (no compiled model
+//! artifacts needed, so this runs anywhere — CI smoke mode included):
+//! a duty-cycled fleet is sampled once, then every round policy is
+//! crossed with every churn policy over the same seeded cohort stream.
+//! The table reports merged/aborted/deferred/partial counts, interrupt
+//! and resume totals, wasted compute seconds, and total virtual time —
+//! the trade-off surface between discarding interrupted work (`abort`),
+//! waiting for it (`resume`), and salvaging it at epoch granularity
+//! (`checkpoint`).
+//!
+//!   cargo run --release --example churn_sweep
+//!   cargo run --release --example churn_sweep -- --smoke
+//!   cargo run --release --example churn_sweep -- --clients 200 --rounds 50 \
+//!       --fleet-profile mobile --trace-period 600 --trace-duty 0.6
+//!
+//! Everything is seeded: same flags ⇒ byte-identical output.
+
+use anyhow::Result;
+use profl::cli::Args;
+use profl::clients::ClientPool;
+use profl::config::{FleetCfg, RunConfig};
+use profl::data::{Partition, SyntheticDataset};
+use profl::fleet::{ChurnPolicy, ClientWork, FleetEngine, RoundPolicy};
+use profl::harness::save_text;
+use profl::manifest::MemCoeffs;
+use profl::rng::Rng;
+
+/// One cohort member's timings from its sampled device profile; the
+/// artifact footprint is a fixed 11 Mparam / 44 MB proxy (ResNet18-ish).
+fn works_for(pool: &ClientPool, ids: &[usize], start: f64) -> Vec<ClientWork> {
+    let mem = MemCoeffs {
+        fixed_bytes: 0,
+        per_sample_bytes: 0,
+        params_total: 11_000_000,
+        params_trainable: 11_000_000,
+    };
+    let bytes = 44_000_000u64;
+    ids.iter()
+        .map(|&cid| {
+            let p = &pool.clients[cid].profile;
+            ClientWork {
+                id: cid,
+                ready_s: p.trace.next_online(start),
+                down_s: p.down_time_s(bytes),
+                train_s: p.train_time_s(pool.clients[cid].shard.num_samples(), &mem),
+                up_s: p.up_time_s(bytes),
+                dropout_p: p.dropout_p,
+                trace: p.trace,
+            }
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let smoke = args.flag("smoke");
+    let clients: usize = args.parse_opt("clients")?.unwrap_or(if smoke { 20 } else { 100 });
+    let default_cohort = clients.min(if smoke { 8 } else { 30 });
+    let per_round: usize = args.parse_opt("per-round")?.unwrap_or(default_cohort);
+    let rounds: usize = args.parse_opt("rounds")?.unwrap_or(if smoke { 4 } else { 24 });
+    let seed: u64 = args.parse_opt("seed")?.unwrap_or(42);
+
+    // Resolve the fleet through RunConfig so profile names and trace
+    // overrides get the same validation as the real CLI. The default
+    // trace (240s cycle, 50% duty) is deliberately tight: mobile-tier
+    // train times regularly cross the offline edge.
+    let fleet = FleetCfg {
+        profile: args.get_or("fleet-profile", "mobile").to_string(),
+        trace_period_s: args.parse_opt("trace-period")?.or(Some(240.0)),
+        trace_duty: args.parse_opt("trace-duty")?.or(Some(0.5)),
+        dropout_p: args.parse_opt("dropout")?.or(Some(0.05)),
+        ..FleetCfg::default()
+    };
+    let cfg = RunConfig { seed, fleet, ..Default::default() };
+    let profile = cfg.fleet_profile()?;
+
+    let data = SyntheticDataset::new(10, seed);
+    let pool = ClientPool::build(
+        clients,
+        clients * 100,
+        &data,
+        Partition::Iid,
+        cfg.memory.into(),
+        &profile,
+        seed,
+    );
+
+    let buffer_k = (per_round / 2).max(1);
+    let policies: [(&str, RoundPolicy, usize, usize); 4] = [
+        ("sync", RoundPolicy::Sync, per_round, usize::MAX),
+        ("deadline:120", RoundPolicy::Deadline { secs: 120.0 }, per_round, usize::MAX),
+        ("over-select:4", RoundPolicy::OverSelect { extra: 4 }, per_round + 4, per_round),
+        (
+            "async",
+            RoundPolicy::Async { buffer_k, max_staleness: 8 },
+            per_round,
+            usize::MAX,
+        ),
+    ];
+    let churns: [(&str, ChurnPolicy); 4] = [
+        ("none", ChurnPolicy::None),
+        ("abort", ChurnPolicy::Abort),
+        ("resume", ChurnPolicy::Resume),
+        ("checkpoint:4", ChurnPolicy::Checkpoint { epochs: 4 }),
+    ];
+
+    let mut out = String::from("Mid-round churn sweep — fleet engine only (no artifacts)\n");
+    out.push_str(&format!(
+        "clients={clients} per_round={per_round} rounds={rounds} fleet={} \
+         period={:.0}s duty={:.2} dropout={:.2} buffer_k={buffer_k} seed={seed}\n\n",
+        profile.name, profile.period_s, profile.duty, profile.dropout_p,
+    ));
+    out.push_str(&format!(
+        "{:<14} {:<13} {:>6} {:>6} {:>6} {:>7} {:>7} {:>6} {:>6} {:>9} {:>10}\n",
+        "policy",
+        "churn",
+        "merged",
+        "late",
+        "defer",
+        "aborted",
+        "partial",
+        "intr",
+        "resume",
+        "wasted_s",
+        "sim_time",
+    ));
+
+    for (pname, policy, sample_n, keep) in policies {
+        for (cname, churn) in churns {
+            // Fresh seeded streams per combination: rows are comparable
+            // because every combination sees the same cohort sequence.
+            let mut cohort_rng = Rng::new(seed ^ 0xc0_4047);
+            let mut fleet_rng = Rng::new(seed ^ 0xf1ee_7c10);
+            let mut engine = FleetEngine::new();
+            let mut start = 0.0f64;
+            let (mut merged, mut late, mut deferred) = (0usize, 0usize, 0usize);
+            let mut aborted = 0usize;
+            let (mut partial, mut interrupts, mut resumes) = (0usize, 0usize, 0usize);
+            let mut wasted = 0.0f64;
+            for round in 0..rounds {
+                // Sample the cohort excluding clients whose upload is
+                // still in flight (mirrors the coordinator).
+                let busy: Vec<usize> = engine.inflight().iter().map(|u| u.client).collect();
+                let eligible: Vec<usize> =
+                    (0..pool.len()).filter(|id| !busy.contains(id)).collect();
+                let k = sample_n.min(eligible.len());
+                let ids: Vec<usize> = cohort_rng
+                    .sample_indices(eligible.len(), k)
+                    .into_iter()
+                    .map(|i| eligible[i])
+                    .collect();
+                let works = works_for(&pool, &ids, start);
+                let rng = &mut fleet_rng;
+                let plan = engine.simulate_round(round, start, &works, policy, keep, churn, rng);
+                merged += plan.completers.len();
+                late += plan.late_arrivals.len();
+                deferred += plan.deferred.len();
+                aborted += plan.aborted.len();
+                partial += plan.partials.len();
+                interrupts += plan.interrupts;
+                resumes += plan.resumes;
+                wasted += plan.wasted_compute_s;
+                start = plan.end_s;
+            }
+            out.push_str(&format!(
+                "{:<14} {:<13} {:>6} {:>6} {:>6} {:>7} {:>7} {:>6} {:>6} {:>9.0} {:>10.0}\n",
+                pname, cname, merged, late, deferred, aborted, partial, interrupts, resumes,
+                wasted, start,
+            ));
+        }
+    }
+
+    print!("{out}");
+    save_text("churn_sweep", &out)?;
+    Ok(())
+}

@@ -17,4 +17,10 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo test -q"
 cargo test -q
 
+# The full test run above already includes the golden-trace suite; this
+# named pass keeps a loud, greppable signal when an engine change shifts
+# an event trace (regenerate with `make test-golden-update`).
+echo "== golden traces (make test-golden)"
+cargo test -q --test golden_trace
+
 echo "check: OK"

@@ -83,8 +83,31 @@ impl ClientPool {
     /// "select the client set S from the pool of clients who can afford
     /// training for the current block".
     pub fn select(&mut self, per_round: usize, mem: &MemCoeffs) -> Selection {
-        let ids = self.rng.sample_indices(self.clients.len(), per_round.min(self.clients.len()));
-        let mut sel = Selection { trainers: Vec::new(), fallback: Vec::new(), availability: Vec::new() };
+        self.select_excluding(per_round, mem, &[])
+    }
+
+    /// [`Self::select`] over the pool minus `busy` (clients with an
+    /// upload still in flight under the async round policy — re-sampling
+    /// one would supersede work the server already paid for). An empty
+    /// `busy` takes exactly the plain-sample path, so the rng stream is
+    /// bit-identical to [`Self::select`] — the sync/degenerate-async
+    /// reproducibility guarantees rest on this.
+    pub fn select_excluding(
+        &mut self,
+        per_round: usize,
+        mem: &MemCoeffs,
+        busy: &[usize],
+    ) -> Selection {
+        let ids = if busy.is_empty() {
+            self.rng.sample_indices(self.clients.len(), per_round.min(self.clients.len()))
+        } else {
+            let eligible: Vec<usize> =
+                (0..self.clients.len()).filter(|id| !busy.contains(id)).collect();
+            let k = per_round.min(eligible.len());
+            self.rng.sample_indices(eligible.len(), k).into_iter().map(|i| eligible[i]).collect()
+        };
+        let mut sel =
+            Selection { trainers: Vec::new(), fallback: Vec::new(), availability: Vec::new() };
         for id in ids {
             let avail = self.clients[id].memory.available(&self.mem_cfg);
             sel.availability.push((id, avail));
@@ -216,5 +239,41 @@ mod tests {
         let s2 = b.select(10, &coeffs(400));
         assert_eq!(s1.trainers, s2.trainers);
         assert_eq!(s1.fallback, s2.fallback);
+    }
+
+    #[test]
+    fn busy_clients_are_never_resampled() {
+        // A client with an upload in flight must not re-enter the cohort
+        // (a re-dispatch would supersede — discard — its pending work).
+        let mut p = pool(6);
+        let busy: Vec<usize> = (0..10).collect();
+        for round in 0..20 {
+            let sel = p.select_excluding(20, &coeffs(400), &busy);
+            let sampled: Vec<usize> =
+                sel.availability.iter().map(|&(id, _)| id).collect();
+            assert_eq!(sampled.len(), 20, "cohort still fills from the rest");
+            for id in &sampled {
+                assert!(!busy.contains(id), "round {round}: busy client {id} re-sampled");
+            }
+        }
+        // Excluding everyone leaves an empty (but valid) selection.
+        let all: Vec<usize> = (0..p.len()).collect();
+        let sel = p.select_excluding(20, &coeffs(400), &all);
+        assert!(sel.availability.is_empty());
+    }
+
+    #[test]
+    fn empty_busy_set_matches_plain_select_bit_for_bit() {
+        // The degeneracy guarantees need select_excluding(∅) to consume
+        // the rng stream exactly like select.
+        let mut a = pool(7);
+        let mut b = pool(7);
+        for _ in 0..5 {
+            let s1 = a.select(12, &coeffs(400));
+            let s2 = b.select_excluding(12, &coeffs(400), &[]);
+            assert_eq!(s1.trainers, s2.trainers);
+            assert_eq!(s1.fallback, s2.fallback);
+            assert_eq!(s1.availability, s2.availability);
+        }
     }
 }

@@ -5,7 +5,7 @@
 //! bench-feasible round counts. `--profile paper` scales rounds up.
 
 use crate::data::Partition;
-use crate::fleet::{FleetProfileConfig, PolicyDefaults, RoundPolicy};
+use crate::fleet::{ChurnPolicy, FleetProfileConfig, PolicyDefaults, RoundPolicy};
 use crate::freezing::FreezeConfig;
 use crate::memory::MemoryConfig;
 use anyhow::Result;
@@ -91,6 +91,27 @@ pub struct FleetCfg {
     /// Late updates older than this many rounds are dropped instead of
     /// merged under `async`. CLI: `--max-staleness`.
     pub max_staleness: usize,
+    /// Mid-round churn policy: what happens when a device's availability
+    /// trace flips offline *during* a compute or upload span. `none`
+    /// (trace gates dispatch only — the backwards-compatible default),
+    /// `abort` (work lost, wasted compute counted), `resume` (work
+    /// pauses and continues at the next online window), `checkpoint`
+    /// (partial update at epoch granularity, merged with weight ∝
+    /// completed samples). Also accepts `checkpoint:E`.
+    /// CLI: `--churn-policy`.
+    pub churn_policy: String,
+    /// Checkpoint granularity for the bare `checkpoint` spelling: local
+    /// epochs per round a partial update can truncate to.
+    /// CLI: `--churn-epochs`.
+    pub churn_epochs: usize,
+    /// Availability-trace shape override: on/off cycle length in virtual
+    /// seconds; `None` keeps the named profile's period.
+    /// CLI: `--trace-period`.
+    pub trace_period_s: Option<f64>,
+    /// Availability-trace shape override: online fraction of each cycle
+    /// (`>= 1.0` = always on); `None` keeps the profile's duty.
+    /// CLI: `--trace-duty`.
+    pub trace_duty: Option<f64>,
 }
 
 impl Default for FleetCfg {
@@ -104,6 +125,10 @@ impl Default for FleetCfg {
             buffer_k: None,
             staleness_alpha: 0.5,
             max_staleness: 8,
+            churn_policy: "none".into(),
+            churn_epochs: 4,
+            trace_period_s: None,
+            trace_duty: None,
         }
     }
 }
@@ -183,7 +208,8 @@ impl RunConfig {
         }
     }
 
-    /// Resolve the named fleet profile, applying the dropout override.
+    /// Resolve the named fleet profile, applying the dropout and
+    /// trace-shape overrides.
     pub fn fleet_profile(&self) -> Result<FleetProfileConfig> {
         let mut p = FleetProfileConfig::named(&self.fleet.profile)?;
         if let Some(d) = self.fleet.dropout_p {
@@ -192,7 +218,28 @@ impl RunConfig {
             }
             p.dropout_p = d;
         }
+        if let Some(period) = self.fleet.trace_period_s {
+            if !period.is_finite() || period <= 0.0 {
+                anyhow::bail!("trace period must be a finite positive seconds value, got {period}");
+            }
+            p.period_s = period;
+        }
+        if let Some(duty) = self.fleet.trace_duty {
+            // duty >= 1 spells always-on; duty <= 0 would make the whole
+            // fleet permanently unreachable — reject the typo.
+            if !duty.is_finite() || duty <= 0.0 {
+                anyhow::bail!("trace duty must be a finite positive fraction, got {duty}");
+            }
+            p.duty = duty;
+        }
         Ok(p)
+    }
+
+    /// Resolve the configured mid-round churn policy string. The bare
+    /// `checkpoint` spelling takes its granularity from
+    /// `fleet.churn_epochs`.
+    pub fn churn_policy(&self) -> Result<ChurnPolicy> {
+        ChurnPolicy::parse(&self.fleet.churn_policy, self.fleet.churn_epochs)
     }
 
     /// Resolve the configured round policy string. The bare `async`
@@ -338,6 +385,54 @@ mod tests {
         c.fleet.round_policy = "async".into();
         c.fleet.buffer_k = Some(0);
         assert!(c.round_policy().is_err());
+    }
+
+    #[test]
+    fn churn_policy_resolves_and_defaults_off() {
+        let mut c = RunConfig::default();
+        // Backwards-compatible default: no mid-round churn.
+        assert_eq!(c.churn_policy().unwrap(), ChurnPolicy::None);
+        c.fleet.churn_policy = "abort".into();
+        assert_eq!(c.churn_policy().unwrap(), ChurnPolicy::Abort);
+        c.fleet.churn_policy = "resume".into();
+        assert_eq!(c.churn_policy().unwrap(), ChurnPolicy::Resume);
+        // Bare checkpoint takes churn_epochs; the :E spelling wins.
+        c.fleet.churn_policy = "checkpoint".into();
+        assert_eq!(c.churn_policy().unwrap(), ChurnPolicy::Checkpoint { epochs: 4 });
+        c.fleet.churn_epochs = 6;
+        assert_eq!(c.churn_policy().unwrap(), ChurnPolicy::Checkpoint { epochs: 6 });
+        c.fleet.churn_policy = "checkpoint:2".into();
+        assert_eq!(c.churn_policy().unwrap(), ChurnPolicy::Checkpoint { epochs: 2 });
+        c.fleet.churn_policy = "evaporate".into();
+        assert!(c.churn_policy().is_err());
+        c.fleet.churn_policy = "checkpoint".into();
+        c.fleet.churn_epochs = 0;
+        assert!(c.churn_policy().is_err(), "zero epoch granularity");
+    }
+
+    #[test]
+    fn trace_shape_overrides_resolve_and_validate() {
+        let mut c = RunConfig::default();
+        c.fleet.profile = "mobile".into();
+        let base = c.fleet_profile().unwrap();
+        assert_eq!((base.period_s, base.duty), (900.0, 0.85));
+        c.fleet.trace_period_s = Some(120.0);
+        c.fleet.trace_duty = Some(0.5);
+        let p = c.fleet_profile().unwrap();
+        assert_eq!((p.period_s, p.duty), (120.0, 0.5));
+        // duty >= 1 spells always-on (valid).
+        c.fleet.trace_duty = Some(1.0);
+        assert!(c.fleet_profile().is_ok());
+        // Rejections: unreachable fleet / nonsense shapes.
+        c.fleet.trace_duty = Some(0.0);
+        assert!(c.fleet_profile().is_err(), "zero duty");
+        c.fleet.trace_duty = Some(f64::NAN);
+        assert!(c.fleet_profile().is_err(), "NaN duty");
+        c.fleet.trace_duty = Some(0.5);
+        c.fleet.trace_period_s = Some(-3.0);
+        assert!(c.fleet_profile().is_err(), "negative period");
+        c.fleet.trace_period_s = Some(f64::INFINITY);
+        assert!(c.fleet_profile().is_err(), "non-finite period");
     }
 
     #[test]

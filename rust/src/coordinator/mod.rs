@@ -25,10 +25,10 @@
 
 pub mod round;
 
-use crate::clients::ClientPool;
+use crate::clients::{ClientPool, Selection};
 use crate::config::RunConfig;
 use crate::data::SyntheticDataset;
-use crate::fleet::{ClientWork, FleetEngine, RoundPlan, RoundPolicy};
+use crate::fleet::{ChurnPolicy, ClientWork, FleetEngine, RoundPlan, RoundPolicy};
 use crate::manifest::{MemCoeffs, ModelEntry};
 use crate::metrics::MetricsSink;
 use crate::rng::Rng;
@@ -54,8 +54,11 @@ pub struct PendingUpdate {
     pub prefix_version: u64,
     /// Server round index at dispatch (staleness = arrival − dispatch).
     pub dispatch_round: usize,
-    /// Sample weight (shard size) the update carries.
+    /// Sample weight the update carries: shard size, scaled down by the
+    /// checkpointed fraction for churn partials.
     pub weight: f64,
+    /// Whether this is a checkpoint partial (metrics: `partial_merged`).
+    pub partial: bool,
     /// Updated trainable tensors, in the artifact's trainable order.
     pub tensors: Vec<Vec<f32>>,
     /// Upload bytes accounted when the update finally lands.
@@ -72,6 +75,8 @@ pub struct ServerCtx<'rt> {
     pub round: usize,
     /// Resolved round policy (from `cfg.fleet.round_policy`).
     pub policy: RoundPolicy,
+    /// Resolved mid-round churn policy (from `cfg.fleet.churn_policy`).
+    pub churn: ChurnPolicy,
     /// Virtual fleet clock: seconds of simulated wall time since run
     /// start, advanced by each round's event simulation.
     pub sim_time_s: f64,
@@ -97,6 +102,7 @@ impl<'rt> ServerCtx<'rt> {
         let dataset = SyntheticDataset::new(model.num_classes, cfg.seed ^ 0xda7a);
         let fleet_profile = cfg.fleet_profile()?;
         let policy = cfg.round_policy()?;
+        let churn = cfg.churn_policy()?;
         let pool = ClientPool::build(
             cfg.num_clients,
             cfg.total_samples,
@@ -117,6 +123,7 @@ impl<'rt> ServerCtx<'rt> {
             metrics: MetricsSink::new(),
             round: 0,
             policy,
+            churn,
             sim_time_s: 0.0,
             prefix_version: 0,
             engine: FleetEngine::new(),
@@ -181,14 +188,28 @@ impl<'rt> ServerCtx<'rt> {
             train_s: c.profile.train_time_s(c.shard.num_samples(), mem),
             up_s: c.profile.up_time_s(bytes_up),
             dropout_p: c.profile.dropout_p,
+            trace: c.profile.trace,
         }
     }
 
+    /// Sample this round's cohort, excluding clients whose earlier upload
+    /// is still in flight (async policy): re-dispatching them would
+    /// supersede — i.e. silently discard — work the server has already
+    /// paid for. With nothing in flight this is exactly the plain sample,
+    /// so the rng stream (and the sync/degenerate-async guarantees) are
+    /// untouched.
+    pub fn sample_cohort(&mut self, mem: &MemCoeffs) -> Selection {
+        let busy: Vec<usize> = self.engine.inflight().iter().map(|u| u.client).collect();
+        self.pool.select_excluding(self.sample_size(), mem, &busy)
+    }
+
     /// Run one round's cohort through the discrete-event simulator under
-    /// the configured policy, advancing the virtual clock to the
-    /// aggregation instant. Async rounds thread the engine's in-flight
-    /// queue through; a fresh dispatch supersedes the same client's stale
-    /// in-flight upload, so the matching pending update is dropped here.
+    /// the configured round + churn policies, advancing the virtual clock
+    /// to the aggregation instant. Async rounds thread the engine's
+    /// in-flight queue through; [`Self::sample_cohort`] keeps in-flight
+    /// clients out of the cohort, and the `pending.remove` below is the
+    /// matching backstop for callers that sampled some other way (a
+    /// fresh dispatch supersedes the stale in-flight upload).
     pub fn run_fleet(&mut self, works: &[ClientWork]) -> RoundPlan {
         let keep = match self.policy {
             RoundPolicy::OverSelect { .. } => self.cfg.per_round,
@@ -205,6 +226,7 @@ impl<'rt> ServerCtx<'rt> {
             works,
             self.policy,
             keep,
+            self.churn,
             &mut self.fleet_rng,
         );
         self.sim_time_s = plan.end_s;

@@ -9,10 +9,11 @@
 
 use super::{PendingUpdate, ServerCtx, TEST_BATCHES};
 use crate::aggregate::{Aggregator, BufferedAggregator};
-use crate::fleet::EventKind;
+use crate::fleet::{EventKind, RoundPlan};
 use crate::metrics::RoundRecord;
 use crate::runtime::{literal_f32, literal_i32, LoadedArtifact, Runtime};
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// What a train round produced (before the metrics record is finalized).
 pub struct RoundOutcome {
@@ -40,6 +41,15 @@ pub struct RoundOutcome {
     pub late_dropped: usize,
     /// Mean staleness (rounds) of the late-merged updates (0 when none).
     pub mean_staleness: f64,
+    /// Mid-round churn: Interrupt events during this round's spans.
+    pub interrupted: usize,
+    /// Mid-round churn: Resume events (paused work continuing).
+    pub resumed: usize,
+    /// Checkpoint churn: partial updates merged this round (fresh or
+    /// late), each weighted by its completed-sample fraction.
+    pub partial_merged: usize,
+    /// Compute seconds lost to churn (aborts + partial-epoch remainders).
+    pub wasted_compute_s: f64,
 }
 
 impl Default for RoundOutcome {
@@ -61,6 +71,10 @@ impl Default for RoundOutcome {
             late_merged: 0,
             late_dropped: 0,
             mean_staleness: 0.0,
+            interrupted: 0,
+            resumed: 0,
+            partial_merged: 0,
+            wasted_compute_s: 0.0,
         }
     }
 }
@@ -69,6 +83,26 @@ impl Default for RoundOutcome {
 pub struct EvalResult {
     pub loss: f32,
     pub acc: f32,
+}
+
+/// Scale a client's merge weight by its checkpointed fraction (churn
+/// partials), bumping the partial-merge counter. No fraction ⇒ the
+/// weight passes through untouched, so churn-free rounds stay
+/// bit-identical. Shared by the coordinator's train/distill/async paths
+/// and the HeteroFL/DepthFL sliced merges.
+pub(crate) fn partial_scaled(
+    fractions: &HashMap<usize, f64>,
+    cid: usize,
+    weight: f64,
+    partial_merged: &mut usize,
+) -> f64 {
+    match fractions.get(&cid) {
+        Some(f) => {
+            *partial_merged += 1;
+            weight * f
+        }
+        None => weight,
+    }
 }
 
 impl<'rt> ServerCtx<'rt> {
@@ -86,13 +120,14 @@ impl<'rt> ServerCtx<'rt> {
         let tag = self.cfg.model_tag.clone();
         let art = self.rt.load(&tag, artifact)?;
         let mem = art.meta.participation_mem();
-        let sel = self.pool.select(self.sample_size(), &mem);
+        let sel = self.sample_cohort(&mem);
 
         // --- fleet dispatch: virtual-time the memory-eligible cohort --------
         // Each trainer's timeline = availability-gated dispatch → download
         // (trainables, plus the frozen prefix when its cache is stale) →
         // local pass over its shard → upload. The round policy then picks
-        // the aggregation cohort.
+        // the aggregation cohort; the churn policy decides what an
+        // offline flip mid-span does to it.
         let tr_bytes = art.meta.trainable_bytes();
         let fr_bytes = art.meta.frozen_bytes();
         let works: Vec<_> = sel
@@ -112,6 +147,7 @@ impl<'rt> ServerCtx<'rt> {
         // pre-fleet coordinator.
         let completers: Vec<usize> =
             sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
+        let fractions: HashMap<usize, f64> = plan.partials.iter().copied().collect();
 
         let mut outcome = RoundOutcome {
             participants: completers.len(),
@@ -120,6 +156,9 @@ impl<'rt> ServerCtx<'rt> {
             stragglers: plan.stragglers.len(),
             dropouts: plan.dropouts.len(),
             deferred: plan.deferred.len(),
+            interrupted: plan.interrupts,
+            resumed: plan.resumes,
+            wasted_compute_s: plan.wasted_compute_s,
             ..RoundOutcome::default()
         };
 
@@ -131,12 +170,13 @@ impl<'rt> ServerCtx<'rt> {
                 sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
             let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome);
             let (loss, acc) = self.run_cohort_async(
-                &tag, artifact, &completers, &deferred, late, lr, true, &mut outcome,
+                &tag, artifact, &completers, &deferred, &fractions, late, lr, true, &mut outcome,
             )?;
             outcome.mean_loss = loss;
             outcome.mean_acc = acc;
         } else if !completers.is_empty() {
-            let (loss, acc) = self.train_cohort(&tag, artifact, &completers, lr, &mut outcome)?;
+            let (loss, acc) =
+                self.train_cohort(&tag, artifact, &completers, &fractions, lr, &mut outcome)?;
             outcome.mean_loss = loss;
             outcome.mean_acc = acc;
         }
@@ -161,7 +201,7 @@ impl<'rt> ServerCtx<'rt> {
             .collect();
         if let (Some(fb), false) = (fallback_artifact, fallback.is_empty()) {
             let mut fb_out = RoundOutcome::default();
-            self.train_cohort(&tag, fb, &fallback, lr, &mut fb_out)?;
+            self.train_cohort(&tag, fb, &fallback, &HashMap::new(), lr, &mut fb_out)?;
             outcome.fallback = fallback.len();
             outcome.bytes_up += fb_out.bytes_up;
             outcome.bytes_down += fb_out.bytes_down;
@@ -209,20 +249,22 @@ impl<'rt> ServerCtx<'rt> {
     }
 
     /// Charge download bytes for dispatched clients whose updates never
-    /// reached an aggregate: deadline/over-select stragglers received the
-    /// round artifact and trained, so the server's downlink was spent
-    /// either way (otherwise straggler-cutting policies look artificially
-    /// cheap next to sync/async). Completers and async-deferred clients
-    /// are charged on their own paths; dropouts vanish at the dispatch
-    /// instant — before the download — and cost nothing.
+    /// reached an aggregate: deadline/over-select stragglers and
+    /// churn-aborted clients received the round artifact and trained (or
+    /// started to), so the server's downlink was spent either way
+    /// (otherwise straggler-cutting policies look artificially cheap next
+    /// to sync/async). Completers and async-deferred clients are charged
+    /// on their own paths; dropouts vanish at the dispatch instant —
+    /// before the download — and cost nothing.
     fn account_lost_downloads(
         &mut self,
-        plan: &crate::fleet::RoundPlan,
+        plan: &RoundPlan,
         tr_bytes: u64,
         fr_bytes: u64,
         with_prefix: bool,
         outcome: &mut RoundOutcome,
     ) {
+        let mut charged: Vec<usize> = Vec::new();
         for ev in &plan.events {
             if let EventKind::Dispatch { client } = ev.kind {
                 if plan.completers.contains(&client)
@@ -231,6 +273,19 @@ impl<'rt> ServerCtx<'rt> {
                 {
                     continue;
                 }
+                charged.push(client);
+                if with_prefix {
+                    self.account_comm(client, tr_bytes, fr_bytes, false, outcome);
+                } else {
+                    outcome.bytes_down += tr_bytes;
+                }
+            }
+        }
+        // Async plans truncate events at the close instant, so a client
+        // that dispatched *after* the close and then churn-aborted has no
+        // Dispatch event above — but it did receive the artifact.
+        for &client in &plan.aborted {
+            if !charged.contains(&client) {
                 if with_prefix {
                     self.account_comm(client, tr_bytes, fr_bytes, false, outcome);
                 } else {
@@ -263,14 +318,18 @@ impl<'rt> ServerCtx<'rt> {
     }
 
     /// Train one artifact over a cohort and FedAvg the result into the
-    /// store (sync-family policies and the fallback cohort). A
-    /// zero-weight cohort (every shard empty) skips aggregation entirely
-    /// instead of NaN-corrupting the store.
+    /// store (sync-family policies and the fallback cohort). Clients in
+    /// `fractions` merged a churn-checkpointed *partial* update: their
+    /// weight is scaled by the completed-sample fraction (the simulator
+    /// proxy for an epoch-truncated local pass). A zero-weight cohort
+    /// (every shard empty) skips aggregation entirely instead of
+    /// NaN-corrupting the store.
     fn train_cohort(
         &mut self,
         tag: &str,
         artifact: &str,
         cohort: &[usize],
+        fractions: &HashMap<usize, f64>,
         lr: f32,
         outcome: &mut RoundOutcome,
     ) -> Result<(f32, f32)> {
@@ -297,6 +356,7 @@ impl<'rt> ServerCtx<'rt> {
         for &cid in cohort {
             let (tensors, scalars, weight) =
                 self.exec_client(&art, &param_lits, &lr_lit, cid, true)?;
+            let weight = partial_scaled(fractions, cid, weight, &mut outcome.partial_merged);
             loss_sum += scalars[0] as f64 * weight;
             if scalars.len() > 1 {
                 acc_sum += scalars[1] as f64 / (scan * batch) as f64 * weight;
@@ -317,7 +377,10 @@ impl<'rt> ServerCtx<'rt> {
     /// Async (FedBuff-style) cohort processing shared by train and
     /// distill rounds: merge `completers` fresh (staleness 0), train and
     /// buffer `deferred` (their uploads are in flight), merge `late`
-    /// arrivals staleness-discounted. Returns the fresh cohort's mean
+    /// arrivals staleness-discounted. Clients in `fractions` checkpointed
+    /// a churn partial: their weight is scaled by the completed fraction
+    /// (fresh merges here; deferred ones buffer the scaled weight so the
+    /// late merge inherits it). Returns the fresh cohort's mean
     /// (loss, acc); with `buffer_k = per_round` and no in-flight traffic
     /// the arithmetic is bit-identical to [`Self::train_cohort`].
     #[allow(clippy::too_many_arguments)]
@@ -327,6 +390,7 @@ impl<'rt> ServerCtx<'rt> {
         artifact: &str,
         completers: &[usize],
         deferred: &[usize],
+        fractions: &HashMap<usize, f64>,
         late: Vec<(PendingUpdate, usize)>,
         lr: f32,
         with_labels: bool,
@@ -351,6 +415,7 @@ impl<'rt> ServerCtx<'rt> {
         for &cid in completers {
             let (tensors, scalars, weight) =
                 self.exec_client(&art, &param_lits, &lr_lit, cid, with_labels)?;
+            let weight = partial_scaled(fractions, cid, weight, &mut outcome.partial_merged);
             loss_sum += scalars[0] as f64 * weight;
             if with_labels && scalars.len() > 1 {
                 acc_sum += scalars[1] as f64 / (scan * batch) as f64 * weight;
@@ -379,6 +444,12 @@ impl<'rt> ServerCtx<'rt> {
             } else {
                 outcome.bytes_down += tr_bytes;
             }
+            // A deferred churn partial buffers its scaled weight, so the
+            // eventual late merge carries the right sample count.
+            let (weight, partial) = match fractions.get(&cid) {
+                Some(f) => (weight * f, true),
+                None => (weight, false),
+            };
             self.pending.insert(
                 cid,
                 PendingUpdate {
@@ -387,6 +458,7 @@ impl<'rt> ServerCtx<'rt> {
                     prefix_version: self.prefix_version,
                     dispatch_round: self.round,
                     weight,
+                    partial,
                     tensors,
                     bytes_up: tr_bytes,
                 },
@@ -399,6 +471,9 @@ impl<'rt> ServerCtx<'rt> {
             agg.add(&p.tensors, p.weight, staleness);
             outcome.bytes_up += p.bytes_up;
             outcome.late_merged += 1;
+            if p.partial {
+                outcome.partial_merged += 1;
+            }
             staleness_sum += staleness;
         }
         if outcome.late_merged > 0 {
@@ -422,7 +497,7 @@ impl<'rt> ServerCtx<'rt> {
         let tag = self.cfg.model_tag.clone();
         let art = self.rt.load(&tag, artifact)?;
         let mem = art.meta.participation_mem();
-        let sel = self.pool.select(self.sample_size(), &mem);
+        let sel = self.sample_cohort(&mem);
         let tr_bytes = art.meta.trainable_bytes();
 
         // Distillation rounds run under the same fleet policy as train
@@ -436,6 +511,7 @@ impl<'rt> ServerCtx<'rt> {
         // Selection-order aggregation (see run_train_round).
         let completers: Vec<usize> =
             sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
+        let fractions: HashMap<usize, f64> = plan.partials.iter().copied().collect();
 
         let mut outcome = RoundOutcome {
             participants: completers.len(),
@@ -444,6 +520,9 @@ impl<'rt> ServerCtx<'rt> {
             stragglers: plan.stragglers.len(),
             dropouts: plan.dropouts.len(),
             deferred: plan.deferred.len(),
+            interrupted: plan.interrupts,
+            resumed: plan.resumes,
+            wasted_compute_s: plan.wasted_compute_s,
             ..RoundOutcome::default()
         };
 
@@ -452,7 +531,7 @@ impl<'rt> ServerCtx<'rt> {
                 sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
             let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome);
             let (loss, _) = self.run_cohort_async(
-                &tag, artifact, &completers, &deferred, late, lr, false, &mut outcome,
+                &tag, artifact, &completers, &deferred, &fractions, late, lr, false, &mut outcome,
             )?;
             outcome.mean_loss = loss;
             self.account_lost_downloads(&plan, tr_bytes, 0, false, &mut outcome);
@@ -476,6 +555,7 @@ impl<'rt> ServerCtx<'rt> {
         for &cid in &completers {
             let (tensors, scalars, weight) =
                 self.exec_client(&art, &param_lits, &lr_lit, cid, false)?;
+            let weight = partial_scaled(&fractions, cid, weight, &mut outcome.partial_merged);
             loss_sum += scalars[0] as f64 * weight;
             agg.add(&tensors, weight);
             outcome.bytes_up += tr_bytes;
@@ -561,6 +641,10 @@ impl<'rt> ServerCtx<'rt> {
             late_merged: out.late_merged,
             late_dropped: out.late_dropped,
             mean_staleness: out.mean_staleness,
+            interrupted: out.interrupted,
+            resumed: out.resumed,
+            partial_merged: out.partial_merged,
+            wasted_compute_s: out.wasted_compute_s,
         });
     }
 }

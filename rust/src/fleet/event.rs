@@ -20,6 +20,15 @@ pub enum EventKind {
     /// An upload dispatched in an *earlier* round arrived at the server
     /// (async policy: the cross-round in-flight queue).
     LateUpload { client: usize },
+    /// The client's availability trace flipped offline in the middle of a
+    /// compute or upload span (mid-round churn). Under the `abort` churn
+    /// policy (or a `checkpoint` interruption before the first epoch
+    /// boundary) this kills the client's round work; under
+    /// `resume`/`checkpoint` it marks the start of a paused window.
+    Interrupt { client: usize },
+    /// The client came back online and its paused work continued
+    /// (`resume`/`checkpoint` churn policies).
+    Resume { client: usize },
     /// The round policy's aggregation deadline fired.
     Deadline,
 }
@@ -31,7 +40,9 @@ impl EventKind {
             EventKind::Dispatch { client }
             | EventKind::TrainDone { client }
             | EventKind::UploadDone { client }
-            | EventKind::LateUpload { client } => Some(client),
+            | EventKind::LateUpload { client }
+            | EventKind::Interrupt { client }
+            | EventKind::Resume { client } => Some(client),
             EventKind::Deadline => None,
         }
     }

@@ -31,11 +31,34 @@
 //! `simulate_round` calls and is the one entry point that handles every
 //! policy.
 //!
+//! **Mid-round churn.** Availability is not just a dispatch predicate:
+//! the trace is sampled *inside* every compute and upload span, and when
+//! a device flips offline mid-span the engine emits an
+//! [`EventKind::Interrupt`] and applies the configured [`ChurnPolicy`]:
+//!
+//! * [`ChurnPolicy::None`] — pre-churn behaviour (trace gates dispatch
+//!   only); the backwards-compatible default.
+//! * [`ChurnPolicy::Abort`] — the round work is lost at the interruption
+//!   instant; executed train seconds accrue to
+//!   [`RoundPlan::wasted_compute_s`].
+//! * [`ChurnPolicy::Resume`] — work pauses across the offline window and
+//!   continues at the next online one ([`EventKind::Resume`]), stretching
+//!   the span (and, under `async`, the in-flight queue) across round
+//!   deadlines.
+//! * [`ChurnPolicy::Checkpoint`] — training checkpoints at epoch
+//!   granularity: an interrupted client uploads the last completed
+//!   epoch's partial update ([`RoundPlan::partials`], weight ∝ completed
+//!   samples); the partial-epoch remainder is wasted. Downloads and
+//!   uploads pause/resume like `resume`.
+//!
 //! Everything is seeded: same config + seed ⇒ identical event order,
-//! `sim_time_s`, and straggler/dropout counts, bit for bit. With
+//! `sim_time_s`, and straggler/dropout/churn counts, bit for bit. With
 //! `buffer_k` ≥ the dispatched cohort size, an async round closes at the
 //! last upload — exactly the sync schedule, which is what makes the
 //! async policy degenerate to `sync` bit-for-bit (see `lib.rs` docs).
+//! Likewise any churn policy degenerates to `none` on always-on traces:
+//! the fast path pushes the identical event stream, so churn costs
+//! nothing when unused (golden-trace- and integration-tested).
 
 pub mod event;
 pub mod profile;
@@ -43,7 +66,7 @@ pub mod trace;
 
 pub use event::{Event, EventKind, EventQueue, VirtualClock};
 pub use profile::{DeviceProfile, DeviceTier, FleetProfileConfig, TierSpec};
-pub use trace::AvailabilityTrace;
+pub use trace::{AvailabilityTrace, OfflineSpan};
 
 use crate::rng::Rng;
 use anyhow::{bail, Result};
@@ -124,6 +147,63 @@ impl RoundPolicy {
     }
 }
 
+/// What happens when a device's availability trace flips offline in the
+/// middle of a compute or upload span (mid-round churn). Orthogonal to
+/// the [`RoundPolicy`]: every round policy composes with every churn
+/// policy deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnPolicy {
+    /// The trace gates dispatch only; a device that goes offline
+    /// mid-span keeps working (dropout is the only mid-round loss).
+    /// The backwards-compatible default.
+    None,
+    /// Work is lost at the interruption instant: the client leaves the
+    /// round and its executed train seconds count as wasted compute.
+    Abort,
+    /// Work pauses across the offline window and continues at the next
+    /// online one, stretching the span's finish time.
+    Resume,
+    /// Training checkpoints at epoch granularity: an interrupted client
+    /// uploads the last completed epoch's partial update (aggregated with
+    /// weight ∝ completed samples); the partial-epoch remainder is
+    /// wasted. An interruption before the first epoch boundary loses the
+    /// work (abort semantics). Downloads/uploads pause and resume.
+    Checkpoint { epochs: usize },
+}
+
+impl ChurnPolicy {
+    /// Parse a CLI/config spelling: `none` (or `off`), `abort`, `resume`,
+    /// `checkpoint`, `checkpoint:E`. Bare `checkpoint` takes its epoch
+    /// granularity from `default_epochs`.
+    pub fn parse(s: &str, default_epochs: usize) -> Result<Self> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        if arg.is_some() && head != "checkpoint" {
+            bail!("churn policy `{head}` takes no argument");
+        }
+        match head {
+            "none" | "off" => Ok(ChurnPolicy::None),
+            "abort" => Ok(ChurnPolicy::Abort),
+            "resume" => Ok(ChurnPolicy::Resume),
+            "checkpoint" => {
+                let epochs = match arg {
+                    Some(a) => {
+                        a.parse().map_err(|e| anyhow::anyhow!("bad checkpoint epochs `{a}`: {e}"))?
+                    }
+                    None => default_epochs,
+                };
+                if epochs == 0 {
+                    bail!("checkpoint needs epochs >= 1 (granularity of partial updates)");
+                }
+                Ok(ChurnPolicy::Checkpoint { epochs })
+            }
+            other => bail!("unknown churn policy `{other}` (none|abort|resume|checkpoint[:E])"),
+        }
+    }
+}
+
 /// One cohort member's precomputed timing for a round: when it can be
 /// dispatched and how long each leg takes. Built by
 /// `ServerCtx::client_work` from the client's [`DeviceProfile`], shard
@@ -141,6 +221,9 @@ pub struct ClientWork {
     pub up_s: f64,
     /// Probability the client vanishes after dispatch this round.
     pub dropout_p: f64,
+    /// Availability trace, sampled inside compute/upload spans by the
+    /// churn engine (ignored under [`ChurnPolicy::None`]).
+    pub trace: AvailabilityTrace,
 }
 
 /// An upload crossing a round boundary (async policy): the client was
@@ -171,6 +254,29 @@ pub struct RoundPlan {
     /// the window and moved into the engine's in-flight queue instead of
     /// being discarded (arrival order).
     pub deferred: Vec<usize>,
+    /// Clients whose round work was lost to mid-round churn (`abort`
+    /// policy, or a `checkpoint` interruption before the first epoch
+    /// boundary), in interruption order.
+    pub aborted: Vec<usize>,
+    /// Checkpoint policy: clients that checkpointed a *partial* update
+    /// this round, with the completed-work fraction in (0, 1), in
+    /// dispatch-processing order. Their upload may still be cut by the
+    /// round policy (straggler) or deferred (async); the coordinator
+    /// scales the merge weight of whichever partials reach an aggregate.
+    pub partials: Vec<(usize, f64)>,
+    /// Interrupt events processed while simulating this round's cohort
+    /// (under `async` this includes interrupts past the close instant:
+    /// they belong to this round's dispatches, so per-round totals stay
+    /// conserved across a run).
+    pub interrupts: usize,
+    /// Resume events processed while simulating this round's cohort.
+    pub resumes: usize,
+    /// Compute seconds spent on work that never reached an aggregate
+    /// because of churn: abort losses plus partial-epoch remainders.
+    /// Charged when the responsible Interrupt event is processed, so
+    /// losses past a deadline cut stay in straggler territory instead of
+    /// being double-attributed to churn.
+    pub wasted_compute_s: f64,
     pub start_s: f64,
     /// Virtual time at which the server aggregates.
     pub end_s: f64,
@@ -182,6 +288,201 @@ pub struct RoundPlan {
 impl RoundPlan {
     pub fn duration_s(&self) -> f64 {
         self.end_s - self.start_s
+    }
+
+    /// The no-op plan: nothing dispatched, clock untouched.
+    fn empty(start_s: f64) -> Self {
+        RoundPlan {
+            completers: Vec::new(),
+            stragglers: Vec::new(),
+            dropouts: Vec::new(),
+            late_arrivals: Vec::new(),
+            deferred: Vec::new(),
+            aborted: Vec::new(),
+            partials: Vec::new(),
+            interrupts: 0,
+            resumes: 0,
+            wasted_compute_s: 0.0,
+            start_s,
+            end_s: start_s,
+            events: Vec::new(),
+        }
+    }
+}
+
+/// Per-round churn bookkeeping shared by the sync-family and async event
+/// loops: staged abort decisions (resolved when the matching Interrupt
+/// event pops, so the trace stays in execution order), checkpoint
+/// fractions, and counters.
+#[derive(Debug, Default)]
+struct ChurnState {
+    /// Client → (interrupt-time bits, wasted compute seconds): the span
+    /// scheduler decided this client's work is lost; applied when the
+    /// Interrupt event with exactly that timestamp pops (earlier
+    /// Interrupts for the same client are pause witnesses).
+    cut: HashMap<usize, (u64, f64)>,
+    /// Client → (interrupt-time bits, partial-epoch seconds): the
+    /// checkpoint remainder past the last epoch boundary, charged when
+    /// that Interrupt pops — symmetric with `cut`, so a round that ends
+    /// before the interruption (deadline cut, full buffer) reports the
+    /// same zero waste under `checkpoint` as under `abort`.
+    partial_waste: HashMap<usize, (u64, f64)>,
+    /// Client → checkpointed fraction of the local pass, in (0, 1).
+    fractions: HashMap<usize, f64>,
+    /// (client, fraction) in dispatch-processing order (plan output).
+    partials: Vec<(usize, f64)>,
+    aborted: Vec<usize>,
+    wasted_s: f64,
+    interrupts: usize,
+    resumes: usize,
+}
+
+impl ChurnState {
+    /// Process one popped Interrupt event: count it, and if it is the
+    /// staged cut for this client, apply the abort. Returns true when the
+    /// client's round work just died.
+    fn on_interrupt(&mut self, client: usize, time_s: f64) -> bool {
+        self.interrupts += 1;
+        if let Some(&(bits, wasted)) = self.cut.get(&client) {
+            if bits == time_s.to_bits() {
+                self.cut.remove(&client);
+                self.aborted.push(client);
+                self.wasted_s += wasted;
+                return true;
+            }
+        }
+        if let Some(&(bits, wasted)) = self.partial_waste.get(&client) {
+            if bits == time_s.to_bits() {
+                self.partial_waste.remove(&client);
+                self.wasted_s += wasted;
+            }
+        }
+        false
+    }
+}
+
+/// Emit the Interrupt/Resume witness pairs for a pausable span's offline
+/// windows.
+fn push_pauses(q: &mut EventQueue, client: usize, spans: &[OfflineSpan]) {
+    for s in spans {
+        q.push(s.off_s, EventKind::Interrupt { client });
+        q.push(s.on_s, EventKind::Resume { client });
+    }
+}
+
+/// Schedule one client's compute leg (download + local train) starting at
+/// `t`, pushing TrainDone / Interrupt / Resume events as the churn policy
+/// dictates. An aborted leg stages its cut in `st` and pushes only the
+/// fatal Interrupt; a checkpointed partial records its fraction and hands
+/// a TrainDone to the upload path at the interruption instant.
+fn schedule_compute(
+    q: &mut EventQueue,
+    st: &mut ChurnState,
+    w: &ClientWork,
+    t: f64,
+    churn: ChurnPolicy,
+) {
+    let total = w.down_s + w.train_s;
+    if matches!(churn, ChurnPolicy::None) || w.trace.duty >= 1.0 {
+        // Pre-churn fast path: bit-identical event stream (degeneracy).
+        q.push(t + total, EventKind::TrainDone { client: w.id });
+        return;
+    }
+    match churn {
+        ChurnPolicy::None => unreachable!("handled by the fast path"),
+        ChurnPolicy::Abort => {
+            let off = w.trace.next_offline(t);
+            if total <= off - t {
+                q.push(t + total, EventKind::TrainDone { client: w.id });
+            } else {
+                q.push(off, EventKind::Interrupt { client: w.id });
+                let trained = (off - t - w.down_s).clamp(0.0, w.train_s);
+                st.cut.insert(w.id, (off.to_bits(), trained));
+            }
+        }
+        ChurnPolicy::Resume => {
+            let (end, spans) = w.trace.walk_work(t, total);
+            push_pauses(q, w.id, &spans);
+            q.push(end, EventKind::TrainDone { client: w.id });
+        }
+        ChurnPolicy::Checkpoint { epochs } => {
+            // Downloads pause and resume (range requests); training runs
+            // in one online stretch and checkpoints at epoch granularity
+            // when cut — the client uploads what it has instead of
+            // resuming a stale local pass.
+            let (t1, spans) = w.trace.walk_work(t, w.down_s);
+            push_pauses(q, w.id, &spans);
+            let mut ts = t1;
+            if !w.trace.is_online(ts) {
+                // Download completed exactly at an offline boundary:
+                // training starts at the next online window.
+                let on = w.trace.next_online(ts);
+                push_pauses(q, w.id, &[OfflineSpan { off_s: ts, on_s: on }]);
+                ts = on;
+            }
+            let off = w.trace.next_offline(ts);
+            if w.train_s <= off - ts {
+                q.push(ts + w.train_s, EventKind::TrainDone { client: w.id });
+            } else {
+                let trained = off - ts;
+                let done = ((trained / w.train_s) * epochs as f64).floor();
+                q.push(off, EventKind::Interrupt { client: w.id });
+                if done <= 0.0 {
+                    // Not even one epoch checkpointed: the work is lost.
+                    st.cut.insert(w.id, (off.to_bits(), trained));
+                } else {
+                    let fraction = done / epochs as f64;
+                    st.fractions.insert(w.id, fraction);
+                    st.partials.push((w.id, fraction));
+                    let remainder = trained - fraction * w.train_s;
+                    st.partial_waste.insert(w.id, (off.to_bits(), remainder));
+                    q.push(off, EventKind::TrainDone { client: w.id });
+                }
+            }
+        }
+    }
+}
+
+/// Schedule one client's upload leg starting at `t` (its TrainDone
+/// instant) under the churn policy. A checkpointed partial's upload
+/// starts at the next online window (its fatal-free Interrupt already
+/// fired with the TrainDone).
+fn schedule_upload(
+    q: &mut EventQueue,
+    st: &mut ChurnState,
+    w: &ClientWork,
+    t: f64,
+    churn: ChurnPolicy,
+) {
+    if matches!(churn, ChurnPolicy::None) || w.trace.duty >= 1.0 {
+        q.push(t + w.up_s, EventKind::UploadDone { client: w.id });
+        return;
+    }
+    match churn {
+        ChurnPolicy::None => unreachable!("handled by the fast path"),
+        ChurnPolicy::Abort => {
+            let off = w.trace.next_offline(t);
+            if w.up_s <= off - t {
+                q.push(t + w.up_s, EventKind::UploadDone { client: w.id });
+            } else {
+                // The finished local pass dies with the upload.
+                q.push(off, EventKind::Interrupt { client: w.id });
+                st.cut.insert(w.id, (off.to_bits(), w.train_s));
+            }
+        }
+        ChurnPolicy::Resume | ChurnPolicy::Checkpoint { .. } => {
+            let mut ts = t;
+            if st.fractions.contains_key(&w.id) && !w.trace.is_online(ts) {
+                // Partial checkpoint: its Interrupt fired at TrainDone;
+                // pair it with the Resume that starts the upload.
+                let on = w.trace.next_online(ts);
+                q.push(on, EventKind::Resume { client: w.id });
+                ts = on;
+            }
+            let (end, spans) = w.trace.walk_work(ts, w.up_s);
+            push_pauses(q, w.id, &spans);
+            q.push(end, EventKind::UploadDone { client: w.id });
+        }
     }
 }
 
@@ -204,10 +505,12 @@ impl FleetEngine {
         &self.inflight
     }
 
-    /// Run one round's cohort under `policy`. `round` is the server's
-    /// round index (stamped onto deferred uploads so staleness can be
-    /// computed on arrival); `keep` caps how many finishers aggregate
-    /// under over-select (`usize::MAX` otherwise).
+    /// Run one round's cohort under `policy` with mid-round churn handled
+    /// by `churn`. `round` is the server's round index (stamped onto
+    /// deferred uploads so staleness can be computed on arrival); `keep`
+    /// caps how many finishers aggregate under over-select (`usize::MAX`
+    /// otherwise).
+    #[allow(clippy::too_many_arguments)]
     pub fn simulate_round(
         &mut self,
         round: usize,
@@ -215,18 +518,19 @@ impl FleetEngine {
         works: &[ClientWork],
         policy: RoundPolicy,
         keep: usize,
+        churn: ChurnPolicy,
         rng: &mut Rng,
     ) -> RoundPlan {
         match policy {
             RoundPolicy::Async { buffer_k, .. } => {
-                self.simulate_async(round, start_s, works, buffer_k, rng)
+                self.simulate_async(round, start_s, works, buffer_k, churn, rng)
             }
             _ => {
                 debug_assert!(
                     self.inflight.is_empty(),
                     "in-flight uploads exist but the policy is not async"
                 );
-                simulate_round(start_s, works, policy, keep, rng)
+                simulate_round(start_s, works, policy, keep, churn, rng)
             }
         }
     }
@@ -244,10 +548,13 @@ impl FleetEngine {
         start_s: f64,
         works: &[ClientWork],
         buffer_k: usize,
+        churn: ChurnPolicy,
         rng: &mut Rng,
     ) -> RoundPlan {
         // A fresh dispatch supersedes the same client's stale in-flight
-        // upload (the device abandons the old job for the new one).
+        // upload (the device abandons the old job for the new one). The
+        // coordinator excludes in-flight clients from sampling, so this
+        // is a backstop for direct engine users.
         self.inflight.retain(|u| !works.iter().any(|w| w.id == u.client));
 
         let by_id: HashMap<usize, &ClientWork> = works.iter().map(|w| (w.id, w)).collect();
@@ -269,6 +576,7 @@ impl FleetEngine {
         }
 
         let mut clock = VirtualClock::new(start_s);
+        let mut st = ChurnState::default();
         let mut events = Vec::new();
         let mut fresh: Vec<(f64, usize)> = Vec::new();
         let mut late: Vec<(f64, usize)> = Vec::new();
@@ -286,11 +594,11 @@ impl FleetEngine {
                     if rng.f64() < w.dropout_p {
                         dropouts.push(client);
                     } else {
-                        q.push(ev.time_s + w.down_s + w.train_s, EventKind::TrainDone { client });
+                        schedule_compute(&mut q, &mut st, w, ev.time_s, churn);
                     }
                 }
                 EventKind::TrainDone { client } => {
-                    q.push(ev.time_s + by_id[&client].up_s, EventKind::UploadDone { client });
+                    schedule_upload(&mut q, &mut st, by_id[&client], ev.time_s, churn);
                 }
                 EventKind::UploadDone { client } => {
                     fresh.push((ev.time_s, client));
@@ -308,6 +616,12 @@ impl FleetEngine {
                         close_s = Some(ev.time_s);
                     }
                 }
+                EventKind::Interrupt { client } => {
+                    // An aborted client never produces an arrival; the
+                    // window just loses one potential upload.
+                    st.on_interrupt(client, ev.time_s);
+                }
+                EventKind::Resume { .. } => st.resumes += 1,
                 // Async rounds schedule no deadline events.
                 EventKind::Deadline => {}
             }
@@ -344,7 +658,8 @@ impl FleetEngine {
         self.inflight = next_inflight;
 
         // Unreachable clients are the only stragglers under async — every
-        // dispatched client either drops out or (eventually) arrives.
+        // dispatched client either drops out, aborts, or (eventually)
+        // arrives.
         let stragglers: Vec<usize> =
             works.iter().filter(|w| !w.ready_s.is_finite()).map(|w| w.id).collect();
         events.retain(|e| e.time_s <= close_s);
@@ -354,6 +669,11 @@ impl FleetEngine {
             dropouts,
             late_arrivals,
             deferred,
+            aborted: st.aborted,
+            partials: st.partials,
+            interrupts: st.interrupts,
+            resumes: st.resumes,
+            wasted_compute_s: st.wasted_s,
             start_s,
             end_s: close_s,
             events,
@@ -372,6 +692,7 @@ pub fn simulate_round(
     works: &[ClientWork],
     policy: RoundPolicy,
     keep: usize,
+    churn: ChurnPolicy,
     rng: &mut Rng,
 ) -> RoundPlan {
     debug_assert!(
@@ -381,16 +702,7 @@ pub fn simulate_round(
     // An empty cohort is a no-op round: nothing to dispatch, so no
     // deadline wait either (the server has nobody to wait for).
     if works.is_empty() {
-        return RoundPlan {
-            completers: Vec::new(),
-            stragglers: Vec::new(),
-            dropouts: Vec::new(),
-            late_arrivals: Vec::new(),
-            deferred: Vec::new(),
-            start_s,
-            end_s: start_s,
-            events: Vec::new(),
-        };
+        return RoundPlan::empty(start_s);
     }
     let by_id: HashMap<usize, &ClientWork> = works.iter().map(|w| (w.id, w)).collect();
     let mut q = EventQueue::new();
@@ -412,6 +724,7 @@ pub fn simulate_round(
     }
 
     let mut clock = VirtualClock::new(start_s);
+    let mut st = ChurnState::default();
     let mut events = Vec::new();
     let mut completers = Vec::new();
     let mut dropouts = Vec::new();
@@ -427,12 +740,12 @@ pub fn simulate_round(
                     dropouts.push(client);
                     outstanding -= 1;
                 } else {
-                    q.push(ev.time_s + w.down_s + w.train_s, EventKind::TrainDone { client });
+                    schedule_compute(&mut q, &mut st, w, ev.time_s, churn);
                 }
             }
             EventKind::TrainDone { client } => {
                 events.push(ev);
-                q.push(ev.time_s + by_id[&client].up_s, EventKind::UploadDone { client });
+                schedule_upload(&mut q, &mut st, by_id[&client], ev.time_s, churn);
             }
             EventKind::UploadDone { client } => {
                 events.push(ev);
@@ -445,6 +758,18 @@ pub fn simulate_round(
             }
             // Self-contained rounds never schedule late uploads.
             EventKind::LateUpload { .. } => {}
+            EventKind::Interrupt { client } => {
+                events.push(ev);
+                if st.on_interrupt(client, ev.time_s) {
+                    // The server stops waiting for a client it knows is
+                    // gone — mirrors the dropout bookkeeping.
+                    outstanding -= 1;
+                }
+            }
+            EventKind::Resume { .. } => {
+                events.push(ev);
+                st.resumes += 1;
+            }
             EventKind::Deadline => {
                 events.push(ev);
                 end_s = clock.now_s();
@@ -452,14 +777,16 @@ pub fn simulate_round(
             }
         }
         if outstanding == 0 {
-            break; // all uploads in (or dropped) — don't wait for a deadline
+            break; // all uploads in (or dropped/aborted) — don't idle-wait
         }
     }
 
     let stragglers: Vec<usize> = works
         .iter()
         .map(|w| w.id)
-        .filter(|id| !completers.contains(id) && !dropouts.contains(id))
+        .filter(|id| {
+            !completers.contains(id) && !dropouts.contains(id) && !st.aborted.contains(id)
+        })
         .collect();
     RoundPlan {
         completers,
@@ -467,6 +794,11 @@ pub fn simulate_round(
         dropouts,
         late_arrivals: Vec::new(),
         deferred: Vec::new(),
+        aborted: st.aborted,
+        partials: st.partials,
+        interrupts: st.interrupts,
+        resumes: st.resumes,
+        wasted_compute_s: st.wasted_s,
         start_s,
         end_s,
         events,
@@ -482,19 +814,69 @@ mod tests {
     use crate::memory::MemoryConfig;
 
     fn work(id: usize, ready: f64, down: f64, train: f64, up: f64, drop_p: f64) -> ClientWork {
-        ClientWork { id, ready_s: ready, down_s: down, train_s: train, up_s: up, dropout_p: drop_p }
+        ClientWork {
+            id,
+            ready_s: ready,
+            down_s: down,
+            train_s: train,
+            up_s: up,
+            dropout_p: drop_p,
+            trace: AvailabilityTrace::always_on(),
+        }
+    }
+
+    /// `work` on a duty-cycled trace (the churn tests' raw material).
+    fn churn_work(id: usize, tr: AvailabilityTrace, down: f64, train: f64, up: f64) -> ClientWork {
+        ClientWork {
+            id,
+            ready_s: tr.next_online(0.0),
+            down_s: down,
+            train_s: train,
+            up_s: up,
+            dropout_p: 0.0,
+            trace: tr,
+        }
     }
 
     fn defaults() -> PolicyDefaults {
         PolicyDefaults { deadline_s: 60.0, over_select_extra: 4, buffer_k: 10, max_staleness: 8 }
     }
 
+    /// Self-contained round with churn disabled and a fresh seed.
+    fn sim0(start: f64, works: &[ClientWork], policy: RoundPolicy, seed: u64) -> RoundPlan {
+        simulate_round(start, works, policy, usize::MAX, ChurnPolicy::None, &mut Rng::new(seed))
+    }
+
+    /// Self-contained sync round from t=0 under `churn`, fresh seed.
+    fn simc(works: &[ClientWork], churn: ChurnPolicy) -> RoundPlan {
+        simulate_round(0.0, works, RoundPolicy::Sync, usize::MAX, churn, &mut Rng::new(1))
+    }
+
+    /// Engine round with churn disabled and a fresh seed.
+    fn sim(
+        engine: &mut FleetEngine,
+        round: usize,
+        start: f64,
+        works: &[ClientWork],
+        policy: RoundPolicy,
+        seed: u64,
+    ) -> RoundPlan {
+        let mut rng = Rng::new(seed);
+        engine.simulate_round(round, start, works, policy, usize::MAX, ChurnPolicy::None, &mut rng)
+    }
+
     #[test]
     fn sync_waits_for_slowest() {
         let works =
             vec![work(0, 0.0, 1.0, 5.0, 1.0, 0.0), work(1, 0.0, 2.0, 80.0, 3.0, 0.0)];
-        let plan =
-            simulate_round(10.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(1));
+        let plan = simulate_round(
+            10.0,
+            &works,
+            RoundPolicy::Sync,
+            usize::MAX,
+            ChurnPolicy::None,
+            &mut Rng::new(1),
+        );
         assert_eq!(plan.completers, vec![0, 1]);
         assert!(plan.stragglers.is_empty() && plan.dropouts.is_empty());
         // sim time = slowest participant's finish: 10 + 2 + 80 + 3.
@@ -511,6 +893,7 @@ mod tests {
             &works,
             RoundPolicy::Deadline { secs: 20.0 },
             usize::MAX,
+            ChurnPolicy::None,
             &mut Rng::new(1),
         );
         assert_eq!(plan.completers, vec![0]);
@@ -526,6 +909,7 @@ mod tests {
             &works,
             RoundPolicy::Deadline { secs: 100.0 },
             usize::MAX,
+            ChurnPolicy::None,
             &mut Rng::new(1),
         );
         assert_eq!(plan.completers, vec![0]);
@@ -544,6 +928,7 @@ mod tests {
             &works,
             RoundPolicy::OverSelect { extra: 1 },
             2,
+            ChurnPolicy::None,
             &mut Rng::new(1),
         );
         assert_eq!(plan.completers, vec![1, 2], "fastest two win");
@@ -554,8 +939,14 @@ mod tests {
     #[test]
     fn certain_dropout_is_counted_not_straggled() {
         let works = vec![work(0, 0.0, 1.0, 1.0, 1.0, 1.0), work(1, 0.0, 1.0, 1.0, 1.0, 0.0)];
-        let plan =
-            simulate_round(0.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(3));
+        let plan = simulate_round(
+            0.0,
+            &works,
+            RoundPolicy::Sync,
+            usize::MAX,
+            ChurnPolicy::None,
+            &mut Rng::new(3),
+        );
         assert_eq!(plan.dropouts, vec![0]);
         assert_eq!(plan.completers, vec![1]);
         assert!(plan.stragglers.is_empty());
@@ -565,8 +956,14 @@ mod tests {
     fn availability_delays_dispatch() {
         // Client 0 only becomes reachable at t=50.
         let works = vec![work(0, 50.0, 1.0, 2.0, 1.0, 0.0)];
-        let plan =
-            simulate_round(0.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(1));
+        let plan = simulate_round(
+            0.0,
+            &works,
+            RoundPolicy::Sync,
+            usize::MAX,
+            ChurnPolicy::None,
+            &mut Rng::new(1),
+        );
         assert_eq!(plan.events[0].time_s, 50.0);
         assert!((plan.end_s - 54.0).abs() < 1e-9);
     }
@@ -578,14 +975,14 @@ mod tests {
         for policy in
             [RoundPolicy::Sync, RoundPolicy::Deadline { secs: 60.0 }, RoundPolicy::OverSelect { extra: 2 }]
         {
-            let plan = simulate_round(7.0, &[], policy, usize::MAX, &mut Rng::new(1));
+            let plan = sim0(7.0, &[], policy, 1);
             assert!(plan.completers.is_empty() && plan.events.is_empty());
             assert_eq!(plan.end_s, 7.0, "{policy:?}");
         }
         // Async with nothing dispatched and nothing in flight is also a no-op.
         let mut engine = FleetEngine::new();
         let policy = RoundPolicy::Async { buffer_k: 3, max_staleness: 8 };
-        let plan = engine.simulate_round(0, 7.0, &[], policy, usize::MAX, &mut Rng::new(1));
+        let plan = sim(&mut engine, 0, 7.0, &[], policy, 1);
         assert!(plan.completers.is_empty() && plan.events.is_empty());
         assert_eq!(plan.end_s, 7.0);
         assert!(engine.inflight().is_empty());
@@ -600,7 +997,7 @@ mod tests {
             work(1, 0.0, 1.0, 2.0, 1.0, 0.0),
         ];
         for policy in [RoundPolicy::Sync, RoundPolicy::Deadline { secs: 100.0 }] {
-            let plan = simulate_round(0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+            let plan = sim0(0.0, &works, policy, 1);
             assert_eq!(plan.completers, vec![1], "{policy:?}");
             assert_eq!(plan.stragglers, vec![0], "{policy:?}");
             assert!(plan.end_s.is_finite() && (plan.end_s - 4.0).abs() < 1e-9, "{policy:?}");
@@ -609,7 +1006,7 @@ mod tests {
         // produce an upload, in flight or otherwise).
         let mut engine = FleetEngine::new();
         let policy = RoundPolicy::Async { buffer_k: 2, max_staleness: 8 };
-        let plan = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+        let plan = sim(&mut engine, 0, 0.0, &works, policy, 1);
         assert_eq!(plan.completers, vec![1]);
         assert_eq!(plan.stragglers, vec![0]);
         assert!(engine.inflight().is_empty());
@@ -663,10 +1060,17 @@ mod tests {
             work(1, 3.0, 2.0, 40.0, 3.0, 0.2),
             work(2, 0.0, 0.5, 9.0, 0.5, 0.2),
         ];
-        let sync = simulate_round(2.0, &works, RoundPolicy::Sync, usize::MAX, &mut Rng::new(5));
+        let sync = simulate_round(
+            2.0,
+            &works,
+            RoundPolicy::Sync,
+            usize::MAX,
+            ChurnPolicy::None,
+            &mut Rng::new(5),
+        );
         let mut engine = FleetEngine::new();
         let policy = RoundPolicy::Async { buffer_k: works.len(), max_staleness: 8 };
-        let a = engine.simulate_round(0, 2.0, &works, policy, usize::MAX, &mut Rng::new(5));
+        let a = sim(&mut engine, 0, 2.0, &works, policy, 5);
         assert_eq!(a.completers, sync.completers);
         assert_eq!(a.stragglers, sync.stragglers);
         assert_eq!(a.dropouts, sync.dropouts);
@@ -684,7 +1088,7 @@ mod tests {
             work(0, 0.0, 1.0, 2.0, 1.0, 0.0),   // arrives at t=4
             work(1, 0.0, 1.0, 50.0, 9.0, 0.0),  // arrives at t=60
         ];
-        let r0 = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+        let r0 = sim(&mut engine, 0, 0.0, &works, policy, 1);
         assert_eq!(r0.completers, vec![0], "buffer_k=1 closes at the first arrival");
         assert!((r0.end_s - 4.0).abs() < 1e-9);
         assert_eq!(r0.deferred, vec![1], "slow upload is deferred, not discarded");
@@ -699,7 +1103,7 @@ mod tests {
         // round needs 2 arrivals, so it closes at the late one.
         let works2 = vec![work(2, 10.0, 1.0, 2.0, 1.0, 0.0)];
         let policy2 = RoundPolicy::Async { buffer_k: 2, max_staleness: 8 };
-        let r1 = engine.simulate_round(1, r0.end_s, &works2, policy2, usize::MAX, &mut Rng::new(2));
+        let r1 = sim(&mut engine, 1, r0.end_s, &works2, policy2, 2);
         assert_eq!(r1.completers, vec![2]);
         assert_eq!(r1.late_arrivals.len(), 1);
         assert_eq!(r1.late_arrivals[0].client, 1);
@@ -713,17 +1117,17 @@ mod tests {
         let mut engine = FleetEngine::new();
         let policy = RoundPolicy::Async { buffer_k: 1, max_staleness: 8 };
         let slow = vec![work(0, 0.0, 1.0, 200.0, 9.0, 0.0), work(1, 0.0, 0.5, 1.0, 0.5, 0.0)];
-        let r0 = engine.simulate_round(0, 0.0, &slow, policy, usize::MAX, &mut Rng::new(1));
+        let r0 = sim(&mut engine, 0, 0.0, &slow, policy, 1);
         assert_eq!(r0.deferred, vec![0]);
         // Round 1 closes on its own fresh arrival long before t=210.
         let fast = vec![work(2, 0.0, 0.5, 1.0, 0.5, 0.0)];
-        let r1 = engine.simulate_round(1, r0.end_s, &fast, policy, usize::MAX, &mut Rng::new(2));
+        let r1 = sim(&mut engine, 1, r0.end_s, &fast, policy, 2);
         assert_eq!(r1.completers, vec![2]);
         assert!(r1.late_arrivals.is_empty(), "upload still in flight");
         assert_eq!(engine.inflight().len(), 1, "carries across multiple rounds");
         // Round 2 has no fresh cohort: the only possible arrival is the
         // in-flight upload, so the round closes when it lands.
-        let r2 = engine.simulate_round(2, r1.end_s, &[], policy, usize::MAX, &mut Rng::new(3));
+        let r2 = sim(&mut engine, 2, r1.end_s, &[], policy, 3);
         assert_eq!(r2.late_arrivals.len(), 1);
         assert_eq!(r2.late_arrivals[0].dispatch_round, 0, "staleness spans two rounds");
         assert!(engine.inflight().is_empty());
@@ -734,12 +1138,12 @@ mod tests {
         let mut engine = FleetEngine::new();
         let policy = RoundPolicy::Async { buffer_k: 1, max_staleness: 8 };
         let works = vec![work(0, 0.0, 1.0, 100.0, 1.0, 0.0), work(1, 0.0, 0.5, 1.0, 0.5, 0.0)];
-        let r0 = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(1));
+        let r0 = sim(&mut engine, 0, 0.0, &works, policy, 1);
         assert_eq!(r0.deferred, vec![0]);
         // Client 0 is sampled again: its old upload is abandoned, and the
         // fresh dispatch re-enters the round normally.
         let works2 = vec![work(0, 0.0, 0.5, 1.0, 0.5, 0.0)];
-        let r1 = engine.simulate_round(1, r0.end_s, &works2, policy, usize::MAX, &mut Rng::new(2));
+        let r1 = sim(&mut engine, 1, r0.end_s, &works2, policy, 2);
         assert!(r1.late_arrivals.is_empty(), "stale upload must not merge");
         assert_eq!(r1.completers, vec![0], "fresh dispatch completes normally");
         assert!(engine.inflight().is_empty());
@@ -778,6 +1182,7 @@ mod tests {
                     train_s: p.train_time_s(pool.clients[cid].shard.num_samples(), &mem),
                     up_s: p.up_time_s(bytes),
                     dropout_p: p.dropout_p,
+                    trace: p.trace,
                 }
             })
             .collect()
@@ -786,7 +1191,15 @@ mod tests {
     fn plan_from_pool(seed: u64, policy: RoundPolicy) -> RoundPlan {
         let works = pool_works(seed);
         let mut engine = FleetEngine::new();
-        engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut Rng::new(seed ^ 0xf1ee))
+        engine.simulate_round(
+            0,
+            0.0,
+            &works,
+            policy,
+            usize::MAX,
+            ChurnPolicy::None,
+            &mut Rng::new(seed ^ 0xf1ee),
+        )
     }
 
     #[test]
@@ -840,7 +1253,8 @@ mod tests {
         let mut engine = FleetEngine::new();
         let policy = RoundPolicy::Async { buffer_k: 4, max_staleness: 8 };
         let mut rng = Rng::new(9 ^ 0xf1ee);
-        let r0 = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, &mut rng);
+        let r0 =
+            engine.simulate_round(0, 0.0, &works, policy, usize::MAX, ChurnPolicy::None, &mut rng);
         assert!(!r0.deferred.is_empty(), "slow mobile uploads must miss a k=4 window");
         assert!(r0.stragglers.is_empty(), "async discards nobody reachable");
 
@@ -852,10 +1266,263 @@ mod tests {
             if engine.inflight().is_empty() {
                 break;
             }
-            let r = engine.simulate_round(round, start, &[], policy, usize::MAX, &mut rng);
+            let r = engine
+                .simulate_round(round, start, &[], policy, usize::MAX, ChurnPolicy::None, &mut rng);
             merged += r.late_arrivals.len();
             start = r.end_s;
         }
         assert_eq!(merged, r0.deferred.len(), "every straggler upload merges eventually");
+    }
+
+    // --- mid-round churn -------------------------------------------------
+
+    /// period 100, duty 0.6, phase 0: online [0,60), offline [60,100).
+    fn duty_trace() -> AvailabilityTrace {
+        AvailabilityTrace { period_s: 100.0, duty: 0.6, phase_s: 0.0 }
+    }
+
+    #[test]
+    fn churn_policy_parsing() {
+        assert_eq!(ChurnPolicy::parse("none", 4).unwrap(), ChurnPolicy::None);
+        assert_eq!(ChurnPolicy::parse("off", 4).unwrap(), ChurnPolicy::None);
+        assert_eq!(ChurnPolicy::parse("abort", 4).unwrap(), ChurnPolicy::Abort);
+        assert_eq!(ChurnPolicy::parse("resume", 4).unwrap(), ChurnPolicy::Resume);
+        assert_eq!(
+            ChurnPolicy::parse("checkpoint", 4).unwrap(),
+            ChurnPolicy::Checkpoint { epochs: 4 }
+        );
+        assert_eq!(
+            ChurnPolicy::parse("checkpoint:8", 4).unwrap(),
+            ChurnPolicy::Checkpoint { epochs: 8 }
+        );
+        assert!(ChurnPolicy::parse("checkpoint:0", 4).is_err(), "zero granularity");
+        assert!(ChurnPolicy::parse("checkpoint:x", 4).is_err());
+        assert!(ChurnPolicy::parse("checkpoint", 0).is_err(), "bad default epochs");
+        assert!(ChurnPolicy::parse("abort:3", 4).is_err(), "abort takes no argument");
+        assert!(ChurnPolicy::parse("vanish", 4).is_err());
+    }
+
+    #[test]
+    fn abort_loses_interrupted_work_and_counts_waste() {
+        // Client 0 needs 105s of compute but goes offline at t=60: under
+        // `abort` the 55 executed train seconds are wasted and the server
+        // stops waiting for it. Client 1 finishes untouched.
+        let works = vec![
+            churn_work(0, duty_trace(), 5.0, 100.0, 10.0),
+            churn_work(1, duty_trace(), 1.0, 10.0, 1.0),
+        ];
+        let plan = simc(&works, ChurnPolicy::Abort);
+        assert_eq!(plan.completers, vec![1]);
+        assert_eq!(plan.aborted, vec![0]);
+        assert!(plan.stragglers.is_empty(), "aborts are not stragglers");
+        assert_eq!(plan.interrupts, 1);
+        assert_eq!(plan.resumes, 0);
+        assert!((plan.wasted_compute_s - 55.0).abs() < 1e-9);
+        assert!((plan.end_s - 12.0).abs() < 1e-9, "round ends at the last upload");
+        assert!(plan.events.iter().any(|e| matches!(e.kind, EventKind::Interrupt { client: 0 })));
+    }
+
+    #[test]
+    fn abort_on_upload_wastes_the_whole_local_pass() {
+        // Training fits the online window but the upload does not: the
+        // finished pass dies with the upload (train_s fully wasted).
+        let works = vec![churn_work(0, duty_trace(), 5.0, 50.0, 10.0)];
+        let plan = simc(&works, ChurnPolicy::Abort);
+        assert_eq!(plan.aborted, vec![0]);
+        assert!((plan.wasted_compute_s - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resume_stretches_finish_across_offline_windows() {
+        // 105s of compute from t=0 pauses over [60,100) and finishes at
+        // 145; the 10s upload fits the second window ⇒ arrival at 155
+        // (vs 115 uninterrupted — resume never finishes early).
+        let works = vec![churn_work(0, duty_trace(), 5.0, 100.0, 10.0)];
+        let plan = simc(&works, ChurnPolicy::Resume);
+        assert_eq!(plan.completers, vec![0]);
+        assert!(plan.aborted.is_empty() && plan.partials.is_empty());
+        assert_eq!((plan.interrupts, plan.resumes), (1, 1));
+        assert_eq!(plan.wasted_compute_s, 0.0, "resume loses nothing");
+        assert!((plan.end_s - 155.0).abs() < 1e-9);
+        let kinds: Vec<EventKind> = plan.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::Dispatch { client: 0 },
+                EventKind::Interrupt { client: 0 },
+                EventKind::Resume { client: 0 },
+                EventKind::TrainDone { client: 0 },
+                EventKind::UploadDone { client: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn checkpoint_uploads_partial_at_epoch_granularity() {
+        // 55 of 100 train seconds executed before the cut: 2 of 4 epochs
+        // checkpointed ⇒ fraction 0.5, the 5s past the epoch boundary are
+        // wasted, and the partial uploads in the next online window.
+        let works = vec![churn_work(0, duty_trace(), 5.0, 100.0, 10.0)];
+        let churn = ChurnPolicy::Checkpoint { epochs: 4 };
+        let plan = simc(&works, churn);
+        assert_eq!(plan.completers, vec![0], "the partial still arrives");
+        assert_eq!(plan.partials, vec![(0, 0.5)]);
+        assert!(plan.aborted.is_empty());
+        assert!((plan.wasted_compute_s - 5.0).abs() < 1e-9);
+        assert_eq!((plan.interrupts, plan.resumes), (1, 1));
+        assert!((plan.end_s - 110.0).abs() < 1e-9, "upload runs [100,110)");
+    }
+
+    #[test]
+    fn checkpoint_before_first_epoch_aborts() {
+        // Only 55 of 1000 train seconds done — not one epoch boundary
+        // reached, so there is nothing to upload: abort semantics.
+        let works = vec![churn_work(0, duty_trace(), 5.0, 1000.0, 10.0)];
+        let churn = ChurnPolicy::Checkpoint { epochs: 4 };
+        let plan = simc(&works, churn);
+        assert_eq!(plan.aborted, vec![0]);
+        assert!(plan.completers.is_empty() && plan.partials.is_empty());
+        assert!((plan.wasted_compute_s - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn churn_policies_degenerate_on_always_on_traces() {
+        // Acceptance: with always-on traces every churn policy takes the
+        // fast path and reproduces the churn-free plan bit for bit —
+        // events, buckets, rng stream, and times.
+        let works = vec![
+            work(0, 0.0, 1.0, 5.0, 1.0, 0.0),
+            work(1, 3.0, 2.0, 40.0, 3.0, 0.2),
+            work(2, 0.0, 0.5, 9.0, 0.5, 0.2),
+        ];
+        for policy in [
+            RoundPolicy::Sync,
+            RoundPolicy::Deadline { secs: 20.0 },
+            RoundPolicy::Async { buffer_k: 2, max_staleness: 8 },
+        ] {
+            let churns = [
+                ChurnPolicy::Abort,
+                ChurnPolicy::Resume,
+                ChurnPolicy::Checkpoint { epochs: 4 },
+            ];
+            for churn in churns {
+                let mut e0 = FleetEngine::new();
+                let mut e1 = FleetEngine::new();
+                let base = e0.simulate_round(
+                    0,
+                    2.0,
+                    &works,
+                    policy,
+                    usize::MAX,
+                    ChurnPolicy::None,
+                    &mut Rng::new(5),
+                );
+                let under = e1.simulate_round(
+                    0,
+                    2.0,
+                    &works,
+                    policy,
+                    usize::MAX,
+                    churn,
+                    &mut Rng::new(5),
+                );
+                assert_eq!(base, under, "{policy:?} × {churn:?} diverged");
+                assert_eq!(base.end_s.to_bits(), under.end_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn churn_buckets_partition_the_cohort() {
+        // Conservation: every dispatched-or-selected client lands in
+        // exactly one of completers/dropouts/aborted/stragglers/deferred,
+        // whatever the policy × churn combination.
+        let mk = |phase: f64| AvailabilityTrace { period_s: 100.0, duty: 0.6, phase_s: phase };
+        let zero_duty = AvailabilityTrace { period_s: 100.0, duty: 0.0, phase_s: 0.0 };
+        let mut works = vec![
+            churn_work(0, mk(0.0), 5.0, 100.0, 10.0),
+            churn_work(1, mk(30.0), 1.0, 10.0, 1.0),
+            churn_work(2, mk(55.0), 2.0, 30.0, 4.0),
+            churn_work(3, AvailabilityTrace::always_on(), 1.0, 3.0, 1.0),
+            churn_work(4, zero_duty, 1.0, 1.0, 1.0),
+        ];
+        works[3].dropout_p = 1.0; // certain dropout
+        let policies = [
+            (RoundPolicy::Sync, usize::MAX),
+            (RoundPolicy::Deadline { secs: 30.0 }, usize::MAX),
+            (RoundPolicy::OverSelect { extra: 2 }, 2),
+            (RoundPolicy::Async { buffer_k: 2, max_staleness: 8 }, usize::MAX),
+        ];
+        let churns = [
+            ChurnPolicy::None,
+            ChurnPolicy::Abort,
+            ChurnPolicy::Resume,
+            ChurnPolicy::Checkpoint { epochs: 4 },
+        ];
+        for (policy, keep) in policies {
+            for churn in churns {
+                let mut engine = FleetEngine::new();
+                let plan =
+                    engine.simulate_round(0, 0.0, &works, policy, keep, churn, &mut Rng::new(7));
+                let mut seen = std::collections::BTreeSet::new();
+                for bucket in [
+                    &plan.completers,
+                    &plan.stragglers,
+                    &plan.dropouts,
+                    &plan.aborted,
+                    &plan.deferred,
+                ] {
+                    for &id in bucket.iter() {
+                        assert!(seen.insert(id), "{policy:?}×{churn:?}: client {id} twice");
+                    }
+                }
+                assert_eq!(seen.len(), works.len(), "{policy:?}×{churn:?}: client lost");
+                assert!(plan.wasted_compute_s >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn async_checkpoint_partial_defers_and_merges_later() {
+        // buffer_k=1 closes on the fast client; the interrupted client's
+        // partial upload (fraction 0.5) is deferred into the in-flight
+        // queue and merges as a late arrival in a later round.
+        let mut engine = FleetEngine::new();
+        let policy = RoundPolicy::Async { buffer_k: 1, max_staleness: 8 };
+        let churn = ChurnPolicy::Checkpoint { epochs: 4 };
+        let works = vec![
+            churn_work(0, duty_trace(), 5.0, 100.0, 10.0), // partial arrives at 110
+            churn_work(1, duty_trace(), 1.0, 2.0, 1.0),    // arrives at 4
+        ];
+        let r0 = engine.simulate_round(0, 0.0, &works, policy, usize::MAX, churn, &mut Rng::new(1));
+        assert_eq!(r0.completers, vec![1]);
+        assert_eq!(r0.deferred, vec![0]);
+        assert_eq!(r0.partials, vec![(0, 0.5)], "fraction rides the plan for the coordinator");
+        assert_eq!(engine.inflight().len(), 1);
+        let r1 =
+            engine.simulate_round(1, r0.end_s, &[], policy, usize::MAX, churn, &mut Rng::new(2));
+        assert_eq!(r1.late_arrivals.len(), 1);
+        assert_eq!(r1.late_arrivals[0].client, 0);
+        assert!((r1.late_arrivals[0].arrive_s - 110.0).abs() < 1e-9);
+        assert!(engine.inflight().is_empty());
+    }
+
+    #[test]
+    fn resume_under_deadline_still_cuts_stragglers() {
+        // Resume composes with the deadline policy: the paused client's
+        // stretched finish (155) misses a 60s deadline and is cut as an
+        // ordinary straggler — interrupted work is not special-cased past
+        // the server's cutoff.
+        let works = vec![
+            churn_work(0, duty_trace(), 5.0, 100.0, 10.0),
+            churn_work(1, duty_trace(), 1.0, 10.0, 1.0),
+        ];
+        let policy = RoundPolicy::Deadline { secs: 60.0 };
+        let plan =
+            simulate_round(0.0, &works, policy, usize::MAX, ChurnPolicy::Resume, &mut Rng::new(1));
+        assert_eq!(plan.completers, vec![1]);
+        assert_eq!(plan.stragglers, vec![0]);
+        assert!(plan.aborted.is_empty());
+        assert!((plan.end_s - 60.0).abs() < 1e-9);
     }
 }

@@ -1,16 +1,27 @@
-//! Availability traces: when is a device reachable for dispatch?
+//! Availability traces: when is a device reachable — and for how long?
 //!
 //! Devices follow a per-client periodic on/off square wave (charging /
 //! screen-off windows in the mobile profile): within each `period_s`
 //! window the device is online for the first `duty` fraction, shifted by
 //! a client-specific `phase_s` sampled at fleet construction. The trace
-//! gates *dispatch* only — a device that goes offline mid-round is
-//! modelled by the dropout probability instead, which keeps the event
-//! algebra simple while still producing realistic cohort skew.
+//! gates dispatch (`next_online`) *and* is sampled inside every
+//! compute/upload span by the churn engine: [`Self::next_offline`] finds
+//! the interruption instant, and [`Self::walk_work`] completes a pausable
+//! span across offline windows (the `resume`/`checkpoint` churn
+//! policies). Under `ChurnPolicy::None` the mid-span lookups are skipped
+//! and the trace gates dispatch only (the pre-churn behaviour).
 
 use crate::rng::Rng;
 
-#[derive(Debug, Clone, PartialEq)]
+/// One offline window a pausable span crossed while work was pending:
+/// the device went offline at `off_s` and work resumed at `on_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OfflineSpan {
+    pub off_s: f64,
+    pub on_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AvailabilityTrace {
     /// On/off cycle length (virtual seconds).
     pub period_s: f64,
@@ -63,6 +74,51 @@ impl AvailabilityTrace {
             t + (self.period_s - self.cycle_pos(t))
         }
     }
+
+    /// Earliest time `>= t` at which the device goes offline. Always-on
+    /// traces return `f64::INFINITY` (no mid-span churn possible); an
+    /// offline instant returns `t` itself.
+    pub fn next_offline(&self, t: f64) -> f64 {
+        if self.duty >= 1.0 {
+            return f64::INFINITY;
+        }
+        if self.duty <= 0.0 || !self.is_online(t) {
+            return t;
+        }
+        t + (self.duty * self.period_s - self.cycle_pos(t))
+    }
+
+    /// Complete `dur` seconds of *pausable* work starting at `t`: work
+    /// advances only while the device is online and pauses across offline
+    /// windows (the `resume`/`checkpoint` churn semantics). Returns the
+    /// completion time and the offline windows crossed, in order. A span
+    /// starting at an offline instant counts that window too. Zero-duty
+    /// traces never finish (`INFINITY`, no windows) — callers gate
+    /// dispatch on `next_online`, so this is a defensive dead end.
+    pub fn walk_work(&self, t: f64, dur: f64) -> (f64, Vec<OfflineSpan>) {
+        if self.duty >= 1.0 || dur <= 0.0 {
+            return (t + dur, Vec::new());
+        }
+        if self.duty <= 0.0 {
+            return (f64::INFINITY, Vec::new());
+        }
+        let mut spans = Vec::new();
+        let mut cur = t;
+        let mut remaining = dur;
+        loop {
+            if !self.is_online(cur) {
+                let on = self.next_online(cur);
+                spans.push(OfflineSpan { off_s: cur, on_s: on });
+                cur = on;
+            }
+            let off = self.next_offline(cur);
+            if remaining <= off - cur {
+                return (cur + remaining, spans);
+            }
+            remaining -= off - cur;
+            cur = off;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +159,57 @@ mod tests {
         let tr = AvailabilityTrace { period_s: 100.0, duty: 0.0, phase_s: 0.0 };
         assert!(!tr.is_online(5.0));
         assert_eq!(tr.next_online(5.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn next_offline_finds_window_end() {
+        // period 100, duty 0.6, phase 0: online [0,60), offline [60,100).
+        let tr = AvailabilityTrace { period_s: 100.0, duty: 0.6, phase_s: 0.0 };
+        assert!((tr.next_offline(0.0) - 60.0).abs() < 1e-9);
+        assert!((tr.next_offline(59.0) - 60.0).abs() < 1e-9);
+        assert_eq!(tr.next_offline(60.0), 60.0, "already offline");
+        assert_eq!(tr.next_offline(99.0), 99.0);
+        assert!((tr.next_offline(100.0) - 160.0).abs() < 1e-9);
+        assert_eq!(AvailabilityTrace::always_on().next_offline(5.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn walk_work_pauses_across_offline_windows() {
+        let tr = AvailabilityTrace { period_s: 100.0, duty: 0.6, phase_s: 0.0 };
+        // Fits inside the online window: no pause.
+        let (end, spans) = tr.walk_work(10.0, 20.0);
+        assert_eq!(end, 30.0);
+        assert!(spans.is_empty());
+        // 80s of work from t=10: 50s until 60, pause to 100, 30s more.
+        let (end, spans) = tr.walk_work(10.0, 80.0);
+        assert!((end - 130.0).abs() < 1e-9);
+        assert_eq!(spans.len(), 1);
+        assert_eq!((spans[0].off_s, spans[0].on_s), (60.0, 100.0));
+        // Spanning two offline windows.
+        let (end, spans) = tr.walk_work(0.0, 130.0);
+        assert!((end - 210.0).abs() < 1e-9);
+        assert_eq!(spans.len(), 2);
+        // Starting offline counts that window first.
+        let (end, spans) = tr.walk_work(70.0, 10.0);
+        assert!((end - 110.0).abs() < 1e-9);
+        assert_eq!((spans[0].off_s, spans[0].on_s), (70.0, 100.0));
+        // Always-on: identity.
+        let (end, spans) = AvailabilityTrace::always_on().walk_work(3.0, 9.0);
+        assert_eq!((end, spans.len()), (12.0, 0));
+    }
+
+    #[test]
+    fn walk_work_never_finishes_early() {
+        let tr = AvailabilityTrace { period_s: 100.0, duty: 0.3, phase_s: 17.0 };
+        for t in [0.0, 12.5, 40.0, 99.0] {
+            for dur in [0.5, 10.0, 75.0, 240.0] {
+                let (end, spans) = tr.walk_work(t, dur);
+                assert!(end >= t + dur - 1e-9, "t={t} dur={dur} end={end}");
+                // Online time consumed equals the requested duration.
+                let paused: f64 = spans.iter().map(|s| s.on_s - s.off_s).sum();
+                assert!((end - t - paused - dur).abs() < 1e-6, "t={t} dur={dur}");
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,8 @@ use std::path::PathBuf;
 /// Parse the standard example flags: --profile fast|smoke|paper,
 /// --alpha <f64>, --seed, --models a,b,c (model tags), plus the fleet
 /// flags (--round-policy, --deadline-s, --over-select, --buffer-k,
-/// --staleness-alpha, --max-staleness, --fleet-profile, --dropout).
+/// --staleness-alpha, --max-staleness, --fleet-profile, --dropout,
+/// --churn-policy, --churn-epochs, --trace-period, --trace-duty).
 pub struct ExpOpts {
     pub profile: String,
     pub alpha: Option<f64>,
@@ -30,6 +31,10 @@ pub struct ExpOpts {
     pub max_staleness: Option<usize>,
     pub fleet_profile: Option<String>,
     pub dropout_p: Option<f64>,
+    pub churn_policy: Option<String>,
+    pub churn_epochs: Option<usize>,
+    pub trace_period_s: Option<f64>,
+    pub trace_duty: Option<f64>,
 }
 
 impl ExpOpts {
@@ -54,6 +59,10 @@ impl ExpOpts {
             max_staleness: args.parse_opt("max-staleness")?,
             fleet_profile: args.get("fleet-profile").map(String::from),
             dropout_p: args.parse_opt("dropout")?,
+            churn_policy: args.get("churn-policy").map(String::from),
+            churn_epochs: args.parse_opt("churn-epochs")?,
+            trace_period_s: args.parse_opt("trace-period")?,
+            trace_duty: args.parse_opt("trace-duty")?,
         })
     }
 
@@ -91,6 +100,14 @@ impl ExpOpts {
             cfg.fleet.profile = f.clone();
         }
         cfg.fleet.dropout_p = self.dropout_p.or(cfg.fleet.dropout_p);
+        if let Some(c) = &self.churn_policy {
+            cfg.fleet.churn_policy = c.clone();
+        }
+        if let Some(e) = self.churn_epochs {
+            cfg.fleet.churn_epochs = e;
+        }
+        cfg.fleet.trace_period_s = self.trace_period_s.or(cfg.fleet.trace_period_s);
+        cfg.fleet.trace_duty = self.trace_duty.or(cfg.fleet.trace_duty);
         cfg
     }
 }
@@ -196,6 +213,10 @@ mod tests {
             max_staleness: None,
             fleet_profile: Some("mobile".into()),
             dropout_p: None,
+            churn_policy: Some("checkpoint".into()),
+            churn_epochs: Some(3),
+            trace_period_s: Some(240.0),
+            trace_duty: None,
         };
         let c = o.cfg("m");
         assert_eq!(c.seed, 7);
@@ -207,5 +228,9 @@ mod tests {
         assert_eq!(c.fleet.buffer_k, Some(5));
         assert_eq!(c.fleet.staleness_alpha, 0.25);
         assert_eq!(c.fleet.max_staleness, 8, "unset knob keeps the default");
+        assert_eq!(c.fleet.churn_policy, "checkpoint");
+        assert_eq!(c.fleet.churn_epochs, 3);
+        assert_eq!(c.fleet.trace_period_s, Some(240.0));
+        assert_eq!(c.fleet.trace_duty, None, "unset override keeps the profile's duty");
     }
 }

@@ -21,6 +21,24 @@
 //!   CLI: `--round-policy`, `--deadline-s`, `--buffer-k`,
 //!   `--staleness-alpha`, `--fleet-profile`.
 //!
+//!   **Mid-round churn** ([`fleet::ChurnPolicy`]): availability traces
+//!   are sampled *inside* every compute/upload span, not just at
+//!   dispatch. A device flipping offline mid-span emits an `Interrupt`
+//!   event and the configured policy decides the outcome — `abort`
+//!   (work lost; `wasted_compute_s` accounted), `resume` (work pauses
+//!   and continues at the next online window, stretching finishes
+//!   across round deadlines and the async in-flight queue), or
+//!   `checkpoint` (a partial update at epoch granularity merges with
+//!   weight ∝ completed samples through the aggregators — including
+//!   HeteroFL/DepthFL's sliced merges). Round records carry
+//!   `interrupted/resumed/partial_merged/wasted_compute_s`. Always-on
+//!   traces take the pre-churn fast path, so every churn policy
+//!   degenerates to `none` bit-for-bit (golden-trace- and
+//!   integration-tested; `rust/tests/golden/` pins the full event
+//!   trace of every round-policy × churn-policy combination). CLI:
+//!   `--churn-policy`, `--churn-epochs`, `--trace-period`,
+//!   `--trace-duty`.
+//!
 //!   Under `async`, rounds are semi-synchronous and round-spanning: the
 //!   round closes at the `buffer_k`-th upload arrival, and stragglers'
 //!   uploads are *not* discarded — they persist in the

@@ -46,6 +46,12 @@ FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
   --max-staleness <r> async: drop updates older than r rounds [default: 8]
   --fleet-profile <p> uniform | mobile | datacenter  [default: uniform]
   --dropout <f64>     Per-round dropout probability override
+  --churn-policy <p>  Mid-round churn: none | abort | resume | checkpoint[:E]
+                      [default: none]
+  --churn-epochs <e>  checkpoint: epoch granularity of partial updates
+                      [default: 4]
+  --trace-period <s>  Availability trace cycle length override (virtual s)
+  --trace-duty <f64>  Availability trace online fraction override
 ";
 
 fn make_cfg(args: &Args) -> Result<RunConfig> {
@@ -83,8 +89,17 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
         cfg.fleet.profile = f.into();
     }
     cfg.fleet.dropout_p = args.parse_opt("dropout")?.or(cfg.fleet.dropout_p);
+    if let Some(c) = args.get("churn-policy") {
+        cfg.fleet.churn_policy = c.into();
+    }
+    if let Some(e) = args.parse_opt("churn-epochs")? {
+        cfg.fleet.churn_epochs = e;
+    }
+    cfg.fleet.trace_period_s = args.parse_opt("trace-period")?.or(cfg.fleet.trace_period_s);
+    cfg.fleet.trace_duty = args.parse_opt("trace-duty")?.or(cfg.fleet.trace_duty);
     // Fail fast on bad fleet spellings (before artifacts load).
     cfg.round_policy()?;
+    cfg.churn_policy()?;
     cfg.fleet_profile()?;
     Ok(cfg)
 }

@@ -14,6 +14,7 @@
 use super::Method;
 use crate::aggregate::{staleness_discount, SlicedAggregator};
 use crate::config::RunConfig;
+use crate::coordinator::round::partial_scaled;
 use crate::coordinator::ServerCtx;
 use crate::fleet::EventKind;
 use crate::manifest::{Manifest, MemCoeffs};
@@ -131,12 +132,14 @@ impl Method for HeteroFL {
         let zero = MemCoeffs::default();
 
         // Async policy: trained-but-not-arrived sliced updates, keyed by
-        // client, stamped with their dispatch round.
-        let mut pending: HashMap<usize, (SlicedUpdate, usize)> = HashMap::new();
+        // client, stamped with their dispatch round and whether they are
+        // churn-checkpointed partials.
+        let mut pending: HashMap<usize, (SlicedUpdate, usize, bool)> = HashMap::new();
 
         ctx.bump_prefix_version();
         for round in 0..ctx.cfg.max_rounds_total {
-            let sel = ctx.pool.select(ctx.sample_size(), &zero); // uniform sample
+            // Uniform sample, minus clients with uploads still in flight.
+            let sel = ctx.sample_cohort(&zero);
             // Fleet dispatch: each assigned client's variant sets its FLOPs
             // proxy and comm bytes; the round policy trims the cohort.
             let mut works = Vec::new();
@@ -158,17 +161,22 @@ impl Method for HeteroFL {
                 sel.trainers.iter().copied().filter(|id| plan.completers.contains(id)).collect();
             let deferred: Vec<usize> =
                 sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
+            // Churn partials: scale the sliced update's weight by the
+            // checkpointed fraction (mirrors coordinator::round).
+            let fractions: HashMap<usize, f64> = plan.partials.iter().copied().collect();
 
             let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
             let mut agg = SlicedAggregator::new(&trainable, &ctx.store)?;
             let mut participants = 0usize;
+            let mut partial_merged = 0usize;
             let (mut bytes_up, mut bytes_down) = (0u64, 0u64);
             let (mut loss_sum, mut w_sum) = (0.0f64, 0.0f64);
             let mut mem_peak = 0u64;
 
             for &cid in &completers {
                 let Some(opt_i) = assignment[cid] else { continue };
-                let u = run_client(&mut ctx, &options, opt_i, cid, scan, batch, &lr_lit)?;
+                let mut u = run_client(&mut ctx, &options, opt_i, cid, scan, batch, &lr_lit)?;
+                u.weight = partial_scaled(&fractions, cid, u.weight, &mut partial_merged);
                 loss_sum += u.loss as f64 * u.weight;
                 w_sum += u.weight;
                 agg.add(&u.sub_shapes, &u.tensors, u.weight);
@@ -187,19 +195,31 @@ impl Method for HeteroFL {
             if let Some((_, max_staleness)) = ctx.async_params() {
                 for &cid in &deferred {
                     let Some(opt_i) = assignment[cid] else { continue };
-                    let u = run_client(&mut ctx, &options, opt_i, cid, scan, batch, &lr_lit)?;
+                    let mut u = run_client(&mut ctx, &options, opt_i, cid, scan, batch, &lr_lit)?;
                     bytes_down += u.bytes;
                     mem_peak = mem_peak.max(u.mem_bytes);
-                    pending.insert(cid, (u, ctx.round));
+                    // Deferred partials buffer their scaled weight so the
+                    // late merge inherits the right sample count.
+                    let partial = match fractions.get(&cid) {
+                        Some(f) => {
+                            u.weight *= f;
+                            true
+                        }
+                        None => false,
+                    };
+                    pending.insert(cid, (u, ctx.round, partial));
                 }
                 for la in &plan.late_arrivals {
-                    if let Some((u, dispatched)) = pending.remove(&la.client) {
+                    if let Some((u, dispatched, partial)) = pending.remove(&la.client) {
                         let staleness = ctx.round.saturating_sub(dispatched);
                         if staleness <= max_staleness {
                             let w = u.weight * staleness_discount(staleness, alpha);
                             agg.add(&u.sub_shapes, &u.tensors, w);
                             bytes_up += u.bytes;
                             late_merged += 1;
+                            if partial {
+                                partial_merged += 1;
+                            }
                             staleness_sum += staleness;
                         } else {
                             // Arrived but too stale: the upload still
@@ -211,9 +231,12 @@ impl Method for HeteroFL {
                 }
             }
 
-            // Downloads shipped to policy-cut stragglers cost bandwidth
-            // even though their updates never aggregate (dropouts vanish
-            // at dispatch, before the download).
+            // Downloads shipped to policy-cut stragglers and churn
+            // casualties cost bandwidth even though their updates never
+            // aggregate (dropouts vanish at dispatch, before the
+            // download). Async plans truncate events at the close, so
+            // post-close aborts are charged off the aborted list.
+            let mut lost: Vec<usize> = Vec::new();
             for ev in &plan.events {
                 if let EventKind::Dispatch { client } = ev.kind {
                     if plan.completers.contains(&client)
@@ -222,9 +245,17 @@ impl Method for HeteroFL {
                     {
                         continue;
                     }
-                    if let Some(opt_i) = assignment[client] {
-                        bytes_down += options[opt_i].2;
-                    }
+                    lost.push(client);
+                }
+            }
+            for &client in &plan.aborted {
+                if !lost.contains(&client) {
+                    lost.push(client);
+                }
+            }
+            for client in lost {
+                if let Some(opt_i) = assignment[client] {
+                    bytes_down += options[opt_i].2;
                 }
             }
 
@@ -255,6 +286,10 @@ impl Method for HeteroFL {
                 } else {
                     0.0
                 },
+                interrupted: plan.interrupts,
+                resumed: plan.resumes,
+                partial_merged,
+                wasted_compute_s: plan.wasted_compute_s,
                 ..Default::default()
             };
             ctx.record_round("heterofl", 0, &out, test_acc, f64::NAN);

@@ -39,6 +39,17 @@ pub struct RoundRecord {
     pub late_dropped: usize,
     /// Mean staleness (rounds) of the late-merged updates (0 when none).
     pub mean_staleness: f64,
+    /// Mid-round churn: devices that flipped offline inside a
+    /// compute/upload span this round (Interrupt events).
+    pub interrupted: usize,
+    /// Mid-round churn: paused work that continued (Resume events).
+    pub resumed: usize,
+    /// Checkpoint churn: partial updates merged this round, each
+    /// weighted by its completed-sample fraction.
+    pub partial_merged: usize,
+    /// Compute seconds lost to churn (aborted work + partial-epoch
+    /// remainders past the last checkpoint boundary).
+    pub wasted_compute_s: f64,
 }
 
 /// Whole-run result: what the table benches consume.
@@ -90,6 +101,24 @@ impl RunSummary {
     /// Total late updates that arrived but were discarded (async policy).
     pub fn late_drops(&self) -> usize {
         self.history.iter().map(|r| r.late_dropped).sum()
+    }
+
+    /// Total mid-round churn events across the run: (interrupts, resumes).
+    pub fn churn_events(&self) -> (usize, usize) {
+        let i = self.history.iter().map(|r| r.interrupted).sum();
+        let r = self.history.iter().map(|r| r.resumed).sum();
+        (i, r)
+    }
+
+    /// Total checkpoint partials merged across the run (churn policy
+    /// `checkpoint`).
+    pub fn partial_merges(&self) -> usize {
+        self.history.iter().map(|r| r.partial_merged).sum()
+    }
+
+    /// Total compute seconds lost to mid-round churn across the run.
+    pub fn wasted_compute_s(&self) -> f64 {
+        self.history.iter().map(|r| r.wasted_compute_s).sum()
     }
 }
 
@@ -154,12 +183,12 @@ impl MetricsSink {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts,late_merged,late_dropped,mean_staleness"
+            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts,late_merged,late_dropped,mean_staleness,interrupted,resumed,partial_merged,wasted_compute_s"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.stage,
                 r.step,
@@ -177,7 +206,11 @@ impl MetricsSink {
                 r.dropouts,
                 r.late_merged,
                 r.late_dropped,
-                r.mean_staleness
+                r.mean_staleness,
+                r.interrupted,
+                r.resumed,
+                r.partial_merged,
+                r.wasted_compute_s
             )?;
         }
         Ok(())
@@ -208,6 +241,10 @@ mod tests {
             late_merged: round % 2,
             late_dropped: 0,
             mean_staleness: 0.0,
+            interrupted: round % 3,
+            resumed: 0,
+            partial_merged: round % 2,
+            wasted_compute_s: round as f64 * 2.0,
         }
     }
 
@@ -263,6 +300,11 @@ mod tests {
         assert_eq!(s.time_to_acc(0.9), None);
         assert_eq!(s.fleet_losses(), (4, 0));
         assert_eq!(s.late_merges(), 2, "rounds 1 and 3 each merged one late update");
+        // Churn rollups: rounds 1..4 with interrupted = round % 3,
+        // partial_merged = round % 2, wasted = 2*round.
+        assert_eq!(s.churn_events(), (1 + 2 + 0 + 1, 0));
+        assert_eq!(s.partial_merges(), 2);
+        assert!((s.wasted_compute_s() - 20.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Golden-trace regression tests for the fleet simulator.
+//!
+//! Every (round policy × churn policy) combination runs a small
+//! fixed-seed fleet for two rounds and serializes the full event trace
+//! (kind, virtual time as exact f64 bits, client, queue seq) plus the
+//! round's bucket summary. The output is compared **bit for bit** against
+//! the checked-in files under `tests/golden/` — any change to event
+//! ordering, span arithmetic, churn classification, or the queue's
+//! tie-breaking shows up as a diff here before it can silently shift
+//! simulation results.
+//!
+//! Regeneration workflow (after an *intentional* engine change):
+//!
+//! ```bash
+//! UPDATE_GOLDEN=1 cargo test --test golden_trace   # or: make test-golden-update
+//! git diff rust/tests/golden/                      # review every change!
+//! ```
+//!
+//! A missing golden file is created on first run (bootstrap) and the test
+//! passes with a note; commit the new file. The scenario uses zero
+//! dropout so no rng draw influences the trace — the whole text is a
+//! pure function of the engine's event algebra.
+
+use profl::fleet::{
+    AvailabilityTrace, ChurnPolicy, ClientWork, EventKind, FleetEngine, RoundPlan, RoundPolicy,
+};
+use profl::rng::Rng;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// The golden fleet: one always-on fast device, two duty-cycled devices
+/// that hit the offline edge during training/upload, one phase-shifted
+/// device that starts offline, and one unreachable device. All times are
+/// dyadic rationals, so every derived time is exact in f64.
+fn golden_works(start: f64) -> Vec<ClientWork> {
+    let always = AvailabilityTrace::always_on();
+    let b = AvailabilityTrace { period_s: 32.0, duty: 0.5, phase_s: 0.0 };
+    let c = AvailabilityTrace { period_s: 32.0, duty: 0.5, phase_s: 20.0 };
+    let dead = AvailabilityTrace { period_s: 32.0, duty: 0.0, phase_s: 0.0 };
+    let spec: [(usize, AvailabilityTrace, f64, f64, f64); 5] = [
+        (0, always, 1.0, 4.0, 1.0),
+        (1, b, 2.0, 10.0, 5.0),
+        (2, b, 2.0, 20.0, 2.0),
+        (3, c, 1.0, 2.0, 1.0),
+        (4, dead, 1.0, 1.0, 1.0),
+    ];
+    spec.iter()
+        .map(|&(id, trace, down_s, train_s, up_s)| ClientWork {
+            id,
+            ready_s: trace.next_online(start),
+            down_s,
+            train_s,
+            up_s,
+            dropout_p: 0.0,
+            trace,
+        })
+        .collect()
+}
+
+/// Exact f64 serialization: raw bits plus a fixed-precision readable form.
+fn fmt_f(t: f64) -> String {
+    format!("0x{:016x} ({:.3})", t.to_bits(), t)
+}
+
+fn fmt_ids(ids: &[usize]) -> String {
+    let parts: Vec<String> = ids.iter().map(|i| i.to_string()).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+fn render_round(round: usize, plan: &RoundPlan) -> String {
+    let mut s = String::new();
+    writeln!(s, "# round {round} start={}", fmt_f(plan.start_s)).unwrap();
+    for e in &plan.events {
+        let (kind, client) = match e.kind {
+            EventKind::Dispatch { client } => ("Dispatch", Some(client)),
+            EventKind::TrainDone { client } => ("TrainDone", Some(client)),
+            EventKind::UploadDone { client } => ("UploadDone", Some(client)),
+            EventKind::LateUpload { client } => ("LateUpload", Some(client)),
+            EventKind::Interrupt { client } => ("Interrupt", Some(client)),
+            EventKind::Resume { client } => ("Resume", Some(client)),
+            EventKind::Deadline => ("Deadline", None),
+        };
+        let who = client.map(|c| format!("c{c}")).unwrap_or_else(|| "-".into());
+        writeln!(s, "ev seq={} t={} {kind} {who}", e.seq, fmt_f(e.time_s)).unwrap();
+    }
+    writeln!(s, "end={}", fmt_f(plan.end_s)).unwrap();
+    writeln!(
+        s,
+        "completers={} stragglers={} dropouts={} aborted={} deferred={}",
+        fmt_ids(&plan.completers),
+        fmt_ids(&plan.stragglers),
+        fmt_ids(&plan.dropouts),
+        fmt_ids(&plan.aborted),
+        fmt_ids(&plan.deferred),
+    )
+    .unwrap();
+    let partials: Vec<String> =
+        plan.partials.iter().map(|(c, f)| format!("({c},{f:.3})")).collect();
+    let late: Vec<String> = plan
+        .late_arrivals
+        .iter()
+        .map(|u| format!("({},{},{})", u.client, u.dispatch_round, fmt_f(u.arrive_s)))
+        .collect();
+    writeln!(
+        s,
+        "partials=[{}] late=[{}] interrupts={} resumes={} wasted={}",
+        partials.join(","),
+        late.join(","),
+        plan.interrupts,
+        plan.resumes,
+        fmt_f(plan.wasted_compute_s),
+    )
+    .unwrap();
+    s
+}
+
+/// Run the golden fleet for two rounds under one policy combination and
+/// serialize both plans.
+fn trace_for(policy: RoundPolicy, keep: usize, churn: ChurnPolicy) -> String {
+    let mut engine = FleetEngine::new();
+    let mut rng = Rng::new(77);
+    let mut out = String::new();
+    let mut start = 0.0;
+    for round in 0..2 {
+        let works = golden_works(start);
+        let plan = engine.simulate_round(round, start, &works, policy, keep, churn, &mut rng);
+        out.push_str(&render_round(round, &plan));
+        start = plan.end_s;
+    }
+    out
+}
+
+fn check(name: &str, got: &str) {
+    let path = golden_dir().join(format!("{name}.txt"));
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, got).unwrap();
+        if !update {
+            eprintln!("golden `{name}`: bootstrapped {path:?}; commit it");
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got, want,
+        "golden trace `{name}` diverged from {path:?}; if the engine change \
+         is intentional, regenerate with UPDATE_GOLDEN=1 and review the diff"
+    );
+}
+
+const CHURNS: [(&str, ChurnPolicy); 4] = [
+    ("none", ChurnPolicy::None),
+    ("abort", ChurnPolicy::Abort),
+    ("resume", ChurnPolicy::Resume),
+    ("checkpoint", ChurnPolicy::Checkpoint { epochs: 4 }),
+];
+
+#[test]
+fn sync_golden_traces() {
+    for (cn, churn) in CHURNS {
+        check(&format!("sync_{cn}"), &trace_for(RoundPolicy::Sync, usize::MAX, churn));
+    }
+}
+
+#[test]
+fn deadline_golden_traces() {
+    for (cn, churn) in CHURNS {
+        let policy = RoundPolicy::Deadline { secs: 21.0 };
+        check(&format!("deadline_{cn}"), &trace_for(policy, usize::MAX, churn));
+    }
+}
+
+#[test]
+fn overselect_golden_traces() {
+    for (cn, churn) in CHURNS {
+        // extra=2 over a keep of 3: the engine sees the whole cohort and
+        // keeps the first 3 finishers.
+        let policy = RoundPolicy::OverSelect { extra: 2 };
+        check(&format!("overselect_{cn}"), &trace_for(policy, 3, churn));
+    }
+}
+
+#[test]
+fn async_golden_traces() {
+    for (cn, churn) in CHURNS {
+        let policy = RoundPolicy::Async { buffer_k: 2, max_staleness: 8 };
+        check(&format!("async_{cn}"), &trace_for(policy, usize::MAX, churn));
+    }
+}

@@ -308,6 +308,84 @@ fn async_merges_stragglers_where_deadline_cuts_them() {
 }
 
 #[test]
+fn churn_abort_with_always_on_traces_degenerates_bit_for_bit() {
+    // ISSUE 3 acceptance: `--churn-policy abort` on always-on traces
+    // (the uniform fleet) must reproduce the churn-free round records
+    // bit for bit, under both the sync policy and the sync-degenerate
+    // async policy — the same guarantee style as the async/sync test
+    // above. The churn engine's fast path costs nothing when no device
+    // can flip offline.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    for round_policy in ["sync", "async"] {
+        let mut base_cfg = tiny();
+        base_cfg.fleet.round_policy = round_policy.into();
+        if round_policy == "async" {
+            base_cfg.fleet.staleness_alpha = 0.0; // degenerate async
+        }
+        let mut churn_cfg = base_cfg.clone();
+        churn_cfg.fleet.churn_policy = "abort".into();
+
+        let b = ProFL::default().run(&rt, &base_cfg).unwrap();
+        let c = ProFL::default().run(&rt, &churn_cfg).unwrap();
+        let at = format!("round_policy={round_policy}");
+        assert_eq!(b.rounds, c.rounds, "{at}: round schedules diverged");
+        assert_eq!(b.final_acc.to_bits(), c.final_acc.to_bits(), "{at}: final_acc");
+        assert_eq!(b.sim_time_s.to_bits(), c.sim_time_s.to_bits(), "{at}: sim_time");
+        assert_eq!(b.history.len(), c.history.len(), "{at}");
+        for (x, y) in b.history.iter().zip(&c.history) {
+            let at = format!("{at}, round {} ({} step {})", x.round, x.stage, x.step);
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{at}: train_loss");
+            assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{at}: test_acc");
+            assert_eq!(x.participants, y.participants, "{at}: participants");
+            assert_eq!((x.bytes_up, x.bytes_down), (y.bytes_up, y.bytes_down), "{at}: comm");
+            assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{at}: sim_time");
+            assert_eq!((x.stragglers, x.dropouts), (y.stragglers, y.dropouts), "{at}");
+            assert_eq!((y.interrupted, y.resumed), (0, 0), "{at}: churn events on always-on");
+            assert_eq!(y.partial_merged, 0, "{at}: no partials without churn");
+            assert_eq!(y.wasted_compute_s.to_bits(), 0f64.to_bits(), "{at}: wasted");
+        }
+    }
+}
+
+#[test]
+fn churn_abort_on_mobile_fleet_wastes_compute() {
+    // The churn engine actually bites on a duty-cycled fleet: with a
+    // short availability window, sync rounds under `abort` lose work
+    // mid-round (interrupts + wasted compute seconds reported), while
+    // the same fleet under `resume` loses nothing but takes longer.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let mut cfg = tiny();
+    cfg.num_clients = 30;
+    cfg.per_round = 30;
+    cfg.fleet.profile = "mobile".into();
+    cfg.fleet.dropout_p = Some(0.0); // isolate churn from dropout
+    // Tight trace: 60s online out of every 120s — mobile train times
+    // (> 44s on the slow tier) guarantee mid-span offline flips.
+    cfg.fleet.trace_period_s = Some(120.0);
+    cfg.fleet.trace_duty = Some(0.5);
+
+    let mut abort_cfg = cfg.clone();
+    abort_cfg.fleet.churn_policy = "abort".into();
+    let mut ctx = ServerCtx::new(&rt, abort_cfg).unwrap();
+    let out = ctx.run_train_round("train_t1", None, 0.05, "t", 1).unwrap();
+    assert!(out.interrupted > 0, "tight duty cycle must interrupt somebody");
+    assert!(out.wasted_compute_s > 0.0, "aborted work must be accounted");
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.fleet.churn_policy = "resume".into();
+    let mut rctx = ServerCtx::new(&rt, resume_cfg).unwrap();
+    let rout = rctx.run_train_round("train_t1", None, 0.05, "t", 1).unwrap();
+    assert_eq!(rout.wasted_compute_s, 0.0, "resume loses no compute");
+    assert!(rout.participants >= out.participants, "resume keeps interrupted clients");
+    assert!(
+        rout.sim_time_s >= out.sim_time_s,
+        "stretched finishes cannot beat a round that dropped its slow tail"
+    );
+}
+
+#[test]
 fn comm_accounting_prefix_cached_after_first_download() {
     let dir = require_artifacts!();
     let rt = Runtime::new(&dir).unwrap();

@@ -7,6 +7,10 @@
 
 use profl::aggregate::{staleness_discount, Aggregator, BufferedAggregator, SlicedAggregator};
 use profl::data::{partition, Partition, SyntheticDataset};
+use profl::fleet::{
+    simulate_round, AvailabilityTrace, ChurnPolicy, ClientWork, EventKind, FleetEngine,
+    RoundPolicy,
+};
 use profl::freezing::{ls_slope, EffectiveMovement};
 use profl::json::Value;
 use profl::rng::Rng;
@@ -181,6 +185,202 @@ fn prop_slice_corner_roundtrip() {
         }
         let covered: f32 = wacc.iter().sum();
         assert_eq!(covered as usize, sub.data.len());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fleet-simulator churn invariants
+// ---------------------------------------------------------------------------
+
+fn rand_trace(rng: &mut Rng) -> AvailabilityTrace {
+    if rng.f64() < 0.3 {
+        AvailabilityTrace::always_on()
+    } else {
+        let period = rng.uniform(20.0, 200.0);
+        let duty = rng.uniform(0.2, 1.0);
+        let phase = rng.uniform(0.0, period);
+        AvailabilityTrace { period_s: period, duty, phase_s: phase }
+    }
+}
+
+fn rand_works(rng: &mut Rng, with_dropout: bool) -> Vec<ClientWork> {
+    let n = 2 + rng.below(8);
+    (0..n)
+        .map(|id| {
+            let trace = rand_trace(rng);
+            ClientWork {
+                id,
+                ready_s: trace.next_online(0.0),
+                down_s: rng.uniform(0.1, 10.0),
+                train_s: rng.uniform(1.0, 300.0),
+                up_s: rng.uniform(0.1, 20.0),
+                dropout_p: if with_dropout && rng.f64() < 0.3 {
+                    rng.uniform(0.0, 1.0)
+                } else {
+                    0.0
+                },
+                trace,
+            }
+        })
+        .collect()
+}
+
+fn rand_policy(rng: &mut Rng) -> (RoundPolicy, usize) {
+    match rng.below(4) {
+        0 => (RoundPolicy::Sync, usize::MAX),
+        1 => (RoundPolicy::Deadline { secs: rng.uniform(10.0, 400.0) }, usize::MAX),
+        2 => (RoundPolicy::OverSelect { extra: 2 }, 1 + rng.below(4)),
+        _ => (RoundPolicy::Async { buffer_k: 1 + rng.below(5), max_staleness: 8 }, usize::MAX),
+    }
+}
+
+fn rand_churn(rng: &mut Rng) -> ChurnPolicy {
+    match rng.below(4) {
+        0 => ChurnPolicy::None,
+        1 => ChurnPolicy::Abort,
+        2 => ChurnPolicy::Resume,
+        _ => ChurnPolicy::Checkpoint { epochs: 1 + rng.below(8) },
+    }
+}
+
+#[test]
+fn prop_churn_clock_monotone_and_finite() {
+    // Interrupt/Resume events slot into the queue like any other: the
+    // processed-event stream stays time-ordered and finite under every
+    // policy × churn combination.
+    cases(200, |rng| {
+        let works = rand_works(rng, true);
+        let (policy, keep) = rand_policy(rng);
+        let churn = rand_churn(rng);
+        let mut engine = FleetEngine::new();
+        let plan = engine.simulate_round(0, 0.0, &works, policy, keep, churn, rng);
+        assert!(plan.end_s.is_finite() && plan.end_s >= plan.start_s);
+        for pair in plan.events.windows(2) {
+            assert!(pair[0].time_s.is_finite());
+            assert!(
+                pair[0].time_s <= pair[1].time_s,
+                "clock went backwards: {} -> {} ({policy:?} × {churn:?})",
+                pair[0].time_s,
+                pair[1].time_s
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_wasted_compute_nonnegative_and_zero_without_loss() {
+    // wasted_compute_s is a loss meter: never negative, never NaN, and
+    // identically zero under churn policies that lose no work.
+    cases(200, |rng| {
+        let works = rand_works(rng, true);
+        let (policy, keep) = rand_policy(rng);
+        let churn = rand_churn(rng);
+        let mut engine = FleetEngine::new();
+        let plan = engine.simulate_round(0, 0.0, &works, policy, keep, churn, rng);
+        assert!(plan.wasted_compute_s.is_finite());
+        assert!(plan.wasted_compute_s >= 0.0, "{policy:?} × {churn:?}");
+        if matches!(churn, ChurnPolicy::None | ChurnPolicy::Resume) {
+            assert_eq!(plan.wasted_compute_s, 0.0, "lossless churn wasted compute");
+            assert!(plan.aborted.is_empty());
+        }
+        if !matches!(churn, ChurnPolicy::Checkpoint { .. }) {
+            assert!(plan.partials.is_empty(), "only checkpoint produces partials");
+        }
+    });
+}
+
+#[test]
+fn prop_partial_update_weight_below_full() {
+    // A checkpointed fraction is epoch-truncated strictly below 1 (and
+    // above 0), so a partial update's merge weight is always less than
+    // the client's full-shard weight.
+    cases(200, |rng| {
+        let works = rand_works(rng, false);
+        let (policy, keep) = rand_policy(rng);
+        let epochs = 1 + rng.below(8);
+        let churn = ChurnPolicy::Checkpoint { epochs };
+        let mut engine = FleetEngine::new();
+        let plan = engine.simulate_round(0, 0.0, &works, policy, keep, churn, rng);
+        for &(c, f) in &plan.partials {
+            assert!(f > 0.0 && f < 1.0, "client {c}: fraction {f} out of (0,1)");
+            let scaled = (f * epochs as f64).round();
+            assert!((scaled - f * epochs as f64).abs() < 1e-9, "not epoch-granular: {f}");
+        }
+    });
+}
+
+#[test]
+fn prop_resume_never_finishes_earlier_than_uninterrupted() {
+    // Pausing across offline windows can only delay an upload relative
+    // to the churn-free schedule (same works, same sync policy).
+    cases(200, |rng| {
+        let works = rand_works(rng, false);
+        let upload_times = |churn: ChurnPolicy| -> BTreeMap<usize, f64> {
+            let plan =
+                simulate_round(0.0, &works, RoundPolicy::Sync, usize::MAX, churn, &mut Rng::new(1));
+            plan.events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    EventKind::UploadDone { client } => Some((client, e.time_s)),
+                    _ => None,
+                })
+                .collect()
+        };
+        let base = upload_times(ChurnPolicy::None);
+        let resumed = upload_times(ChurnPolicy::Resume);
+        assert_eq!(base.len(), resumed.len(), "resume loses nobody under sync");
+        for (c, t) in &resumed {
+            assert!(
+                *t >= base[c] - 1e-9,
+                "client {c} finished early: resume {} < uninterrupted {}",
+                t,
+                base[c]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_churn_buckets_conserve_the_cohort() {
+    // Conservation across multiple async rounds: every dispatched client
+    // is merged, partial-merged, dropped, aborted, straggled, or still
+    // in flight — exactly one of them, every round.
+    cases(150, |rng| {
+        let (policy, keep) = rand_policy(rng);
+        let churn = rand_churn(rng);
+        let mut engine = FleetEngine::new();
+        let mut start = 0.0;
+        for round in 0..3 {
+            // Fresh ids per round so in-flight uploads are never
+            // superseded (the coordinator's sampling guarantees this).
+            let mut works = rand_works(rng, true);
+            for w in &mut works {
+                w.id += round * 100;
+            }
+            let inflight_before: Vec<usize> =
+                engine.inflight().iter().map(|u| u.client).collect();
+            let plan = engine.simulate_round(round, start, &works, policy, keep, churn, rng);
+            let mut seen = std::collections::BTreeSet::new();
+            for bucket in
+                [&plan.completers, &plan.stragglers, &plan.dropouts, &plan.aborted, &plan.deferred]
+            {
+                for &id in bucket.iter() {
+                    assert!(seen.insert(id), "client {id} in two buckets ({policy:?}×{churn:?})");
+                }
+            }
+            assert_eq!(seen.len(), works.len(), "client unaccounted ({policy:?}×{churn:?})");
+            // In-flight uploads either landed this round or are still
+            // queued — none vanish.
+            let landed: Vec<usize> = plan.late_arrivals.iter().map(|u| u.client).collect();
+            let still: Vec<usize> = engine.inflight().iter().map(|u| u.client).collect();
+            for c in inflight_before {
+                assert!(
+                    landed.contains(&c) || still.contains(&c),
+                    "in-flight upload of {c} vanished"
+                );
+            }
+            start = plan.end_s;
+        }
     });
 }
 
