@@ -1,10 +1,16 @@
 # Top-level convenience targets. `make check` is the pre-PR gate
 # (fmt + clippy + tests); see ROADMAP.md.
 
-.PHONY: check artifacts test-golden test-golden-update smoke-examples
+.PHONY: check docs artifacts test-golden test-golden-update smoke-examples
 
 check:
 	./rust/check.sh
+
+# API docs with warnings-as-errors: the crate carries
+# #![warn(missing_docs)], so an undocumented public item (or a broken
+# intra-doc link) fails the build. Part of `make check` via check.sh.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p profl
 
 # Golden-trace regression tests only (fleet simulator event traces,
 # compared bit-for-bit against rust/tests/golden/). Regenerate with

@@ -1,22 +1,30 @@
 //! Async vs. sync — time-to-accuracy under FedBuff-style buffering.
 //!
-//! Runs every Table-1 method three times through the discrete-event
+//! Runs every Table-1 method four times through the discrete-event
 //! fleet simulator on the `mobile` device profile — under `sync` (wait
 //! for the slowest device), `deadline` (cut stragglers and discard
-//! their work), and `async` (close the round at the `buffer_k`-th
-//! arrival, keep straggler uploads in flight, merge them on arrival
-//! with staleness-discounted weights) — and reports simulated
-//! time-to-target-accuracy alongside straggler/late-merge counts.
-//! Everything is seeded: with a fixed seed the output is byte-identical
-//! across runs.
+//! their work), `async` (close the round at the `buffer_k`-th arrival,
+//! keep straggler uploads in flight, merge them on arrival with
+//! staleness-discounted weights), and `async+proj` (same, plus
+//! `--stale-projection on`: late updates that crossed a freeze/step
+//! transition merge their still-trainable suffix instead of being
+//! dropped) — and reports simulated time-to-target-accuracy alongside
+//! straggler/late-merge/late-drop/projection counts and accuracy per
+//! gigabyte. Byte totals are identical between `async` and
+//! `async+proj` (a projected merge charges exactly what the drop would
+//! have), so any accuracy delta is free per byte — the projection
+//! acceptance measure. Everything is seeded: with a fixed seed the
+//! output is byte-identical across runs.
 //!
 //!   cargo run --release --example async_vs_sync
 //!   cargo run --release --example async_vs_sync -- --profile smoke \
-//!       --buffer-k 5 --staleness-alpha 0.5 --target 0.25
+//!       --buffer-k 5 --staleness-alpha 0.5 --target 0.25 \
+//!       --projection-decay 0.5
 //!
 //! The degenerate configuration (`--buffer-k` = per_round,
 //! `--staleness-alpha 0`) reproduces the sync rows bit for bit — see
-//! the lib.rs sync-degeneracy guarantee.
+//! the lib.rs sync-degeneracy guarantee; `docs/SIMULATION.md` has the
+//! full determinism contract.
 
 use anyhow::Result;
 use profl::cli::Args;
@@ -75,16 +83,32 @@ fn main() -> Result<()> {
         probe.seed,
     ));
     out.push_str(&format!(
-        "{:<14} {:<10} {:>6}  {:>10}  {:>10}  {:>10} {:>11}  {}\n",
-        "method", "policy", "acc", "sim_time", "t@target", "stragglers", "late_merged", "rounds"
+        "{:<14} {:<11} {:>6}  {:>9}  {:>9}  {:>6} {:>6} {:>6} {:>6}  {:>8}  {}\n",
+        "method",
+        "policy",
+        "acc",
+        "sim_time",
+        "t@target",
+        "strag",
+        "late+",
+        "late-",
+        "proj",
+        "acc/GB",
+        "rounds"
     ));
 
     for m in table_methods() {
-        for policy in ["sync", "deadline", "async"] {
+        for policy in ["sync", "deadline", "async", "async+proj"] {
             let mut cfg = opts.cfg(&model);
-            cfg.fleet.round_policy = policy.into();
-            if policy == "async" {
+            let is_async = policy.starts_with("async");
+            cfg.fleet.round_policy = if is_async { "async".into() } else { policy.into() };
+            if is_async {
                 cfg.fleet.buffer_k = Some(buffer_k);
+            }
+            if policy == "async+proj" {
+                // The projection row: recover transition-crossed uploads
+                // instead of dropping them. Same bytes, more merges.
+                cfg.fleet.stale_projection = "on".into();
             }
             let s = m.run(&rt, &cfg)?;
             let acc = if s.final_acc.is_nan() {
@@ -94,8 +118,13 @@ fn main() -> Result<()> {
             };
             let tta = s.time_to_acc(target).map(fmt_time).unwrap_or_else(|| "never".into());
             let (stragglers, _dropouts) = s.fleet_losses();
+            let acc_per_gb = if s.final_acc.is_nan() || s.comm_total() == 0 {
+                "NA".to_string()
+            } else {
+                format!("{:.2}", s.final_acc * 100.0 / (s.comm_total() as f64 / 1e9))
+            };
             out.push_str(&format!(
-                "{:<14} {:<10} {:>6}  {:>10}  {:>10}  {:>10} {:>11}  {}\n",
+                "{:<14} {:<11} {:>6}  {:>9}  {:>9}  {:>6} {:>6} {:>6} {:>6}  {:>8}  {}\n",
                 s.method,
                 policy,
                 acc,
@@ -103,6 +132,9 @@ fn main() -> Result<()> {
                 tta,
                 stragglers,
                 s.late_merges(),
+                s.late_drops(),
+                s.projected_merges(),
+                acc_per_gb,
                 s.rounds,
             ));
         }

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Pre-PR gate for the Rust L3 coordinator (see ROADMAP.md):
-#   fmt → clippy (warnings are errors) → tests.
+#   fmt → clippy (warnings are errors) → docs (warnings are errors) → tests.
 #
 # Run from anywhere: `./rust/check.sh` or `make check`.
 set -euo pipefail
@@ -13,6 +13,12 @@ echo "== cargo clippy -D warnings"
 # No allowlist needed today; append `-A clippy::<lint>` here (with a
 # comment) if a pre-existing lint must be grandfathered.
 cargo clippy --all-targets -- -D warnings
+
+echo "== cargo doc --no-deps -D warnings (make docs)"
+# The crate carries #![warn(missing_docs)], so this step keeps every
+# public item documented (and every intra-doc link resolving). Scoped
+# to the profl crate: xla-stub stands in for an external dependency.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p profl --quiet
 
 echo "== cargo test -q"
 cargo test -q

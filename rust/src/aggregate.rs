@@ -24,15 +24,34 @@ pub fn staleness_discount(staleness: usize, alpha: f64) -> f64 {
     1.0 / (1.0 + staleness as f64).powf(alpha)
 }
 
+/// Extra weight decay for a stale update that crossed `transitions`
+/// freeze/step transitions before merging (the suffix-projection path):
+/// `decay^transitions`. Exactly `1.0` for zero transitions, so an update
+/// merged inside its own step keeps its staleness-discounted weight bit
+/// for bit — the projection machinery costs nothing when no transition
+/// is crossed.
+pub fn transition_decay(decay: f64, transitions: u64) -> f64 {
+    if transitions == 0 {
+        1.0
+    } else {
+        decay.powi(transitions.min(i32::MAX as u64) as i32)
+    }
+}
+
 /// In-place weighted-average accumulator over a fixed parameter list.
 pub struct Aggregator {
     names: Vec<String>,
     acc: Vec<Vec<f32>>,
     shapes: Vec<Vec<usize>>,
     total_weight: f64,
+    /// Per-tensor weight contributed by masked (suffix-projected) adds;
+    /// allocated on the first [`Self::add_masked`] so the full-cover path
+    /// is untouched (the bit-for-bit degeneracy contract).
+    masked_weight: Option<Vec<f64>>,
 }
 
 impl Aggregator {
+    /// Build an accumulator for `names`, sized from the store's tensors.
     pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
         let mut acc = Vec::with_capacity(names.len());
         let mut shapes = Vec::with_capacity(names.len());
@@ -41,7 +60,8 @@ impl Aggregator {
             acc.push(vec![0.0; t.len()]);
             shapes.push(t.shape.clone());
         }
-        Ok(Aggregator { names: names.to_vec(), acc, shapes, total_weight: 0.0 })
+        let masked_weight = None;
+        Ok(Aggregator { names: names.to_vec(), acc, shapes, total_weight: 0.0, masked_weight })
     }
 
     /// Add one client's update set (tensors in `names` order). Accepts any
@@ -60,14 +80,62 @@ impl Aggregator {
         self.total_weight += weight;
     }
 
+    /// Add a *masked* update covering only part of the parameter list:
+    /// each entry of `parts` pairs a tensor with its index into the
+    /// aggregator's name list. This is how a stale update projected onto
+    /// the still-trained suffix merges — the frozen-block tensors it used
+    /// to carry are simply absent. Masked weight is tracked per tensor;
+    /// tensors nobody covers keep the previous global value at
+    /// [`Self::finish`] (mirroring [`SlicedAggregator`]'s rule).
+    pub fn add_masked<T: AsRef<[f32]>>(&mut self, parts: &[(usize, T)], weight: f64) {
+        let n = self.acc.len();
+        let masked = self.masked_weight.get_or_insert_with(|| vec![0.0; n]);
+        let w = weight as f32;
+        for (idx, t) in parts {
+            let a = &mut self.acc[*idx];
+            let t = t.as_ref();
+            debug_assert_eq!(a.len(), t.len(), "projected tensor shape drifted");
+            for (x, v) in a.iter_mut().zip(t) {
+                *x += w * v;
+            }
+            masked[*idx] += weight;
+        }
+    }
+
     /// Normalize and write back into the store. Fails on a zero total
     /// weight instead of scaling the store by `inf`.
+    ///
+    /// With masked adds in play, normalization is per tensor
+    /// (`total_weight + masked_weight[i]`) and tensors that received no
+    /// weight at all keep their previous store value; without them the
+    /// historical single-division path runs unchanged, bit for bit.
     pub fn finish(self, store: &mut ParamStore) -> Result<()> {
-        if self.total_weight <= 0.0 {
+        let Some(masked) = self.masked_weight else {
+            // Full-cover path (every add spanned all tensors): one shared
+            // weight, one shared reciprocal — the pre-projection
+            // arithmetic, unchanged.
+            if self.total_weight <= 0.0 {
+                bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
+            }
+            let inv = 1.0 / self.total_weight as f32;
+            for ((name, mut a), shape) in self.names.into_iter().zip(self.acc).zip(self.shapes) {
+                for x in &mut a {
+                    *x *= inv;
+                }
+                store.set(&name, Tensor { shape, data: a });
+            }
+            return Ok(());
+        };
+        if self.total_weight <= 0.0 && masked.iter().all(|&w| w <= 0.0) {
             bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
         }
-        let inv = 1.0 / self.total_weight as f32;
-        for ((name, mut a), shape) in self.names.into_iter().zip(self.acc).zip(self.shapes) {
+        let rows = self.names.into_iter().zip(self.acc).zip(self.shapes).zip(masked);
+        for (((name, mut a), shape), mw) in rows {
+            let w = self.total_weight + mw;
+            if w <= 0.0 {
+                continue; // uncovered tensor: keep the previous global value
+            }
+            let inv = 1.0 / w as f32;
             for x in &mut a {
                 *x *= inv;
             }
@@ -77,9 +145,17 @@ impl Aggregator {
     }
 
     /// Total sample weight accumulated so far (NOT a client count: `add`
-    /// weights are shard sample counts).
+    /// weights are shard sample counts). Masked adds are *not* included —
+    /// they weight individual tensors, not the cohort.
     pub fn total_weight(&self) -> f64 {
         self.total_weight
+    }
+
+    /// Whether any positive weight has accumulated (full-cover or
+    /// masked), i.e. whether [`Self::finish`] would write the store.
+    pub fn has_weight(&self) -> bool {
+        self.total_weight > 0.0
+            || self.masked_weight.as_ref().is_some_and(|m| m.iter().any(|&w| w > 0.0))
     }
 }
 
@@ -99,6 +175,8 @@ pub struct BufferedAggregator {
 }
 
 impl BufferedAggregator {
+    /// Build a buffered accumulator for `names` with staleness-discount
+    /// exponent `alpha`.
     pub fn new(names: &[String], store: &ParamStore, alpha: f64) -> Result<Self> {
         let inner = Aggregator::new(names, store)?;
         Ok(BufferedAggregator { inner, alpha, merged: 0, staleness_sum: 0 })
@@ -108,6 +186,25 @@ impl BufferedAggregator {
     pub fn add<T: AsRef<[f32]>>(&mut self, tensors: &[T], weight: f64, staleness: usize) {
         let w = weight * staleness_discount(staleness, self.alpha);
         self.inner.add(tensors, w);
+        self.merged += 1;
+        self.staleness_sum += staleness;
+    }
+
+    /// Merge one stale update that crossed ≥ 1 freeze/step transition and
+    /// was projected onto the still-trained suffix: `parts` pairs each
+    /// surviving tensor with its index into the *current* trainable list,
+    /// and `extra_decay` (see [`transition_decay`]) compounds onto the
+    /// ordinary staleness discount. Tensors absent from `parts` (the
+    /// since-frozen blocks) receive no mass at all.
+    pub fn add_projected<T: AsRef<[f32]>>(
+        &mut self,
+        parts: &[(usize, T)],
+        weight: f64,
+        staleness: usize,
+        extra_decay: f64,
+    ) {
+        let w = weight * staleness_discount(staleness, self.alpha) * extra_decay;
+        self.inner.add_masked(parts, w);
         self.merged += 1;
         self.staleness_sum += staleness;
     }
@@ -132,9 +229,15 @@ impl BufferedAggregator {
         self.merged >= buffer_k
     }
 
-    /// Total (discounted) weight accumulated so far.
+    /// Total (discounted) full-cover weight accumulated so far.
     pub fn total_weight(&self) -> f64 {
         self.inner.total_weight()
+    }
+
+    /// Whether any positive weight (full-cover or projected) has
+    /// accumulated — i.e. whether [`Self::finish`] would write the store.
+    pub fn has_weight(&self) -> bool {
+        self.inner.has_weight()
     }
 
     /// Normalize and write back; fails on a zero-weight buffer.
@@ -153,6 +256,7 @@ pub struct SlicedAggregator {
 }
 
 impl SlicedAggregator {
+    /// Build a sliced accumulator for `names`, sized from the store.
     pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
         let mut full_shapes = Vec::new();
         let mut acc = Vec::new();
@@ -337,6 +441,107 @@ mod tests {
         assert!((agg.mean_staleness() - 0.5).abs() < 1e-12);
         agg.finish(&mut store).unwrap();
         assert!((store.get("w").unwrap().data[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn transition_decay_degenerates_and_compounds() {
+        assert_eq!(transition_decay(0.5, 0).to_bits(), 1.0f64.to_bits(), "zero crossings = 1.0");
+        assert_eq!(transition_decay(0.0, 0), 1.0, "even decay 0 is inert without a crossing");
+        assert_eq!(transition_decay(0.5, 1), 0.5);
+        assert_eq!(transition_decay(0.5, 2), 0.25);
+        assert_eq!(transition_decay(1.0, 7), 1.0, "decay 1 disables the penalty");
+        assert_eq!(transition_decay(0.0, 3), 0.0, "decay 0 kills any crossed update");
+        // Monotone non-increasing in transitions crossed (decay <= 1).
+        for decay in [0.0, 0.25, 0.5, 1.0] {
+            for k in 0..6u64 {
+                assert!(transition_decay(decay, k + 1) <= transition_decay(decay, k));
+            }
+        }
+    }
+
+    #[test]
+    fn masked_add_normalizes_per_tensor_and_preserves_uncovered() {
+        // Two tensors; a full-cover client plus a projected update that
+        // covers only tensor 1. Tensor 0 averages over the full client
+        // alone; tensor 1 over both; an entirely uncovered tensor keeps
+        // the previous global value.
+        let mut store = store_with(&[
+            ("a", vec![2], vec![9.0, 9.0]),
+            ("b", vec![2], vec![9.0, 9.0]),
+            ("c", vec![2], vec![7.0, 7.0]),
+        ]);
+        let names = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add(&[vec![1.0, 1.0], vec![2.0, 2.0], vec![0.0, 0.0]], 1.0);
+        agg.add_masked(&[(1usize, vec![6.0, 6.0])], 3.0);
+        assert!(agg.has_weight());
+        agg.finish(&mut store).unwrap();
+        assert_eq!(store.get("a").unwrap().data, vec![1.0, 1.0], "full weight only");
+        // b: (1*2 + 3*6) / (1 + 3) = 5.0
+        assert_eq!(store.get("b").unwrap().data, vec![5.0, 5.0]);
+        assert_eq!(store.get("c").unwrap().data, vec![0.0, 0.0], "covered by the full add");
+
+        // Masked-only merge: uncovered tensors keep the store value.
+        let mut store = store_with(&[("a", vec![1], vec![9.0]), ("b", vec![1], vec![9.0])]);
+        let names = vec!["a".to_string(), "b".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add_masked(&[(1usize, vec![4.0])], 2.0);
+        assert_eq!(agg.total_weight(), 0.0, "masked weight is per-tensor, not cohort");
+        assert!(agg.has_weight());
+        agg.finish(&mut store).unwrap();
+        assert_eq!(store.get("a").unwrap().data, vec![9.0], "frozen tensor untouched");
+        assert_eq!(store.get("b").unwrap().data, vec![4.0]);
+    }
+
+    #[test]
+    fn masked_zero_weight_still_fails_finish() {
+        let mut store = store_with(&[("w", vec![1], vec![5.0])]);
+        let names = vec!["w".to_string()];
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add_masked(&[(0usize, vec![1.0])], 0.0); // zero-weight projection
+        assert!(!agg.has_weight());
+        assert!(agg.finish(&mut store).is_err(), "masked zero weight must not no-op silently");
+        assert_eq!(store.get("w").unwrap().data, vec![5.0]);
+    }
+
+    #[test]
+    fn projected_merge_discounts_staleness_and_transitions() {
+        // A fresh full client (w=1) plus a projected update (w=4) at
+        // staleness 1 with alpha=1 (discount 0.5) crossing one transition
+        // with decay 0.5: effective projected weight = 4 * 0.5 * 0.5 = 1.
+        // Covered tensor: (1*0 + 1*6) / 2 = 3; uncovered: full only.
+        let mut store = store_with(&[("a", vec![1], vec![0.0]), ("b", vec![1], vec![0.0])]);
+        let names = vec!["a".to_string(), "b".to_string()];
+        let mut agg = BufferedAggregator::new(&names, &store, 1.0).unwrap();
+        agg.add(&[vec![2.0], vec![0.0]], 1.0, 0);
+        agg.add_projected(&[(1usize, vec![6.0])], 4.0, 1, transition_decay(0.5, 1));
+        assert_eq!(agg.merged(), 2);
+        assert!(agg.has_weight());
+        agg.finish(&mut store).unwrap();
+        assert_eq!(store.get("a").unwrap().data, vec![2.0]);
+        assert_eq!(store.get("b").unwrap().data, vec![3.0]);
+    }
+
+    #[test]
+    fn projected_weight_never_exceeds_original() {
+        // discount * decay ∈ (0, 1] for alpha >= 0, decay ∈ [0, 1]: a
+        // projected update can only lose influence relative to merging
+        // fresh, never gain it — and more transitions mean less weight.
+        for alpha in [0.0, 0.5, 1.0] {
+            for decay in [0.0, 0.25, 0.5, 1.0] {
+                for staleness in 0..5usize {
+                    let mut prev = f64::INFINITY;
+                    for transitions in 0..5u64 {
+                        let f = staleness_discount(staleness, alpha)
+                            * transition_decay(decay, transitions);
+                        assert!(f <= 1.0 + 1e-12, "amplified: {f}");
+                        assert!(f >= 0.0);
+                        assert!(f <= prev + 1e-12, "not monotone in transitions");
+                        prev = f;
+                    }
+                }
+            }
+        }
     }
 
     #[test]

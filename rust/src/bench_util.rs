@@ -7,17 +7,22 @@
 
 use std::time::{Duration, Instant};
 
+/// One benchmark's timed samples.
 pub struct BenchResult {
+    /// Benchmark name (printed in the report row).
     pub name: String,
+    /// Per-iteration wall times, in run order.
     pub samples: Vec<Duration>,
 }
 
 impl BenchResult {
+    /// Mean sample duration.
     pub fn mean(&self) -> Duration {
         let total: Duration = self.samples.iter().sum();
         total / self.samples.len() as u32
     }
 
+    /// The `p`-quantile sample (0.0 = min, 1.0 = max).
     pub fn percentile(&self, p: f64) -> Duration {
         let mut s = self.samples.clone();
         s.sort();
@@ -25,6 +30,7 @@ impl BenchResult {
         s[idx]
     }
 
+    /// Print the criterion-style summary row.
     pub fn report(&self) {
         println!(
             "{:<44} mean {:>12?}  median {:>12?}  p95 {:>12?}  min {:>12?}  (n={})",

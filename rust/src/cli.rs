@@ -13,8 +13,10 @@ fn is_value_token(tok: &str) -> bool {
     !tok.starts_with('-') || tok.parse::<f64>().is_ok()
 }
 
+/// Parsed process arguments: one optional subcommand plus options/flags.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// First non-flag token, when present.
     pub subcommand: Option<String>,
     values: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -43,18 +45,22 @@ impl Args {
         Ok(out)
     }
 
+    /// The raw value of `--key`, if provided.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Whether the boolean `--key` flag was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Parse `--key`'s value as `T` (None when absent, error on garbage).
     pub fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,

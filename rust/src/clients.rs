@@ -9,19 +9,25 @@ use crate::rng::Rng;
 
 /// One simulated device.
 pub struct Client {
+    /// Stable pool index (also the fleet-simulator client id).
     pub id: usize,
+    /// Sampled memory budget + contention model.
     pub memory: DeviceMemory,
     /// Fleet-simulator characteristics: compute/link speeds, availability,
     /// dropout (see `fleet::profile`).
     pub profile: DeviceProfile,
+    /// The client's local data shard.
     pub shard: ClientShard,
     /// Version of the frozen prefix this client has cached (comm
     /// accounting: the prefix is re-downloaded only when it changes).
     pub prefix_version: u64,
 }
 
+/// The device fleet: every simulated client plus the shared memory model.
 pub struct ClientPool {
+    /// All clients, indexed by [`Client::id`].
     pub clients: Vec<Client>,
+    /// Fleet-wide memory substrate knobs (budgets, contention).
     pub mem_cfg: MemoryConfig,
     rng: Rng,
 }
@@ -38,6 +44,8 @@ pub struct Selection {
 }
 
 impl ClientPool {
+    /// Build the fleet: partition the dataset into shards and sample each
+    /// client's memory budget + device profile from seed-forked streams.
     pub fn build(
         num_clients: usize,
         total_samples: usize,
@@ -66,14 +74,17 @@ impl ClientPool {
         ClientPool { clients, mem_cfg, rng: rng.fork(0x5e1) }
     }
 
+    /// Number of clients in the fleet.
     pub fn len(&self) -> usize {
         self.clients.len()
     }
 
+    /// Whether the fleet is empty.
     pub fn is_empty(&self) -> bool {
         self.clients.is_empty()
     }
 
+    /// Total training samples across every client's shard.
     pub fn total_samples(&self) -> usize {
         self.clients.iter().map(|c| c.shard.num_samples()).sum()
     }

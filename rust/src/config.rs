@@ -10,6 +10,7 @@ use crate::freezing::FreezeConfig;
 use crate::memory::MemoryConfig;
 use anyhow::Result;
 
+/// The one config struct every method/bench/example consumes.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     /// Manifest model tag, e.g. "resnet18_w8_c10".
@@ -46,6 +47,7 @@ pub struct RunConfig {
     pub fleet: FleetCfg,
     /// Tail length for the final-accuracy statistic (paper: 10).
     pub acc_tail: usize,
+    /// Run seed: every stochastic stream forks from it.
     pub seed: u64,
 }
 
@@ -91,6 +93,18 @@ pub struct FleetCfg {
     /// Late updates older than this many rounds are dropped instead of
     /// merged under `async`. CLI: `--max-staleness`.
     pub max_staleness: usize,
+    /// Stale-update projection across freeze/step transitions under
+    /// `async`: `off` (drop on artifact/prefix-version mismatch — the
+    /// backwards-compatible default) or `on` (project the update onto
+    /// the still-trained suffix: frozen-block deltas are discarded and
+    /// counted, the survivors merge with an extra
+    /// `projection_decay^transitions` weight factor).
+    /// CLI: `--stale-projection`.
+    pub stale_projection: String,
+    /// Per-crossed-transition weight decay for projected stale updates,
+    /// in [0, 1]. 1 disables the extra penalty; 0 zeroes any update that
+    /// crossed a transition. CLI: `--projection-decay`.
+    pub projection_decay: f64,
     /// Mid-round churn policy: what happens when a device's availability
     /// trace flips offline *during* a compute or upload span. `none`
     /// (trace gates dispatch only — the backwards-compatible default),
@@ -125,6 +139,8 @@ impl Default for FleetCfg {
             buffer_k: None,
             staleness_alpha: 0.5,
             max_staleness: 8,
+            stale_projection: "off".into(),
+            projection_decay: 0.5,
             churn_policy: "none".into(),
             churn_epochs: 4,
             trace_period_s: None,
@@ -136,10 +152,15 @@ impl Default for FleetCfg {
 /// Plain-data twin of freezing::FreezeConfig.
 #[derive(Debug, Clone, Copy)]
 pub struct FreezeCfg {
+    /// Delta window H for effective movement.
     pub window_h: usize,
+    /// Slope threshold φ.
     pub phi: f64,
+    /// Consecutive below-threshold evaluations required (patience W).
     pub patience_w: usize,
+    /// Points used in each slope fit.
     pub fit_points: usize,
+    /// Never freeze before this many EM observations (warm-up).
     pub min_observations: usize,
 }
 
@@ -158,9 +179,13 @@ impl From<FreezeCfg> for FreezeConfig {
 /// Plain-data twin of memory::MemoryConfig.
 #[derive(Debug, Clone, Copy)]
 pub struct MemCfg {
+    /// Static budget range lower bound, MB.
     pub budget_min_mb: u64,
+    /// Static budget range upper bound, MB.
     pub budget_max_mb: u64,
+    /// Per-round contention factor lower bound.
     pub contention_lo: f64,
+    /// Batch size used for footprint accounting.
     pub accounting_batch: u64,
 }
 
@@ -201,6 +226,7 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// The configured data-partition scheme (IID unless alpha is set).
     pub fn partition(&self) -> Partition {
         match self.dirichlet_alpha {
             Some(alpha) => Partition::Dirichlet { alpha },
@@ -240,6 +266,25 @@ impl RunConfig {
     /// `fleet.churn_epochs`.
     pub fn churn_policy(&self) -> Result<ChurnPolicy> {
         ChurnPolicy::parse(&self.fleet.churn_policy, self.fleet.churn_epochs)
+    }
+
+    /// Resolve the stale-projection switch: `Some(decay)` when enabled
+    /// (`on`), `None` for the historical drop-on-mismatch behaviour
+    /// (`off`, the default). The decay must be a finite fraction in
+    /// [0, 1] — anything above 1 would *amplify* transition-crossing
+    /// updates.
+    pub fn stale_projection(&self) -> Result<Option<f64>> {
+        match self.fleet.stale_projection.as_str() {
+            "off" => Ok(None),
+            "on" => {
+                let d = self.fleet.projection_decay;
+                if !d.is_finite() || !(0.0..=1.0).contains(&d) {
+                    anyhow::bail!("projection decay must be in [0, 1], got {d}");
+                }
+                Ok(Some(d))
+            }
+            other => anyhow::bail!("unknown stale-projection mode `{other}` (off|on)"),
+        }
     }
 
     /// Resolve the configured round policy string. The bare `async`
@@ -408,6 +453,33 @@ mod tests {
         c.fleet.churn_policy = "checkpoint".into();
         c.fleet.churn_epochs = 0;
         assert!(c.churn_policy().is_err(), "zero epoch granularity");
+    }
+
+    #[test]
+    fn stale_projection_resolves_and_validates() {
+        let mut c = RunConfig::default();
+        // Backwards-compatible default: projection off (drop behaviour).
+        assert_eq!(c.stale_projection().unwrap(), None);
+        c.fleet.stale_projection = "on".into();
+        assert_eq!(c.stale_projection().unwrap(), Some(0.5), "default decay rides along");
+        c.fleet.projection_decay = 1.0;
+        assert_eq!(c.stale_projection().unwrap(), Some(1.0), "decay 1 = no extra penalty");
+        c.fleet.projection_decay = 0.0;
+        assert_eq!(c.stale_projection().unwrap(), Some(0.0), "decay 0 = kill crossed updates");
+        // Rejections: amplification, nonsense values, unknown modes.
+        c.fleet.projection_decay = 1.5;
+        assert!(c.stale_projection().is_err(), "decay > 1 amplifies stale updates");
+        c.fleet.projection_decay = -0.1;
+        assert!(c.stale_projection().is_err(), "negative decay");
+        c.fleet.projection_decay = f64::NAN;
+        assert!(c.stale_projection().is_err(), "non-finite decay");
+        c.fleet.projection_decay = 0.5;
+        c.fleet.stale_projection = "maybe".into();
+        assert!(c.stale_projection().is_err(), "unknown mode");
+        // `off` ignores a bad decay (the knob is inert).
+        c.fleet.stale_projection = "off".into();
+        c.fleet.projection_decay = f64::NAN;
+        assert!(c.stale_projection().unwrap().is_none());
     }
 
     #[test]

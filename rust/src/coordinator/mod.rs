@@ -13,22 +13,30 @@
 //! Under the `async` policy rounds are no longer self-contained: uploads
 //! that miss the `buffer_k` window persist in the [`FleetEngine`]'s
 //! in-flight queue, and the matching *update tensors* persist here in
-//! [`ServerCtx::pending`] — version-stamped with the dispatch round,
+//! the `ServerCtx` pending buffer — version-stamped with the dispatch round,
 //! artifact, and frozen-prefix version. When the fleet reports a late
 //! arrival, the pending update merges with a staleness-discounted weight
 //! unless it is older than `max_staleness` rounds or was trained against
 //! a block that has since been frozen or remapped (artifact or prefix
-//! version mismatch), in which case it is dropped.
+//! version mismatch). A mismatched update is dropped by default; with
+//! `--stale-projection on` it is instead *projected* onto the
+//! still-trained suffix (see [`projection`]) and merged with an extra
+//! `--projection-decay`^transitions weight factor — recovering the
+//! device work a freeze transition would otherwise waste.
 //!
 //! The progressive schedule itself (shrink → grow, freezing) lives in
-//! `methods::profl`; baselines drive the same primitives.
+//! `methods::profl`; baselines drive the same primitives. Every
+//! [`ServerCtx::bump_prefix_version`] is recorded in a
+//! [`TransitionLog`], so transition-staleness stays auditable per run.
 
+pub mod projection;
 pub mod round;
 
 use crate::clients::{ClientPool, Selection};
 use crate::config::RunConfig;
 use crate::data::SyntheticDataset;
 use crate::fleet::{ChurnPolicy, ClientWork, FleetEngine, RoundPlan, RoundPolicy};
+use crate::freezing::TransitionLog;
 use crate::manifest::{MemCoeffs, ModelEntry};
 use crate::metrics::MetricsSink;
 use crate::rng::Rng;
@@ -36,6 +44,8 @@ use crate::runtime::Runtime;
 use crate::store::ParamStore;
 use anyhow::Result;
 use std::collections::HashMap;
+
+use projection::{classify_stale, MergeContext, StaleDecision, TrainableLayout};
 
 pub use round::{EvalResult, RoundOutcome};
 
@@ -46,6 +56,7 @@ pub const TEST_BATCHES: usize = 8;
 /// while its upload is in flight across rounds (async policy). The
 /// version stamps decide mergeability on arrival.
 pub struct PendingUpdate {
+    /// Owning client's pool index.
     pub client: usize,
     /// Artifact the client trained (a late update only merges into the
     /// same artifact — a frozen/remapped block drops it).
@@ -65,13 +76,42 @@ pub struct PendingUpdate {
     pub bytes_up: u64,
 }
 
+/// A stale update that crossed ≥ 1 freeze/step transition and survived
+/// projection onto the still-trained suffix: what `run_cohort_async`
+/// feeds `BufferedAggregator::add_projected`.
+pub(crate) struct ProjectedLate {
+    /// Surviving tensors as (current-trainable-list index, tensor) pairs.
+    pub kept: Vec<(usize, Vec<f32>)>,
+    /// Scalars discarded with the since-frozen tensors
+    /// (`RoundRecord::projected_dropped_params`).
+    pub dropped_params: u64,
+    /// Rounds elapsed since dispatch (staleness discount input).
+    pub staleness: usize,
+    /// Freeze/step transitions crossed while in flight (decay exponent).
+    pub transitions: u64,
+    /// Sample weight the update carries (pre-discount).
+    pub weight: f64,
+    /// Whether the update is a churn-checkpointed partial.
+    pub partial: bool,
+    /// Upload bytes charged when the update lands.
+    pub bytes_up: u64,
+}
+
+/// The coordinator: global state + round primitives every method drives.
 pub struct ServerCtx<'rt> {
+    /// PJRT runtime (artifact loading/execution).
     pub rt: &'rt Runtime,
+    /// The run's resolved configuration.
     pub cfg: RunConfig,
+    /// Global model parameters.
     pub store: ParamStore,
+    /// The device fleet.
     pub pool: ClientPool,
+    /// Synthetic dataset shared by every client shard.
     pub dataset: SyntheticDataset,
+    /// Per-round metrics accumulator.
     pub metrics: MetricsSink,
+    /// Server round counter (incremented after every train/distill round).
     pub round: usize,
     /// Resolved round policy (from `cfg.fleet.round_policy`).
     pub policy: RoundPolicy,
@@ -83,6 +123,13 @@ pub struct ServerCtx<'rt> {
     /// Version stamp of the frozen prefix currently in the store; clients
     /// cache the prefix and only re-download when this changes.
     pub prefix_version: u64,
+    /// Stale-update projection across freeze transitions: `Some(decay)`
+    /// when `--stale-projection on` (decay compounds per crossed
+    /// transition), `None` for the historical drop behaviour.
+    pub projection: Option<f64>,
+    /// Append-only history of freeze/step transitions (every
+    /// [`Self::bump_prefix_version`]), exported into `RunSummary`.
+    pub(crate) transitions: TransitionLog,
     /// Round-spanning fleet state (async in-flight uploads).
     pub engine: FleetEngine,
     /// Server-side buffer of straggler updates whose uploads are still in
@@ -97,12 +144,15 @@ pub struct ServerCtx<'rt> {
 }
 
 impl<'rt> ServerCtx<'rt> {
+    /// Build a coordinator: resolve the fleet/policy config, construct
+    /// the pool, and seed-initialize the global store.
     pub fn new(rt: &'rt Runtime, cfg: RunConfig) -> Result<Self> {
         let model = rt.model(&cfg.model_tag)?;
         let dataset = SyntheticDataset::new(model.num_classes, cfg.seed ^ 0xda7a);
         let fleet_profile = cfg.fleet_profile()?;
         let policy = cfg.round_policy()?;
         let churn = cfg.churn_policy()?;
+        let projection = cfg.stale_projection()?;
         let pool = ClientPool::build(
             cfg.num_clients,
             cfg.total_samples,
@@ -126,6 +176,8 @@ impl<'rt> ServerCtx<'rt> {
             churn,
             sim_time_s: 0.0,
             prefix_version: 0,
+            projection,
+            transitions: TransitionLog::new(),
             engine: FleetEngine::new(),
             pending: HashMap::new(),
             fleet_rng,
@@ -134,6 +186,7 @@ impl<'rt> ServerCtx<'rt> {
         })
     }
 
+    /// The run's model entry in the manifest.
     pub fn model(&self) -> Result<&ModelEntry> {
         self.rt.model(&self.cfg.model_tag)
     }
@@ -148,9 +201,18 @@ impl<'rt> ServerCtx<'rt> {
 
     /// Bump the frozen-prefix version (called at step/stage transitions);
     /// forces prefix re-download for every client on next contact and
-    /// invalidates in-flight updates trained against the old prefix.
+    /// invalidates in-flight updates trained against the old prefix
+    /// (unless stale projection recovers their trainable suffix). Every
+    /// bump is recorded in the [`TransitionLog`] so transition-staleness
+    /// is computable for any in-flight update.
     pub fn bump_prefix_version(&mut self) {
         self.prefix_version += 1;
+        self.transitions.record(self.prefix_version, self.round, self.sim_time_s);
+    }
+
+    /// The run's freeze/step transition history (oldest first).
+    pub fn transition_log(&self) -> &TransitionLog {
+        &self.transitions
     }
 
     /// How many clients to sample for a round: `per_round`, plus the
@@ -233,35 +295,97 @@ impl<'rt> ServerCtx<'rt> {
         plan
     }
 
-    /// Collect the pending updates behind this round's late arrivals,
-    /// dropping any that are too stale or were trained against a
-    /// since-frozen/remapped block (artifact or prefix-version mismatch).
+    /// Collect the pending updates behind this round's late arrivals and
+    /// classify each against the current merge context (see
+    /// [`projection::classify_stale`]):
+    ///
+    /// * version-exact updates merge as-is (`exact`, in arrival order);
+    /// * updates trained against a since-frozen/remapped block are
+    ///   dropped by default — or, under `--stale-projection on`,
+    ///   projected onto the still-trained suffix (`projected`);
+    /// * updates older than `max_staleness` rounds are always dropped.
+    ///
     /// Dropped uploads still arrived — their bytes are charged and the
     /// discard is recorded (`late_dropped`), so the async policy cannot
-    /// under-report its losses. Returns `(update, staleness)` pairs in
-    /// arrival order.
+    /// under-report its losses.
     pub(crate) fn take_late_arrivals(
         &mut self,
         plan: &RoundPlan,
         artifact: &str,
         max_staleness: usize,
         outcome: &mut RoundOutcome,
-    ) -> Vec<(PendingUpdate, usize)> {
-        let mut out = Vec::new();
+    ) -> Result<(Vec<(PendingUpdate, usize)>, Vec<ProjectedLate>)> {
+        let mut exact = Vec::new();
+        let mut projected = Vec::new();
+        if plan.late_arrivals.is_empty() {
+            return Ok((exact, projected));
+        }
+        // Borrow the model entry through `rt` (independent of &mut self).
+        let rt = self.rt;
+        let model = rt.model(&self.cfg.model_tag)?;
+        // The current trainable layout is only materialized when the
+        // projection path can fire; the off path allocates nothing.
+        let new_layout = if self.projection.is_some() {
+            Some(TrainableLayout::of_artifact(model.artifact(artifact)?))
+        } else {
+            None
+        };
+        let mctx = MergeContext {
+            artifact,
+            prefix_version: self.prefix_version,
+            round: self.round,
+            max_staleness,
+            projection: new_layout.as_ref(),
+        };
         for la in &plan.late_arrivals {
-            if let Some(p) = self.pending.remove(&la.client) {
-                let staleness = self.round.saturating_sub(p.dispatch_round);
-                if staleness <= max_staleness
-                    && p.artifact == artifact
-                    && p.prefix_version == self.prefix_version
-                {
-                    out.push((p, staleness));
-                } else {
-                    outcome.bytes_up += p.bytes_up;
+            let Some(p) = self.pending.remove(&la.client) else { continue };
+            let PendingUpdate {
+                client,
+                artifact: trained,
+                prefix_version,
+                dispatch_round,
+                weight,
+                partial,
+                tensors,
+                bytes_up,
+            } = p;
+            // The dispatch-time layout resolves lazily: only an update
+            // that actually attempts a projection pays for it.
+            let decision =
+                classify_stale(&mctx, &trained, prefix_version, dispatch_round, tensors, || {
+                    model.artifact(&trained).ok().map(TrainableLayout::of_artifact)
+                });
+            match decision {
+                StaleDecision::Exact { tensors, staleness } => {
+                    let p = PendingUpdate {
+                        client,
+                        artifact: trained,
+                        prefix_version,
+                        dispatch_round,
+                        weight,
+                        partial,
+                        tensors,
+                        bytes_up,
+                    };
+                    exact.push((p, staleness));
+                }
+                StaleDecision::Projected { kept, dropped_params, staleness, transitions } => {
+                    projected.push(ProjectedLate {
+                        kept,
+                        dropped_params,
+                        staleness,
+                        transitions,
+                        weight,
+                        partial,
+                        bytes_up,
+                    });
+                }
+                StaleDecision::Dropped => {
+                    outcome.bytes_up += bytes_up;
                     outcome.late_dropped += 1;
                 }
             }
         }
-        out
+        Ok((exact, projected))
     }
 }

@@ -1,0 +1,347 @@
+//! Stale-update projection across freeze/step transitions (pure core).
+//!
+//! ProFL's progressive schedule changes the trained block-prefix *while
+//! async uploads are in flight*: a straggler dispatched in step `t` can
+//! arrive after the server moved to step `t+1`, where its artifact and
+//! frozen-prefix version no longer match. Historically such updates were
+//! dropped wholesale (`late_dropped`) — wasting exactly the device work
+//! the paper's memory-wall design tries to preserve. Progressive-freezing
+//! follow-ups (SmartFreeze, NeuLite) observe that stale gradients remain
+//! useful on the *still-trainable suffix*; this module implements that
+//! recovery:
+//!
+//! 1. intersect the update's trained tensor set with the server's current
+//!    trainable layout ([`project_tensors`]) — surviving tensors are
+//!    remapped to their new positions, since-frozen tensors are discarded
+//!    (their scalar count surfaces as `projected_dropped_params`);
+//! 2. merge the surviving suffix through the masked aggregator path with
+//!    an extra [`crate::aggregate::transition_decay`] factor of
+//!    `decay^transitions` compounding onto the ordinary FedBuff staleness
+//!    discount.
+//!
+//! Projection only engages when the update actually *crossed* a
+//! transition (prefix-version distance ≥ 1). A mismatch at the same
+//! prefix version — a train-round update landing in a same-step
+//! distillation round, say — keeps the historical drop: recovering
+//! freeze-transition losses is the whole point, and nothing else may
+//! merge undecayed across artifacts.
+//!
+//! Everything here is pure (names, lengths, tensors — no runtime, no
+//! XLA), so the decision layer is unit- and golden-testable without
+//! compiled artifacts: `rust/tests/golden_projection.rs` pins the full
+//! decision trace of an async×projection scenario bit for bit.
+//!
+//! The coordinator enables this path only under `--stale-projection on`;
+//! the default (`off`) keeps the historical drop behaviour bit for bit
+//! (see `docs/SIMULATION.md` for the degeneracy contract).
+
+use crate::manifest::Artifact;
+
+/// Layout of one artifact's trainable tensors: ordered names plus flat
+/// element counts, the contract a [`crate::coordinator::PendingUpdate`]'s
+/// positional tensor list is interpreted against.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TrainableLayout {
+    /// Trainable parameter names, in the artifact's positional order.
+    pub names: Vec<String>,
+    /// Flat element count of each tensor, parallel to `names`.
+    pub lens: Vec<usize>,
+}
+
+impl TrainableLayout {
+    /// Build a layout from explicit `(name, len)` pairs (tests and the
+    /// golden harness).
+    pub fn new(pairs: &[(&str, usize)]) -> Self {
+        TrainableLayout {
+            names: pairs.iter().map(|(n, _)| n.to_string()).collect(),
+            lens: pairs.iter().map(|&(_, l)| l).collect(),
+        }
+    }
+
+    /// The trainable layout of a manifest artifact (name order and flat
+    /// lengths of its `role == "trainable"` inputs).
+    pub fn of_artifact(a: &Artifact) -> Self {
+        let mut names = Vec::new();
+        let mut lens = Vec::new();
+        for e in &a.inputs {
+            if e.role == "trainable" {
+                names.push(e.name.clone());
+                lens.push(e.shape.iter().product());
+            }
+        }
+        TrainableLayout { names, lens }
+    }
+
+    /// Number of trainable tensors in the layout.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Whether the layout has no trainable tensors.
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// Project `tensors` (positional in `old` layout order) onto the `new`
+/// layout: tensors whose parameter is still trainable (same name, same
+/// flat length) are remapped to `(new index, tensor)` pairs; tensors of
+/// since-frozen or re-shaped parameters are discarded and their total
+/// scalar count returned as the second element.
+pub fn project_tensors(
+    old: &TrainableLayout,
+    new: &TrainableLayout,
+    tensors: Vec<Vec<f32>>,
+) -> (Vec<(usize, Vec<f32>)>, u64) {
+    debug_assert_eq!(old.names.len(), tensors.len(), "update/layout arity mismatch");
+    let mut kept = Vec::new();
+    let mut dropped = 0u64;
+    for (name, t) in old.names.iter().zip(tensors) {
+        match new.names.iter().position(|n| n == name) {
+            Some(i) if new.lens[i] == t.len() => kept.push((i, t)),
+            _ => dropped += t.len() as u64,
+        }
+    }
+    (kept, dropped)
+}
+
+/// The server's merge context when a buffered stale update arrives.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeContext<'a> {
+    /// Artifact the current round trains.
+    pub artifact: &'a str,
+    /// Current frozen-prefix version.
+    pub prefix_version: u64,
+    /// Current server round index (staleness = round − dispatch round).
+    pub round: usize,
+    /// Updates older than this many rounds are dropped outright.
+    pub max_staleness: usize,
+    /// Current trainable layout when stale projection is enabled; `None`
+    /// keeps the historical drop-on-mismatch behaviour bit for bit.
+    pub projection: Option<&'a TrainableLayout>,
+}
+
+/// What the server decided to do with one arriving stale update.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StaleDecision {
+    /// Version-exact (same artifact, same prefix version, within the
+    /// staleness window): merge as-is — the tensors ride back untouched.
+    Exact {
+        /// The update's tensors, returned to the caller unchanged.
+        tensors: Vec<Vec<f32>>,
+        /// Rounds elapsed since dispatch.
+        staleness: usize,
+    },
+    /// The update crossed a freeze/step transition but part of it still
+    /// lands on the trainable suffix: merge the projection.
+    Projected {
+        /// Surviving tensors as (current-layout index, tensor) pairs.
+        kept: Vec<(usize, Vec<f32>)>,
+        /// Scalars discarded with the since-frozen tensors.
+        dropped_params: u64,
+        /// Rounds elapsed since dispatch.
+        staleness: usize,
+        /// Freeze/step transitions crossed while in flight.
+        transitions: u64,
+    },
+    /// Too stale, projection disabled, or nothing survives the
+    /// intersection: drop the update (the upload still happened — the
+    /// caller charges its bytes and records the discard).
+    Dropped,
+}
+
+/// Classify one buffered stale update against the current merge context.
+/// `old_layout` lazily resolves the trainable layout of the artifact the
+/// update was trained against — it is only invoked when a projection is
+/// actually attempted (version-exact and dropped updates never pay for
+/// it), and returning `None` forces a drop. Pure: the coordinator and
+/// the artifact-free golden harness share this exact decision procedure.
+pub fn classify_stale(
+    ctx: &MergeContext<'_>,
+    update_artifact: &str,
+    update_prefix: u64,
+    dispatch_round: usize,
+    tensors: Vec<Vec<f32>>,
+    old_layout: impl FnOnce() -> Option<TrainableLayout>,
+) -> StaleDecision {
+    let staleness = ctx.round.saturating_sub(dispatch_round);
+    if staleness > ctx.max_staleness {
+        return StaleDecision::Dropped;
+    }
+    if update_artifact == ctx.artifact && update_prefix == ctx.prefix_version {
+        return StaleDecision::Exact { tensors, staleness };
+    }
+    let Some(new_layout) = ctx.projection else {
+        return StaleDecision::Dropped;
+    };
+    let transitions = ctx.prefix_version.saturating_sub(update_prefix);
+    if transitions == 0 {
+        // A mismatch with *no* crossed transition (e.g. a train-round
+        // update landing in a same-step distillation round): projection
+        // exists to recover work lost to freezing, so everything else
+        // keeps the historical drop — and an undecayed cross-artifact
+        // merge can never sneak in.
+        return StaleDecision::Dropped;
+    }
+    let Some(old) = old_layout() else {
+        return StaleDecision::Dropped;
+    };
+    let (kept, dropped_params) = project_tensors(&old, new_layout, tensors);
+    if kept.is_empty() {
+        return StaleDecision::Dropped;
+    }
+    StaleDecision::Projected { kept, dropped_params, staleness, transitions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t1() -> TrainableLayout {
+        // ProFL-grow-shaped step 1: block 1 + surrogate tail + op linear.
+        TrainableLayout::new(&[("b1/w", 8), ("s2/w", 4), ("s3/w", 4), ("op/fc/w", 2)])
+    }
+
+    fn t2() -> TrainableLayout {
+        TrainableLayout::new(&[("b2/w", 8), ("s3/w", 4), ("op/fc/w", 2)])
+    }
+
+    fn fill(layout: &TrainableLayout, v: f32) -> Vec<Vec<f32>> {
+        layout.lens.iter().map(|&l| vec![v; l]).collect()
+    }
+
+    #[test]
+    fn projection_keeps_suffix_and_counts_frozen_drops() {
+        let (kept, dropped) = project_tensors(&t1(), &t2(), fill(&t1(), 2.0));
+        // s3/w lands at new index 1, op/fc/w at 2; b1/w + s2/w are gone.
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].0, 1);
+        assert_eq!(kept[0].1, vec![2.0; 4]);
+        assert_eq!(kept[1].0, 2);
+        assert_eq!(kept[1].1, vec![2.0; 2]);
+        assert_eq!(dropped, 8 + 4, "b1/w and s2/w scalars discarded");
+    }
+
+    #[test]
+    fn projection_identity_on_same_layout() {
+        let (kept, dropped) = project_tensors(&t2(), &t2(), fill(&t2(), 1.5));
+        assert_eq!(dropped, 0);
+        assert_eq!(kept.len(), t2().len());
+        for (i, (idx, t)) in kept.iter().enumerate() {
+            assert_eq!(*idx, i, "identity remap");
+            assert_eq!(t.len(), t2().lens[i]);
+        }
+    }
+
+    #[test]
+    fn projection_drops_reshaped_parameters() {
+        // Same name, different length (a remapped block): not mergeable.
+        let old = TrainableLayout::new(&[("op/fc/w", 2)]);
+        let new = TrainableLayout::new(&[("op/fc/w", 6)]);
+        let (kept, dropped) = project_tensors(&old, &new, vec![vec![1.0, 1.0]]);
+        assert!(kept.is_empty());
+        assert_eq!(dropped, 2);
+    }
+
+    #[test]
+    fn classify_exact_inside_window() {
+        let new = t2();
+        let ctx = MergeContext {
+            artifact: "train_t2",
+            prefix_version: 5,
+            round: 9,
+            max_staleness: 8,
+            projection: Some(&new),
+        };
+        let d = classify_stale(&ctx, "train_t2", 5, 7, fill(&t2(), 1.0), || {
+            panic!("exact classification must not resolve the old layout")
+        });
+        match d {
+            StaleDecision::Exact { staleness, tensors } => {
+                assert_eq!(staleness, 2);
+                assert_eq!(tensors.len(), t2().len(), "tensors ride back untouched");
+            }
+            other => panic!("expected Exact, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_projects_across_transitions() {
+        let new = t2();
+        let ctx = MergeContext {
+            artifact: "train_t2",
+            prefix_version: 6,
+            round: 10,
+            max_staleness: 8,
+            projection: Some(&new),
+        };
+        let old = t1();
+        let d = classify_stale(&ctx, "train_t1", 5, 8, fill(&old, 3.0), || Some(old.clone()));
+        match d {
+            StaleDecision::Projected { kept, dropped_params, staleness, transitions } => {
+                assert_eq!(kept.len(), 2);
+                assert_eq!(dropped_params, 12);
+                assert_eq!(staleness, 2);
+                assert_eq!(transitions, 1);
+            }
+            other => panic!("expected Projected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_drops_when_disabled_stale_disjoint_or_uncrossed() {
+        let new = t2();
+        let old = t1();
+        // Projection disabled: mismatch drops, exactly the old behaviour.
+        let off = MergeContext {
+            artifact: "train_t2",
+            prefix_version: 6,
+            round: 10,
+            max_staleness: 8,
+            projection: None,
+        };
+        let d = classify_stale(&off, "train_t1", 5, 8, fill(&old, 1.0), || Some(old.clone()));
+        assert_eq!(d, StaleDecision::Dropped);
+
+        // Beyond max_staleness: dropped even with projection on.
+        let on = MergeContext { projection: Some(&new), ..off };
+        let d = classify_stale(&on, "train_t1", 5, 0, fill(&old, 1.0), || Some(old.clone()));
+        assert_eq!(d, StaleDecision::Dropped, "staleness cap applies first");
+
+        // Artifact mismatch at the *same* prefix version (e.g. a train
+        // update landing in a same-step distill round): no transition
+        // was crossed, so the historical drop stands — projection never
+        // produces an undecayed cross-artifact merge.
+        let d = classify_stale(&on, "train_t1", 6, 9, fill(&old, 1.0), || {
+            panic!("uncrossed mismatch must not resolve the old layout")
+        });
+        assert_eq!(d, StaleDecision::Dropped, "zero crossed transitions is a plain drop");
+
+        // Disjoint layouts (train vs distill surrogate): nothing survives.
+        let distill = TrainableLayout::new(&[("s2/conv/w", 16)]);
+        let d = classify_stale(&on, "distill_t2", 5, 9, vec![vec![0.0; 16]], || {
+            Some(distill.clone())
+        });
+        assert_eq!(d, StaleDecision::Dropped, "empty intersection is a plain drop");
+
+        // Unresolvable old layout: drop.
+        let d = classify_stale(&on, "train_t1", 5, 9, fill(&old, 1.0), || None);
+        assert_eq!(d, StaleDecision::Dropped);
+    }
+
+    #[test]
+    fn frozen_blocks_never_receive_mass() {
+        // Property half of the acceptance list: whatever survives a
+        // projection indexes only still-trainable tensors — no kept pair
+        // ever points at a name absent from the new layout.
+        let old = t1();
+        let new = t2();
+        let (kept, _) = project_tensors(&old, &new, fill(&old, 1.0));
+        for (idx, _) in &kept {
+            let name = &new.names[*idx];
+            assert!(old.names.contains(name), "kept tensor must come from the update");
+            assert!(new.names.contains(name), "kept tensor must be trainable now");
+            assert_ne!(name, "b1/w", "frozen block leaked through the projection");
+        }
+    }
+}

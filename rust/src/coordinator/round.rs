@@ -7,8 +7,8 @@
 //! buffered as [`PendingUpdate`]s, and earlier rounds' late arrivals
 //! merge with staleness-discounted weights.
 
-use super::{PendingUpdate, ServerCtx, TEST_BATCHES};
-use crate::aggregate::{Aggregator, BufferedAggregator};
+use super::{PendingUpdate, ProjectedLate, ServerCtx, TEST_BATCHES};
+use crate::aggregate::{transition_decay, Aggregator, BufferedAggregator};
 use crate::fleet::{EventKind, RoundPlan};
 use crate::metrics::RoundRecord;
 use crate::runtime::{literal_f32, literal_i32, LoadedArtifact, Runtime};
@@ -17,12 +17,19 @@ use std::collections::HashMap;
 
 /// What a train round produced (before the metrics record is finalized).
 pub struct RoundOutcome {
+    /// Cohort-weighted mean training loss (NaN when nothing trained).
     pub mean_loss: f32,
+    /// Cohort-weighted mean training accuracy (NaN when unavailable).
     pub mean_acc: f32,
+    /// Clients whose updates aggregated this round.
     pub participants: usize,
+    /// Clients trained on the output-layer fallback artifact.
     pub fallback: usize,
+    /// Bytes uploaded this round.
     pub bytes_up: u64,
+    /// Bytes downloaded this round.
     pub bytes_down: u64,
+    /// Analytical peak client memory for this round's artifact (bytes).
     pub client_mem_bytes: u64,
     /// Virtual duration of this round (seconds) under the fleet simulator.
     pub sim_time_s: f64,
@@ -37,10 +44,20 @@ pub struct RoundOutcome {
     /// round on arrival.
     pub late_merged: usize,
     /// Async policy: arrived-but-discarded late updates (too stale, or
-    /// trained against a since-frozen/remapped block).
+    /// trained against a since-frozen/remapped block with projection off
+    /// or nothing surviving the intersection).
     pub late_dropped: usize,
     /// Mean staleness (rounds) of the late-merged updates (0 when none).
     pub mean_staleness: f64,
+    /// Stale projection: updates that crossed a freeze/step transition
+    /// and merged their still-trainable suffix instead of being dropped.
+    pub projected_merged: usize,
+    /// Stale projection: scalars discarded with the since-frozen tensors
+    /// of this round's projected merges.
+    pub projected_dropped_params: u64,
+    /// Mean freeze/step transitions crossed by this round's projected
+    /// merges (0 when none) — the transition-staleness measure.
+    pub transition_staleness: f64,
     /// Mid-round churn: Interrupt events during this round's spans.
     pub interrupted: usize,
     /// Mid-round churn: Resume events (paused work continuing).
@@ -71,6 +88,9 @@ impl Default for RoundOutcome {
             late_merged: 0,
             late_dropped: 0,
             mean_staleness: 0.0,
+            projected_merged: 0,
+            projected_dropped_params: 0,
+            transition_staleness: 0.0,
             interrupted: 0,
             resumed: 0,
             partial_merged: 0,
@@ -79,9 +99,12 @@ impl Default for RoundOutcome {
     }
 }
 
+/// One evaluation pass over the held-out test set.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalResult {
+    /// Mean per-sample test loss.
     pub loss: f32,
+    /// Test accuracy in [0, 1].
     pub acc: f32,
 }
 
@@ -168,7 +191,7 @@ impl<'rt> ServerCtx<'rt> {
             // buffer; earlier rounds' arrivals merge staleness-discounted.
             let deferred: Vec<usize> =
                 sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
-            let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome);
+            let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome)?;
             let (loss, acc) = self.run_cohort_async(
                 &tag, artifact, &completers, &deferred, &fractions, late, lr, true, &mut outcome,
             )?;
@@ -253,9 +276,13 @@ impl<'rt> ServerCtx<'rt> {
     /// churn-aborted clients received the round artifact and trained (or
     /// started to), so the server's downlink was spent either way
     /// (otherwise straggler-cutting policies look artificially cheap next
-    /// to sync/async). Completers and async-deferred clients are charged
-    /// on their own paths; dropouts vanish at the dispatch instant —
-    /// before the download — and cost nothing.
+    /// to sync/async). A client churn-aborted *mid-download* is charged
+    /// only the fraction it actually fetched
+    /// ([`RoundPlan::download_fraction`]); pausable downloads complete
+    /// across resume windows and are charged exactly once at full size.
+    /// Completers and async-deferred clients are charged on their own
+    /// paths; dropouts vanish at the dispatch instant — before the
+    /// download — and cost nothing.
     fn account_lost_downloads(
         &mut self,
         plan: &RoundPlan,
@@ -274,25 +301,49 @@ impl<'rt> ServerCtx<'rt> {
                     continue;
                 }
                 charged.push(client);
-                if with_prefix {
-                    self.account_comm(client, tr_bytes, fr_bytes, false, outcome);
-                } else {
-                    outcome.bytes_down += tr_bytes;
-                }
+                self.account_lost_download(plan, client, tr_bytes, fr_bytes, with_prefix, outcome);
             }
         }
         // Async plans truncate events at the close instant, so a client
         // that dispatched *after* the close and then churn-aborted has no
-        // Dispatch event above — but it did receive the artifact.
+        // Dispatch event above — but it did receive (part of) the
+        // artifact.
         for &client in &plan.aborted {
             if !charged.contains(&client) {
-                if with_prefix {
-                    self.account_comm(client, tr_bytes, fr_bytes, false, outcome);
-                } else {
-                    outcome.bytes_down += tr_bytes;
-                }
+                self.account_lost_download(plan, client, tr_bytes, fr_bytes, with_prefix, outcome);
             }
         }
+    }
+
+    /// Charge one lost client's download, scaled by the fraction it had
+    /// actually fetched when churn cut it. At full fraction this is
+    /// exactly the historical charge (prefix-cache bookkeeping included);
+    /// a partial download charges `fraction × payload` and does *not*
+    /// refresh the client's prefix cache — it never received the whole
+    /// thing.
+    fn account_lost_download(
+        &mut self,
+        plan: &RoundPlan,
+        cid: usize,
+        tr_bytes: u64,
+        fr_bytes: u64,
+        with_prefix: bool,
+        outcome: &mut RoundOutcome,
+    ) {
+        let frac = plan.download_fraction(cid);
+        if frac >= 1.0 {
+            if with_prefix {
+                self.account_comm(cid, tr_bytes, fr_bytes, false, outcome);
+            } else {
+                outcome.bytes_down += tr_bytes;
+            }
+            return;
+        }
+        let mut payload = tr_bytes;
+        if with_prefix && self.pool.clients[cid].prefix_version != self.prefix_version {
+            payload += fr_bytes;
+        }
+        outcome.bytes_down += (frac * payload as f64) as u64;
     }
 
     /// Comm accounting for one client's exchange this round: trainables
@@ -377,12 +428,15 @@ impl<'rt> ServerCtx<'rt> {
     /// Async (FedBuff-style) cohort processing shared by train and
     /// distill rounds: merge `completers` fresh (staleness 0), train and
     /// buffer `deferred` (their uploads are in flight), merge `late`
-    /// arrivals staleness-discounted. Clients in `fractions` checkpointed
-    /// a churn partial: their weight is scaled by the completed fraction
-    /// (fresh merges here; deferred ones buffer the scaled weight so the
-    /// late merge inherits it). Returns the fresh cohort's mean
-    /// (loss, acc); with `buffer_k = per_round` and no in-flight traffic
-    /// the arithmetic is bit-identical to [`Self::train_cohort`].
+    /// arrivals staleness-discounted — version-exact ones as-is,
+    /// transition-crossers as suffix projections with the extra
+    /// `projection_decay^transitions` factor. Clients in `fractions`
+    /// checkpointed a churn partial: their weight is scaled by the
+    /// completed fraction (fresh merges here; deferred ones buffer the
+    /// scaled weight so the late merge inherits it). Returns the fresh
+    /// cohort's mean (loss, acc); with `buffer_k = per_round` and no
+    /// in-flight traffic the arithmetic is bit-identical to
+    /// [`Self::train_cohort`].
     #[allow(clippy::too_many_arguments)]
     fn run_cohort_async(
         &mut self,
@@ -391,11 +445,12 @@ impl<'rt> ServerCtx<'rt> {
         completers: &[usize],
         deferred: &[usize],
         fractions: &HashMap<usize, f64>,
-        late: Vec<(PendingUpdate, usize)>,
+        late: (Vec<(PendingUpdate, usize)>, Vec<ProjectedLate>),
         lr: f32,
         with_labels: bool,
         outcome: &mut RoundOutcome,
     ) -> Result<(f32, f32)> {
+        let (late, projected) = late;
         let art = self.rt.load(tag, artifact)?;
         let scan = self.rt.manifest.scan_steps;
         let batch = self.rt.manifest.train_batch;
@@ -480,7 +535,29 @@ impl<'rt> ServerCtx<'rt> {
             outcome.mean_staleness = staleness_sum as f64 / outcome.late_merged as f64;
         }
 
-        if agg.total_weight() <= 0.0 {
+        // Transition-crossing arrivals whose trainable suffix survived
+        // projection: masked merges — the since-frozen tensors receive no
+        // mass, and the weight compounds decay^transitions on top of the
+        // staleness discount.
+        let decay = self.projection.unwrap_or(1.0);
+        let mut transitions_sum = 0u64;
+        let n_projected = projected.len();
+        for pr in projected {
+            let extra = transition_decay(decay, pr.transitions);
+            agg.add_projected(&pr.kept, pr.weight, pr.staleness, extra);
+            outcome.bytes_up += pr.bytes_up;
+            outcome.projected_merged += 1;
+            outcome.projected_dropped_params += pr.dropped_params;
+            if pr.partial {
+                outcome.partial_merged += 1;
+            }
+            transitions_sum += pr.transitions;
+        }
+        if n_projected > 0 {
+            outcome.transition_staleness = transitions_sum as f64 / n_projected as f64;
+        }
+
+        if !agg.has_weight() {
             // Nothing merged (or only zero-weight shards): leave the store
             // untouched.
             return Ok((f32::NAN, f32::NAN));
@@ -529,7 +606,7 @@ impl<'rt> ServerCtx<'rt> {
         if let Some((_, max_staleness)) = self.async_params() {
             let deferred: Vec<usize> =
                 sel.trainers.iter().copied().filter(|id| plan.deferred.contains(id)).collect();
-            let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome);
+            let late = self.take_late_arrivals(&plan, artifact, max_staleness, &mut outcome)?;
             let (loss, _) = self.run_cohort_async(
                 &tag, artifact, &completers, &deferred, &fractions, late, lr, false, &mut outcome,
             )?;
@@ -641,6 +718,9 @@ impl<'rt> ServerCtx<'rt> {
             late_merged: out.late_merged,
             late_dropped: out.late_dropped,
             mean_staleness: out.mean_staleness,
+            projected_merged: out.projected_merged,
+            projected_dropped_params: out.projected_dropped_params,
+            transition_staleness: out.transition_staleness,
             interrupted: out.interrupted,
             resumed: out.resumed,
             partial_merged: out.partial_merged,

@@ -18,8 +18,11 @@ use crate::rng::Rng;
 
 pub use partition::{partition, ClientShard, Partition};
 
+/// Image side length (CIFAR geometry).
 pub const IMG: usize = 32;
+/// Color channels per image.
 pub const CHANNELS: usize = 3;
+/// Flat element count of one image.
 pub const IMG_ELEMS: usize = IMG * IMG * CHANNELS;
 
 const BLOBS: usize = 4;
@@ -34,7 +37,9 @@ struct ClassProto {
 /// Deterministic synthetic dataset with CIFAR geometry.
 #[derive(Clone, Debug)]
 pub struct SyntheticDataset {
+    /// Number of classes (10 = CIFAR10-like, 100 = CIFAR100-like).
     pub num_classes: usize,
+    /// Generator seed (everything derives from it deterministically).
     pub seed: u64,
     protos: Vec<ClassProto>,
     /// Sample = proto * signal + noise * sigma; lower signal/noise for more
@@ -44,6 +49,7 @@ pub struct SyntheticDataset {
 }
 
 impl SyntheticDataset {
+    /// Build the per-class prototypes for a `num_classes`-way task.
     pub fn new(num_classes: usize, seed: u64) -> Self {
         let base = Rng::new(seed ^ 0xdead_beef_cafe_f00d);
         let mut protos = Vec::with_capacity(num_classes);

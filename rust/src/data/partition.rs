@@ -4,14 +4,20 @@
 use super::{SyntheticDataset, IMG_ELEMS};
 use crate::rng::Rng;
 
+/// How training data distributes across clients.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Partition {
+    /// Uniform label distribution on every client.
     Iid,
     /// Dirichlet(alpha) label-distribution skew per client.
-    Dirichlet { alpha: f64 },
+    Dirichlet {
+        /// Concentration parameter (paper: α = 1).
+        alpha: f64,
+    },
 }
 
 impl Partition {
+    /// Human-readable scheme label (table/CSV column).
     pub fn label(&self) -> String {
         match self {
             Partition::Iid => "IID".into(),
@@ -25,7 +31,9 @@ impl Partition {
 /// cost O(samples) u16 labels, not O(samples × 3072) floats.
 #[derive(Debug, Clone)]
 pub struct ClientShard {
+    /// Owning client's pool index.
     pub client_id: usize,
+    /// Per-sample class labels.
     pub labels: Vec<u16>,
     /// Global sample indices (unique across clients, disjoint from test).
     pub indices: Vec<u64>,
@@ -33,6 +41,7 @@ pub struct ClientShard {
 }
 
 impl ClientShard {
+    /// Number of local samples (the FedAvg merge weight).
     pub fn num_samples(&self) -> usize {
         self.labels.len()
     }

@@ -52,8 +52,11 @@ impl EventKind {
 /// (unique per queue), which doubles as the deterministic tie-breaker.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Event {
+    /// Absolute virtual time the event fires (seconds since run start).
     pub time_s: f64,
+    /// Queue insertion index: unique, and the tie-breaker at equal times.
     pub seq: u64,
+    /// What happened.
     pub kind: EventKind,
 }
 
@@ -81,6 +84,7 @@ pub struct EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue (sequence counter at zero).
     pub fn new() -> Self {
         EventQueue::default()
     }
@@ -97,10 +101,12 @@ impl EventQueue {
         self.heap.pop().map(|Reverse(e)| e)
     }
 
+    /// Number of events still scheduled.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether nothing is scheduled.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -114,14 +120,17 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A clock starting at `start_s` virtual seconds.
     pub fn new(start_s: f64) -> Self {
         VirtualClock { now_s: start_s }
     }
 
+    /// Current virtual time (seconds since run start).
     pub fn now_s(&self) -> f64 {
         self.now_s
     }
 
+    /// Advance to `t` (must not move backwards; asserted in debug).
     pub fn advance_to(&mut self, t: f64) {
         debug_assert!(t >= self.now_s, "clock moved backwards: {} -> {t}", self.now_s);
         self.now_s = self.now_s.max(t);

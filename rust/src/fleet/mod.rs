@@ -78,23 +78,38 @@ pub enum RoundPolicy {
     /// Wait for every dispatched client (classic synchronous FedAvg).
     Sync,
     /// Aggregate at `start + secs`; unfinished clients become stragglers.
-    Deadline { secs: f64 },
+    Deadline {
+        /// Cut-off, virtual seconds after the round opens.
+        secs: f64,
+    },
     /// Sample `extra` clients beyond `per_round`, keep the first
     /// `per_round` finishers, count the rest as stragglers.
-    OverSelect { extra: usize },
+    OverSelect {
+        /// Over-commitment margin beyond `per_round`.
+        extra: usize,
+    },
     /// Semi-synchronous FedBuff-style buffering: close the round at the
     /// `buffer_k`-th arrival; later uploads stay in flight and merge on
     /// arrival unless older than `max_staleness` rounds.
-    Async { buffer_k: usize, max_staleness: usize },
+    Async {
+        /// Arrivals that close a round.
+        buffer_k: usize,
+        /// Staleness cap (rounds) for late merges.
+        max_staleness: usize,
+    },
 }
 
 /// Config-supplied fallbacks for the bare policy spellings
 /// (`deadline`, `over-select`, `async` without a `:K` argument).
 #[derive(Debug, Clone, Copy)]
 pub struct PolicyDefaults {
+    /// Seconds for a bare `deadline`.
     pub deadline_s: f64,
+    /// Extra clients for a bare `over-select`.
     pub over_select_extra: usize,
+    /// Arrivals closing a round for a bare `async`.
     pub buffer_k: usize,
+    /// Staleness cap (rounds) for async late merges.
     pub max_staleness: usize,
 }
 
@@ -168,7 +183,10 @@ pub enum ChurnPolicy {
     /// weight ∝ completed samples); the partial-epoch remainder is
     /// wasted. An interruption before the first epoch boundary loses the
     /// work (abort semantics). Downloads/uploads pause and resume.
-    Checkpoint { epochs: usize },
+    Checkpoint {
+        /// Local epochs per round (checkpoint granularity).
+        epochs: usize,
+    },
 }
 
 impl ChurnPolicy {
@@ -210,6 +228,7 @@ impl ChurnPolicy {
 /// size, and the round artifact's byte/FLOP footprint.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ClientWork {
+    /// Client id (the pool index).
     pub id: usize,
     /// Earliest dispatch time (availability-gated), absolute seconds.
     pub ready_s: f64,
@@ -231,8 +250,11 @@ pub struct ClientWork {
 /// absolute virtual time `arrive_s`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct InFlightUpload {
+    /// Uploading client's id.
     pub client: usize,
+    /// Absolute virtual arrival time at the server.
     pub arrive_s: f64,
+    /// Round the client was dispatched in (staleness = arrival − this).
     pub dispatch_round: usize,
 }
 
@@ -258,6 +280,15 @@ pub struct RoundPlan {
     /// policy, or a `checkpoint` interruption before the first epoch
     /// boundary), in interruption order.
     pub aborted: Vec<usize>,
+    /// Completed download fraction of each churn-aborted client at its
+    /// interruption instant, in interruption order (pairs with
+    /// `aborted`). Below 1.0 only when the `abort` policy cut the client
+    /// *mid-download*; comm accounting then charges
+    /// `fraction × download bytes` instead of the full artifact (an
+    /// aborted download used to be charged in full). Pausable downloads
+    /// (`resume`/`checkpoint`) complete across offline windows and are
+    /// charged exactly once at full size on their ordinary paths.
+    pub download_frac: Vec<(usize, f64)>,
     /// Checkpoint policy: clients that checkpointed a *partial* update
     /// this round, with the completed-work fraction in (0, 1), in
     /// dispatch-processing order. Their upload may still be cut by the
@@ -277,6 +308,7 @@ pub struct RoundPlan {
     /// losses past a deadline cut stay in straggler territory instead of
     /// being double-attributed to churn.
     pub wasted_compute_s: f64,
+    /// Virtual time at which the round opened.
     pub start_s: f64,
     /// Virtual time at which the server aggregates.
     pub end_s: f64,
@@ -286,8 +318,15 @@ pub struct RoundPlan {
 }
 
 impl RoundPlan {
+    /// Virtual seconds this round occupied (aggregation − start).
     pub fn duration_s(&self) -> f64 {
         self.end_s - self.start_s
+    }
+
+    /// Completed download fraction for `client` this round: the recorded
+    /// fraction when churn aborted it mid-download, 1.0 otherwise.
+    pub fn download_fraction(&self, client: usize) -> f64 {
+        self.download_frac.iter().find(|(c, _)| *c == client).map_or(1.0, |&(_, f)| f)
     }
 
     /// The no-op plan: nothing dispatched, clock untouched.
@@ -299,6 +338,7 @@ impl RoundPlan {
             late_arrivals: Vec::new(),
             deferred: Vec::new(),
             aborted: Vec::new(),
+            download_frac: Vec::new(),
             partials: Vec::new(),
             interrupts: 0,
             resumes: 0,
@@ -316,11 +356,13 @@ impl RoundPlan {
 /// fractions, and counters.
 #[derive(Debug, Default)]
 struct ChurnState {
-    /// Client → (interrupt-time bits, wasted compute seconds): the span
-    /// scheduler decided this client's work is lost; applied when the
-    /// Interrupt event with exactly that timestamp pops (earlier
-    /// Interrupts for the same client are pause witnesses).
-    cut: HashMap<usize, (u64, f64)>,
+    /// Client → (interrupt-time bits, wasted compute seconds, completed
+    /// download fraction): the span scheduler decided this client's work
+    /// is lost; applied when the Interrupt event with exactly that
+    /// timestamp pops (earlier Interrupts for the same client are pause
+    /// witnesses). The fraction is below 1.0 only for a cut that landed
+    /// mid-download.
+    cut: HashMap<usize, (u64, f64, f64)>,
     /// Client → (interrupt-time bits, partial-epoch seconds): the
     /// checkpoint remainder past the last epoch boundary, charged when
     /// that Interrupt pops — symmetric with `cut`, so a round that ends
@@ -332,6 +374,9 @@ struct ChurnState {
     /// (client, fraction) in dispatch-processing order (plan output).
     partials: Vec<(usize, f64)>,
     aborted: Vec<usize>,
+    /// (client, completed download fraction) per abort, in interruption
+    /// order (plan output, pairs with `aborted`).
+    down_fracs: Vec<(usize, f64)>,
     wasted_s: f64,
     interrupts: usize,
     resumes: usize,
@@ -343,10 +388,11 @@ impl ChurnState {
     /// client's round work just died.
     fn on_interrupt(&mut self, client: usize, time_s: f64) -> bool {
         self.interrupts += 1;
-        if let Some(&(bits, wasted)) = self.cut.get(&client) {
+        if let Some(&(bits, wasted, down_frac)) = self.cut.get(&client) {
             if bits == time_s.to_bits() {
                 self.cut.remove(&client);
                 self.aborted.push(client);
+                self.down_fracs.push((client, down_frac));
                 self.wasted_s += wasted;
                 return true;
             }
@@ -397,7 +443,11 @@ fn schedule_compute(
             } else {
                 q.push(off, EventKind::Interrupt { client: w.id });
                 let trained = (off - t - w.down_s).clamp(0.0, w.train_s);
-                st.cut.insert(w.id, (off.to_bits(), trained));
+                // A cut inside the download leg fetched only part of the
+                // artifact; comm accounting charges that fraction.
+                let down_frac =
+                    if w.down_s <= 0.0 { 1.0 } else { ((off - t) / w.down_s).clamp(0.0, 1.0) };
+                st.cut.insert(w.id, (off.to_bits(), trained, down_frac));
             }
         }
         ChurnPolicy::Resume => {
@@ -429,7 +479,9 @@ fn schedule_compute(
                 q.push(off, EventKind::Interrupt { client: w.id });
                 if done <= 0.0 {
                     // Not even one epoch checkpointed: the work is lost.
-                    st.cut.insert(w.id, (off.to_bits(), trained));
+                    // The download paused/resumed to completion first, so
+                    // it is charged in full (exactly once).
+                    st.cut.insert(w.id, (off.to_bits(), trained, 1.0));
                 } else {
                     let fraction = done / epochs as f64;
                     st.fractions.insert(w.id, fraction);
@@ -465,9 +517,10 @@ fn schedule_upload(
             if w.up_s <= off - t {
                 q.push(t + w.up_s, EventKind::UploadDone { client: w.id });
             } else {
-                // The finished local pass dies with the upload.
+                // The finished local pass dies with the upload; its
+                // download completed long before, so full charge.
                 q.push(off, EventKind::Interrupt { client: w.id });
-                st.cut.insert(w.id, (off.to_bits(), w.train_s));
+                st.cut.insert(w.id, (off.to_bits(), w.train_s, 1.0));
             }
         }
         ChurnPolicy::Resume | ChurnPolicy::Checkpoint { .. } => {
@@ -496,6 +549,7 @@ pub struct FleetEngine {
 }
 
 impl FleetEngine {
+    /// An engine with an empty in-flight queue.
     pub fn new() -> Self {
         FleetEngine::default()
     }
@@ -670,6 +724,7 @@ impl FleetEngine {
             late_arrivals,
             deferred,
             aborted: st.aborted,
+            download_frac: st.down_fracs,
             partials: st.partials,
             interrupts: st.interrupts,
             resumes: st.resumes,
@@ -795,6 +850,7 @@ pub fn simulate_round(
         late_arrivals: Vec::new(),
         deferred: Vec::new(),
         aborted: st.aborted,
+        download_frac: st.down_fracs,
         partials: st.partials,
         interrupts: st.interrupts,
         resumes: st.resumes,
@@ -1318,6 +1374,10 @@ mod tests {
         assert_eq!(plan.interrupts, 1);
         assert_eq!(plan.resumes, 0);
         assert!((plan.wasted_compute_s - 55.0).abs() < 1e-9);
+        // The cut landed mid-*training*: the download had completed, so
+        // comm accounting still charges it in full.
+        assert_eq!(plan.download_frac, vec![(0, 1.0)]);
+        assert_eq!(plan.download_fraction(0), 1.0);
         assert!((plan.end_s - 12.0).abs() < 1e-9, "round ends at the last upload");
         assert!(plan.events.iter().any(|e| matches!(e.kind, EventKind::Interrupt { client: 0 })));
     }
@@ -1330,6 +1390,33 @@ mod tests {
         let plan = simc(&works, ChurnPolicy::Abort);
         assert_eq!(plan.aborted, vec![0]);
         assert!((plan.wasted_compute_s - 50.0).abs() < 1e-9);
+        assert_eq!(plan.download_frac, vec![(0, 1.0)], "download completed before the cut");
+    }
+
+    #[test]
+    fn abort_mid_download_records_partial_fraction() {
+        // Dispatch at t=55 with 5s of online window left and a 10s
+        // download: the device fetches exactly half the artifact before
+        // the offline flip kills the work. No compute happened (nothing
+        // wasted), but comm accounting now knows only 50% of the payload
+        // moved — an aborted download used to be charged in full.
+        let works = vec![churn_work(0, duty_trace(), 10.0, 20.0, 5.0)];
+        let plan = simulate_round(
+            55.0,
+            &works,
+            RoundPolicy::Sync,
+            usize::MAX,
+            ChurnPolicy::Abort,
+            &mut Rng::new(1),
+        );
+        assert_eq!(plan.aborted, vec![0]);
+        assert_eq!(plan.download_frac.len(), 1);
+        let (c, f) = plan.download_frac[0];
+        assert_eq!(c, 0);
+        assert!((f - 0.5).abs() < 1e-9, "fetched 5 of 10 download seconds: {f}");
+        assert_eq!(plan.wasted_compute_s, 0.0, "no train seconds executed");
+        assert_eq!(plan.download_fraction(0), f);
+        assert_eq!(plan.download_fraction(99), 1.0, "unknown clients default to full");
     }
 
     #[test]

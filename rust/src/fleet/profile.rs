@@ -22,8 +22,11 @@ use anyhow::{bail, Result};
 /// Coarse device class, assigned by weighted draw at sampling time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DeviceTier {
+    /// Slow tail (old phones, slow uplinks).
     Low,
+    /// Mid-range devices.
     Mid,
+    /// Fast, well-connected devices.
     High,
 }
 
@@ -41,9 +44,13 @@ impl DeviceTier {
 /// virtual second; links are in MB/s.
 #[derive(Debug, Clone, Copy)]
 pub struct TierSpec {
+    /// Relative draw weight of this tier in the fleet mix.
     pub weight: f64,
+    /// Compute throughput sampling range (sample·Mparam per second).
     pub throughput: (f64, f64),
+    /// Uplink speed sampling range (MB/s).
     pub uplink_mbs: (f64, f64),
+    /// Downlink speed sampling range (MB/s).
     pub downlink_mbs: (f64, f64),
 }
 
@@ -51,6 +58,7 @@ pub struct TierSpec {
 /// behaviour. Resolved from `RunConfig.fleet.profile`.
 #[derive(Debug, Clone)]
 pub struct FleetProfileConfig {
+    /// Profile name (`uniform` | `mobile` | `datacenter`).
     pub name: String,
     /// Tier specs, index-aligned with [`DeviceTier`].
     pub tiers: Vec<TierSpec>,
@@ -142,14 +150,18 @@ impl FleetProfileConfig {
 /// One device's simulator-facing characteristics (sampled once per run).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceProfile {
+    /// Coarse device class the profile was drawn from.
     pub tier: DeviceTier,
     /// sample·Mparam per virtual second.
     pub throughput: f64,
-    /// Bytes per virtual second.
+    /// Upload speed, bytes per virtual second.
     pub uplink_bps: f64,
+    /// Download speed, bytes per virtual second.
     pub downlink_bps: f64,
     /// Per-round dropout probability once dispatched.
     pub dropout_p: f64,
+    /// Periodic availability trace (gates dispatch; sampled mid-span by
+    /// the churn engine).
     pub trace: AvailabilityTrace,
 }
 
@@ -189,10 +201,13 @@ impl DeviceProfile {
         samples as f64 * mparams / self.throughput.max(1e-9)
     }
 
+    /// Virtual seconds to upload `bytes` at this device's uplink speed.
     pub fn up_time_s(&self, bytes: u64) -> f64 {
         bytes as f64 / self.uplink_bps.max(1.0)
     }
 
+    /// Virtual seconds to download `bytes` at this device's downlink
+    /// speed.
     pub fn down_time_s(&self, bytes: u64) -> f64 {
         bytes as f64 / self.downlink_bps.max(1.0)
     }

@@ -17,10 +17,13 @@ use crate::rng::Rng;
 /// the device went offline at `off_s` and work resumed at `on_s`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OfflineSpan {
+    /// When the device went offline (absolute virtual seconds).
     pub off_s: f64,
+    /// When it came back online and work resumed.
     pub on_s: f64,
 }
 
+/// A device's periodic on/off availability square wave.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AvailabilityTrace {
     /// On/off cycle length (virtual seconds).
@@ -48,6 +51,7 @@ impl AvailabilityTrace {
         (t + self.phase_s).rem_euclid(self.period_s)
     }
 
+    /// Whether the device is reachable at virtual time `t`.
     pub fn is_online(&self, t: f64) -> bool {
         if self.duty >= 1.0 {
             return true;

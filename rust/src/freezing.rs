@@ -16,6 +16,83 @@
 
 use std::collections::VecDeque;
 
+/// One freeze/step transition: the server's frozen-prefix version bumped
+/// to `version` entering round `round`, at virtual fleet time
+/// `sim_time_s`.
+///
+/// Transitions are the moments the trained block-prefix changes under
+/// in-flight work: an async upload dispatched before a transition and
+/// arriving after it was trained against a layout the server no longer
+/// serves. The [`TransitionLog`] makes that staleness-in-transitions
+/// computable (and auditable) after the fact.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transition {
+    /// The new prefix version (strictly increasing across the log).
+    pub version: u64,
+    /// Server round index at the bump (the first round of the new step).
+    pub round: usize,
+    /// Virtual fleet clock at the bump (seconds since run start).
+    pub sim_time_s: f64,
+}
+
+/// Append-only log of freeze/step transitions, kept by the coordinator.
+///
+/// Every `ServerCtx::bump_prefix_version` records an entry, so the full
+/// history of prefix-layout changes — which round, which virtual time —
+/// survives the run and lands in `RunSummary::transitions`. The
+/// projection path uses the version distance ([`Self::crossed_since`])
+/// as its transition-staleness measure.
+#[derive(Debug, Clone, Default)]
+pub struct TransitionLog {
+    entries: Vec<Transition>,
+}
+
+impl TransitionLog {
+    /// An empty log (prefix version 0, nothing frozen yet).
+    pub fn new() -> Self {
+        TransitionLog::default()
+    }
+
+    /// Record a bump to `version` at (`round`, `sim_time_s`). Versions,
+    /// rounds, and times are monotone by construction (the coordinator
+    /// only moves forward); debug builds assert it.
+    pub fn record(&mut self, version: u64, round: usize, sim_time_s: f64) {
+        if let Some(last) = self.entries.last() {
+            debug_assert!(version > last.version, "version went backwards");
+            debug_assert!(round >= last.round, "round went backwards");
+            debug_assert!(sim_time_s >= last.sim_time_s, "clock went backwards");
+        }
+        self.entries.push(Transition { version, round, sim_time_s });
+    }
+
+    /// All recorded transitions, oldest first.
+    pub fn entries(&self) -> &[Transition] {
+        &self.entries
+    }
+
+    /// The latest recorded prefix version (0 before any transition).
+    pub fn current_version(&self) -> u64 {
+        self.entries.last().map_or(0, |t| t.version)
+    }
+
+    /// How many transitions an update dispatched at prefix version
+    /// `dispatched` has crossed by now — the transition-staleness the
+    /// projection decay compounds over.
+    pub fn crossed_since(&self, dispatched: u64) -> u64 {
+        self.current_version().saturating_sub(dispatched)
+    }
+
+    /// Number of transitions recorded so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether no transition has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// Sliding-window effective-movement tracker for one block vector.
 pub struct EffectiveMovement {
     window_h: usize,
@@ -25,6 +102,7 @@ pub struct EffectiveMovement {
 }
 
 impl EffectiveMovement {
+    /// Tracker with an H-delta sliding window.
     pub fn new(window_h: usize) -> Self {
         assert!(window_h >= 1);
         EffectiveMovement { window_h, deltas: VecDeque::new(), prev: None }
@@ -68,6 +146,7 @@ impl EffectiveMovement {
         }
     }
 
+    /// Clear the window (e.g. at a step transition).
     pub fn reset(&mut self) {
         self.deltas.clear();
         self.prev = None;
@@ -92,6 +171,7 @@ pub fn ls_slope(ys: &[f64]) -> f64 {
     sxy / sxx
 }
 
+/// Freeze-decision knobs (paper §3.3).
 #[derive(Debug, Clone, Copy)]
 pub struct FreezeConfig {
     /// Delta window H for effective movement.
@@ -121,6 +201,7 @@ pub struct FreezeDetector {
 }
 
 impl FreezeDetector {
+    /// A fresh detector for one block/step.
     pub fn new(cfg: FreezeConfig) -> Self {
         FreezeDetector { em: EffectiveMovement::new(cfg.window_h), cfg, history: Vec::new(), consecutive: 0 }
     }
@@ -144,6 +225,7 @@ impl FreezeDetector {
         (Some(em), self.consecutive >= self.cfg.patience_w)
     }
 
+    /// The EM series observed so far (one point per filled window).
     pub fn history(&self) -> &[f64] {
         &self.history
     }
@@ -248,6 +330,34 @@ mod tests {
         }
         assert!(rounds_to_freeze >= 3, "froze too fast: {rounds_to_freeze}");
         assert!(rounds_to_freeze > 0, "never froze");
+    }
+
+    #[test]
+    fn transition_log_is_monotone_and_counts_crossings() {
+        let mut log = TransitionLog::new();
+        assert!(log.is_empty());
+        assert_eq!(log.current_version(), 0);
+        assert_eq!(log.crossed_since(0), 0, "nothing crossed before any bump");
+
+        log.record(1, 0, 0.0);
+        log.record(2, 12, 340.5);
+        log.record(3, 12, 340.5); // same round: shrink step + immediate map
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.current_version(), 3);
+        // An update dispatched at version 1 has crossed two transitions.
+        assert_eq!(log.crossed_since(1), 2);
+        assert_eq!(log.crossed_since(3), 0, "current-version updates cross nothing");
+        assert_eq!(log.crossed_since(9), 0, "future versions saturate to zero");
+
+        // Entries are append-only and ordered.
+        let e = log.entries();
+        assert_eq!(e.len(), 3);
+        for pair in e.windows(2) {
+            assert!(pair[0].version < pair[1].version);
+            assert!(pair[0].round <= pair[1].round);
+            assert!(pair[0].sim_time_s <= pair[1].sim_time_s);
+        }
+        assert_eq!(e[1], Transition { version: 2, round: 12, sim_time_s: 340.5 });
     }
 
     #[test]

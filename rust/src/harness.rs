@@ -12,32 +12,56 @@ use anyhow::Result;
 use std::io::Write;
 use std::path::PathBuf;
 
-/// Parse the standard example flags: --profile fast|smoke|paper,
-/// --alpha <f64>, --seed, --models a,b,c (model tags), plus the fleet
-/// flags (--round-policy, --deadline-s, --over-select, --buffer-k,
-/// --staleness-alpha, --max-staleness, --fleet-profile, --dropout,
-/// --churn-policy, --churn-epochs, --trace-period, --trace-duty).
+/// Parse the standard example flags: `--profile fast|smoke|paper`,
+/// `--alpha`, `--seed`, `--models a,b,c` (model tags), plus the fleet
+/// flags (`--round-policy`, `--deadline-s`, `--over-select`,
+/// `--buffer-k`, `--staleness-alpha`, `--max-staleness`,
+/// `--stale-projection`, `--projection-decay`, `--fleet-profile`,
+/// `--dropout`, `--churn-policy`, `--churn-epochs`, `--trace-period`,
+/// `--trace-duty`). See `docs/CLI.md` for the full flag reference.
 pub struct ExpOpts {
+    /// Budget profile: `fast` (default), `smoke`, or `paper`.
     pub profile: String,
+    /// Dirichlet alpha (Non-IID partition); `None` = IID.
     pub alpha: Option<f64>,
+    /// RNG seed override.
     pub seed: Option<u64>,
+    /// Model tags to run (comma-separated on the CLI).
     pub models: Option<Vec<String>>,
+    /// Total-round override.
     pub rounds: Option<usize>,
+    /// Round policy spelling (`sync`/`deadline[:S]`/…).
     pub round_policy: Option<String>,
+    /// Deadline seconds for the `deadline` policy.
     pub deadline_s: Option<f64>,
+    /// Extra clients sampled under `over-select`.
     pub over_select: Option<usize>,
+    /// Arrivals that close an `async` round.
     pub buffer_k: Option<usize>,
+    /// FedBuff staleness-discount exponent.
     pub staleness_alpha: Option<f64>,
+    /// Staleness cap (rounds) for late merges.
     pub max_staleness: Option<usize>,
+    /// Stale-update projection switch (`off`/`on`).
+    pub stale_projection: Option<String>,
+    /// Per-transition decay for projected merges.
+    pub projection_decay: Option<f64>,
+    /// Named fleet profile (`uniform`/`mobile`/`datacenter`).
     pub fleet_profile: Option<String>,
+    /// Per-round dropout probability override.
     pub dropout_p: Option<f64>,
+    /// Mid-round churn policy spelling.
     pub churn_policy: Option<String>,
+    /// Checkpoint epoch granularity.
     pub churn_epochs: Option<usize>,
+    /// Availability-trace period override (seconds).
     pub trace_period_s: Option<f64>,
+    /// Availability-trace duty override (online fraction).
     pub trace_duty: Option<f64>,
 }
 
 impl ExpOpts {
+    /// Parse the process arguments.
     pub fn from_env() -> Result<Self> {
         Self::from_args(&Args::parse(std::env::args().skip(1))?)
     }
@@ -57,6 +81,8 @@ impl ExpOpts {
             buffer_k: args.parse_opt("buffer-k")?,
             staleness_alpha: args.parse_opt("staleness-alpha")?,
             max_staleness: args.parse_opt("max-staleness")?,
+            stale_projection: args.get("stale-projection").map(String::from),
+            projection_decay: args.parse_opt("projection-decay")?,
             fleet_profile: args.get("fleet-profile").map(String::from),
             dropout_p: args.parse_opt("dropout")?,
             churn_policy: args.get("churn-policy").map(String::from),
@@ -66,6 +92,8 @@ impl ExpOpts {
         })
     }
 
+    /// Materialize a [`RunConfig`] for `model`: budget profile first,
+    /// then every provided override on top.
     pub fn cfg(&self, model: &str) -> RunConfig {
         let mut cfg = match self.profile.as_str() {
             "smoke" => RunConfig::smoke(model),
@@ -95,6 +123,12 @@ impl ExpOpts {
         }
         if let Some(m) = self.max_staleness {
             cfg.fleet.max_staleness = m;
+        }
+        if let Some(p) = &self.stale_projection {
+            cfg.fleet.stale_projection = p.clone();
+        }
+        if let Some(d) = self.projection_decay {
+            cfg.fleet.projection_decay = d;
         }
         if let Some(f) = &self.fleet_profile {
             cfg.fleet.profile = f.clone();
@@ -134,7 +168,7 @@ pub fn fmt_row(s: &RunSummary) -> String {
     )
 }
 
-/// Append a block of results to artifacts/results/<name>.txt (and echo).
+/// Append a block of results to `artifacts/results/<name>.txt` (and echo).
 pub fn save_text(name: &str, text: &str) -> Result<()> {
     let path = results_dir().join(format!("{name}.txt"));
     let mut f = std::fs::File::create(&path)?;
@@ -211,6 +245,8 @@ mod tests {
             buffer_k: Some(5),
             staleness_alpha: Some(0.25),
             max_staleness: None,
+            stale_projection: Some("on".into()),
+            projection_decay: Some(0.75),
             fleet_profile: Some("mobile".into()),
             dropout_p: None,
             churn_policy: Some("checkpoint".into()),
@@ -228,6 +264,8 @@ mod tests {
         assert_eq!(c.fleet.buffer_k, Some(5));
         assert_eq!(c.fleet.staleness_alpha, 0.25);
         assert_eq!(c.fleet.max_staleness, 8, "unset knob keeps the default");
+        assert_eq!(c.fleet.stale_projection, "on");
+        assert_eq!(c.fleet.projection_decay, 0.75);
         assert_eq!(c.fleet.churn_policy, "checkpoint");
         assert_eq!(c.fleet.churn_epochs, 3);
         assert_eq!(c.fleet.trace_period_s, Some(240.0));

@@ -10,17 +10,25 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (sorted keys for deterministic emission).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Parse a complete JSON document (rejects trailing garbage).
     pub fn parse(text: &str) -> Result<Value> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -34,6 +42,7 @@ impl Value {
 
     // ---- typed accessors --------------------------------------------------
 
+    /// Required object key lookup.
     pub fn get(&self, key: &str) -> Result<&Value> {
         match self {
             Value::Obj(m) => m.get(key).with_context(|| format!("missing key `{key}`")),
@@ -41,6 +50,7 @@ impl Value {
         }
     }
 
+    /// Optional object key lookup (None on missing key or non-object).
     pub fn opt(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -48,6 +58,7 @@ impl Value {
         }
     }
 
+    /// The value as an object, or an error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Ok(m),
@@ -55,6 +66,7 @@ impl Value {
         }
     }
 
+    /// The value as an array, or an error.
     pub fn as_arr(&self) -> Result<&Vec<Value>> {
         match self {
             Value::Arr(a) => Ok(a),
@@ -62,6 +74,7 @@ impl Value {
         }
     }
 
+    /// The value as a string slice, or an error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -69,6 +82,7 @@ impl Value {
         }
     }
 
+    /// The value as a number, or an error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -76,14 +90,17 @@ impl Value {
         }
     }
 
+    /// The value as an unsigned integer (truncating), or an error.
     pub fn as_u64(&self) -> Result<u64> {
         Ok(self.as_f64()? as u64)
     }
 
+    /// The value as a usize (truncating), or an error.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The value as a bool, or an error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -91,13 +108,14 @@ impl Value {
         }
     }
 
-    /// Shape-style array: [4, 32, 32, 3] -> Vec<usize>.
+    /// Shape-style array: `[4, 32, 32, 3]` -> `Vec<usize>`.
     pub fn as_shape(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
     // ---- writer ------------------------------------------------------------
 
+    /// Emit compact JSON.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

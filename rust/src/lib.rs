@@ -9,57 +9,62 @@
 //!   determination (effective movement), FedAvg aggregation, all
 //!   baselines, metrics. Python never runs on the round path.
 //! * **L3 fleet simulator (`fleet`)** — a deterministic discrete-event
-//!   engine (virtual clock + binary-heap event queue) behind every train
-//!   round: each client carries a [`fleet::DeviceProfile`] (compute
-//!   throughput, link speeds, availability trace, dropout), rounds
-//!   dispatch their cohort as events, and a [`fleet::RoundPolicy`]
-//!   (`sync` wait-for-all / `deadline{secs}` cut stragglers /
-//!   `over-select{k}` keep first finishers / `async{buffer_k,
-//!   max_staleness}` FedBuff-style buffering) decides who aggregates.
-//!   Summaries report simulated time-to-accuracy (`sim_time_s`,
-//!   stragglers, dropouts, late merges) alongside accuracy/memory/comm.
-//!   CLI: `--round-policy`, `--deadline-s`, `--buffer-k`,
-//!   `--staleness-alpha`, `--fleet-profile`.
-//!
-//!   **Mid-round churn** ([`fleet::ChurnPolicy`]): availability traces
-//!   are sampled *inside* every compute/upload span, not just at
-//!   dispatch. A device flipping offline mid-span emits an `Interrupt`
-//!   event and the configured policy decides the outcome — `abort`
-//!   (work lost; `wasted_compute_s` accounted), `resume` (work pauses
-//!   and continues at the next online window, stretching finishes
-//!   across round deadlines and the async in-flight queue), or
-//!   `checkpoint` (a partial update at epoch granularity merges with
-//!   weight ∝ completed samples through the aggregators — including
-//!   HeteroFL/DepthFL's sliced merges). Round records carry
-//!   `interrupted/resumed/partial_merged/wasted_compute_s`. Always-on
-//!   traces take the pre-churn fast path, so every churn policy
-//!   degenerates to `none` bit-for-bit (golden-trace- and
-//!   integration-tested; `rust/tests/golden/` pins the full event
-//!   trace of every round-policy × churn-policy combination). CLI:
-//!   `--churn-policy`, `--churn-epochs`, `--trace-period`,
-//!   `--trace-duty`.
-//!
-//!   Under `async`, rounds are semi-synchronous and round-spanning: the
-//!   round closes at the `buffer_k`-th upload arrival, and stragglers'
-//!   uploads are *not* discarded — they persist in the
-//!   [`fleet::FleetEngine`]'s cross-round in-flight queue (timing) and
-//!   the coordinator's version-stamped pending buffer (tensors), then
-//!   merge on arrival with FedBuff weights `w / (1 + staleness)^alpha`
-//!   via [`aggregate::BufferedAggregator`]. Updates older than
-//!   `max_staleness` rounds, or trained against a since-frozen block
-//!   (artifact/prefix-version mismatch — cheap to detect thanks to
-//!   ProFL's frozen-prefix training), are dropped.
-//!
-//!   **Sync-degeneracy guarantee:** `--round-policy async` with
-//!   `buffer_k = per_round` and `staleness_alpha = 0` closes every round
-//!   at its last upload and discounts nothing, reproducing the `sync`
-//!   policy's round records **bit for bit** (same event order, same rng
-//!   stream, same FedAvg accumulation order). Integration tests pin this
-//!   down; it also means the async machinery costs nothing when unused.
+//!   engine behind every train round: per-client [`fleet::DeviceProfile`]s
+//!   (compute, links, availability, dropout), a virtual clock, and a
+//!   [`fleet::RoundPolicy`] (`sync` / `deadline` / `over-select` /
+//!   FedBuff-style `async`) deciding who aggregates, with mid-round
+//!   churn ([`fleet::ChurnPolicy`]: `abort`/`resume`/`checkpoint`)
+//!   sampled inside every compute/upload span.
 //! * **L2/L1 (`python/compile`)** — JAX block models + Pallas kernels,
 //!   AOT-lowered once to HLO-text artifacts (`make artifacts`).
 //! * **Runtime bridge** — [`runtime::Runtime`] loads the artifacts through
 //!   the PJRT C API (`xla` crate) and executes them from the round loop.
+//!
+//! ## Documentation map
+//!
+//! The deep documentation lives under `docs/` at the repo root:
+//!
+//! * **`docs/ARCHITECTURE.md`** — the round-lifecycle dataflow (event
+//!   engine → round policies → churn → stale-update projection), with
+//!   the module map and an ASCII diagram of one virtualized round.
+//! * **`docs/CLI.md`** — every `--flag` with its default, validation
+//!   range, and which round/churn policies it composes with.
+//! * **`docs/SIMULATION.md`** — the determinism contract: virtual
+//!   clock, rng stream discipline, aggregation order, the degeneracy
+//!   ladder, and the golden-trace workflow (`UPDATE_GOLDEN=1`).
+//!
+//! `DESIGN.md` holds the full system inventory and experiment index;
+//! `ROADMAP.md` the north-star and open items.
+//!
+//! ## Async rounds, staleness, and projection
+//!
+//! Under `--round-policy async` rounds are semi-synchronous and
+//! round-spanning: a round closes at the `buffer_k`-th upload arrival,
+//! and stragglers' uploads persist in the [`fleet::FleetEngine`]'s
+//! cross-round in-flight queue (timing) plus the coordinator's
+//! version-stamped pending buffer (tensors), then merge on arrival with
+//! FedBuff weights `w / (1 + staleness)^alpha` via
+//! [`aggregate::BufferedAggregator`].
+//!
+//! ProFL's progressive schedule means the trained block-prefix changes
+//! *while uploads are in flight*. An update trained against a
+//! since-frozen layout is dropped by default (`--stale-projection off`)
+//! — or, with `--stale-projection on`, **projected onto the
+//! still-trained suffix** ([`coordinator::projection`]): frozen-block
+//! deltas are discarded and counted (`projected_dropped_params`), the
+//! surviving tensors remap to the current layout and merge through the
+//! masked aggregator path with an extra
+//! `projection_decay^transitions_crossed` weight factor. Every
+//! freeze/step transition is recorded in a [`freezing::TransitionLog`]
+//! so transition-staleness stays auditable per run.
+//!
+//! ## Degeneracy ladder
+//!
+//! Each simulator axis costs nothing when unused, **bit for bit**
+//! (integration- and golden-trace-tested; see `docs/SIMULATION.md`):
+//! `async` with `buffer_k = per_round` + `alpha = 0` reproduces `sync`;
+//! any churn policy on always-on traces reproduces `none`; projection
+//! with no transition crossed reproduces the drop behaviour.
 //!
 //! ## Quick start
 //!
@@ -67,9 +72,10 @@
 //! make artifacts                      # python AOT (once)
 //! cargo run --release --example quickstart
 //! cargo run --release -- run --method profl --model resnet18_w8_c10
+//! make check                          # fmt + clippy + tests + docs gate
 //! ```
-//!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+
+#![warn(missing_docs)]
 
 pub mod aggregate;
 pub mod bench_util;

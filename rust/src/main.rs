@@ -44,6 +44,11 @@ FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
   --buffer-k <k>      async: arrivals that close a round [default: per_round]
   --staleness-alpha <f64>  async: late-merge discount w/(1+s)^alpha [default: 0.5]
   --max-staleness <r> async: drop updates older than r rounds [default: 8]
+  --stale-projection <m>  async: off | on — project late updates that crossed
+                      a freeze transition onto the still-trained suffix
+                      instead of dropping them [default: off]
+  --projection-decay <f64>  Extra weight decay per crossed transition for
+                      projected merges, in [0,1] [default: 0.5]
   --fleet-profile <p> uniform | mobile | datacenter  [default: uniform]
   --dropout <f64>     Per-round dropout probability override
   --churn-policy <p>  Mid-round churn: none | abort | resume | checkpoint[:E]
@@ -85,6 +90,12 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     if let Some(m) = args.parse_opt("max-staleness")? {
         cfg.fleet.max_staleness = m;
     }
+    if let Some(p) = args.get("stale-projection") {
+        cfg.fleet.stale_projection = p.into();
+    }
+    if let Some(d) = args.parse_opt("projection-decay")? {
+        cfg.fleet.projection_decay = d;
+    }
     if let Some(f) = args.get("fleet-profile") {
         cfg.fleet.profile = f.into();
     }
@@ -100,6 +111,7 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     // Fail fast on bad fleet spellings (before artifacts load).
     cfg.round_policy()?;
     cfg.churn_policy()?;
+    cfg.stale_projection()?;
     cfg.fleet_profile()?;
     Ok(cfg)
 }

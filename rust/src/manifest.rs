@@ -14,44 +14,64 @@ use std::path::{Path, PathBuf};
 /// bytes = fixed_bytes + per_sample_bytes * batch (see python/compile/memory.py).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MemCoeffs {
+    /// Batch-independent footprint (parameters, optimizer state), bytes.
     pub fixed_bytes: u64,
+    /// Activation footprint per sample, bytes.
     pub per_sample_bytes: u64,
+    /// Total parameter count of the artifact's model.
     pub params_total: u64,
+    /// Trainable parameter count.
     pub params_trainable: u64,
 }
 
 impl MemCoeffs {
+    /// Analytical training footprint at a given batch size.
     pub fn bytes_at(&self, batch: u64) -> u64 {
         self.fixed_bytes + self.per_sample_bytes * batch
     }
 }
 
+/// One positional input of an artifact.
 #[derive(Debug, Clone)]
 pub struct InputEntry {
+    /// Parameter (or data) name.
     pub name: String,
-    pub role: String, // trainable | frozen | param | data_x | data_y | lr
+    /// Role: trainable | frozen | param | data_x | data_y | lr.
+    pub role: String,
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
 }
 
+/// One lowered HLO artifact: what the runtime loads and executes.
 #[derive(Debug, Clone)]
 pub struct Artifact {
+    /// HLO text path relative to the artifacts root.
     pub path: String,
-    pub kind: String, // train | distill | eval
+    /// Artifact kind: train | distill | eval.
+    pub kind: String,
+    /// Ordered positional inputs (parameters first, then data).
     pub inputs: Vec<InputEntry>,
+    /// Ordered output names.
     pub outputs: Vec<String>,
+    /// Progressive step index, when the artifact belongs to one.
     pub step: Option<usize>,
+    /// DepthFL depth index, when applicable.
     pub depth: Option<usize>,
+    /// Memory coefficients of the executed mini model.
     pub mem: Option<MemCoeffs>,
     /// Paper-width-twin coefficients: what the memory substrate uses for
     /// participation decisions (DESIGN.md §Substitutions).
     pub mem_paper: Option<MemCoeffs>,
+    /// Content hash of the HLO text (integrity check).
     pub sha256: String,
 }
 
 impl Artifact {
+    /// Names of the trainable inputs, in positional order.
     pub fn trainable_names(&self) -> Vec<&str> {
         self.inputs.iter().filter(|i| i.role == "trainable").map(|i| i.name.as_str()).collect()
     }
+    /// Names of the frozen/constant parameter inputs, in positional order.
     pub fn frozen_names(&self) -> Vec<&str> {
         self.inputs
             .iter()
@@ -68,6 +88,7 @@ impl Artifact {
             .map(|i| 4 * i.shape.iter().product::<usize>() as u64)
             .sum()
     }
+    /// Bytes of the frozen-prefix payload (shipped only on cache misses).
     pub fn frozen_bytes(&self) -> u64 {
         self.inputs
             .iter()
@@ -81,25 +102,37 @@ impl Artifact {
     }
 }
 
+/// One model tag's inventory: blocks, parameters, artifacts.
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Architecture family (resnet18, vgg11, …).
     pub family: String,
+    /// Base channel width of the executed mini model.
     pub width: usize,
+    /// Classification classes.
     pub num_classes: usize,
+    /// Channel-scaling ratio relative to the base tag (1.0 = base).
     pub width_ratio: f64,
+    /// Input image side length.
     pub image_size: usize,
+    /// Progressive block count T.
     pub num_blocks: usize,
+    /// Parameter counts per block (Table 5).
     pub block_param_counts: Vec<u64>,
     /// Parameter names belonging to each block (index 0 = block 1).
     pub block_params: Vec<Vec<String>>,
+    /// Every lowered artifact by name.
     pub artifacts: BTreeMap<String, Artifact>,
     /// Union of every parameter name -> shape the store must hold.
     pub params: BTreeMap<String, Vec<usize>>,
+    /// Mini-model memory coefficients by artifact name.
     pub mem: BTreeMap<String, MemCoeffs>,
+    /// Paper-width-twin memory coefficients by artifact name.
     pub mem_paper: BTreeMap<String, MemCoeffs>,
 }
 
 impl ModelEntry {
+    /// Look up an artifact by name.
     pub fn artifact(&self, name: &str) -> Result<&Artifact> {
         self.artifacts.get(name).with_context(|| format!("artifact `{name}` not in manifest"))
     }
@@ -114,13 +147,20 @@ impl ModelEntry {
     }
 }
 
+/// The parsed `artifacts/manifest.json`: the AOT pipeline's contract.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version (currently 1).
     pub version: u32,
+    /// Kernel backend the artifacts were lowered with (pallas | native).
     pub kernel_backend: String,
+    /// Per-step training batch size of the lowered graphs.
     pub train_batch: usize,
+    /// SGD steps fused into one executable call (lax.scan length).
     pub scan_steps: usize,
+    /// Evaluation batch size of the eval graphs.
     pub eval_batch: usize,
+    /// Every model tag's inventory.
     pub models: BTreeMap<String, ModelEntry>,
 }
 
@@ -225,6 +265,7 @@ impl ModelEntry {
 }
 
 impl Manifest {
+    /// Parse a manifest document (schema version 1).
     pub fn from_json(text: &str) -> Result<Self> {
         let v = Value::parse(text).context("parsing manifest.json")?;
         let version = v.get("version")?.as_u64()? as u32;
@@ -245,6 +286,7 @@ impl Manifest {
         })
     }
 
+    /// Read and parse `<artifacts_dir>/manifest.json`.
     pub fn load(artifacts_dir: &Path) -> Result<(Self, PathBuf)> {
         let path = artifacts_dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -252,6 +294,7 @@ impl Manifest {
         Ok((Manifest::from_json(&text)?, artifacts_dir.to_path_buf()))
     }
 
+    /// Look up a model tag.
     pub fn model(&self, tag: &str) -> Result<&ModelEntry> {
         self.models.get(tag).with_context(|| {
             format!(

@@ -12,12 +12,15 @@
 use crate::manifest::MemCoeffs;
 use crate::rng::Rng;
 
+/// One (decimal) megabyte, the paper's memory unit.
 pub const MB: u64 = 1_000_000;
 
+/// Memory-substrate knobs: budget range, contention, accounting batch.
 #[derive(Debug, Clone, Copy)]
 pub struct MemoryConfig {
-    /// Static budget range (paper: 100–900 MB).
+    /// Static budget range lower bound, MB (paper: 100).
     pub budget_min_mb: u64,
+    /// Static budget range upper bound, MB (paper: 900).
     pub budget_max_mb: u64,
     /// Per-round contention factor lower bound (available = budget × U[lo, 1]).
     pub contention_lo: f64,
@@ -41,6 +44,8 @@ pub struct DeviceMemory {
 }
 
 impl DeviceMemory {
+    /// Sample one device's static budget (uniform in the config range)
+    /// and fork its per-round contention stream.
     pub fn sample(cfg: &MemoryConfig, rng: &mut Rng, client_id: usize) -> Self {
         let budget = (rng.uniform(cfg.budget_min_mb as f64, cfg.budget_max_mb as f64) * MB as f64) as u64;
         DeviceMemory { budget, rng: rng.fork(0xc0ffee ^ client_id as u64) }

@@ -10,6 +10,7 @@ use crate::metrics::RunSummary;
 use crate::runtime::Runtime;
 use anyhow::{Context, Result};
 
+/// The AllSmall baseline (see module docs).
 pub struct AllSmall {
     /// Width ratios to consider, descending (the first that fits ~everyone
     /// wins; the paper sizes by the minimum client memory).
@@ -88,6 +89,7 @@ impl Method for AllSmall {
             total_bytes_down: down,
             rounds: ctx.round,
             sim_time_s: ctx.sim_time_s,
+            transitions: ctx.transition_log().entries().to_vec(),
             history: ctx.metrics.records.clone(),
         })
     }

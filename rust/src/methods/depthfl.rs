@@ -11,7 +11,7 @@
 //! accumulator with a staleness-discounted weight.
 
 use super::Method;
-use crate::aggregate::staleness_discount;
+use crate::aggregate::{staleness_discount, transition_decay};
 use crate::config::RunConfig;
 use crate::coordinator::round::partial_scaled;
 use crate::coordinator::ServerCtx;
@@ -22,6 +22,7 @@ use crate::runtime::{literal_f32, literal_i32, Runtime};
 use anyhow::Result;
 use std::collections::HashMap;
 
+/// The DepthFL baseline (see module docs).
 pub struct DepthFL;
 
 /// One client's executed depth-prefix update (named tensors, since each
@@ -126,14 +127,15 @@ impl Method for DepthFL {
                 total_bytes_down: 0,
                 rounds: 0,
                 sim_time_s: 0.0,
+                transitions: Vec::new(),
                 history: Vec::new(),
             });
         }
 
         // Async policy: trained-but-not-arrived updates, keyed by client,
-        // stamped with their dispatch round and whether they are
-        // churn-checkpointed partials.
-        let mut pending: HashMap<usize, (DepthUpdate, usize, bool)> = HashMap::new();
+        // stamped with their dispatch round, the prefix version at
+        // dispatch, and whether they are churn-checkpointed partials.
+        let mut pending: HashMap<usize, (DepthUpdate, usize, u64, bool)> = HashMap::new();
 
         let zero = MemCoeffs::default();
         ctx.bump_prefix_version();
@@ -209,13 +211,23 @@ impl Method for DepthFL {
                         }
                         None => false,
                     };
-                    pending.insert(cid, (u, ctx.round, partial));
+                    pending.insert(cid, (u, ctx.round, ctx.prefix_version, partial));
                 }
                 for la in &plan.late_arrivals {
-                    if let Some((u, dispatched, partial)) = pending.remove(&la.client) {
+                    if let Some((u, dispatched, dispatch_pv, partial)) = pending.remove(&la.client)
+                    {
                         let staleness = ctx.round.saturating_sub(dispatched);
                         if staleness <= max_staleness {
-                            let w = u.weight * staleness_discount(staleness, alpha);
+                            // Depth prefixes never freeze mid-run, so the
+                            // transition decay (projection semantics,
+                            // shared with the coordinator) stays exactly
+                            // 1.0 — the prefix version never bumps after
+                            // dispatch for this method.
+                            let crossed = ctx.prefix_version.saturating_sub(dispatch_pv);
+                            let decay = ctx.projection.unwrap_or(1.0);
+                            let w = u.weight
+                                * staleness_discount(staleness, alpha)
+                                * transition_decay(decay, crossed);
                             accumulate(&mut acc, &u.updated, w);
                             bytes_up += u.bytes;
                             late_merged += 1;
@@ -257,7 +269,10 @@ impl Method for DepthFL {
             }
             for client in lost {
                 if let Some(di) = assignment[client] {
-                    bytes_down += depth_bytes[di];
+                    // Mid-download aborts charge only the fetched fraction.
+                    let full = depth_bytes[di];
+                    let frac = plan.download_fraction(client);
+                    bytes_down += if frac >= 1.0 { full } else { (frac * full as f64) as u64 };
                 }
             }
 
@@ -315,6 +330,7 @@ impl Method for DepthFL {
             total_bytes_down: down,
             rounds: ctx.round,
             sim_time_s: ctx.sim_time_s,
+            transitions: ctx.transition_log().entries().to_vec(),
             history: ctx.metrics.records.clone(),
         })
     }

@@ -10,6 +10,7 @@ use crate::metrics::RunSummary;
 use crate::runtime::Runtime;
 use anyhow::Result;
 
+/// The ExclusiveFL baseline (see module docs).
 pub struct ExclusiveFL;
 
 impl Method for ExclusiveFL {
@@ -41,6 +42,7 @@ impl Method for ExclusiveFL {
                 total_bytes_down: 0,
                 rounds: 0,
                 sim_time_s: 0.0,
+                transitions: ctx.transition_log().entries().to_vec(),
                 history: Vec::new(),
             });
         }
@@ -70,6 +72,7 @@ impl Method for ExclusiveFL {
             total_bytes_down: down,
             rounds: ctx.round,
             sim_time_s: ctx.sim_time_s,
+            transitions: ctx.transition_log().entries().to_vec(),
             history: ctx.metrics.records.clone(),
         })
     }

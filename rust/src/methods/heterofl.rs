@@ -12,7 +12,7 @@
 //! sliced accumulator with a staleness-discounted weight.
 
 use super::Method;
-use crate::aggregate::{staleness_discount, SlicedAggregator};
+use crate::aggregate::{staleness_discount, transition_decay, SlicedAggregator};
 use crate::config::RunConfig;
 use crate::coordinator::round::partial_scaled;
 use crate::coordinator::ServerCtx;
@@ -23,6 +23,7 @@ use crate::runtime::{literal_f32, literal_i32, Runtime};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 
+/// The HeteroFL baseline (see module docs).
 pub struct HeteroFL {
     /// Complexity levels, ascending by cost (the paper's 4 levels).
     pub ratios: Vec<f64>,
@@ -132,9 +133,9 @@ impl Method for HeteroFL {
         let zero = MemCoeffs::default();
 
         // Async policy: trained-but-not-arrived sliced updates, keyed by
-        // client, stamped with their dispatch round and whether they are
-        // churn-checkpointed partials.
-        let mut pending: HashMap<usize, (SlicedUpdate, usize, bool)> = HashMap::new();
+        // client, stamped with their dispatch round, the prefix version
+        // at dispatch, and whether they are churn-checkpointed partials.
+        let mut pending: HashMap<usize, (SlicedUpdate, usize, u64, bool)> = HashMap::new();
 
         ctx.bump_prefix_version();
         for round in 0..ctx.cfg.max_rounds_total {
@@ -207,13 +208,24 @@ impl Method for HeteroFL {
                         }
                         None => false,
                     };
-                    pending.insert(cid, (u, ctx.round, partial));
+                    pending.insert(cid, (u, ctx.round, ctx.prefix_version, partial));
                 }
                 for la in &plan.late_arrivals {
-                    if let Some((u, dispatched, partial)) = pending.remove(&la.client) {
+                    if let Some((u, dispatched, dispatch_pv, partial)) = pending.remove(&la.client)
+                    {
                         let staleness = ctx.round.saturating_sub(dispatched);
                         if staleness <= max_staleness {
-                            let w = u.weight * staleness_discount(staleness, alpha);
+                            // HeteroFL's width slices never freeze, so a
+                            // late merge crosses no layout change; the
+                            // transition decay (projection semantics,
+                            // shared with the coordinator) is exactly 1.0
+                            // while the prefix version holds — which it
+                            // does for this method's whole run.
+                            let crossed = ctx.prefix_version.saturating_sub(dispatch_pv);
+                            let decay = ctx.projection.unwrap_or(1.0);
+                            let w = u.weight
+                                * staleness_discount(staleness, alpha)
+                                * transition_decay(decay, crossed);
                             agg.add(&u.sub_shapes, &u.tensors, w);
                             bytes_up += u.bytes;
                             late_merged += 1;
@@ -235,7 +247,8 @@ impl Method for HeteroFL {
             // casualties cost bandwidth even though their updates never
             // aggregate (dropouts vanish at dispatch, before the
             // download). Async plans truncate events at the close, so
-            // post-close aborts are charged off the aborted list.
+            // post-close aborts are charged off the aborted list. A
+            // mid-download abort is charged only its fetched fraction.
             let mut lost: Vec<usize> = Vec::new();
             for ev in &plan.events {
                 if let EventKind::Dispatch { client } = ev.kind {
@@ -255,7 +268,9 @@ impl Method for HeteroFL {
             }
             for client in lost {
                 if let Some(opt_i) = assignment[client] {
-                    bytes_down += options[opt_i].2;
+                    let full = options[opt_i].2;
+                    let frac = plan.download_fraction(client);
+                    bytes_down += if frac >= 1.0 { full } else { (frac * full as f64) as u64 };
                 }
             }
 
@@ -307,6 +322,7 @@ impl Method for HeteroFL {
             total_bytes_down: down,
             rounds: ctx.round,
             sim_time_s: ctx.sim_time_s,
+            transitions: ctx.transition_log().entries().to_vec(),
             history: ctx.metrics.records.clone(),
         })
     }

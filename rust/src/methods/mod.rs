@@ -22,10 +22,13 @@ pub use exclusive::ExclusiveFL;
 pub use heterofl::HeteroFL;
 pub use profl::{FreezePolicy, ProFL};
 
+/// One FL method (ProFL or a baseline), runnable end to end.
 pub trait Method {
+    /// Display name (tables, CLI).
     fn name(&self) -> &'static str;
     /// Whether the method can use every client (the paper's "Inclusive?").
     fn inclusive(&self) -> bool;
+    /// Execute a full run and produce its summary.
     fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary>;
 }
 

@@ -23,6 +23,7 @@ use crate::metrics::RunSummary;
 use crate::runtime::Runtime;
 use anyhow::Result;
 
+/// How a progressive step decides it is done.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum FreezePolicy {
     /// Effective movement + least-squares slope (the paper's §3.3).
@@ -32,8 +33,10 @@ pub enum FreezePolicy {
     ParamAware,
 }
 
+/// The paper's method: progressive shrink → grow with block freezing.
 #[derive(Default)]
 pub struct ProFL {
+    /// Freeze-decision policy for each progressive step.
     pub policy: FreezePolicy,
     /// Override cfg.shrinking (used by the `profl-noshrink` ablation).
     pub shrinking_override: Option<bool>,
@@ -176,6 +179,7 @@ impl Method for ProFL {
             total_bytes_down: down,
             rounds: ctx.round,
             sim_time_s: ctx.sim_time_s,
+            transitions: ctx.transition_log().entries().to_vec(),
             history: ctx.metrics.records.clone(),
         })
     }

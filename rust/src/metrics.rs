@@ -1,26 +1,33 @@
 //! Metrics: per-round records, run summaries, CSV emission, comm accounting.
 
+use crate::freezing::Transition;
 use std::io::Write;
 use std::path::Path;
 
 /// One FL round's observables (a row of the Fig 4/5 CSVs).
 #[derive(Debug, Clone)]
 pub struct RoundRecord {
+    /// Server round index (post-increment: the first round records 1).
     pub round: usize,
     /// Stage: "shrink", "grow", or the method name for baselines.
     pub stage: String,
     /// Step/block index (1-based) for progressive methods, 0 otherwise.
     pub step: usize,
+    /// Cohort-weighted mean training loss (NaN when nothing trained).
     pub train_loss: f32,
+    /// Cohort-weighted mean training accuracy (NaN when unavailable).
     pub train_acc: f32,
     /// Test accuracy (only on eval rounds; NaN otherwise).
     pub test_acc: f32,
     /// Effective movement (NaN before the window fills / for baselines).
     pub effective_movement: f64,
+    /// Clients whose updates aggregated this round.
     pub participants: usize,
+    /// Clients trained on the output-layer fallback artifact.
     pub fallback_participants: usize,
-    /// Bytes moved this round.
+    /// Bytes uploaded this round.
     pub bytes_up: u64,
+    /// Bytes downloaded this round.
     pub bytes_down: u64,
     /// Analytical peak client memory for this round's artifact (bytes).
     pub client_mem_bytes: u64,
@@ -35,10 +42,22 @@ pub struct RoundRecord {
     /// round policy; always 0 under sync/deadline/over-select).
     pub late_merged: usize,
     /// Late updates that arrived but were discarded (too stale, or
-    /// trained against a since-frozen block) — async's true losses.
+    /// trained against a since-frozen block with projection off or
+    /// nothing surviving the intersection) — async's true losses.
     pub late_dropped: usize,
     /// Mean staleness (rounds) of the late-merged updates (0 when none).
     pub mean_staleness: f64,
+    /// Stale projection (`--stale-projection on`): late updates that
+    /// crossed a freeze/step transition and merged their still-trainable
+    /// suffix instead of being dropped.
+    pub projected_merged: usize,
+    /// Stale projection: scalars discarded with the since-frozen tensors
+    /// of this round's projected merges (the part of the device work a
+    /// transition really did waste).
+    pub projected_dropped_params: u64,
+    /// Mean freeze/step transitions crossed by this round's projected
+    /// merges (0 when none) — transition-staleness.
+    pub transition_staleness: f64,
     /// Mid-round churn: devices that flipped offline inside a
     /// compute/upload span this round (Interrupt events).
     pub interrupted: usize,
@@ -55,8 +74,11 @@ pub struct RoundRecord {
 /// Whole-run result: what the table benches consume.
 #[derive(Debug, Clone)]
 pub struct RunSummary {
+    /// Method name (ProFL, HeteroFL, …).
     pub method: String,
+    /// Manifest model tag the run trained.
     pub model_tag: String,
+    /// Partition label (IID / Non-IID(α)).
     pub partition: String,
     /// Final test accuracy (mean of last `tail` evals, paper-style).
     pub final_acc: f64,
@@ -64,15 +86,23 @@ pub struct RunSummary {
     pub participation_rate: f64,
     /// Peak per-client training memory across the run (bytes).
     pub peak_client_mem: u64,
+    /// Total bytes uploaded across the run.
     pub total_bytes_up: u64,
+    /// Total bytes downloaded across the run.
     pub total_bytes_down: u64,
+    /// Total FL rounds executed.
     pub rounds: usize,
     /// Total virtual fleet time consumed by the run (seconds).
     pub sim_time_s: f64,
+    /// Freeze/step transition history (every prefix-version bump, with
+    /// its round and virtual time) — see `freezing::TransitionLog`.
+    pub transitions: Vec<Transition>,
+    /// Every round's record, in execution order.
     pub history: Vec<RoundRecord>,
 }
 
 impl RunSummary {
+    /// Total bytes moved (up + down) across the run.
     pub fn comm_total(&self) -> u64 {
         self.total_bytes_up + self.total_bytes_down
     }
@@ -103,6 +133,33 @@ impl RunSummary {
         self.history.iter().map(|r| r.late_dropped).sum()
     }
 
+    /// Total stale updates merged via suffix projection across the run
+    /// (`--stale-projection on`).
+    pub fn projected_merges(&self) -> usize {
+        self.history.iter().map(|r| r.projected_merged).sum()
+    }
+
+    /// Total scalars discarded by projection (the since-frozen tensors of
+    /// every projected merge).
+    pub fn projected_dropped_params(&self) -> u64 {
+        self.history.iter().map(|r| r.projected_dropped_params).sum()
+    }
+
+    /// Mean transitions crossed per projected merge across the run
+    /// (0 when nothing was projected).
+    pub fn mean_transition_staleness(&self) -> f64 {
+        let n: usize = self.history.iter().map(|r| r.projected_merged).sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let weighted: f64 = self
+            .history
+            .iter()
+            .map(|r| r.transition_staleness * r.projected_merged as f64)
+            .sum();
+        weighted / n as f64
+    }
+
     /// Total mid-round churn events across the run: (interrupts, resumes).
     pub fn churn_events(&self) -> (usize, usize) {
         let i = self.history.iter().map(|r| r.interrupted).sum();
@@ -125,6 +182,7 @@ impl RunSummary {
 /// Collects rounds, computes the paper's "average accuracy of the last 10
 /// evals" summary statistic.
 pub struct MetricsSink {
+    /// Every recorded round, in execution order.
     pub records: Vec<RoundRecord>,
     eval_accs: Vec<f64>,
 }
@@ -136,10 +194,12 @@ impl Default for MetricsSink {
 }
 
 impl MetricsSink {
+    /// An empty sink.
     pub fn new() -> Self {
         MetricsSink { records: Vec::new(), eval_accs: Vec::new() }
     }
 
+    /// Record one round (eval rounds also feed the final-acc statistic).
     pub fn push(&mut self, rec: RoundRecord) {
         if !rec.test_acc.is_nan() {
             self.eval_accs.push(rec.test_acc as f64);
@@ -156,16 +216,19 @@ impl MetricsSink {
         self.eval_accs[self.eval_accs.len() - k..].iter().sum::<f64>() / k as f64
     }
 
+    /// Best test accuracy seen so far.
     pub fn best_acc(&self) -> f64 {
         self.eval_accs.iter().cloned().fold(0.0, f64::max)
     }
 
+    /// Total (bytes_up, bytes_down) across every recorded round.
     pub fn total_bytes(&self) -> (u64, u64) {
         let up = self.records.iter().map(|r| r.bytes_up).sum();
         let down = self.records.iter().map(|r| r.bytes_down).sum();
         (up, down)
     }
 
+    /// Peak analytical client memory across every recorded round.
     pub fn peak_client_mem(&self) -> u64 {
         self.records.iter().map(|r| r.client_mem_bytes).max().unwrap_or(0)
     }
@@ -183,12 +246,12 @@ impl MetricsSink {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts,late_merged,late_dropped,mean_staleness,interrupted,resumed,partial_merged,wasted_compute_s"
+            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts,late_merged,late_dropped,mean_staleness,projected_merged,projected_dropped_params,transition_staleness,interrupted,resumed,partial_merged,wasted_compute_s"
         )?;
         for r in &self.records {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.stage,
                 r.step,
@@ -207,6 +270,9 @@ impl MetricsSink {
                 r.late_merged,
                 r.late_dropped,
                 r.mean_staleness,
+                r.projected_merged,
+                r.projected_dropped_params,
+                r.transition_staleness,
                 r.interrupted,
                 r.resumed,
                 r.partial_merged,
@@ -241,6 +307,9 @@ mod tests {
             late_merged: round % 2,
             late_dropped: 0,
             mean_staleness: 0.0,
+            projected_merged: round % 2,
+            projected_dropped_params: (round as u64 % 2) * 10,
+            transition_staleness: if round % 2 == 1 { 2.0 } else { 0.0 },
             interrupted: round % 3,
             resumed: 0,
             partial_merged: round % 2,
@@ -294,6 +363,10 @@ mod tests {
             total_bytes_down: 0,
             rounds: 4,
             sim_time_s: m.total_sim_time(),
+            transitions: vec![
+                Transition { version: 1, round: 0, sim_time_s: 0.0 },
+                Transition { version: 2, round: 2, sim_time_s: 60.0 },
+            ],
             history: m.records.clone(),
         };
         assert_eq!(s.time_to_acc(0.5), Some(90.0));
@@ -305,6 +378,12 @@ mod tests {
         assert_eq!(s.churn_events(), (1 + 2 + 0 + 1, 0));
         assert_eq!(s.partial_merges(), 2);
         assert!((s.wasted_compute_s() - 20.0).abs() < 1e-9);
+        // Projection rollups: rounds 1 and 3 each projected one update
+        // (10 scalars dropped apiece, 2 transitions crossed each).
+        assert_eq!(s.projected_merges(), 2);
+        assert_eq!(s.projected_dropped_params(), 20);
+        assert!((s.mean_transition_staleness() - 2.0).abs() < 1e-9);
+        assert_eq!(s.transitions.len(), 2);
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a fresh stream (the seed is avalanched once up front).
     pub fn new(seed: u64) -> Self {
         // Avalanche the seed once so small seeds diverge immediately.
         let mut r = Rng { state: seed ^ 0x9e37_79b9_7f4a_7c15 };
@@ -27,6 +28,7 @@ impl Rng {
         Rng::new(self.state.wrapping_mul(0xbf58_476d_1ce4_e5b9) ^ purpose.wrapping_mul(0x94d0_49bb_1331_11eb))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
         let mut z = self.state;
@@ -40,6 +42,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform in [0, 1) at f32 precision.
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }

@@ -35,7 +35,9 @@ pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
 
 /// One compiled artifact, ready to execute.
 pub struct LoadedArtifact {
+    /// Cache key: `tag/artifact`.
     pub name: String,
+    /// Manifest metadata (inputs, outputs, memory coefficients).
     pub meta: Artifact,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -55,19 +57,24 @@ impl LoadedArtifact {
 
 /// Runtime = PJRT client + artifact cache + manifest.
 pub struct Runtime {
+    /// The PJRT CPU client executables compile against.
     pub client: xla::PjRtClient,
+    /// The artifact inventory (`artifacts/manifest.json`).
     pub manifest: Manifest,
     root: PathBuf,
     cache: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
 }
 
 impl Runtime {
+    /// Open the artifacts directory: parse the manifest and bring up the
+    /// PJRT CPU client.
     pub fn new(artifacts_dir: &std::path::Path) -> Result<Self> {
         let (manifest, root) = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
         Ok(Runtime { client, manifest, root, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// Look up a model tag in the manifest.
     pub fn model(&self, tag: &str) -> Result<&ModelEntry> {
         self.manifest.model(tag)
     }
@@ -89,6 +96,7 @@ impl Runtime {
         Ok(loaded)
     }
 
+    /// Number of artifacts compiled and cached so far.
     pub fn cached_count(&self) -> usize {
         self.cache.borrow().len()
     }

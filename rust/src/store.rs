@@ -10,21 +10,27 @@ use crate::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+/// One named parameter: a shape plus its row-major flat data.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major flat values (`shape.iter().product()` elements).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// An all-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// Flat element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -158,30 +164,37 @@ impl ParamStore {
         ParamStore { params }
     }
 
+    /// Look up a parameter by name.
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.params.get(name).with_context(|| format!("param `{name}` not in store"))
     }
 
+    /// Mutable lookup (DepthFL's in-place write-back path).
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
         self.params.get_mut(name).with_context(|| format!("param `{name}` not in store"))
     }
 
+    /// Insert or replace a parameter.
     pub fn set(&mut self, name: &str, t: Tensor) {
         self.params.insert(name.to_string(), t);
     }
 
+    /// Whether `name` exists in the store.
     pub fn contains(&self, name: &str) -> bool {
         self.params.contains_key(name)
     }
 
+    /// All parameter names, in sorted (BTreeMap) order.
     pub fn names(&self) -> impl Iterator<Item = &String> {
         self.params.keys()
     }
 
+    /// Number of parameters held.
     pub fn len(&self) -> usize {
         self.params.len()
     }
 
+    /// Whether the store holds no parameters.
     pub fn is_empty(&self) -> bool {
         self.params.is_empty()
     }
@@ -208,6 +221,7 @@ impl ParamStore {
         }
     }
 
+    /// Total scalar count across every parameter.
     pub fn total_elems(&self) -> usize {
         self.params.values().map(|t| t.len()).sum()
     }

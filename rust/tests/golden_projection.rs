@@ -1,0 +1,337 @@
+//! Golden traces for the async × stale-projection decision layer.
+//!
+//! The fleet golden suite (`golden_trace.rs`) pins the *event* algebra;
+//! this suite pins the *merge-decision* algebra layered on top of it:
+//! a scripted async scenario drives the real [`FleetEngine`] through a
+//! progressive-freezing schedule (artifact + prefix-version changes
+//! between rounds, exactly like ProFL's grow stage) while a pending
+//! buffer mirrors the coordinator's, and every arriving stale update is
+//! classified through the *production* decision procedure
+//! ([`classify_stale`]) and merged through the *production* accumulator
+//! ([`BufferedAggregator`], including the masked projection path). The
+//! serialized trace — close times, arrival streams, per-update
+//! decisions, effective weights as exact f64 bits, and post-merge store
+//! values as exact f32 bits — is compared bit for bit against
+//! `tests/golden/async_projection_*.txt`.
+//!
+//! Everything is dyadic (times, weights, tensor fills, decay 0.5/0.25,
+//! `alpha = 0`), so all arithmetic is exact in IEEE binary floating
+//! point and the files are platform-independent.
+//!
+//! Regeneration (after an *intentional* decision-layer change):
+//!
+//! ```bash
+//! UPDATE_GOLDEN=1 cargo test --test golden_projection
+//! git diff rust/tests/golden/          # review every change!
+//! ```
+
+use profl::aggregate::{staleness_discount, transition_decay, BufferedAggregator};
+use profl::coordinator::projection::{classify_stale, MergeContext, StaleDecision, TrainableLayout};
+use profl::fleet::{AvailabilityTrace, ChurnPolicy, ClientWork, FleetEngine, RoundPolicy};
+use profl::rng::Rng;
+use profl::store::{ParamStore, Tensor};
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Dyadic weights + `powf(x, 0) == 1` keep every merge weight exact.
+const ALPHA: f64 = 0.0;
+const MAX_STALENESS: usize = 8;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn fmt_f(t: f64) -> String {
+    format!("0x{:016x} ({:.3})", t.to_bits(), t)
+}
+
+fn fmt_f32(v: f32) -> String {
+    format!("0x{:08x} ({:.3})", v.to_bits(), v)
+}
+
+fn check(name: &str, got: &str) {
+    let path = golden_dir().join(format!("{name}.txt"));
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).unwrap();
+        std::fs::write(&path, got).unwrap();
+        if !update {
+            eprintln!("golden `{name}`: bootstrapped {path:?}; commit it");
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        got, want,
+        "golden trace `{name}` diverged from {path:?}; if the decision-layer \
+         change is intentional, regenerate with UPDATE_GOLDEN=1 and review the diff"
+    );
+}
+
+/// Always-on client (the scenario's churn axis is off: projection is
+/// orthogonal to churn, and the churn goldens already pin that algebra).
+fn work(id: usize, down: f64, train: f64, up: f64) -> ClientWork {
+    ClientWork {
+        id,
+        ready_s: 0.0,
+        down_s: down,
+        train_s: train,
+        up_s: up,
+        dropout_p: 0.0,
+        trace: AvailabilityTrace::always_on(),
+    }
+}
+
+/// Synthetic progressive-step layouts, shaped like ProFL's grow stage
+/// (trainable block + surrogate tail + op linear, T = 3): each
+/// transition freezes a block and drops its surrogate from the tail.
+fn layout(artifact: &str) -> TrainableLayout {
+    match artifact {
+        "train_t1" => TrainableLayout::new(&[("b1/w", 8), ("s2/w", 4), ("s3/w", 4), ("op/fc/w", 2)]),
+        "train_t2" => TrainableLayout::new(&[("b2/w", 8), ("s3/w", 4), ("op/fc/w", 2)]),
+        "train_t3" => TrainableLayout::new(&[("b3/w", 8), ("op/fc/w", 2)]),
+        other => panic!("unknown artifact {other}"),
+    }
+}
+
+fn fill(l: &TrainableLayout, v: f32) -> Vec<Vec<f32>> {
+    l.lens.iter().map(|&n| vec![v; n]).collect()
+}
+
+/// Fresh store for one round's layout, every tensor at a 0.25 baseline
+/// (so untouched-tensor preservation is visible in the trace).
+fn store_for(l: &TrainableLayout) -> ParamStore {
+    let shapes: BTreeMap<String, Vec<usize>> =
+        l.names.iter().zip(&l.lens).map(|(n, &len)| (n.clone(), vec![len])).collect();
+    let mut s = ParamStore::init(&shapes, 0);
+    for (n, &len) in l.names.iter().zip(&l.lens) {
+        s.set(n, Tensor { shape: vec![len], data: vec![0.25; len] });
+    }
+    s
+}
+
+/// The coordinator's version-stamped pending buffer, minus the runtime.
+struct Pending {
+    artifact: &'static str,
+    prefix_version: u64,
+    dispatch_round: usize,
+    weight: f64,
+    tensors: Vec<Vec<f32>>,
+}
+
+/// Run the scripted async×projection scenario and serialize every fleet
+/// close, arrival, merge decision, and post-merge store state.
+///
+/// Schedule: round 0 trains `train_t1` (pv 1) and defers two slow
+/// uploads; round 1 crosses a freeze transition to `train_t2` (pv 2)
+/// and defers another; round 2 stays on `train_t2` and receives a
+/// transition-crossed arrival (projectable) plus a version-exact one;
+/// round 3 crosses to `train_t3` (pv 3) and receives a two-transition
+/// arrival whose only surviving tensor is the op linear.
+fn scenario(projection: Option<f64>) -> String {
+    let mut out = String::new();
+    let mut engine = FleetEngine::new();
+    let mut rng = Rng::new(7);
+    let mut pending: HashMap<usize, Pending> = HashMap::new();
+    let mut start = 0.0;
+
+    // (artifact, prefix version, buffer_k, cohort of (work, weight, fill)).
+    type Cohort = Vec<(ClientWork, f64, f32)>;
+    let rounds: Vec<(&'static str, u64, usize, Cohort)> = vec![
+        (
+            "train_t1",
+            1,
+            1,
+            vec![
+                (work(0, 1.0, 2.0, 1.0), 128.0, 1.0), // arrives t=4 (closes the round)
+                (work(1, 2.0, 18.0, 4.0), 64.0, 2.0), // arrives t=24 (deferred)
+                (work(2, 4.0, 36.0, 8.0), 32.0, 3.0), // arrives t=48 (deferred)
+            ],
+        ),
+        (
+            "train_t2",
+            2,
+            1,
+            vec![
+                (work(3, 1.0, 2.0, 1.0), 128.0, 4.0), // arrives t=8 (closes the round)
+                (work(4, 1.0, 32.0, 3.0), 16.0, 5.0), // arrives t=40 (deferred)
+            ],
+        ),
+        ("train_t2", 2, 2, vec![]), // c1 (crossed 1 transition) + c4 (exact) land
+        ("train_t3", 3, 1, vec![]), // c2 (crossed 2 transitions) lands
+    ];
+
+    for (round, (artifact, pv, k, cohort)) in rounds.into_iter().enumerate() {
+        let lay = layout(artifact);
+        let works: Vec<ClientWork> = cohort.iter().map(|&(w, _, _)| w).collect();
+        let policy = RoundPolicy::Async { buffer_k: k, max_staleness: MAX_STALENESS };
+        let plan = engine
+            .simulate_round(round, start, &works, policy, usize::MAX, ChurnPolicy::None, &mut rng);
+        start = plan.end_s;
+
+        writeln!(out, "# round {round} artifact={artifact} pv={pv} k={k}").unwrap();
+        writeln!(out, "close={}", fmt_f(plan.end_s)).unwrap();
+        let ids = |v: &[usize]| {
+            let parts: Vec<String> = v.iter().map(|c| c.to_string()).collect();
+            format!("[{}]", parts.join(", "))
+        };
+        let lates: Vec<String> = plan
+            .late_arrivals
+            .iter()
+            .map(|u| format!("({},{},{})", u.client, u.dispatch_round, fmt_f(u.arrive_s)))
+            .collect();
+        writeln!(
+            out,
+            "completers={} deferred={} late=[{}]",
+            ids(&plan.completers),
+            ids(&plan.deferred),
+            lates.join(",")
+        )
+        .unwrap();
+
+        let mut store = store_for(&lay);
+        let mut agg = BufferedAggregator::new(&lay.names, &store, ALPHA).unwrap();
+
+        // Fresh completers merge at staleness 0 (synthetic local pass:
+        // constant-fill tensors stand in for the XLA executable).
+        for (w, weight, fillv) in &cohort {
+            if plan.completers.contains(&w.id) {
+                agg.add(&fill(&lay, *fillv), *weight, 0);
+                writeln!(out, "fresh c{} w={}", w.id, fmt_f(*weight)).unwrap();
+            }
+        }
+
+        // Classify arrivals through the production decision procedure,
+        // then merge in coordinator order: exact lates, then projections.
+        let mctx = MergeContext {
+            artifact,
+            prefix_version: pv,
+            round,
+            max_staleness: MAX_STALENESS,
+            projection: if projection.is_some() { Some(&lay) } else { None },
+        };
+        let decay = projection.unwrap_or(1.0);
+        let mut exact = Vec::new();
+        let mut projected = Vec::new();
+        for la in &plan.late_arrivals {
+            let p = pending.remove(&la.client).expect("arrival without a pending update");
+            let trained = p.artifact;
+            let decision = classify_stale(
+                &mctx,
+                trained,
+                p.prefix_version,
+                p.dispatch_round,
+                p.tensors,
+                || Some(layout(trained)),
+            );
+            match decision {
+                StaleDecision::Exact { tensors, staleness } => {
+                    let w = fmt_f(p.weight * staleness_discount(staleness, ALPHA));
+                    writeln!(out, "late c{} staleness={staleness} -> exact w={w}", la.client)
+                        .unwrap();
+                    exact.push((tensors, p.weight, staleness));
+                }
+                StaleDecision::Projected { kept, dropped_params, staleness, transitions } => {
+                    let extra = transition_decay(decay, transitions);
+                    let w = p.weight * staleness_discount(staleness, ALPHA) * extra;
+                    let kmap: Vec<String> =
+                        kept.iter().map(|(i, _)| format!("{}->{}", lay.names[*i], i)).collect();
+                    writeln!(
+                        out,
+                        "late c{} staleness={staleness} transitions={transitions} -> projected \
+                         kept=[{}] dropped_params={dropped_params} w={}",
+                        la.client,
+                        kmap.join(","),
+                        fmt_f(w)
+                    )
+                    .unwrap();
+                    projected.push((kept, p.weight, staleness, extra));
+                }
+                StaleDecision::Dropped => {
+                    writeln!(out, "late c{} -> dropped", la.client).unwrap();
+                }
+            }
+        }
+        for (tensors, weight, staleness) in exact {
+            agg.add(&tensors, weight, staleness);
+        }
+        for (kept, weight, staleness, extra) in projected {
+            agg.add_projected(&kept, weight, staleness, extra);
+        }
+
+        // Buffer this round's deferred clients, version-stamped exactly
+        // like the coordinator's pending map.
+        for (w, weight, fillv) in &cohort {
+            if plan.deferred.contains(&w.id) {
+                let p = Pending {
+                    artifact,
+                    prefix_version: pv,
+                    dispatch_round: round,
+                    weight: *weight,
+                    tensors: fill(&lay, *fillv),
+                };
+                pending.insert(w.id, p);
+            }
+        }
+
+        if agg.has_weight() {
+            agg.finish(&mut store).unwrap();
+        } else {
+            writeln!(out, "merge none").unwrap();
+        }
+        let vals: Vec<String> = lay
+            .names
+            .iter()
+            .map(|n| format!("{n}={}", fmt_f32(store.get(n).unwrap().data[0])))
+            .collect();
+        writeln!(out, "store {}", vals.join(" ")).unwrap();
+    }
+    out
+}
+
+#[test]
+fn async_projection_off_golden() {
+    // The historical drop behaviour: both transition-crossers discard.
+    check("async_projection_off", &scenario(None));
+}
+
+#[test]
+fn async_projection_on_golden() {
+    // Default decay 0.5: suffix merges at half weight per transition.
+    check("async_projection_on", &scenario(Some(0.5)));
+}
+
+#[test]
+fn async_projection_decay_golden() {
+    // Steeper decay 0.25: same decisions, quarter weight per transition.
+    check("async_projection_decay25", &scenario(Some(0.25)));
+}
+
+#[test]
+fn projection_changes_merges_not_timing() {
+    // The fleet lines (round headers, close instants, arrival streams)
+    // are identical across all three modes: projection decides what
+    // merges, never when anything happens.
+    let fleet_lines = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| {
+                l.starts_with("# round") || l.starts_with("close=") || l.starts_with("completers=")
+            })
+            .map(String::from)
+            .collect()
+    };
+    let off = scenario(None);
+    let on = scenario(Some(0.5));
+    let steep = scenario(Some(0.25));
+    assert_eq!(fleet_lines(&off), fleet_lines(&on));
+    assert_eq!(fleet_lines(&on), fleet_lines(&steep));
+    // And the decay knob changes weights only, not decisions.
+    let decisions = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("late c"))
+            .map(|l| l.split(" w=").next().unwrap().to_string())
+            .collect()
+    };
+    assert_eq!(decisions(&on), decisions(&steep));
+}

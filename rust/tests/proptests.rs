@@ -5,7 +5,10 @@
 //! few hundred randomized cases drawn from `profl::rng::Rng`; failures
 //! print the case seed for deterministic replay.
 
-use profl::aggregate::{staleness_discount, Aggregator, BufferedAggregator, SlicedAggregator};
+use profl::aggregate::{
+    staleness_discount, transition_decay, Aggregator, BufferedAggregator, SlicedAggregator,
+};
+use profl::coordinator::projection::{project_tensors, TrainableLayout};
 use profl::data::{partition, Partition, SyntheticDataset};
 use profl::fleet::{
     simulate_round, AvailabilityTrace, ChurnPolicy, ClientWork, EventKind, FleetEngine,
@@ -380,6 +383,112 @@ fn prop_churn_buckets_conserve_the_cohort() {
                 );
             }
             start = plan.end_s;
+        }
+    });
+}
+
+#[test]
+fn prop_download_fractions_bounded_and_charged_once() {
+    // Partial-download accounting (ROADMAP churn follow-on): every
+    // churn-aborted client records exactly one completed-download
+    // fraction in [0, 1] — so charging `fraction × bytes` can never
+    // exceed the full download — and lossless policies record none.
+    // Under `resume`, paused downloads complete exactly once: each
+    // client emits at most one TrainDone and one UploadDone, so the
+    // ordinary charge sites fire at most once per download.
+    cases(200, |rng| {
+        let works = rand_works(rng, true);
+        let (policy, keep) = rand_policy(rng);
+        let churn = rand_churn(rng);
+        let mut engine = FleetEngine::new();
+        let plan = engine.simulate_round(0, 0.0, &works, policy, keep, churn, rng);
+        assert_eq!(plan.download_frac.len(), plan.aborted.len(), "one fraction per abort");
+        for &(c, f) in &plan.download_frac {
+            assert!(plan.aborted.contains(&c), "fraction for a non-aborted client");
+            assert!((0.0..=1.0).contains(&f), "fraction {f} outside [0, 1]");
+            let bytes = 44_000_000u64;
+            assert!((f * bytes as f64) as u64 <= bytes, "partial charge exceeds full");
+        }
+        let unique: std::collections::BTreeSet<usize> =
+            plan.download_frac.iter().map(|(c, _)| *c).collect();
+        assert_eq!(unique.len(), plan.download_frac.len(), "a download charged twice");
+        if matches!(churn, ChurnPolicy::None | ChurnPolicy::Resume) {
+            assert!(plan.download_frac.is_empty(), "lossless churn aborts nothing");
+        }
+        if matches!(churn, ChurnPolicy::Resume) {
+            let mut train_done: BTreeMap<usize, usize> = BTreeMap::new();
+            let mut upload_done: BTreeMap<usize, usize> = BTreeMap::new();
+            for e in &plan.events {
+                match e.kind {
+                    EventKind::TrainDone { client } => *train_done.entry(client).or_insert(0) += 1,
+                    EventKind::UploadDone { client } => {
+                        *upload_done.entry(client).or_insert(0) += 1
+                    }
+                    _ => {}
+                }
+            }
+            for (&c, &n) in train_done.iter().chain(upload_done.iter()) {
+                assert!(n <= 1, "client {c} finished a span {n} times under resume");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Stale-update projection invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_projection_conserves_scalars_and_masks_frozen() {
+    // Over random layout pairs drawn from a shared name pool: every
+    // scalar of the stale update is either kept (remapped onto a
+    // still-trainable tensor of identical length) or counted dropped —
+    // nothing is lost or invented — and no kept tensor lands on a name
+    // absent from the update or the new layout (frozen blocks never
+    // receive mass).
+    cases(200, |rng| {
+        let n_pool = 8usize;
+        let base: Vec<usize> = (0..n_pool).map(|_| 1 + rng.below(5)).collect();
+        let mut old = TrainableLayout::default();
+        let mut new = TrainableLayout::default();
+        for (i, len) in base.iter().enumerate() {
+            let name = format!("p{i}");
+            if rng.f64() < 0.6 {
+                old.names.push(name.clone());
+                old.lens.push(*len);
+            }
+            if rng.f64() < 0.6 {
+                // Occasionally reshape a tensor in the new layout: same
+                // name, different length — must be dropped, not merged.
+                let l = if rng.f64() < 0.1 { *len + 1 } else { *len };
+                new.names.push(name);
+                new.lens.push(l);
+            }
+        }
+        let tensors: Vec<Vec<f32>> = old.lens.iter().map(|&l| vec![1.0; l]).collect();
+        let total: usize = old.lens.iter().sum();
+        let (kept, dropped) = project_tensors(&old, &new, tensors);
+        let kept_scalars: usize = kept.iter().map(|(_, t)| t.len()).sum();
+        assert_eq!(kept_scalars as u64 + dropped, total as u64, "scalars not conserved");
+        let mut seen = std::collections::BTreeSet::new();
+        for (idx, t) in &kept {
+            assert!(seen.insert(*idx), "tensor merged twice at index {idx}");
+            assert_eq!(new.lens[*idx], t.len(), "length mismatch survived projection");
+            let name = &new.names[*idx];
+            assert!(old.names.contains(name), "kept tensor not from the update");
+        }
+        // Weight side of the contract: the projected merge factor never
+        // exceeds the original weight's, and decays monotonically in
+        // transitions crossed.
+        let alpha = rng.uniform(0.0, 2.0);
+        let decay = rng.uniform(0.0, 1.0);
+        let staleness = rng.below(6);
+        let mut prev = f64::INFINITY;
+        for transitions in 0..5u64 {
+            let f = staleness_discount(staleness, alpha) * transition_decay(decay, transitions);
+            assert!(f <= 1.0 + 1e-12, "projected weight amplified");
+            assert!(f <= prev + 1e-12, "decay not monotone in transitions");
+            prev = f;
         }
     });
 }
