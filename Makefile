@@ -1,7 +1,8 @@
 # Top-level convenience targets. `make check` is the pre-PR gate
 # (fmt + clippy + tests); see ROADMAP.md.
 
-.PHONY: check docs artifacts test-golden test-golden-update smoke-examples
+.PHONY: check docs artifacts test-golden test-golden-update smoke-examples \
+        bench-json bench-json-smoke
 
 check:
 	./rust/check.sh
@@ -28,6 +29,17 @@ test-golden-update:
 smoke-examples:
 	cargo run --release --example churn_sweep -- --smoke
 	cargo run --release --example async_vs_sync -- --profile smoke
+
+# Fleet-scale perf trajectory: run the artifact-free round-scheduling
+# bench across fleet sizes (1e3 → 1e6) and write BENCH_fleet.json at the
+# repo root — per-round ns plus allocation counters, comparable across
+# PRs (see docs/PERFORMANCE.md for schema + interpretation). The smoke
+# variant is CI-sized (1e3, 1e4).
+bench-json:
+	cargo bench --bench fleet_scale -- --json BENCH_fleet.json
+
+bench-json-smoke:
+	cargo bench --bench fleet_scale -- --smoke --json BENCH_fleet.json
 
 # AOT-lower the JAX/Pallas models to HLO artifacts consumed by the Rust
 # runtime (L2/L1; see python/compile). The `compile` package lives under

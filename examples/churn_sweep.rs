@@ -40,12 +40,13 @@ fn works_for(pool: &ClientPool, ids: &[usize], start: f64) -> Vec<ClientWork> {
     let bytes = 44_000_000u64;
     ids.iter()
         .map(|&cid| {
-            let p = &pool.clients[cid].profile;
+            let c = pool.client(cid);
+            let p = &c.profile;
             ClientWork {
                 id: cid,
                 ready_s: p.trace.next_online(start),
                 down_s: p.down_time_s(bytes),
-                train_s: p.train_time_s(pool.clients[cid].shard.num_samples(), &mem),
+                train_s: p.train_time_s(c.shard.num_samples(), &mem),
                 up_s: p.up_time_s(bytes),
                 dropout_p: p.dropout_p,
                 trace: p.trace,
@@ -128,13 +129,18 @@ fn main() -> Result<()> {
         "sim_time",
     ));
 
+    // One engine serves the whole sweep: `reset()` between combinations
+    // restores the fresh-engine state while its per-round scratch
+    // (event heap, lookup tables) stays allocated — bit-identical to a
+    // new engine per combination (integration-armored in fleet::tests).
+    let mut engine = FleetEngine::new();
     for (pname, policy, sample_n, keep) in policies {
         for (cname, churn) in churns {
             // Fresh seeded streams per combination: rows are comparable
             // because every combination sees the same cohort sequence.
             let mut cohort_rng = Rng::new(seed ^ 0xc0_4047);
             let mut fleet_rng = Rng::new(seed ^ 0xf1ee_7c10);
-            let mut engine = FleetEngine::new();
+            engine.reset();
             let mut start = 0.0f64;
             let (mut merged, mut late, mut deferred) = (0usize, 0usize, 0usize);
             let mut aborted = 0usize;

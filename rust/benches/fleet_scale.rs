@@ -1,0 +1,303 @@
+//! Fleet-scale round-scheduling bench: **is round cost independent of
+//! fleet size?** Sweeps fleet sizes × round policies × churn policies
+//! over the lazy client pool and the scratch-reusing fleet engine —
+//! entirely artifact-free, so it runs anywhere (CI smoke mode included).
+//!
+//! Each entry simulates real scheduling rounds end to end (cohort
+//! sampling with in-flight exclusion → work building → discrete-event
+//! simulation) and reports per-round wall time plus allocation counters
+//! from a counting global allocator — the peak-RSS proxy that witnesses
+//! the lazy pool's O(materialized) memory contract. Results append to
+//! stdout and, with `--json PATH`, to a `BENCH_fleet.json` document
+//! (`make bench-json`); see `docs/PERFORMANCE.md` for how to read it.
+//!
+//!   cargo bench --bench fleet_scale                    # full sweep (1e3..1e6)
+//!   cargo bench --bench fleet_scale -- --smoke         # CI-sized (1e3, 1e4)
+//!   cargo bench --bench fleet_scale -- --json BENCH_fleet.json
+
+use profl::bench_util::BenchResult;
+use profl::cli::Args;
+use profl::clients::ClientPool;
+use profl::data::{Partition, SyntheticDataset};
+use profl::fleet::{ChurnPolicy, ClientWork, FleetEngine, FleetProfileConfig, RoundPolicy};
+use profl::json::Value;
+use profl::manifest::MemCoeffs;
+use profl::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Counting allocator: bytes/calls + live/peak gauges (peak-RSS proxy).
+// ---------------------------------------------------------------------------
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn on_alloc(size: usize) {
+        ALLOC_BYTES.fetch_add(size as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        let live = LIVE_BYTES.fetch_add(size as u64, Ordering::Relaxed) + size as u64;
+        PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+    }
+
+    fn on_dealloc(size: usize) {
+        LIVE_BYTES.fetch_sub(size as u64, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::on_alloc(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        Self::on_dealloc(layout.size());
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::on_dealloc(layout.size());
+        Self::on_alloc(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Snapshot of the allocation counters.
+#[derive(Clone, Copy)]
+struct AllocSnap {
+    bytes: u64,
+    calls: u64,
+    peak: u64,
+}
+
+fn alloc_snap() -> AllocSnap {
+    AllocSnap {
+        bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+        calls: ALLOC_CALLS.load(Ordering::Relaxed),
+        peak: PEAK_BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// Reset the peak gauge to the current live level (per-entry peaks).
+fn reset_peak() {
+    PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// The simulated workload (mirrors examples/churn_sweep.rs, lazily).
+// ---------------------------------------------------------------------------
+
+/// ResNet18-ish artifact proxy: 11 Mparams / 44 MB per exchange.
+fn artifact_mem() -> MemCoeffs {
+    MemCoeffs {
+        fixed_bytes: 0,
+        per_sample_bytes: 0,
+        params_total: 11_000_000,
+        params_trainable: 11_000_000,
+    }
+}
+
+fn works_for(pool: &mut ClientPool, ids: &[usize], start: f64) -> Vec<ClientWork> {
+    let mem = artifact_mem();
+    let bytes = 44_000_000u64;
+    ids.iter()
+        .map(|&cid| {
+            let c = pool.client_mut(cid);
+            let p = &c.profile;
+            ClientWork {
+                id: cid,
+                ready_s: p.trace.next_online(start),
+                down_s: p.down_time_s(bytes),
+                train_s: p.train_time_s(c.shard.num_samples(), &mem),
+                up_s: p.up_time_s(bytes),
+                dropout_p: p.dropout_p,
+                trace: p.trace,
+            }
+        })
+        .collect()
+}
+
+struct EntryResult {
+    fleet: usize,
+    policy: &'static str,
+    churn: &'static str,
+    build_ms: f64,
+    stats: profl::bench_util::BenchStats,
+    alloc_bytes_per_round: u64,
+    allocs_per_round: u64,
+    peak_live_bytes: u64,
+    peak_materialized: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_entry(
+    fleet: usize,
+    cohort: usize,
+    rounds: usize,
+    warmup: usize,
+    policy_name: &'static str,
+    policy: RoundPolicy,
+    churn_name: &'static str,
+    churn: ChurnPolicy,
+    seed: u64,
+) -> EntryResult {
+    // Duty-cycled mobile fleet so churn actually fires mid-span.
+    let mut profile = FleetProfileConfig::named("mobile").expect("named profile");
+    profile.period_s = 240.0;
+    profile.duty = 0.5;
+    profile.dropout_p = 0.05;
+
+    let data = SyntheticDataset::new(10, seed);
+    let t0 = Instant::now();
+    // Resident cap ≫ cohort: evictions stay off the steady-state path.
+    let mut pool = ClientPool::build_lazy(
+        fleet,
+        fleet.saturating_mul(10),
+        &data,
+        Partition::Iid,
+        profl::memory::MemoryConfig::default(),
+        &profile,
+        seed,
+        cohort * 8,
+    );
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mem = artifact_mem();
+    let keep = usize::MAX;
+    let mut engine = FleetEngine::new();
+    let mut fleet_rng = Rng::new(seed ^ 0xf1ee_7c10);
+    let mut start = 0.0f64;
+    let mut samples = Vec::with_capacity(rounds);
+    reset_peak();
+    let before = alloc_snap();
+    for round in 0..warmup + rounds {
+        let busy: Vec<usize> = engine.inflight().iter().map(|u| u.client).collect();
+        let t = Instant::now();
+        let sel = pool.select_excluding(cohort, &mem, &busy);
+        let works = works_for(&mut pool, &sel.trainers, start);
+        let plan = engine.simulate_round(round, start, &works, policy, keep, churn, &mut fleet_rng);
+        let dt = t.elapsed();
+        start = plan.end_s;
+        if round >= warmup {
+            samples.push(dt);
+        }
+    }
+    let after = alloc_snap();
+
+    let name = format!("fleet={fleet:>9} {policy_name:<12} churn={churn_name}");
+    let result = BenchResult::new(name, samples);
+    result.report();
+    let total = (warmup + rounds) as u64;
+    EntryResult {
+        fleet,
+        policy: policy_name,
+        churn: churn_name,
+        build_ms,
+        stats: result.stats(),
+        alloc_bytes_per_round: (after.bytes - before.bytes) / total,
+        allocs_per_round: (after.calls - before.calls) / total,
+        peak_live_bytes: after.peak,
+        peak_materialized: pool.peak_materialized(),
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).expect("args");
+    let smoke = args.flag("smoke");
+    let json_path = args.get("json").map(String::from);
+    let seed: u64 = args.parse_opt("seed").expect("seed").unwrap_or(42);
+    let cohort: usize = args.parse_opt("cohort").expect("cohort").unwrap_or(50);
+    let (fleets, rounds, warmup): (&[usize], usize, usize) = if smoke {
+        (&[1_000, 10_000], 4, 1)
+    } else {
+        (&[1_000, 100_000, 1_000_000], 8, 2)
+    };
+
+    let buffer_k = (cohort / 2).max(1);
+    let policies: [(&'static str, RoundPolicy); 3] = [
+        ("sync", RoundPolicy::Sync),
+        ("async", RoundPolicy::Async { buffer_k, max_staleness: 8 }),
+        ("deadline:120", RoundPolicy::Deadline { secs: 120.0 }),
+    ];
+    let churns: [(&'static str, ChurnPolicy); 2] =
+        [("none", ChurnPolicy::None), ("resume", ChurnPolicy::Resume)];
+
+    println!(
+        "fleet_scale: cohort={cohort} rounds={rounds} (+{warmup} warmup) seed={seed} \
+         fleets={fleets:?}\n"
+    );
+    let mut entries = Vec::new();
+    for &fleet in fleets {
+        for (pname, policy) in policies {
+            for (cname, churn) in churns {
+                let e =
+                    run_entry(fleet, cohort, rounds, warmup, pname, policy, cname, churn, seed);
+                // The memory-wall witness: simulating rounds over a fleet
+                // orders of magnitude larger than the cohort must not
+                // materialize the fleet. (Small fleets are skipped — the
+                // resident cap itself can exceed them.)
+                if fleet >= cohort * 100 {
+                    assert!(
+                        e.peak_materialized * 10 < fleet,
+                        "fleet {fleet}: peak materialized {} is not ≪ fleet size",
+                        e.peak_materialized
+                    );
+                }
+                entries.push(e);
+            }
+        }
+        println!();
+    }
+
+    if let Some(path) = json_path {
+        let doc = to_json(cohort, rounds, seed, &entries);
+        std::fs::write(&path, doc.to_json()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}
+
+fn to_json(cohort: usize, rounds: usize, seed: u64, entries: &[EntryResult]) -> Value {
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Value::Str("fleet_scale".into()));
+    root.insert("schema".into(), Value::Num(1.0));
+    root.insert("cohort".into(), Value::Num(cohort as f64));
+    root.insert("rounds".into(), Value::Num(rounds as f64));
+    root.insert("seed".into(), Value::Num(seed as f64));
+    root.insert(
+        "runner".into(),
+        Value::Str("in-tree bench_util harness (regenerate: make bench-json)".into()),
+    );
+    let arr: Vec<Value> = entries
+        .iter()
+        .map(|e| {
+            let mut o = BTreeMap::new();
+            o.insert("fleet".into(), Value::Num(e.fleet as f64));
+            o.insert("policy".into(), Value::Str(e.policy.into()));
+            o.insert("churn".into(), Value::Str(e.churn.into()));
+            o.insert("build_ms".into(), Value::Num(e.build_ms));
+            o.insert("mean_ns".into(), Value::Num(e.stats.mean_ns as f64));
+            o.insert("median_ns".into(), Value::Num(e.stats.median_ns as f64));
+            o.insert("p95_ns".into(), Value::Num(e.stats.p95_ns as f64));
+            o.insert("min_ns".into(), Value::Num(e.stats.min_ns as f64));
+            o.insert("max_ns".into(), Value::Num(e.stats.max_ns as f64));
+            o.insert("alloc_bytes_per_round".into(), Value::Num(e.alloc_bytes_per_round as f64));
+            o.insert("allocs_per_round".into(), Value::Num(e.allocs_per_round as f64));
+            o.insert("peak_live_bytes".into(), Value::Num(e.peak_live_bytes as f64));
+            o.insert("peak_materialized".into(), Value::Num(e.peak_materialized as f64));
+            Value::Obj(o)
+        })
+        .collect();
+    root.insert("entries".into(), Value::Arr(arr));
+    Value::Obj(root)
+}

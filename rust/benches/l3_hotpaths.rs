@@ -22,6 +22,66 @@ fn big_store(n_params: usize, elems_each: usize) -> (ParamStore, Vec<String>) {
     (ParamStore::init(&shapes, 1), names)
 }
 
+/// The pre-arena aggregation algorithm (vec-of-vecs accumulators, one
+/// allocation per tensor), kept verbatim as the baseline the contiguous
+/// arena is measured against. Must never be faster than `Aggregator` at
+/// ≥100-tensor models (the `docs/PERFORMANCE.md` acceptance bar).
+struct NestedReference {
+    acc: Vec<Vec<f32>>,
+    total_weight: f64,
+}
+
+impl NestedReference {
+    fn new(sizes: &[usize]) -> Self {
+        NestedReference { acc: sizes.iter().map(|&n| vec![0.0; n]).collect(), total_weight: 0.0 }
+    }
+
+    fn add(&mut self, tensors: &[Vec<f32>], weight: f64) {
+        let w = weight as f32;
+        for (a, t) in self.acc.iter_mut().zip(tensors) {
+            for (x, v) in a.iter_mut().zip(t) {
+                *x += w * v;
+            }
+        }
+        self.total_weight += weight;
+    }
+
+    fn finish(mut self) -> Vec<Vec<f32>> {
+        let inv = 1.0 / self.total_weight as f32;
+        for a in &mut self.acc {
+            for x in a.iter_mut() {
+                *x *= inv;
+            }
+        }
+        self.acc
+    }
+}
+
+/// Arena-vs-nested comparison at one model granularity: `n_tensors`
+/// tensors of `elems` scalars each, 10 clients.
+fn bench_arena_vs_nested(tag: &str, n_tensors: usize, elems: usize) {
+    let (mut store, names) = big_store(n_tensors, elems);
+    let mut rng = Rng::new(7);
+    let updates: Vec<Vec<Vec<f32>>> = (0..10)
+        .map(|_| names.iter().map(|_| (0..elems).map(|_| rng.normal()).collect()).collect())
+        .collect();
+    let sizes: Vec<usize> = vec![elems; n_tensors];
+    bench(&format!("fedavg_arena_{tag}"), 3, 20, || {
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        for u in &updates {
+            agg.add(u, 1.0);
+        }
+        agg.finish(&mut store).unwrap();
+    });
+    bench(&format!("fedavg_nested_ref_{tag}"), 3, 20, || {
+        let mut agg = NestedReference::new(&sizes);
+        for u in &updates {
+            agg.add(u, 1.0);
+        }
+        std::hint::black_box(agg.finish());
+    });
+}
+
 fn main() {
     // ---- FedAvg aggregation: 10 clients × 1M scalars -----------------------
     let (mut store, names) = big_store(32, 32_768); // ≈1M f32 total
@@ -41,6 +101,14 @@ fn main() {
         "  -> {:.2} GB/s aggregated\n",
         throughput(&r, total_elems * 10 * 4) / 1e9
     );
+
+    // ---- Contiguous arena vs the historical nested layout ------------------
+    // Small models must not regress; 100+-tensor models (where per-tensor
+    // allocation + pointer chasing dominate) are where the arena wins.
+    bench_arena_vs_nested("8t_x_32k", 8, 32_768);
+    bench_arena_vs_nested("128t_x_2k", 128, 2_048);
+    bench_arena_vs_nested("256t_x_1k", 256, 1_024);
+    println!();
 
     // ---- HeteroFL sliced aggregation ---------------------------------------
     let shapes: Vec<Vec<usize>> = (0..16).map(|_| vec![3, 3, 64, 64]).collect();

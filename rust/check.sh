@@ -20,6 +20,12 @@ echo "== cargo doc --no-deps -D warnings (make docs)"
 # to the profl crate: xla-stub stands in for an external dependency.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p profl --quiet
 
+echo "== cargo build --benches (bench targets must not rot)"
+# Clippy already lints them; this guarantees the bench binaries *link*
+# (a bench-only dependency or dead registration shows up here, not at
+# the next perf investigation).
+cargo build --benches
+
 echo "== cargo test -q"
 cargo test -q
 

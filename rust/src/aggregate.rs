@@ -12,6 +12,14 @@
 //! Every `finish` hard-fails on a zero total weight: in release builds a
 //! zero-weight cohort would otherwise multiply the store by `inf` and
 //! silently NaN-corrupt every global parameter.
+//!
+//! All accumulators share one storage discipline: a contiguous
+//! per-aggregation *arena* (one flat `Vec<f32>` + per-tensor offsets)
+//! instead of a vec-of-vecs. Same accumulation order, same arithmetic —
+//! bit-for-bit identical results (regression-tested) — but one
+//! allocation per round and a cache-friendly sweep per client, which is
+//! what keeps aggregation memcpy-bound at 100+-tensor models (see
+//! `docs/PERFORMANCE.md` and `benches/l3_hotpaths.rs`).
 
 use crate::store::{ParamStore, Tensor};
 use anyhow::{bail, Result};
@@ -38,11 +46,61 @@ pub fn transition_decay(decay: f64, transitions: u64) -> f64 {
     }
 }
 
-/// In-place weighted-average accumulator over a fixed parameter list.
-pub struct Aggregator {
+/// Contiguous accumulation arena shared by the aggregators: one flat
+/// `Vec<f32>` holding every tensor's accumulator back to back, addressed
+/// by per-tensor offsets. Compared to the historical `Vec<Vec<f32>>`,
+/// construction is a single allocation and the per-client `add` sweep
+/// walks one contiguous region — at 100+-tensor models the pointer-chase
+/// and allocator overhead dominate, which is exactly where the round hot
+/// path lives (see `benches/l3_hotpaths.rs` and `docs/PERFORMANCE.md`).
+/// Element order inside each tensor (and the tensor order itself) is
+/// unchanged, so every accumulation is bit-identical to the nested
+/// layout.
+struct Arena {
     names: Vec<String>,
-    acc: Vec<Vec<f32>>,
     shapes: Vec<Vec<usize>>,
+    /// Tensor `i` occupies `acc[offsets[i]..offsets[i + 1]]`.
+    offsets: Vec<usize>,
+    acc: Vec<f32>,
+}
+
+impl Arena {
+    /// Lay out an arena for `names`, sized from the store's tensors.
+    fn new(names: &[String], store: &ParamStore) -> Result<Self> {
+        let mut shapes = Vec::with_capacity(names.len());
+        let mut offsets = Vec::with_capacity(names.len() + 1);
+        let mut total = 0usize;
+        offsets.push(0);
+        for n in names {
+            let t = store.get(n)?;
+            total += t.len();
+            offsets.push(total);
+            shapes.push(t.shape.clone());
+        }
+        Ok(Arena { names: names.to_vec(), shapes, offsets, acc: vec![0.0; total] })
+    }
+
+    /// Number of tensors in the layout.
+    fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Tensor `i`'s accumulator slice.
+    fn slot(&mut self, i: usize) -> &mut [f32] {
+        &mut self.acc[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Tensor `i`'s accumulator slice (shared).
+    fn slot_ref(&self, i: usize) -> &[f32] {
+        &self.acc[self.offsets[i]..self.offsets[i + 1]]
+    }
+}
+
+/// In-place weighted-average accumulator over a fixed parameter list.
+/// Accumulates into a contiguous arena (same arithmetic, same order —
+/// bit-identical to the historical nested-vec layout, regression-tested).
+pub struct Aggregator {
+    arena: Arena,
     total_weight: f64,
     /// Per-tensor weight contributed by masked (suffix-projected) adds;
     /// allocated on the first [`Self::add_masked`] so the full-cover path
@@ -53,25 +111,18 @@ pub struct Aggregator {
 impl Aggregator {
     /// Build an accumulator for `names`, sized from the store's tensors.
     pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
-        let mut acc = Vec::with_capacity(names.len());
-        let mut shapes = Vec::with_capacity(names.len());
-        for n in names {
-            let t = store.get(n)?;
-            acc.push(vec![0.0; t.len()]);
-            shapes.push(t.shape.clone());
-        }
-        let masked_weight = None;
-        Ok(Aggregator { names: names.to_vec(), acc, shapes, total_weight: 0.0, masked_weight })
+        Ok(Aggregator { arena: Arena::new(names, store)?, total_weight: 0.0, masked_weight: None })
     }
 
     /// Add one client's update set (tensors in `names` order). Accepts any
     /// slice-of-slices so the round loop can feed PJRT outputs without
     /// cloning (EXPERIMENTS.md §Perf iteration 3).
     pub fn add<T: AsRef<[f32]>>(&mut self, tensors: &[T], weight: f64) {
-        debug_assert_eq!(tensors.len(), self.acc.len());
+        debug_assert_eq!(tensors.len(), self.arena.len());
         let w = weight as f32;
-        for (a, t) in self.acc.iter_mut().zip(tensors) {
+        for (i, t) in tensors.iter().enumerate() {
             let t = t.as_ref();
+            let a = self.arena.slot(i);
             debug_assert_eq!(a.len(), t.len());
             for (x, v) in a.iter_mut().zip(t) {
                 *x += w * v;
@@ -88,12 +139,12 @@ impl Aggregator {
     /// tensors nobody covers keep the previous global value at
     /// [`Self::finish`] (mirroring [`SlicedAggregator`]'s rule).
     pub fn add_masked<T: AsRef<[f32]>>(&mut self, parts: &[(usize, T)], weight: f64) {
-        let n = self.acc.len();
+        let n = self.arena.len();
         let masked = self.masked_weight.get_or_insert_with(|| vec![0.0; n]);
         let w = weight as f32;
         for (idx, t) in parts {
-            let a = &mut self.acc[*idx];
             let t = t.as_ref();
+            let a = self.arena.slot(*idx);
             debug_assert_eq!(a.len(), t.len(), "projected tensor shape drifted");
             for (x, v) in a.iter_mut().zip(t) {
                 *x += w * v;
@@ -109,37 +160,40 @@ impl Aggregator {
     /// (`total_weight + masked_weight[i]`) and tensors that received no
     /// weight at all keep their previous store value; without them the
     /// historical single-division path runs unchanged, bit for bit.
-    pub fn finish(self, store: &mut ParamStore) -> Result<()> {
-        let Some(masked) = self.masked_weight else {
+    pub fn finish(mut self, store: &mut ParamStore) -> Result<()> {
+        let Some(masked) = self.masked_weight.take() else {
             // Full-cover path (every add spanned all tensors): one shared
             // weight, one shared reciprocal — the pre-projection
-            // arithmetic, unchanged.
+            // arithmetic, unchanged (the flat sweep scales tensors in
+            // exactly the per-tensor order the nested layout did).
             if self.total_weight <= 0.0 {
                 bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
             }
             let inv = 1.0 / self.total_weight as f32;
-            for ((name, mut a), shape) in self.names.into_iter().zip(self.acc).zip(self.shapes) {
-                for x in &mut a {
-                    *x *= inv;
-                }
-                store.set(&name, Tensor { shape, data: a });
+            for x in &mut self.arena.acc {
+                *x *= inv;
+            }
+            // Write through the store's existing buffers: no per-tensor
+            // allocation at finish (the pre-arena code moved its nested
+            // vecs; the arena's one memcpy per tensor replaces that).
+            for (i, name) in self.arena.names.iter().enumerate() {
+                store.get_mut(name)?.data.copy_from_slice(self.arena.slot_ref(i));
             }
             return Ok(());
         };
         if self.total_weight <= 0.0 && masked.iter().all(|&w| w <= 0.0) {
             bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
         }
-        let rows = self.names.into_iter().zip(self.acc).zip(self.shapes).zip(masked);
-        for (((name, mut a), shape), mw) in rows {
+        for (i, mw) in masked.iter().enumerate() {
             let w = self.total_weight + mw;
             if w <= 0.0 {
                 continue; // uncovered tensor: keep the previous global value
             }
             let inv = 1.0 / w as f32;
-            for x in &mut a {
+            for x in self.arena.slot(i) {
                 *x *= inv;
             }
-            store.set(&name, Tensor { shape, data: a });
+            store.get_mut(&self.arena.names[i])?.data.copy_from_slice(self.arena.slot_ref(i));
         }
         Ok(())
     }
@@ -246,38 +300,34 @@ impl BufferedAggregator {
     }
 }
 
-/// HeteroFL-style aggregation over width-heterogeneous updates.
+/// HeteroFL-style aggregation over width-heterogeneous updates. Value
+/// and per-position weight accumulators live in two flat arenas sharing
+/// one offset table (same contiguity rationale — and bit-identical
+/// arithmetic — as [`Aggregator`]'s arena).
 pub struct SlicedAggregator {
-    names: Vec<String>,
-    full_shapes: Vec<Vec<usize>>,
-    acc: Vec<Vec<f32>>,
-    wacc: Vec<Vec<f32>>,
+    arena: Arena,
+    /// Per-position weights, laid out exactly like `arena.acc`.
+    wacc: Vec<f32>,
     total_weight: f64,
 }
 
 impl SlicedAggregator {
     /// Build a sliced accumulator for `names`, sized from the store.
     pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
-        let mut full_shapes = Vec::new();
-        let mut acc = Vec::new();
-        let mut wacc = Vec::new();
-        for n in names {
-            let t = store.get(n)?;
-            full_shapes.push(t.shape.clone());
-            acc.push(vec![0.0; t.len()]);
-            wacc.push(vec![0.0; t.len()]);
-        }
-        Ok(SlicedAggregator { names: names.to_vec(), full_shapes, acc, wacc, total_weight: 0.0 })
+        let arena = Arena::new(names, store)?;
+        let wacc = vec![0.0; arena.acc.len()];
+        Ok(SlicedAggregator { arena, wacc, total_weight: 0.0 })
     }
 
     /// Add a client's update whose tensors are corner slices of the full
     /// shapes (sub_shapes[i] element-wise ≤ full_shapes[i]).
     pub fn add(&mut self, sub_shapes: &[Vec<usize>], tensors: &[Vec<f32>], weight: f64) {
-        for i in 0..self.names.len() {
+        for i in 0..self.arena.len() {
+            let r = self.arena.offsets[i]..self.arena.offsets[i + 1];
             Tensor::accumulate_corner(
-                &self.full_shapes[i],
-                &mut self.acc[i],
-                &mut self.wacc[i],
+                &self.arena.shapes[i],
+                &mut self.arena.acc[r.clone()],
+                &mut self.wacc[r],
                 &sub_shapes[i],
                 &tensors[i],
                 weight as f32,
@@ -299,15 +349,16 @@ impl SlicedAggregator {
         if self.total_weight <= 0.0 {
             bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
         }
-        for (i, name) in self.names.iter().enumerate() {
+        for (i, name) in self.arena.names.iter().enumerate() {
             let prev = store.get(name)?.clone();
             let mut out = prev.data;
-            for j in 0..out.len() {
-                if self.wacc[i][j] > 0.0 {
-                    out[j] = self.acc[i][j] / self.wacc[i][j];
+            let off = self.arena.offsets[i];
+            for (j, o) in out.iter_mut().enumerate() {
+                if self.wacc[off + j] > 0.0 {
+                    *o = self.arena.acc[off + j] / self.wacc[off + j];
                 }
             }
-            store.set(name, Tensor { shape: self.full_shapes[i].clone(), data: out });
+            store.set(name, Tensor { shape: self.arena.shapes[i].clone(), data: out });
         }
         Ok(())
     }
@@ -378,6 +429,64 @@ mod tests {
 
         // The store is untouched either way.
         assert_eq!(store.get("w").unwrap().data, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn arena_matches_nested_vec_reference_bit_for_bit() {
+        // The contiguous arena must reproduce the historical
+        // vec-of-vecs accumulation exactly: same adds, same order, same
+        // f32 rounding. The reference below is the pre-arena algorithm,
+        // kept verbatim.
+        let mut rng = crate::rng::Rng::new(77);
+        let sizes = [3usize, 1, 8, 5];
+        let pairs: Vec<(String, Vec<usize>, Vec<f32>)> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (format!("t{i}"), vec![n], vec![0.0; n]))
+            .collect();
+        let pair_refs: Vec<(&str, Vec<usize>, Vec<f32>)> =
+            pairs.iter().map(|(n, s, d)| (n.as_str(), s.clone(), d.clone())).collect();
+        let mut store = store_with(&pair_refs);
+        let names: Vec<String> = pairs.iter().map(|(n, _, _)| n.clone()).collect();
+
+        let clients: Vec<(Vec<Vec<f32>>, f64)> = (0..7)
+            .map(|_| {
+                let ts: Vec<Vec<f32>> =
+                    sizes.iter().map(|&n| (0..n).map(|_| rng.normal()).collect()).collect();
+                (ts, rng.uniform(0.5, 30.0))
+            })
+            .collect();
+
+        // Reference: nested accumulators, shared-inverse normalization.
+        let mut ref_acc: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![0.0; n]).collect();
+        let mut ref_total = 0.0f64;
+        for (ts, w) in &clients {
+            let wf = *w as f32;
+            for (a, t) in ref_acc.iter_mut().zip(ts) {
+                for (x, v) in a.iter_mut().zip(t) {
+                    *x += wf * v;
+                }
+            }
+            ref_total += w;
+        }
+        let inv = 1.0 / ref_total as f32;
+        for a in &mut ref_acc {
+            for x in a.iter_mut() {
+                *x *= inv;
+            }
+        }
+
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        for (ts, w) in &clients {
+            agg.add(ts, *w);
+        }
+        agg.finish(&mut store).unwrap();
+        for (i, name) in names.iter().enumerate() {
+            let got = &store.get(name).unwrap().data;
+            for (g, r) in got.iter().zip(&ref_acc[i]) {
+                assert_eq!(g.to_bits(), r.to_bits(), "{name}: {g} vs {r}");
+            }
+        }
     }
 
     #[test]

@@ -3,19 +3,59 @@
 //! Criterion-style protocol: warm-up iterations, then timed samples,
 //! reporting min / mean / median / p95 / max. Deterministic sample counts
 //! so bench output is comparable across commits; used by every target in
-//! `rust/benches/`.
+//! `rust/benches/`. [`BenchStats`] is the machine-readable summary the
+//! `fleet_scale` bench serializes into `BENCH_fleet.json`
+//! (`make bench-json`; see `docs/PERFORMANCE.md`).
 
+use std::cell::OnceCell;
 use std::time::{Duration, Instant};
 
-/// One benchmark's timed samples.
+/// One benchmark's timed samples. Construct via [`BenchResult::new`] and
+/// treat as immutable afterwards: quantile queries share one lazily
+/// sorted ordering of the samples, computed on first use (the old
+/// implementation cloned and re-sorted the sample vector on *every*
+/// `percentile` call — three sorts per `report`).
 pub struct BenchResult {
     /// Benchmark name (printed in the report row).
     pub name: String,
     /// Per-iteration wall times, in run order.
     pub samples: Vec<Duration>,
+    /// Samples sorted ascending, filled on first quantile query.
+    sorted: OnceCell<Vec<Duration>>,
+}
+
+/// Machine-readable summary of one benchmark (all times nanoseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BenchStats {
+    /// Number of timed samples.
+    pub n: usize,
+    /// Mean sample, ns.
+    pub mean_ns: u64,
+    /// Median sample, ns.
+    pub median_ns: u64,
+    /// 95th-percentile sample, ns.
+    pub p95_ns: u64,
+    /// Fastest sample, ns.
+    pub min_ns: u64,
+    /// Slowest sample, ns.
+    pub max_ns: u64,
 }
 
 impl BenchResult {
+    /// Wrap a sample set (sorting deferred to the first quantile query).
+    pub fn new(name: impl Into<String>, samples: Vec<Duration>) -> Self {
+        BenchResult { name: name.into(), samples, sorted: OnceCell::new() }
+    }
+
+    /// The cached ascending ordering (sorted exactly once).
+    fn sorted(&self) -> &[Duration] {
+        self.sorted.get_or_init(|| {
+            let mut s = self.samples.clone();
+            s.sort();
+            s
+        })
+    }
+
     /// Mean sample duration.
     pub fn mean(&self) -> Duration {
         let total: Duration = self.samples.iter().sum();
@@ -24,10 +64,22 @@ impl BenchResult {
 
     /// The `p`-quantile sample (0.0 = min, 1.0 = max).
     pub fn percentile(&self, p: f64) -> Duration {
-        let mut s = self.samples.clone();
-        s.sort();
+        let s = self.sorted();
         let idx = ((s.len() - 1) as f64 * p).round() as usize;
         s[idx]
+    }
+
+    /// The full numeric summary (one sort, shared with `percentile`).
+    pub fn stats(&self) -> BenchStats {
+        let ns = |d: Duration| d.as_nanos().min(u64::MAX as u128) as u64;
+        BenchStats {
+            n: self.samples.len(),
+            mean_ns: ns(self.mean()),
+            median_ns: ns(self.percentile(0.5)),
+            p95_ns: ns(self.percentile(0.95)),
+            min_ns: ns(self.percentile(0.0)),
+            max_ns: ns(self.percentile(1.0)),
+        }
     }
 
     /// Print the criterion-style summary row.
@@ -55,7 +107,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         f();
         samples.push(t0.elapsed());
     }
-    let r = BenchResult { name: name.to_string(), samples };
+    let r = BenchResult::new(name, samples);
     r.report();
     r
 }
@@ -80,18 +132,37 @@ mod tests {
 
     #[test]
     fn percentiles_ordered() {
-        let r = BenchResult {
-            name: "x".into(),
-            samples: (1..=100).map(Duration::from_micros).collect(),
-        };
+        let r = BenchResult::new("x", (1..=100).map(Duration::from_micros).collect());
         assert!(r.percentile(0.0) <= r.percentile(0.5));
         assert!(r.percentile(0.5) <= r.percentile(0.95));
         assert!(r.percentile(0.95) <= r.percentile(1.0));
     }
 
     #[test]
+    fn percentile_does_not_depend_on_sample_order() {
+        // The cached ordering must sort: feed samples in reverse.
+        let fwd = BenchResult::new("f", (1..=50).map(Duration::from_micros).collect());
+        let rev = BenchResult::new("r", (1..=50).rev().map(Duration::from_micros).collect());
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(fwd.percentile(p), rev.percentile(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn stats_summarize_consistently() {
+        let r = BenchResult::new("x", (1..=100).map(Duration::from_micros).collect());
+        let s = r.stats();
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min_ns, 1_000);
+        assert_eq!(s.max_ns, 100_000);
+        assert_eq!(s.median_ns, r.percentile(0.5).as_nanos() as u64);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns && s.p95_ns <= s.max_ns);
+        assert_eq!(s.mean_ns, 50_500);
+    }
+
+    #[test]
     fn throughput_math() {
-        let r = BenchResult { name: "x".into(), samples: vec![Duration::from_secs(1); 3] };
+        let r = BenchResult::new("x", vec![Duration::from_secs(1); 3]);
         assert!((throughput(&r, 1000) - 1000.0).abs() < 1e-6);
     }
 }

@@ -1,11 +1,43 @@
 //! Client pool: device fleet with heterogeneous memory + data shards,
 //! memory-aware selection (the paper's per-step eligibility filter).
+//!
+//! # Eager vs lazy fleets
+//!
+//! [`ClientPool::build`] materializes every client up front — O(fleet)
+//! memory, exactly the historical behaviour. [`ClientPool::build_lazy`]
+//! materializes clients *on demand* behind a small resident cache, so a
+//! million-device fleet costs O(materialized) memory while every
+//! observable stream (memory budgets, contention draws, device profiles,
+//! shard labels/indices, selection order) stays **bit-identical** to the
+//! eager build (property-tested). Three structural facts make this
+//! possible:
+//!
+//! 1. the memory-budget rng consumes exactly one draw per client, and
+//!    SplitMix64's state moves by a constant stride per draw — so client
+//!    `i`'s budget stream is reachable by an O(1) state jump;
+//! 2. the profile rng never advances ([`DeviceProfile::sample`] only
+//!    *forks* it), so any client's profile is a pure function of the
+//!    initial state;
+//! 3. shard bounds come from a `ShardPlan` — sparse rng-state
+//!    checkpoints over the partition stream (see `data::partition`).
+//!
+//! Mutable per-client state (the contention rng, the shard's batch
+//! cursor, the cached prefix version) survives cache eviction in a
+//! compact residue map, so re-materialization resumes every stream
+//! exactly where it left off.
+//!
+//! Selection is O(cohort + excluded) for both storage modes: the cohort
+//! is drawn by a sparse partial Fisher-Yates (`Rng::sample_indices`) and
+//! in-flight exclusions are handled by rank-mapping into the eligible
+//! id space instead of collecting a fleet-sized eligibility vector.
 
+use crate::data::partition::ShardPlan;
 use crate::data::{partition, ClientShard, Partition, SyntheticDataset};
 use crate::fleet::{DeviceProfile, FleetProfileConfig};
 use crate::manifest::MemCoeffs;
 use crate::memory::{can_train, DeviceMemory, MemoryConfig};
 use crate::rng::Rng;
+use std::collections::HashMap;
 
 /// One simulated device.
 pub struct Client {
@@ -23,12 +55,123 @@ pub struct Client {
     pub prefix_version: u64,
 }
 
+/// Mutable state preserved across lazy-cache eviction: everything about a
+/// client that is NOT a pure function of `(seed, id)`. Re-materialization
+/// restores these, so eviction is invisible to any seeded run.
+struct Residue {
+    /// Contention stream position (the budget itself is pure, but the
+    /// per-round `available()` draws advance a private rng).
+    memory: DeviceMemory,
+    /// Shard batch-cycling cursor.
+    cursor: usize,
+    /// Cached frozen-prefix version (comm accounting).
+    prefix_version: u64,
+}
+
+/// A materialized client plus its LRU tick.
+struct Resident {
+    client: Client,
+    tick: u64,
+}
+
+/// On-demand client storage: pure `(seed, id)` recipes plus a bounded
+/// resident cache and the eviction residues (see module docs).
+struct LazyFleet {
+    num_clients: usize,
+    fleet: FleetProfileConfig,
+    /// Memory-budget rng state before client 0's draw (one draw/client).
+    mem_state0: u64,
+    /// Profile rng state (never advances — `sample` only forks it).
+    prof_state: u64,
+    /// Lazy partition: shard bounds + label-stream checkpoints.
+    plan: ShardPlan,
+    /// Resident-cache capacity (clients, not bytes).
+    cap: usize,
+    /// Monotone access counter for LRU eviction.
+    tick: u64,
+    resident: HashMap<usize, Resident>,
+    evicted: HashMap<usize, Residue>,
+    peak_resident: usize,
+}
+
+impl LazyFleet {
+    /// Rebuild client `id` from its pure recipes, restoring any residue.
+    fn rebuild(&mut self, id: usize, mem_cfg: &MemoryConfig) -> Client {
+        assert!(id < self.num_clients, "client {id} out of range ({})", self.num_clients);
+        let mut mem_rng = Rng::from_state(self.mem_state0);
+        mem_rng.skip(id as u64);
+        let mut memory = DeviceMemory::sample(mem_cfg, &mut mem_rng, id);
+        let mut prof_rng = Rng::from_state(self.prof_state);
+        let profile = DeviceProfile::sample(&self.fleet, &mut prof_rng, id);
+        let mut shard = self.plan.shard(id);
+        let mut prefix_version = u64::MAX;
+        if let Some(res) = self.evicted.remove(&id) {
+            memory = res.memory;
+            shard.set_cursor(res.cursor);
+            prefix_version = res.prefix_version;
+        }
+        Client { id, memory, profile, shard, prefix_version }
+    }
+
+    /// Ensure client `id` is resident, evicting the least-recently-used
+    /// client (ties broken by smallest id — deterministic) when at
+    /// capacity. Bumps the LRU tick either way.
+    fn touch(&mut self, id: usize, mem_cfg: &MemoryConfig) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(r) = self.resident.get_mut(&id) {
+            r.tick = tick;
+            return;
+        }
+        while self.resident.len() >= self.cap.max(1) {
+            self.evict_lru();
+        }
+        let client = self.rebuild(id, mem_cfg);
+        self.resident.insert(id, Resident { client, tick });
+        self.peak_resident = self.peak_resident.max(self.resident.len());
+    }
+
+    /// Evict the least-recently-used resident, snapshotting its mutable
+    /// state into the residue map.
+    fn evict_lru(&mut self) {
+        // Ticks are unique, so the minimum is unique — HashMap iteration
+        // order cannot influence the choice.
+        let Some(id) = self.resident.iter().min_by_key(|(id, r)| (r.tick, **id)).map(|(id, _)| *id)
+        else {
+            return;
+        };
+        let r = self.resident.remove(&id).expect("resident just found");
+        self.evicted.insert(
+            id,
+            Residue {
+                cursor: r.client.shard.cursor(),
+                prefix_version: r.client.prefix_version,
+                memory: r.client.memory,
+            },
+        );
+    }
+
+    /// Client `id`'s static memory budget without materializing it (the
+    /// budget is a pure O(1) function of `(seed, id)`).
+    fn budget(&self, id: usize, mem_cfg: &MemoryConfig) -> u64 {
+        let mut mem_rng = Rng::from_state(self.mem_state0);
+        mem_rng.skip(id as u64);
+        DeviceMemory::sample(mem_cfg, &mut mem_rng, id).budget
+    }
+}
+
+/// Client storage behind [`ClientPool`]: everything up front, or
+/// recipes + a resident cache.
+enum Storage {
+    Eager(Vec<Client>),
+    Lazy(Box<LazyFleet>),
+}
+
 /// The device fleet: every simulated client plus the shared memory model.
 pub struct ClientPool {
-    /// All clients, indexed by [`Client::id`].
-    pub clients: Vec<Client>,
     /// Fleet-wide memory substrate knobs (budgets, contention).
     pub mem_cfg: MemoryConfig,
+    storage: Storage,
     rng: Rng,
 }
 
@@ -43,9 +186,27 @@ pub struct Selection {
     pub availability: Vec<(usize, u64)>,
 }
 
+/// Map an eligible-space rank to a client id given the sorted, deduped
+/// `excluded` ids: the `rank`-th smallest id not in `excluded`. Each
+/// excluded id ≤ the running candidate shifts it up by one; the walk
+/// stops at the first excluded id beyond it.
+fn rank_to_id(rank: usize, excluded: &[usize]) -> usize {
+    let mut id = rank;
+    for &b in excluded {
+        if b <= id {
+            id += 1;
+        } else {
+            break;
+        }
+    }
+    id
+}
+
 impl ClientPool {
-    /// Build the fleet: partition the dataset into shards and sample each
-    /// client's memory budget + device profile from seed-forked streams.
+    /// Build the fleet eagerly: partition the dataset into shards and
+    /// sample each client's memory budget + device profile from
+    /// seed-forked streams. O(fleet) memory — for million-device fleets
+    /// use [`Self::build_lazy`], which is bit-identical.
     pub fn build(
         num_clients: usize,
         total_samples: usize,
@@ -71,22 +232,125 @@ impl ClientPool {
                 prefix_version: u64::MAX,
             })
             .collect();
-        ClientPool { clients, mem_cfg, rng: rng.fork(0x5e1) }
+        ClientPool { storage: Storage::Eager(clients), mem_cfg, rng: rng.fork(0x5e1) }
+    }
+
+    /// Build the fleet lazily: clients materialize on first touch behind
+    /// a `resident_cap`-client cache, with every rng stream bit-identical
+    /// to [`Self::build`] (see module docs for why that holds). Build
+    /// cost is one streaming pass over the partition stream — O(fleet)
+    /// time, O(fleet / checkpoint-stride) memory — and each round
+    /// afterwards costs O(cohort), independent of fleet size.
+    ///
+    /// `resident_cap` should comfortably exceed the per-round cohort
+    /// (evicting a client mid-round is correct but wasteful).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_lazy(
+        num_clients: usize,
+        total_samples: usize,
+        dataset: &SyntheticDataset,
+        scheme: Partition,
+        mem_cfg: MemoryConfig,
+        fleet: &FleetProfileConfig,
+        seed: u64,
+        resident_cap: usize,
+    ) -> Self {
+        let mem_state0 = Rng::new(seed ^ 0x5e1e_c7ed).state();
+        let prof_state = Rng::new(seed ^ 0xf1ee_7000).state();
+        let plan = ShardPlan::build(dataset.num_classes, num_clients, total_samples, scheme, seed);
+        // The selection stream forks off the memory rng *after* its
+        // per-client draws — jump there without making them.
+        let mut post_mem = Rng::from_state(mem_state0);
+        post_mem.skip(num_clients as u64);
+        let rng = post_mem.fork(0x5e1);
+        let lazy = LazyFleet {
+            num_clients,
+            fleet: fleet.clone(),
+            mem_state0,
+            prof_state,
+            plan,
+            cap: resident_cap,
+            tick: 0,
+            resident: HashMap::new(),
+            evicted: HashMap::new(),
+            peak_resident: 0,
+        };
+        ClientPool { storage: Storage::Lazy(Box::new(lazy)), mem_cfg, rng }
     }
 
     /// Number of clients in the fleet.
     pub fn len(&self) -> usize {
-        self.clients.len()
+        match &self.storage {
+            Storage::Eager(v) => v.len(),
+            Storage::Lazy(l) => l.num_clients,
+        }
     }
 
     /// Whether the fleet is empty.
     pub fn is_empty(&self) -> bool {
-        self.clients.is_empty()
+        self.len() == 0
     }
 
-    /// Total training samples across every client's shard.
+    /// Total training samples across every client's shard. (Lazy fleets
+    /// answer from the partition plan without materializing anyone.)
     pub fn total_samples(&self) -> usize {
-        self.clients.iter().map(|c| c.shard.num_samples()).sum()
+        match &self.storage {
+            Storage::Eager(v) => v.iter().map(|c| c.shard.num_samples()).sum(),
+            Storage::Lazy(l) => l.plan.total_samples(),
+        }
+    }
+
+    /// Shared read access to client `id`. Eager fleets serve any id; lazy
+    /// fleets serve *resident* clients only (ids flow through
+    /// [`Self::select_excluding`] / [`Self::client_mut`] first on every
+    /// coordinator path, which materializes them).
+    ///
+    /// # Panics
+    ///
+    /// On a lazy fleet, if `id` is not resident.
+    pub fn client(&self, id: usize) -> &Client {
+        match &self.storage {
+            Storage::Eager(v) => &v[id],
+            Storage::Lazy(l) => {
+                &l.resident
+                    .get(&id)
+                    .unwrap_or_else(|| {
+                        panic!("lazy client {id} not resident; materialize via client_mut/select")
+                    })
+                    .client
+            }
+        }
+    }
+
+    /// Mutable access to client `id`, materializing it on a lazy fleet
+    /// (and bumping its LRU tick).
+    pub fn client_mut(&mut self, id: usize) -> &mut Client {
+        let mem_cfg = self.mem_cfg;
+        match &mut self.storage {
+            Storage::Eager(v) => &mut v[id],
+            Storage::Lazy(l) => {
+                l.touch(id, &mem_cfg);
+                &mut l.resident.get_mut(&id).expect("just touched").client
+            }
+        }
+    }
+
+    /// Clients currently materialized (= fleet size for eager pools).
+    pub fn materialized(&self) -> usize {
+        match &self.storage {
+            Storage::Eager(v) => v.len(),
+            Storage::Lazy(l) => l.resident.len(),
+        }
+    }
+
+    /// High-water mark of simultaneously materialized clients (= fleet
+    /// size for eager pools). The lazy pool's memory-wall witness: at
+    /// 1e6 clients / cohort 50 this stays at the resident cap.
+    pub fn peak_materialized(&self) -> usize {
+        match &self.storage {
+            Storage::Eager(v) => v.len(),
+            Storage::Lazy(l) => l.peak_resident,
+        }
     }
 
     /// Sample `per_round` clients uniformly, then split by whether each can
@@ -103,26 +367,41 @@ impl ClientPool {
     /// `busy` takes exactly the plain-sample path, so the rng stream is
     /// bit-identical to [`Self::select`] — the sync/degenerate-async
     /// reproducibility guarantees rest on this.
+    ///
+    /// Cost is O(cohort + excluded), independent of fleet size: the draw
+    /// is a sparse partial Fisher-Yates over the eligible count, and each
+    /// drawn rank maps to its client id through the sorted exclusion list
+    /// (rank-to-id walk) instead of a fleet-sized eligibility vector. Both
+    /// the draws and the resulting ids are bit-identical to the
+    /// historical collect-then-index implementation.
     pub fn select_excluding(
         &mut self,
         per_round: usize,
         mem: &MemCoeffs,
         busy: &[usize],
     ) -> Selection {
-        let ids = if busy.is_empty() {
-            self.rng.sample_indices(self.clients.len(), per_round.min(self.clients.len()))
+        let n = self.len();
+        let ids: Vec<usize> = if busy.is_empty() {
+            self.rng.sample_indices(n, per_round.min(n))
         } else {
-            let eligible: Vec<usize> =
-                (0..self.clients.len()).filter(|id| !busy.contains(id)).collect();
-            let k = per_round.min(eligible.len());
-            self.rng.sample_indices(eligible.len(), k).into_iter().map(|i| eligible[i]).collect()
+            let mut excl: Vec<usize> = busy.iter().copied().filter(|&b| b < n).collect();
+            excl.sort_unstable();
+            excl.dedup();
+            let eligible = n - excl.len();
+            let k = per_round.min(eligible);
+            self.rng
+                .sample_indices(eligible, k)
+                .into_iter()
+                .map(|rank| rank_to_id(rank, &excl))
+                .collect()
         };
+        let mem_cfg = self.mem_cfg;
         let mut sel =
             Selection { trainers: Vec::new(), fallback: Vec::new(), availability: Vec::new() };
         for id in ids {
-            let avail = self.clients[id].memory.available(&self.mem_cfg);
+            let avail = self.client_mut(id).memory.available(&mem_cfg);
             sel.availability.push((id, avail));
-            if can_train(avail, &self.mem_cfg, mem) {
+            if can_train(avail, &mem_cfg, mem) {
                 sel.trainers.push(id);
             } else {
                 sel.fallback.push(id);
@@ -132,32 +411,43 @@ impl ClientPool {
     }
 
     /// Fraction of the whole fleet that could train `mem` at static budget
-    /// (the PR column of Tables 1/2).
+    /// (the PR column of Tables 1/2). O(fleet) time by definition, but
+    /// lazy fleets answer from the pure budget recipe — O(1) memory, no
+    /// materialization.
     pub fn participation_rate(&self, mem: &MemCoeffs) -> f64 {
-        let n = self
-            .clients
-            .iter()
-            .filter(|c| c.memory.fits_static(&self.mem_cfg, mem))
-            .count();
-        n as f64 / self.clients.len() as f64
+        let need = mem.bytes_at(self.mem_cfg.accounting_batch);
+        let n = match &self.storage {
+            Storage::Eager(v) => {
+                v.iter().filter(|c| c.memory.fits_static(&self.mem_cfg, mem)).count()
+            }
+            Storage::Lazy(l) => {
+                (0..l.num_clients).filter(|&id| need <= l.budget(id, &self.mem_cfg)).count()
+            }
+        };
+        n as f64 / self.len() as f64
     }
 
     /// Largest option (by index into `options`, assumed sorted ascending by
     /// memory need) each client can statically afford — HeteroFL's
-    /// complexity assignment and AllSmall's global-model pick.
+    /// complexity assignment and AllSmall's global-model pick. The result
+    /// is inherently O(fleet); lazy fleets stream the pure budget recipe
+    /// instead of materializing clients.
     pub fn capability_assignment(&self, options: &[MemCoeffs]) -> Vec<Option<usize>> {
-        self.clients
-            .iter()
-            .map(|c| {
-                let mut best = None;
-                for (i, m) in options.iter().enumerate() {
-                    if c.memory.fits_static(&self.mem_cfg, m) {
-                        best = Some(i);
-                    }
+        let best_for = |budget: u64| {
+            let mut best = None;
+            for (i, m) in options.iter().enumerate() {
+                if m.bytes_at(self.mem_cfg.accounting_batch) <= budget {
+                    best = Some(i);
                 }
-                best
-            })
-            .collect()
+            }
+            best
+        };
+        match &self.storage {
+            Storage::Eager(v) => v.iter().map(|c| best_for(c.memory.budget)).collect(),
+            Storage::Lazy(l) => {
+                (0..l.num_clients).map(|id| best_for(l.budget(id, &self.mem_cfg))).collect()
+            }
+        }
     }
 }
 
@@ -174,6 +464,21 @@ mod tests {
         let data = SyntheticDataset::new(10, seed);
         let fleet = FleetProfileConfig::named(profile).unwrap();
         ClientPool::build(50, 5_000, &data, Partition::Iid, MemoryConfig::default(), &fleet, seed)
+    }
+
+    fn lazy_pool_with(seed: u64, profile: &str, cap: usize) -> ClientPool {
+        let data = SyntheticDataset::new(10, seed);
+        let fleet = FleetProfileConfig::named(profile).unwrap();
+        ClientPool::build_lazy(
+            50,
+            5_000,
+            &data,
+            Partition::Iid,
+            MemoryConfig::default(),
+            &fleet,
+            seed,
+            cap,
+        )
     }
 
     fn coeffs(total_mb: u64) -> MemCoeffs {
@@ -215,10 +520,10 @@ mod tests {
         let p = pool(4);
         let opts = vec![coeffs(80), coeffs(300), coeffs(700)];
         let assign = p.capability_assignment(&opts);
-        for (c, a) in p.clients.iter().zip(&assign) {
+        for (id, a) in assign.iter().enumerate() {
             match a {
-                Some(i) => assert!(c.memory.budget >= opts[*i].fixed_bytes),
-                None => assert!(c.memory.budget < 80 * MB),
+                Some(i) => assert!(p.client(id).memory.budget >= opts[*i].fixed_bytes),
+                None => assert!(p.client(id).memory.budget < 80 * MB),
             }
         }
         // heterogeneity: at least two distinct tiers present
@@ -232,11 +537,12 @@ mod tests {
     fn device_profiles_deterministic_and_heterogeneous() {
         let a = pool_with(6, "mobile");
         let b = pool_with(6, "mobile");
-        for (ca, cb) in a.clients.iter().zip(&b.clients) {
-            assert_eq!(ca.profile, cb.profile, "client {}", ca.id);
+        for id in 0..a.len() {
+            assert_eq!(a.client(id).profile, b.client(id).profile, "client {id}");
         }
         // The mobile fleet must actually mix device tiers.
-        let mut tiers: Vec<String> = a.clients.iter().map(|c| format!("{:?}", c.profile.tier)).collect();
+        let mut tiers: Vec<String> =
+            (0..a.len()).map(|id| format!("{:?}", a.client(id).profile.tier)).collect();
         tiers.sort();
         tiers.dedup();
         assert!(tiers.len() >= 2, "expected tier diversity, got {tiers:?}");
@@ -286,5 +592,125 @@ mod tests {
             assert_eq!(s1.fallback, s2.fallback);
             assert_eq!(s1.availability, s2.availability);
         }
+        // And the stream *positions* still align afterwards: a trailing
+        // plain select on each pool must agree too.
+        let t1 = a.select(12, &coeffs(400));
+        let t2 = b.select(12, &coeffs(400));
+        assert_eq!(t1.availability, t2.availability, "rng stream positions diverged");
+    }
+
+    #[test]
+    fn exclusion_rank_mapping_matches_collect_then_index() {
+        // rank_to_id must reproduce `eligible[rank]` for the historical
+        // eligibility vector, for any exclusion pattern.
+        let n = 40usize;
+        for excl in [vec![], vec![0], vec![39], vec![0, 1, 2], vec![5, 17, 18, 30], (0..39).collect()]
+        {
+            let eligible: Vec<usize> = (0..n).filter(|id| !excl.contains(id)).collect();
+            for (rank, &want) in eligible.iter().enumerate() {
+                assert_eq!(rank_to_id(rank, &excl), want, "excl {excl:?} rank {rank}");
+            }
+        }
+    }
+
+    // --- lazy fleet --------------------------------------------------------
+
+    #[test]
+    fn lazy_pool_matches_eager_bit_for_bit() {
+        // Budgets, profiles, shard labels/indices, and prefix versions of
+        // every client — materialized out of order — must equal the eager
+        // build's.
+        let mut eager = pool_with(8, "mobile");
+        let mut lazy = lazy_pool_with(8, "mobile", 64);
+        assert_eq!(eager.len(), lazy.len());
+        assert_eq!(eager.total_samples(), lazy.total_samples());
+        let order: Vec<usize> = (0..50).rev().collect();
+        for &id in &order {
+            lazy.client_mut(id); // materialize
+            let e = eager.client(id);
+            let l = lazy.client(id);
+            assert_eq!(e.memory.budget, l.memory.budget, "client {id} budget");
+            assert_eq!(e.profile, l.profile, "client {id} profile");
+            assert_eq!(e.shard.labels, l.shard.labels, "client {id} labels");
+            assert_eq!(e.shard.indices, l.shard.indices, "client {id} indices");
+            assert_eq!(e.prefix_version, l.prefix_version);
+        }
+        // Contention streams advance identically too.
+        let cfg = MemoryConfig::default();
+        for id in [0usize, 7, 49] {
+            for _ in 0..4 {
+                let a = eager.client_mut(id).memory.available(&cfg);
+                let b = lazy.client_mut(id).memory.available(&cfg);
+                assert_eq!(a, b, "client {id} contention stream");
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_selection_stream_matches_eager() {
+        // Whole selection rounds — cohort ids, availability draws, the
+        // trainers/fallback split — bit-identical across storage modes,
+        // including with exclusions in play.
+        let mut eager = pool_with(9, "mobile");
+        let mut lazy = lazy_pool_with(9, "mobile", 64);
+        for round in 0..6 {
+            let busy: Vec<usize> = if round % 2 == 0 { vec![] } else { vec![3, 4, 5, 20] };
+            let a = eager.select_excluding(15, &coeffs(400), &busy);
+            let b = lazy.select_excluding(15, &coeffs(400), &busy);
+            assert_eq!(a.trainers, b.trainers, "round {round}");
+            assert_eq!(a.fallback, b.fallback, "round {round}");
+            assert_eq!(a.availability, b.availability, "round {round}");
+        }
+    }
+
+    #[test]
+    fn lazy_eviction_preserves_mutable_state() {
+        // A 4-client cache forces constant eviction; contention streams
+        // and selection must still match the eager pool exactly because
+        // residues restore the evicted state.
+        let mut eager = pool(10);
+        let mut lazy = lazy_pool_with(10, "uniform", 4);
+        for round in 0..10 {
+            let a = eager.select(3, &coeffs(400));
+            let b = lazy.select(3, &coeffs(400));
+            assert_eq!(a.availability, b.availability, "round {round}");
+            assert!(lazy.materialized() <= 4, "cache exceeded its cap");
+        }
+        assert!(lazy.peak_materialized() <= 4);
+    }
+
+    #[test]
+    fn lazy_pool_materializes_only_the_cohort() {
+        // The memory-wall acceptance: a fleet orders of magnitude larger
+        // than the cohort must never materialize more than the resident
+        // cap — peak materialized ≪ fleet size.
+        let data = SyntheticDataset::new(10, 11);
+        let fleet = FleetProfileConfig::named("mobile").unwrap();
+        let mut p = ClientPool::build_lazy(
+            100_000,
+            1_000_000,
+            &data,
+            Partition::Iid,
+            MemoryConfig::default(),
+            &fleet,
+            11,
+            256,
+        );
+        assert_eq!(p.len(), 100_000);
+        for _ in 0..5 {
+            let sel = p.select(50, &coeffs(400));
+            assert_eq!(sel.availability.len(), 50);
+        }
+        assert!(
+            p.peak_materialized() <= 256,
+            "peak {} exceeds the resident cap",
+            p.peak_materialized()
+        );
+        assert!(p.peak_materialized() * 100 < p.len(), "peak must be ≪ fleet size");
+        // Fleet-wide aggregates still answer without materialization.
+        assert!(p.total_samples() > 500_000);
+        let pr = p.participation_rate(&coeffs(500));
+        assert!((0.0..=1.0).contains(&pr));
+        assert!(p.materialized() <= 256);
     }
 }

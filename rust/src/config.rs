@@ -126,6 +126,14 @@ pub struct FleetCfg {
     /// (`>= 1.0` = always on); `None` keeps the profile's duty.
     /// CLI: `--trace-duty`.
     pub trace_duty: Option<f64>,
+    /// Lazy client materialization: build the pool as on-demand
+    /// `(seed, id)` recipes behind a small resident cache instead of
+    /// materializing every client up front. Bit-identical to the eager
+    /// build (see `clients` module docs) but O(cohort) memory per round —
+    /// the switch that makes million-device fleets affordable
+    /// (`benches/fleet_scale.rs`). Default `false` (eager, historical
+    /// behaviour). CLI: `--lazy-pool`.
+    pub lazy_pool: bool,
 }
 
 impl Default for FleetCfg {
@@ -145,6 +153,7 @@ impl Default for FleetCfg {
             churn_epochs: 4,
             trace_period_s: None,
             trace_duty: None,
+            lazy_pool: false,
         }
     }
 }

@@ -153,15 +153,32 @@ impl<'rt> ServerCtx<'rt> {
         let policy = cfg.round_policy()?;
         let churn = cfg.churn_policy()?;
         let projection = cfg.stale_projection()?;
-        let pool = ClientPool::build(
-            cfg.num_clients,
-            cfg.total_samples,
-            &dataset,
-            cfg.partition(),
-            cfg.memory.into(),
-            &fleet_profile,
-            cfg.seed,
-        );
+        let pool = if cfg.fleet.lazy_pool {
+            // Lazy fleets are bit-identical to eager ones; the resident
+            // cap just needs headroom over everything one round touches
+            // (cohort + over-selection + fallback + in-flight backlog).
+            let cap = (cfg.per_round + cfg.fleet.over_select_extra).saturating_mul(8).max(256);
+            ClientPool::build_lazy(
+                cfg.num_clients,
+                cfg.total_samples,
+                &dataset,
+                cfg.partition(),
+                cfg.memory.into(),
+                &fleet_profile,
+                cfg.seed,
+                cap,
+            )
+        } else {
+            ClientPool::build(
+                cfg.num_clients,
+                cfg.total_samples,
+                &dataset,
+                cfg.partition(),
+                cfg.memory.into(),
+                &fleet_profile,
+                cfg.seed,
+            )
+        };
         let store = ParamStore::init(&model.params, cfg.seed ^ 0x1417);
         let fleet_rng = Rng::new(cfg.seed ^ 0xf1ee_7c10);
         Ok(ServerCtx {
@@ -242,7 +259,7 @@ impl<'rt> ServerCtx<'rt> {
         bytes_up: u64,
         bytes_down: u64,
     ) -> ClientWork {
-        let c = &self.pool.clients[cid];
+        let c = self.pool.client(cid);
         ClientWork {
             id: cid,
             ready_s: c.profile.trace.next_online(self.sim_time_s),

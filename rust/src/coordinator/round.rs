@@ -157,7 +157,7 @@ impl<'rt> ServerCtx<'rt> {
             .trainers
             .iter()
             .map(|&cid| {
-                let stale = self.pool.clients[cid].prefix_version != self.prefix_version;
+                let stale = self.pool.client(cid).prefix_version != self.prefix_version;
                 let down = tr_bytes + if stale { fr_bytes } else { 0 };
                 self.client_work(cid, &mem, tr_bytes, down)
             })
@@ -249,7 +249,7 @@ impl<'rt> ServerCtx<'rt> {
         let batch = self.rt.manifest.train_batch;
         let weight = {
             let data = &self.dataset;
-            let client = &mut self.pool.clients[cid];
+            let client = self.pool.client_mut(cid);
             client.shard.fill_batches(data, scan, batch, &mut self.xs_buf, &mut self.ys_buf);
             client.shard.num_samples() as f64
         };
@@ -340,7 +340,10 @@ impl<'rt> ServerCtx<'rt> {
             return;
         }
         let mut payload = tr_bytes;
-        if with_prefix && self.pool.clients[cid].prefix_version != self.prefix_version {
+        let prefix_version = self.prefix_version;
+        // client_mut: materializes on a lazy fleet (the client may have
+        // been evicted since dispatch).
+        if with_prefix && self.pool.client_mut(cid).prefix_version != prefix_version {
             payload += fr_bytes;
         }
         outcome.bytes_down += (frac * payload as f64) as u64;
@@ -361,10 +364,11 @@ impl<'rt> ServerCtx<'rt> {
             outcome.bytes_up += tr_bytes;
         }
         outcome.bytes_down += tr_bytes;
-        let client = &mut self.pool.clients[cid];
-        if client.prefix_version != self.prefix_version {
+        let prefix_version = self.prefix_version;
+        let client = self.pool.client_mut(cid);
+        if client.prefix_version != prefix_version {
             outcome.bytes_down += fr_bytes;
-            client.prefix_version = self.prefix_version;
+            client.prefix_version = prefix_version;
         }
     }
 

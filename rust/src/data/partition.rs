@@ -46,6 +46,24 @@ impl ClientShard {
         self.labels.len()
     }
 
+    /// Assemble a shard from its materialized parts (lazy-pool path;
+    /// cursor starts at 0 exactly like [`partition`]'s output).
+    pub(crate) fn from_parts(client_id: usize, labels: Vec<u16>, indices: Vec<u64>) -> Self {
+        ClientShard { client_id, labels, indices, cursor: 0 }
+    }
+
+    /// Batch-cycling cursor position (lazy-pool eviction snapshot).
+    pub(crate) fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Restore a cursor position captured by [`Self::cursor`] (lazy-pool
+    /// re-materialization: the rebuilt shard resumes its batch cycle
+    /// exactly where the evicted one left off).
+    pub(crate) fn set_cursor(&mut self, cursor: usize) {
+        self.cursor = cursor;
+    }
+
     /// Fill a stacked (steps × batch) training chunk, cycling through the
     /// shard (clients train multiple local epochs over few samples, as in
     /// cross-device FL). Advances the shard cursor; the epoch RNG reshuffles
@@ -115,6 +133,153 @@ pub fn partition(
     shards
 }
 
+/// Lazy twin of [`partition`]: shard *bounds* (sample count, global index
+/// range, label-stream rng position) for any client in O(1)-ish work, and
+/// full shard materialization on demand — without ever holding the whole
+/// fleet's shards in memory. Bit-identical to the eager build
+/// (property-tested): the plan replays exactly the draws [`partition`]
+/// would make, exploiting two SplitMix64 facts:
+///
+/// 1. the count phase consumes exactly one draw per client, so client
+///    `i`'s raw count is reachable by a constant-stride state jump
+///    (`Rng::skip`);
+/// 2. the label phase is sequential and (under Dirichlet) data-dependent,
+///    so the plan stores sparse rng-state checkpoints every
+///    [`Self::CHUNK`] clients and walks at most one chunk to materialize
+///    a shard. IID walking is pure arithmetic (one draw per label);
+///    Dirichlet walking replays the per-client simplex draws.
+///
+/// Build cost is one O(fleet) streaming pass (no per-client allocation);
+/// memory is O(fleet / CHUNK) checkpoint words.
+#[derive(Debug, Clone)]
+pub(crate) struct ShardPlan {
+    scheme: Partition,
+    num_clients: usize,
+    total_samples: usize,
+    num_classes: usize,
+    /// Count-phase rng state before client 0's draw.
+    counts_state0: u64,
+    /// Sum of the raw (pre-renormalization) counts.
+    sum_raw: usize,
+    /// Sum of the renormalized per-client counts (= fleet total samples).
+    total_renorm: usize,
+    /// Label-phase (rng state, next global sample index) every
+    /// [`Self::CHUNK`] clients.
+    checkpoints: Vec<(u64, u64)>,
+}
+
+impl ShardPlan {
+    /// Checkpoint stride: materializing a shard walks at most this many
+    /// predecessors from the nearest checkpoint.
+    const CHUNK: usize = 1024;
+
+    /// Stream the count phase once (and, under Dirichlet, the label
+    /// phase) to place checkpoints. Mirrors [`partition`]'s rng schedule
+    /// draw for draw.
+    pub(crate) fn build(
+        num_classes: usize,
+        num_clients: usize,
+        total_samples: usize,
+        scheme: Partition,
+        seed: u64,
+    ) -> Self {
+        let counts_state0 = Rng::new(seed ^ 0x9a7c_55aa_1234_5678).state();
+        // Pass 1: raw counts (one uniform draw each) → renormalization sum.
+        let mut rng = Rng::from_state(counts_state0);
+        let base = total_samples / num_clients;
+        let mut sum_raw = 0usize;
+        for _ in 0..num_clients {
+            sum_raw += ((base as f64 * rng.uniform(0.5, 1.5)) as usize).max(8);
+        }
+        let mut plan = ShardPlan {
+            scheme,
+            num_clients,
+            total_samples,
+            num_classes,
+            counts_state0,
+            sum_raw,
+            total_renorm: 0,
+            checkpoints: Vec::with_capacity(num_clients / Self::CHUNK + 1),
+        };
+        // Pass 2: walk the label phase placing (state, next_index)
+        // checkpoints. `rng` sits exactly at the post-counts state.
+        let mut next_index = 0u64;
+        for i in 0..num_clients {
+            if i % Self::CHUNK == 0 {
+                plan.checkpoints.push((rng.state(), next_index));
+            }
+            let n = plan.count(i);
+            plan.skip_client(&mut rng, n);
+            next_index += n as u64;
+        }
+        plan.total_renorm = next_index as usize;
+        plan
+    }
+
+    /// Number of clients the plan spans.
+    pub(crate) fn num_clients(&self) -> usize {
+        self.num_clients
+    }
+
+    /// Fleet-total samples (sum of every client's renormalized count).
+    pub(crate) fn total_samples(&self) -> usize {
+        self.total_renorm
+    }
+
+    /// Client `i`'s shard size — the renormalized count, via an O(1)
+    /// state jump to its count-phase draw.
+    pub(crate) fn count(&self, i: usize) -> usize {
+        debug_assert!(i < self.num_clients);
+        let mut r = Rng::from_state(self.counts_state0);
+        r.skip(i as u64);
+        let base = self.total_samples / self.num_clients;
+        let raw = ((base as f64 * r.uniform(0.5, 1.5)) as usize).max(8);
+        (raw * self.total_samples / self.sum_raw).max(8)
+    }
+
+    /// Advance `rng` past one client's label-phase draws without
+    /// materializing anything. IID clients build no simplex and draw one
+    /// categorical per label (pure stride skip); Dirichlet clients must
+    /// replay the data-dependent simplex draws for real.
+    fn skip_client(&self, rng: &mut Rng, n: usize) {
+        if let Partition::Dirichlet { alpha } = self.scheme {
+            let _ = rng.dirichlet(alpha, self.num_classes);
+        }
+        // Every categorical label costs exactly one draw, whatever the
+        // class it lands on.
+        rng.skip(n as u64);
+    }
+
+    /// Materialize client `i`'s shard, bit-identical to `partition(..)[i]`:
+    /// jump to the nearest checkpoint, walk the (at most CHUNK − 1)
+    /// intervening clients, then replay client `i`'s own draws for real.
+    pub(crate) fn shard(&self, i: usize) -> ClientShard {
+        debug_assert!(i < self.num_clients);
+        let (state, next) = self.checkpoints[i / Self::CHUNK];
+        let mut rng = Rng::from_state(state);
+        let mut next_index = next;
+        for j in (i / Self::CHUNK) * Self::CHUNK..i {
+            let n = self.count(j);
+            self.skip_client(&mut rng, n);
+            next_index += n as u64;
+        }
+        let n = self.count(i);
+        let k = self.num_classes;
+        let probs: Vec<f64> = match self.scheme {
+            Partition::Iid => vec![1.0 / k as f64; k],
+            Partition::Dirichlet { alpha } => rng.dirichlet(alpha, k),
+        };
+        let mut labels = Vec::with_capacity(n);
+        let mut indices = Vec::with_capacity(n);
+        for _ in 0..n {
+            labels.push(rng.categorical(&probs) as u16);
+            indices.push(next_index);
+            next_index += 1;
+        }
+        ClientShard::from_parts(i, labels, indices)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +347,47 @@ mod tests {
         let b = partition(&dataset(), 10, 1_000, Partition::Dirichlet { alpha: 1.0 }, 5);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.labels, y.labels);
+        }
+    }
+
+    #[test]
+    fn shard_plan_matches_eager_partition_bit_for_bit() {
+        // The lazy plan must replay partition()'s exact rng schedule:
+        // same counts, labels, and global indices for every client, under
+        // both schemes, including across the CHUNK checkpoint boundary
+        // (exercised here by walking clients out of order).
+        for scheme in [Partition::Iid, Partition::Dirichlet { alpha: 0.7 }] {
+            for seed in [1u64, 9, 42] {
+                let data = SyntheticDataset::new(10, seed);
+                let eager = partition(&data, 57, 5_700, scheme, seed);
+                let plan = ShardPlan::build(10, 57, 5_700, scheme, seed);
+                assert_eq!(plan.num_clients(), 57);
+                let eager_total: usize = eager.iter().map(|s| s.num_samples()).sum();
+                assert_eq!(plan.total_samples(), eager_total, "{scheme:?} seed {seed}");
+                // Out-of-order materialization (each shard is independent).
+                for &i in &[56usize, 0, 31, 7, 31] {
+                    let lazy = plan.shard(i);
+                    assert_eq!(lazy.client_id, eager[i].client_id);
+                    assert_eq!(lazy.labels, eager[i].labels, "{scheme:?} seed {seed} client {i}");
+                    assert_eq!(lazy.indices, eager[i].indices, "{scheme:?} seed {seed} client {i}");
+                    assert_eq!(plan.count(i), eager[i].num_samples());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_checkpoints_span_large_fleets() {
+        // A fleet larger than one checkpoint chunk: clients on both sides
+        // of the boundary must still match the eager build.
+        let data = SyntheticDataset::new(10, 3);
+        let n = 2_500; // spans three CHUNK=1024 checkpoints
+        let eager = partition(&data, n, n * 10, Partition::Iid, 3);
+        let plan = ShardPlan::build(10, n, n * 10, Partition::Iid, 3);
+        for &i in &[0usize, 1_023, 1_024, 2_047, 2_048, 2_499] {
+            let lazy = plan.shard(i);
+            assert_eq!(lazy.labels, eager[i].labels, "client {i}");
+            assert_eq!(lazy.indices, eager[i].indices, "client {i}");
         }
     }
 

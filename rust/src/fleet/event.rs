@@ -101,6 +101,16 @@ impl EventQueue {
         self.heap.pop().map(|Reverse(e)| e)
     }
 
+    /// Reset to the pristine state — empty heap, sequence counter back at
+    /// zero — **keeping the allocated capacity**. The fleet engine's
+    /// per-round scratch reuses one queue across rounds this way; the
+    /// seq reset matters because golden traces pin seq numbers, which
+    /// must restart at 0 each round exactly like a fresh queue's.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.next_seq = 0;
+    }
+
     /// Number of events still scheduled.
     pub fn len(&self) -> usize {
         self.heap.len()
@@ -172,6 +182,21 @@ mod tests {
         assert_eq!(q.pop().unwrap().time_s, 6.0);
         assert_eq!(q.pop().unwrap().time_s, 10.0);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clear_resets_seq_and_keeps_ordering_semantics() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::Dispatch { client: 0 });
+        q.push(2.0, EventKind::Dispatch { client: 1 });
+        assert_eq!(q.pop().unwrap().seq, 0);
+        q.clear();
+        assert!(q.is_empty());
+        // A cleared queue numbers events exactly like a fresh one.
+        q.push(5.0, EventKind::Deadline);
+        let e = q.pop().unwrap();
+        assert_eq!(e.seq, 0, "seq must restart at 0 after clear");
+        assert_eq!(e.time_s, 5.0);
     }
 
     #[test]

@@ -70,7 +70,6 @@ pub use trace::{AvailabilityTrace, OfflineSpan};
 
 use crate::rng::Rng;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
 
 /// How a train round decides when to aggregate.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -353,7 +352,10 @@ impl RoundPlan {
 /// Per-round churn bookkeeping shared by the sync-family and async event
 /// loops: staged abort decisions (resolved when the matching Interrupt
 /// event pops, so the trace stays in execution order), checkpoint
-/// fractions, and counters.
+/// fractions, and counters. The lookup tables are plain cohort-sized
+/// vectors (never iterated for output, scanned on lookup), so clearing
+/// them between rounds reuses their allocations — part of the
+/// [`RoundScratch`] no-allocation round contract.
 #[derive(Debug, Default)]
 struct ChurnState {
     /// Client → (interrupt-time bits, wasted compute seconds, completed
@@ -361,17 +363,16 @@ struct ChurnState {
     /// is lost; applied when the Interrupt event with exactly that
     /// timestamp pops (earlier Interrupts for the same client are pause
     /// witnesses). The fraction is below 1.0 only for a cut that landed
-    /// mid-download.
-    cut: HashMap<usize, (u64, f64, f64)>,
+    /// mid-download. At most one entry per client.
+    cut: Vec<(usize, (u64, f64, f64))>,
     /// Client → (interrupt-time bits, partial-epoch seconds): the
     /// checkpoint remainder past the last epoch boundary, charged when
     /// that Interrupt pops — symmetric with `cut`, so a round that ends
     /// before the interruption (deadline cut, full buffer) reports the
     /// same zero waste under `checkpoint` as under `abort`.
-    partial_waste: HashMap<usize, (u64, f64)>,
-    /// Client → checkpointed fraction of the local pass, in (0, 1).
-    fractions: HashMap<usize, f64>,
-    /// (client, fraction) in dispatch-processing order (plan output).
+    partial_waste: Vec<(usize, (u64, f64))>,
+    /// (client, fraction) in dispatch-processing order (plan output; also
+    /// the upload path's has-a-partial lookup).
     partials: Vec<(usize, f64)>,
     aborted: Vec<usize>,
     /// (client, completed download fraction) per abort, in interruption
@@ -383,28 +384,108 @@ struct ChurnState {
 }
 
 impl ChurnState {
+    /// Reset for a new round, keeping every buffer's allocation.
+    fn clear(&mut self) {
+        self.cut.clear();
+        self.partial_waste.clear();
+        self.partials.clear();
+        self.aborted.clear();
+        self.down_fracs.clear();
+        self.wasted_s = 0.0;
+        self.interrupts = 0;
+        self.resumes = 0;
+    }
+
+    /// Stage a fatal cut for `client` at interrupt instant `off`.
+    fn stage_cut(&mut self, client: usize, off: f64, wasted: f64, down_frac: f64) {
+        self.cut.push((client, (off.to_bits(), wasted, down_frac)));
+    }
+
+    /// Stage the partial-epoch waste charged at `client`'s checkpoint
+    /// Interrupt.
+    fn stage_partial_waste(&mut self, client: usize, off: f64, wasted: f64) {
+        self.partial_waste.push((client, (off.to_bits(), wasted)));
+    }
+
+    /// Record a checkpointed partial (dispatch-processing order).
+    fn record_partial(&mut self, client: usize, fraction: f64) {
+        self.partials.push((client, fraction));
+    }
+
+    /// Whether `client` checkpointed a partial this round.
+    fn has_partial(&self, client: usize) -> bool {
+        self.partials.iter().any(|&(c, _)| c == client)
+    }
+
     /// Process one popped Interrupt event: count it, and if it is the
     /// staged cut for this client, apply the abort. Returns true when the
     /// client's round work just died.
     fn on_interrupt(&mut self, client: usize, time_s: f64) -> bool {
         self.interrupts += 1;
-        if let Some(&(bits, wasted, down_frac)) = self.cut.get(&client) {
-            if bits == time_s.to_bits() {
-                self.cut.remove(&client);
-                self.aborted.push(client);
-                self.down_fracs.push((client, down_frac));
-                self.wasted_s += wasted;
-                return true;
-            }
+        if let Some(i) = self.cut.iter().position(|&(c, (bits, _, _))| {
+            c == client && bits == time_s.to_bits()
+        }) {
+            let (_, (_, wasted, down_frac)) = self.cut.swap_remove(i);
+            self.aborted.push(client);
+            self.down_fracs.push((client, down_frac));
+            self.wasted_s += wasted;
+            return true;
         }
-        if let Some(&(bits, wasted)) = self.partial_waste.get(&client) {
-            if bits == time_s.to_bits() {
-                self.partial_waste.remove(&client);
-                self.wasted_s += wasted;
-            }
+        if let Some(i) = self
+            .partial_waste
+            .iter()
+            .position(|&(c, (bits, _))| c == client && bits == time_s.to_bits())
+        {
+            let (_, (_, wasted)) = self.partial_waste.swap_remove(i);
+            self.wasted_s += wasted;
         }
         false
     }
+}
+
+/// Reusable per-round working state owned by [`FleetEngine`]: the event
+/// queue, the cohort's sorted client→work index, the in-flight origin
+/// index, and the churn lookup tables. Cleared — not reallocated — at the
+/// top of every round, so steady-state round simulation performs no
+/// fleet- or round-proportional allocations beyond the plan's own
+/// cohort-sized output vectors. Replaces the per-round
+/// `HashMap<usize, &ClientWork>` / `HashMap<usize, usize>` builds, which
+/// also makes every lookup structure deterministic-iteration by
+/// construction.
+#[derive(Debug, Default)]
+struct RoundScratch {
+    queue: EventQueue,
+    /// `(client id, index into the round's works slice)`, sorted by id.
+    works_by_id: Vec<(usize, usize)>,
+    /// `(client id, dispatch round)` per in-flight upload, sorted by id.
+    origin: Vec<(usize, usize)>,
+    churn: ChurnState,
+}
+
+impl RoundScratch {
+    /// Arm the scratch for a new round over `works`.
+    fn begin(&mut self, works: &[ClientWork]) {
+        self.queue.clear();
+        self.churn.clear();
+        self.origin.clear();
+        self.works_by_id.clear();
+        self.works_by_id.extend(works.iter().enumerate().map(|(i, w)| (w.id, i)));
+        self.works_by_id.sort_unstable_by_key(|&(id, _)| id);
+    }
+}
+
+/// Look up `client`'s work entry through the sorted index (the dense
+/// replacement for the old per-round `by_id` HashMap; panics on an
+/// unknown client exactly like the map indexing did).
+fn work_of<'a>(
+    works: &'a [ClientWork],
+    works_by_id: &[(usize, usize)],
+    client: usize,
+) -> &'a ClientWork {
+    let i = works_by_id
+        .binary_search_by_key(&client, |&(id, _)| id)
+        .expect("event for a client outside the round's cohort");
+    &works[works_by_id[i].1]
 }
 
 /// Emit the Interrupt/Resume witness pairs for a pausable span's offline
@@ -447,7 +528,7 @@ fn schedule_compute(
                 // artifact; comm accounting charges that fraction.
                 let down_frac =
                     if w.down_s <= 0.0 { 1.0 } else { ((off - t) / w.down_s).clamp(0.0, 1.0) };
-                st.cut.insert(w.id, (off.to_bits(), trained, down_frac));
+                st.stage_cut(w.id, off, trained, down_frac);
             }
         }
         ChurnPolicy::Resume => {
@@ -481,13 +562,12 @@ fn schedule_compute(
                     // Not even one epoch checkpointed: the work is lost.
                     // The download paused/resumed to completion first, so
                     // it is charged in full (exactly once).
-                    st.cut.insert(w.id, (off.to_bits(), trained, 1.0));
+                    st.stage_cut(w.id, off, trained, 1.0);
                 } else {
                     let fraction = done / epochs as f64;
-                    st.fractions.insert(w.id, fraction);
-                    st.partials.push((w.id, fraction));
+                    st.record_partial(w.id, fraction);
                     let remainder = trained - fraction * w.train_s;
-                    st.partial_waste.insert(w.id, (off.to_bits(), remainder));
+                    st.stage_partial_waste(w.id, off, remainder);
                     q.push(off, EventKind::TrainDone { client: w.id });
                 }
             }
@@ -520,12 +600,12 @@ fn schedule_upload(
                 // The finished local pass dies with the upload; its
                 // download completed long before, so full charge.
                 q.push(off, EventKind::Interrupt { client: w.id });
-                st.cut.insert(w.id, (off.to_bits(), w.train_s, 1.0));
+                st.stage_cut(w.id, off, w.train_s, 1.0);
             }
         }
         ChurnPolicy::Resume | ChurnPolicy::Checkpoint { .. } => {
             let mut ts = t;
-            if st.fractions.contains_key(&w.id) && !w.trace.is_online(ts) {
+            if st.has_partial(w.id) && !w.trace.is_online(ts) {
                 // Partial checkpoint: its Interrupt fired at TrainDone;
                 // pair it with the Resume that starts the upload.
                 let on = w.trace.next_online(ts);
@@ -540,12 +620,16 @@ fn schedule_upload(
 }
 
 /// Round-spanning simulator state. Stateless policies (`sync`,
-/// `deadline`, `over-select`) pass straight through to
-/// [`simulate_round`]; the `async` policy keeps its in-flight uploads
-/// here between rounds.
+/// `deadline`, `over-select`) run through the same reusable round
+/// scratch (event queue, sorted lookup indices, churn tables); the
+/// `async` policy additionally keeps its in-flight uploads here between
+/// rounds. One engine can (and should) serve every
+/// round of a run — and, via [`Self::reset`], every configuration of a
+/// sweep — so the per-round working set is cleared, not reallocated.
 #[derive(Debug, Default)]
 pub struct FleetEngine {
     inflight: Vec<InFlightUpload>,
+    scratch: RoundScratch,
 }
 
 impl FleetEngine {
@@ -557,6 +641,18 @@ impl FleetEngine {
     /// Uploads currently crossing a round boundary (arrival order).
     pub fn inflight(&self) -> &[InFlightUpload] {
         &self.inflight
+    }
+
+    /// Return the engine to its fresh-construction state — empty
+    /// in-flight queue, round counter-free — while keeping the scratch
+    /// allocations warm. Sweeps (e.g. `examples/churn_sweep.rs`) reuse
+    /// one engine across configurations this way instead of rebuilding;
+    /// a reset engine's subsequent rounds are bit-identical to a brand
+    /// new engine's.
+    pub fn reset(&mut self) {
+        self.inflight.clear();
+        // The scratch is re-armed at the top of every round; nothing else
+        // carries state across simulate_round calls.
     }
 
     /// Run one round's cohort under `policy` with mid-round churn handled
@@ -584,7 +680,7 @@ impl FleetEngine {
                     self.inflight.is_empty(),
                     "in-flight uploads exist but the policy is not async"
                 );
-                simulate_round(start_s, works, policy, keep, churn, rng)
+                simulate_sync_family(&mut self.scratch, start_s, works, policy, keep, churn, rng)
             }
         }
     }
@@ -605,20 +701,31 @@ impl FleetEngine {
         churn: ChurnPolicy,
         rng: &mut Rng,
     ) -> RoundPlan {
+        let FleetEngine { inflight, scratch } = self;
+        scratch.begin(works);
+        let RoundScratch { queue: q, works_by_id, origin, churn: st } = scratch;
+
         // A fresh dispatch supersedes the same client's stale in-flight
         // upload (the device abandons the old job for the new one). The
         // coordinator excludes in-flight clients from sampling, so this
         // is a backstop for direct engine users.
-        self.inflight.retain(|u| !works.iter().any(|w| w.id == u.client));
+        inflight
+            .retain(|u| works_by_id.binary_search_by_key(&u.client, |&(id, _)| id).is_err());
 
-        let by_id: HashMap<usize, &ClientWork> = works.iter().map(|w| (w.id, w)).collect();
-        let origin: HashMap<usize, usize> =
-            self.inflight.iter().map(|u| (u.client, u.dispatch_round)).collect();
+        // In-flight dispatch-round index (sorted): the dense replacement
+        // for the old per-round `origin` HashMap.
+        origin.extend(inflight.iter().map(|u| (u.client, u.dispatch_round)));
+        origin.sort_unstable_by_key(|&(id, _)| id);
+        let origin_of = |origin: &[(usize, usize)], client: usize| -> usize {
+            let i = origin
+                .binary_search_by_key(&client, |&(id, _)| id)
+                .expect("late upload without an in-flight origin");
+            origin[i].1
+        };
 
-        let mut q = EventQueue::new();
         // In-flight arrivals first (stable stored order), then fresh
         // dispatches — deterministic seq tie-breaking either way.
-        for u in &self.inflight {
+        for u in inflight.iter() {
             q.push(u.arrive_s.max(start_s), EventKind::LateUpload { client: u.client });
         }
         for w in works {
@@ -630,7 +737,6 @@ impl FleetEngine {
         }
 
         let mut clock = VirtualClock::new(start_s);
-        let mut st = ChurnState::default();
         let mut events = Vec::new();
         let mut fresh: Vec<(f64, usize)> = Vec::new();
         let mut late: Vec<(f64, usize)> = Vec::new();
@@ -644,15 +750,15 @@ impl FleetEngine {
             events.push(ev);
             match ev.kind {
                 EventKind::Dispatch { client } => {
-                    let w = by_id[&client];
+                    let w = work_of(works, works_by_id, client);
                     if rng.f64() < w.dropout_p {
                         dropouts.push(client);
                     } else {
-                        schedule_compute(&mut q, &mut st, w, ev.time_s, churn);
+                        schedule_compute(q, st, w, ev.time_s, churn);
                     }
                 }
                 EventKind::TrainDone { client } => {
-                    schedule_upload(&mut q, &mut st, by_id[&client], ev.time_s, churn);
+                    schedule_upload(q, st, work_of(works, works_by_id, client), ev.time_s, churn);
                 }
                 EventKind::UploadDone { client } => {
                     fresh.push((ev.time_s, client));
@@ -691,7 +797,7 @@ impl FleetEngine {
         // In-flight arrivals keep queue priority over this round's
         // deferrals in the next round's event order: re-queue them first.
         for (t, c) in late.iter().copied().filter(|(t, _)| *t > close_s) {
-            let dispatch_round = origin[&c];
+            let dispatch_round = origin_of(origin, c);
             next_inflight.push(InFlightUpload { client: c, arrive_s: t, dispatch_round });
         }
         for (t, c) in fresh {
@@ -707,9 +813,13 @@ impl FleetEngine {
             .iter()
             .copied()
             .filter(|(t, _)| *t <= close_s)
-            .map(|(t, c)| InFlightUpload { client: c, arrive_s: t, dispatch_round: origin[&c] })
+            .map(|(t, c)| InFlightUpload {
+                client: c,
+                arrive_s: t,
+                dispatch_round: origin_of(origin, c),
+            })
             .collect();
-        self.inflight = next_inflight;
+        *inflight = next_inflight;
 
         // Unreachable clients are the only stragglers under async — every
         // dispatched client either drops out, aborts, or (eventually)
@@ -723,9 +833,9 @@ impl FleetEngine {
             dropouts,
             late_arrivals,
             deferred,
-            aborted: st.aborted,
-            download_frac: st.down_fracs,
-            partials: st.partials,
+            aborted: std::mem::take(&mut st.aborted),
+            download_frac: std::mem::take(&mut st.down_fracs),
+            partials: std::mem::take(&mut st.partials),
             interrupts: st.interrupts,
             resumes: st.resumes,
             wasted_compute_s: st.wasted_s,
@@ -742,7 +852,26 @@ impl FleetEngine {
 /// sync/deadline; `per_round` for over-select). Dropout draws happen in
 /// event order from `rng`, so the whole plan is a pure function of its
 /// arguments.
+///
+/// This convenience entry point allocates a one-shot scratch; round loops
+/// should go through [`FleetEngine::simulate_round`], which reuses one
+/// scratch across rounds (bit-identical results either way).
 pub fn simulate_round(
+    start_s: f64,
+    works: &[ClientWork],
+    policy: RoundPolicy,
+    keep: usize,
+    churn: ChurnPolicy,
+    rng: &mut Rng,
+) -> RoundPlan {
+    let mut scratch = RoundScratch::default();
+    simulate_sync_family(&mut scratch, start_s, works, policy, keep, churn, rng)
+}
+
+/// The sync-family (`sync`/`deadline`/`over-select`) event loop over a
+/// caller-owned [`RoundScratch`].
+fn simulate_sync_family(
+    scratch: &mut RoundScratch,
     start_s: f64,
     works: &[ClientWork],
     policy: RoundPolicy,
@@ -759,8 +888,8 @@ pub fn simulate_round(
     if works.is_empty() {
         return RoundPlan::empty(start_s);
     }
-    let by_id: HashMap<usize, &ClientWork> = works.iter().map(|w| (w.id, w)).collect();
-    let mut q = EventQueue::new();
+    scratch.begin(works);
+    let RoundScratch { queue: q, works_by_id, churn: st, .. } = scratch;
     // Clients still owing an upload; the loop may stop early once none remain.
     let mut outstanding = 0usize;
     for w in works {
@@ -779,7 +908,6 @@ pub fn simulate_round(
     }
 
     let mut clock = VirtualClock::new(start_s);
-    let mut st = ChurnState::default();
     let mut events = Vec::new();
     let mut completers = Vec::new();
     let mut dropouts = Vec::new();
@@ -790,17 +918,17 @@ pub fn simulate_round(
         match ev.kind {
             EventKind::Dispatch { client } => {
                 events.push(ev);
-                let w = by_id[&client];
+                let w = work_of(works, works_by_id, client);
                 if rng.f64() < w.dropout_p {
                     dropouts.push(client);
                     outstanding -= 1;
                 } else {
-                    schedule_compute(&mut q, &mut st, w, ev.time_s, churn);
+                    schedule_compute(q, st, w, ev.time_s, churn);
                 }
             }
             EventKind::TrainDone { client } => {
                 events.push(ev);
-                schedule_upload(&mut q, &mut st, by_id[&client], ev.time_s, churn);
+                schedule_upload(q, st, work_of(works, works_by_id, client), ev.time_s, churn);
             }
             EventKind::UploadDone { client } => {
                 events.push(ev);
@@ -849,9 +977,9 @@ pub fn simulate_round(
         dropouts,
         late_arrivals: Vec::new(),
         deferred: Vec::new(),
-        aborted: st.aborted,
-        download_frac: st.down_fracs,
-        partials: st.partials,
+        aborted: std::mem::take(&mut st.aborted),
+        download_frac: std::mem::take(&mut st.down_fracs),
+        partials: std::mem::take(&mut st.partials),
         interrupts: st.interrupts,
         resumes: st.resumes,
         wasted_compute_s: st.wasted_s,
@@ -1230,12 +1358,13 @@ mod tests {
         let bytes = 44_000_000u64;
         (0..10)
             .map(|cid| {
-                let p = &pool.clients[cid].profile;
+                let c = pool.client(cid);
+                let p = &c.profile;
                 ClientWork {
                     id: cid,
                     ready_s: p.trace.next_online(0.0),
                     down_s: p.down_time_s(bytes),
-                    train_s: p.train_time_s(pool.clients[cid].shard.num_samples(), &mem),
+                    train_s: p.train_time_s(c.shard.num_samples(), &mem),
                     up_s: p.up_time_s(bytes),
                     dropout_p: p.dropout_p,
                     trace: p.trace,
@@ -1328,6 +1457,37 @@ mod tests {
             start = r.end_s;
         }
         assert_eq!(merged, r0.deferred.len(), "every straggler upload merges eventually");
+    }
+
+    #[test]
+    fn reset_engine_matches_fresh_engine_bit_for_bit() {
+        // One engine reused across sweep configurations (reset between)
+        // must reproduce a fresh engine exactly — in-flight state cleared,
+        // scratch reuse invisible (seq numbering restarts per round).
+        let works = pool_works(9);
+        let policies = [
+            RoundPolicy::Sync,
+            RoundPolicy::Async { buffer_k: 2, max_staleness: 8 },
+            RoundPolicy::Deadline { secs: 120.0 },
+        ];
+        let mut reused = FleetEngine::new();
+        for policy in policies {
+            let mut fresh_engine = FleetEngine::new();
+            reused.reset();
+            for round in 0..3 {
+                let mut r1 = Rng::new(7 + round as u64);
+                let mut r2 = Rng::new(7 + round as u64);
+                let a = reused.simulate_round(
+                    round, 0.0, &works, policy, usize::MAX, ChurnPolicy::None, &mut r1,
+                );
+                let b = fresh_engine.simulate_round(
+                    round, 0.0, &works, policy, usize::MAX, ChurnPolicy::None, &mut r2,
+                );
+                assert_eq!(a, b, "{policy:?} round {round}");
+            }
+        }
+        reused.reset();
+        assert!(reused.inflight().is_empty());
     }
 
     // --- mid-round churn -------------------------------------------------

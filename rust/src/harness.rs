@@ -18,7 +18,8 @@ use std::path::PathBuf;
 /// `--buffer-k`, `--staleness-alpha`, `--max-staleness`,
 /// `--stale-projection`, `--projection-decay`, `--fleet-profile`,
 /// `--dropout`, `--churn-policy`, `--churn-epochs`, `--trace-period`,
-/// `--trace-duty`). See `docs/CLI.md` for the full flag reference.
+/// `--trace-duty`, `--lazy-pool`). See `docs/CLI.md` for the full flag
+/// reference.
 pub struct ExpOpts {
     /// Budget profile: `fast` (default), `smoke`, or `paper`.
     pub profile: String,
@@ -58,6 +59,8 @@ pub struct ExpOpts {
     pub trace_period_s: Option<f64>,
     /// Availability-trace duty override (online fraction).
     pub trace_duty: Option<f64>,
+    /// Lazy on-demand client materialization (O(cohort) memory/round).
+    pub lazy_pool: bool,
 }
 
 impl ExpOpts {
@@ -89,6 +92,7 @@ impl ExpOpts {
             churn_epochs: args.parse_opt("churn-epochs")?,
             trace_period_s: args.parse_opt("trace-period")?,
             trace_duty: args.parse_opt("trace-duty")?,
+            lazy_pool: args.flag("lazy-pool"),
         })
     }
 
@@ -142,6 +146,9 @@ impl ExpOpts {
         }
         cfg.fleet.trace_period_s = self.trace_period_s.or(cfg.fleet.trace_period_s);
         cfg.fleet.trace_duty = self.trace_duty.or(cfg.fleet.trace_duty);
+        if self.lazy_pool {
+            cfg.fleet.lazy_pool = true;
+        }
         cfg
     }
 }
@@ -253,6 +260,7 @@ mod tests {
             churn_epochs: Some(3),
             trace_period_s: Some(240.0),
             trace_duty: None,
+            lazy_pool: true,
         };
         let c = o.cfg("m");
         assert_eq!(c.seed, 7);
@@ -270,5 +278,6 @@ mod tests {
         assert_eq!(c.fleet.churn_epochs, 3);
         assert_eq!(c.fleet.trace_period_s, Some(240.0));
         assert_eq!(c.fleet.trace_duty, None, "unset override keeps the profile's duty");
+        assert!(c.fleet.lazy_pool);
     }
 }

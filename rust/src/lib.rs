@@ -32,6 +32,10 @@
 //! * **`docs/SIMULATION.md`** — the determinism contract: virtual
 //!   clock, rng stream discipline, aggregation order, the degeneracy
 //!   ladder, and the golden-trace workflow (`UPDATE_GOLDEN=1`).
+//! * **`docs/PERFORMANCE.md`** — the O(cohort) round hot path: lazy
+//!   client materialization (`--lazy-pool`), the engine's reusable
+//!   round scratch, the contiguous aggregation arena, and the
+//!   `make bench-json` → `BENCH_fleet.json` perf trajectory.
 //!
 //! `DESIGN.md` holds the full system inventory and experiment index;
 //! `ROADMAP.md` the north-star and open items.

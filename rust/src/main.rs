@@ -57,6 +57,9 @@ FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
                       [default: 4]
   --trace-period <s>  Availability trace cycle length override (virtual s)
   --trace-duty <f64>  Availability trace online fraction override
+  --lazy-pool         Materialize clients on demand (O(cohort) memory per
+                      round; bit-identical to the eager build) — for
+                      very large --clients fleets
 ";
 
 fn make_cfg(args: &Args) -> Result<RunConfig> {
@@ -108,6 +111,9 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     }
     cfg.fleet.trace_period_s = args.parse_opt("trace-period")?.or(cfg.fleet.trace_period_s);
     cfg.fleet.trace_duty = args.parse_opt("trace-duty")?.or(cfg.fleet.trace_duty);
+    if args.flag("lazy-pool") {
+        cfg.fleet.lazy_pool = true;
+    }
     // Fail fast on bad fleet spellings (before artifacts load).
     cfg.round_policy()?;
     cfg.churn_policy()?;

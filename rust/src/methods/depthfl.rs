@@ -51,7 +51,7 @@ fn run_client(
     let param_lits = ctx.rt.param_literals(&art.meta, &ctx.store)?;
     let weight = {
         let data = &ctx.dataset;
-        let client = &mut ctx.pool.clients[cid];
+        let client = ctx.pool.client_mut(cid);
         client.shard.fill_batches(data, scan, batch, &mut ctx.xs_buf, &mut ctx.ys_buf);
         client.shard.num_samples() as f64
     };

@@ -6,6 +6,13 @@
 //! so whole FL runs are bit-reproducible from a single config seed. No
 //! wall-clock, no global state, no external RNG crates.
 
+/// The SplitMix64 state stride: every [`Rng::next_u64`] advances the
+/// internal state by exactly this constant, so the state after `n` draws
+/// is `state0 + n * GAMMA` (wrapping). The lazy client pool exploits this
+/// to jump an rng stream to an arbitrary client's position in O(1)
+/// instead of replaying every preceding draw (see `clients::LazyFleet`).
+pub(crate) const GAMMA: u64 = 0x9e37_79b9_7f4a_7c15;
+
 /// SplitMix64: tiny, fast, splittable, passes BigCrush. Used as both the
 /// base generator and the stream-splitting mechanism (`fork`).
 #[derive(Clone, Debug)]
@@ -17,9 +24,29 @@ impl Rng {
     /// Seed a fresh stream (the seed is avalanched once up front).
     pub fn new(seed: u64) -> Self {
         // Avalanche the seed once so small seeds diverge immediately.
-        let mut r = Rng { state: seed ^ 0x9e37_79b9_7f4a_7c15 };
+        let mut r = Rng { state: seed ^ GAMMA };
         r.next_u64();
         r
+    }
+
+    /// The raw internal state (crate-internal: lazy-pool stream jumping).
+    pub(crate) fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a stream at a previously observed [`Self::state`]
+    /// (crate-internal: lazy-pool stream jumping). The next draw of the
+    /// rebuilt stream is bit-identical to the next draw of the original.
+    pub(crate) fn from_state(state: u64) -> Rng {
+        Rng { state }
+    }
+
+    /// Advance the stream by `n` draws in O(1) without computing them —
+    /// SplitMix64's state moves by a constant stride per draw, so
+    /// skipping is pure arithmetic. Bit-identical to calling
+    /// [`Self::next_u64`] `n` times and discarding the results.
+    pub(crate) fn skip(&mut self, n: u64) {
+        self.state = self.state.wrapping_add(n.wrapping_mul(GAMMA));
     }
 
     /// Derive an independent stream for a named sub-purpose. Streams are
@@ -30,7 +57,7 @@ impl Rng {
 
     /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        self.state = self.state.wrapping_add(GAMMA);
         let mut z = self.state;
         z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
@@ -106,17 +133,41 @@ impl Rng {
         }
     }
 
-    /// Sample `k` distinct indices from [0, n) (k ≤ n).
+    /// Sample `k` distinct indices from [0, n) (k ≤ n) — the first `k`
+    /// positions of a partial Fisher-Yates shuffle. When `k` is small
+    /// relative to `n` the permutation is simulated *sparsely* (only the
+    /// touched positions live in a map), so a 50-client cohort draw from
+    /// a 1M-device fleet is O(k) instead of O(n). Both paths consume
+    /// exactly `k` draws and return bit-identical results (regression- and
+    /// property-tested), so the switchover is invisible to any seeded run.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "sample {k} from {n}");
-        let mut idx: Vec<usize> = (0..n).collect();
-        // partial Fisher-Yates: first k positions
+        // Dense cutover: materializing the identity permutation is faster
+        // than map bookkeeping once a meaningful fraction gets touched.
+        if k.saturating_mul(4) >= n {
+            let mut idx: Vec<usize> = (0..n).collect();
+            // partial Fisher-Yates: first k positions
+            for i in 0..k {
+                let j = i + self.below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            return idx;
+        }
+        // Sparse partial Fisher-Yates: `perm` records only displaced
+        // positions (absent = identity). Never iterated, so the map's
+        // internal order cannot leak into results.
+        let mut perm: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(2 * k);
+        let mut out = Vec::with_capacity(k);
         for i in 0..k {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            let vj = perm.get(&j).copied().unwrap_or(j);
+            let vi = perm.get(&i).copied().unwrap_or(i);
+            perm.insert(j, vi);
+            out.push(vj);
         }
-        idx.truncate(k);
-        idx
+        out
     }
 
     /// Weighted categorical draw.
@@ -213,6 +264,48 @@ mod tests {
             u.dedup();
             assert_eq!(u.len(), 20);
         }
+    }
+
+    /// The pre-sparse dense partial Fisher-Yates, kept verbatim as the
+    /// reference semantics `sample_indices` must reproduce bit-for-bit.
+    fn dense_reference(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + rng.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    #[test]
+    fn sparse_sampling_matches_dense_reference_bit_for_bit() {
+        // Outputs AND stream positions must match: every seeded cohort
+        // draw in the repo (selection, examples, goldens) rests on this.
+        for seed in 0..20u64 {
+            for &(n, k) in &[(1usize, 0usize), (1, 1), (10, 3), (100, 7), (5_000, 50), (5_000, 4_999)]
+            {
+                let mut a = Rng::new(seed);
+                let mut b = Rng::new(seed);
+                assert_eq!(a.sample_indices(n, k), dense_reference(&mut b, n, k), "n={n} k={k}");
+                // Identical post-sample stream position.
+                assert_eq!(a.next_u64(), b.next_u64(), "stream diverged at n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn skip_matches_discarded_draws() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        for _ in 0..137 {
+            a.next_u64();
+        }
+        b.skip(137);
+        assert_eq!(a.next_u64(), b.next_u64());
+        // from_state resumes exactly where state() was observed.
+        let mut c = Rng::from_state(a.state());
+        assert_eq!(a.next_u64(), c.next_u64());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use profl::aggregate::{
     staleness_discount, transition_decay, Aggregator, BufferedAggregator, SlicedAggregator,
 };
+use profl::clients::ClientPool;
 use profl::coordinator::projection::{project_tensors, TrainableLayout};
 use profl::data::{partition, Partition, SyntheticDataset};
 use profl::fleet::{
@@ -16,6 +17,8 @@ use profl::fleet::{
 };
 use profl::freezing::{ls_slope, EffectiveMovement};
 use profl::json::Value;
+use profl::manifest::MemCoeffs;
+use profl::memory::MemoryConfig;
 use profl::rng::Rng;
 use profl::store::{ParamStore, Tensor};
 use std::collections::BTreeMap;
@@ -670,5 +673,185 @@ fn prop_sample_indices_is_permutation_prefix() {
         u.dedup();
         assert_eq!(u.len(), k);
         assert!(s.iter().all(|&i| i < n));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Lazy client pool ≡ eager build (the O(cohort) round-scheduling contract)
+// ---------------------------------------------------------------------------
+
+fn rand_scheme(rng: &mut Rng) -> Partition {
+    if rng.below(2) == 0 {
+        Partition::Iid
+    } else {
+        Partition::Dirichlet { alpha: rng.uniform(0.2, 3.0) }
+    }
+}
+
+fn pool_pair(rng: &mut Rng) -> (ClientPool, ClientPool, usize) {
+    let seed = rng.next_u64();
+    let n = 10 + rng.below(110);
+    let scheme = rand_scheme(rng);
+    let profile_name = ["uniform", "mobile", "datacenter"][rng.below(3)];
+    let cap = 4 + rng.below(40);
+    let data = SyntheticDataset::new(10, seed);
+    let fleet = profl::fleet::FleetProfileConfig::named(profile_name).unwrap();
+    let eager = ClientPool::build(
+        n,
+        n * 60,
+        &data,
+        scheme,
+        MemoryConfig::default(),
+        &fleet,
+        seed,
+    );
+    let lazy = ClientPool::build_lazy(
+        n,
+        n * 60,
+        &data,
+        scheme,
+        MemoryConfig::default(),
+        &fleet,
+        seed,
+        cap,
+    );
+    (eager, lazy, n)
+}
+
+#[test]
+fn prop_lazy_materialization_bit_identical_to_eager() {
+    // Satellite acceptance: same seeds ⇒ same memory budgets, device
+    // profiles, shard bounds (labels, indices, counts) — for random
+    // fleet sizes, partition schemes, profiles, and resident caps, with
+    // clients materialized in random order.
+    cases(25, |rng| {
+        let (eager, mut lazy, n) = pool_pair(rng);
+        assert_eq!(eager.len(), lazy.len());
+        assert_eq!(eager.total_samples(), lazy.total_samples());
+        for _ in 0..20 {
+            let id = rng.below(n);
+            let l = lazy.client_mut(id);
+            assert_eq!(l.id, id);
+            let e = eager.client(id);
+            let l = lazy.client(id);
+            assert_eq!(e.memory.budget, l.memory.budget, "client {id} budget");
+            assert_eq!(e.profile, l.profile, "client {id} profile");
+            assert_eq!(e.shard.num_samples(), l.shard.num_samples(), "client {id} bound");
+            assert_eq!(e.shard.labels, l.shard.labels, "client {id} labels");
+            assert_eq!(e.shard.indices, l.shard.indices, "client {id} indices");
+        }
+        // Fleet-wide pure aggregates agree without materialization.
+        let probe = MemCoeffs {
+            fixed_bytes: 400 * 1_000_000,
+            per_sample_bytes: 0,
+            params_total: 0,
+            params_trainable: 0,
+        };
+        assert_eq!(eager.participation_rate(&probe), lazy.participation_rate(&probe));
+        assert_eq!(
+            eager.capability_assignment(&[probe]),
+            lazy.capability_assignment(&[probe])
+        );
+    });
+}
+
+#[test]
+fn prop_lazy_selection_streams_match_eager_across_rounds() {
+    // Satellite acceptance: the selection rng stream (positions AND
+    // outputs) is identical across storage modes over many rounds, with
+    // random in-flight exclusion sets — including the empty set, which
+    // must consume the stream exactly like plain select.
+    cases(15, |rng| {
+        let (mut eager, mut lazy, n) = pool_pair(rng);
+        let probe = MemCoeffs {
+            fixed_bytes: 350 * 1_000_000,
+            per_sample_bytes: 0,
+            params_total: 0,
+            params_trainable: 0,
+        };
+        for round in 0..8 {
+            let busy: Vec<usize> = if rng.below(3) == 0 {
+                Vec::new()
+            } else {
+                (0..rng.below(n / 2 + 1)).map(|_| rng.below(n)).collect()
+            };
+            let k = 1 + rng.below(n.min(30));
+            let a = eager.select_excluding(k, &probe, &busy);
+            let b = lazy.select_excluding(k, &probe, &busy);
+            assert_eq!(a.trainers, b.trainers, "round {round} busy={busy:?}");
+            assert_eq!(a.fallback, b.fallback, "round {round}");
+            assert_eq!(a.availability, b.availability, "round {round}");
+            for (id, _) in &a.availability {
+                assert!(!busy.contains(id), "busy client {id} sampled");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_select_excluding_empty_consumes_identical_stream() {
+    // Regression (satellite): select_excluding(∅) must stay draw-for-draw
+    // identical to select — interleaving the two spellings across rounds
+    // on same-seed pools cannot make them diverge.
+    cases(15, |rng| {
+        let (mut a, mut b, n) = pool_pair(rng);
+        let probe = MemCoeffs {
+            fixed_bytes: 300 * 1_000_000,
+            per_sample_bytes: 0,
+            params_total: 0,
+            params_trainable: 0,
+        };
+        for _ in 0..6 {
+            let k = 1 + rng.below(n.min(25));
+            let s1 = a.select(k, &probe);
+            let s2 = b.select_excluding(k, &probe, &[]);
+            assert_eq!(s1.availability, s2.availability);
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_sampling_equals_dense_fisher_yates() {
+    // sample_indices must reproduce the dense partial Fisher-Yates bit
+    // for bit (outputs and draw count) whatever (n, k) — the sparse path
+    // is an invisible optimization.
+    cases(200, |rng| {
+        let n = 1 + rng.below(3_000);
+        let k = rng.below(n + 1);
+        let mut a = Rng::new(rng.next_u64());
+        let mut b = a.clone();
+        let sparse = a.sample_indices(n, k);
+        let dense = {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + b.below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        };
+        assert_eq!(sparse, dense, "n={n} k={k}");
+        assert_eq!(a.next_u64(), b.next_u64(), "stream positions diverged");
+    });
+}
+
+#[test]
+fn prop_lazy_peak_materialized_bounded_by_cap() {
+    // The memory wall: whatever the access pattern, a lazy pool never
+    // holds more than its resident cap.
+    cases(20, |rng| {
+        let (_, mut lazy, n) = pool_pair(rng);
+        let cap_probe = MemCoeffs {
+            fixed_bytes: 0,
+            per_sample_bytes: 0,
+            params_total: 0,
+            params_trainable: 0,
+        };
+        for _ in 0..10 {
+            let k = 1 + rng.below(n.min(20));
+            let _ = lazy.select(k, &cap_probe);
+        }
+        assert!(lazy.peak_materialized() <= n, "peak can never exceed the fleet");
+        assert!(lazy.materialized() <= lazy.peak_materialized());
     });
 }
