@@ -2,7 +2,7 @@
 # (fmt + clippy + tests); see ROADMAP.md.
 
 .PHONY: check docs artifacts test-golden test-golden-update smoke-examples \
-        bench-json bench-json-smoke
+        bench-json bench-json-smoke telemetry-smoke
 
 check:
 	./rust/check.sh
@@ -29,6 +29,13 @@ test-golden-update:
 smoke-examples:
 	cargo run --release --example churn_sweep -- --smoke
 	cargo run --release --example async_vs_sync -- --profile smoke
+
+# Structured-telemetry smoke gate: emit a JSONL stream + manifest.json
+# from an artifact-free fleet run, then re-parse and validate both
+# in-process (the binary exits non-zero on any contract violation; see
+# docs/OBSERVABILITY.md).
+telemetry-smoke:
+	cargo run --release --example telemetry_tour -- --smoke
 
 # Fleet-scale perf trajectory: run the artifact-free round-scheduling
 # bench across fleet sizes (1e3 → 1e6) and write BENCH_fleet.json at the

@@ -1,0 +1,231 @@
+//! Telemetry tour — emit, then validate, a structured-telemetry stream.
+//!
+//! Drives the discrete-event fleet engine directly (no compiled model
+//! artifacts needed, so this runs anywhere — `make telemetry-smoke`
+//! included): a duty-cycled *lazy* fleet runs a seeded async round loop
+//! while a [`profl::telemetry::Appender`] streams `round.simulate` spans
+//! plus fleet/pool gauges to JSONL, and a `manifest.json` provenance
+//! record is written beside the stream. The second half re-reads both
+//! files and validates the whole contract — every line parses through
+//! the crate's own strict JSON parser, carries the required keys, and
+//! the sequence numbers strictly increase; the manifest parses and is
+//! deterministic modulo its single wall-time field. Any violation exits
+//! non-zero, which is what makes this binary a CI smoke gate.
+//!
+//!   cargo run --release --example telemetry_tour
+//!   cargo run --release --example telemetry_tour -- --smoke
+//!   cargo run --release --example telemetry_tour -- --out /tmp/tour
+//!
+//! Everything is seeded: same flags ⇒ identical streams modulo the
+//! wall-clock stamps.
+
+use anyhow::{bail, Result};
+use profl::cli::Args;
+use profl::clients::ClientPool;
+use profl::config::{FleetCfg, RunConfig};
+use profl::data::{Partition, SyntheticDataset};
+use profl::fleet::{ChurnPolicy, ClientWork, FleetEngine, RoundPolicy};
+use profl::json::Value;
+use profl::manifest::MemCoeffs;
+use profl::rng::Rng;
+use profl::telemetry::{build_manifest, strip_wall_time, write_manifest, Appender};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// One cohort member's timings from its sampled device profile; the
+/// artifact footprint is a fixed 11 Mparam / 44 MB proxy (ResNet18-ish).
+/// Takes the pool mutably so lazy clients materialize through the cache
+/// (exactly the accounting the `pool.*` gauges observe).
+fn works_for(pool: &mut ClientPool, ids: &[usize], start: f64) -> Vec<ClientWork> {
+    let mem = MemCoeffs {
+        fixed_bytes: 0,
+        per_sample_bytes: 0,
+        params_total: 11_000_000,
+        params_trainable: 11_000_000,
+    };
+    let bytes = 44_000_000u64;
+    ids.iter()
+        .map(|&cid| {
+            let c = pool.client_mut(cid);
+            let p = &c.profile;
+            let samples = c.shard.num_samples();
+            ClientWork {
+                id: cid,
+                ready_s: p.trace.next_online(start),
+                down_s: p.down_time_s(bytes),
+                train_s: p.train_time_s(samples, &mem),
+                up_s: p.up_time_s(bytes),
+                dropout_p: p.dropout_p,
+                trace: p.trace,
+            }
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let smoke = args.flag("smoke");
+    let clients: usize = args.parse_opt("clients")?.unwrap_or(if smoke { 24 } else { 100 });
+    let per_round: usize =
+        args.parse_opt("per-round")?.unwrap_or(clients.min(if smoke { 8 } else { 20 }));
+    let rounds: usize = args.parse_opt("rounds")?.unwrap_or(if smoke { 6 } else { 24 });
+    let seed: u64 = args.parse_opt("seed")?.unwrap_or(42);
+    let out_dir = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| std::env::temp_dir().join("profl_telemetry_tour"));
+    let stream_path = out_dir.join("telemetry.jsonl");
+    let manifest_path = out_dir.join("manifest.json");
+
+    // Resolve the fleet through RunConfig so profile names get the same
+    // validation as the real CLI; the config also feeds the manifest, so
+    // the provenance record describes exactly what ran.
+    let fleet = FleetCfg {
+        profile: "mobile".to_string(),
+        trace_period_s: Some(240.0),
+        trace_duty: Some(0.5),
+        dropout_p: Some(0.05),
+        lazy_pool: true,
+        ..FleetCfg::default()
+    };
+    let mut cfg = RunConfig { seed, fleet, ..Default::default() };
+    cfg.per_round = per_round;
+    cfg.num_clients = clients;
+    cfg.telemetry_jsonl = Some(stream_path.display().to_string());
+    let profile = cfg.fleet_profile()?;
+
+    let data = SyntheticDataset::new(10, seed);
+    // Deliberately tight resident cap: the tour wants cache evictions in
+    // its gauges, not just cold-start misses.
+    let cap = (per_round + per_round / 2).max(4);
+    let mut pool = ClientPool::build_lazy(
+        clients,
+        clients * 100,
+        &data,
+        Partition::Iid,
+        cfg.memory.into(),
+        &profile,
+        seed,
+        cap,
+    );
+
+    // ---- emit: seeded async round loop, one span + gauges per round ----
+    let mut tel = Appender::create(&stream_path)?;
+    let policy = RoundPolicy::Async { buffer_k: (per_round / 2).max(1), max_staleness: 8 };
+    let churn = ChurnPolicy::Checkpoint { epochs: 4 };
+    let mut cohort_rng = Rng::new(seed ^ 0xc0_4047);
+    let mut fleet_rng = Rng::new(seed ^ 0xf1ee_7c10);
+    let mut engine = FleetEngine::new();
+    let mut start = 0.0f64;
+    for round in 0..rounds {
+        let busy: Vec<usize> = engine.inflight().iter().map(|u| u.client).collect();
+        let eligible: Vec<usize> = (0..pool.len()).filter(|id| !busy.contains(id)).collect();
+        let k = per_round.min(eligible.len());
+        let ids: Vec<usize> =
+            cohort_rng.sample_indices(eligible.len(), k).into_iter().map(|i| eligible[i]).collect();
+        let works = works_for(&mut pool, &ids, start);
+        let t0 = std::time::Instant::now();
+        let plan =
+            engine.simulate_round(round, start, &works, policy, usize::MAX, churn, &mut fleet_rng);
+        start = plan.end_s;
+        tel.span(
+            "round.simulate",
+            round,
+            start,
+            t0.elapsed().as_secs_f64(),
+            &[
+                ("cohort", Value::Num(works.len() as f64)),
+                ("completers", Value::Num(plan.completers.len() as f64)),
+                ("late_arrivals", Value::Num(plan.late_arrivals.len() as f64)),
+            ],
+        );
+        tel.gauge("fleet.queue_peak", round, start, engine.last_queue_peak() as f64, &[]);
+        tel.gauge("fleet.inflight_len", round, start, engine.inflight().len() as f64, &[]);
+        let stats = pool.stats();
+        tel.gauge("pool.cache_hits", round, start, stats.hits as f64, &[]);
+        tel.gauge("pool.cache_misses", round, start, stats.misses as f64, &[]);
+        tel.gauge("pool.cache_evictions", round, start, stats.evictions as f64, &[]);
+        tel.gauge("pool.peak_materialized", round, start, stats.peak_materialized as f64, &[]);
+    }
+    let emitted = tel.lines();
+    let dropped = tel.dropped_writes();
+    drop(tel); // flush
+
+    let argv: Vec<String> = std::env::args().collect();
+    let manifest = build_manifest(&cfg, &argv, None, Some((&stream_path, emitted)));
+    write_manifest(&manifest_path, &manifest)?;
+
+    // ---- validate: the stream and manifest must honour the contract ----
+    if dropped != 0 {
+        bail!("telemetry stream dropped {dropped} writes");
+    }
+    let text = std::fs::read_to_string(&stream_path)?;
+    let mut by_name: BTreeMap<String, usize> = BTreeMap::new();
+    let mut prev_seq: Option<u64> = None;
+    let mut n = 0u64;
+    for line in text.lines() {
+        let v = Value::parse(line)?;
+        for key in ["seq", "wall_ms", "sim_s", "round", "kind", "name"] {
+            if v.get(key).is_err() {
+                bail!("required key `{key}` missing in line: {line}");
+            }
+        }
+        let seq = v.get("seq")?.as_u64()?;
+        if let Some(p) = prev_seq {
+            if seq <= p {
+                bail!("seq not strictly increasing: {p} then {seq}");
+            }
+        }
+        prev_seq = Some(seq);
+        let kind = v.get("kind")?.as_str()?;
+        match kind {
+            "span" => {
+                v.get("dur_s")?;
+            }
+            "counter" | "gauge" => {
+                v.get("value")?;
+            }
+            other => bail!("unknown event kind `{other}`"),
+        }
+        *by_name.entry(v.get("name")?.as_str()?.to_string()).or_insert(0) += 1;
+        n += 1;
+    }
+    if n != emitted {
+        bail!("stream has {n} lines, appender reported {emitted}");
+    }
+    if n == 0 {
+        bail!("empty telemetry stream");
+    }
+
+    let mtext = std::fs::read_to_string(&manifest_path)?;
+    let mv = Value::parse(mtext.trim())?;
+    if mv.get("config_sha256")?.as_str()?.len() != 64 {
+        bail!("manifest config_sha256 is not a sha256 hex digest");
+    }
+    if mv.get("telemetry")?.get("lines")?.as_u64()? != emitted {
+        bail!("manifest line count disagrees with the stream");
+    }
+    // Reproducibility: a second manifest from the same config differs
+    // only by the wall-time field.
+    let manifest2 = build_manifest(&cfg, &argv, None, Some((&stream_path, emitted)));
+    if strip_wall_time(&manifest).to_json() != strip_wall_time(&manifest2).to_json() {
+        bail!("manifest is not deterministic modulo wall time");
+    }
+
+    // ---- report ---------------------------------------------------------
+    println!("telemetry tour — stream + manifest validated");
+    println!(
+        "clients={clients} per_round={per_round} rounds={rounds} seed={seed} cap={cap} \
+         policy=async churn=checkpoint:4"
+    );
+    println!("stream:   {} ({n} events)", stream_path.display());
+    println!("manifest: {}", manifest_path.display());
+    println!("events by name:");
+    for (name, count) in &by_name {
+        println!("  {name:<24} {count:>5}");
+    }
+    if let Some(first) = text.lines().next() {
+        println!("sample line:\n  {first}");
+    }
+    Ok(())
+}

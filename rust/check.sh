@@ -29,6 +29,12 @@ cargo build --benches
 echo "== cargo test -q"
 cargo test -q
 
+# Telemetry smoke gate: the tour binary emits a JSONL stream + manifest
+# and validates both in-process (exits non-zero on any contract
+# violation) — keeps the observability surface from bit-rotting.
+echo "== telemetry smoke (make telemetry-smoke)"
+cargo run --release --quiet --example telemetry_tour -- --smoke
+
 # The full test run above already includes the golden-trace suite; this
 # named pass keeps a loud, greppable signal when an engine change shifts
 # an event trace (regenerate with `make test-golden-update`).

@@ -92,6 +92,13 @@ struct LazyFleet {
     resident: HashMap<usize, Resident>,
     evicted: HashMap<usize, Residue>,
     peak_resident: usize,
+    /// Cache telemetry (pure observation — never read by the pool):
+    /// touches served by a resident client.
+    hits: u64,
+    /// Touches that had to (re)materialize the client.
+    misses: u64,
+    /// Residents displaced to the residue map.
+    evictions: u64,
 }
 
 impl LazyFleet {
@@ -121,8 +128,10 @@ impl LazyFleet {
         let tick = self.tick;
         if let Some(r) = self.resident.get_mut(&id) {
             r.tick = tick;
+            self.hits += 1;
             return;
         }
+        self.misses += 1;
         while self.resident.len() >= self.cap.max(1) {
             self.evict_lru();
         }
@@ -141,6 +150,7 @@ impl LazyFleet {
             return;
         };
         let r = self.resident.remove(&id).expect("resident just found");
+        self.evictions += 1;
         self.evicted.insert(
             id,
             Residue {
@@ -173,6 +183,23 @@ pub struct ClientPool {
     pub mem_cfg: MemoryConfig,
     storage: Storage,
     rng: Rng,
+}
+
+/// Point-in-time pool cache statistics for the telemetry stream (see
+/// [`ClientPool::stats`]). For eager pools the cache counters are zero
+/// and `materialized == peak_materialized == fleet size`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Lazy-cache touches served by an already-resident client.
+    pub hits: u64,
+    /// Lazy-cache touches that (re)materialized the client.
+    pub misses: u64,
+    /// Residents displaced to the residue map by the LRU policy.
+    pub evictions: u64,
+    /// Clients materialized right now.
+    pub materialized: usize,
+    /// High-water mark of simultaneously materialized clients.
+    pub peak_materialized: usize,
 }
 
 /// Outcome of one round's selection.
@@ -274,6 +301,9 @@ impl ClientPool {
             resident: HashMap::new(),
             evicted: HashMap::new(),
             peak_resident: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
         };
         ClientPool { storage: Storage::Lazy(Box::new(lazy)), mem_cfg, rng }
     }
@@ -350,6 +380,28 @@ impl ClientPool {
         match &self.storage {
             Storage::Eager(v) => v.len(),
             Storage::Lazy(l) => l.peak_resident,
+        }
+    }
+
+    /// Cumulative cache statistics for the telemetry stream. Pure
+    /// observation: reading them never touches the cache, the LRU clock,
+    /// or any rng stream.
+    pub fn stats(&self) -> PoolStats {
+        match &self.storage {
+            Storage::Eager(v) => PoolStats {
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                materialized: v.len(),
+                peak_materialized: v.len(),
+            },
+            Storage::Lazy(l) => PoolStats {
+                hits: l.hits,
+                misses: l.misses,
+                evictions: l.evictions,
+                materialized: l.resident.len(),
+                peak_materialized: l.peak_resident,
+            },
         }
     }
 
@@ -677,6 +729,39 @@ mod tests {
             assert!(lazy.materialized() <= 4, "cache exceeded its cap");
         }
         assert!(lazy.peak_materialized() <= 4);
+    }
+
+    #[test]
+    fn pool_stats_count_hits_misses_evictions() {
+        // Eager: no cache, so counters stay zero and materialized = fleet.
+        let mut eager = pool(12);
+        eager.select(5, &coeffs(400));
+        let s = eager.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (0, 0, 0));
+        assert_eq!(s.materialized, eager.len());
+        assert_eq!(s.peak_materialized, eager.len());
+
+        // Lazy: first touches miss, repeats hit, a tiny cap evicts.
+        let mut lazy = lazy_pool_with(12, "uniform", 4);
+        assert_eq!(lazy.stats(), PoolStats::default(), "untouched pool");
+        lazy.client_mut(0);
+        lazy.client_mut(1);
+        lazy.client_mut(0); // resident again -> hit
+        let s = lazy.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.materialized, 2);
+        for id in 2..8 {
+            lazy.client_mut(id); // overflow the 4-client cap
+        }
+        let s = lazy.stats();
+        assert_eq!(s.misses, 8, "every distinct client missed once");
+        assert_eq!(s.evictions, 4, "8 distinct residents through a cap of 4");
+        assert_eq!(s.materialized, 4);
+        assert_eq!(s.peak_materialized, 4);
+        // Stats reads are pure: repeated reads don't drift.
+        assert_eq!(lazy.stats(), s);
     }
 
     #[test]

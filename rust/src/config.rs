@@ -49,6 +49,13 @@ pub struct RunConfig {
     pub acc_tail: usize,
     /// Run seed: every stochastic stream forks from it.
     pub seed: u64,
+    /// Structured-telemetry JSONL stream path (see `telemetry::`): when
+    /// set, the coordinator appends spans/counters/gauges for every
+    /// round to this file. `None` (the default) disables telemetry
+    /// entirely — the observation hooks are gated on this option, so an
+    /// unset path is bit-for-bit inert. CLI: `--telemetry-jsonl` /
+    /// `PROFL_TELEMETRY_JSONL`.
+    pub telemetry_jsonl: Option<String>,
 }
 
 /// Fleet-dynamics section: drives the `fleet` discrete-event simulator
@@ -230,6 +237,7 @@ impl Default for RunConfig {
             fleet: FleetCfg::default(),
             acc_tail: 10,
             seed: 42,
+            telemetry_jsonl: None,
         }
     }
 }

@@ -37,13 +37,16 @@ use crate::config::RunConfig;
 use crate::data::SyntheticDataset;
 use crate::fleet::{ChurnPolicy, ClientWork, FleetEngine, RoundPlan, RoundPolicy};
 use crate::freezing::TransitionLog;
+use crate::json::Value;
 use crate::manifest::{MemCoeffs, ModelEntry};
 use crate::metrics::MetricsSink;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::store::ParamStore;
+use crate::telemetry::Appender;
 use anyhow::Result;
 use std::collections::HashMap;
+use std::path::Path;
 
 use projection::{classify_stale, MergeContext, StaleDecision, TrainableLayout};
 
@@ -141,6 +144,11 @@ pub struct ServerCtx<'rt> {
     /// Scratch buffers reused across rounds (no allocation on the hot path).
     pub(crate) xs_buf: Vec<f32>,
     pub(crate) ys_buf: Vec<i32>,
+    /// Structured-telemetry JSONL stream (see [`crate::telemetry`]):
+    /// `Some` only when `cfg.telemetry_jsonl` is set. Every hook in the
+    /// round loop is gated on this option and only *reads* simulator
+    /// state, so an unset stream is bit-for-bit inert.
+    pub(crate) telemetry: Option<Appender>,
 }
 
 impl<'rt> ServerCtx<'rt> {
@@ -181,6 +189,10 @@ impl<'rt> ServerCtx<'rt> {
         };
         let store = ParamStore::init(&model.params, cfg.seed ^ 0x1417);
         let fleet_rng = Rng::new(cfg.seed ^ 0xf1ee_7c10);
+        let telemetry = match cfg.telemetry_jsonl.as_deref() {
+            Some(path) => Some(Appender::create(Path::new(path))?),
+            None => None,
+        };
         Ok(ServerCtx {
             rt,
             cfg,
@@ -200,7 +212,24 @@ impl<'rt> ServerCtx<'rt> {
             fleet_rng,
             xs_buf: Vec::new(),
             ys_buf: Vec::new(),
+            telemetry,
         })
+    }
+
+    /// The telemetry stream, when `--telemetry-jsonl` armed one. Exposed
+    /// so method drivers (and tests) can emit their own spans next to the
+    /// coordinator's.
+    pub fn telemetry_mut(&mut self) -> Option<&mut Appender> {
+        self.telemetry.as_mut()
+    }
+
+    /// Flush the telemetry stream (no-op when telemetry is off). Called
+    /// by the harness at run end so the line count in the manifest sees
+    /// every event.
+    pub fn flush_telemetry(&mut self) {
+        if let Some(tel) = self.telemetry.as_mut() {
+            tel.flush();
+        }
     }
 
     /// The run's model entry in the manifest.
@@ -299,6 +328,7 @@ impl<'rt> ServerCtx<'rt> {
                 self.pending.remove(&w.id);
             }
         }
+        let t0 = self.telemetry.is_some().then(std::time::Instant::now);
         let plan = self.engine.simulate_round(
             self.round,
             self.sim_time_s,
@@ -309,6 +339,33 @@ impl<'rt> ServerCtx<'rt> {
             &mut self.fleet_rng,
         );
         self.sim_time_s = plan.end_s;
+        // Telemetry observation point: the simulation above never sees
+        // these reads, so the stream is inert when unset.
+        if let Some(t0) = t0 {
+            let round = self.round;
+            let sim_s = self.sim_time_s;
+            let queue_peak = self.engine.last_queue_peak();
+            let inflight = self.engine.inflight().len();
+            let pending = self.pending.len();
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.span(
+                    "round.simulate",
+                    round,
+                    sim_s,
+                    t0.elapsed().as_secs_f64(),
+                    &[
+                        ("cohort", Value::Num(works.len() as f64)),
+                        ("completers", Value::Num(plan.completers.len() as f64)),
+                        ("stragglers", Value::Num(plan.stragglers.len() as f64)),
+                        ("dropouts", Value::Num(plan.dropouts.len() as f64)),
+                        ("late_arrivals", Value::Num(plan.late_arrivals.len() as f64)),
+                    ],
+                );
+                tel.gauge("fleet.queue_peak", round, sim_s, queue_peak as f64, &[]);
+                tel.gauge("fleet.inflight_len", round, sim_s, inflight as f64, &[]);
+                tel.gauge("coordinator.pending_len", round, sim_s, pending as f64, &[]);
+            }
+        }
         plan
     }
 

@@ -10,6 +10,7 @@
 use super::{PendingUpdate, ProjectedLate, ServerCtx, TEST_BATCHES};
 use crate::aggregate::{transition_decay, Aggregator, BufferedAggregator};
 use crate::fleet::{EventKind, RoundPlan};
+use crate::json::Value;
 use crate::metrics::RoundRecord;
 use crate::runtime::{literal_f32, literal_i32, LoadedArtifact, Runtime};
 use anyhow::{bail, Result};
@@ -143,6 +144,7 @@ impl<'rt> ServerCtx<'rt> {
         let tag = self.cfg.model_tag.clone();
         let art = self.rt.load(&tag, artifact)?;
         let mem = art.meta.participation_mem();
+        let t_dispatch = self.telemetry.is_some().then(std::time::Instant::now);
         let sel = self.sample_cohort(&mem);
 
         // --- fleet dispatch: virtual-time the memory-eligible cohort --------
@@ -162,6 +164,23 @@ impl<'rt> ServerCtx<'rt> {
                 self.client_work(cid, &mem, tr_bytes, down)
             })
             .collect();
+        if let Some(t0) = t_dispatch {
+            let round = self.round;
+            let sim_s = self.sim_time_s;
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.span(
+                    "round.dispatch",
+                    round,
+                    sim_s,
+                    t0.elapsed().as_secs_f64(),
+                    &[
+                        ("artifact", Value::Str(artifact.to_string())),
+                        ("trainers", Value::Num(sel.trainers.len() as f64)),
+                        ("fallback_eligible", Value::Num(sel.fallback.len() as f64)),
+                    ],
+                );
+            }
+        }
         let plan = self.run_fleet(&works);
 
         // Aggregate in *selection* order, not upload-arrival order: float
@@ -186,6 +205,7 @@ impl<'rt> ServerCtx<'rt> {
         };
 
         // --- primary cohort ---------------------------------------------------
+        let t_merge = self.telemetry.is_some().then(std::time::Instant::now);
         if let Some((_, max_staleness)) = self.async_params() {
             // Async: fresh finishers merge now; window-missers train and
             // buffer; earlier rounds' arrivals merge staleness-discounted.
@@ -202,6 +222,25 @@ impl<'rt> ServerCtx<'rt> {
                 self.train_cohort(&tag, artifact, &completers, &fractions, lr, &mut outcome)?;
             outcome.mean_loss = loss;
             outcome.mean_acc = acc;
+        }
+        if let Some(t0) = t_merge {
+            let round = self.round;
+            let sim_s = self.sim_time_s;
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.span(
+                    "aggregate.merge",
+                    round,
+                    sim_s,
+                    t0.elapsed().as_secs_f64(),
+                    &[
+                        ("merged", Value::Num(outcome.participants as f64)),
+                        ("late_merged", Value::Num(outcome.late_merged as f64)),
+                        ("late_dropped", Value::Num(outcome.late_dropped as f64)),
+                        ("projected_merged", Value::Num(outcome.projected_merged as f64)),
+                        ("partial_merged", Value::Num(outcome.partial_merged as f64)),
+                    ],
+                );
+            }
         }
         // Downloads shipped to policy-cut stragglers cost bandwidth even
         // though their updates never aggregate.
@@ -730,5 +769,44 @@ impl<'rt> ServerCtx<'rt> {
             partial_merged: out.partial_merged,
             wasted_compute_s: out.wasted_compute_s,
         });
+        // Telemetry rollup for the finished round: per-round counters plus
+        // lazy-pool cache gauges, all pure reads of already-computed state.
+        if self.telemetry.is_some() {
+            let round = self.round;
+            let sim_s = self.sim_time_s;
+            let pool = self.pool.stats();
+            let attrs =
+                [("stage", Value::Str(stage.to_string())), ("step", Value::Num(step as f64))];
+            let counters: [(&str, f64); 11] = [
+                ("round.participants", out.participants as f64),
+                ("round.stragglers", out.stragglers as f64),
+                ("round.dropouts", out.dropouts as f64),
+                ("round.late_merged", out.late_merged as f64),
+                ("round.late_dropped", out.late_dropped as f64),
+                ("round.projected_merged", out.projected_merged as f64),
+                ("round.projected_dropped_params", out.projected_dropped_params as f64),
+                ("round.partial_merged", out.partial_merged as f64),
+                ("round.bytes_up", out.bytes_up as f64),
+                ("round.bytes_down", out.bytes_down as f64),
+                ("round.wasted_compute_s", out.wasted_compute_s),
+            ];
+            let gauges: [(&str, f64); 7] = [
+                ("round.mean_staleness", out.mean_staleness),
+                ("round.client_mem_bytes", out.client_mem_bytes as f64),
+                ("pool.cache_hits", pool.hits as f64),
+                ("pool.cache_misses", pool.misses as f64),
+                ("pool.cache_evictions", pool.evictions as f64),
+                ("pool.materialized", pool.materialized as f64),
+                ("pool.peak_materialized", pool.peak_materialized as f64),
+            ];
+            if let Some(tel) = self.telemetry.as_mut() {
+                for (name, v) in counters {
+                    tel.counter(name, round, sim_s, v, &attrs);
+                }
+                for (name, v) in gauges {
+                    tel.gauge(name, round, sim_s, v, &attrs);
+                }
+            }
+        }
     }
 }

@@ -81,6 +81,9 @@ impl PartialOrd for Event {
 pub struct EventQueue {
     heap: BinaryHeap<Reverse<Event>>,
     next_seq: u64,
+    /// High-water mark of `heap.len()` since the last [`Self::clear`]
+    /// (pure observation for telemetry; never read by the simulation).
+    peak: usize,
 }
 
 impl EventQueue {
@@ -94,6 +97,7 @@ impl EventQueue {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Reverse(Event { time_s, seq, kind }));
+        self.peak = self.peak.max(self.heap.len());
     }
 
     /// Earliest event (ties in insertion order), removing it.
@@ -109,11 +113,19 @@ impl EventQueue {
     pub fn clear(&mut self) {
         self.heap.clear();
         self.next_seq = 0;
+        self.peak = 0;
     }
 
     /// Number of events still scheduled.
     pub fn len(&self) -> usize {
         self.heap.len()
+    }
+
+    /// High-water mark of the scheduled-event count since the last
+    /// [`Self::clear`] — the round's peak queue depth, surfaced to
+    /// telemetry via `FleetEngine::last_queue_peak`.
+    pub fn peak_len(&self) -> usize {
+        self.peak
     }
 
     /// Whether nothing is scheduled.
@@ -182,6 +194,23 @@ mod tests {
         assert_eq!(q.pop().unwrap().time_s, 6.0);
         assert_eq!(q.pop().unwrap().time_s, 10.0);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peak_len_tracks_high_water_mark() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peak_len(), 0);
+        q.push(1.0, EventKind::Dispatch { client: 0 });
+        q.push(2.0, EventKind::Dispatch { client: 1 });
+        q.push(3.0, EventKind::Deadline);
+        assert_eq!(q.peak_len(), 3);
+        q.pop();
+        q.pop();
+        assert_eq!(q.peak_len(), 3, "peak survives drains");
+        q.push(4.0, EventKind::Deadline);
+        assert_eq!(q.peak_len(), 3, "refilling below the peak keeps it");
+        q.clear();
+        assert_eq!(q.peak_len(), 0, "clear resets the round's peak");
     }
 
     #[test]

@@ -643,6 +643,13 @@ impl FleetEngine {
         &self.inflight
     }
 
+    /// Peak event-queue depth of the most recent [`Self::simulate_round`]
+    /// (0 before the first round). Pure observation for the telemetry
+    /// stream — the simulation never reads it.
+    pub fn last_queue_peak(&self) -> usize {
+        self.scratch.queue.peak_len()
+    }
+
     /// Return the engine to its fresh-construction state — empty
     /// in-flight queue, round counter-free — while keeping the scratch
     /// allocations warm. Sweeps (e.g. `examples/churn_sweep.rs`) reuse

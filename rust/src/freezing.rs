@@ -229,6 +229,14 @@ impl FreezeDetector {
     pub fn history(&self) -> &[f64] {
         &self.history
     }
+
+    /// Consecutive below-threshold slope evaluations so far — how deep
+    /// into the patience window the block is (freeze fires at
+    /// `patience_w`). Surfaced as a telemetry gauge next to the EM
+    /// scalar.
+    pub fn consecutive(&self) -> usize {
+        self.consecutive
+    }
 }
 
 #[cfg(test)]

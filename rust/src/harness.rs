@@ -18,8 +18,9 @@ use std::path::PathBuf;
 /// `--buffer-k`, `--staleness-alpha`, `--max-staleness`,
 /// `--stale-projection`, `--projection-decay`, `--fleet-profile`,
 /// `--dropout`, `--churn-policy`, `--churn-epochs`, `--trace-period`,
-/// `--trace-duty`, `--lazy-pool`). See `docs/CLI.md` for the full flag
-/// reference.
+/// `--trace-duty`, `--lazy-pool`) and the observability switch
+/// (`--telemetry-jsonl`, env fallback `PROFL_TELEMETRY_JSONL`). See
+/// `docs/CLI.md` for the full flag reference.
 pub struct ExpOpts {
     /// Budget profile: `fast` (default), `smoke`, or `paper`.
     pub profile: String,
@@ -61,6 +62,9 @@ pub struct ExpOpts {
     pub trace_duty: Option<f64>,
     /// Lazy on-demand client materialization (O(cohort) memory/round).
     pub lazy_pool: bool,
+    /// Structured-telemetry JSONL stream path (`--telemetry-jsonl`, or
+    /// the `PROFL_TELEMETRY_JSONL` env var); `None` = telemetry off.
+    pub telemetry_jsonl: Option<String>,
 }
 
 impl ExpOpts {
@@ -93,6 +97,10 @@ impl ExpOpts {
             trace_period_s: args.parse_opt("trace-period")?,
             trace_duty: args.parse_opt("trace-duty")?,
             lazy_pool: args.flag("lazy-pool"),
+            telemetry_jsonl: args
+                .get("telemetry-jsonl")
+                .map(String::from)
+                .or_else(telemetry_env),
         })
     }
 
@@ -149,8 +157,16 @@ impl ExpOpts {
         if self.lazy_pool {
             cfg.fleet.lazy_pool = true;
         }
+        cfg.telemetry_jsonl = self.telemetry_jsonl.clone();
         cfg
     }
+}
+
+/// The `PROFL_TELEMETRY_JSONL` fallback for `--telemetry-jsonl` (empty
+/// values count as unset). Shared by the harness and the main binary so
+/// every entry point honours the same switch.
+pub fn telemetry_env() -> Option<String> {
+    std::env::var("PROFL_TELEMETRY_JSONL").ok().filter(|s| !s.is_empty())
 }
 
 /// Results directory: artifacts/results/ (gitignored with the artifacts).
@@ -261,6 +277,7 @@ mod tests {
             trace_period_s: Some(240.0),
             trace_duty: None,
             lazy_pool: true,
+            telemetry_jsonl: Some("stream.jsonl".into()),
         };
         let c = o.cfg("m");
         assert_eq!(c.seed, 7);
@@ -279,5 +296,6 @@ mod tests {
         assert_eq!(c.fleet.trace_period_s, Some(240.0));
         assert_eq!(c.fleet.trace_duty, None, "unset override keeps the profile's duty");
         assert!(c.fleet.lazy_pool);
+        assert_eq!(c.telemetry_jsonl.as_deref(), Some("stream.jsonl"));
     }
 }

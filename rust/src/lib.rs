@@ -36,6 +36,10 @@
 //!   client materialization (`--lazy-pool`), the engine's reusable
 //!   round scratch, the contiguous aggregation arena, and the
 //!   `make bench-json` → `BENCH_fleet.json` perf trajectory.
+//! * **`docs/OBSERVABILITY.md`** — the structured-telemetry surface
+//!   ([`telemetry`]): the `--telemetry-jsonl` event stream's schema and
+//!   span/counter/gauge catalog, the `manifest.json` run-provenance
+//!   record, and a jq cookbook.
 //!
 //! `DESIGN.md` holds the full system inventory and experiment index;
 //! `ROADMAP.md` the north-star and open items.
@@ -99,6 +103,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod store;
+pub mod telemetry;
 
 pub use config::RunConfig;
 pub use coordinator::ServerCtx;

@@ -60,6 +60,13 @@ FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
   --lazy-pool         Materialize clients on demand (O(cohort) memory per
                       round; bit-identical to the eager build) — for
                       very large --clients fleets
+
+OBSERVABILITY (see docs/OBSERVABILITY.md):
+  --telemetry-jsonl <path>  Stream structured spans/counters/gauges for
+                      every round as JSONL to <path> (off by default;
+                      env fallback: PROFL_TELEMETRY_JSONL). `run` also
+                      writes a manifest.json provenance record beside
+                      the CSV (or beside the stream when no --csv).
 ";
 
 fn make_cfg(args: &Args) -> Result<RunConfig> {
@@ -114,6 +121,8 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     if args.flag("lazy-pool") {
         cfg.fleet.lazy_pool = true;
     }
+    cfg.telemetry_jsonl =
+        args.get("telemetry-jsonl").map(String::from).or_else(profl::harness::telemetry_env);
     // Fail fast on bad fleet spellings (before artifacts load).
     cfg.round_policy()?;
     cfg.churn_policy()?;
@@ -169,6 +178,25 @@ fn main() -> Result<()> {
                 }
                 sink.write_csv(std::path::Path::new(path))?;
                 eprintln!("[profl] wrote {path}");
+            }
+            // Run-provenance manifest: beside the CSV when one was
+            // written, else beside the telemetry stream; skipped when
+            // neither output location exists.
+            let manifest_dir = args
+                .get("csv")
+                .or_else(|| cfg.telemetry_jsonl.as_deref())
+                .map(|p| std::path::Path::new(p).parent().map(PathBuf::from).unwrap_or_default());
+            if let Some(dir) = manifest_dir {
+                let telemetry = cfg.telemetry_jsonl.as_deref().map(|p| {
+                    let path = std::path::Path::new(p);
+                    (path, profl::telemetry::count_lines(path))
+                });
+                let argv: Vec<String> = std::env::args().collect();
+                let manifest =
+                    profl::telemetry::build_manifest(&cfg, &argv, Some(&summary), telemetry);
+                let mpath = dir.join("manifest.json");
+                profl::telemetry::write_manifest(&mpath, &manifest)?;
+                eprintln!("[profl] wrote {}", mpath.display());
             }
         }
         "compare" => {

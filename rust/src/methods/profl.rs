@@ -85,7 +85,24 @@ impl ProFL {
         for r in 0..max_rounds {
             let out = ctx.run_train_round(&train_art, Some(&op_art), lr, stage, t)?;
             let snapshot = ctx.store.flatten(&block_names);
+            let t_observe = ctx.telemetry_mut().is_some().then(std::time::Instant::now);
             let (em, em_freeze) = det.observe(&snapshot);
+            if let Some(t0) = t_observe {
+                let round = ctx.round;
+                let sim_s = ctx.sim_time_s;
+                let consecutive = det.consecutive();
+                if let Some(tel) = ctx.telemetry_mut() {
+                    use crate::json::Value;
+                    let attrs = [
+                        ("stage", Value::Str(stage.to_string())),
+                        ("step", Value::Num(t as f64)),
+                        ("consecutive", Value::Num(consecutive as f64)),
+                        ("freeze", Value::Bool(em_freeze)),
+                    ];
+                    tel.span("freeze.observe", round, sim_s, t0.elapsed().as_secs_f64(), &attrs);
+                    tel.gauge("freeze.em", round, sim_s, em.unwrap_or(f64::NAN), &attrs);
+                }
+            }
             let test_acc = if r % ctx.cfg.eval_every == 0 || r + 1 == max_rounds {
                 ctx.evaluate(&eval_art)?.acc
             } else {

@@ -4,6 +4,15 @@ use crate::freezing::Transition;
 use std::io::Write;
 use std::path::Path;
 
+/// CSV schema version, carried as a `# schema=v<N>` first line so
+/// downstream parsers can detect column-set changes (v1: pre-PR-4
+/// columns; v2: projection + churn columns and the header line itself).
+pub const CSV_SCHEMA_VERSION: u32 = 2;
+
+/// The CSV column header (everything [`RoundRecord::csv_row`] emits, in
+/// order).
+pub const CSV_HEADER: &str = "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts,late_merged,late_dropped,mean_staleness,projected_merged,projected_dropped_params,transition_staleness,interrupted,resumed,partial_merged,wasted_compute_s";
+
 /// One FL round's observables (a row of the Fig 4/5 CSVs).
 #[derive(Debug, Clone)]
 pub struct RoundRecord {
@@ -69,6 +78,43 @@ pub struct RoundRecord {
     /// Compute seconds lost to churn (aborted work + partial-epoch
     /// remainders past the last checkpoint boundary).
     pub wasted_compute_s: f64,
+}
+
+impl RoundRecord {
+    /// This record as one CSV row (no trailing newline), in
+    /// [`CSV_HEADER`] column order. Shared by [`MetricsSink::write_csv`]
+    /// and the run manifest's history digest (`telemetry::build_manifest`
+    /// hashes these rows), so the two can never drift apart.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            self.round,
+            self.stage,
+            self.step,
+            self.train_loss,
+            self.train_acc,
+            self.test_acc,
+            self.effective_movement,
+            self.participants,
+            self.fallback_participants,
+            self.bytes_up,
+            self.bytes_down,
+            self.client_mem_bytes,
+            self.sim_time_s,
+            self.stragglers,
+            self.dropouts,
+            self.late_merged,
+            self.late_dropped,
+            self.mean_staleness,
+            self.projected_merged,
+            self.projected_dropped_params,
+            self.transition_staleness,
+            self.interrupted,
+            self.resumed,
+            self.partial_merged,
+            self.wasted_compute_s
+        )
+    }
 }
 
 /// Whole-run result: what the table benches consume.
@@ -244,40 +290,10 @@ impl MetricsSink {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(
-            f,
-            "round,stage,step,train_loss,train_acc,test_acc,effective_movement,participants,fallback,bytes_up,bytes_down,client_mem_bytes,sim_time_s,stragglers,dropouts,late_merged,late_dropped,mean_staleness,projected_merged,projected_dropped_params,transition_staleness,interrupted,resumed,partial_merged,wasted_compute_s"
-        )?;
+        writeln!(f, "# schema=v{CSV_SCHEMA_VERSION}")?;
+        writeln!(f, "{CSV_HEADER}")?;
         for r in &self.records {
-            writeln!(
-                f,
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
-                r.round,
-                r.stage,
-                r.step,
-                r.train_loss,
-                r.train_acc,
-                r.test_acc,
-                r.effective_movement,
-                r.participants,
-                r.fallback_participants,
-                r.bytes_up,
-                r.bytes_down,
-                r.client_mem_bytes,
-                r.sim_time_s,
-                r.stragglers,
-                r.dropouts,
-                r.late_merged,
-                r.late_dropped,
-                r.mean_staleness,
-                r.projected_merged,
-                r.projected_dropped_params,
-                r.transition_staleness,
-                r.interrupted,
-                r.resumed,
-                r.partial_merged,
-                r.wasted_compute_s
-            )?;
+            writeln!(f, "{}", r.csv_row())?;
         }
         Ok(())
     }
@@ -394,8 +410,18 @@ mod tests {
         let path = dir.join("run.csv");
         m.write_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.lines().count() == 2);
-        assert!(text.starts_with("round,stage"));
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "schema line + header + one record");
+        assert!(text.starts_with("# schema=v"), "schema marker first");
+        assert_eq!(lines[0], format!("# schema=v{CSV_SCHEMA_VERSION}"));
+        assert_eq!(lines[1], CSV_HEADER);
+        assert_eq!(lines[2], m.records[0].csv_row());
+        // Column count stays in lockstep with the header.
+        assert_eq!(
+            lines[1].split(',').count(),
+            lines[2].split(',').count(),
+            "row/header column drift"
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -1,0 +1,658 @@
+//! Structured telemetry: a zero-dependency JSONL event/span appender plus
+//! run-provenance manifests.
+//!
+//! Two production surfaces for the fleet round loop (see
+//! `docs/OBSERVABILITY.md` for the full catalog and a jq cookbook):
+//!
+//! 1. **[`Appender`]** — a buffered JSONL writer emitting typed events:
+//!    named spans (`round.dispatch`, `round.simulate`, `aggregate.merge`,
+//!    `freeze.observe`) and counters/gauges (event-queue peak depth,
+//!    in-flight queue length, lazy-pool cache hits/misses/evictions,
+//!    late merges/drops, projected params, per-block effective-movement
+//!    scalars). Every line is a self-contained JSON object carrying a
+//!    monotonic sequence number, a wall-clock stamp, and the virtual
+//!    sim-time of the round it describes, so a million-device run is
+//!    observable *live* (`tail -f | jq`) instead of post-hoc via CSV.
+//!
+//! 2. **[`build_manifest`]** — a `manifest.json` provenance record
+//!    written at run end: sha256 of the resolved [`RunConfig`], the run
+//!    seed, crate version + `git describe`, the CLI argv, the telemetry
+//!    stream's path and line count, and rollup digests of the
+//!    [`RunSummary`] (including a sha256 over the per-round history).
+//!    Two runs with the same config and seed produce identical manifests
+//!    modulo the single wall-time field — the reproducibility contract
+//!    the checkpoint/resume roadmap item builds on.
+//!
+//! **Strictly off by default.** The stream only exists when
+//! `--telemetry-jsonl <path>` (or `PROFL_TELEMETRY_JSONL`) is set; every
+//! hook in the round loop is gated on the appender's presence and only
+//! *reads* simulator state — no RNG draws, no float arithmetic, no event
+//! reordering — so golden traces, benches, and all degeneracy contracts
+//! are bit-for-bit untouched (integration-armored in
+//! `rust/tests/telemetry.rs`).
+
+use crate::config::RunConfig;
+use crate::json::Value;
+use crate::metrics::RunSummary;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Manifest schema version (bump on breaking field changes).
+pub const MANIFEST_SCHEMA: u64 = 1;
+
+/// The manifest's single nondeterministic field: wall-clock creation
+/// time in unix milliseconds. Strip it before comparing manifests for
+/// reproducibility (the deterministic-manifest tests do exactly that).
+pub const MANIFEST_WALL_KEY: &str = "created_wall_ms";
+
+/// Current wall clock as unix milliseconds (0 if the clock is broken).
+fn wall_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+/// A JSON number that stays parseable: non-finite floats (NaN before an
+/// EM window fills, say) become `null` instead of the unparseable bare
+/// `NaN` token.
+pub fn fnum(x: f64) -> Value {
+    if x.is_finite() {
+        Value::Num(x)
+    } else {
+        Value::Null
+    }
+}
+
+/// Buffered JSONL event appender with a monotonic sequence number.
+///
+/// Each emitted line is one JSON object with the required keys
+/// `seq` / `wall_ms` / `sim_s` / `round` / `kind` / `name`, a
+/// kind-specific payload (`dur_s` for spans, `value` for
+/// counters/gauges), and an optional `attrs` object. Lines are flushed
+/// on drop, so the stream is complete even when the run ends by falling
+/// out of scope. Write errors never fail the run — telemetry is an
+/// observer, not a participant — they are counted instead.
+pub struct Appender {
+    out: BufWriter<File>,
+    path: PathBuf,
+    seq: u64,
+    dropped_writes: u64,
+}
+
+impl Appender {
+    /// Create (truncate) the JSONL stream at `path`, creating missing
+    /// parent directories.
+    pub fn create(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating telemetry dir {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating telemetry stream {}", path.display()))?;
+        Ok(Appender {
+            out: BufWriter::new(f),
+            path: path.to_path_buf(),
+            seq: 0,
+            dropped_writes: 0,
+        })
+    }
+
+    /// The stream's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Lines successfully emitted so far (== the next sequence number).
+    pub fn lines(&self) -> u64 {
+        self.seq
+    }
+
+    /// Lines lost to I/O errors (telemetry never fails the run).
+    pub fn dropped_writes(&self) -> u64 {
+        self.dropped_writes
+    }
+
+    /// Emit one event line. `payload` and `attrs` keys must not collide
+    /// with the required keys (they would overwrite them).
+    fn emit(
+        &mut self,
+        kind: &str,
+        name: &str,
+        round: usize,
+        sim_s: f64,
+        payload: &[(&str, Value)],
+        attrs: &[(&str, Value)],
+    ) {
+        let mut m = BTreeMap::new();
+        m.insert("seq".to_string(), Value::Num(self.seq as f64));
+        m.insert("wall_ms".to_string(), Value::Num(wall_ms() as f64));
+        m.insert("sim_s".to_string(), fnum(sim_s));
+        m.insert("round".to_string(), Value::Num(round as f64));
+        m.insert("kind".to_string(), Value::Str(kind.to_string()));
+        m.insert("name".to_string(), Value::Str(name.to_string()));
+        for (k, v) in payload {
+            m.insert((*k).to_string(), v.clone());
+        }
+        if !attrs.is_empty() {
+            let a: BTreeMap<String, Value> =
+                attrs.iter().map(|(k, v)| ((*k).to_string(), v.clone())).collect();
+            m.insert("attrs".to_string(), Value::Obj(a));
+        }
+        let line = Value::Obj(m).to_json();
+        if writeln!(self.out, "{line}").is_ok() {
+            self.seq += 1;
+        } else {
+            self.dropped_writes += 1;
+        }
+    }
+
+    /// Emit a named span: a timed section of the round loop, `dur_s`
+    /// wall seconds long, stamped with the round and its virtual time.
+    pub fn span(
+        &mut self,
+        name: &str,
+        round: usize,
+        sim_s: f64,
+        dur_s: f64,
+        attrs: &[(&str, Value)],
+    ) {
+        self.emit("span", name, round, sim_s, &[("dur_s", fnum(dur_s))], attrs);
+    }
+
+    /// Emit a counter: a cumulative monotone quantity (bytes, merges…).
+    pub fn counter(
+        &mut self,
+        name: &str,
+        round: usize,
+        sim_s: f64,
+        value: f64,
+        attrs: &[(&str, Value)],
+    ) {
+        self.emit("counter", name, round, sim_s, &[("value", fnum(value))], attrs);
+    }
+
+    /// Emit a gauge: an instantaneous level (queue depth, EM scalar…).
+    pub fn gauge(
+        &mut self,
+        name: &str,
+        round: usize,
+        sim_s: f64,
+        value: f64,
+        attrs: &[(&str, Value)],
+    ) {
+        self.emit("gauge", name, round, sim_s, &[("value", fnum(value))], attrs);
+    }
+
+    /// Flush buffered lines to disk (best-effort; also runs on drop).
+    pub fn flush(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+impl Drop for Appender {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+impl std::fmt::Debug for Appender {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Appender")
+            .field("path", &self.path)
+            .field("seq", &self.seq)
+            .field("dropped_writes", &self.dropped_writes)
+            .finish()
+    }
+}
+
+// ---- sha256 (hand-rolled: the crate is dependency-free by policy) ------
+
+const SHA256_K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// SHA-256 of `data` as a lowercase hex string (FIPS 180-4; verified
+/// against the standard test vectors in this module's tests). Hand-rolled
+/// because the crate takes no dependencies beyond `anyhow`.
+pub fn sha256_hex(data: &[u8]) -> String {
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let bitlen = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+
+    let mut w = [0u32; 64];
+    for chunk in msg.chunks_exact(64) {
+        for (i, word) in w.iter_mut().take(16).enumerate() {
+            *word = u32::from_be_bytes([
+                chunk[4 * i],
+                chunk[4 * i + 1],
+                chunk[4 * i + 2],
+                chunk[4 * i + 3],
+            ]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16].wrapping_add(s0).wrapping_add(w[i - 7]).wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ ((!e) & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(SHA256_K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(64);
+    for x in h {
+        let _ = write!(out, "{x:08x}");
+    }
+    out
+}
+
+// ---- resolved-config serialization + hash ------------------------------
+
+fn n_usize(x: usize) -> Value {
+    Value::Num(x as f64)
+}
+
+fn n_u64(x: u64) -> Value {
+    Value::Num(x as f64)
+}
+
+fn n_str(x: &str) -> Value {
+    Value::Str(x.to_string())
+}
+
+fn opt_f64(x: Option<f64>) -> Value {
+    match x {
+        Some(v) => fnum(v),
+        None => Value::Null,
+    }
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Canonical JSON image of a resolved [`RunConfig`]: every field, in
+/// deterministic (sorted-key) order. [`config_sha256`] hashes this text,
+/// so any flag change — CLI or programmatic — changes the hash. The
+/// `seed` is emitted as a *string* so 64-bit values survive exactly
+/// (JSON numbers here are f64).
+pub fn config_value(cfg: &RunConfig) -> Value {
+    let f = &cfg.fleet;
+    obj(vec![
+        ("model_tag", n_str(&cfg.model_tag)),
+        ("num_clients", n_usize(cfg.num_clients)),
+        ("per_round", n_usize(cfg.per_round)),
+        ("total_samples", n_usize(cfg.total_samples)),
+        ("dirichlet_alpha", opt_f64(cfg.dirichlet_alpha)),
+        ("lr", fnum(cfg.lr as f64)),
+        ("lr_step_decay", fnum(cfg.lr_step_decay as f64)),
+        ("eval_every", n_usize(cfg.eval_every)),
+        ("max_rounds_per_step", n_usize(cfg.max_rounds_per_step)),
+        ("min_rounds_per_step", n_usize(cfg.min_rounds_per_step)),
+        ("max_rounds_total", n_usize(cfg.max_rounds_total)),
+        ("distill_rounds", n_usize(cfg.distill_rounds)),
+        ("shrinking", Value::Bool(cfg.shrinking)),
+        (
+            "freeze",
+            obj(vec![
+                ("window_h", n_usize(cfg.freeze.window_h)),
+                ("phi", fnum(cfg.freeze.phi)),
+                ("patience_w", n_usize(cfg.freeze.patience_w)),
+                ("fit_points", n_usize(cfg.freeze.fit_points)),
+                ("min_observations", n_usize(cfg.freeze.min_observations)),
+            ]),
+        ),
+        (
+            "memory",
+            obj(vec![
+                ("budget_min_mb", n_u64(cfg.memory.budget_min_mb)),
+                ("budget_max_mb", n_u64(cfg.memory.budget_max_mb)),
+                ("contention_lo", fnum(cfg.memory.contention_lo)),
+                ("accounting_batch", n_u64(cfg.memory.accounting_batch)),
+            ]),
+        ),
+        (
+            "fleet",
+            obj(vec![
+                ("profile", n_str(&f.profile)),
+                ("round_policy", n_str(&f.round_policy)),
+                ("deadline_s", fnum(f.deadline_s)),
+                ("over_select_extra", n_usize(f.over_select_extra)),
+                ("dropout_p", opt_f64(f.dropout_p)),
+                ("buffer_k", match f.buffer_k {
+                    Some(k) => n_usize(k),
+                    None => Value::Null,
+                }),
+                ("staleness_alpha", fnum(f.staleness_alpha)),
+                ("max_staleness", n_usize(f.max_staleness)),
+                ("stale_projection", n_str(&f.stale_projection)),
+                ("projection_decay", fnum(f.projection_decay)),
+                ("churn_policy", n_str(&f.churn_policy)),
+                ("churn_epochs", n_usize(f.churn_epochs)),
+                ("trace_period_s", opt_f64(f.trace_period_s)),
+                ("trace_duty", opt_f64(f.trace_duty)),
+                ("lazy_pool", Value::Bool(f.lazy_pool)),
+            ]),
+        ),
+        ("acc_tail", n_usize(cfg.acc_tail)),
+        ("seed", n_str(&cfg.seed.to_string())),
+        ("telemetry_jsonl", match &cfg.telemetry_jsonl {
+            Some(p) => n_str(p),
+            None => Value::Null,
+        }),
+    ])
+}
+
+/// sha256 over the canonical JSON of the resolved config — the manifest's
+/// reproducible config fingerprint.
+pub fn config_sha256(cfg: &RunConfig) -> String {
+    sha256_hex(config_value(cfg).to_json().as_bytes())
+}
+
+// ---- run manifest ------------------------------------------------------
+
+/// `git describe --always --dirty --tags` of the working tree, or
+/// `"unknown"` outside a git checkout (manifests must never fail a run).
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty", "--tags"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Number of newline-terminated lines in the file at `path` (0 when the
+/// file is absent/unreadable) — how `main` counts a finished run's
+/// telemetry stream for the manifest without holding the appender open.
+pub fn count_lines(path: &Path) -> u64 {
+    std::fs::read_to_string(path).map(|s| s.lines().count() as u64).unwrap_or(0)
+}
+
+/// Build the run-provenance manifest. Deterministic except for the
+/// single [`MANIFEST_WALL_KEY`] field: same config + seed + summary ⇒
+/// identical JSON after stripping that key (tested). `telemetry` carries
+/// the finished stream's `(path, line_count)` when one was written.
+pub fn build_manifest(
+    cfg: &RunConfig,
+    argv: &[String],
+    summary: Option<&RunSummary>,
+    telemetry: Option<(&Path, u64)>,
+) -> Value {
+    let summary_value = match summary {
+        None => Value::Null,
+        Some(s) => {
+            let mut history_text = String::new();
+            for r in &s.history {
+                history_text.push_str(&r.csv_row());
+                history_text.push('\n');
+            }
+            obj(vec![
+                ("method", n_str(&s.method)),
+                ("model_tag", n_str(&s.model_tag)),
+                ("partition", n_str(&s.partition)),
+                ("final_acc", fnum(s.final_acc)),
+                ("participation_rate", fnum(s.participation_rate)),
+                ("peak_client_mem", n_u64(s.peak_client_mem)),
+                ("total_bytes_up", n_u64(s.total_bytes_up)),
+                ("total_bytes_down", n_u64(s.total_bytes_down)),
+                ("rounds", n_usize(s.rounds)),
+                ("sim_time_s", fnum(s.sim_time_s)),
+                ("late_merges", n_usize(s.late_merges())),
+                ("late_drops", n_usize(s.late_drops())),
+                ("projected_merges", n_usize(s.projected_merges())),
+                ("projected_dropped_params", n_u64(s.projected_dropped_params())),
+                ("transitions", n_usize(s.transitions.len())),
+                ("history_rounds", n_usize(s.history.len())),
+                ("history_sha256", n_str(&sha256_hex(history_text.as_bytes()))),
+            ])
+        }
+    };
+    let telemetry_value = match telemetry {
+        None => Value::Null,
+        Some((path, lines)) => obj(vec![
+            ("path", n_str(&path.display().to_string())),
+            ("lines", n_u64(lines)),
+        ]),
+    };
+    obj(vec![
+        ("schema", n_u64(MANIFEST_SCHEMA)),
+        (MANIFEST_WALL_KEY, n_u64(wall_ms())),
+        ("crate_version", n_str(env!("CARGO_PKG_VERSION"))),
+        ("git_describe", n_str(&git_describe())),
+        ("argv", Value::Arr(argv.iter().map(|a| n_str(a)).collect())),
+        ("seed", n_str(&cfg.seed.to_string())),
+        ("config", config_value(cfg)),
+        ("config_sha256", n_str(&config_sha256(cfg))),
+        ("telemetry", telemetry_value),
+        ("summary", summary_value),
+    ])
+}
+
+/// Write `manifest` (pretty: one compact JSON object + newline) to
+/// `path`, creating missing parent directories.
+pub fn write_manifest(path: &Path, manifest: &Value) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating manifest dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, manifest.to_json() + "\n")
+        .with_context(|| format!("writing manifest {}", path.display()))
+}
+
+/// Strip the wall-time field from a manifest, for reproducibility
+/// comparisons (two same-config runs are identical after this).
+pub fn strip_wall_time(manifest: &Value) -> Value {
+    match manifest {
+        Value::Obj(m) => {
+            let mut m = m.clone();
+            m.remove(MANIFEST_WALL_KEY);
+            Value::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join("profl_telemetry_unit").join(name)
+    }
+
+    #[test]
+    fn sha256_standard_vectors() {
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // Cross the one-block boundary (padding of a 64-byte message
+        // spills into a second block).
+        assert_eq!(
+            sha256_hex(&[b'a'; 64]),
+            "ffe054fe7ae0cb6dc65c3af9b61d5209f439851db43d0ba5997337df154668eb"
+        );
+    }
+
+    #[test]
+    fn appender_orders_escapes_and_flushes_on_drop() {
+        let path = tmp("appender_basic.jsonl");
+        {
+            let mut a = Appender::create(&path).unwrap();
+            a.span("round.simulate", 1, 30.0, 0.001, &[("cohort", n_usize(8))]);
+            a.counter("round.late_merged", 1, 30.0, 2.0, &[]);
+            // Hostile content: quotes, backslashes, newlines, controls.
+            a.gauge("freeze.em", 2, 60.5, f64::NAN, &[(
+                "note",
+                n_str("line\nbreak \"quoted\" back\\slash \t tab \u{1} ctl"),
+            )]);
+            assert_eq!(a.lines(), 3);
+            assert_eq!(a.dropped_writes(), 0);
+            // No explicit flush: drop must do it.
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let mut prev_seq = -1i64;
+        for line in &lines {
+            let v = Value::parse(line).unwrap();
+            let seq = v.get("seq").unwrap().as_u64().unwrap() as i64;
+            assert!(seq > prev_seq, "seq strictly increasing");
+            prev_seq = seq;
+            for key in ["seq", "wall_ms", "sim_s", "round", "kind", "name"] {
+                assert!(v.get(key).is_ok(), "required key {key} missing in {line}");
+            }
+        }
+        let v0 = Value::parse(lines[0]).unwrap();
+        assert_eq!(v0.get("kind").unwrap().as_str().unwrap(), "span");
+        assert_eq!(v0.get("name").unwrap().as_str().unwrap(), "round.simulate");
+        assert!(v0.get("dur_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            v0.get("attrs").unwrap().get("cohort").unwrap().as_usize().unwrap(),
+            8
+        );
+        // NaN gauges must still parse (they serialize as null).
+        let v2 = Value::parse(lines[2]).unwrap();
+        assert_eq!(v2.get("value").unwrap(), &Value::Null);
+        assert!(v2.get("attrs").unwrap().get("note").unwrap().as_str().unwrap().contains('\n'));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn count_lines_counts_and_tolerates_absence() {
+        let path = tmp("count_lines.jsonl");
+        {
+            let mut a = Appender::create(&path).unwrap();
+            for i in 0..5 {
+                a.counter("c", i, 0.0, i as f64, &[]);
+            }
+        }
+        assert_eq!(count_lines(&path), 5);
+        assert_eq!(count_lines(Path::new("/nonexistent/profl/stream.jsonl")), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn manifest_is_deterministic_modulo_wall_time() {
+        let cfg = RunConfig::default();
+        let argv = vec!["profl".to_string(), "run".to_string()];
+        let m1 = build_manifest(&cfg, &argv, None, None);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let m2 = build_manifest(&cfg, &argv, None, None);
+        assert_eq!(
+            strip_wall_time(&m1).to_json(),
+            strip_wall_time(&m2).to_json(),
+            "same config + argv ⇒ identical manifests modulo wall time"
+        );
+        // The manifest round-trips through the strict parser.
+        let parsed = Value::parse(&m1.to_json()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_u64().unwrap(), MANIFEST_SCHEMA);
+        assert_eq!(
+            parsed.get("config_sha256").unwrap().as_str().unwrap().len(),
+            64
+        );
+        assert_eq!(parsed.get("seed").unwrap().as_str().unwrap(), "42");
+    }
+
+    #[test]
+    fn config_hash_changes_when_any_flag_changes() {
+        let base = RunConfig::default();
+        let h0 = config_sha256(&base);
+        assert_eq!(h0, config_sha256(&base.clone()), "hash is reproducible");
+
+        let mut c = base.clone();
+        c.seed = 43;
+        assert_ne!(h0, config_sha256(&c), "seed");
+        let mut c = base.clone();
+        c.fleet.round_policy = "async".into();
+        assert_ne!(h0, config_sha256(&c), "round policy");
+        let mut c = base.clone();
+        c.fleet.churn_policy = "resume".into();
+        assert_ne!(h0, config_sha256(&c), "churn policy");
+        let mut c = base.clone();
+        c.fleet.stale_projection = "on".into();
+        assert_ne!(h0, config_sha256(&c), "projection");
+        let mut c = base.clone();
+        c.dirichlet_alpha = Some(0.5);
+        assert_ne!(h0, config_sha256(&c), "alpha");
+        let mut c = base.clone();
+        c.telemetry_jsonl = Some("t.jsonl".into());
+        assert_ne!(h0, config_sha256(&c), "telemetry path");
+        let mut c = base.clone();
+        c.fleet.lazy_pool = true;
+        assert_ne!(h0, config_sha256(&c), "lazy pool");
+    }
+
+    #[test]
+    fn manifest_write_creates_parents_and_roundtrips() {
+        let path = tmp("nested/deeper/manifest.json");
+        let cfg = RunConfig::smoke("m");
+        let m = build_manifest(&cfg, &["x".to_string()], None, Some((Path::new("t.jsonl"), 7)));
+        write_manifest(&path, &m).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(text.trim()).unwrap();
+        let tel = v.get("telemetry").unwrap();
+        assert_eq!(tel.get("path").unwrap().as_str().unwrap(), "t.jsonl");
+        assert_eq!(tel.get("lines").unwrap().as_u64().unwrap(), 7);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,173 @@
+//! Telemetry contracts: the JSONL stream is strictly well-formed, the
+//! manifest is reproducible, and — the degeneracy contract that matters —
+//! arming telemetry changes *nothing* about a run's arithmetic: the
+//! per-round records of a telemetry-on run are bit-identical to the
+//! telemetry-off run (the hooks only read simulator state).
+//!
+//! The on/off bit-identity test needs the compiled artifacts
+//! (`make artifacts`) and skips gracefully without them; the appender
+//! property test and the manifest tests run everywhere.
+
+use profl::config::RunConfig;
+use profl::json::Value;
+use profl::methods::{Method, ProFL};
+use profl::rng::Rng;
+use profl::telemetry::{build_manifest, config_sha256, strip_wall_time, Appender};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var_os("PROFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join("profl_telemetry_it").join(name)
+}
+
+/// Property: whatever mix of events — hostile strings, non-finite
+/// numbers, empty attrs — every emitted line parses through the strict
+/// parser with the required keys, and seq strictly increases across the
+/// whole stream.
+#[test]
+fn every_line_parses_and_seq_strictly_increases() {
+    let path = tmp("property.jsonl");
+    let mut rng = Rng::new(0x7e1e);
+    {
+        let mut a = Appender::create(&path).unwrap();
+        for i in 0..500 {
+            let name = format!("ev.{}", rng.below(6));
+            let value = match rng.below(4) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => -(rng.below(1_000_000) as f64) / 7.0,
+                _ => rng.below(1_000) as f64,
+            };
+            let hostile = format!("q\"{}\" \\ \n\t\u{8} {}", rng.below(100), "\u{1f}");
+            let attrs = [("note", Value::Str(hostile)), ("i", Value::Num(i as f64))];
+            match rng.below(3) {
+                0 => a.span(&name, i, i as f64 * 1.5, value, &attrs),
+                1 => a.counter(&name, i, i as f64 * 1.5, value, &[]),
+                _ => a.gauge(&name, i, f64::NAN, value, &attrs),
+            }
+        }
+        assert_eq!(a.lines(), 500);
+        assert_eq!(a.dropped_writes(), 0);
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 500);
+    let mut prev = -1i64;
+    for line in lines {
+        let v = Value::parse(line).unwrap_or_else(|e| panic!("unparseable line {line}: {e}"));
+        for key in ["seq", "wall_ms", "sim_s", "round", "kind", "name"] {
+            assert!(v.get(key).is_ok(), "missing `{key}` in {line}");
+        }
+        let seq = v.get("seq").unwrap().as_u64().unwrap() as i64;
+        assert!(seq > prev, "seq {seq} after {prev}");
+        prev = seq;
+        match v.get("kind").unwrap().as_str().unwrap() {
+            "span" => assert!(v.get("dur_s").is_ok()),
+            "counter" | "gauge" => assert!(v.get("value").is_ok()),
+            other => panic!("unknown kind {other}"),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn manifests_reproducible_and_hash_tracks_flags() {
+    let mut cfg = RunConfig::smoke("m");
+    cfg.telemetry_jsonl = Some("stream.jsonl".into());
+    let argv = vec!["profl".into(), "run".into(), "--method".into(), "profl".into()];
+    let m1 = build_manifest(&cfg, &argv, None, None);
+    let m2 = build_manifest(&cfg, &argv, None, None);
+    assert_eq!(
+        strip_wall_time(&m1).to_json(),
+        strip_wall_time(&m2).to_json(),
+        "identical runs ⇒ identical manifests modulo wall time"
+    );
+    // The config hash in the manifest is the canonical one, and any flag
+    // change moves it.
+    let h = m1.get("config_sha256").unwrap().as_str().unwrap().to_string();
+    assert_eq!(h, config_sha256(&cfg));
+    let mut flipped = cfg.clone();
+    flipped.fleet.round_policy = "async".into();
+    let m3 = build_manifest(&flipped, &argv, None, None);
+    assert_ne!(h, m3.get("config_sha256").unwrap().as_str().unwrap());
+}
+
+/// The tentpole degeneracy contract: a run with telemetry armed produces
+/// bit-identical per-round records to the same run with telemetry off —
+/// and the stream it writes is a parseable account of every layer
+/// (dispatch, simulate, merge, pool cache, freeze detector).
+#[test]
+fn telemetry_on_is_bit_identical_to_off_and_stream_covers_the_layers() {
+    let dir = require_artifacts!();
+    let rt = profl::Runtime::new(&dir).unwrap();
+    let mut cfg = RunConfig::smoke("resnet18_w8_c10");
+    cfg.num_clients = 6;
+    cfg.per_round = 3;
+    cfg.total_samples = 600;
+    cfg.max_rounds_per_step = 3;
+    cfg.min_rounds_per_step = 1;
+    cfg.max_rounds_total = 6;
+    cfg.distill_rounds = 1;
+    cfg.eval_every = 3;
+    cfg.fleet.lazy_pool = true;
+
+    let off = ProFL::default().run(&rt, &cfg).unwrap();
+
+    let stream = tmp("on_off/telemetry.jsonl");
+    let mut cfg_on = cfg.clone();
+    cfg_on.telemetry_jsonl = Some(stream.display().to_string());
+    let on = ProFL::default().run(&rt, &cfg_on).unwrap();
+
+    assert_eq!(off.history.len(), on.history.len(), "round counts diverged");
+    for (a, b) in off.history.iter().zip(on.history.iter()) {
+        assert_eq!(a.csv_row(), b.csv_row(), "telemetry perturbed round {}", a.round);
+    }
+    assert_eq!(off.final_acc.to_bits(), on.final_acc.to_bits());
+    assert_eq!(off.sim_time_s.to_bits(), on.sim_time_s.to_bits());
+
+    // The stream exists, parses, and covers every instrumented layer.
+    let text = std::fs::read_to_string(&stream).unwrap();
+    let mut names = std::collections::BTreeSet::new();
+    let mut prev = -1i64;
+    for line in text.lines() {
+        let v = Value::parse(line).unwrap();
+        let seq = v.get("seq").unwrap().as_u64().unwrap() as i64;
+        assert!(seq > prev, "seq not strictly increasing");
+        prev = seq;
+        names.insert(v.get("name").unwrap().as_str().unwrap().to_string());
+    }
+    for expected in [
+        "round.dispatch",
+        "round.simulate",
+        "aggregate.merge",
+        "freeze.observe",
+        "freeze.em",
+        "round.participants",
+        "round.bytes_up",
+        "pool.cache_hits",
+        "pool.peak_materialized",
+        "fleet.queue_peak",
+        "coordinator.pending_len",
+    ] {
+        assert!(names.contains(expected), "stream never emitted `{expected}`; saw {names:?}");
+    }
+    std::fs::remove_file(&stream).ok();
+}
