@@ -2,7 +2,7 @@
 # (fmt + clippy + tests); see ROADMAP.md.
 
 .PHONY: check docs artifacts test-golden test-golden-update smoke-examples \
-        bench-json bench-json-smoke telemetry-smoke
+        bench-json bench-json-smoke telemetry-smoke strategy-smoke
 
 check:
 	./rust/check.sh
@@ -36,6 +36,14 @@ smoke-examples:
 # docs/OBSERVABILITY.md).
 telemetry-smoke:
 	cargo run --release --example telemetry_tour -- --smoke
+
+# Strategy-zoo smoke gate: enumerate every MemoryStrategy schedule,
+# assert the ProFL/ParamAware trait port reproduces the legacy schedule
+# phase-for-phase, and drive all four strategies head-to-head through
+# the fleet engine with footprint/dispatch self-validation (the binary
+# exits non-zero on any violation; see docs/STRATEGIES.md).
+strategy-smoke:
+	cargo run --release --example strategy_zoo -- --smoke
 
 # Fleet-scale perf trajectory: run the artifact-free round-scheduling
 # bench across fleet sizes (1e3 → 1e6) and write BENCH_fleet.json at the

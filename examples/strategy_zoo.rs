@@ -1,0 +1,438 @@
+//! Memory-wall strategy zoo — every [`MemoryStrategy`] head-to-head
+//! over the same seeded fleets: accuracy proxy × peak client memory ×
+//! time-to-accuracy × communication, across fleet profiles, round
+//! policies, and churn.
+//!
+//! Artifact-free: schedules are enumerated against a synthetic
+//! [`ModelView`] (ResNet18-scale block parameter counts), footprints
+//! come from the pure `layout_mem` model, and rounds are driven through
+//! the discrete-event fleet engine — so this runs anywhere, CI smoke
+//! mode included.
+//!
+//! Self-validating — the run aborts (non-zero exit) unless:
+//! 1. ProFL and ParamAware enumerated via the [`MemoryStrategy`] trait
+//!    reproduce an *inline transcription of the legacy schedule* phase
+//!    for phase (stage, step, layout, artifacts, budgets, learning
+//!    rates) — the refactor's schedule-level degeneracy contract.
+//! 2. No phase's footprint exceeds full-model training, and every
+//!    client the memory filter admits also fits the dispatched layout
+//!    statically (`can_train ⇒ fits_static`).
+//! 3. LayerFreeze's per-client depth caps fit each device's budget.
+//!
+//!   cargo run --release --example strategy_zoo
+//!   cargo run --release --example strategy_zoo -- --smoke
+//!   cargo run --release --example strategy_zoo -- --clients 200 --seed 7
+//!
+//! Everything is seeded: same flags ⇒ byte-identical output. The
+//! "accuracy" column is a *coverage proxy* (how much of the model
+//! trained, for how many rounds), not a learned accuracy — the zoo
+//! compares schedules, not gradients; see docs/STRATEGIES.md.
+
+use anyhow::{bail, Result};
+use profl::cli::Args;
+use profl::clients::ClientPool;
+use profl::config::{FleetCfg, RunConfig};
+use profl::data::{Partition, SyntheticDataset};
+use profl::fleet::{ChurnPolicy, ClientWork, FleetEngine, RoundPolicy};
+use profl::harness::save_text;
+use profl::memory::{can_train, MemoryConfig};
+use profl::rng::Rng;
+use profl::strategy::{
+    depth_cap, layout_mem, BlockLayout, Elastic, FreezePolicy, LayerFreeze, MemoryStrategy,
+    ModelView, Phase, Progressive, StepFeedback,
+};
+
+/// ResNet18-scale block parameter counts (the manifest's 4-block split).
+const COUNTS: [u64; 4] = [2_000_000, 3_000_000, 3_000_000, 3_200_000];
+
+/// Rounds an EM-gated phase takes to "converge" in the synthetic
+/// feedback script (deterministic stand-in for the freeze detector).
+const CONV_ROUNDS: usize = 3;
+
+/// Enumerate a strategy's full schedule under the synthetic feedback
+/// script: EM-gated train phases converge after [`CONV_ROUNDS`], others
+/// run out their budget, distillation always completes.
+fn enumerate(s: &mut dyn MemoryStrategy, view: &ModelView, cfg: &RunConfig) -> Vec<Phase> {
+    let mut phases = Vec::new();
+    let mut last: Option<StepFeedback> = None;
+    while let Some(p) = s.next_phase(view, cfg, last.as_ref()) {
+        last = match &p {
+            Phase::Transition => None,
+            Phase::Train(t) => {
+                let used = if t.em_gated { CONV_ROUNDS.min(t.max_rounds) } else { t.max_rounds };
+                Some(StepFeedback { rounds_used: used, froze: t.em_gated && used < t.max_rounds })
+            }
+            Phase::Distill(d) => Some(StepFeedback { rounds_used: d.rounds, froze: false }),
+        };
+        phases.push(p);
+    }
+    phases
+}
+
+/// One expected phase of the legacy ProFL schedule (independent
+/// transcription of the pre-refactor `methods::profl` loops).
+#[derive(Debug, PartialEq)]
+enum Expect {
+    Transition,
+    Train { stage: &'static str, step: usize, max_rounds: usize, lr: f32 },
+    Distill { step: usize, rounds: usize },
+}
+
+/// Inline transcription of the legacy schedule arithmetic: shrink T→2
+/// (train + Map distill per step), then grow 1→T, sharing one
+/// `2 × max_rounds_total` budget, with per-step grow floors and lr
+/// decay. Kept deliberately separate from `strategy::progressive` so a
+/// port bug cannot hide in shared code.
+fn legacy_schedule(cfg: &RunConfig, policy: FreezePolicy, num_blocks: usize) -> Vec<Expect> {
+    let param_aware = |t: usize| -> usize {
+        let total: u64 = COUNTS.iter().sum();
+        let share = COUNTS[t - 1] as f64 / total as f64;
+        let budget = cfg.max_rounds_per_step * COUNTS.len();
+        ((budget as f64 * share) as usize).max(4)
+    };
+    let step_max = |t: usize, budget: usize| -> usize {
+        match policy {
+            FreezePolicy::EffectiveMovement => cfg.max_rounds_per_step.min(budget),
+            FreezePolicy::ParamAware => param_aware(t).min(budget),
+        }
+    };
+    // ParamAware phases never EM-gate, so they always run their budget
+    // out; EM phases "converge" per the synthetic feedback script.
+    let used = |max: usize| -> usize {
+        match policy {
+            FreezePolicy::EffectiveMovement => CONV_ROUNDS.min(max),
+            FreezePolicy::ParamAware => max,
+        }
+    };
+    let mut out = Vec::new();
+    let mut lr = cfg.lr;
+    let mut remaining = cfg.max_rounds_total * 2;
+    if cfg.shrinking && num_blocks >= 2 {
+        for t in (2..=num_blocks).rev() {
+            out.push(Expect::Transition);
+            let max = step_max(t, remaining);
+            out.push(Expect::Train { stage: "shrink", step: t, max_rounds: max, lr });
+            remaining = remaining.saturating_sub(used(max));
+            out.push(Expect::Distill { step: t, rounds: cfg.distill_rounds });
+            remaining = remaining.saturating_sub(cfg.distill_rounds);
+        }
+    }
+    for t in 1..=num_blocks {
+        out.push(Expect::Transition);
+        let budget = remaining.max(cfg.min_rounds_per_step);
+        let max = step_max(t, budget);
+        out.push(Expect::Train { stage: "grow", step: t, max_rounds: max, lr });
+        remaining = remaining.saturating_sub(used(max));
+        lr *= cfg.lr_step_decay;
+    }
+    out
+}
+
+/// Assert the trait-enumerated schedule matches the legacy
+/// transcription phase for phase (the degeneracy proof).
+fn assert_degeneracy(cfg: &RunConfig, policy: FreezePolicy) -> Result<()> {
+    let view = ModelView::synthetic(&COUNTS);
+    let mut s = Progressive::new(policy);
+    let got = enumerate(&mut s, &view, cfg);
+    let expect = legacy_schedule(cfg, policy, view.num_blocks);
+    if got.len() != expect.len() {
+        bail!("{policy:?}: {} phases via trait, {} via legacy", got.len(), expect.len());
+    }
+    for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+        let ok = match (g, e) {
+            (Phase::Transition, Expect::Transition) => true,
+            (Phase::Train(t), Expect::Train { stage, step, max_rounds, lr }) => {
+                t.stage == *stage
+                    && t.step == *step
+                    && t.max_rounds == *max_rounds
+                    && t.lr == *lr
+                    && t.layout == BlockLayout { frozen: step - 1, depth: *step }
+                    && t.train_artifact == format!("train_t{step}")
+                    && t.fallback_artifact.as_deref() == Some(&format!("train_op_t{step}")[..])
+                    && t.eval_artifact == format!("eval_t{step}")
+            }
+            (Phase::Distill(d), Expect::Distill { step, rounds }) => {
+                d.step == *step && d.rounds == *rounds && d.artifact == format!("distill_t{step}")
+            }
+            _ => false,
+        };
+        if !ok {
+            bail!("{policy:?}: phase {i} diverged — trait {g:?} vs legacy {e:?}");
+        }
+    }
+    Ok(())
+}
+
+/// Per-round cohort timings for a phase footprint: download/upload move
+/// the trainable parameters, training cost scales with the footprint.
+fn works_for(pool: &ClientPool, ids: &[(usize, BlockLayout)], start: f64) -> Vec<ClientWork> {
+    ids.iter()
+        .map(|&(cid, layout)| {
+            let m = layout_mem(&COUNTS, &layout);
+            let bytes = 4 * m.params_trainable;
+            let c = pool.client(cid);
+            let p = &c.profile;
+            ClientWork {
+                id: cid,
+                ready_s: p.trace.next_online(start),
+                down_s: p.down_time_s(bytes),
+                train_s: p.train_time_s(c.shard.num_samples(), &m),
+                up_s: p.up_time_s(bytes),
+                dropout_p: p.dropout_p,
+                trace: p.trace,
+            }
+        })
+        .collect()
+}
+
+/// One head-to-head row.
+struct RowOut {
+    acc: f64,
+    peak_mem_mb: f64,
+    time_to_acc: Option<f64>,
+    comm_mb: f64,
+    sim_s: f64,
+    participants: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_combo(
+    strategy: &mut dyn MemoryStrategy,
+    cfg: &RunConfig,
+    pool: &mut ClientPool,
+    engine: &mut FleetEngine,
+    policy: RoundPolicy,
+    keep: usize,
+    churn: ChurnPolicy,
+    per_round: usize,
+    seed: u64,
+) -> Result<RowOut> {
+    let view = ModelView::synthetic(&COUNTS);
+    let mcfg: MemoryConfig = cfg.memory.into();
+    let batch = mcfg.accounting_batch;
+    let total_params: u64 = COUNTS.iter().sum();
+    let full_bytes = layout_mem(&COUNTS, &BlockLayout::full(COUNTS.len())).bytes_at(batch);
+    let layerfreeze = strategy.name() == "LayerFreeze";
+    let phases = enumerate(strategy, &view, cfg);
+
+    let mut cohort_rng = Rng::new(seed ^ 0xc0_4047);
+    let mut fleet_rng = Rng::new(seed ^ 0xf1ee_7c10);
+    engine.reset();
+    let mut start = 0.0f64;
+    let mut round = 0usize;
+    // Coverage proxy: block-rounds of training, parameter-weighted.
+    let mut coverage = vec![0.0f64; COUNTS.len()];
+    let need_rounds = 6.0;
+    let acc_of = |cov: &[f64]| -> f64 {
+        let trained: f64 = cov
+            .iter()
+            .zip(&COUNTS)
+            .map(|(c, &p)| (c / need_rounds).min(1.0) * p as f64)
+            .sum();
+        0.40 + 0.50 * trained / total_params as f64
+    };
+    let target_acc = 0.75;
+    let mut out = RowOut {
+        acc: 0.0,
+        peak_mem_mb: 0.0,
+        time_to_acc: None,
+        comm_mb: 0.0,
+        sim_s: 0.0,
+        participants: 0,
+    };
+
+    for phase in &phases {
+        let p = match phase {
+            Phase::Train(p) => p,
+            // Transitions are instantaneous here; distillation rounds
+            // move output-module-sized tensors only and do not touch
+            // coverage — the zoo compares *training* schedules.
+            _ => continue,
+        };
+        let rounds = if p.em_gated { CONV_ROUNDS.min(p.max_rounds) } else { p.max_rounds };
+        for _ in 0..rounds {
+            let busy: Vec<usize> = engine.inflight().iter().map(|u| u.client).collect();
+            let eligible: Vec<usize> = (0..pool.len()).filter(|id| !busy.contains(id)).collect();
+            let k = per_round.min(eligible.len());
+            let ids: Vec<usize> = cohort_rng
+                .sample_indices(eligible.len(), k)
+                .into_iter()
+                .map(|i| eligible[i])
+                .collect();
+            // Memory filter: the phase layout for window strategies; a
+            // per-device depth cap for layerfreeze (its defining move).
+            let mut admitted: Vec<(usize, BlockLayout)> = Vec::new();
+            for id in ids {
+                let layout = if layerfreeze {
+                    let budget = pool.client(id).memory.budget;
+                    match depth_cap(&COUNTS, p.layout.frozen, budget, batch) {
+                        Some(l) => l,
+                        None => continue,
+                    }
+                } else {
+                    p.layout
+                };
+                let m = layout_mem(&COUNTS, &layout);
+                let avail = pool.client_mut(id).memory.available(&mcfg);
+                if !can_train(avail, &mcfg, &m) {
+                    continue;
+                }
+                // Self-validation 2+3: dispatch respects the static fit
+                // and never out-costs full-model training.
+                if !pool.client(id).memory.fits_static(&mcfg, &m) {
+                    bail!("{}: client {id} admitted beyond its static budget", strategy.name());
+                }
+                let bytes = m.bytes_at(batch);
+                if bytes > full_bytes {
+                    bail!("{}: layout {layout:?} out-costs full-model training", strategy.name());
+                }
+                out.peak_mem_mb = out.peak_mem_mb.max(bytes as f64 / 1e6);
+                admitted.push((id, layout));
+            }
+            let works = works_for(pool, &admitted, start);
+            let plan =
+                engine.simulate_round(round, start, &works, policy, keep, churn, &mut fleet_rng);
+            let merged = plan.completers.len() + plan.late_arrivals.len();
+            out.participants += merged;
+            for &(_, layout) in &admitted {
+                let m = layout_mem(&COUNTS, &layout);
+                out.comm_mb += 2.0 * (4 * m.params_trainable) as f64 / 1e6;
+            }
+            if merged > 0 {
+                // The phase window is the fleet-level coverage envelope
+                // (layerfreeze clients may train shallower than it).
+                let w = (merged as f64 / works.len().max(1) as f64).min(1.0);
+                for c in coverage[p.layout.frozen..p.layout.depth].iter_mut() {
+                    *c += w;
+                }
+            }
+            start = plan.end_s;
+            round += 1;
+            let acc_now = acc_of(&coverage);
+            if out.time_to_acc.is_none() && acc_now >= target_acc {
+                out.time_to_acc = Some(start);
+            }
+        }
+    }
+    out.acc = acc_of(&coverage);
+    out.sim_s = start;
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let smoke = args.flag("smoke");
+    let clients: usize = args.parse_opt("clients")?.unwrap_or(if smoke { 20 } else { 80 });
+    let per_round: usize = args.parse_opt("per-round")?.unwrap_or(if smoke { 6 } else { 16 });
+    let seed: u64 = args.parse_opt("seed")?.unwrap_or(42);
+
+    // The smoke budget profile drives schedule enumeration in both
+    // modes — the zoo compares schedule *shapes*, and the shapes are
+    // profile-independent; --smoke only shrinks the fleet.
+    let cfg = RunConfig::smoke("resnet18_w8_c10");
+
+    // ---- 1. Degeneracy: ProFL-via-trait ≡ legacy schedule ------------
+    assert_degeneracy(&cfg, FreezePolicy::EffectiveMovement)?;
+    assert_degeneracy(&cfg, FreezePolicy::ParamAware)?;
+    let mut noshrink = cfg.clone();
+    noshrink.shrinking = false;
+    assert_degeneracy(&noshrink, FreezePolicy::EffectiveMovement)?;
+
+    let mut out = String::from("Memory-wall strategy zoo — schedule-level head-to-head\n");
+    out.push_str("degeneracy: ProFL/ParamAware via MemoryStrategy ≡ legacy schedule OK\n");
+    out.push_str(&format!(
+        "clients={clients} per_round={per_round} seed={seed} \
+         (accuracy is a coverage proxy; see docs/STRATEGIES.md)\n\n"
+    ));
+
+    // ---- 2. Head-to-head: strategies × (fleet, policy, churn) --------
+    let combos: [(&str, &str, RoundPolicy, usize, ChurnPolicy); 3] = [
+        ("uniform", "sync", RoundPolicy::Sync, usize::MAX, ChurnPolicy::None),
+        (
+            "mobile",
+            "async",
+            RoundPolicy::Async { buffer_k: (per_round / 2).max(1), max_staleness: 8 },
+            usize::MAX,
+            ChurnPolicy::Checkpoint { epochs: 4 },
+        ),
+        (
+            "datacenter",
+            "deadline:120",
+            RoundPolicy::Deadline { secs: 120.0 },
+            usize::MAX,
+            ChurnPolicy::Abort,
+        ),
+    ];
+    out.push_str(&format!(
+        "{:<12} {:<11} {:<13} {:<13} {:>6} {:>9} {:>9} {:>9} {:>9} {:>7}\n",
+        "strategy", "fleet", "policy", "churn", "acc*", "peak_MB", "t2acc_s", "comm_MB", "sim_s",
+        "merged",
+    ));
+
+    let mut engine = FleetEngine::new();
+    for (fleet_name, pname, policy, keep, churn) in combos {
+        let mut combo_cfg = cfg.clone();
+        combo_cfg.fleet = FleetCfg { profile: fleet_name.to_string(), ..FleetCfg::default() };
+        let profile = combo_cfg.fleet_profile()?;
+        let data = SyntheticDataset::new(10, seed);
+        let mut strategies: Vec<Box<dyn MemoryStrategy>> = vec![
+            Box::new(Progressive::new(FreezePolicy::EffectiveMovement)),
+            Box::new(Progressive::new(FreezePolicy::ParamAware)),
+            Box::new(LayerFreeze::default()),
+            Box::new(Elastic::default()),
+        ];
+        for s in strategies.iter_mut() {
+            let name = s.name();
+            // Fresh pool per row: device contention streams are stateful,
+            // and every strategy must see the identical fleet.
+            let mut pool = ClientPool::build(
+                clients,
+                clients * 60,
+                &data,
+                Partition::Iid,
+                combo_cfg.memory.into(),
+                &profile,
+                seed,
+            );
+            let row = run_combo(
+                s.as_mut(),
+                &combo_cfg,
+                &mut pool,
+                &mut engine,
+                policy,
+                keep,
+                churn,
+                per_round,
+                seed,
+            )?;
+            let t2acc = match row.time_to_acc {
+                Some(t) => format!("{t:.0}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<12} {:<11} {:<13} {:<13} {:>5.1}% {:>9.1} {:>9} {:>9.1} {:>9.0} {:>7}\n",
+                name,
+                fleet_name,
+                pname,
+                match churn {
+                    ChurnPolicy::None => "none",
+                    ChurnPolicy::Abort => "abort",
+                    ChurnPolicy::Resume => "resume",
+                    ChurnPolicy::Checkpoint { .. } => "checkpoint:4",
+                },
+                row.acc * 100.0,
+                row.peak_mem_mb,
+                t2acc,
+                row.comm_mb,
+                row.sim_s,
+                row.participants,
+            ));
+        }
+    }
+
+    out.push_str("\nvalidated: footprints ≤ full-model; dispatch respects fits_static; \
+                  layerfreeze per-client depth caps fit\n");
+    print!("{out}");
+    save_text("strategy_zoo", &out)?;
+    Ok(())
+}

@@ -35,6 +35,12 @@ cargo test -q
 echo "== telemetry smoke (make telemetry-smoke)"
 cargo run --release --quiet --example telemetry_tour -- --smoke
 
+# Strategy smoke gate: schedule-degeneracy assertion (trait port ≡
+# legacy ProFL schedule) plus the four-strategy head-to-head with
+# footprint/dispatch self-validation (exits non-zero on any violation).
+echo "== strategy smoke (make strategy-smoke)"
+cargo run --release --quiet --example strategy_zoo -- --smoke
+
 # The full test run above already includes the golden-trace suite; this
 # named pass keeps a loud, greppable signal when an engine change shifts
 # an event trace (regenerate with `make test-golden-update`).

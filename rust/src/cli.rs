@@ -2,6 +2,12 @@
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, positional
 //! subcommands, and generates usage text from registered options.
+//!
+//! Options are untyped at parse time — callers pull values out with
+//! [`Args::get`]/[`Args::parse_opt`] — so new flags (the strategy knobs
+//! `--strategy`/`--elastic-phases`/`--freeze-step-cap`, say) need no
+//! parser registration, only a consumer. A repeated `--key` keeps the
+//! *last* value, letting scripts append overrides to a base invocation.
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -110,6 +116,12 @@ mod tests {
         let a = args(&["run", "--fast", "--model", "m"]);
         assert!(a.flag("fast"));
         assert_eq!(a.get("model"), Some("m"));
+    }
+
+    #[test]
+    fn repeated_key_keeps_last_value() {
+        let a = args(&["run", "--strategy", "profl", "--strategy", "elastic"]);
+        assert_eq!(a.get("strategy"), Some("elastic"));
     }
 
     #[test]

@@ -45,6 +45,8 @@ pub struct RunConfig {
     pub memory: MemCfg,
     /// Fleet simulator knobs (device profiles + round policy).
     pub fleet: FleetCfg,
+    /// Memory-strategy knobs (see `docs/STRATEGIES.md`).
+    pub strategy: StrategyCfg,
     /// Tail length for the final-accuracy statistic (paper: 10).
     pub acc_tail: usize,
     /// Run seed: every stochastic stream forks from it.
@@ -165,6 +167,30 @@ impl Default for FleetCfg {
     }
 }
 
+/// Memory-strategy section: which strategy a `run` executes and the
+/// strategy-specific knobs (see `strategy::` module docs and
+/// `docs/STRATEGIES.md`). Defaults leave every knob unset, which is
+/// bit-for-bit the pre-strategy behaviour.
+#[derive(Debug, Clone, Default)]
+pub struct StrategyCfg {
+    /// Strategy override for the `run` subcommand: when set, the run
+    /// executes this memory strategy regardless of `--method`
+    /// (`profl | paramaware | layerfreeze | elastic`). `None` (the
+    /// default) keeps `--method` in charge. CLI: `--strategy`.
+    pub name: Option<String>,
+    /// `elastic`: number of memory-budget-curve phases; `None` plans
+    /// one per block. CLI: `--elastic-phases`.
+    pub elastic_phases: Option<usize>,
+    /// `layerfreeze`: optional per-step round cap; `None` (the default)
+    /// lets each front block train until the EM detector freezes it.
+    /// CLI: `--freeze-step-cap`.
+    pub freeze_step_cap: Option<usize>,
+}
+
+/// Strategy names accepted by [`RunConfig::strategy_name`], in display
+/// order. Every entry is also a `methods::by_name` spelling.
+pub const STRATEGY_NAMES: [&str; 4] = ["profl", "paramaware", "layerfreeze", "elastic"];
+
 /// Plain-data twin of freezing::FreezeConfig.
 #[derive(Debug, Clone, Copy)]
 pub struct FreezeCfg {
@@ -235,6 +261,7 @@ impl Default for RunConfig {
             freeze: FreezeCfg { window_h: 3, phi: 0.01, patience_w: 3, fit_points: 5, min_observations: 6 },
             memory: MemCfg { budget_min_mb: 100, budget_max_mb: 900, contention_lo: 0.7, accounting_batch: 128 },
             fleet: FleetCfg::default(),
+            strategy: StrategyCfg::default(),
             acc_tail: 10,
             seed: 42,
             telemetry_jsonl: None,
@@ -329,6 +356,38 @@ impl RunConfig {
         Ok(policy)
     }
 
+    /// Resolve the `--strategy` override: `Ok(Some(name))` for a known
+    /// strategy (normalized to lowercase), `Ok(None)` when unset, and
+    /// an error for unknown spellings — plus fail-fast validation of
+    /// the strategy-specific knobs (a zero cap or zero phase count can
+    /// never make progress).
+    pub fn strategy_name(&self) -> Result<Option<String>> {
+        if let Some(n) = self.strategy.elastic_phases {
+            if n == 0 {
+                anyhow::bail!("elastic-phases must be >= 1, got 0");
+            }
+        }
+        if let Some(c) = self.strategy.freeze_step_cap {
+            if c == 0 {
+                anyhow::bail!("freeze-step-cap must be >= 1, got 0");
+            }
+        }
+        match &self.strategy.name {
+            None => Ok(None),
+            Some(raw) => {
+                let lower = raw.to_ascii_lowercase();
+                if STRATEGY_NAMES.contains(&lower.as_str()) {
+                    Ok(Some(lower))
+                } else {
+                    anyhow::bail!(
+                        "unknown strategy `{raw}` (expected one of: {})",
+                        STRATEGY_NAMES.join("|")
+                    )
+                }
+            }
+        }
+    }
+
     /// A smoke-test profile: tiny rounds, quick everything. Used by
     /// integration tests and the quickstart example.
     pub fn smoke(model_tag: &str) -> Self {
@@ -392,6 +451,27 @@ mod tests {
         let c = RunConfig::smoke("resnet18_w8_c10");
         assert!(c.max_rounds_total <= 64);
         assert!(c.num_clients <= 20);
+    }
+
+    #[test]
+    fn strategy_knobs_resolve_and_validate() {
+        let mut c = RunConfig::default();
+        // Backwards-compatible default: no strategy override.
+        assert_eq!(c.strategy_name().unwrap(), None);
+        for name in STRATEGY_NAMES {
+            c.strategy.name = Some(name.to_ascii_uppercase());
+            assert_eq!(c.strategy_name().unwrap().as_deref(), Some(name), "case-normalized");
+        }
+        c.strategy.name = Some("heterofl".into());
+        assert!(c.strategy_name().is_err(), "methods that aren't strategies are rejected");
+        c.strategy.name = Some("profl".into());
+        c.strategy.elastic_phases = Some(0);
+        assert!(c.strategy_name().is_err(), "zero curve phases");
+        c.strategy.elastic_phases = Some(3);
+        c.strategy.freeze_step_cap = Some(0);
+        assert!(c.strategy_name().is_err(), "zero step cap");
+        c.strategy.freeze_step_cap = Some(8);
+        assert!(c.strategy_name().is_ok());
     }
 
     #[test]

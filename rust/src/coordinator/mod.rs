@@ -24,8 +24,11 @@
 //! `--projection-decay`^transitions weight factor — recovering the
 //! device work a freeze transition would otherwise waste.
 //!
-//! The progressive schedule itself (shrink → grow, freezing) lives in
-//! `methods::profl`; baselines drive the same primitives. Every
+//! The schedule itself — what is trainable each round and when it
+//! advances — lives behind the [`crate::strategy::MemoryStrategy`]
+//! trait (`strategy::` owns shrink→grow, layer freezing, and elastic
+//! windows; `methods::profl` is a thin adapter); baselines drive the
+//! same primitives directly. Every
 //! [`ServerCtx::bump_prefix_version`] is recorded in a
 //! [`TransitionLog`], so transition-staleness stays auditable per run.
 

@@ -1,6 +1,8 @@
 //! Stale-update projection across freeze/step transitions (pure core).
 //!
-//! ProFL's progressive schedule changes the trained block-prefix *while
+//! Any progressive [`crate::strategy::MemoryStrategy`] (ProFL's
+//! shrink→grow, layer freezing, elastic windows — see
+//! `docs/STRATEGIES.md`) changes the trained block-prefix *while
 //! async uploads are in flight*: a straggler dispatched in step `t` can
 //! arrive after the server moved to step `t+1`, where its artifact and
 //! frozen-prefix version no longer match. Historically such updates were

@@ -617,6 +617,7 @@ impl<'rt> ServerCtx<'rt> {
         let tag = self.cfg.model_tag.clone();
         let art = self.rt.load(&tag, artifact)?;
         let mem = art.meta.participation_mem();
+        let t_distill = self.telemetry.is_some().then(std::time::Instant::now);
         let sel = self.sample_cohort(&mem);
         let tr_bytes = art.meta.trainable_bytes();
 
@@ -627,6 +628,22 @@ impl<'rt> ServerCtx<'rt> {
             .iter()
             .map(|&cid| self.client_work(cid, &mem, tr_bytes, tr_bytes))
             .collect();
+        if let Some(t0) = t_distill {
+            let round = self.round;
+            let sim_s = self.sim_time_s;
+            if let Some(tel) = self.telemetry.as_mut() {
+                tel.span(
+                    "round.distill",
+                    round,
+                    sim_s,
+                    t0.elapsed().as_secs_f64(),
+                    &[
+                        ("artifact", Value::Str(artifact.to_string())),
+                        ("trainers", Value::Num(sel.trainers.len() as f64)),
+                    ],
+                );
+            }
+        }
         let plan = self.run_fleet(&works);
         // Selection-order aggregation (see run_train_round).
         let completers: Vec<usize> =

@@ -13,6 +13,13 @@
 //! and EM → 0. The server fits a least-squares line to the EM series and
 //! freezes the block once |slope| stays below φ for W consecutive
 //! evaluations (the curve has flattened out).
+//!
+//! The detector is strategy-agnostic: every EM-gated
+//! [`crate::strategy::MemoryStrategy`] phase (ProFL's shrink/grow steps,
+//! `layerfreeze`'s front-block advance) runs a fresh [`FreezeDetector`]
+//! over its observed parameter set, and every layout change lands in the
+//! [`TransitionLog`] via `ServerCtx::bump_prefix_version` regardless of
+//! which strategy triggered it (see `docs/STRATEGIES.md`).
 
 use std::collections::VecDeque;
 

@@ -18,9 +18,11 @@ use std::path::PathBuf;
 /// `--buffer-k`, `--staleness-alpha`, `--max-staleness`,
 /// `--stale-projection`, `--projection-decay`, `--fleet-profile`,
 /// `--dropout`, `--churn-policy`, `--churn-epochs`, `--trace-period`,
-/// `--trace-duty`, `--lazy-pool`) and the observability switch
-/// (`--telemetry-jsonl`, env fallback `PROFL_TELEMETRY_JSONL`). See
-/// `docs/CLI.md` for the full flag reference.
+/// `--trace-duty`, `--lazy-pool`), the strategy knobs (`--strategy`,
+/// `--elastic-phases`, `--freeze-step-cap` — see `docs/STRATEGIES.md`)
+/// and the observability switch (`--telemetry-jsonl`, env fallback
+/// `PROFL_TELEMETRY_JSONL`). See `docs/CLI.md` for the full flag
+/// reference.
 pub struct ExpOpts {
     /// Budget profile: `fast` (default), `smoke`, or `paper`.
     pub profile: String,
@@ -62,6 +64,12 @@ pub struct ExpOpts {
     pub trace_duty: Option<f64>,
     /// Lazy on-demand client materialization (O(cohort) memory/round).
     pub lazy_pool: bool,
+    /// Memory-strategy override (`profl`/`paramaware`/`layerfreeze`/`elastic`).
+    pub strategy: Option<String>,
+    /// Elastic: number of budget-curve points.
+    pub elastic_phases: Option<usize>,
+    /// LayerFreeze: per-step round cap.
+    pub freeze_step_cap: Option<usize>,
     /// Structured-telemetry JSONL stream path (`--telemetry-jsonl`, or
     /// the `PROFL_TELEMETRY_JSONL` env var); `None` = telemetry off.
     pub telemetry_jsonl: Option<String>,
@@ -97,6 +105,9 @@ impl ExpOpts {
             trace_period_s: args.parse_opt("trace-period")?,
             trace_duty: args.parse_opt("trace-duty")?,
             lazy_pool: args.flag("lazy-pool"),
+            strategy: args.get("strategy").map(String::from),
+            elastic_phases: args.parse_opt("elastic-phases")?,
+            freeze_step_cap: args.parse_opt("freeze-step-cap")?,
             telemetry_jsonl: args
                 .get("telemetry-jsonl")
                 .map(String::from)
@@ -157,6 +168,9 @@ impl ExpOpts {
         if self.lazy_pool {
             cfg.fleet.lazy_pool = true;
         }
+        cfg.strategy.name = self.strategy.clone().or(cfg.strategy.name);
+        cfg.strategy.elastic_phases = self.elastic_phases.or(cfg.strategy.elastic_phases);
+        cfg.strategy.freeze_step_cap = self.freeze_step_cap.or(cfg.strategy.freeze_step_cap);
         cfg.telemetry_jsonl = self.telemetry_jsonl.clone();
         cfg
     }
@@ -277,6 +291,9 @@ mod tests {
             trace_period_s: Some(240.0),
             trace_duty: None,
             lazy_pool: true,
+            strategy: Some("elastic".into()),
+            elastic_phases: Some(3),
+            freeze_step_cap: None,
             telemetry_jsonl: Some("stream.jsonl".into()),
         };
         let c = o.cfg("m");
@@ -296,6 +313,9 @@ mod tests {
         assert_eq!(c.fleet.trace_period_s, Some(240.0));
         assert_eq!(c.fleet.trace_duty, None, "unset override keeps the profile's duty");
         assert!(c.fleet.lazy_pool);
+        assert_eq!(c.strategy.name.as_deref(), Some("elastic"));
+        assert_eq!(c.strategy.elastic_phases, Some(3));
+        assert_eq!(c.strategy.freeze_step_cap, None, "unset knob keeps the default");
         assert_eq!(c.telemetry_jsonl.as_deref(), Some("stream.jsonl"));
     }
 }

@@ -40,6 +40,10 @@
 //!   ([`telemetry`]): the `--telemetry-jsonl` event stream's schema and
 //!   span/counter/gauge catalog, the `manifest.json` run-provenance
 //!   record, and a jq cookbook.
+//! * **`docs/STRATEGIES.md`** — the memory-strategy zoo ([`strategy`]):
+//!   the [`strategy::MemoryStrategy`] trait contract (layouts, phases,
+//!   advance/freeze semantics), the shipped strategies
+//!   (`profl`/`paramaware`/`layerfreeze`/`elastic`), and how to add one.
 //!
 //! `DESIGN.md` holds the full system inventory and experiment index;
 //! `ROADMAP.md` the north-star and open items.
@@ -103,6 +107,7 @@ pub mod metrics;
 pub mod rng;
 pub mod runtime;
 pub mod store;
+pub mod strategy;
 pub mod telemetry;
 
 pub use config::RunConfig;

@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 use profl::cli::Args;
-use profl::methods::{by_name, table_methods};
+use profl::methods::{by_name, registry, table_methods};
 use profl::{artifacts_dir, RunConfig, Runtime};
 use std::path::PathBuf;
 
@@ -33,8 +33,19 @@ COMMON OPTIONS:
   --profile <name>    fast | smoke | paper      [default: fast]
   --seed <u64>        RNG seed
   --method <name>     run only: profl | profl-noshrink | paramaware |
-                      allsmall | exclusivefl | heterofl | depthfl
+                      allsmall | exclusivefl | heterofl | depthfl |
+                      layerfreeze | elastic
   --csv <path>        run only: write per-round CSV
+  --list-methods      Print the method registry (names, aliases) and exit
+
+STRATEGY OPTIONS (memory-strategy zoo; see docs/STRATEGIES.md):
+  --strategy <name>   run only: pick the block-progression strategy by
+                      name instead of --method: profl | paramaware |
+                      layerfreeze | elastic
+  --elastic-phases <n>  elastic: number of budget-curve points (default:
+                      one per model block)
+  --freeze-step-cap <r> layerfreeze: cap rounds per freeze step (default:
+                      convergence-driven, uncapped)
 
 FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
   --round-policy <p>  sync | deadline[:S] | over-select[:K] | async[:K]
@@ -123,11 +134,17 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     }
     cfg.telemetry_jsonl =
         args.get("telemetry-jsonl").map(String::from).or_else(profl::harness::telemetry_env);
-    // Fail fast on bad fleet spellings (before artifacts load).
+    cfg.strategy.name = args.get("strategy").map(String::from).or(cfg.strategy.name);
+    cfg.strategy.elastic_phases =
+        args.parse_opt("elastic-phases")?.or(cfg.strategy.elastic_phases);
+    cfg.strategy.freeze_step_cap =
+        args.parse_opt("freeze-step-cap")?.or(cfg.strategy.freeze_step_cap);
+    // Fail fast on bad fleet/strategy spellings (before artifacts load).
     cfg.round_policy()?;
     cfg.churn_policy()?;
     cfg.stale_projection()?;
     cfg.fleet_profile()?;
+    cfg.strategy_name()?;
     Ok(cfg)
 }
 
@@ -151,6 +168,20 @@ fn print_summary(s: &profl::RunSummary) {
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    if args.flag("list-methods") {
+        println!("{:<16} {:<14} {:<8} {:<10}", "NAME", "ALIASES", "TABLE", "INCLUSIVE");
+        for spec in registry() {
+            let aliases = if spec.aliases.is_empty() { "-".to_string() } else { spec.aliases.join(",") };
+            println!(
+                "{:<16} {:<14} {:<8} {:<10}",
+                spec.name,
+                aliases,
+                if spec.table { "yes" } else { "no" },
+                if spec.inclusive { "yes" } else { "no" },
+            );
+        }
+        return Ok(());
+    }
     if args.flag("help") || args.subcommand.is_none() {
         print!("{USAGE}");
         return Ok(());
@@ -160,9 +191,19 @@ fn main() -> Result<()> {
 
     match args.subcommand.as_deref().unwrap() {
         "run" => {
-            let method = args.get_or("method", "profl");
-            let m = by_name(method).ok_or_else(|| anyhow::anyhow!("unknown method `{method}`"))?;
             let cfg = make_cfg(&args)?;
+            // --strategy is an alias route into the same registry; an
+            // explicit --method that disagrees is a user error.
+            let method = match (args.get("method"), cfg.strategy.name.as_deref()) {
+                (Some(m), Some(s)) if !m.eq_ignore_ascii_case(s) => {
+                    bail!("--method {m} conflicts with --strategy {s}; pass one of the two")
+                }
+                (Some(m), _) => m.to_string(),
+                (None, Some(s)) => s.to_string(),
+                (None, None) => "profl".to_string(),
+            };
+            let m =
+                by_name(&method).ok_or_else(|| anyhow::anyhow!("unknown method `{method}`"))?;
             eprintln!(
                 "[profl] running {} on {} ({})",
                 m.name(),
@@ -201,9 +242,37 @@ fn main() -> Result<()> {
         }
         "compare" => {
             let cfg = make_cfg(&args)?;
+            // Each method gets its own telemetry stream
+            // (`<stem>.<method>.jsonl`): a single shared path would be
+            // truncated by every successive method, keeping only the
+            // last one's events.
+            let base = cfg.telemetry_jsonl.clone();
+            let mut streams: Vec<(String, PathBuf, u64)> = Vec::new();
             for m in table_methods() {
-                let s = m.run(&rt, &cfg)?;
+                let mut mcfg = cfg.clone();
+                if let Some(b) = &base {
+                    let p = profl::telemetry::method_stream_path(
+                        std::path::Path::new(b),
+                        m.name(),
+                    );
+                    mcfg.telemetry_jsonl = Some(p.display().to_string());
+                }
+                let s = m.run(&rt, &mcfg)?;
                 print_summary(&s);
+                if let Some(p) = &mcfg.telemetry_jsonl {
+                    let path = PathBuf::from(p);
+                    let lines = profl::telemetry::count_lines(&path);
+                    streams.push((m.name().to_string(), path, lines));
+                }
+            }
+            if let Some(b) = &base {
+                let argv: Vec<String> = std::env::args().collect();
+                let manifest = profl::telemetry::build_multi_manifest(&cfg, &argv, &streams);
+                let dir =
+                    std::path::Path::new(b).parent().map(PathBuf::from).unwrap_or_default();
+                let mpath = dir.join("manifest.json");
+                profl::telemetry::write_manifest(&mpath, &manifest)?;
+                eprintln!("[profl] wrote {}", mpath.display());
             }
         }
         "inspect" => {

@@ -8,6 +8,12 @@
 //! artifact in round r iff the artifact's analytical training footprint
 //! (paper-width-twin coefficients × accounting batch) fits its available
 //! memory that round.
+//!
+//! Since available ≤ budget, [`can_train`] implies [`DeviceMemory::fits_static`]
+//! — every dispatched client fits its artifact's static footprint, the
+//! invariant the memory-strategy zoo's per-client depth caps rely on
+//! (see `strategy::` and `docs/STRATEGIES.md`; property-tested in
+//! `tests/proptests.rs`).
 
 use crate::manifest::MemCoeffs;
 use crate::rng::Rng;
@@ -119,6 +125,27 @@ mod tests {
         let at128 = m.bytes_at(cfg.accounting_batch);
         cfg.accounting_batch = 32;
         assert!(m.bytes_at(cfg.accounting_batch) < at128);
+    }
+
+    #[test]
+    fn can_train_implies_fits_static() {
+        // The dispatch filter samples contended availability, which never
+        // exceeds the static budget — so any client admitted for an
+        // artifact also fits it statically. Strategy depth caps
+        // (layerfreeze/elastic) lean on this implication.
+        let cfg = MemoryConfig::default();
+        let mut rng = Rng::new(7);
+        let m = crate::strategy::layout_mem(
+            &[2_000_000, 3_000_000, 3_000_000, 3_200_000],
+            &crate::strategy::BlockLayout { frozen: 1, depth: 3 },
+        );
+        for i in 0..500 {
+            let mut d = DeviceMemory::sample(&cfg, &mut rng, i);
+            let a = d.available(&cfg);
+            if can_train(a, &cfg, &m) {
+                assert!(d.fits_static(&cfg, &m), "client {i} admitted but does not fit");
+            }
+        }
     }
 
     #[test]

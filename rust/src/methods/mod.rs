@@ -1,9 +1,14 @@
-//! FL methods: ProFL (the paper) + all four baselines (Tables 1/2) and the
-//! ParamAware freezing baseline (Table 4).
+//! FL methods: ProFL (the paper) + all four baselines (Tables 1/2), the
+//! ParamAware freezing baseline (Table 4), and the memory-strategy zoo
+//! additions (`layerfreeze`, `elastic` — see `docs/STRATEGIES.md`).
 //!
 //! Every method consumes the same primitives (`ServerCtx` rounds) and
 //! produces a `RunSummary`, so the table benches are a cartesian product
 //! of (method × model × dataset × partition) over one interface.
+//!
+//! The single [`registry`] drives both [`by_name`] (CLI lookup,
+//! including aliases) and [`table_methods`] (paper-table order), so the
+//! two can no longer drift apart; `profl --list-methods` prints it.
 
 pub mod allsmall;
 pub mod depthfl;
@@ -22,6 +27,8 @@ pub use exclusive::ExclusiveFL;
 pub use heterofl::HeteroFL;
 pub use profl::{FreezePolicy, ProFL};
 
+pub use crate::strategy::{Elastic, LayerFreeze};
+
 /// One FL method (ProFL or a baseline), runnable end to end.
 pub trait Method {
     /// Display name (tables, CLI).
@@ -32,27 +39,144 @@ pub trait Method {
     fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary>;
 }
 
-/// All Table-1/2 methods in paper order.
-pub fn table_methods() -> Vec<Box<dyn Method>> {
-    vec![
-        Box::new(AllSmall::default()),
-        Box::new(ExclusiveFL),
-        Box::new(HeteroFL::default()),
-        Box::new(DepthFL),
-        Box::new(ProFL::default()),
-    ]
+/// One registry row: the canonical CLI name, accepted aliases, whether
+/// the method joins the Table-1 `compare` sweep (in registry order),
+/// the paper's "Inclusive?" flag, and the constructor.
+pub struct MethodSpec {
+    /// Canonical CLI spelling (lowercase).
+    pub name: &'static str,
+    /// Additional accepted CLI spellings.
+    pub aliases: &'static [&'static str],
+    /// Whether `table_methods()` (the `compare` subcommand) includes it.
+    pub table: bool,
+    /// The paper's "Inclusive?" column.
+    pub inclusive: bool,
+    /// Constructor.
+    pub make: fn() -> Box<dyn Method>,
 }
 
-/// Look up a method by CLI name.
+/// The single source of truth for every runnable method.
+pub fn registry() -> &'static [MethodSpec] {
+    &REGISTRY
+}
+
+static REGISTRY: [MethodSpec; 9] = [
+    MethodSpec {
+        name: "allsmall",
+        aliases: &[],
+        table: true,
+        inclusive: true,
+        make: || Box::new(AllSmall::default()),
+    },
+    MethodSpec {
+        name: "exclusivefl",
+        aliases: &["exclusive"],
+        table: true,
+        inclusive: false,
+        make: || Box::new(ExclusiveFL),
+    },
+    MethodSpec {
+        name: "heterofl",
+        aliases: &[],
+        table: true,
+        inclusive: true,
+        make: || Box::new(HeteroFL::default()),
+    },
+    MethodSpec {
+        name: "depthfl",
+        aliases: &[],
+        table: true,
+        inclusive: true,
+        make: || Box::new(DepthFL),
+    },
+    MethodSpec {
+        name: "profl",
+        aliases: &[],
+        table: true,
+        inclusive: true,
+        make: || Box::new(ProFL::default()),
+    },
+    MethodSpec {
+        name: "profl-noshrink",
+        aliases: &[],
+        table: false,
+        inclusive: true,
+        make: || Box::new(ProFL { shrinking_override: Some(false), ..Default::default() }),
+    },
+    MethodSpec {
+        name: "paramaware",
+        aliases: &[],
+        table: false,
+        inclusive: true,
+        make: || Box::new(ProFL { policy: FreezePolicy::ParamAware, ..Default::default() }),
+    },
+    MethodSpec {
+        name: "layerfreeze",
+        aliases: &["layer-freeze"],
+        table: false,
+        inclusive: true,
+        make: || Box::new(LayerFreeze::default()),
+    },
+    MethodSpec {
+        name: "elastic",
+        aliases: &["neulite"],
+        table: false,
+        inclusive: true,
+        make: || Box::new(Elastic::default()),
+    },
+];
+
+/// All Table-1/2 methods in paper order.
+pub fn table_methods() -> Vec<Box<dyn Method>> {
+    registry().iter().filter(|s| s.table).map(|s| (s.make)()).collect()
+}
+
+/// Look up a method by CLI name (canonical or alias, case-insensitive).
 pub fn by_name(name: &str) -> Option<Box<dyn Method>> {
-    match name.to_ascii_lowercase().as_str() {
-        "profl" => Some(Box::new(ProFL::default())),
-        "profl-noshrink" => Some(Box::new(ProFL { shrinking_override: Some(false), ..Default::default() })),
-        "paramaware" => Some(Box::new(ProFL { policy: FreezePolicy::ParamAware, ..Default::default() })),
-        "allsmall" => Some(Box::new(AllSmall::default())),
-        "exclusivefl" | "exclusive" => Some(Box::new(ExclusiveFL)),
-        "heterofl" => Some(Box::new(HeteroFL::default())),
-        "depthfl" => Some(Box::new(DepthFL)),
-        _ => None,
+    let lower = name.to_ascii_lowercase();
+    registry()
+        .iter()
+        .find(|s| s.name == lower || s.aliases.contains(&lower.as_str()))
+        .map(|s| (s.make)())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_round_trips_every_name_and_alias() {
+        for spec in registry() {
+            let m = by_name(spec.name).unwrap_or_else(|| panic!("{} unresolvable", spec.name));
+            assert_eq!(m.inclusive(), spec.inclusive, "{}: inclusive flag drifted", spec.name);
+            for alias in spec.aliases {
+                let a = by_name(alias).unwrap_or_else(|| panic!("alias {alias} unresolvable"));
+                assert_eq!(a.name(), m.name(), "alias {alias} resolves elsewhere");
+                assert_eq!(a.inclusive(), m.inclusive());
+            }
+            // Case-insensitive lookup resolves to the same method.
+            let upper = by_name(&spec.name.to_ascii_uppercase()).expect("case-insensitive");
+            assert_eq!(upper.name(), m.name());
+        }
+        assert!(by_name("warpdrive").is_none());
+        assert!(by_name("").is_none());
+    }
+
+    #[test]
+    fn table_methods_follow_registry_order() {
+        let names: Vec<&str> = table_methods().iter().map(|m| m.name()).collect();
+        assert_eq!(names, vec!["AllSmall", "ExclusiveFL", "HeteroFL", "DepthFL", "ProFL"]);
+    }
+
+    #[test]
+    fn canonical_names_are_unique_and_lowercase() {
+        let mut seen = std::collections::BTreeSet::new();
+        for spec in registry() {
+            assert_eq!(spec.name, spec.name.to_ascii_lowercase());
+            assert!(seen.insert(spec.name), "duplicate canonical name {}", spec.name);
+            for alias in spec.aliases {
+                assert!(seen.insert(alias), "alias {alias} shadows another name");
+            }
+        }
     }
 }

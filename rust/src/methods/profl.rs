@@ -2,36 +2,24 @@
 //! model growing, block freezing determination, memory-aware cohorts with
 //! output-layer fallback.
 //!
-//! Shrinking (§3.2): train blocks T→2 back-to-front (prefix frozen at
-//! init), then *Map* each converged block into its surrogate conv via
-//! federated distillation. Yields (a) init parameters for every block and
-//! (b) the output modules used while growing.
-//!
-//! Growing (§3.1): train blocks 1→T front-to-back on top of the frozen,
-//! already-converged prefix; each step's sub-model is
-//! [θ*₁,F … θ*ₜ₋₁,F, θₜ, θ_op].
-//!
-//! Freezing (§3.3): the effective-movement detector by default;
-//! `FreezePolicy::ParamAware` reproduces Table 4's baseline (rounds
-//! allocated ∝ block parameter count).
+//! The schedule itself — shrink T→2 with *Map* distillation, grow 1→T,
+//! EM-gated freezing (or the ParamAware budget baseline) — lives in
+//! [`strategy::progressive`](crate::strategy::progressive) as a
+//! [`MemoryStrategy`](crate::strategy::MemoryStrategy); this method is
+//! the thin [`Method`] adapter that applies the `profl-noshrink`
+//! ablation override and hands the schedule to the shared
+//! [`run_strategy`](crate::strategy::run_strategy) driver. The port is
+//! bit-for-bit: the driver replays the legacy round loop call-for-call,
+//! so per-round records and golden traces are unchanged.
 
 use super::Method;
 use crate::config::RunConfig;
-use crate::coordinator::ServerCtx;
-use crate::freezing::FreezeDetector;
 use crate::metrics::RunSummary;
 use crate::runtime::Runtime;
+use crate::strategy::{run_strategy, Progressive};
 use anyhow::Result;
 
-/// How a progressive step decides it is done.
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
-pub enum FreezePolicy {
-    /// Effective movement + least-squares slope (the paper's §3.3).
-    #[default]
-    EffectiveMovement,
-    /// Table 4 baseline: per-step round budget ∝ block parameter count.
-    ParamAware,
-}
+pub use crate::strategy::progressive::FreezePolicy;
 
 /// The paper's method: progressive shrink → grow with block freezing.
 #[derive(Default)]
@@ -40,86 +28,6 @@ pub struct ProFL {
     pub policy: FreezePolicy,
     /// Override cfg.shrinking (used by the `profl-noshrink` ablation).
     pub shrinking_override: Option<bool>,
-}
-
-impl ProFL {
-    /// Round budget for step t under ParamAware: share of the total grow
-    /// budget proportional to the block's parameter count (min 4 rounds).
-    fn param_aware_rounds(counts: &[u64], t: usize, total_budget: usize) -> usize {
-        let total: u64 = counts.iter().sum();
-        let share = counts[t - 1] as f64 / total as f64;
-        ((total_budget as f64 * share) as usize).max(4)
-    }
-
-    /// Train one progressive step until frozen/budget-exhausted.
-    /// Returns the number of rounds consumed.
-    fn run_step(
-        &self,
-        ctx: &mut ServerCtx,
-        t: usize,
-        stage: &str,
-        lr: f32,
-        budget: usize,
-    ) -> Result<usize> {
-        // Borrow the model entry through `rt` (independent of &mut ctx).
-        let rt = ctx.rt;
-        let tag = ctx.cfg.model_tag.clone();
-        let model = rt.model(&tag)?;
-        let block_names: Vec<String> = model.block_params[t - 1].clone();
-        let counts = model.block_param_counts.clone();
-        let train_art = format!("train_t{t}");
-        let op_art = format!("train_op_t{t}");
-        let eval_art = format!("eval_t{t}");
-
-        let max_rounds = match self.policy {
-            FreezePolicy::EffectiveMovement => ctx.cfg.max_rounds_per_step.min(budget),
-            FreezePolicy::ParamAware => {
-                Self::param_aware_rounds(&counts, t, ctx.cfg.max_rounds_per_step * counts.len())
-                    .min(budget)
-            }
-        };
-        let min_rounds = ctx.cfg.min_rounds_per_step.min(max_rounds);
-        let mut det = FreezeDetector::new(ctx.cfg.freeze.into());
-
-        let mut used = 0;
-        for r in 0..max_rounds {
-            let out = ctx.run_train_round(&train_art, Some(&op_art), lr, stage, t)?;
-            let snapshot = ctx.store.flatten(&block_names);
-            let t_observe = ctx.telemetry_mut().is_some().then(std::time::Instant::now);
-            let (em, em_freeze) = det.observe(&snapshot);
-            if let Some(t0) = t_observe {
-                let round = ctx.round;
-                let sim_s = ctx.sim_time_s;
-                let consecutive = det.consecutive();
-                if let Some(tel) = ctx.telemetry_mut() {
-                    use crate::json::Value;
-                    let attrs = [
-                        ("stage", Value::Str(stage.to_string())),
-                        ("step", Value::Num(t as f64)),
-                        ("consecutive", Value::Num(consecutive as f64)),
-                        ("freeze", Value::Bool(em_freeze)),
-                    ];
-                    tel.span("freeze.observe", round, sim_s, t0.elapsed().as_secs_f64(), &attrs);
-                    tel.gauge("freeze.em", round, sim_s, em.unwrap_or(f64::NAN), &attrs);
-                }
-            }
-            let test_acc = if r % ctx.cfg.eval_every == 0 || r + 1 == max_rounds {
-                ctx.evaluate(&eval_art)?.acc
-            } else {
-                f32::NAN
-            };
-            ctx.record_round(stage, t, &out, test_acc, em.unwrap_or(f64::NAN));
-            used += 1;
-            let freeze = match self.policy {
-                FreezePolicy::EffectiveMovement => em_freeze,
-                FreezePolicy::ParamAware => false, // runs to its budget
-            };
-            if freeze && r + 1 >= min_rounds {
-                break;
-            }
-        }
-        Ok(used)
-    }
 }
 
 impl Method for ProFL {
@@ -139,65 +47,7 @@ impl Method for ProFL {
         if let Some(s) = self.shrinking_override {
             cfg.shrinking = s;
         }
-        let mut ctx = ServerCtx::new(rt, cfg.clone())?;
-        let model = rt.model(&cfg.model_tag)?;
-        let num_blocks = model.num_blocks;
-        let op_mem = model
-            .artifact(&format!("train_op_t{num_blocks}"))
-            .map(|a| a.participation_mem())
-            .unwrap_or_default();
-
-        let mut lr = ctx.cfg.lr;
-        let mut remaining = ctx.cfg.max_rounds_total * 2; // shrink + grow budget
-
-        // ---- Stage 1: progressive model shrinking (T → 2) -------------------
-        if ctx.cfg.shrinking {
-            for t in (2..=num_blocks).rev() {
-                ctx.bump_prefix_version();
-                let used = self.run_step(&mut ctx, t, "shrink", lr, remaining)?;
-                remaining = remaining.saturating_sub(used);
-                // Map: distill the converged block into its surrogate.
-                let distill_art = format!("distill_t{t}");
-                for _ in 0..ctx.cfg.distill_rounds {
-                    let out = ctx.run_distill_round(&distill_art, lr)?;
-                    ctx.record_round("map", t, &out, f32::NAN, f64::NAN);
-                    remaining = remaining.saturating_sub(1);
-                }
-            }
-        }
-
-        // ---- Stage 2: progressive model growing (1 → T) ---------------------
-        for t in 1..=num_blocks {
-            ctx.bump_prefix_version();
-            let budget = remaining.max(ctx.cfg.min_rounds_per_step);
-            let used = self.run_step(&mut ctx, t, "grow", lr, budget)?;
-            remaining = remaining.saturating_sub(used);
-            lr *= ctx.cfg.lr_step_decay;
-        }
-
-        // ---- Summary ---------------------------------------------------------
-        let final_eval = ctx.evaluate(&format!("eval_t{num_blocks}"))?;
-        let (up, down) = ctx.metrics.total_bytes();
-        let mut final_acc = ctx.metrics.final_acc(ctx.cfg.acc_tail);
-        if final_acc == 0.0 {
-            final_acc = final_eval.acc as f64;
-        }
-        // ProFL participation: anyone who can at least train the output
-        // layer takes part (§4.1) — effectively the whole fleet.
-        let pr = ctx.pool.participation_rate(&op_mem);
-        Ok(RunSummary {
-            method: self.name().into(),
-            model_tag: ctx.cfg.model_tag.clone(),
-            partition: ctx.cfg.partition().label(),
-            final_acc,
-            participation_rate: pr,
-            peak_client_mem: ctx.metrics.peak_client_mem(),
-            total_bytes_up: up,
-            total_bytes_down: down,
-            rounds: ctx.round,
-            sim_time_s: ctx.sim_time_s,
-            transitions: ctx.transition_log().entries().to_vec(),
-            history: ctx.metrics.records.clone(),
-        })
+        let mut schedule = Progressive::new(self.policy);
+        run_strategy(&mut schedule, rt, &cfg)
     }
 }

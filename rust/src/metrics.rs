@@ -223,6 +223,36 @@ impl RunSummary {
     pub fn wasted_compute_s(&self) -> f64 {
         self.history.iter().map(|r| r.wasted_compute_s).sum()
     }
+
+    /// Peak analytical client memory per strategy stage, in first-seen
+    /// execution order. This is the memory-wall headline cut: a
+    /// progressive strategy shows a staircase of small peaks where a
+    /// full-model baseline shows one tall bar.
+    pub fn peak_mem_by_stage(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = Vec::new();
+        for r in &self.history {
+            match out.iter_mut().find(|(s, _)| *s == r.stage) {
+                Some((_, peak)) => *peak = (*peak).max(r.client_mem_bytes),
+                None => out.push((r.stage.clone(), r.client_mem_bytes)),
+            }
+        }
+        out
+    }
+
+    /// Transition cadence: (count, mean rounds between consecutive
+    /// layout transitions). Mean is 0 with fewer than two transitions.
+    pub fn transition_cadence(&self) -> (usize, f64) {
+        let n = self.transitions.len();
+        if n < 2 {
+            return (n, 0.0);
+        }
+        let spans: usize = self
+            .transitions
+            .windows(2)
+            .map(|w| w[1].round.saturating_sub(w[0].round))
+            .sum();
+        (n, spans as f64 / (n - 1) as f64)
+    }
 }
 
 /// Collects rounds, computes the paper's "average accuracy of the last 10
@@ -400,6 +430,49 @@ mod tests {
         assert_eq!(s.projected_dropped_params(), 20);
         assert!((s.mean_transition_staleness() - 2.0).abs() < 1e-9);
         assert_eq!(s.transitions.len(), 2);
+    }
+
+    #[test]
+    fn per_stage_and_transition_rollups() {
+        let mut m = MetricsSink::new();
+        // Two shrink rounds (mem 100, 200), then three grow rounds
+        // (300..500): peaks group by stage in execution order.
+        for i in 1..=5 {
+            let mut r = rec(i, 0.5, 1);
+            r.stage = if i <= 2 { "shrink".into() } else { "grow".into() };
+            m.push(r);
+        }
+        let s = RunSummary {
+            method: "t".into(),
+            model_tag: "m".into(),
+            partition: "IID".into(),
+            final_acc: 0.5,
+            participation_rate: 1.0,
+            peak_client_mem: 500,
+            total_bytes_up: 0,
+            total_bytes_down: 0,
+            rounds: 5,
+            sim_time_s: 150.0,
+            transitions: vec![
+                Transition { version: 1, round: 0, sim_time_s: 0.0 },
+                Transition { version: 2, round: 2, sim_time_s: 60.0 },
+                Transition { version: 3, round: 6, sim_time_s: 180.0 },
+            ],
+            history: m.records.clone(),
+        };
+        assert_eq!(
+            s.peak_mem_by_stage(),
+            vec![("shrink".to_string(), 200), ("grow".to_string(), 500)]
+        );
+        let (n, mean) = s.transition_cadence();
+        assert_eq!(n, 3);
+        assert!((mean - 3.0).abs() < 1e-9, "spans 2 and 4 average to 3");
+        // Degenerate cases: no transitions, single transition.
+        let mut one = s.clone();
+        one.transitions.truncate(1);
+        assert_eq!(one.transition_cadence(), (1, 0.0));
+        one.transitions.clear();
+        assert_eq!(one.transition_cadence(), (0, 0.0));
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! NeuLite-style elastic progressive blocks (arXiv 2408.10826): block
+//! boundaries are not a fixed partition — each phase's trainable window
+//! is the widest one whose analytic footprint fits a per-phase memory
+//! budget curve, so the schedule adapts to the fleet's device budget
+//! range instead of the architecture's block count.
+//!
+//! The budget curve ramps linearly across the configured device budget
+//! range (`memory.budget_min_mb → memory.budget_max_mb`, the same range
+//! [`DeviceMemory::sample`](crate::memory::DeviceMemory::sample) draws
+//! from): early phases target what the *smallest* devices can train,
+//! later phases what the largest can. A phase's window starts where the
+//! previous one ended (completed blocks freeze), reaches as deep as its
+//! curve point admits under [`layout_mem`](super::layout_mem), and runs
+//! a fixed share of `max_rounds_total` — the advance trigger is the
+//! budget curve, not the EM detector. If the curve never admits the
+//! full depth, the deep blocks stay untrained (the honest NeuLite
+//! trade-off) and the final evaluation runs at the reached depth.
+
+use super::{run_strategy, BlockLayout, MemoryStrategy, ModelView, Phase, StepFeedback, TrainPhase};
+use crate::config::RunConfig;
+use crate::memory::MB;
+use crate::methods::Method;
+use crate::metrics::RunSummary;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// One planned elastic phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticPhase {
+    /// Trainable window for the phase.
+    pub layout: BlockLayout,
+    /// Memory budget (bytes) the window was fitted under.
+    pub budget_bytes: u64,
+    /// Round allotment.
+    pub rounds: usize,
+}
+
+/// Plan the elastic schedule for a model: `elastic_phases` curve points
+/// (default: one per block), each fitting the widest window that the
+/// linearly-ramping budget admits at the accounting batch. Planning is
+/// pure — `examples/strategy_zoo.rs` and the property tests call it
+/// without artifacts.
+pub fn plan(counts: &[u64], cfg: &RunConfig) -> Vec<ElasticPhase> {
+    let phases = cfg.strategy.elastic_phases.unwrap_or(counts.len()).max(1);
+    let lo = cfg.memory.budget_min_mb as f64;
+    let hi = cfg.memory.budget_max_mb as f64;
+    let batch = cfg.memory.accounting_batch;
+    let mut out: Vec<ElasticPhase> = Vec::new();
+    let mut reached = 0usize;
+    for p in 0..phases {
+        let budget_mb = lo + (hi - lo) * (p + 1) as f64 / phases as f64;
+        let budget_bytes = (budget_mb * MB as f64) as u64;
+        let frozen = reached;
+        // Widest admissible window; the floor is one block, so a curve
+        // point below even that still makes progress.
+        let mut depth = (frozen + 1).min(counts.len());
+        for cand in (frozen + 1..=counts.len()).rev() {
+            let l = BlockLayout { frozen, depth: cand };
+            if super::layout_mem(counts, &l).bytes_at(batch) <= budget_bytes {
+                depth = cand;
+                break;
+            }
+        }
+        out.push(ElasticPhase { layout: BlockLayout { frozen, depth }, budget_bytes, rounds: 0 });
+        reached = depth;
+        if reached == counts.len() {
+            break;
+        }
+    }
+    // Split the run budget evenly; the remainder lands on the last
+    // (deepest) phase, and every phase gets at least one round.
+    let n = out.len();
+    let base = cfg.max_rounds_total / n;
+    let rem = cfg.max_rounds_total % n;
+    for (i, ph) in out.iter_mut().enumerate() {
+        ph.rounds = (base + if i + 1 == n { rem } else { 0 }).max(1);
+    }
+    out
+}
+
+/// Elastic progressive blocks on the [`MemoryStrategy`] trait (also a
+/// [`Method`]: `--method elastic`).
+#[derive(Debug, Default)]
+pub struct Elastic {
+    planned: Option<Vec<ElasticPhase>>,
+    idx: usize,
+    /// Whether the pending emission is the train half of phase `idx`
+    /// (the transition half was already emitted).
+    entered: bool,
+}
+
+impl Elastic {
+    /// The depth the planned schedule reaches (for the final eval).
+    fn reached_depth(planned: &[ElasticPhase], num_blocks: usize) -> usize {
+        planned.last().map_or(num_blocks, |p| p.layout.depth)
+    }
+}
+
+impl MemoryStrategy for Elastic {
+    fn name(&self) -> &'static str {
+        "Elastic"
+    }
+
+    fn next_phase(
+        &mut self,
+        model: &ModelView,
+        cfg: &RunConfig,
+        _last: Option<&StepFeedback>,
+    ) -> Option<Phase> {
+        let planned =
+            self.planned.get_or_insert_with(|| plan(&model.block_param_counts, cfg)).clone();
+        let ph = planned.get(self.idx)?;
+        if !self.entered {
+            self.entered = true;
+            return Some(Phase::Transition);
+        }
+        self.entered = false;
+        self.idx += 1;
+        let t = ph.layout.depth;
+        // The executable projection drives the window's deepest block
+        // through the `train_t{t}` artifact family; the EM detector
+        // observes the whole window (reported, never gating).
+        let window = &model.block_params[ph.layout.frozen..ph.layout.depth];
+        let observe_params: Vec<String> = window.iter().flat_map(|b| b.iter().cloned()).collect();
+        Some(Phase::Train(TrainPhase {
+            stage: "elastic".into(),
+            step: t,
+            layout: ph.layout,
+            train_artifact: format!("train_t{t}"),
+            fallback_artifact: Some(format!("train_op_t{t}")),
+            eval_artifact: format!("eval_t{t}"),
+            observe_params,
+            lr: cfg.lr,
+            max_rounds: ph.rounds,
+            min_rounds: cfg.min_rounds_per_step.min(ph.rounds),
+            em_gated: false,
+        }))
+    }
+
+    fn final_eval_artifact(&self, model: &ModelView) -> String {
+        let depth = self
+            .planned
+            .as_deref()
+            .map_or(model.num_blocks, |p| Self::reached_depth(p, model.num_blocks));
+        format!("eval_t{depth}")
+    }
+
+    fn participation_artifact(&self, model: &ModelView) -> String {
+        format!("train_op_t{}", model.num_blocks)
+    }
+}
+
+impl Method for Elastic {
+    fn name(&self) -> &'static str {
+        "Elastic"
+    }
+
+    fn inclusive(&self) -> bool {
+        true
+    }
+
+    fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary> {
+        let mut schedule = Elastic::default();
+        run_strategy(&mut schedule, rt, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::layout_mem;
+
+    const COUNTS: [u64; 4] = [2_000_000, 3_000_000, 3_000_000, 3_200_000];
+
+    #[test]
+    fn plan_windows_fit_their_budgets_and_tile_the_depth() {
+        let cfg = RunConfig::smoke("m");
+        let phases = plan(&COUNTS, &cfg);
+        assert!(!phases.is_empty());
+        let batch = cfg.memory.accounting_batch;
+        let mut prev_depth = 0;
+        let mut total_rounds = 0;
+        for ph in &phases {
+            assert_eq!(ph.layout.frozen, prev_depth, "windows tile without gaps");
+            assert!(ph.layout.depth > ph.layout.frozen, "non-empty window");
+            // Either the window fits its curve point, or it is the
+            // single-block floor (progress is guaranteed).
+            let fits = layout_mem(&COUNTS, &ph.layout).bytes_at(batch) <= ph.budget_bytes;
+            assert!(fits || ph.layout.trainable_blocks() == 1);
+            assert!(ph.rounds >= 1);
+            prev_depth = ph.layout.depth;
+            total_rounds += ph.rounds;
+        }
+        assert_eq!(total_rounds, cfg.max_rounds_total.max(phases.len()));
+    }
+
+    #[test]
+    fn wider_budget_range_means_wider_windows() {
+        let mut cfg = RunConfig::smoke("m");
+        cfg.memory.budget_min_mb = 900;
+        cfg.memory.budget_max_mb = 900;
+        // A uniformly huge budget fits everything in one window.
+        let phases = plan(&COUNTS, &cfg);
+        assert_eq!(phases.len(), 1);
+        assert_eq!(phases[0].layout, BlockLayout::full(COUNTS.len()));
+        // A tiny budget degenerates to one block per phase.
+        cfg.memory.budget_min_mb = 10;
+        cfg.memory.budget_max_mb = 20;
+        let phases = plan(&COUNTS, &cfg);
+        assert!(phases.iter().all(|p| p.layout.trainable_blocks() == 1));
+    }
+
+    #[test]
+    fn schedule_alternates_transition_train_and_ends() {
+        let v = ModelView::synthetic(&COUNTS);
+        let cfg = RunConfig::smoke("m");
+        let mut s = Elastic::default();
+        let mut kinds = Vec::new();
+        while let Some(p) = s.next_phase(&v, &cfg, None) {
+            kinds.push(match p {
+                Phase::Transition => 'T',
+                Phase::Train(_) => 't',
+                Phase::Distill(_) => 'd',
+            });
+        }
+        assert!(!kinds.is_empty());
+        assert!(kinds.len() % 2 == 0);
+        assert!(kinds.chunks(2).all(|c| c == ['T', 't']));
+    }
+
+    #[test]
+    fn elastic_phase_knob_changes_curve_resolution() {
+        let mut cfg = RunConfig::smoke("m");
+        cfg.strategy.elastic_phases = Some(2);
+        let coarse = plan(&COUNTS, &cfg);
+        assert!(coarse.len() <= 2);
+        cfg.strategy.elastic_phases = Some(8);
+        let fine = plan(&COUNTS, &cfg);
+        assert!(fine.len() <= 8);
+    }
+}

@@ -1,0 +1,194 @@
+//! Heterogeneity-aware progressive layer freezing (arXiv 2408.09101
+//! family): the model trains at full depth from round 0, front layers
+//! freeze as they converge, and each client's trainable depth is capped
+//! by its [`DeviceMemory`](crate::memory::DeviceMemory) fit.
+//!
+//! Mapping onto this repo's artifact vocabulary: the lowered artifact
+//! family exposes frozen-prefix progressions (`train_t{t}` = prefix
+//! `t-1` frozen, block `t` trainable), so the executable projection
+//! drives the *front-most unfrozen block* through that family and
+//! advances the frozen prefix when the EM detector reports convergence
+//! — with no shrink stage, no distillation, and no per-step round cap
+//! by default (layers freeze when converged, not when a timer expires).
+//! The *analytic* layout each phase reports ([`BlockLayout`] with
+//! `depth = T`) keeps the full model resident, which is what separates
+//! layerfreeze's memory profile from ProFL's in the strategy zoo; the
+//! per-client depth cap is the pure [`depth_cap`](super::depth_cap)
+//! function, exercised by `examples/strategy_zoo.rs` and the
+//! `fits_static` property tests. Clients that cannot fit even the
+//! current front block fall back to the output module (inclusive).
+
+use super::{run_strategy, BlockLayout, MemoryStrategy, ModelView, Phase, StepFeedback, TrainPhase};
+use crate::config::RunConfig;
+use crate::methods::Method;
+use crate::metrics::RunSummary;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// Schedule cursor: which block is the front-most unfrozen one.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+enum Cursor {
+    #[default]
+    Start,
+    /// About to emit the freeze transition entering step t.
+    Enter(usize),
+    /// About to emit the train phase for step t.
+    Train(usize),
+    Done,
+}
+
+/// Progressive layer freezing on the [`MemoryStrategy`] trait (also a
+/// [`Method`]: `--method layerfreeze`).
+#[derive(Debug, Default)]
+pub struct LayerFreeze {
+    cursor: Cursor,
+    /// Rounds left of the `max_rounds_total` budget.
+    remaining: usize,
+    /// Whether the last emitted phase was a train phase (its feedback
+    /// draws down the budget).
+    awaiting_train: bool,
+}
+
+impl MemoryStrategy for LayerFreeze {
+    fn name(&self) -> &'static str {
+        "LayerFreeze"
+    }
+
+    fn next_phase(
+        &mut self,
+        model: &ModelView,
+        cfg: &RunConfig,
+        last: Option<&StepFeedback>,
+    ) -> Option<Phase> {
+        if self.awaiting_train {
+            self.awaiting_train = false;
+            let used = last.map_or(0, |f| f.rounds_used);
+            self.remaining = self.remaining.saturating_sub(used);
+        }
+        if self.cursor == Cursor::Start {
+            self.remaining = cfg.max_rounds_total;
+            self.cursor = Cursor::Enter(1);
+        }
+        match self.cursor {
+            Cursor::Start => unreachable!("resolved above"),
+            Cursor::Enter(t) => {
+                self.cursor = Cursor::Train(t);
+                Some(Phase::Transition)
+            }
+            Cursor::Train(t) => {
+                self.awaiting_train = true;
+                self.cursor =
+                    if t < model.num_blocks { Cursor::Enter(t + 1) } else { Cursor::Done };
+                // Late steps are still guaranteed a minimum budget even
+                // when earlier blocks refused to converge (same floor as
+                // ProFL's grow stage); an explicit per-step cap can be
+                // set with `--freeze-step-cap`.
+                let budget = self.remaining.max(cfg.min_rounds_per_step);
+                let max_rounds = match cfg.strategy.freeze_step_cap {
+                    Some(cap) => cap.min(budget),
+                    None => budget,
+                };
+                Some(Phase::Train(TrainPhase {
+                    stage: "layerfreeze".into(),
+                    step: t,
+                    layout: BlockLayout { frozen: t - 1, depth: model.num_blocks },
+                    train_artifact: format!("train_t{t}"),
+                    fallback_artifact: Some(format!("train_op_t{t}")),
+                    eval_artifact: format!("eval_t{t}"),
+                    observe_params: model.block_params[t - 1].clone(),
+                    lr: cfg.lr,
+                    max_rounds,
+                    min_rounds: cfg.min_rounds_per_step.min(max_rounds),
+                    em_gated: true,
+                }))
+            }
+            Cursor::Done => None,
+        }
+    }
+
+    fn final_eval_artifact(&self, model: &ModelView) -> String {
+        format!("eval_t{}", model.num_blocks)
+    }
+
+    fn participation_artifact(&self, model: &ModelView) -> String {
+        format!("train_op_t{}", model.num_blocks)
+    }
+}
+
+impl Method for LayerFreeze {
+    fn name(&self) -> &'static str {
+        "LayerFreeze"
+    }
+
+    fn inclusive(&self) -> bool {
+        true
+    }
+
+    fn run(&self, rt: &Runtime, cfg: &RunConfig) -> Result<RunSummary> {
+        let mut schedule = LayerFreeze::default();
+        run_strategy(&mut schedule, rt, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view() -> ModelView {
+        ModelView::synthetic(&[2_000_000, 3_000_000, 3_000_000, 3_200_000])
+    }
+
+    #[test]
+    fn full_depth_from_round_zero_and_prefix_advances() {
+        let v = view();
+        let cfg = RunConfig::smoke("m");
+        let mut s = LayerFreeze::default();
+        let mut last = None;
+        let mut steps = Vec::new();
+        while let Some(p) = s.next_phase(&v, &cfg, last.as_ref()) {
+            last = match &p {
+                Phase::Transition => None,
+                Phase::Train(t) => {
+                    steps.push((t.step, t.layout));
+                    Some(StepFeedback { rounds_used: 5.min(t.max_rounds), froze: true })
+                }
+                Phase::Distill(_) => unreachable!("layerfreeze never distills"),
+            };
+        }
+        assert_eq!(steps.len(), 4);
+        for (i, (step, layout)) in steps.iter().enumerate() {
+            assert_eq!(*step, i + 1);
+            // The analytic layout keeps the full model resident; only
+            // the frozen prefix moves.
+            assert_eq!(*layout, BlockLayout { frozen: i, depth: 4 });
+        }
+    }
+
+    #[test]
+    fn budget_is_convergence_driven_unless_capped() {
+        let v = view();
+        let mut cfg = RunConfig::smoke("m");
+        let mut s = LayerFreeze::default();
+        // First train phase sees the whole run budget (no per-step cap).
+        let p = loop {
+            match s.next_phase(&v, &cfg, None) {
+                Some(Phase::Train(t)) => break t,
+                Some(_) => continue,
+                None => panic!("schedule ended early"),
+            }
+        };
+        assert_eq!(p.max_rounds, cfg.max_rounds_total);
+        assert!(p.em_gated);
+        // With the cap knob set, steps are bounded like ProFL's.
+        cfg.strategy.freeze_step_cap = Some(6);
+        let mut s = LayerFreeze::default();
+        let p = loop {
+            match s.next_phase(&v, &cfg, None) {
+                Some(Phase::Train(t)) => break t,
+                Some(_) => continue,
+                None => panic!("schedule ended early"),
+            }
+        };
+        assert_eq!(p.max_rounds, 6);
+    }
+}

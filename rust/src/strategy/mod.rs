@@ -1,0 +1,448 @@
+//! Memory-wall strategies: *what is trainable this round, and when does
+//! it advance*.
+//!
+//! ProFL's progressive shrink→grow schedule is one point in a family of
+//! memory-wall strategies. This module factors the family's shared
+//! decision — the trainable block layout per round plus the
+//! advance/freeze trigger — into the [`MemoryStrategy`] trait, and ships
+//! the zoo:
+//!
+//! | strategy      | layout per phase            | advance trigger          |
+//! |---------------|-----------------------------|--------------------------|
+//! | `profl`       | one block, shrink→grow      | EM slope (§3.3)          |
+//! | `paramaware`  | one block, shrink→grow      | rounds ∝ block params    |
+//! | `layerfreeze` | full depth, frozen prefix   | EM slope on front block  |
+//! | `elastic`     | window from a budget curve  | fixed per-phase budget   |
+//!
+//! A strategy is a *schedule generator*: [`MemoryStrategy::next_phase`]
+//! yields [`Phase`]s (freeze transition, train step, distill step) and
+//! receives [`StepFeedback`] about how the previous phase actually went
+//! (rounds consumed, whether freezing fired). The [`run_strategy`]
+//! driver executes phases against a [`ServerCtx`] — the coordinator
+//! round loop, the freeze [`TransitionLog`](crate::freezing::TransitionLog),
+//! and the `freeze.observe` telemetry spans all consume the trait rather
+//! than ProFL internals. ProFL and ParamAware are ported onto the trait
+//! bit-for-bit: the driver replays the exact legacy call sequence, so
+//! pre-refactor per-round records and golden traces survive unchanged.
+//!
+//! The module also carries a *pure* memory model ([`BlockLayout`],
+//! [`layout_mem`], [`depth_cap`]) so schedules and footprints can be
+//! enumerated, property-tested, and compared without compiled artifacts
+//! (`examples/strategy_zoo.rs`, `tests/proptests.rs`). See
+//! `docs/STRATEGIES.md` for the trait contract and how to add a
+//! strategy.
+
+pub mod elastic;
+pub mod layerfreeze;
+pub mod progressive;
+
+pub use elastic::Elastic;
+pub use layerfreeze::LayerFreeze;
+pub use progressive::{FreezePolicy, Progressive};
+
+use crate::config::RunConfig;
+use crate::coordinator::ServerCtx;
+use crate::freezing::FreezeDetector;
+use crate::manifest::{MemCoeffs, ModelEntry};
+use crate::metrics::RunSummary;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// The slice of a manifest [`ModelEntry`] a strategy consumes. It is a
+/// plain-data view so schedules can be enumerated without compiled
+/// artifacts (tests and `examples/strategy_zoo.rs` build one directly).
+#[derive(Debug, Clone)]
+pub struct ModelView {
+    /// Progressive block count T.
+    pub num_blocks: usize,
+    /// Parameter counts per block (index 0 = block 1).
+    pub block_param_counts: Vec<u64>,
+    /// Parameter names belonging to each block (index 0 = block 1).
+    pub block_params: Vec<Vec<String>>,
+}
+
+impl ModelView {
+    /// Project a manifest entry down to the strategy-visible fields.
+    pub fn of(model: &ModelEntry) -> Self {
+        ModelView {
+            num_blocks: model.num_blocks,
+            block_param_counts: model.block_param_counts.clone(),
+            block_params: model.block_params.clone(),
+        }
+    }
+
+    /// A synthetic T-block view from parameter counts alone — for
+    /// artifact-free schedule enumeration (tests, the zoo example).
+    pub fn synthetic(counts: &[u64]) -> Self {
+        ModelView {
+            num_blocks: counts.len(),
+            block_param_counts: counts.to_vec(),
+            block_params: (1..=counts.len()).map(|t| vec![format!("block{t}_w")]).collect(),
+        }
+    }
+}
+
+/// A contiguous trainable window over a T-block model: blocks
+/// `[0, frozen)` are frozen (weights resident, no gradients), blocks
+/// `[frozen, depth)` are trainable, blocks past `depth` are not
+/// materialized this round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockLayout {
+    /// Frozen prefix length in blocks.
+    pub frozen: usize,
+    /// Resident model depth in blocks (`frozen <= depth`).
+    pub depth: usize,
+}
+
+impl BlockLayout {
+    /// The full-model layout: every block resident and trainable.
+    pub fn full(num_blocks: usize) -> Self {
+        BlockLayout { frozen: 0, depth: num_blocks }
+    }
+
+    /// Number of trainable blocks in the window.
+    pub fn trainable_blocks(&self) -> usize {
+        self.depth.saturating_sub(self.frozen)
+    }
+}
+
+/// Bytes per f32 parameter.
+pub const BYTES_PER_PARAM: u64 = 4;
+/// Extra per-parameter copies a trainable parameter carries (gradient +
+/// SGD momentum) on top of its resident weight.
+pub const OPT_STATE_FACTOR: u64 = 2;
+/// Activation proxy: per-sample activation bytes ≈ resident parameter
+/// bytes / 10 (calibrated against the manifest's ResNet18 coefficients:
+/// 11.2M params ⇒ ≈4.4MB activations per sample).
+pub const ACT_DIVISOR: u64 = 10;
+
+/// Analytic training footprint of a [`BlockLayout`] over per-block
+/// parameter counts. Resident weights cost 1× their bytes, trainable
+/// parameters add [`OPT_STATE_FACTOR`]× for gradients + optimizer
+/// state, and per-sample activations scale with the resident depth.
+///
+/// Two invariants hold by construction (and are property-tested):
+/// growing the trainable window never shrinks the footprint, and no
+/// layout exceeds [`BlockLayout::full`] (full-model training).
+pub fn layout_mem(counts: &[u64], layout: &BlockLayout) -> MemCoeffs {
+    let depth = layout.depth.min(counts.len());
+    let frozen = layout.frozen.min(depth);
+    let resident: u64 = counts[..depth].iter().sum();
+    let trainable: u64 = counts[frozen..depth].iter().sum();
+    MemCoeffs {
+        fixed_bytes: BYTES_PER_PARAM * (resident + OPT_STATE_FACTOR * trainable),
+        per_sample_bytes: BYTES_PER_PARAM * resident / ACT_DIVISOR,
+        params_total: resident,
+        params_trainable: trainable,
+    }
+}
+
+/// Deepest layout `{frozen, d}` (`d` in `frozen+1 ..= counts.len()`)
+/// whose [`layout_mem`] footprint at the accounting batch fits a static
+/// budget; `None` when even a single trainable block does not fit. This
+/// is the per-client depth cap `layerfreeze` applies under
+/// [`DeviceMemory`](crate::memory::DeviceMemory) fit.
+pub fn depth_cap(counts: &[u64], frozen: usize, budget_bytes: u64, batch: u64) -> Option<BlockLayout> {
+    for d in (frozen + 1..=counts.len()).rev() {
+        let l = BlockLayout { frozen, depth: d };
+        if layout_mem(counts, &l).bytes_at(batch) <= budget_bytes {
+            return Some(l);
+        }
+    }
+    None
+}
+
+/// What actually happened while executing the previous phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepFeedback {
+    /// Rounds the phase consumed (≤ its `max_rounds`).
+    pub rounds_used: usize,
+    /// Whether an EM-gated phase ended by freezing (vs budget expiry).
+    pub froze: bool,
+}
+
+/// One federated-training phase: a fixed trainable layout driven for up
+/// to `max_rounds` rounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainPhase {
+    /// Stage tag recorded per round ("shrink", "grow", "layerfreeze", …).
+    pub stage: String,
+    /// Step index recorded per round (block / boundary number).
+    pub step: usize,
+    /// The strategy's semantic trainable window (memory accounting).
+    pub layout: BlockLayout,
+    /// Training artifact dispatched to memory-fit clients.
+    pub train_artifact: String,
+    /// Fallback artifact for clients that cannot fit `train_artifact`
+    /// (ProFL's output-module handshake); `None` excludes them.
+    pub fallback_artifact: Option<String>,
+    /// Evaluation artifact for the periodic test pass.
+    pub eval_artifact: String,
+    /// Parameter names fed to the freeze detector each round.
+    pub observe_params: Vec<String>,
+    /// Client learning rate for the phase.
+    pub lr: f32,
+    /// Round budget: the phase ends after this many rounds at the latest.
+    pub max_rounds: usize,
+    /// Rounds that must elapse before an EM freeze may end the phase.
+    pub min_rounds: usize,
+    /// Whether the EM detector may end the phase early (`false` = the
+    /// phase always runs to `max_rounds`).
+    pub em_gated: bool,
+}
+
+/// One federated-distillation phase (ProFL's *Map*).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistillPhase {
+    /// Stage tag recorded per round ("map").
+    pub stage: String,
+    /// Step index recorded per round.
+    pub step: usize,
+    /// Distillation artifact.
+    pub artifact: String,
+    /// Number of distillation rounds.
+    pub rounds: usize,
+    /// Client learning rate.
+    pub lr: f32,
+}
+
+/// One entry of a strategy's schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase {
+    /// A freeze/layout transition: the coordinator bumps its prefix
+    /// version and records it in the [`TransitionLog`](crate::freezing::TransitionLog)
+    /// (stale in-flight updates from before the transition are projected
+    /// or dropped per the stale-projection policy).
+    Transition,
+    /// A training phase.
+    Train(TrainPhase),
+    /// A distillation phase.
+    Distill(DistillPhase),
+}
+
+/// A memory-wall strategy: owns the trainable layout per round, the
+/// advance/freeze trigger, and the output-module handshake, expressed
+/// as a lazy phase schedule.
+///
+/// Contract: [`next_phase`](Self::next_phase) is called repeatedly until
+/// it returns `None`. The `last` argument carries the
+/// [`StepFeedback`] of the *previous* `Train`/`Distill` phase (or `None`
+/// after a `Transition` / on the first call) — strategies use it for
+/// budget bookkeeping (e.g. ProFL's shared shrink+grow round budget).
+pub trait MemoryStrategy {
+    /// Display name (summaries, telemetry `strategy` attribute).
+    fn name(&self) -> &'static str;
+
+    /// Whether the strategy can use every client (the paper's
+    /// "Inclusive?" column).
+    fn inclusive(&self) -> bool {
+        true
+    }
+
+    /// Produce the next phase of the schedule, or `None` when done.
+    fn next_phase(
+        &mut self,
+        model: &ModelView,
+        cfg: &RunConfig,
+        last: Option<&StepFeedback>,
+    ) -> Option<Phase>;
+
+    /// Artifact for the end-of-run evaluation pass.
+    fn final_eval_artifact(&self, model: &ModelView) -> String;
+
+    /// Artifact whose footprint defines run-level participation (for
+    /// inclusive strategies: the output-module fallback).
+    fn participation_artifact(&self, model: &ModelView) -> String;
+}
+
+/// Execute one [`TrainPhase`] against the coordinator. This is the
+/// legacy `ProFL::run_step` loop verbatim — per round: train, flatten
+/// the observed block, feed the freeze detector (with the telemetry
+/// `freeze.observe` span + `freeze.em` gauge, now strategy-tagged),
+/// evaluate on the cadence, record, and stop early on an EM freeze once
+/// `min_rounds` have elapsed.
+fn run_train_phase(ctx: &mut ServerCtx, strategy: &'static str, p: &TrainPhase) -> Result<StepFeedback> {
+    let mut det = FreezeDetector::new(ctx.cfg.freeze.into());
+    let mut used = 0;
+    let mut froze = false;
+    for r in 0..p.max_rounds {
+        let out =
+            ctx.run_train_round(&p.train_artifact, p.fallback_artifact.as_deref(), p.lr, &p.stage, p.step)?;
+        let snapshot = ctx.store.flatten(&p.observe_params);
+        let t_observe = ctx.telemetry_mut().is_some().then(std::time::Instant::now);
+        let (em, em_freeze) = det.observe(&snapshot);
+        if let Some(t0) = t_observe {
+            let round = ctx.round;
+            let sim_s = ctx.sim_time_s;
+            let consecutive = det.consecutive();
+            if let Some(tel) = ctx.telemetry_mut() {
+                use crate::json::Value;
+                let attrs = [
+                    ("stage", Value::Str(p.stage.clone())),
+                    ("step", Value::Num(p.step as f64)),
+                    ("consecutive", Value::Num(consecutive as f64)),
+                    ("freeze", Value::Bool(em_freeze)),
+                    ("strategy", Value::Str(strategy.to_string())),
+                ];
+                tel.span("freeze.observe", round, sim_s, t0.elapsed().as_secs_f64(), &attrs);
+                tel.gauge("freeze.em", round, sim_s, em.unwrap_or(f64::NAN), &attrs);
+            }
+        }
+        let test_acc = if r % ctx.cfg.eval_every == 0 || r + 1 == p.max_rounds {
+            ctx.evaluate(&p.eval_artifact)?.acc
+        } else {
+            f32::NAN
+        };
+        ctx.record_round(&p.stage, p.step, &out, test_acc, em.unwrap_or(f64::NAN));
+        used += 1;
+        if p.em_gated && em_freeze && r + 1 >= p.min_rounds {
+            froze = true;
+            break;
+        }
+    }
+    Ok(StepFeedback { rounds_used: used, froze })
+}
+
+/// Execute one [`DistillPhase`] — the legacy shrink-stage *Map* loop.
+fn run_distill_phase(ctx: &mut ServerCtx, d: &DistillPhase) -> Result<StepFeedback> {
+    let mut used = 0;
+    for _ in 0..d.rounds {
+        let out = ctx.run_distill_round(&d.artifact, d.lr)?;
+        ctx.record_round(&d.stage, d.step, &out, f32::NAN, f64::NAN);
+        used += 1;
+    }
+    Ok(StepFeedback { rounds_used: used, froze: false })
+}
+
+/// Drive a [`MemoryStrategy`] end to end against the fleet simulator and
+/// produce its [`RunSummary`]. The caller passes the *final* config
+/// (any method-level overrides already applied) — the driver clones it
+/// into the [`ServerCtx`] exactly as the legacy method loop did.
+pub fn run_strategy(
+    strategy: &mut dyn MemoryStrategy,
+    rt: &Runtime,
+    cfg: &RunConfig,
+) -> Result<RunSummary> {
+    let mut ctx = ServerCtx::new(rt, cfg.clone())?;
+    let model = rt.model(&cfg.model_tag)?;
+    let view = ModelView::of(model);
+    let op_mem = model
+        .artifact(&strategy.participation_artifact(&view))
+        .map(|a| a.participation_mem())
+        .unwrap_or_default();
+
+    let mut last: Option<StepFeedback> = None;
+    while let Some(phase) = strategy.next_phase(&view, cfg, last.as_ref()) {
+        last = match phase {
+            Phase::Transition => {
+                ctx.bump_prefix_version();
+                None
+            }
+            Phase::Train(p) => Some(run_train_phase(&mut ctx, strategy.name(), &p)?),
+            Phase::Distill(d) => Some(run_distill_phase(&mut ctx, &d)?),
+        };
+    }
+
+    let final_eval = ctx.evaluate(&strategy.final_eval_artifact(&view))?;
+    let (up, down) = ctx.metrics.total_bytes();
+    let mut final_acc = ctx.metrics.final_acc(ctx.cfg.acc_tail);
+    if final_acc == 0.0 {
+        final_acc = final_eval.acc as f64;
+    }
+    // Inclusive participation: anyone who can at least train the
+    // strategy's participation artifact takes part (§4.1).
+    let pr = ctx.pool.participation_rate(&op_mem);
+    Ok(RunSummary {
+        method: strategy.name().into(),
+        model_tag: ctx.cfg.model_tag.clone(),
+        partition: ctx.cfg.partition().label(),
+        final_acc,
+        participation_rate: pr,
+        peak_client_mem: ctx.metrics.peak_client_mem(),
+        total_bytes_up: up,
+        total_bytes_down: down,
+        rounds: ctx.round,
+        sim_time_s: ctx.sim_time_s,
+        transitions: ctx.transition_log().entries().to_vec(),
+        history: ctx.metrics.records.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const COUNTS: [u64; 4] = [2_000_000, 3_000_000, 3_000_000, 3_200_000];
+
+    #[test]
+    fn layout_mem_monotone_in_window() {
+        // Growing the trainable window (deeper, or less frozen) never
+        // shrinks the footprint.
+        let batch = 128;
+        let mut prev = 0;
+        for depth in 1..=COUNTS.len() {
+            let b = layout_mem(&COUNTS, &BlockLayout { frozen: 0, depth }).bytes_at(batch);
+            assert!(b >= prev, "depth {depth}: {b} < {prev}");
+            prev = b;
+        }
+        // Unfreezing front blocks (fixed depth) also only grows it.
+        prev = 0;
+        for frozen in (0..COUNTS.len()).rev() {
+            let b =
+                layout_mem(&COUNTS, &BlockLayout { frozen, depth: COUNTS.len() }).bytes_at(batch);
+            assert!(b >= prev, "frozen {frozen}: {b} < {prev}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn layout_mem_bounded_by_full_model() {
+        let batch = 128;
+        let full = layout_mem(&COUNTS, &BlockLayout::full(COUNTS.len())).bytes_at(batch);
+        for frozen in 0..COUNTS.len() {
+            for depth in frozen..=COUNTS.len() {
+                let b = layout_mem(&COUNTS, &BlockLayout { frozen, depth }).bytes_at(batch);
+                assert!(b <= full, "layout {{{frozen}, {depth}}} exceeds full-model {full}");
+            }
+        }
+    }
+
+    #[test]
+    fn layout_mem_magnitudes_match_manifest_scale() {
+        // ResNet18-scale sanity: ~11.2M params full-model ≈ 134MB fixed
+        // + ~4.5MB/sample — the same regime as the manifest coefficients
+        // used throughout memory.rs tests (131MB + 4.4MB/sample).
+        let m = layout_mem(&COUNTS, &BlockLayout::full(COUNTS.len()));
+        assert!((120..150).contains(&(m.fixed_bytes / 1_000_000)), "{}", m.fixed_bytes);
+        assert!((3..6).contains(&(m.per_sample_bytes / 1_000_000)), "{}", m.per_sample_bytes);
+        assert_eq!(m.params_trainable, COUNTS.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn depth_cap_respects_budget_and_frozen_floor() {
+        let batch = 128;
+        // A huge budget admits the full depth; a tiny one admits none.
+        let full = depth_cap(&COUNTS, 0, u64::MAX, batch).unwrap();
+        assert_eq!(full, BlockLayout::full(COUNTS.len()));
+        assert!(depth_cap(&COUNTS, 0, 1, batch).is_none());
+        // Every returned layout actually fits, and deepens with budget.
+        let mut prev_depth = 0;
+        for budget_mb in [30u64, 60, 120, 250, 500, 1000] {
+            let budget = budget_mb * 1_000_000;
+            if let Some(l) = depth_cap(&COUNTS, 1, budget, batch) {
+                assert!(layout_mem(&COUNTS, &l).bytes_at(batch) <= budget);
+                assert!(l.depth >= prev_depth, "cap not monotone in budget");
+                assert_eq!(l.frozen, 1);
+                prev_depth = l.depth;
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_view_shape() {
+        let v = ModelView::synthetic(&COUNTS);
+        assert_eq!(v.num_blocks, 4);
+        assert_eq!(v.block_params.len(), 4);
+        assert_eq!(v.block_params[2], vec!["block3_w".to_string()]);
+    }
+}

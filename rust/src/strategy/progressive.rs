@@ -1,0 +1,310 @@
+//! The paper's progressive schedule as a [`MemoryStrategy`]: model
+//! shrinking (T→2, each step *Map*ped into its surrogate via federated
+//! distillation) followed by model growing (1→T), with EM-gated
+//! freezing — or the ParamAware round-budget baseline (Table 4).
+//!
+//! This is a bit-for-bit port of the legacy `methods::profl` loops: the
+//! phase sequence, per-step budgets, learning-rate decay, and freeze
+//! gating reproduce the pre-refactor per-round records exactly
+//! (`examples/strategy_zoo.rs` asserts the degeneracy against an inline
+//! transcription of the legacy schedule).
+
+use super::{BlockLayout, DistillPhase, MemoryStrategy, ModelView, Phase, StepFeedback, TrainPhase};
+use crate::config::RunConfig;
+
+/// How a progressive step decides it is done.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum FreezePolicy {
+    /// Effective movement + least-squares slope (the paper's §3.3).
+    #[default]
+    EffectiveMovement,
+    /// Table 4 baseline: per-step round budget ∝ block parameter count.
+    ParamAware,
+}
+
+/// Round budget for step `t` under ParamAware: share of the total grow
+/// budget proportional to the block's parameter count (min 4 rounds).
+pub fn param_aware_rounds(counts: &[u64], t: usize, total_budget: usize) -> usize {
+    let total: u64 = counts.iter().sum();
+    let share = counts[t - 1] as f64 / total as f64;
+    ((total_budget as f64 * share) as usize).max(4)
+}
+
+/// Which pending phase the next feedback belongs to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Pending {
+    None,
+    ShrinkTrain,
+    Distill,
+    GrowTrain,
+}
+
+/// Schedule cursor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Cursor {
+    Start,
+    /// About to emit the freeze transition for shrink step t.
+    ShrinkEnter(usize),
+    /// About to emit the train phase for shrink step t.
+    ShrinkTrain(usize),
+    /// About to emit the Map distillation for shrink step t.
+    ShrinkDistill(usize),
+    /// About to emit the freeze transition for grow step t.
+    GrowEnter(usize),
+    /// About to emit the train phase for grow step t.
+    GrowTrain(usize),
+    Done,
+}
+
+/// ProFL's shrink→grow schedule (or its ParamAware ablation) on the
+/// [`MemoryStrategy`] trait.
+#[derive(Debug)]
+pub struct Progressive {
+    policy: FreezePolicy,
+    cursor: Cursor,
+    pending: Pending,
+    lr: f32,
+    /// Shared shrink+grow round budget (`2 × max_rounds_total` at start).
+    remaining: usize,
+}
+
+impl Progressive {
+    /// A fresh schedule under the given freeze policy. Budget and
+    /// learning rate initialize lazily from the config on the first
+    /// [`next_phase`](MemoryStrategy::next_phase) call.
+    pub fn new(policy: FreezePolicy) -> Self {
+        Progressive { policy, cursor: Cursor::Start, pending: Pending::None, lr: 0.0, remaining: 0 }
+    }
+
+    /// The legacy `run_step` budget arithmetic for one train phase.
+    fn train_phase(&self, model: &ModelView, cfg: &RunConfig, t: usize, stage: &str, budget: usize) -> TrainPhase {
+        let counts = &model.block_param_counts;
+        let max_rounds = match self.policy {
+            FreezePolicy::EffectiveMovement => cfg.max_rounds_per_step.min(budget),
+            FreezePolicy::ParamAware => {
+                param_aware_rounds(counts, t, cfg.max_rounds_per_step * counts.len()).min(budget)
+            }
+        };
+        let min_rounds = cfg.min_rounds_per_step.min(max_rounds);
+        TrainPhase {
+            stage: stage.into(),
+            step: t,
+            layout: BlockLayout { frozen: t - 1, depth: t },
+            train_artifact: format!("train_t{t}"),
+            fallback_artifact: Some(format!("train_op_t{t}")),
+            eval_artifact: format!("eval_t{t}"),
+            observe_params: model.block_params[t - 1].clone(),
+            lr: self.lr,
+            max_rounds,
+            min_rounds,
+            em_gated: self.policy == FreezePolicy::EffectiveMovement,
+        }
+    }
+}
+
+impl MemoryStrategy for Progressive {
+    fn name(&self) -> &'static str {
+        match self.policy {
+            FreezePolicy::EffectiveMovement => "ProFL",
+            FreezePolicy::ParamAware => "ParamAware",
+        }
+    }
+
+    fn next_phase(
+        &mut self,
+        model: &ModelView,
+        cfg: &RunConfig,
+        last: Option<&StepFeedback>,
+    ) -> Option<Phase> {
+        // Consume the previous phase's feedback (legacy bookkeeping:
+        // every executed round draws down the shared budget; each grow
+        // step additionally decays the learning rate).
+        let used = last.map_or(0, |f| f.rounds_used);
+        match std::mem::replace(&mut self.pending, Pending::None) {
+            Pending::None => {}
+            Pending::ShrinkTrain | Pending::Distill => {
+                self.remaining = self.remaining.saturating_sub(used);
+            }
+            Pending::GrowTrain => {
+                self.remaining = self.remaining.saturating_sub(used);
+                self.lr *= cfg.lr_step_decay;
+            }
+        }
+
+        if self.cursor == Cursor::Start {
+            self.lr = cfg.lr;
+            self.remaining = cfg.max_rounds_total * 2; // shrink + grow budget
+            self.cursor = if cfg.shrinking && model.num_blocks >= 2 {
+                Cursor::ShrinkEnter(model.num_blocks)
+            } else {
+                Cursor::GrowEnter(1)
+            };
+        }
+
+        match self.cursor {
+            Cursor::Start => unreachable!("resolved above"),
+            Cursor::ShrinkEnter(t) => {
+                self.cursor = Cursor::ShrinkTrain(t);
+                Some(Phase::Transition)
+            }
+            Cursor::ShrinkTrain(t) => {
+                self.pending = Pending::ShrinkTrain;
+                self.cursor = Cursor::ShrinkDistill(t);
+                Some(Phase::Train(self.train_phase(model, cfg, t, "shrink", self.remaining)))
+            }
+            Cursor::ShrinkDistill(t) => {
+                self.pending = Pending::Distill;
+                self.cursor =
+                    if t > 2 { Cursor::ShrinkEnter(t - 1) } else { Cursor::GrowEnter(1) };
+                Some(Phase::Distill(DistillPhase {
+                    stage: "map".into(),
+                    step: t,
+                    artifact: format!("distill_t{t}"),
+                    rounds: cfg.distill_rounds,
+                    lr: self.lr,
+                }))
+            }
+            Cursor::GrowEnter(t) => {
+                self.cursor = Cursor::GrowTrain(t);
+                Some(Phase::Transition)
+            }
+            Cursor::GrowTrain(t) => {
+                self.pending = Pending::GrowTrain;
+                self.cursor =
+                    if t < model.num_blocks { Cursor::GrowEnter(t + 1) } else { Cursor::Done };
+                let budget = self.remaining.max(cfg.min_rounds_per_step);
+                Some(Phase::Train(self.train_phase(model, cfg, t, "grow", budget)))
+            }
+            Cursor::Done => None,
+        }
+    }
+
+    fn final_eval_artifact(&self, model: &ModelView) -> String {
+        format!("eval_t{}", model.num_blocks)
+    }
+
+    fn participation_artifact(&self, model: &ModelView) -> String {
+        format!("train_op_t{}", model.num_blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view() -> ModelView {
+        ModelView::synthetic(&[2_000_000, 3_000_000, 3_000_000, 3_200_000])
+    }
+
+    /// Drive a schedule to completion with a fixed rounds-used script.
+    fn enumerate(policy: FreezePolicy, cfg: &RunConfig, used_per_train: usize) -> Vec<Phase> {
+        let v = view();
+        let mut s = Progressive::new(policy);
+        let mut phases = Vec::new();
+        let mut last: Option<StepFeedback> = None;
+        while let Some(p) = s.next_phase(&v, cfg, last.as_ref()) {
+            last = match &p {
+                Phase::Transition => None,
+                Phase::Train(t) => Some(StepFeedback {
+                    rounds_used: used_per_train.min(t.max_rounds),
+                    froze: t.em_gated && used_per_train < t.max_rounds,
+                }),
+                Phase::Distill(d) => Some(StepFeedback { rounds_used: d.rounds, froze: false }),
+            };
+            phases.push(p);
+        }
+        phases
+    }
+
+    #[test]
+    fn shrink_then_grow_phase_order_matches_legacy() {
+        let cfg = RunConfig::smoke("m");
+        let phases = enumerate(FreezePolicy::EffectiveMovement, &cfg, 4);
+        // Shrink t = 4..2: [Transition, Train, Distill] each; grow
+        // t = 1..4: [Transition, Train] each.
+        let mut expect: Vec<(&str, usize)> = Vec::new();
+        for t in [4usize, 3, 2] {
+            expect.extend([("transition", t), ("shrink", t), ("map", t)]);
+        }
+        for t in 1..=4usize {
+            expect.extend([("transition", t), ("grow", t)]);
+        }
+        assert_eq!(phases.len(), expect.len());
+        for (p, (kind, step)) in phases.iter().zip(&expect) {
+            match p {
+                Phase::Transition => assert_eq!(*kind, "transition"),
+                Phase::Train(t) => {
+                    assert_eq!(&t.stage, kind);
+                    assert_eq!(t.step, *step);
+                    assert_eq!(t.train_artifact, format!("train_t{step}"));
+                    assert_eq!(t.layout, BlockLayout { frozen: step - 1, depth: *step });
+                }
+                Phase::Distill(d) => {
+                    assert_eq!(*kind, "map");
+                    assert_eq!(d.step, *step);
+                    assert_eq!(d.rounds, cfg.distill_rounds);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noshrink_skips_straight_to_grow() {
+        let mut cfg = RunConfig::smoke("m");
+        cfg.shrinking = false;
+        let phases = enumerate(FreezePolicy::EffectiveMovement, &cfg, 4);
+        assert_eq!(phases.len(), 8, "4 × [Transition, Train]");
+        assert!(matches!(&phases[1], Phase::Train(t) if t.stage == "grow" && t.step == 1));
+    }
+
+    #[test]
+    fn budgets_track_legacy_arithmetic() {
+        // Smoke profile: remaining = 64; EM caps each step at
+        // max_rounds_per_step = 8; every train uses 4, every distill 2.
+        let cfg = RunConfig::smoke("m");
+        let phases = enumerate(FreezePolicy::EffectiveMovement, &cfg, 4);
+        let budgets: Vec<usize> = phases
+            .iter()
+            .filter_map(|p| match p {
+                Phase::Train(t) => Some(t.max_rounds),
+                _ => None,
+            })
+            .collect();
+        // All seven train phases fit under the per-step cap of 8 and the
+        // budget never runs dry (64 - 3×(4+2) - 4×4 > 0).
+        assert_eq!(budgets, vec![8; 7]);
+    }
+
+    #[test]
+    fn param_aware_budget_is_share_proportional() {
+        let counts = [2_000_000u64, 3_000_000, 3_000_000, 3_200_000];
+        let total_budget = 32 * 4;
+        let r1 = param_aware_rounds(&counts, 1, total_budget);
+        let r4 = param_aware_rounds(&counts, 4, total_budget);
+        assert!(r4 > r1, "bigger block ⇒ bigger budget");
+        assert!(param_aware_rounds(&[1, 1_000_000], 1, 100) >= 4, "min 4 rounds");
+        // ParamAware phases never EM-gate.
+        let cfg = RunConfig::smoke("m");
+        for p in enumerate(FreezePolicy::ParamAware, &cfg, usize::MAX) {
+            if let Phase::Train(t) = p {
+                assert!(!t.em_gated);
+            }
+        }
+    }
+
+    #[test]
+    fn grow_lr_decays_per_step() {
+        let mut cfg = RunConfig::smoke("m");
+        cfg.shrinking = false;
+        cfg.lr_step_decay = 0.5;
+        let phases = enumerate(FreezePolicy::EffectiveMovement, &cfg, 4);
+        let lrs: Vec<f32> = phases
+            .iter()
+            .filter_map(|p| match p {
+                Phase::Train(t) => Some(t.lr),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lrs, vec![0.08, 0.04, 0.02, 0.01]);
+    }
+}

@@ -379,6 +379,23 @@ pub fn config_value(cfg: &RunConfig) -> Value {
                 ("lazy_pool", Value::Bool(f.lazy_pool)),
             ]),
         ),
+        (
+            "strategy",
+            obj(vec![
+                ("name", match &cfg.strategy.name {
+                    Some(s) => n_str(s),
+                    None => Value::Null,
+                }),
+                ("elastic_phases", match cfg.strategy.elastic_phases {
+                    Some(p) => n_usize(p),
+                    None => Value::Null,
+                }),
+                ("freeze_step_cap", match cfg.strategy.freeze_step_cap {
+                    Some(c) => n_usize(c),
+                    None => Value::Null,
+                }),
+            ]),
+        ),
         ("acc_tail", n_usize(cfg.acc_tail)),
         ("seed", n_str(&cfg.seed.to_string())),
         ("telemetry_jsonl", match &cfg.telemetry_jsonl {
@@ -415,6 +432,19 @@ pub fn git_describe() -> String {
 /// telemetry stream for the manifest without holding the appender open.
 pub fn count_lines(path: &Path) -> u64 {
     std::fs::read_to_string(path).map(|s| s.lines().count() as u64).unwrap_or(0)
+}
+
+/// Per-method telemetry stream path for multi-method runs: `compare`
+/// with `--telemetry-jsonl runs/t.jsonl` writes one stream per method at
+/// `runs/t.<method>.jsonl` instead of truncating a single file five
+/// times. The method name is lowercased so paths are shell-friendly.
+pub fn method_stream_path(base: &Path, method: &str) -> PathBuf {
+    let method = method.to_lowercase();
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("telemetry");
+    match base.extension().and_then(|s| s.to_str()) {
+        Some(ext) => base.with_file_name(format!("{stem}.{method}.{ext}")),
+        None => base.with_file_name(format!("{stem}.{method}.jsonl")),
+    }
 }
 
 /// Build the run-provenance manifest. Deterministic except for the
@@ -475,6 +505,33 @@ pub fn build_manifest(
         ("telemetry", telemetry_value),
         ("summary", summary_value),
     ])
+}
+
+/// Build a multi-method manifest: the `compare` subcommand emits one
+/// telemetry stream per method (see [`method_stream_path`]), and the
+/// manifest's `telemetry` field records *every* stream —
+/// `{streams: [{method, path, lines}, …]}` in execution order — so no
+/// stream is orphaned from its provenance record.
+pub fn build_multi_manifest(
+    cfg: &RunConfig,
+    argv: &[String],
+    streams: &[(String, PathBuf, u64)],
+) -> Value {
+    let mut m = build_manifest(cfg, argv, None, None);
+    let list: Vec<Value> = streams
+        .iter()
+        .map(|(method, path, lines)| {
+            obj(vec![
+                ("method", n_str(method)),
+                ("path", n_str(&path.display().to_string())),
+                ("lines", n_u64(*lines)),
+            ])
+        })
+        .collect();
+    if let Value::Obj(map) = &mut m {
+        map.insert("telemetry".to_string(), obj(vec![("streams", Value::Arr(list))]));
+    }
+    m
 }
 
 /// Write `manifest` (pretty: one compact JSON object + newline) to
@@ -640,6 +697,50 @@ mod tests {
         let mut c = base.clone();
         c.fleet.lazy_pool = true;
         assert_ne!(h0, config_sha256(&c), "lazy pool");
+        let mut c = base.clone();
+        c.strategy.name = Some("elastic".into());
+        assert_ne!(h0, config_sha256(&c), "strategy name");
+        let mut c = base.clone();
+        c.strategy.elastic_phases = Some(3);
+        assert_ne!(h0, config_sha256(&c), "elastic phases");
+        let mut c = base.clone();
+        c.strategy.freeze_step_cap = Some(16);
+        assert_ne!(h0, config_sha256(&c), "freeze step cap");
+    }
+
+    #[test]
+    fn method_stream_paths_are_unique_per_method() {
+        let base = Path::new("runs/t.jsonl");
+        assert_eq!(method_stream_path(base, "ProFL"), Path::new("runs/t.profl.jsonl"));
+        assert_eq!(method_stream_path(base, "HeteroFL"), Path::new("runs/t.heterofl.jsonl"));
+        // Extension-less bases still get distinct jsonl streams.
+        assert_eq!(
+            method_stream_path(Path::new("stream"), "DepthFL"),
+            Path::new("stream.depthfl.jsonl")
+        );
+    }
+
+    #[test]
+    fn multi_manifest_records_every_stream() {
+        let cfg = RunConfig::default();
+        let argv = vec!["profl".to_string(), "compare".to_string()];
+        let streams = vec![
+            ("AllSmall".to_string(), PathBuf::from("t.allsmall.jsonl"), 10),
+            ("ProFL".to_string(), PathBuf::from("t.profl.jsonl"), 42),
+        ];
+        let m = build_multi_manifest(&cfg, &argv, &streams);
+        let parsed = Value::parse(&m.to_json()).unwrap();
+        let list = match parsed.get("telemetry").unwrap().get("streams").unwrap() {
+            Value::Arr(a) => a.clone(),
+            other => panic!("streams should be an array, got {other:?}"),
+        };
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[0].get("method").unwrap().as_str().unwrap(), "AllSmall");
+        assert_eq!(list[1].get("path").unwrap().as_str().unwrap(), "t.profl.jsonl");
+        assert_eq!(list[1].get("lines").unwrap().as_u64().unwrap(), 42);
+        // Deterministic modulo wall time, like the single-stream form.
+        let m2 = build_multi_manifest(&cfg, &argv, &streams);
+        assert_eq!(strip_wall_time(&m).to_json(), strip_wall_time(&m2).to_json());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use profl::aggregate::{
     staleness_discount, transition_decay, Aggregator, BufferedAggregator, SlicedAggregator,
 };
+use profl::RunConfig;
 use profl::clients::ClientPool;
 use profl::coordinator::projection::{project_tensors, TrainableLayout};
 use profl::data::{partition, Partition, SyntheticDataset};
@@ -18,9 +19,10 @@ use profl::fleet::{
 use profl::freezing::{ls_slope, EffectiveMovement};
 use profl::json::Value;
 use profl::manifest::MemCoeffs;
-use profl::memory::MemoryConfig;
+use profl::memory::{can_train, DeviceMemory, MemoryConfig};
 use profl::rng::Rng;
 use profl::store::{ParamStore, Tensor};
+use profl::strategy::{depth_cap, elastic, layout_mem, BlockLayout};
 use std::collections::BTreeMap;
 
 /// Run `f` over `n` seeded cases; panics include the failing seed.
@@ -853,5 +855,131 @@ fn prop_lazy_peak_materialized_bounded_by_cap() {
         }
         assert!(lazy.peak_materialized() <= n, "peak can never exceed the fleet");
         assert!(lazy.materialized() <= lazy.peak_materialized());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Memory-strategy invariants (strategy::, docs/STRATEGIES.md)
+// ---------------------------------------------------------------------------
+
+fn rand_counts(rng: &mut Rng) -> Vec<u64> {
+    let n = 2 + rng.below(8);
+    (0..n).map(|_| 100_000 + rng.below(5_000_000) as u64).collect()
+}
+
+#[test]
+fn prop_footprint_monotone_in_trainable_prefix() {
+    // Deepening the trainable window over a fixed frozen floor never
+    // shrinks the analytical footprint, at any accounting batch.
+    cases(200, |rng| {
+        let counts = rand_counts(rng);
+        let frozen = rng.below(counts.len());
+        let batch = 1 + rng.below(256) as u64;
+        let mut prev = 0u64;
+        for depth in frozen + 1..=counts.len() {
+            let m = layout_mem(&counts, &BlockLayout { frozen, depth });
+            let b = m.bytes_at(batch);
+            assert!(b >= prev, "footprint shrank at depth {depth}");
+            assert!(m.params_trainable <= m.params_total);
+            prev = b;
+        }
+    });
+}
+
+#[test]
+fn prop_footprint_never_exceeds_full_model() {
+    // No partial layout costs more than training the whole model: the
+    // bound the strategy zoo's peak-memory column leans on.
+    cases(200, |rng| {
+        let counts = rand_counts(rng);
+        let batch = 1 + rng.below(256) as u64;
+        let full = layout_mem(&counts, &BlockLayout::full(counts.len())).bytes_at(batch);
+        let frozen = rng.below(counts.len());
+        let depth = frozen + 1 + rng.below(counts.len() - frozen);
+        let m = layout_mem(&counts, &BlockLayout { frozen, depth });
+        assert!(
+            m.bytes_at(batch) <= full,
+            "partial layout ({frozen}, {depth}) out-costs the full model"
+        );
+    });
+}
+
+#[test]
+fn prop_layerfreeze_depth_caps_respect_fits_static() {
+    // The per-client depth cap is sound and maximal: the capped layout
+    // always fits the device's static budget, one block deeper never
+    // does, and a None cap means even a single block does not fit. Any
+    // client the contended can_train filter then admits for the capped
+    // layout fits it statically (dispatch respects fits_static).
+    cases(100, |rng| {
+        let counts = rand_counts(rng);
+        let mcfg = MemoryConfig::default();
+        let mut pool_rng = Rng::new(rng.next_u64());
+        let frozen = rng.below(counts.len());
+        for i in 0..40 {
+            let mut d = DeviceMemory::sample(&mcfg, &mut pool_rng, i);
+            match depth_cap(&counts, frozen, d.budget, mcfg.accounting_batch) {
+                Some(layout) => {
+                    assert_eq!(layout.frozen, frozen);
+                    assert!(layout.depth > frozen && layout.depth <= counts.len());
+                    let m = layout_mem(&counts, &layout);
+                    assert!(d.fits_static(&mcfg, &m), "capped layout overflows budget");
+                    if layout.depth < counts.len() {
+                        let deeper =
+                            layout_mem(&counts, &BlockLayout { frozen, depth: layout.depth + 1 });
+                        assert!(!d.fits_static(&mcfg, &deeper), "cap is not maximal");
+                    }
+                    let avail = d.available(&mcfg);
+                    if can_train(avail, &mcfg, &m) {
+                        assert!(d.fits_static(&mcfg, &m), "dispatched client overflows");
+                    }
+                }
+                None => {
+                    let min = layout_mem(&counts, &BlockLayout { frozen, depth: frozen + 1 });
+                    assert!(!d.fits_static(&mcfg, &min), "a fit exists but the cap is None");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_elastic_windows_fit_budgets_and_dispatch_respects_fits_static() {
+    // Every planned elastic window fits its own budget-curve point (or
+    // is the guaranteed single-block floor), windows tile the depth
+    // without gaps, and every device the can_train filter admits for a
+    // phase's footprint also fits it statically.
+    cases(100, |rng| {
+        let counts = rand_counts(rng);
+        let mut cfg = RunConfig::smoke("m");
+        cfg.memory.budget_min_mb = 50 + rng.below(300) as u64;
+        cfg.memory.budget_max_mb = cfg.memory.budget_min_mb + 50 + rng.below(800) as u64;
+        cfg.strategy.elastic_phases = Some(1 + rng.below(6));
+        let phases = elastic::plan(&counts, &cfg);
+        assert!(!phases.is_empty());
+        let mut expect_frozen = 0;
+        for ph in &phases {
+            assert_eq!(ph.layout.frozen, expect_frozen, "windows must tile");
+            assert!(ph.layout.depth > ph.layout.frozen);
+            assert!(ph.rounds >= 1);
+            let m = layout_mem(&counts, &ph.layout);
+            let fits = m.bytes_at(cfg.memory.accounting_batch) <= ph.budget_bytes;
+            let floor = ph.layout.depth == ph.layout.frozen + 1;
+            assert!(fits || floor, "window neither fits its budget nor is the floor");
+            expect_frozen = ph.layout.depth;
+        }
+        assert!(phases.last().unwrap().layout.depth <= counts.len());
+        let mcfg: MemoryConfig = cfg.memory.into();
+        let mut pool_rng = Rng::new(rng.next_u64());
+        for i in 0..30 {
+            let mut d = DeviceMemory::sample(&mcfg, &mut pool_rng, i);
+            let avail = d.available(&mcfg);
+            for ph in &phases {
+                let m = layout_mem(&counts, &ph.layout);
+                if can_train(avail, &mcfg, &m) {
+                    assert!(d.fits_static(&mcfg, &m), "dispatched client overflows");
+                }
+            }
+        }
     });
 }
