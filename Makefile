@@ -46,10 +46,11 @@ strategy-smoke:
 	cargo run --release --example strategy_zoo -- --smoke
 
 # Fleet-scale perf trajectory: run the artifact-free round-scheduling
-# bench across fleet sizes (1e3 → 1e6) and write BENCH_fleet.json at the
-# repo root — per-round ns plus allocation counters, comparable across
-# PRs (see docs/PERFORMANCE.md for schema + interpretation). The smoke
-# variant is CI-sized (1e3, 1e4).
+# bench across fleet sizes (1e3 → 1e6) × planner threads (1/4/8) and
+# write BENCH_fleet.json at the repo root — per-round ns plus allocation
+# counters, comparable across PRs (see docs/PERFORMANCE.md for schema +
+# interpretation; `scripts/perf_compare.sh` diffs two such files). The
+# smoke variant is CI-sized (1e3, 1e4).
 bench-json:
 	cargo bench --bench fleet_scale -- --json BENCH_fleet.json
 

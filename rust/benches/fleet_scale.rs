@@ -132,6 +132,7 @@ struct EntryResult {
     fleet: usize,
     policy: &'static str,
     churn: &'static str,
+    threads: usize,
     build_ms: f64,
     stats: profl::bench_util::BenchStats,
     alloc_bytes_per_round: u64,
@@ -150,6 +151,7 @@ fn run_entry(
     policy: RoundPolicy,
     churn_name: &'static str,
     churn: ChurnPolicy,
+    threads: usize,
     seed: u64,
 ) -> EntryResult {
     // Duty-cycled mobile fleet so churn actually fires mid-span.
@@ -175,7 +177,9 @@ fn run_entry(
 
     let mem = artifact_mem();
     let keep = usize::MAX;
-    let mut engine = FleetEngine::new();
+    // Thread count changes wall time only, never the plan (bit-identical
+    // at any count — the docs/SIMULATION.md determinism guarantee).
+    let mut engine = FleetEngine::with_threads(threads);
     let mut fleet_rng = Rng::new(seed ^ 0xf1ee_7c10);
     let mut start = 0.0f64;
     let mut samples = Vec::with_capacity(rounds);
@@ -195,7 +199,8 @@ fn run_entry(
     }
     let after = alloc_snap();
 
-    let name = format!("fleet={fleet:>9} {policy_name:<12} churn={churn_name}");
+    let name =
+        format!("fleet={fleet:>9} {policy_name:<12} churn={churn_name:<6} threads={threads}");
     let result = BenchResult::new(name, samples);
     result.report();
     let total = (warmup + rounds) as u64;
@@ -203,6 +208,7 @@ fn run_entry(
         fleet,
         policy: policy_name,
         churn: churn_name,
+        threads,
         build_ms,
         stats: result.stats(),
         alloc_bytes_per_round: (after.bytes - before.bytes) / total,
@@ -223,6 +229,10 @@ fn main() {
     } else {
         (&[1_000, 100_000, 1_000_000], 8, 2)
     };
+    // Span-planner thread matrix: threads=1 is the inline baseline; the
+    // other columns witness the wall-clock win of parallel planning at
+    // identical (bit-for-bit) round plans.
+    let threads_matrix: &[usize] = &[1, 4, 8];
 
     let buffer_k = (cohort / 2).max(1);
     let policies: [(&'static str, RoundPolicy); 3] = [
@@ -241,20 +251,24 @@ fn main() {
     for &fleet in fleets {
         for (pname, policy) in policies {
             for (cname, churn) in churns {
-                let e =
-                    run_entry(fleet, cohort, rounds, warmup, pname, policy, cname, churn, seed);
-                // The memory-wall witness: simulating rounds over a fleet
-                // orders of magnitude larger than the cohort must not
-                // materialize the fleet. (Small fleets are skipped — the
-                // resident cap itself can exceed them.)
-                if fleet >= cohort * 100 {
-                    assert!(
-                        e.peak_materialized * 10 < fleet,
-                        "fleet {fleet}: peak materialized {} is not ≪ fleet size",
-                        e.peak_materialized
+                for &threads in threads_matrix {
+                    let e = run_entry(
+                        fleet, cohort, rounds, warmup, pname, policy, cname, churn, threads,
+                        seed,
                     );
+                    // The memory-wall witness: simulating rounds over a fleet
+                    // orders of magnitude larger than the cohort must not
+                    // materialize the fleet. (Small fleets are skipped — the
+                    // resident cap itself can exceed them.)
+                    if fleet >= cohort * 100 {
+                        assert!(
+                            e.peak_materialized * 10 < fleet,
+                            "fleet {fleet}: peak materialized {} is not ≪ fleet size",
+                            e.peak_materialized
+                        );
+                    }
+                    entries.push(e);
                 }
-                entries.push(e);
             }
         }
         println!();
@@ -270,14 +284,15 @@ fn main() {
 fn to_json(cohort: usize, rounds: usize, seed: u64, entries: &[EntryResult]) -> Value {
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Value::Str("fleet_scale".into()));
-    root.insert("schema".into(), Value::Num(1.0));
+    root.insert("schema".into(), Value::Num(2.0));
     root.insert("cohort".into(), Value::Num(cohort as f64));
     root.insert("rounds".into(), Value::Num(rounds as f64));
     root.insert("seed".into(), Value::Num(seed as f64));
-    root.insert(
-        "runner".into(),
-        Value::Str("in-tree bench_util harness (regenerate: make bench-json)".into()),
-    );
+    // `native` marks numbers actually measured by this Rust binary — a
+    // twin-produced artifact must never carry this stamp (the runner
+    // field is how consumers tell them apart).
+    root.insert("runner".into(), Value::Str("native".into()));
+    root.insert("regenerate".into(), Value::Str("make bench-json".into()));
     let arr: Vec<Value> = entries
         .iter()
         .map(|e| {
@@ -285,6 +300,7 @@ fn to_json(cohort: usize, rounds: usize, seed: u64, entries: &[EntryResult]) -> 
             o.insert("fleet".into(), Value::Num(e.fleet as f64));
             o.insert("policy".into(), Value::Str(e.policy.into()));
             o.insert("churn".into(), Value::Str(e.churn.into()));
+            o.insert("threads".into(), Value::Num(e.threads as f64));
             o.insert("build_ms".into(), Value::Num(e.build_ms));
             o.insert("mean_ns".into(), Value::Num(e.stats.mean_ns as f64));
             o.insert("median_ns".into(), Value::Num(e.stats.median_ns as f64));

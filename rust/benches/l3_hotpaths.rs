@@ -66,6 +66,28 @@ fn bench_arena_vs_nested(tag: &str, n_tensors: usize, elems: usize) {
         .map(|_| names.iter().map(|_| (0..elems).map(|_| rng.normal()).collect()).collect())
         .collect();
     let sizes: Vec<usize> = vec![elems; n_tensors];
+    // Bit-identity witness before racing: the SIMD-chunked arena must
+    // reproduce the scalar nested reference exactly (elementwise kernels
+    // never reassociate — see `aggregate::simd`).
+    {
+        let mut check = store.clone();
+        let mut agg = Aggregator::new(&names, &check).unwrap();
+        for u in &updates {
+            agg.add(u, 1.0);
+        }
+        agg.finish(&mut check).unwrap();
+        let mut nested = NestedReference::new(&sizes);
+        for u in &updates {
+            nested.add(u, 1.0);
+        }
+        let want = nested.finish();
+        for (i, name) in names.iter().enumerate() {
+            let got = &check.get(name).unwrap().data;
+            for (g, r) in got.iter().zip(&want[i]) {
+                assert_eq!(g.to_bits(), r.to_bits(), "{tag}/{name}: arena diverged from scalar");
+            }
+        }
+    }
     bench(&format!("fedavg_arena_{tag}"), 3, 20, || {
         let mut agg = Aggregator::new(&names, &store).unwrap();
         for u in &updates {
@@ -108,6 +130,9 @@ fn main() {
     bench_arena_vs_nested("8t_x_32k", 8, 32_768);
     bench_arena_vs_nested("128t_x_2k", 128, 2_048);
     bench_arena_vs_nested("256t_x_1k", 256, 1_024);
+    // Ragged tensor length (not a multiple of the 8-lane chunk): the
+    // scalar-tail path must neither regress nor diverge.
+    bench_arena_vs_nested("96t_x_1339_ragged", 96, 1_339);
     println!();
 
     // ---- HeteroFL sliced aggregation ---------------------------------------

@@ -26,8 +26,13 @@ echo "== cargo build --benches (bench targets must not rot)"
 # the next perf investigation).
 cargo build --benches
 
-echo "== cargo test -q"
-cargo test -q
+echo "== cargo test -q (PROFL_THREADS=4)"
+# The fleet engine's default worker count honors PROFL_THREADS, so this
+# runs the whole suite — golden traces included — with the parallel span
+# planner on 4 workers. Results are bit-identical at any thread count
+# (docs/SIMULATION.md); the explicit thread-matrix tests additionally
+# compare threads 1 vs 4 vs 8 head-to-head.
+PROFL_THREADS=4 cargo test -q
 
 # Telemetry smoke gate: the tour binary emits a JSONL stream + manifest
 # and validates both in-process (exits non-zero on any contract
@@ -43,8 +48,10 @@ cargo run --release --quiet --example strategy_zoo -- --smoke
 
 # The full test run above already includes the golden-trace suite; this
 # named pass keeps a loud, greppable signal when an engine change shifts
-# an event trace (regenerate with `make test-golden-update`).
-echo "== golden traces (make test-golden)"
-cargo test -q --test golden_trace
+# an event trace (regenerate with `make test-golden-update`). Run under
+# PROFL_THREADS=4 so the committed goldens are explicitly held to the
+# any-thread-count determinism guarantee.
+echo "== golden traces at 4 planner threads (make test-golden)"
+PROFL_THREADS=4 cargo test -q --test golden_trace
 
 echo "check: OK"

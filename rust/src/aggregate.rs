@@ -46,6 +46,64 @@ pub fn transition_decay(decay: f64, transitions: u64) -> f64 {
     }
 }
 
+/// Autovectorization-friendly elementwise kernels for the contiguous f32
+/// arenas. Fixed `LANES`-wide chunks give the compiler a straight-line
+/// body it can lower to SIMD without touching arithmetic order: every
+/// operation stays strictly elementwise (`acc[i] += w * x[i]` never
+/// reassociates across positions), so each kernel is bit-identical to
+/// the naive scalar loop it replaces — regression-tested against the
+/// pre-SIMD nested-vec reference below and raced in
+/// `benches/l3_hotpaths.rs`.
+pub(crate) mod simd {
+    /// Chunk width: 8 f32 lanes = one AVX2 register, two NEON registers.
+    const LANES: usize = 8;
+
+    /// `acc[i] += w * x[i]` over two equal-length contiguous slices.
+    #[inline]
+    pub(crate) fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
+        debug_assert_eq!(acc.len(), x.len());
+        let split = acc.len() - acc.len() % LANES;
+        let (a_main, a_tail) = acc.split_at_mut(split);
+        let (x_main, x_tail) = x.split_at(split);
+        for (a, v) in a_main.chunks_exact_mut(LANES).zip(x_main.chunks_exact(LANES)) {
+            for i in 0..LANES {
+                a[i] += w * v[i];
+            }
+        }
+        for (a, v) in a_tail.iter_mut().zip(x_tail) {
+            *a += w * v;
+        }
+    }
+
+    /// `acc[i] *= s` in place (the `finish` normalization sweep).
+    #[inline]
+    pub(crate) fn scale(acc: &mut [f32], s: f32) {
+        let mut chunks = acc.chunks_exact_mut(LANES);
+        for c in &mut chunks {
+            for x in c.iter_mut() {
+                *x *= s;
+            }
+        }
+        for x in chunks.into_remainder() {
+            *x *= s;
+        }
+    }
+
+    /// `acc[i] += w` in place (the sliced path's per-position weights).
+    #[inline]
+    pub(crate) fn add_scalar(acc: &mut [f32], w: f32) {
+        let mut chunks = acc.chunks_exact_mut(LANES);
+        for c in &mut chunks {
+            for x in c.iter_mut() {
+                *x += w;
+            }
+        }
+        for x in chunks.into_remainder() {
+            *x += w;
+        }
+    }
+}
+
 /// Contiguous accumulation arena shared by the aggregators: one flat
 /// `Vec<f32>` holding every tensor's accumulator back to back, addressed
 /// by per-tensor offsets. Compared to the historical `Vec<Vec<f32>>`,
@@ -124,9 +182,7 @@ impl Aggregator {
             let t = t.as_ref();
             let a = self.arena.slot(i);
             debug_assert_eq!(a.len(), t.len());
-            for (x, v) in a.iter_mut().zip(t) {
-                *x += w * v;
-            }
+            simd::axpy(a, t, w);
         }
         self.total_weight += weight;
     }
@@ -146,9 +202,7 @@ impl Aggregator {
             let t = t.as_ref();
             let a = self.arena.slot(*idx);
             debug_assert_eq!(a.len(), t.len(), "projected tensor shape drifted");
-            for (x, v) in a.iter_mut().zip(t) {
-                *x += w * v;
-            }
+            simd::axpy(a, t, w);
             masked[*idx] += weight;
         }
     }
@@ -170,9 +224,7 @@ impl Aggregator {
                 bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
             }
             let inv = 1.0 / self.total_weight as f32;
-            for x in &mut self.arena.acc {
-                *x *= inv;
-            }
+            simd::scale(&mut self.arena.acc, inv);
             // Write through the store's existing buffers: no per-tensor
             // allocation at finish (the pre-arena code moved its nested
             // vecs; the arena's one memcpy per tensor replaces that).
@@ -190,9 +242,7 @@ impl Aggregator {
                 continue; // uncovered tensor: keep the previous global value
             }
             let inv = 1.0 / w as f32;
-            for x in self.arena.slot(i) {
-                *x *= inv;
-            }
+            simd::scale(self.arena.slot(i), inv);
             store.get_mut(&self.arena.names[i])?.data.copy_from_slice(self.arena.slot_ref(i));
         }
         Ok(())
@@ -437,8 +487,11 @@ mod tests {
         // vec-of-vecs accumulation exactly: same adds, same order, same
         // f32 rounding. The reference below is the pre-arena algorithm,
         // kept verbatim.
+        // Sizes straddle the SIMD chunk width (8): sub-chunk, exact
+        // multiples, and ragged tails, so both the chunked body and the
+        // scalar remainder of every kernel are exercised.
         let mut rng = crate::rng::Rng::new(77);
-        let sizes = [3usize, 1, 8, 5];
+        let sizes = [3usize, 1, 8, 5, 16, 19, 64, 7];
         let pairs: Vec<(String, Vec<usize>, Vec<f32>)> = sizes
             .iter()
             .enumerate()
@@ -485,6 +538,50 @@ mod tests {
             let got = &store.get(name).unwrap().data;
             for (g, r) in got.iter().zip(&ref_acc[i]) {
                 assert_eq!(g.to_bits(), r.to_bits(), "{name}: {g} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_kernels_match_scalar_reference_bit_for_bit() {
+        // Every length around the 8-lane chunk width, hostile weights
+        // included: the chunked kernels must reproduce the naive scalar
+        // loops exactly (they are elementwise, so no reassociation).
+        let mut rng = crate::rng::Rng::new(0x51_3d);
+        for len in 0..40usize {
+            for w in [0.0f32, 1.0, -0.375, 1e-7, 3.1e6] {
+                let x: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+                let base: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+
+                let mut got = base.clone();
+                simd::axpy(&mut got, &x, w);
+                let mut want = base.clone();
+                for (a, v) in want.iter_mut().zip(&x) {
+                    *a += w * v;
+                }
+                for (g, r) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), r.to_bits(), "axpy len={len} w={w}");
+                }
+
+                let mut got = base.clone();
+                simd::scale(&mut got, w);
+                let mut want = base.clone();
+                for a in want.iter_mut() {
+                    *a *= w;
+                }
+                for (g, r) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), r.to_bits(), "scale len={len} w={w}");
+                }
+
+                let mut got = base.clone();
+                simd::add_scalar(&mut got, w);
+                let mut want = base.clone();
+                for a in want.iter_mut() {
+                    *a += w;
+                }
+                for (g, r) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), r.to_bits(), "add_scalar len={len} w={w}");
+                }
             }
         }
     }

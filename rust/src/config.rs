@@ -143,19 +143,34 @@ pub struct FleetCfg {
     /// (`benches/fleet_scale.rs`). Default `false` (eager, historical
     /// behaviour). CLI: `--lazy-pool`.
     pub lazy_pool: bool,
+    /// Worker threads for the engine's per-client span precompute. 1 (the
+    /// default) plans inline — the historical single-threaded path; any
+    /// count produces bit-identical results (the determinism contract,
+    /// see `docs/SIMULATION.md`), so this is purely a wall-clock knob.
+    /// Defaults to the `PROFL_THREADS` env var when set.
+    /// CLI: `--threads`.
+    pub threads: usize,
 }
 
 impl Default for FleetCfg {
     fn default() -> Self {
+        // The bare-spelling policy numbers have exactly one source of
+        // truth: the engine's `PolicyDefaults`. Mirroring them here (and
+        // pinning the equality in a test below) means a bare `deadline`
+        // or `async` spelling can never silently diverge from the
+        // configured defaults. `buffer_k` stays `None` — it resolves to
+        // `per_round` at `round_policy()` time, deliberately *not* the
+        // engine fallback.
+        let policy = PolicyDefaults::default();
         FleetCfg {
             profile: "uniform".into(),
             round_policy: "sync".into(),
-            deadline_s: 60.0,
-            over_select_extra: 4,
+            deadline_s: policy.deadline_s,
+            over_select_extra: policy.over_select_extra,
             dropout_p: None,
             buffer_k: None,
             staleness_alpha: 0.5,
-            max_staleness: 8,
+            max_staleness: policy.max_staleness,
             stale_projection: "off".into(),
             projection_decay: 0.5,
             churn_policy: "none".into(),
@@ -163,6 +178,7 @@ impl Default for FleetCfg {
             trace_period_s: None,
             trace_duty: None,
             lazy_pool: false,
+            threads: crate::fleet::default_threads(),
         }
     }
 }
@@ -302,6 +318,9 @@ impl RunConfig {
             }
             p.duty = duty;
         }
+        if self.fleet.threads == 0 {
+            anyhow::bail!("threads must be >= 1 (1 = inline single-threaded span planning)");
+        }
         Ok(p)
     }
 
@@ -335,6 +354,15 @@ impl RunConfig {
     /// spelling takes its buffer size from `fleet.buffer_k`, defaulting
     /// to `per_round` (the sync-degenerate buffer).
     pub fn round_policy(&self) -> Result<RoundPolicy> {
+        // `deadline_s` feeds the bare `deadline` spelling below, but a
+        // nonsense value is a config bug whatever the active policy —
+        // `cli.rs` deliberately accepts negative numerics (`--lr -0.1`),
+        // so `--deadline-s -5` (or NaN/inf/0) parses and must be caught
+        // here, at resolution, before any round runs.
+        let d = self.fleet.deadline_s;
+        if !d.is_finite() || d <= 0.0 {
+            anyhow::bail!("deadline_s must be a finite positive number of virtual seconds, got {d}");
+        }
         let policy = RoundPolicy::parse(
             &self.fleet.round_policy,
             &PolicyDefaults {
@@ -602,6 +630,57 @@ mod tests {
         assert!(c.fleet_profile().is_err(), "negative period");
         c.fleet.trace_period_s = Some(f64::INFINITY);
         assert!(c.fleet_profile().is_err(), "non-finite period");
+    }
+
+    #[test]
+    fn fleet_cfg_defaults_mirror_engine_policy_defaults() {
+        // Single source of truth: the bare `deadline`/`over-select`/
+        // `async` spellings fall back to the engine's PolicyDefaults,
+        // and FleetCfg::default() is derived from the same struct — so
+        // the two can never silently diverge.
+        let cfg = FleetCfg::default();
+        let policy = PolicyDefaults::default();
+        assert_eq!(cfg.deadline_s.to_bits(), policy.deadline_s.to_bits());
+        assert_eq!(cfg.over_select_extra, policy.over_select_extra);
+        assert_eq!(cfg.max_staleness, policy.max_staleness);
+        // buffer_k intentionally differs: config resolves None → per_round.
+        assert_eq!(cfg.buffer_k, None);
+    }
+
+    #[test]
+    fn deadline_seconds_are_validated_at_resolution() {
+        // `--deadline-s` flows through cli.rs (which accepts negative
+        // numerics by design) into this knob; resolution is the gate.
+        let mut c = RunConfig::default();
+        c.fleet.round_policy = "deadline".into();
+        for bad in [-5.0, 0.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            c.fleet.deadline_s = bad;
+            assert!(c.round_policy().is_err(), "deadline_s {bad} must be rejected");
+        }
+        c.fleet.deadline_s = 45.0;
+        assert_eq!(c.round_policy().unwrap(), RoundPolicy::Deadline { secs: 45.0 });
+        // The knob is validated even when another policy is active — a
+        // nonsense value is a config bug whatever consumes it.
+        c.fleet.round_policy = "sync".into();
+        c.fleet.deadline_s = f64::NAN;
+        assert!(c.round_policy().is_err(), "NaN deadline_s under sync");
+        // The explicit spelling is gated too (parse-level).
+        c.fleet.deadline_s = 60.0;
+        c.fleet.round_policy = "deadline:0".into();
+        assert!(c.round_policy().is_err(), "deadline:0 closes instantly");
+    }
+
+    #[test]
+    fn thread_knob_validates_and_defaults_positive() {
+        let mut c = RunConfig::default();
+        // The default honors PROFL_THREADS in CI, so assert the invariant
+        // rather than the literal: always a positive inline-safe count.
+        assert!(c.fleet.threads >= 1);
+        assert!(c.fleet_profile().is_ok());
+        c.fleet.threads = 8;
+        assert!(c.fleet_profile().is_ok());
+        c.fleet.threads = 0;
+        assert!(c.fleet_profile().is_err(), "0 threads can plan nothing");
     }
 
     #[test]

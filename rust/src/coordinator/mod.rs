@@ -192,6 +192,9 @@ impl<'rt> ServerCtx<'rt> {
         };
         let store = ParamStore::init(&model.params, cfg.seed ^ 0x1417);
         let fleet_rng = Rng::new(cfg.seed ^ 0xf1ee_7c10);
+        // Resolved by fleet_profile() above to be >= 1; any count is
+        // bit-identical (wall-clock knob only).
+        let threads = cfg.fleet.threads;
         let telemetry = match cfg.telemetry_jsonl.as_deref() {
             Some(path) => Some(Appender::create(Path::new(path))?),
             None => None,
@@ -210,7 +213,7 @@ impl<'rt> ServerCtx<'rt> {
             prefix_version: 0,
             projection,
             transitions: TransitionLog::new(),
-            engine: FleetEngine::new(),
+            engine: FleetEngine::with_threads(threads),
             pending: HashMap::new(),
             fleet_rng,
             xs_buf: Vec::new(),
@@ -350,6 +353,8 @@ impl<'rt> ServerCtx<'rt> {
             let queue_peak = self.engine.last_queue_peak();
             let inflight = self.engine.inflight().len();
             let pending = self.pending.len();
+            let threads = self.engine.threads();
+            let utilization = self.engine.last_worker_utilization();
             if let Some(tel) = self.telemetry.as_mut() {
                 tel.span(
                     "round.simulate",
@@ -367,6 +372,11 @@ impl<'rt> ServerCtx<'rt> {
                 tel.gauge("fleet.queue_peak", round, sim_s, queue_peak as f64, &[]);
                 tel.gauge("fleet.inflight_len", round, sim_s, inflight as f64, &[]);
                 tel.gauge("coordinator.pending_len", round, sim_s, pending as f64, &[]);
+                tel.gauge("fleet.threads", round, sim_s, threads as f64, &[]);
+                // Wall-clock busy fraction of the span-planner pool; the
+                // one deliberately nondeterministic value in the stream
+                // (gauges are observations, not simulation state).
+                tel.gauge("fleet.worker_utilization", round, sim_s, utilization, &[]);
             }
         }
         plan

@@ -134,8 +134,11 @@ impl RoundPolicy {
                     Some(a) => a.parse().map_err(|e| anyhow::anyhow!("bad deadline `{a}`: {e}"))?,
                     None => defaults.deadline_s,
                 };
-                if !secs.is_finite() || secs < 0.0 {
-                    bail!("deadline must be a finite non-negative number of seconds, got {secs}");
+                // Zero would close every round at its open instant
+                // (nobody can finish in 0 virtual seconds) — reject it
+                // along with negatives and non-finite values.
+                if !secs.is_finite() || secs <= 0.0 {
+                    bail!("deadline must be a finite positive number of seconds, got {secs}");
                 }
                 Ok(RoundPolicy::Deadline { secs })
             }
@@ -460,6 +463,9 @@ struct RoundScratch {
     /// `(client id, dispatch round)` per in-flight upload, sorted by id.
     origin: Vec<(usize, usize)>,
     churn: ChurnState,
+    /// Worker-pool accounting of the last round's span precompute
+    /// (telemetry only; never read by the simulation).
+    worker: WorkerStats,
 }
 
 impl RoundScratch {
@@ -474,18 +480,15 @@ impl RoundScratch {
     }
 }
 
-/// Look up `client`'s work entry through the sorted index (the dense
-/// replacement for the old per-round `by_id` HashMap; panics on an
-/// unknown client exactly like the map indexing did).
-fn work_of<'a>(
-    works: &'a [ClientWork],
-    works_by_id: &[(usize, usize)],
-    client: usize,
-) -> &'a ClientWork {
+/// Look up `client`'s index into the round's works slice through the
+/// sorted index (the dense replacement for the old per-round `by_id`
+/// HashMap; panics on an unknown client exactly like the map indexing
+/// did).
+fn work_index(works_by_id: &[(usize, usize)], client: usize) -> usize {
     let i = works_by_id
         .binary_search_by_key(&client, |&(id, _)| id)
         .expect("event for a client outside the round's cohort");
-    &works[works_by_id[i].1]
+    works_by_id[i].1
 }
 
 /// Emit the Interrupt/Resume witness pairs for a pausable span's offline
@@ -497,11 +500,242 @@ fn push_pauses(q: &mut EventQueue, client: usize, spans: &[OfflineSpan]) {
     }
 }
 
+/// How a planned compute leg ends. Together with [`ComputePlan::pauses`]
+/// this captures *everything* the leg will do to the event stream and the
+/// churn tables, so planning (pure, parallelizable) is separated from
+/// emission (sequential, seq-assigning) without any behaviour change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ComputeOutcome {
+    /// Training finishes: push `TrainDone(end_s)`.
+    Done { end_s: f64 },
+    /// The leg dies at `off_s`: push the fatal Interrupt and stage the
+    /// cut (`wasted_s` train seconds, `down_frac` of the download moved).
+    Cut { off_s: f64, wasted_s: f64, down_frac: f64 },
+    /// Checkpoint: `fraction` of the pass survives as a partial update at
+    /// `off_s`; `waste_s` seconds past the epoch boundary are lost.
+    Partial { off_s: f64, fraction: f64, waste_s: f64 },
+}
+
+/// One client's precomputed compute leg (download + local train): the
+/// offline windows it pauses across, then the outcome. A pure function of
+/// `(ClientWork, dispatch time, churn policy)` — no queue, no rng.
+#[derive(Debug, Clone, PartialEq)]
+struct ComputePlan {
+    /// Interrupt/Resume witness pairs, in crossing order (includes the
+    /// checkpoint policy's download-ends-at-offline-boundary pause).
+    pauses: Vec<OfflineSpan>,
+    outcome: ComputeOutcome,
+}
+
+/// How a planned upload leg ends.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum UploadOutcome {
+    /// The update arrives: push `UploadDone(end_s)`.
+    Done { end_s: f64 },
+    /// The upload dies at `off_s` (abort churn): push the fatal Interrupt
+    /// and stage the cut — the whole finished local pass is wasted.
+    Cut { off_s: f64, wasted_s: f64 },
+}
+
+/// One client's precomputed upload leg, starting at its TrainDone
+/// instant. Pure like [`ComputePlan`].
+#[derive(Debug, Clone, PartialEq)]
+struct UploadPlan {
+    /// A checkpointed partial whose TrainDone landed offline starts with
+    /// this Resume (pairing the fatal-free Interrupt that fired at the
+    /// checkpoint instant).
+    pre_resume: Option<f64>,
+    /// Offline windows the upload pauses across, in crossing order.
+    pauses: Vec<OfflineSpan>,
+    outcome: UploadOutcome,
+}
+
+/// Both legs of one client's round, precomputed. The upload leg exists
+/// only when the compute leg hands a TrainDone to the upload path (it
+/// starts at that instant, which the compute outcome determines — so the
+/// whole chain is still a per-client pure function).
+#[derive(Debug, Clone, PartialEq)]
+struct ClientSpanPlan {
+    compute: ComputePlan,
+    upload: Option<UploadPlan>,
+}
+
+/// Plan one client's compute leg (download + local train) dispatched at
+/// `t`. Pure: reads only the work entry, the trace, and the churn policy.
+fn plan_compute(w: &ClientWork, t: f64, churn: ChurnPolicy) -> ComputePlan {
+    let total = w.down_s + w.train_s;
+    if matches!(churn, ChurnPolicy::None) || w.trace.duty >= 1.0 {
+        // Pre-churn fast path: bit-identical event stream (degeneracy).
+        return ComputePlan {
+            pauses: Vec::new(),
+            outcome: ComputeOutcome::Done { end_s: t + total },
+        };
+    }
+    match churn {
+        ChurnPolicy::None => unreachable!("handled by the fast path"),
+        ChurnPolicy::Abort => {
+            let off = w.trace.next_offline(t);
+            if total <= off - t {
+                ComputePlan { pauses: Vec::new(), outcome: ComputeOutcome::Done { end_s: t + total } }
+            } else {
+                let trained = (off - t - w.down_s).clamp(0.0, w.train_s);
+                // A cut inside the download leg fetched only part of the
+                // artifact; comm accounting charges that fraction.
+                let down_frac =
+                    if w.down_s <= 0.0 { 1.0 } else { ((off - t) / w.down_s).clamp(0.0, 1.0) };
+                ComputePlan {
+                    pauses: Vec::new(),
+                    outcome: ComputeOutcome::Cut { off_s: off, wasted_s: trained, down_frac },
+                }
+            }
+        }
+        ChurnPolicy::Resume => {
+            let (end, pauses) = w.trace.walk_work(t, total);
+            ComputePlan { pauses, outcome: ComputeOutcome::Done { end_s: end } }
+        }
+        ChurnPolicy::Checkpoint { epochs } => {
+            // Downloads pause and resume (range requests); training runs
+            // in one online stretch and checkpoints at epoch granularity
+            // when cut — the client uploads what it has instead of
+            // resuming a stale local pass.
+            let (t1, mut pauses) = w.trace.walk_work(t, w.down_s);
+            let mut ts = t1;
+            if !w.trace.is_online(ts) {
+                // Download completed exactly at an offline boundary:
+                // training starts at the next online window.
+                let on = w.trace.next_online(ts);
+                pauses.push(OfflineSpan { off_s: ts, on_s: on });
+                ts = on;
+            }
+            let off = w.trace.next_offline(ts);
+            if w.train_s <= off - ts {
+                ComputePlan { pauses, outcome: ComputeOutcome::Done { end_s: ts + w.train_s } }
+            } else {
+                let trained = off - ts;
+                let done = ((trained / w.train_s) * epochs as f64).floor();
+                if done <= 0.0 {
+                    // Not even one epoch checkpointed: the work is lost.
+                    // The download paused/resumed to completion first, so
+                    // it is charged in full (exactly once).
+                    ComputePlan {
+                        pauses,
+                        outcome: ComputeOutcome::Cut { off_s: off, wasted_s: trained, down_frac: 1.0 },
+                    }
+                } else {
+                    let fraction = done / epochs as f64;
+                    let waste_s = trained - fraction * w.train_s;
+                    ComputePlan {
+                        pauses,
+                        outcome: ComputeOutcome::Partial { off_s: off, fraction, waste_s },
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Plan one client's upload leg starting at `t` (its TrainDone instant).
+/// `has_partial` is whether this client's *own* compute leg checkpointed
+/// a partial — a per-client fact, which keeps the two-leg chain a pure
+/// function of the client alone.
+fn plan_upload(w: &ClientWork, t: f64, churn: ChurnPolicy, has_partial: bool) -> UploadPlan {
+    if matches!(churn, ChurnPolicy::None) || w.trace.duty >= 1.0 {
+        return UploadPlan {
+            pre_resume: None,
+            pauses: Vec::new(),
+            outcome: UploadOutcome::Done { end_s: t + w.up_s },
+        };
+    }
+    match churn {
+        ChurnPolicy::None => unreachable!("handled by the fast path"),
+        ChurnPolicy::Abort => {
+            let off = w.trace.next_offline(t);
+            if w.up_s <= off - t {
+                UploadPlan {
+                    pre_resume: None,
+                    pauses: Vec::new(),
+                    outcome: UploadOutcome::Done { end_s: t + w.up_s },
+                }
+            } else {
+                // The finished local pass dies with the upload; its
+                // download completed long before, so full charge.
+                UploadPlan {
+                    pre_resume: None,
+                    pauses: Vec::new(),
+                    outcome: UploadOutcome::Cut { off_s: off, wasted_s: w.train_s },
+                }
+            }
+        }
+        ChurnPolicy::Resume | ChurnPolicy::Checkpoint { .. } => {
+            let mut ts = t;
+            let mut pre_resume = None;
+            if has_partial && !w.trace.is_online(ts) {
+                // Partial checkpoint: its Interrupt fired at TrainDone;
+                // pair it with the Resume that starts the upload.
+                let on = w.trace.next_online(ts);
+                pre_resume = Some(on);
+                ts = on;
+            }
+            let (end, pauses) = w.trace.walk_work(ts, w.up_s);
+            UploadPlan { pre_resume, pauses, outcome: UploadOutcome::Done { end_s: end } }
+        }
+    }
+}
+
+/// Plan both legs of one client's round dispatched at `t`: the compute
+/// leg, then — when that leg hands a TrainDone to the upload path — the
+/// upload leg starting at exactly that instant.
+fn plan_client(w: &ClientWork, t: f64, churn: ChurnPolicy) -> ClientSpanPlan {
+    let compute = plan_compute(w, t, churn);
+    let upload = match compute.outcome {
+        ComputeOutcome::Done { end_s } => Some(plan_upload(w, end_s, churn, false)),
+        ComputeOutcome::Partial { off_s, .. } => Some(plan_upload(w, off_s, churn, true)),
+        ComputeOutcome::Cut { .. } => None,
+    };
+    ClientSpanPlan { compute, upload }
+}
+
+/// Apply a precomputed compute leg to the event stream and churn tables,
+/// in exactly the push/stage order the inline scheduler used — seq
+/// numbers (and so golden traces) are preserved by construction.
+fn emit_compute(q: &mut EventQueue, st: &mut ChurnState, client: usize, plan: &ComputePlan) {
+    push_pauses(q, client, &plan.pauses);
+    match plan.outcome {
+        ComputeOutcome::Done { end_s } => q.push(end_s, EventKind::TrainDone { client }),
+        ComputeOutcome::Cut { off_s, wasted_s, down_frac } => {
+            q.push(off_s, EventKind::Interrupt { client });
+            st.stage_cut(client, off_s, wasted_s, down_frac);
+        }
+        ComputeOutcome::Partial { off_s, fraction, waste_s } => {
+            q.push(off_s, EventKind::Interrupt { client });
+            st.record_partial(client, fraction);
+            st.stage_partial_waste(client, off_s, waste_s);
+            q.push(off_s, EventKind::TrainDone { client });
+        }
+    }
+}
+
+/// Apply a precomputed upload leg — same order contract as
+/// [`emit_compute`].
+fn emit_upload(q: &mut EventQueue, st: &mut ChurnState, client: usize, plan: &UploadPlan) {
+    if let Some(on) = plan.pre_resume {
+        q.push(on, EventKind::Resume { client });
+    }
+    push_pauses(q, client, &plan.pauses);
+    match plan.outcome {
+        UploadOutcome::Done { end_s } => q.push(end_s, EventKind::UploadDone { client }),
+        UploadOutcome::Cut { off_s, wasted_s } => {
+            q.push(off_s, EventKind::Interrupt { client });
+            st.stage_cut(client, off_s, wasted_s, 1.0);
+        }
+    }
+}
+
 /// Schedule one client's compute leg (download + local train) starting at
-/// `t`, pushing TrainDone / Interrupt / Resume events as the churn policy
-/// dictates. An aborted leg stages its cut in `st` and pushes only the
-/// fatal Interrupt; a checkpointed partial records its fraction and hands
-/// a TrainDone to the upload path at the interruption instant.
+/// `t`: plan it, then emit. An aborted leg stages its cut in `st` and
+/// pushes only the fatal Interrupt; a checkpointed partial records its
+/// fraction and hands a TrainDone to the upload path at the interruption
+/// instant.
 fn schedule_compute(
     q: &mut EventQueue,
     st: &mut ChurnState,
@@ -509,70 +743,7 @@ fn schedule_compute(
     t: f64,
     churn: ChurnPolicy,
 ) {
-    let total = w.down_s + w.train_s;
-    if matches!(churn, ChurnPolicy::None) || w.trace.duty >= 1.0 {
-        // Pre-churn fast path: bit-identical event stream (degeneracy).
-        q.push(t + total, EventKind::TrainDone { client: w.id });
-        return;
-    }
-    match churn {
-        ChurnPolicy::None => unreachable!("handled by the fast path"),
-        ChurnPolicy::Abort => {
-            let off = w.trace.next_offline(t);
-            if total <= off - t {
-                q.push(t + total, EventKind::TrainDone { client: w.id });
-            } else {
-                q.push(off, EventKind::Interrupt { client: w.id });
-                let trained = (off - t - w.down_s).clamp(0.0, w.train_s);
-                // A cut inside the download leg fetched only part of the
-                // artifact; comm accounting charges that fraction.
-                let down_frac =
-                    if w.down_s <= 0.0 { 1.0 } else { ((off - t) / w.down_s).clamp(0.0, 1.0) };
-                st.stage_cut(w.id, off, trained, down_frac);
-            }
-        }
-        ChurnPolicy::Resume => {
-            let (end, spans) = w.trace.walk_work(t, total);
-            push_pauses(q, w.id, &spans);
-            q.push(end, EventKind::TrainDone { client: w.id });
-        }
-        ChurnPolicy::Checkpoint { epochs } => {
-            // Downloads pause and resume (range requests); training runs
-            // in one online stretch and checkpoints at epoch granularity
-            // when cut — the client uploads what it has instead of
-            // resuming a stale local pass.
-            let (t1, spans) = w.trace.walk_work(t, w.down_s);
-            push_pauses(q, w.id, &spans);
-            let mut ts = t1;
-            if !w.trace.is_online(ts) {
-                // Download completed exactly at an offline boundary:
-                // training starts at the next online window.
-                let on = w.trace.next_online(ts);
-                push_pauses(q, w.id, &[OfflineSpan { off_s: ts, on_s: on }]);
-                ts = on;
-            }
-            let off = w.trace.next_offline(ts);
-            if w.train_s <= off - ts {
-                q.push(ts + w.train_s, EventKind::TrainDone { client: w.id });
-            } else {
-                let trained = off - ts;
-                let done = ((trained / w.train_s) * epochs as f64).floor();
-                q.push(off, EventKind::Interrupt { client: w.id });
-                if done <= 0.0 {
-                    // Not even one epoch checkpointed: the work is lost.
-                    // The download paused/resumed to completion first, so
-                    // it is charged in full (exactly once).
-                    st.stage_cut(w.id, off, trained, 1.0);
-                } else {
-                    let fraction = done / epochs as f64;
-                    st.record_partial(w.id, fraction);
-                    let remainder = trained - fraction * w.train_s;
-                    st.stage_partial_waste(w.id, off, remainder);
-                    q.push(off, EventKind::TrainDone { client: w.id });
-                }
-            }
-        }
-    }
+    emit_compute(q, st, w.id, &plan_compute(w, t, churn));
 }
 
 /// Schedule one client's upload leg starting at `t` (its TrainDone
@@ -586,37 +757,95 @@ fn schedule_upload(
     t: f64,
     churn: ChurnPolicy,
 ) {
-    if matches!(churn, ChurnPolicy::None) || w.trace.duty >= 1.0 {
-        q.push(t + w.up_s, EventKind::UploadDone { client: w.id });
-        return;
-    }
-    match churn {
-        ChurnPolicy::None => unreachable!("handled by the fast path"),
-        ChurnPolicy::Abort => {
-            let off = w.trace.next_offline(t);
-            if w.up_s <= off - t {
-                q.push(t + w.up_s, EventKind::UploadDone { client: w.id });
-            } else {
-                // The finished local pass dies with the upload; its
-                // download completed long before, so full charge.
-                q.push(off, EventKind::Interrupt { client: w.id });
-                st.stage_cut(w.id, off, w.train_s, 1.0);
-            }
+    emit_upload(q, st, w.id, &plan_upload(w, t, churn, st.has_partial(w.id)));
+}
+
+/// Per-worker busy/wall accounting of the last parallel span precompute.
+/// Pure observation for telemetry (wall-clock times never feed back into
+/// the simulation — the determinism contract is untouched).
+#[derive(Debug, Clone, Default)]
+struct WorkerStats {
+    /// Workers actually spawned (0 = the precompute ran inline).
+    workers: usize,
+    /// Summed per-worker busy nanoseconds.
+    busy_ns: u128,
+    /// Wall nanoseconds of the pool region.
+    wall_ns: u128,
+}
+
+impl WorkerStats {
+    /// Mean busy fraction across the pool's workers, in (0, 1]. Inline
+    /// rounds (threads = 1, tiny cohorts) report 1.0: the one "worker"
+    /// is the event loop itself, busy by definition.
+    fn utilization(&self) -> f64 {
+        if self.workers <= 1 || self.wall_ns == 0 {
+            return 1.0;
         }
-        ChurnPolicy::Resume | ChurnPolicy::Checkpoint { .. } => {
-            let mut ts = t;
-            if st.has_partial(w.id) && !w.trace.is_online(ts) {
-                // Partial checkpoint: its Interrupt fired at TrainDone;
-                // pair it with the Resume that starts the upload.
-                let on = w.trace.next_online(ts);
-                q.push(on, EventKind::Resume { client: w.id });
-                ts = on;
-            }
-            let (end, spans) = w.trace.walk_work(ts, w.up_s);
-            push_pauses(q, w.id, &spans);
-            q.push(end, EventKind::UploadDone { client: w.id });
-        }
+        (self.busy_ns as f64 / (self.workers as u128 * self.wall_ns) as f64).min(1.0)
     }
+}
+
+/// Precompute every dispatchable client's span plan on `threads` scoped
+/// workers (contiguous index chunks, results placed by index — the output
+/// is identical for any thread count or scheduling order, because each
+/// plan is a pure per-client function). Returns an empty vec when the
+/// pool would not help (`threads <= 1`, or a cohort too small to split):
+/// the event loop then plans lazily inline, which is the historical path.
+fn precompute_spans(
+    works: &[ClientWork],
+    start_s: f64,
+    churn: ChurnPolicy,
+    threads: usize,
+    worker: &mut WorkerStats,
+) -> Vec<Option<ClientSpanPlan>> {
+    *worker = WorkerStats::default();
+    if threads <= 1 || works.len() < 2 {
+        return Vec::new();
+    }
+    let mut plans: Vec<Option<ClientSpanPlan>> = Vec::with_capacity(works.len());
+    plans.resize_with(works.len(), || None);
+    let chunk = works.len().div_ceil(threads);
+    let pool_start = std::time::Instant::now();
+    let mut busy_ns = 0u128;
+    let mut spawned = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for (wchunk, pchunk) in works.chunks(chunk).zip(plans.chunks_mut(chunk)) {
+            handles.push(scope.spawn(move || {
+                let t0 = std::time::Instant::now();
+                for (w, slot) in wchunk.iter().zip(pchunk.iter_mut()) {
+                    // Non-finite ready time (zero-duty trace): never
+                    // dispatched, so nothing to plan.
+                    if w.ready_s.is_finite() {
+                        *slot = Some(plan_client(w, start_s.max(w.ready_s), churn));
+                    }
+                }
+                t0.elapsed().as_nanos()
+            }));
+        }
+        spawned = handles.len();
+        for h in handles {
+            busy_ns += h.join().expect("span-planner worker panicked");
+        }
+    });
+    worker.workers = spawned;
+    worker.busy_ns = busy_ns;
+    worker.wall_ns = pool_start.elapsed().as_nanos();
+    plans
+}
+
+/// Default worker-thread count for new engines and configs: the
+/// `PROFL_THREADS` env var when set to a positive integer, else 1
+/// (inline planning). The thread count never changes results — every
+/// count is bit-identical by construction — so an env default is safe;
+/// it exists so CI can run the entire suite (golden traces included) on
+/// a multi-threaded engine without touching each test.
+pub fn default_threads() -> usize {
+    std::env::var("PROFL_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
 /// Round-spanning simulator state. Stateless policies (`sync`,
@@ -626,16 +855,63 @@ fn schedule_upload(
 /// rounds. One engine can (and should) serve every
 /// round of a run — and, via [`Self::reset`], every configuration of a
 /// sweep — so the per-round working set is cleared, not reallocated.
-#[derive(Debug, Default)]
+///
+/// **Parallel span planning.** With `threads > 1` the engine precomputes
+/// every dispatchable client's compute/upload span chain on a scoped
+/// worker pool before the event loop runs; the sequential loop then
+/// merges the precomputed plans in `(time, seq)` event order, drawing
+/// the dropout rng exactly as the inline path does. Results are
+/// bit-identical at any thread count (plans are pure per-client
+/// functions placed by index), so golden traces and degeneracy
+/// contracts hold unchanged — `threads` is a wall-clock knob only.
+#[derive(Debug)]
 pub struct FleetEngine {
     inflight: Vec<InFlightUpload>,
     scratch: RoundScratch,
+    threads: usize,
+}
+
+impl Default for FleetEngine {
+    fn default() -> Self {
+        FleetEngine {
+            inflight: Vec::new(),
+            scratch: RoundScratch::default(),
+            threads: default_threads(),
+        }
+    }
 }
 
 impl FleetEngine {
-    /// An engine with an empty in-flight queue.
+    /// An engine with an empty in-flight queue, planning spans on
+    /// [`default_threads`] workers.
     pub fn new() -> Self {
         FleetEngine::default()
+    }
+
+    /// An engine planning client spans on `threads` workers (0 is
+    /// clamped to 1 = inline planning).
+    pub fn with_threads(threads: usize) -> Self {
+        let mut e = FleetEngine::default();
+        e.set_threads(threads);
+        e
+    }
+
+    /// Set the span-planner worker count (0 is clamped to 1). Takes
+    /// effect from the next round; results are bit-identical either way.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// The span-planner worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Mean busy fraction of the last round's span-planner workers, in
+    /// (0, 1] (1.0 for inline rounds). Wall-clock observation for the
+    /// telemetry stream — the simulation never reads it.
+    pub fn last_worker_utilization(&self) -> f64 {
+        self.scratch.worker.utilization()
     }
 
     /// Uploads currently crossing a round boundary (arrival order).
@@ -687,7 +963,16 @@ impl FleetEngine {
                     self.inflight.is_empty(),
                     "in-flight uploads exist but the policy is not async"
                 );
-                simulate_sync_family(&mut self.scratch, start_s, works, policy, keep, churn, rng)
+                simulate_sync_family(
+                    &mut self.scratch,
+                    start_s,
+                    works,
+                    policy,
+                    keep,
+                    churn,
+                    rng,
+                    self.threads,
+                )
             }
         }
     }
@@ -708,9 +993,10 @@ impl FleetEngine {
         churn: ChurnPolicy,
         rng: &mut Rng,
     ) -> RoundPlan {
-        let FleetEngine { inflight, scratch } = self;
+        let FleetEngine { inflight, scratch, threads } = self;
         scratch.begin(works);
-        let RoundScratch { queue: q, works_by_id, origin, churn: st } = scratch;
+        let plans = precompute_spans(works, start_s, churn, *threads, &mut scratch.worker);
+        let RoundScratch { queue: q, works_by_id, origin, churn: st, .. } = scratch;
 
         // A fresh dispatch supersedes the same client's stale in-flight
         // upload (the device abandons the old job for the new one). The
@@ -757,15 +1043,23 @@ impl FleetEngine {
             events.push(ev);
             match ev.kind {
                 EventKind::Dispatch { client } => {
-                    let w = work_of(works, works_by_id, client);
+                    let idx = work_index(works_by_id, client);
+                    let w = &works[idx];
                     if rng.f64() < w.dropout_p {
                         dropouts.push(client);
                     } else {
-                        schedule_compute(q, st, w, ev.time_s, churn);
+                        match plans.get(idx).and_then(|p| p.as_ref()) {
+                            Some(p) => emit_compute(q, st, client, &p.compute),
+                            None => schedule_compute(q, st, w, ev.time_s, churn),
+                        }
                     }
                 }
                 EventKind::TrainDone { client } => {
-                    schedule_upload(q, st, work_of(works, works_by_id, client), ev.time_s, churn);
+                    let idx = work_index(works_by_id, client);
+                    match plans.get(idx).and_then(|p| p.as_ref()).and_then(|p| p.upload.as_ref()) {
+                        Some(u) => emit_upload(q, st, client, u),
+                        None => schedule_upload(q, st, &works[idx], ev.time_s, churn),
+                    }
                 }
                 EventKind::UploadDone { client } => {
                     fresh.push((ev.time_s, client));
@@ -872,11 +1166,12 @@ pub fn simulate_round(
     rng: &mut Rng,
 ) -> RoundPlan {
     let mut scratch = RoundScratch::default();
-    simulate_sync_family(&mut scratch, start_s, works, policy, keep, churn, rng)
+    simulate_sync_family(&mut scratch, start_s, works, policy, keep, churn, rng, default_threads())
 }
 
 /// The sync-family (`sync`/`deadline`/`over-select`) event loop over a
 /// caller-owned [`RoundScratch`].
+#[allow(clippy::too_many_arguments)]
 fn simulate_sync_family(
     scratch: &mut RoundScratch,
     start_s: f64,
@@ -885,6 +1180,7 @@ fn simulate_sync_family(
     keep: usize,
     churn: ChurnPolicy,
     rng: &mut Rng,
+    threads: usize,
 ) -> RoundPlan {
     debug_assert!(
         !matches!(policy, RoundPolicy::Async { .. }),
@@ -896,6 +1192,7 @@ fn simulate_sync_family(
         return RoundPlan::empty(start_s);
     }
     scratch.begin(works);
+    let plans = precompute_spans(works, start_s, churn, threads, &mut scratch.worker);
     let RoundScratch { queue: q, works_by_id, churn: st, .. } = scratch;
     // Clients still owing an upload; the loop may stop early once none remain.
     let mut outstanding = 0usize;
@@ -925,17 +1222,25 @@ fn simulate_sync_family(
         match ev.kind {
             EventKind::Dispatch { client } => {
                 events.push(ev);
-                let w = work_of(works, works_by_id, client);
+                let idx = work_index(works_by_id, client);
+                let w = &works[idx];
                 if rng.f64() < w.dropout_p {
                     dropouts.push(client);
                     outstanding -= 1;
                 } else {
-                    schedule_compute(q, st, w, ev.time_s, churn);
+                    match plans.get(idx).and_then(|p| p.as_ref()) {
+                        Some(p) => emit_compute(q, st, client, &p.compute),
+                        None => schedule_compute(q, st, w, ev.time_s, churn),
+                    }
                 }
             }
             EventKind::TrainDone { client } => {
                 events.push(ev);
-                schedule_upload(q, st, work_of(works, works_by_id, client), ev.time_s, churn);
+                let idx = work_index(works_by_id, client);
+                match plans.get(idx).and_then(|p| p.as_ref()).and_then(|p| p.upload.as_ref()) {
+                    Some(u) => emit_upload(q, st, client, u),
+                    None => schedule_upload(q, st, &works[idx], ev.time_s, churn),
+                }
             }
             EventKind::UploadDone { client } => {
                 events.push(ev);
@@ -1234,7 +1539,9 @@ mod tests {
         assert!(RoundPolicy::parse("warp", &d).is_err());
         assert!(RoundPolicy::parse("deadline:abc", &d).is_err());
         assert!(RoundPolicy::parse("deadline:-5", &d).is_err(), "negative deadline");
+        assert!(RoundPolicy::parse("deadline:0", &d).is_err(), "zero deadline closes instantly");
         assert!(RoundPolicy::parse("deadline:NaN", &d).is_err(), "non-finite deadline");
+        assert!(RoundPolicy::parse("deadline:inf", &d).is_err(), "infinite deadline");
         assert!(RoundPolicy::parse("async:0", &d).is_err(), "zero buffer_k never closes");
         assert!(RoundPolicy::parse("async:nope", &d).is_err());
         let zero_default = PolicyDefaults { buffer_k: 0, ..defaults() };
@@ -1759,6 +2066,139 @@ mod tests {
         assert_eq!(r1.late_arrivals[0].client, 0);
         assert!((r1.late_arrivals[0].arrive_s - 110.0).abs() < 1e-9);
         assert!(engine.inflight().is_empty());
+    }
+
+    // --- deterministic parallel span planning ---------------------------
+
+    /// A churn-heavy mixed cohort: phased duty cycles, an always-on
+    /// certain dropout, and an unreachable zero-duty client — the same
+    /// raw material as the partition test, exercising every planner
+    /// branch (pauses, cuts, partials, pre-resume uploads).
+    fn mixed_churn_works() -> Vec<ClientWork> {
+        let mk = |phase: f64| AvailabilityTrace { period_s: 100.0, duty: 0.6, phase_s: phase };
+        let zero_duty = AvailabilityTrace { period_s: 100.0, duty: 0.0, phase_s: 0.0 };
+        let mut works = vec![
+            churn_work(0, mk(0.0), 5.0, 100.0, 10.0),
+            churn_work(1, mk(30.0), 1.0, 10.0, 1.0),
+            churn_work(2, mk(55.0), 2.0, 30.0, 4.0),
+            churn_work(3, AvailabilityTrace::always_on(), 1.0, 3.0, 1.0),
+            churn_work(4, zero_duty, 1.0, 1.0, 1.0),
+            churn_work(5, mk(10.0), 10.0, 200.0, 20.0),
+            churn_work(6, mk(80.0), 3.0, 40.0, 6.0),
+        ];
+        works[3].dropout_p = 1.0;
+        works
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_plan_bit_for_bit() {
+        // The any-thread-count determinism guarantee at the engine level:
+        // threads ∈ {1, 4, 8} produce identical RoundPlans — events (seq
+        // numbers included), time bits, and every bucket — across every
+        // policy × churn combination, including multi-round async runs
+        // whose in-flight queue crosses the thread boundary.
+        let works = mixed_churn_works();
+        let policies = [
+            (RoundPolicy::Sync, usize::MAX),
+            (RoundPolicy::Deadline { secs: 30.0 }, usize::MAX),
+            (RoundPolicy::OverSelect { extra: 2 }, 2),
+            (RoundPolicy::Async { buffer_k: 2, max_staleness: 8 }, usize::MAX),
+        ];
+        let churns = [
+            ChurnPolicy::None,
+            ChurnPolicy::Abort,
+            ChurnPolicy::Resume,
+            ChurnPolicy::Checkpoint { epochs: 4 },
+        ];
+        for (policy, keep) in policies {
+            for churn in churns {
+                let mut base_engine = FleetEngine::with_threads(1);
+                let mut base_rng = Rng::new(7);
+                let mut start = 0.0;
+                let mut baseline = Vec::new();
+                for round in 0..3 {
+                    let p = base_engine
+                        .simulate_round(round, start, &works, policy, keep, churn, &mut base_rng);
+                    start = p.end_s;
+                    baseline.push(p);
+                }
+                for threads in [4, 8] {
+                    let mut engine = FleetEngine::with_threads(threads);
+                    let mut rng = Rng::new(7);
+                    let mut start = 0.0;
+                    for (round, expect) in baseline.iter().enumerate() {
+                        let p = engine
+                            .simulate_round(round, start, &works, policy, keep, churn, &mut rng);
+                        assert_eq!(
+                            &p, expect,
+                            "{policy:?} × {churn:?} diverged at {threads} threads, round {round}"
+                        );
+                        assert_eq!(p.end_s.to_bits(), expect.end_s.to_bits());
+                        start = p.end_s;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_fleet_threads_match_inline_bit_for_bit() {
+        // Same guarantee on the realistic seeded mobile cohort (rng-varied
+        // dropout draws interleaving with precomputed plans).
+        let works = pool_works(9);
+        for policy in [
+            RoundPolicy::Sync,
+            RoundPolicy::Deadline { secs: 300.0 },
+            RoundPolicy::Async { buffer_k: 4, max_staleness: 8 },
+        ] {
+            let mut inline = FleetEngine::with_threads(1);
+            let mut pooled = FleetEngine::with_threads(4);
+            let mut r1 = Rng::new(9 ^ 0xf1ee);
+            let mut r2 = Rng::new(9 ^ 0xf1ee);
+            for round in 0..2 {
+                let a = inline.simulate_round(
+                    round, 0.0, &works, policy, usize::MAX, ChurnPolicy::Resume, &mut r1,
+                );
+                let b = pooled.simulate_round(
+                    round, 0.0, &works, policy, usize::MAX, ChurnPolicy::Resume, &mut r2,
+                );
+                assert_eq!(a, b, "{policy:?} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn threads_are_clamped_and_reported() {
+        let mut e = FleetEngine::with_threads(0);
+        assert_eq!(e.threads(), 1, "0 clamps to inline");
+        e.set_threads(6);
+        assert_eq!(e.threads(), 6);
+        // Inline rounds report full utilization (the event loop is the
+        // one worker); pooled rounds report a busy fraction in (0, 1].
+        let works = mixed_churn_works();
+        let mut inline = FleetEngine::with_threads(1);
+        inline.simulate_round(
+            0,
+            0.0,
+            &works,
+            RoundPolicy::Sync,
+            usize::MAX,
+            ChurnPolicy::Resume,
+            &mut Rng::new(1),
+        );
+        assert_eq!(inline.last_worker_utilization(), 1.0);
+        let mut pooled = FleetEngine::with_threads(4);
+        pooled.simulate_round(
+            0,
+            0.0,
+            &works,
+            RoundPolicy::Sync,
+            usize::MAX,
+            ChurnPolicy::Resume,
+            &mut Rng::new(1),
+        );
+        let u = pooled.last_worker_utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range");
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::path::PathBuf;
 /// `--buffer-k`, `--staleness-alpha`, `--max-staleness`,
 /// `--stale-projection`, `--projection-decay`, `--fleet-profile`,
 /// `--dropout`, `--churn-policy`, `--churn-epochs`, `--trace-period`,
-/// `--trace-duty`, `--lazy-pool`), the strategy knobs (`--strategy`,
+/// `--trace-duty`, `--lazy-pool`, `--threads`), the strategy knobs (`--strategy`,
 /// `--elastic-phases`, `--freeze-step-cap` — see `docs/STRATEGIES.md`)
 /// and the observability switch (`--telemetry-jsonl`, env fallback
 /// `PROFL_TELEMETRY_JSONL`). See `docs/CLI.md` for the full flag
@@ -64,6 +64,9 @@ pub struct ExpOpts {
     pub trace_duty: Option<f64>,
     /// Lazy on-demand client materialization (O(cohort) memory/round).
     pub lazy_pool: bool,
+    /// Worker threads for per-client span planning (bit-identical at any
+    /// count; `None` keeps the config default / `PROFL_THREADS`).
+    pub threads: Option<usize>,
     /// Memory-strategy override (`profl`/`paramaware`/`layerfreeze`/`elastic`).
     pub strategy: Option<String>,
     /// Elastic: number of budget-curve points.
@@ -105,6 +108,7 @@ impl ExpOpts {
             trace_period_s: args.parse_opt("trace-period")?,
             trace_duty: args.parse_opt("trace-duty")?,
             lazy_pool: args.flag("lazy-pool"),
+            threads: args.parse_opt("threads")?,
             strategy: args.get("strategy").map(String::from),
             elastic_phases: args.parse_opt("elastic-phases")?,
             freeze_step_cap: args.parse_opt("freeze-step-cap")?,
@@ -167,6 +171,9 @@ impl ExpOpts {
         cfg.fleet.trace_duty = self.trace_duty.or(cfg.fleet.trace_duty);
         if self.lazy_pool {
             cfg.fleet.lazy_pool = true;
+        }
+        if let Some(n) = self.threads {
+            cfg.fleet.threads = n;
         }
         cfg.strategy.name = self.strategy.clone().or(cfg.strategy.name);
         cfg.strategy.elastic_phases = self.elastic_phases.or(cfg.strategy.elastic_phases);
@@ -291,6 +298,7 @@ mod tests {
             trace_period_s: Some(240.0),
             trace_duty: None,
             lazy_pool: true,
+            threads: Some(4),
             strategy: Some("elastic".into()),
             elastic_phases: Some(3),
             freeze_step_cap: None,
@@ -313,6 +321,7 @@ mod tests {
         assert_eq!(c.fleet.trace_period_s, Some(240.0));
         assert_eq!(c.fleet.trace_duty, None, "unset override keeps the profile's duty");
         assert!(c.fleet.lazy_pool);
+        assert_eq!(c.fleet.threads, 4);
         assert_eq!(c.strategy.name.as_deref(), Some("elastic"));
         assert_eq!(c.strategy.elastic_phases, Some(3));
         assert_eq!(c.strategy.freeze_step_cap, None, "unset knob keeps the default");

@@ -71,6 +71,11 @@ FLEET OPTIONS (discrete-event simulator; see fleet:: docs):
   --lazy-pool         Materialize clients on demand (O(cohort) memory per
                       round; bit-identical to the eager build) — for
                       very large --clients fleets
+  --threads <n>       Worker threads for per-client span planning
+                      [default: 1, env fallback: PROFL_THREADS]. Results
+                      are bit-identical at any thread count (see
+                      docs/SIMULATION.md); >1 only buys wall-clock time
+                      on large cohorts.
 
 OBSERVABILITY (see docs/OBSERVABILITY.md):
   --telemetry-jsonl <path>  Stream structured spans/counters/gauges for
@@ -131,6 +136,9 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     cfg.fleet.trace_duty = args.parse_opt("trace-duty")?.or(cfg.fleet.trace_duty);
     if args.flag("lazy-pool") {
         cfg.fleet.lazy_pool = true;
+    }
+    if let Some(n) = args.parse_opt("threads")? {
+        cfg.fleet.threads = n;
     }
     cfg.telemetry_jsonl =
         args.get("telemetry-jsonl").map(String::from).or_else(profl::harness::telemetry_env);

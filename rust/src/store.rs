@@ -105,8 +105,19 @@ fn accumulate_corner_rec(
     sub_off: usize,
 ) {
     if dim == full_shape.len() {
+        // Rank-0 tensor: single scalar position.
         acc[full_off] += w * sub[sub_off];
         wacc[full_off] += w;
+        return;
+    }
+    if dim + 1 == full_shape.len() {
+        // Last dimension: stride 1 in both layouts, so the whole row is
+        // contiguous — sweep it through the chunked arena kernels (same
+        // elementwise ops in the same order as the per-position recursion,
+        // bit for bit; see `aggregate::simd`).
+        let n = sub_shape[dim];
+        crate::aggregate::simd::axpy(&mut acc[full_off..full_off + n], &sub[sub_off..sub_off + n], w);
+        crate::aggregate::simd::add_scalar(&mut wacc[full_off..full_off + n], w);
         return;
     }
     let fs = strides(full_shape);
@@ -297,6 +308,38 @@ mod tests {
         Tensor::accumulate_corner(&full_shape, &mut acc, &mut wacc, &[2, 2], &sub, 0.5);
         assert_eq!(acc, vec![0.5, 1.0, 0.0, 1.5, 2.0, 0.0]);
         assert_eq!(wacc, vec![0.5, 0.5, 0.0, 0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn accumulate_corner_chunked_rows_match_scalar_reference() {
+        // The last-dim rows now sweep through the chunked arena kernels;
+        // race them against the naive per-element reference across row
+        // lengths straddling the 8-lane chunk width (and its tails).
+        for cols in [1usize, 7, 8, 9, 16, 19] {
+            let full_cols = cols + 2;
+            let full_shape = vec![3, full_cols];
+            let total = 3 * full_cols;
+            let mut rng = crate::rng::Rng::new(cols as u64);
+            let sub_shape = vec![2, cols];
+            let sub: Vec<f32> = (0..2 * cols).map(|_| rng.normal()).collect();
+            let w = 0.37f32;
+            let mut acc = vec![0.0f32; total];
+            let mut wacc = vec![0.0f32; total];
+            Tensor::accumulate_corner(&full_shape, &mut acc, &mut wacc, &sub_shape, &sub, w);
+            let mut racc = vec![0.0f32; total];
+            let mut rwacc = vec![0.0f32; total];
+            for r in 0..2 {
+                for c in 0..cols {
+                    let f = r * full_cols + c;
+                    racc[f] += w * sub[r * cols + c];
+                    rwacc[f] += w;
+                }
+            }
+            for i in 0..total {
+                assert_eq!(acc[i].to_bits(), racc[i].to_bits(), "cols={cols} acc[{i}]");
+                assert_eq!(wacc[i].to_bits(), rwacc[i].to_bits(), "cols={cols} wacc[{i}]");
+            }
+        }
     }
 
     #[test]

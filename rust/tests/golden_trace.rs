@@ -119,9 +119,21 @@ fn render_round(round: usize, plan: &RoundPlan) -> String {
 }
 
 /// Run the golden fleet for two rounds under one policy combination and
-/// serialize both plans.
+/// serialize both plans. Uses [`FleetEngine::new`], so the trace is also
+/// exercised at whatever `PROFL_THREADS` the environment sets (CI runs
+/// the whole suite at 4) — the goldens must hold at any thread count.
 fn trace_for(policy: RoundPolicy, keep: usize, churn: ChurnPolicy) -> String {
-    let mut engine = FleetEngine::new();
+    trace_for_threads(policy, keep, churn, profl::fleet::default_threads())
+}
+
+/// Same trace under an explicit span-planner worker count.
+fn trace_for_threads(
+    policy: RoundPolicy,
+    keep: usize,
+    churn: ChurnPolicy,
+    threads: usize,
+) -> String {
+    let mut engine = FleetEngine::with_threads(threads);
     let mut rng = Rng::new(77);
     let mut out = String::new();
     let mut start = 0.0;
@@ -190,5 +202,40 @@ fn async_golden_traces() {
     for (cn, churn) in CHURNS {
         let policy = RoundPolicy::Async { buffer_k: 2, max_staleness: 8 };
         check(&format!("async_{cn}"), &trace_for(policy, usize::MAX, churn));
+    }
+}
+
+#[test]
+fn golden_traces_identical_at_any_thread_count() {
+    // The determinism tentpole: the checked-in goldens (and therefore
+    // every event, seq, bucket, and bit of every virtual time) must be
+    // reproduced exactly by the parallel span planner at 1, 4, and 8
+    // workers. No UPDATE_GOLDEN escape hatch here — this compares against
+    // the committed files directly.
+    let policies: [(&str, RoundPolicy, usize); 4] = [
+        ("sync", RoundPolicy::Sync, usize::MAX),
+        ("deadline", RoundPolicy::Deadline { secs: 21.0 }, usize::MAX),
+        ("overselect", RoundPolicy::OverSelect { extra: 2 }, 3),
+        ("async", RoundPolicy::Async { buffer_k: 2, max_staleness: 8 }, usize::MAX),
+    ];
+    for (pn, policy, keep) in policies {
+        for (cn, churn) in CHURNS {
+            let path = golden_dir().join(format!("{pn}_{cn}.txt"));
+            let want = match std::fs::read_to_string(&path) {
+                Ok(s) => s,
+                Err(_) => {
+                    // Bootstrap run: the per-policy tests create the files.
+                    eprintln!("golden `{pn}_{cn}` not committed yet; skipping");
+                    continue;
+                }
+            };
+            for threads in [1usize, 4, 8] {
+                let got = trace_for_threads(policy, keep, churn, threads);
+                assert_eq!(
+                    got, want,
+                    "{pn}_{cn}: trace at {threads} threads diverged from the committed golden"
+                );
+            }
+        }
     }
 }

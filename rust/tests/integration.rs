@@ -541,6 +541,39 @@ fn churn_abort_on_mobile_fleet_wastes_compute() {
 }
 
 #[test]
+fn thread_count_never_changes_round_records_bit_for_bit() {
+    // Parallel-rounds acceptance: the same run at --threads 1, 4, and 8
+    // produces bit-identical RoundRecord histories — thread count buys
+    // wall time, never arithmetic. Mobile fleet + resume churn so the
+    // span planner actually works through pauses and interrupts.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let run = |threads: usize| {
+        let mut cfg = tiny();
+        cfg.fleet.profile = "mobile".into();
+        cfg.fleet.churn_policy = "resume".into();
+        cfg.fleet.threads = threads;
+        ProFL::default().run(&rt, &cfg).unwrap()
+    };
+    let base = run(1);
+    for threads in [4usize, 8] {
+        let s = run(threads);
+        assert_eq!(base.rounds, s.rounds, "threads={threads}: round schedules diverged");
+        assert_eq!(base.final_acc.to_bits(), s.final_acc.to_bits(), "threads={threads}: acc");
+        assert_eq!(base.sim_time_s.to_bits(), s.sim_time_s.to_bits(), "threads={threads}");
+        assert_eq!(base.history.len(), s.history.len(), "threads={threads}");
+        for (a, b) in base.history.iter().zip(&s.history) {
+            assert_eq!(
+                a.csv_row(),
+                b.csv_row(),
+                "threads={threads}: round {} diverged",
+                a.round
+            );
+        }
+    }
+}
+
+#[test]
 fn comm_accounting_prefix_cached_after_first_download() {
     let dir = require_artifacts!();
     let rt = Runtime::new(&dir).unwrap();

@@ -439,6 +439,54 @@ fn prop_download_fractions_bounded_and_charged_once() {
     });
 }
 
+#[test]
+fn prop_parallel_plan_equals_sequential_sorted_order() {
+    // The deterministic-merge contract: the worker-pool span planner,
+    // merged through the event queue's (time, seq) order, reproduces the
+    // sequential plan exactly — same events (virtual times to the bit,
+    // seqs, kinds), same buckets — under rng-varied schedules, policies,
+    // churn, and dropout, across rounds with async in-flight state
+    // crossing them.
+    cases(120, |rng| {
+        let (policy, keep) = rand_policy(rng);
+        let churn = rand_churn(rng);
+        let threads = 2 + rng.below(7);
+        let seed = rng.next_u64();
+        let mut seq_engine = FleetEngine::with_threads(1);
+        let mut par_engine = FleetEngine::with_threads(threads);
+        let mut seq_rng = Rng::new(seed);
+        let mut par_rng = Rng::new(seed);
+        let mut start = 0.0;
+        for round in 0..3 {
+            // Fresh ids per round so in-flight uploads are never
+            // superseded (the coordinator's sampling guarantees this).
+            let mut works = rand_works(rng, true);
+            for w in &mut works {
+                w.id += round * 100;
+            }
+            let a = seq_engine
+                .simulate_round(round, start, &works, policy, keep, churn, &mut seq_rng);
+            let b = par_engine
+                .simulate_round(round, start, &works, policy, keep, churn, &mut par_rng);
+            assert_eq!(
+                a, b,
+                "{policy:?}×{churn:?} diverged at {threads} threads, round {round}"
+            );
+            assert_eq!(a.end_s.to_bits(), b.end_s.to_bits(), "round end drifted");
+            // The merged stream really is (time, seq)-sorted.
+            for pair in b.events.windows(2) {
+                let (t0, s0) = (pair[0].time_s, pair[0].seq);
+                let (t1, s1) = (pair[1].time_s, pair[1].seq);
+                assert!(
+                    t0 < t1 || (t0 == t1 && s0 < s1),
+                    "merge order violated (time, seq): ({t0}, {s0}) -> ({t1}, {s1})"
+                );
+            }
+            start = a.end_s;
+        }
+    });
+}
+
 // ---------------------------------------------------------------------------
 // Stale-update projection invariants
 // ---------------------------------------------------------------------------

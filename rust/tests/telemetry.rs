@@ -166,6 +166,8 @@ fn telemetry_on_is_bit_identical_to_off_and_stream_covers_the_layers() {
         "pool.peak_materialized",
         "fleet.queue_peak",
         "coordinator.pending_len",
+        "fleet.threads",
+        "fleet.worker_utilization",
     ] {
         assert!(names.contains(expected), "stream never emitted `{expected}`; saw {names:?}");
     }

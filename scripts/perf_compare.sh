@@ -1,0 +1,107 @@
+#!/usr/bin/env bash
+# Before/after comparison of two fleet_scale BENCH_fleet.json documents.
+#
+# Typical workflow around a perf-sensitive change:
+#
+#   make bench-json && cp BENCH_fleet.json /tmp/before.json
+#   # ... apply the change ...
+#   make bench-json
+#   scripts/perf_compare.sh /tmp/before.json BENCH_fleet.json
+#
+# Entries are matched on (fleet, policy, churn, threads); the report
+# shows per-entry mean-ns deltas plus allocation-counter drift, and the
+# thread-matrix speedup (threads=1 vs each other column) for both files.
+# Exits non-zero when --max-regress PCT is given and any matched entry's
+# mean regresses by more than PCT percent.
+set -euo pipefail
+
+if [[ $# -lt 2 ]]; then
+    echo "usage: $0 BEFORE.json AFTER.json [--max-regress PCT]" >&2
+    exit 2
+fi
+before=$1
+after=$2
+max_regress=${4:-}
+if [[ "${3:-}" != "--max-regress" && -n "${3:-}" ]]; then
+    echo "unknown option ${3}" >&2
+    exit 2
+fi
+
+python3 - "$before" "$after" "${max_regress:-}" <<'PY'
+import json
+import sys
+
+before_path, after_path, max_regress = sys.argv[1], sys.argv[2], sys.argv[3]
+limit = float(max_regress) if max_regress else None
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("bench") != "fleet_scale":
+        sys.exit(f"{path}: not a fleet_scale document")
+    entries = {}
+    for e in doc["entries"]:
+        # threads was introduced with schema 2; older files are the
+        # single-threaded engine, so default the key to 1.
+        key = (int(e["fleet"]), e["policy"], e["churn"], int(e.get("threads", 1)))
+        entries[key] = e
+    return doc, entries
+
+
+bdoc, b = load(before_path)
+adoc, a = load(after_path)
+for tag, doc, path in [("before", bdoc, before_path), ("after", adoc, after_path)]:
+    runner = doc.get("runner", "?")
+    note = "" if runner == "native" else "  ** NOT native Rust numbers **"
+    print(f"{tag:>6}: {path} (runner={runner}, schema={doc.get('schema')}){note}")
+print()
+
+shared = sorted(set(b) & set(a))
+if not shared:
+    sys.exit("no matching (fleet, policy, churn, threads) entries between the two files")
+only_b = sorted(set(b) - set(a))
+only_a = sorted(set(a) - set(b))
+
+print(f"{'fleet':>9} {'policy':<12} {'churn':<8} {'thr':>3} "
+      f"{'before ns':>12} {'after ns':>12} {'delta':>8}  allocs/round")
+worst = None
+for key in shared:
+    fleet, policy, churn, threads = key
+    bm, am = b[key]["mean_ns"], a[key]["mean_ns"]
+    delta = (am - bm) / bm * 100.0 if bm else 0.0
+    if worst is None or delta > worst[0]:
+        worst = (delta, key)
+    # Allocator columns are null in twin-produced files (only the native
+    # bench's counting allocator can fill them).
+    def allocs(e):
+        v = e.get("allocs_per_round")
+        return "-" if v is None else f"{v:.0f}"
+
+    print(f"{fleet:>9} {policy:<12} {churn:<8} {threads:>3} "
+          f"{bm:>12.0f} {am:>12.0f} {delta:>+7.1f}%  {allocs(b[key])} -> {allocs(a[key])}")
+
+for tag, entries in [("before", b), ("after", a)]:
+    speedups = []
+    for (fleet, policy, churn, threads), e in sorted(entries.items()):
+        if threads == 1:
+            continue
+        base = entries.get((fleet, policy, churn, 1))
+        if base and e["mean_ns"]:
+            speedups.append((fleet, policy, churn, threads,
+                             base["mean_ns"] / e["mean_ns"]))
+    if speedups:
+        print(f"\n{tag}: thread-matrix speedup vs threads=1")
+        for fleet, policy, churn, threads, s in speedups:
+            print(f"  fleet={fleet:>9} {policy:<12} {churn:<8} "
+                  f"threads={threads}: {s:.2f}x")
+
+if only_b:
+    print(f"\nonly in before: {len(only_b)} entries")
+if only_a:
+    print(f"only in after:  {len(only_a)} entries")
+
+if limit is not None and worst and worst[0] > limit:
+    delta, key = worst
+    sys.exit(f"\nFAIL: {key} regressed {delta:+.1f}% (> {limit}%)")
+PY
