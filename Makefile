@@ -2,7 +2,8 @@
 # (fmt + clippy + tests); see ROADMAP.md.
 
 .PHONY: check docs artifacts test-golden test-golden-update smoke-examples \
-        bench-json bench-json-smoke telemetry-smoke strategy-smoke
+        bench-json bench-json-smoke telemetry-smoke strategy-smoke \
+        resume-smoke test-resume
 
 check:
 	./rust/check.sh
@@ -44,6 +45,21 @@ telemetry-smoke:
 # exits non-zero on any violation; see docs/STRATEGIES.md).
 strategy-smoke:
 	cargo run --release --example strategy_zoo -- --smoke
+
+# Checkpoint/resume smoke gate: kill an artifact-free fleet run at every
+# round boundary, resume from the on-disk checkpoint, and byte-compare
+# against the uninterrupted trace; also proves tampered files and
+# drifted configs are rejected (the binary exits non-zero on any
+# violation; see docs/CHECKPOINT.md).
+resume-smoke:
+	cargo run --release --example resume_tour -- --smoke
+
+# The checkpoint/resume test tree: differential golden resume suite,
+# codec/pool/engine/strategy property tests, and the adversarial parser
+# fuzzer with its regression corpus (rust/tests/corpus/).
+test-resume:
+	PROFL_THREADS=4 cargo test -q --test resume_golden --test fuzz_inputs --test proptests
+	PROFL_THREADS=4 cargo test -q --test integration resume
 
 # Fleet-scale perf trajectory: run the artifact-free round-scheduling
 # bench across fleet sizes (1e3 → 1e6) × planner threads (1/4/8) and

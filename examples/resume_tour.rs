@@ -1,0 +1,294 @@
+//! Checkpoint/resume tour — kill a seeded fleet run at every round
+//! boundary, resume it from the on-disk checkpoint, and prove the
+//! resumed trace is **byte-identical** to the uninterrupted run.
+//!
+//! Artifact-free: the fleet is synthetic (`ClientPool` over a
+//! `SyntheticDataset`, device timings from the named fleet profiles),
+//! so this runs anywhere — it is CI's `make resume-smoke` gate.
+//!
+//! Self-validating — the run aborts (non-zero exit) unless:
+//! 1. For every cut `k` in `1..ROUNDS`, and for both eager and lazy
+//!    client pools: run `k` rounds, checkpoint through the **real file
+//!    codec** (`Checkpoint::write` → `Checkpoint::read`), drop every
+//!    live object, rebuild pool/engine/rng from the decoded file, run
+//!    the remaining rounds — the merged trace equals the uninterrupted
+//!    trace byte for byte (event times and rng states as raw bits).
+//! 2. A tampered checkpoint (one flipped payload byte) is rejected by
+//!    the state digest with a clean error.
+//! 3. A config that hashes differently is rejected by the fingerprint
+//!    gate, naming both hashes.
+//!
+//!   cargo run --release --example resume_tour
+//!   cargo run --release --example resume_tour -- --smoke
+//!
+//! Everything is seeded: same flags ⇒ byte-identical output.
+//! Background: docs/CHECKPOINT.md.
+
+use anyhow::{bail, ensure, Result};
+use profl::checkpoint::Checkpoint;
+use profl::cli::Args;
+use profl::clients::ClientPool;
+use profl::config::RunConfig;
+use profl::data::{Partition, SyntheticDataset};
+use profl::fleet::{ChurnPolicy, ClientWork, FleetEngine, RoundPolicy};
+use profl::harness::save_text;
+use profl::memory::MemoryConfig;
+use profl::rng::Rng;
+use profl::strategy::{layout_mem, BlockLayout};
+use profl::telemetry::{config_sha256, config_value};
+use std::fmt::Write as _;
+
+/// ResNet18-scale block parameter counts (the manifest's 4-block split).
+const COUNTS: [u64; 4] = [2_000_000, 3_000_000, 3_000_000, 3_200_000];
+
+struct Tour {
+    cfg: RunConfig,
+    clients: usize,
+    per_round: usize,
+    rounds: usize,
+    seed: u64,
+    lazy: bool,
+}
+
+impl Tour {
+    fn build_pool(&self) -> Result<ClientPool> {
+        let data = SyntheticDataset::new(10, self.seed);
+        let profile = self.cfg.fleet_profile()?;
+        let mem: MemoryConfig = self.cfg.memory.into();
+        Ok(if self.lazy {
+            ClientPool::build_lazy(
+                self.clients,
+                self.clients * 60,
+                &data,
+                Partition::Iid,
+                mem,
+                &profile,
+                self.seed,
+                (self.per_round * 2).max(4),
+            )
+        } else {
+            ClientPool::build(
+                self.clients,
+                self.clients * 60,
+                &data,
+                Partition::Iid,
+                mem,
+                &profile,
+                self.seed,
+            )
+        })
+    }
+
+    /// One round: pool-rng cohort selection, span timings from the
+    /// device profiles, the async discrete-event engine. Returns the
+    /// round's trace line (every float as raw bits).
+    fn round(
+        &self,
+        round: usize,
+        start: &mut f64,
+        pool: &mut ClientPool,
+        engine: &mut FleetEngine,
+        rng: &mut Rng,
+    ) -> String {
+        let m = layout_mem(&COUNTS, &BlockLayout::full(COUNTS.len()));
+        let sel = pool.select(self.per_round, &m);
+        let bytes = 4 * m.params_trainable;
+        let works: Vec<ClientWork> = sel
+            .trainers
+            .iter()
+            .map(|&id| {
+                let c = pool.client(id);
+                let p = &c.profile;
+                ClientWork {
+                    id,
+                    ready_s: p.trace.next_online(*start),
+                    down_s: p.down_time_s(bytes),
+                    train_s: p.train_time_s(c.shard.num_samples(), &m),
+                    up_s: p.up_time_s(bytes),
+                    dropout_p: p.dropout_p,
+                    trace: p.trace,
+                }
+            })
+            .collect();
+        let policy = RoundPolicy::Async { buffer_k: (self.per_round / 2).max(1), max_staleness: 8 };
+        let plan = engine.simulate_round(
+            round,
+            *start,
+            &works,
+            policy,
+            usize::MAX,
+            ChurnPolicy::Checkpoint { epochs: 4 },
+            rng,
+        );
+        *start = plan.end_s;
+        let mut line = format!(
+            "r{round} end=0x{:016x} rng=0x{:016x} completers={:?} late={} inflight={}",
+            plan.end_s.to_bits(),
+            rng.state(),
+            plan.completers,
+            plan.late_arrivals.len(),
+            engine.inflight().len(),
+        );
+        let _ = write!(line, " pool={:?}", pool.export_state().select_rng);
+        line.push('\n');
+        line
+    }
+
+    /// The full run, killed at boundary `cut` (`None` = uninterrupted).
+    /// Post-cut state lives only in the checkpoint file.
+    fn trace(&self, cut: Option<usize>) -> Result<String> {
+        let mut out = String::new();
+        let mut pool = self.build_pool()?;
+        let mut engine = FleetEngine::new();
+        let mut rng = Rng::new(self.seed ^ 0xf1ee_7c10);
+        let mut start = 0.0;
+        let mut round = 0;
+        while round < cut.unwrap_or(self.rounds) {
+            out.push_str(&self.round(round, &mut start, &mut pool, &mut engine, &mut rng));
+            round += 1;
+        }
+        let Some(cut) = cut else { return Ok(out) };
+
+        // ---- the kill: serialize, drop everything, resurrect ----------
+        let ck = Checkpoint {
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            config_sha256: config_sha256(&self.cfg),
+            config_json: config_value(&self.cfg).to_json(),
+            round,
+            sim_time_s: start,
+            prefix_version: 0,
+            transitions: Vec::new(),
+            fleet_rng: rng.state(),
+            threads: 1,
+            inflight: engine.inflight().to_vec(),
+            pending: Vec::new(),
+            params: Vec::new(),
+            pool: pool.export_state(),
+            records: Vec::new(),
+            strategy_name: "ProFL".to_string(),
+            strategy_blob: Vec::new(),
+            mid: None,
+        };
+        let path = std::env::temp_dir().join(format!(
+            "profl_resume_tour_{}_{}_{cut}.ckpt",
+            std::process::id(),
+            if self.lazy { "lazy" } else { "eager" },
+        ));
+        ck.write(&path)?;
+        drop(pool);
+        drop(engine);
+        drop(rng);
+
+        let ck = Checkpoint::read(&path)?;
+        std::fs::remove_file(&path).ok();
+        // The fingerprint gate must accept the identical config …
+        let resolved = ck.resolve_config()?;
+        ensure!(config_sha256(&resolved) == ck.config_sha256, "fingerprint drifted");
+        // … and the state must reposition every mutable stream.
+        let mut pool = self.build_pool()?;
+        pool.import_state(&ck.pool)?;
+        let mut engine = FleetEngine::new();
+        engine.restore_inflight(ck.inflight.clone());
+        let mut rng = Rng::from_state(ck.fleet_rng);
+        let mut start = ck.sim_time_s;
+        for round in ck.round..self.rounds {
+            out.push_str(&self.round(round, &mut start, &mut pool, &mut engine, &mut rng));
+        }
+        Ok(out)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let smoke = args.flag("smoke");
+    let clients: usize = args.parse_opt("clients")?.unwrap_or(if smoke { 12 } else { 40 });
+    let rounds: usize = args.parse_opt("rounds")?.unwrap_or(if smoke { 5 } else { 8 });
+    let seed: u64 = args.parse_opt("seed")?.unwrap_or(42);
+    let mut cfg = RunConfig::smoke("resnet18_w8_c10");
+    cfg.fleet.profile = "mobile".to_string();
+
+    let mut out = String::from("Checkpoint/resume tour (docs/CHECKPOINT.md)\n");
+    let mut checked = 0usize;
+
+    // ---- 1. resume ≡ uninterrupted, at every boundary, both pools ----
+    for lazy in [false, true] {
+        let tour = Tour { cfg: cfg.clone(), clients, per_round: 6, rounds, seed, lazy };
+        let base = tour.trace(None)?;
+        for cut in 1..rounds {
+            let resumed = tour.trace(Some(cut))?;
+            if resumed != base {
+                bail!(
+                    "{} pool: resume at boundary {cut} diverged\n--- uninterrupted\n{base}\n--- resumed\n{resumed}",
+                    if lazy { "lazy" } else { "eager" },
+                );
+            }
+            checked += 1;
+        }
+        let _ = writeln!(
+            out,
+            "{} pool: {} boundaries resumed bit-for-bit over {} rounds",
+            if lazy { "lazy" } else { "eager" },
+            rounds - 1,
+            rounds,
+        );
+        if !lazy {
+            out.push_str(&base);
+        }
+    }
+
+    // ---- 2. a flipped payload byte must hit the digest wall ----------
+    let tour = Tour { cfg: cfg.clone(), clients, per_round: 6, rounds, seed, lazy: false };
+    let mut pool = tour.build_pool()?;
+    let probe = layout_mem(&COUNTS, &BlockLayout::full(COUNTS.len()));
+    let _ = pool.select(6, &probe);
+    let ck = Checkpoint {
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        config_sha256: config_sha256(&cfg),
+        config_json: config_value(&cfg).to_json(),
+        round: 1,
+        sim_time_s: 64.0,
+        prefix_version: 0,
+        transitions: Vec::new(),
+        fleet_rng: 7,
+        threads: 1,
+        inflight: Vec::new(),
+        pending: Vec::new(),
+        params: Vec::new(),
+        pool: pool.export_state(),
+        records: Vec::new(),
+        strategy_name: "ProFL".to_string(),
+        strategy_blob: Vec::new(),
+        mid: None,
+    };
+    let path = std::env::temp_dir().join(format!("profl_resume_tour_{}_tamper.ckpt", std::process::id()));
+    ck.write(&path)?;
+    let mut bytes = std::fs::read(&path)?;
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&path, &bytes)?;
+    let err = match Checkpoint::read(&path) {
+        Ok(_) => bail!("tampered checkpoint was accepted"),
+        Err(e) => e.to_string(),
+    };
+    std::fs::remove_file(&path).ok();
+    ensure!(err.contains("digest"), "tamper rejection lacks the digest diagnostic: {err}");
+    let _ = writeln!(out, "tamper: flipped payload byte rejected ({err})");
+
+    // ---- 3. config drift must be named by the fingerprint gate -------
+    let mut drifted = cfg.clone();
+    drifted.seed ^= 1;
+    let err = match ck.verify_config(&drifted) {
+        Ok(()) => bail!("drifted config was accepted"),
+        Err(e) => e.to_string(),
+    };
+    ensure!(
+        err.contains("config fingerprint mismatch") && err.contains(&ck.config_sha256),
+        "fingerprint rejection must name both hashes: {err}"
+    );
+    out.push_str("fingerprint: drifted config rejected, both hashes named\n");
+
+    let _ = writeln!(out, "validated: {checked} kill/resume cycles byte-identical");
+    print!("{out}");
+    save_text("resume_tour", &out)?;
+    Ok(())
+}

@@ -46,6 +46,14 @@ cargo run --release --quiet --example telemetry_tour -- --smoke
 echo "== strategy smoke (make strategy-smoke)"
 cargo run --release --quiet --example strategy_zoo -- --smoke
 
+# Checkpoint/resume smoke gate: kill a fleet run at every round
+# boundary, resume from the on-disk checkpoint file, byte-compare
+# against the uninterrupted trace, and prove tampered/drifted
+# checkpoints are rejected (exits non-zero on any violation; see
+# docs/CHECKPOINT.md).
+echo "== resume smoke (make resume-smoke)"
+cargo run --release --quiet --example resume_tour -- --smoke
+
 # The full test run above already includes the golden-trace suite; this
 # named pass keeps a loud, greppable signal when an engine change shifts
 # an event trace (regenerate with `make test-golden-update`). Run under

@@ -1,0 +1,1228 @@
+//! Checkpoint/resume for long simulations (`docs/CHECKPOINT.md`).
+//!
+//! A checkpoint is the *complete* run state at a round boundary —
+//! coordinator clock/counters, pending async buffers, transition log,
+//! per-round record history, freeze-detector EM state, strategy cursor,
+//! fleet in-flight queue, every client-pool rng/cursor residue, and the
+//! parameter store — serialized into one versioned, self-describing
+//! file. Because every stochastic decision in the simulator flows from
+//! seeded SplitMix64 streams (see [`crate::rng`]), restoring those
+//! streams' positions makes the resumed run **bit-identical** to the
+//! uninterrupted one: same `RoundRecord` history, same CSV, same
+//! manifest `history_sha256`, same telemetry counter values, at any
+//! thread count.
+//!
+//! # File format (version 1)
+//!
+//! All integers are little-endian fixed width; floats are IEEE-754 bit
+//! patterns; strings and sequences carry `u64` length prefixes that are
+//! validated against the remaining input *before* any allocation.
+//!
+//! ```text
+//! header:  magic "PROFLCKP" (8 bytes)
+//!          format_version   u32
+//!          crate_version    string   (rejected on skew, naming both)
+//!          config_sha256    string   (manifest-style config fingerprint)
+//!          payload_sha256   string   (state digest over the payload)
+//!          payload_len      u64      (must equal the remaining bytes)
+//! payload: the serialized state (see `Checkpoint::encode_payload`)
+//! ```
+//!
+//! [`Checkpoint::decode`] verifies the magic, format version, crate
+//! version, payload length, and state digest before touching the payload,
+//! and every parse path returns a clean `Err` on truncated, bit-flipped,
+//! length-corrupted, or hostile-string input — never a panic, never an
+//! unbounded allocation (adversarially tested in
+//! `rust/tests/fuzz_inputs.rs`).
+
+use crate::clients::{ClientCkpt, LazyCkpt, PoolCkptKind, PoolCkptState};
+use crate::config::RunConfig;
+use crate::coordinator::{PendingUpdate, ServerCtx};
+use crate::fleet::InFlightUpload;
+use crate::freezing::{DetectorSnapshot, Transition, TransitionLog};
+use crate::metrics::RoundRecord;
+use crate::rng::Rng;
+use crate::store::Tensor;
+use crate::strategy::{DistillPhase, MemoryStrategy, TrainPhase};
+use crate::telemetry::{config_sha256, config_value, sha256_hex};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// The 8-byte file magic.
+pub const MAGIC: [u8; 8] = *b"PROFLCKP";
+
+/// The checkpoint format version this crate reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+// ---- primitive encoder -------------------------------------------------
+
+/// Little-endian binary encoder for the checkpoint format. Public so the
+/// strategy state blobs and the test corpus builders share one encoding
+/// vocabulary with the checkpoint writer.
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// An empty encoder.
+    pub fn new() -> Self {
+        Enc::default()
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `usize` as `u64`.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Append an `f32` as its IEEE-754 bit pattern.
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// Append an `f64` as its IEEE-754 bit pattern.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Append a bool as one strict byte (0/1).
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append a length-prefixed raw byte blob.
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Append a length-prefixed `f32` slice (bit patterns).
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.f32(*x);
+        }
+    }
+
+    /// Append a length-prefixed `f64` slice (bit patterns).
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.f64(*x);
+        }
+    }
+
+    /// The encoded bytes.
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+// ---- primitive decoder -------------------------------------------------
+
+/// Strict decoder over untrusted checkpoint bytes. Every length prefix is
+/// validated against the remaining input before any allocation, so a
+/// corrupted prefix produces a clean `Err` instead of an OOM; every
+/// accessor errors (never panics) on truncation.
+#[derive(Debug)]
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// A decoder over `buf`, positioned at the start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(n <= self.remaining(), "truncated: need {n} bytes, have {}", self.remaining());
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Read a `u64` and convert to `usize`.
+    pub fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("value exceeds usize")
+    }
+
+    /// Read an `f32` bit pattern.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a strict bool byte (only 0/1 accepted).
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b}"),
+        }
+    }
+
+    /// Read a sequence length prefix for elements of at least
+    /// `min_elem_bytes` encoded bytes each, rejecting any count the
+    /// remaining input cannot possibly hold — the no-OOM guarantee.
+    pub fn seq_len(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let need = n.checked_mul(min_elem_bytes.max(1)).context("length prefix overflows")?;
+        ensure!(
+            need <= self.remaining(),
+            "length prefix {n} needs ≥ {need} bytes, only {} remain",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    /// Read a length-prefixed UTF-8 string (validated length, validated
+    /// UTF-8).
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.seq_len(1)?;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).context("invalid UTF-8 in string")
+    }
+
+    /// Read a length-prefixed raw byte blob.
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.seq_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Read a length-prefixed `f32` slice.
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed `f64` slice.
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+
+    /// Error unless every byte was consumed (rejects trailing garbage).
+    pub fn done(&self) -> Result<()> {
+        ensure!(self.remaining() == 0, "{} trailing bytes after payload", self.remaining());
+        Ok(())
+    }
+}
+
+// ---- mid-phase state ---------------------------------------------------
+
+/// Where inside a strategy phase the checkpoint was taken. Strategy state
+/// (`MemoryStrategy::save_state`) only changes *between* phases; this
+/// carries the within-phase remainder: the phase being executed, how many
+/// of its rounds ran, and (train phases) the freeze detector's state.
+#[derive(Debug, Clone)]
+pub enum MidPhase {
+    /// Mid train-phase.
+    Train {
+        /// The phase the strategy emitted.
+        phase: TrainPhase,
+        /// Freeze-detector state after `used` rounds.
+        detector: DetectorSnapshot,
+        /// Rounds of this phase already executed.
+        used: usize,
+        /// Whether the EM gate already fired (the phase is complete).
+        froze: bool,
+    },
+    /// Mid distill-phase.
+    Distill {
+        /// The phase the strategy emitted.
+        phase: DistillPhase,
+        /// Rounds of this phase already executed.
+        used: usize,
+    },
+}
+
+// ---- the checkpoint value ----------------------------------------------
+
+/// A complete run snapshot at a round boundary. Plain data: every field
+/// is open, so tests can build, inspect, and perturb checkpoints
+/// directly. [`Self::encode`]/[`Self::decode`] are exact inverses, and
+/// encode∘decode∘encode is byte-idempotent (sequences are gathered in
+/// deterministic order, floats travel as bit patterns).
+#[derive(Clone)]
+pub struct Checkpoint {
+    /// Writing crate's version — readers reject skew.
+    pub crate_version: String,
+    /// Manifest-style fingerprint of the resolved config.
+    pub config_sha256: String,
+    /// Canonical JSON of the resolved config ([`config_value`]), from
+    /// which `profl resume` reconstructs the [`RunConfig`].
+    pub config_json: String,
+    /// Rounds completed (the server's next round index).
+    pub round: usize,
+    /// Virtual fleet clock, seconds.
+    pub sim_time_s: f64,
+    /// Current frozen-prefix version.
+    pub prefix_version: u64,
+    /// The full transition log, oldest first.
+    pub transitions: Vec<Transition>,
+    /// Fleet rng stream state ([`Rng::state`]).
+    pub fleet_rng: u64,
+    /// Span-planner worker count at capture (informational: a resume may
+    /// override it — results are bit-identical at any thread count).
+    pub threads: usize,
+    /// Cross-round in-flight uploads, in engine order.
+    pub inflight: Vec<InFlightUpload>,
+    /// Buffered pending updates, sorted by client id.
+    pub pending: Vec<PendingUpdate>,
+    /// Every parameter tensor: `(name, shape, data)`, name-sorted.
+    pub params: Vec<(String, Vec<usize>, Vec<f32>)>,
+    /// Client-pool residues + selection rng.
+    pub pool: PoolCkptState,
+    /// Per-round record history, oldest first.
+    pub records: Vec<RoundRecord>,
+    /// Display name of the driving strategy (`MemoryStrategy::name`).
+    pub strategy_name: String,
+    /// The strategy's opaque state blob (`MemoryStrategy::save_state`).
+    pub strategy_blob: Vec<u8>,
+    /// Within-phase position, when the checkpoint was taken mid-phase
+    /// (always `Some` for run-level checkpoints; component-level tests
+    /// may leave it `None`).
+    pub mid: Option<MidPhase>,
+}
+
+impl Checkpoint {
+    // ---- encode --------------------------------------------------------
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.str(&self.config_json);
+        e.usize(self.round);
+        e.f64(self.sim_time_s);
+        e.u64(self.prefix_version);
+        e.usize(self.transitions.len());
+        for t in &self.transitions {
+            e.u64(t.version);
+            e.usize(t.round);
+            e.f64(t.sim_time_s);
+        }
+        e.u64(self.fleet_rng);
+        e.usize(self.threads);
+        e.usize(self.inflight.len());
+        for u in &self.inflight {
+            e.usize(u.client);
+            e.f64(u.arrive_s);
+            e.usize(u.dispatch_round);
+        }
+        e.usize(self.pending.len());
+        for p in &self.pending {
+            e.usize(p.client);
+            e.str(&p.artifact);
+            e.u64(p.prefix_version);
+            e.usize(p.dispatch_round);
+            e.f64(p.weight);
+            e.bool(p.partial);
+            e.u64(p.bytes_up);
+            e.usize(p.tensors.len());
+            for t in &p.tensors {
+                e.f32s(t);
+            }
+        }
+        e.usize(self.params.len());
+        for (name, shape, data) in &self.params {
+            e.str(name);
+            e.usize(shape.len());
+            for d in shape {
+                e.usize(*d);
+            }
+            e.f32s(data);
+        }
+        encode_pool(&mut e, &self.pool);
+        e.usize(self.records.len());
+        for r in &self.records {
+            encode_record(&mut e, r);
+        }
+        e.str(&self.strategy_name);
+        e.bytes(&self.strategy_blob);
+        match &self.mid {
+            None => e.u8(0),
+            Some(MidPhase::Train { phase, detector, used, froze }) => {
+                e.u8(1);
+                encode_train_phase(&mut e, phase);
+                encode_detector(&mut e, detector);
+                e.usize(*used);
+                e.bool(*froze);
+            }
+            Some(MidPhase::Distill { phase, used }) => {
+                e.u8(2);
+                e.str(&phase.stage);
+                e.usize(phase.step);
+                e.str(&phase.artifact);
+                e.usize(phase.rounds);
+                e.f32(phase.lr);
+                e.usize(*used);
+            }
+        }
+        e.finish()
+    }
+
+    /// Serialize to the versioned on-disk format (header + digested
+    /// payload). Deterministic: equal checkpoints encode to equal bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut e = Enc::new();
+        e.buf.extend_from_slice(&MAGIC);
+        e.u32(FORMAT_VERSION);
+        e.str(&self.crate_version);
+        e.str(&self.config_sha256);
+        e.str(&sha256_hex(&payload));
+        e.u64(payload.len() as u64);
+        let mut out = e.finish();
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    // ---- decode --------------------------------------------------------
+
+    /// Parse and fully validate a checkpoint file image: magic, format
+    /// version, crate version, payload length, state digest, then every
+    /// field. Any corruption — truncation, bit flips, hostile lengths or
+    /// strings — yields a descriptive `Err`; this function never panics
+    /// and never allocates more than the input size.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut d = Dec::new(bytes);
+        let magic = d.take(8).context("truncated before magic")?;
+        ensure!(magic == MAGIC, "not a profl checkpoint (bad magic {magic:02x?})");
+        let version = d.u32()?;
+        ensure!(
+            version == FORMAT_VERSION,
+            "unsupported checkpoint format v{version} (this build reads v{FORMAT_VERSION})"
+        );
+        let crate_version = d.str().context("bad crate_version")?;
+        let ours = env!("CARGO_PKG_VERSION");
+        ensure!(
+            crate_version == ours,
+            "checkpoint written by profl {crate_version}, this binary is profl {ours}; \
+             re-run the original version or restart the run"
+        );
+        let config_sha256 = d.str().context("bad config_sha256")?;
+        let payload_sha256 = d.str().context("bad payload_sha256")?;
+        let payload_len = d.usize().context("bad payload length")?;
+        ensure!(
+            payload_len == d.remaining(),
+            "payload length {payload_len} disagrees with file ({} bytes remain)",
+            d.remaining()
+        );
+        let payload = d.take(payload_len).expect("length just checked");
+        let actual = sha256_hex(payload);
+        ensure!(
+            actual == payload_sha256,
+            "checkpoint state digest mismatch: header says {payload_sha256}, payload hashes to {actual}"
+        );
+        let mut p = Dec::new(payload);
+        let ck = Self::decode_payload(&mut p, crate_version, config_sha256)?;
+        p.done()?;
+        Ok(ck)
+    }
+
+    fn decode_payload(
+        d: &mut Dec<'_>,
+        crate_version: String,
+        config_sha256: String,
+    ) -> Result<Checkpoint> {
+        let config_json = d.str().context("bad config_json")?;
+        let round = d.usize()?;
+        let sim_time_s = d.f64()?;
+        let prefix_version = d.u64()?;
+        let n = d.seq_len(24)?;
+        let mut transitions = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = Transition { version: d.u64()?, round: d.usize()?, sim_time_s: d.f64()? };
+            if let Some(prev) = transitions.last() {
+                let prev: &Transition = prev;
+                ensure!(
+                    t.version > prev.version
+                        && t.round >= prev.round
+                        && t.sim_time_s >= prev.sim_time_s,
+                    "transition log not monotone at version {}",
+                    t.version
+                );
+            }
+            transitions.push(t);
+        }
+        let fleet_rng = d.u64()?;
+        let threads = d.usize()?;
+        let n = d.seq_len(24)?;
+        let mut inflight = Vec::with_capacity(n);
+        for _ in 0..n {
+            inflight.push(InFlightUpload {
+                client: d.usize()?,
+                arrive_s: d.f64()?,
+                dispatch_round: d.usize()?,
+            });
+        }
+        let n = d.seq_len(57)?;
+        let mut pending = Vec::with_capacity(n);
+        for _ in 0..n {
+            let client = d.usize()?;
+            let artifact = d.str()?;
+            let prefix_version = d.u64()?;
+            let dispatch_round = d.usize()?;
+            let weight = d.f64()?;
+            let partial = d.bool()?;
+            let bytes_up = d.u64()?;
+            let nt = d.seq_len(8)?;
+            let mut tensors = Vec::with_capacity(nt);
+            for _ in 0..nt {
+                tensors.push(d.f32s()?);
+            }
+            if let Some(prev) = pending.last() {
+                let prev: &PendingUpdate = prev;
+                ensure!(client > prev.client, "pending buffer not sorted by client id");
+            }
+            pending.push(PendingUpdate {
+                client,
+                artifact,
+                prefix_version,
+                dispatch_round,
+                weight,
+                partial,
+                tensors,
+                bytes_up,
+            });
+        }
+        let n = d.seq_len(24)?;
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = d.str()?;
+            let nd = d.seq_len(8)?;
+            let mut shape = Vec::with_capacity(nd);
+            for _ in 0..nd {
+                shape.push(d.usize()?);
+            }
+            let data = d.f32s()?;
+            params.push((name, shape, data));
+        }
+        let pool = decode_pool(d)?;
+        // 12 usize + 4 u64 + 5 f64 + 3 f32 + an empty stage prefix.
+        let n = d.seq_len(188)?;
+        let mut records = Vec::with_capacity(n);
+        for _ in 0..n {
+            records.push(decode_record(d)?);
+        }
+        let strategy_name = d.str()?;
+        let strategy_blob = d.bytes()?;
+        let mid = match d.u8()? {
+            0 => None,
+            1 => {
+                let phase = decode_train_phase(d)?;
+                let detector = decode_detector(d)?;
+                let used = d.usize()?;
+                let froze = d.bool()?;
+                Some(MidPhase::Train { phase, detector, used, froze })
+            }
+            2 => {
+                let phase = DistillPhase {
+                    stage: d.str()?,
+                    step: d.usize()?,
+                    artifact: d.str()?,
+                    rounds: d.usize()?,
+                    lr: d.f32()?,
+                };
+                let used = d.usize()?;
+                Some(MidPhase::Distill { phase, used })
+            }
+            t => bail!("invalid mid-phase tag {t}"),
+        };
+        Ok(Checkpoint {
+            crate_version,
+            config_sha256,
+            config_json,
+            round,
+            sim_time_s,
+            prefix_version,
+            transitions,
+            fleet_rng,
+            threads,
+            inflight,
+            pending,
+            params,
+            pool,
+            records,
+            strategy_name,
+            strategy_blob,
+            mid,
+        })
+    }
+
+    // ---- file I/O ------------------------------------------------------
+
+    /// Write the encoded checkpoint to `path` atomically (tmp + rename),
+    /// so a crash mid-write never leaves a torn checkpoint behind.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, self.encode())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming checkpoint into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read and decode a checkpoint file.
+    pub fn read(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    // ---- resume plumbing ----------------------------------------------
+
+    /// Reconstruct the [`RunConfig`] this checkpoint was taken under from
+    /// its embedded canonical JSON, and cross-check the embedded
+    /// `config_sha256` against the reconstruction — a fingerprint
+    /// disagreement names both hashes.
+    pub fn resolve_config(&self) -> Result<RunConfig> {
+        let v = crate::json::Value::parse(&self.config_json)
+            .context("checkpoint embeds unparseable config JSON")?;
+        let cfg = RunConfig::from_value(&v)?;
+        self.verify_config(&cfg)?;
+        Ok(cfg)
+    }
+
+    /// Error unless `cfg`'s fingerprint equals the checkpoint's embedded
+    /// `config_sha256`, naming both hashes. Thread count and checkpoint
+    /// sinks are excluded from the fingerprint (wall-clock knobs), so
+    /// resuming with a different `--threads` is legal by construction.
+    pub fn verify_config(&self, cfg: &RunConfig) -> Result<()> {
+        let resolved = config_sha256(cfg);
+        ensure!(
+            resolved == self.config_sha256,
+            "config fingerprint mismatch: checkpoint was taken under config_sha256 \
+             {} but the resolved config hashes to {resolved}",
+            self.config_sha256
+        );
+        Ok(())
+    }
+}
+
+// ---- sub-encoders ------------------------------------------------------
+
+fn encode_pool(e: &mut Enc, pool: &PoolCkptState) {
+    e.u64(pool.select_rng);
+    match &pool.kind {
+        PoolCkptKind::Eager(list) => {
+            e.u8(0);
+            e.usize(list.len());
+            for c in list {
+                encode_client(e, c);
+            }
+        }
+        PoolCkptKind::Lazy(l) => {
+            e.u8(1);
+            e.u64(l.tick);
+            e.usize(l.peak_resident);
+            e.u64(l.hits);
+            e.u64(l.misses);
+            e.u64(l.evictions);
+            e.usize(l.resident.len());
+            for (c, tick) in &l.resident {
+                encode_client(e, c);
+                e.u64(*tick);
+            }
+            e.usize(l.evicted.len());
+            for c in &l.evicted {
+                encode_client(e, c);
+            }
+        }
+    }
+}
+
+fn encode_client(e: &mut Enc, c: &ClientCkpt) {
+    e.usize(c.id);
+    e.u64(c.mem_rng);
+    e.usize(c.cursor);
+    e.u64(c.prefix_version);
+}
+
+fn decode_client(d: &mut Dec<'_>) -> Result<ClientCkpt> {
+    Ok(ClientCkpt {
+        id: d.usize()?,
+        mem_rng: d.u64()?,
+        cursor: d.usize()?,
+        prefix_version: d.u64()?,
+    })
+}
+
+fn decode_pool(d: &mut Dec<'_>) -> Result<PoolCkptState> {
+    let select_rng = d.u64()?;
+    let kind = match d.u8()? {
+        0 => {
+            let n = d.seq_len(32)?;
+            let mut list = Vec::with_capacity(n);
+            for _ in 0..n {
+                list.push(decode_client(d)?);
+            }
+            PoolCkptKind::Eager(list)
+        }
+        1 => {
+            let tick = d.u64()?;
+            let peak_resident = d.usize()?;
+            let hits = d.u64()?;
+            let misses = d.u64()?;
+            let evictions = d.u64()?;
+            let n = d.seq_len(40)?;
+            let mut resident = Vec::with_capacity(n);
+            for _ in 0..n {
+                let c = decode_client(d)?;
+                resident.push((c, d.u64()?));
+            }
+            let n = d.seq_len(32)?;
+            let mut evicted = Vec::with_capacity(n);
+            for _ in 0..n {
+                evicted.push(decode_client(d)?);
+            }
+            PoolCkptKind::Lazy(LazyCkpt {
+                tick,
+                peak_resident,
+                hits,
+                misses,
+                evictions,
+                resident,
+                evicted,
+            })
+        }
+        t => bail!("invalid pool kind tag {t}"),
+    };
+    Ok(PoolCkptState { select_rng, kind })
+}
+
+fn encode_record(e: &mut Enc, r: &RoundRecord) {
+    e.usize(r.round);
+    e.str(&r.stage);
+    e.usize(r.step);
+    e.f32(r.train_loss);
+    e.f32(r.train_acc);
+    e.f32(r.test_acc);
+    e.f64(r.effective_movement);
+    e.usize(r.participants);
+    e.usize(r.fallback_participants);
+    e.u64(r.bytes_up);
+    e.u64(r.bytes_down);
+    e.u64(r.client_mem_bytes);
+    e.f64(r.sim_time_s);
+    e.usize(r.stragglers);
+    e.usize(r.dropouts);
+    e.usize(r.late_merged);
+    e.usize(r.late_dropped);
+    e.f64(r.mean_staleness);
+    e.usize(r.projected_merged);
+    e.u64(r.projected_dropped_params);
+    e.f64(r.transition_staleness);
+    e.usize(r.interrupted);
+    e.usize(r.resumed);
+    e.usize(r.partial_merged);
+    e.f64(r.wasted_compute_s);
+}
+
+fn decode_record(d: &mut Dec<'_>) -> Result<RoundRecord> {
+    Ok(RoundRecord {
+        round: d.usize()?,
+        stage: d.str()?,
+        step: d.usize()?,
+        train_loss: d.f32()?,
+        train_acc: d.f32()?,
+        test_acc: d.f32()?,
+        effective_movement: d.f64()?,
+        participants: d.usize()?,
+        fallback_participants: d.usize()?,
+        bytes_up: d.u64()?,
+        bytes_down: d.u64()?,
+        client_mem_bytes: d.u64()?,
+        sim_time_s: d.f64()?,
+        stragglers: d.usize()?,
+        dropouts: d.usize()?,
+        late_merged: d.usize()?,
+        late_dropped: d.usize()?,
+        mean_staleness: d.f64()?,
+        projected_merged: d.usize()?,
+        projected_dropped_params: d.u64()?,
+        transition_staleness: d.f64()?,
+        interrupted: d.usize()?,
+        resumed: d.usize()?,
+        partial_merged: d.usize()?,
+        wasted_compute_s: d.f64()?,
+    })
+}
+
+fn encode_train_phase(e: &mut Enc, p: &TrainPhase) {
+    e.str(&p.stage);
+    e.usize(p.step);
+    e.usize(p.layout.frozen);
+    e.usize(p.layout.depth);
+    e.str(&p.train_artifact);
+    match &p.fallback_artifact {
+        None => e.u8(0),
+        Some(a) => {
+            e.u8(1);
+            e.str(a);
+        }
+    }
+    e.str(&p.eval_artifact);
+    e.usize(p.observe_params.len());
+    for s in &p.observe_params {
+        e.str(s);
+    }
+    e.f32(p.lr);
+    e.usize(p.max_rounds);
+    e.usize(p.min_rounds);
+    e.bool(p.em_gated);
+}
+
+fn decode_train_phase(d: &mut Dec<'_>) -> Result<TrainPhase> {
+    let stage = d.str()?;
+    let step = d.usize()?;
+    let layout =
+        crate::strategy::BlockLayout { frozen: d.usize()?, depth: d.usize()? };
+    let train_artifact = d.str()?;
+    let fallback_artifact = match d.u8()? {
+        0 => None,
+        1 => Some(d.str()?),
+        t => bail!("invalid option tag {t}"),
+    };
+    let eval_artifact = d.str()?;
+    let n = d.seq_len(8)?;
+    let mut observe_params = Vec::with_capacity(n);
+    for _ in 0..n {
+        observe_params.push(d.str()?);
+    }
+    Ok(TrainPhase {
+        stage,
+        step,
+        layout,
+        train_artifact,
+        fallback_artifact,
+        eval_artifact,
+        observe_params,
+        lr: d.f32()?,
+        max_rounds: d.usize()?,
+        min_rounds: d.usize()?,
+        em_gated: d.bool()?,
+    })
+}
+
+fn encode_detector(e: &mut Enc, s: &DetectorSnapshot) {
+    e.usize(s.deltas.len());
+    for v in &s.deltas {
+        e.f32s(v);
+    }
+    match &s.prev {
+        None => e.u8(0),
+        Some(v) => {
+            e.u8(1);
+            e.f32s(v);
+        }
+    }
+    e.f64s(&s.history);
+    e.usize(s.consecutive);
+}
+
+fn decode_detector(d: &mut Dec<'_>) -> Result<DetectorSnapshot> {
+    let n = d.seq_len(8)?;
+    let mut deltas = Vec::with_capacity(n);
+    for _ in 0..n {
+        deltas.push(d.f32s()?);
+    }
+    let prev = match d.u8()? {
+        0 => None,
+        1 => Some(d.f32s()?),
+        t => bail!("invalid option tag {t}"),
+    };
+    let history = d.f64s()?;
+    let consecutive = d.usize()?;
+    Ok(DetectorSnapshot { deltas, prev, history, consecutive })
+}
+
+// ---- gather / apply ----------------------------------------------------
+
+/// Snapshot the complete run state of `ctx` (plus the driving strategy's
+/// cursor and the within-phase position `mid`) into a [`Checkpoint`].
+/// Pure observation: nothing in the run advances.
+pub fn gather(
+    ctx: &ServerCtx<'_>,
+    strategy: &dyn MemoryStrategy,
+    mid: Option<MidPhase>,
+) -> Checkpoint {
+    let mut pending: Vec<PendingUpdate> = ctx.pending.values().cloned().collect();
+    pending.sort_unstable_by_key(|p| p.client);
+    let names: Vec<String> = ctx.store.names().cloned().collect();
+    let params = names
+        .into_iter()
+        .map(|name| {
+            let t = ctx.store.get(&name).expect("name just listed");
+            (name, t.shape.clone(), t.data.clone())
+        })
+        .collect();
+    Checkpoint {
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        config_sha256: config_sha256(&ctx.cfg),
+        config_json: config_value(&ctx.cfg).to_json(),
+        round: ctx.round,
+        sim_time_s: ctx.sim_time_s,
+        prefix_version: ctx.prefix_version,
+        transitions: ctx.transitions.entries().to_vec(),
+        fleet_rng: ctx.fleet_rng.state(),
+        threads: ctx.engine.threads(),
+        inflight: ctx.engine.inflight().to_vec(),
+        pending,
+        params,
+        pool: ctx.pool.export_state(),
+        records: ctx.metrics.records.clone(),
+        strategy_name: strategy.name().to_string(),
+        strategy_blob: strategy.save_state(),
+        mid,
+    }
+}
+
+/// Reposition a freshly constructed `ctx` (built from the checkpoint's
+/// resolved config) at the checkpointed round boundary: clock, counters,
+/// transition log, rng streams, in-flight queue, pending buffers,
+/// parameter store, pool residues, and record history. After this call
+/// the run continues bit-identically to the uninterrupted original.
+pub fn apply_to_ctx(ck: &Checkpoint, ctx: &mut ServerCtx<'_>) -> Result<()> {
+    let fleet = ctx.pool.len();
+    for u in &ck.inflight {
+        ensure!(u.client < fleet, "in-flight upload for client {} of {fleet}", u.client);
+    }
+    for p in &ck.pending {
+        ensure!(p.client < fleet, "pending update for client {} of {fleet}", p.client);
+    }
+    ensure!(
+        ck.params.len() == ctx.store.len(),
+        "checkpoint carries {} tensors, the model has {}",
+        ck.params.len(),
+        ctx.store.len()
+    );
+    for (name, shape, data) in &ck.params {
+        let have = ctx
+            .store
+            .get(name)
+            .with_context(|| format!("checkpoint tensor `{name}` not in the model"))?;
+        ensure!(
+            have.shape == *shape && have.data.len() == data.len(),
+            "checkpoint tensor `{name}` has shape {shape:?}, model expects {:?}",
+            have.shape
+        );
+    }
+    for (name, shape, data) in &ck.params {
+        ctx.store.set(name, Tensor { shape: shape.clone(), data: data.clone() });
+    }
+    ctx.pool.import_state(&ck.pool)?;
+    ctx.round = ck.round;
+    ctx.sim_time_s = ck.sim_time_s;
+    ctx.prefix_version = ck.prefix_version;
+    ctx.transitions = TransitionLog::from_entries(ck.transitions.clone());
+    ctx.fleet_rng = Rng::from_state(ck.fleet_rng);
+    ctx.engine.restore_inflight(ck.inflight.clone());
+    ctx.pending = ck.pending.iter().map(|p| (p.client, p.clone())).collect();
+    for r in &ck.records {
+        ctx.metrics.push(r.clone());
+    }
+    Ok(())
+}
+
+// ---- periodic sink -----------------------------------------------------
+
+/// Where and how often a run writes checkpoints, resolved from
+/// `--checkpoint <path>` / `--checkpoint-every <rounds>`. A literal
+/// `{round}` in the path expands to the round index (one file per
+/// boundary); without it the same file is atomically overwritten.
+#[derive(Debug, Clone)]
+pub struct CkptSink {
+    path: String,
+    every: usize,
+}
+
+impl CkptSink {
+    /// The run's sink, or `None` when checkpointing is off. Errors on an
+    /// invalid cadence (`--checkpoint-every 0`).
+    pub fn from_cfg(cfg: &RunConfig) -> Result<Option<CkptSink>> {
+        match cfg.checkpoint_plan()? {
+            Some((path, every)) => Ok(Some(CkptSink { path, every })),
+            None => Ok(None),
+        }
+    }
+
+    /// A sink writing to `path` every `every` rounds (for tests/examples).
+    pub fn new(path: impl Into<String>, every: usize) -> Self {
+        CkptSink { path: path.into(), every: every.max(1) }
+    }
+
+    /// Whether a checkpoint is due after completing `rounds_done` rounds.
+    pub fn due(&self, rounds_done: usize) -> bool {
+        rounds_done > 0 && rounds_done % self.every == 0
+    }
+
+    /// The file path for the boundary after `rounds_done` rounds.
+    pub fn path_for(&self, rounds_done: usize) -> std::path::PathBuf {
+        std::path::PathBuf::from(self.path.replace("{round}", &rounds_done.to_string()))
+    }
+
+    /// Write `ck` to [`Self::path_for`] the boundary.
+    pub fn write(&self, ck: &Checkpoint, rounds_done: usize) -> Result<()> {
+        ck.write(&self.path_for(rounds_done))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small but fully populated checkpoint exercising every encoder
+    /// branch (lazy pool, pending tensors, mid train-phase, NaN floats).
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            config_sha256: "c0ffee".into(),
+            config_json: "{\"seed\":\"42\"}".into(),
+            round: 7,
+            sim_time_s: 123.456,
+            prefix_version: 2,
+            transitions: vec![
+                Transition { version: 1, round: 2, sim_time_s: 10.0 },
+                Transition { version: 2, round: 5, sim_time_s: 60.5 },
+            ],
+            fleet_rng: 0xdead_beef,
+            threads: 4,
+            inflight: vec![InFlightUpload { client: 3, arrive_s: 130.25, dispatch_round: 6 }],
+            pending: vec![PendingUpdate {
+                client: 3,
+                artifact: "block2".into(),
+                prefix_version: 2,
+                dispatch_round: 6,
+                weight: 41.0,
+                partial: true,
+                tensors: vec![vec![1.0, -2.5], vec![f32::NAN]],
+                bytes_up: 1024,
+            }],
+            params: vec![
+                ("a/w".into(), vec![2, 2], vec![0.0, 1.0, 2.0, 3.0]),
+                ("b/w".into(), vec![3], vec![-1.0, f32::INFINITY, 0.5]),
+            ],
+            pool: PoolCkptState {
+                select_rng: 99,
+                kind: PoolCkptKind::Lazy(LazyCkpt {
+                    tick: 31,
+                    peak_resident: 4,
+                    hits: 20,
+                    misses: 11,
+                    evictions: 7,
+                    resident: vec![(
+                        ClientCkpt { id: 1, mem_rng: 5, cursor: 2, prefix_version: 1 },
+                        30,
+                    )],
+                    evicted: vec![ClientCkpt { id: 4, mem_rng: 9, cursor: 0, prefix_version: 2 }],
+                }),
+            },
+            records: vec![RoundRecord {
+                round: 6,
+                stage: "shrink-train".into(),
+                step: 1,
+                train_loss: 1.5,
+                train_acc: 0.3,
+                test_acc: f32::NAN,
+                effective_movement: 0.8,
+                participants: 9,
+                fallback_participants: 1,
+                bytes_up: 100,
+                bytes_down: 200,
+                client_mem_bytes: 300,
+                sim_time_s: 120.0,
+                stragglers: 1,
+                dropouts: 0,
+                late_merged: 2,
+                late_dropped: 0,
+                mean_staleness: 1.5,
+                projected_merged: 0,
+                projected_dropped_params: 0,
+                transition_staleness: 0.0,
+                interrupted: 0,
+                resumed: 0,
+                partial_merged: 1,
+                wasted_compute_s: 3.25,
+            }],
+            strategy_name: "ProFL".into(),
+            strategy_blob: vec![1, 2, 3],
+            mid: Some(MidPhase::Train {
+                phase: TrainPhase {
+                    stage: "shrink-train".into(),
+                    step: 1,
+                    layout: crate::strategy::BlockLayout { frozen: 0, depth: 3 },
+                    train_artifact: "prefix3".into(),
+                    fallback_artifact: Some("op".into()),
+                    eval_artifact: "full".into(),
+                    observe_params: vec!["a/w".into()],
+                    lr: 0.08,
+                    max_rounds: 40,
+                    min_rounds: 10,
+                    em_gated: true,
+                },
+                detector: DetectorSnapshot {
+                    deltas: vec![vec![0.1, -0.1]],
+                    prev: Some(vec![1.0, 2.0]),
+                    history: vec![0.9, 0.7],
+                    consecutive: 1,
+                },
+                used: 3,
+                froze: false,
+            }),
+        }
+    }
+
+    #[test]
+    fn encode_decode_encode_is_byte_idempotent() {
+        let ck = sample();
+        let b1 = ck.encode();
+        let ck2 = Checkpoint::decode(&b1).unwrap();
+        let b2 = ck2.encode();
+        assert_eq!(b1, b2, "serialize→deserialize→serialize changed bytes");
+    }
+
+    #[test]
+    fn every_truncation_errs_cleanly() {
+        let bytes = sample().encode();
+        for n in 0..bytes.len() {
+            assert!(Checkpoint::decode(&bytes[..n]).is_err(), "prefix of {n} bytes accepted");
+        }
+    }
+
+    #[test]
+    fn digest_detects_payload_bit_flips() {
+        let mut bytes = sample().encode();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let err = Checkpoint::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "unexpected error: {err}");
+        assert!(err.matches(char::is_alphanumeric).count() > 0);
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_named() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert!(Checkpoint::decode(&bytes).unwrap_err().to_string().contains("magic"));
+        let mut bytes = sample().encode();
+        bytes[8] = 0xff; // format version
+        let err = Checkpoint::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint format"), "{err}");
+    }
+
+    #[test]
+    fn crate_version_skew_is_a_readable_error() {
+        let mut ck = sample();
+        ck.crate_version = "0.0.0-other".into();
+        let err = Checkpoint::decode(&ck.encode()).unwrap_err().to_string();
+        assert!(err.contains("0.0.0-other"), "must name the writing version: {err}");
+        assert!(err.contains(env!("CARGO_PKG_VERSION")), "must name our version: {err}");
+    }
+
+    #[test]
+    fn config_mismatch_names_both_hashes() {
+        let ck = sample();
+        let cfg = RunConfig::default();
+        let err = ck.verify_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("c0ffee"), "must name the stored hash: {err}");
+        assert!(err.contains(&config_sha256(&cfg)), "must name the resolved hash: {err}");
+    }
+
+    #[test]
+    fn oversized_length_prefix_errs_before_allocating() {
+        // A corrupted u64 length prefix claiming ~2^63 elements must be
+        // rejected by the remaining-bytes bound, not attempted.
+        let mut d = Dec::new(&[0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x7f, 1, 2, 3]);
+        assert!(d.f32s().is_err());
+        let mut d = Dec::new(&[0xff; 16]);
+        assert!(d.str().is_err());
+    }
+
+    #[test]
+    fn strict_scalars_reject_garbage() {
+        let mut d = Dec::new(&[2]);
+        assert!(d.bool().is_err());
+        let mut e = Enc::new();
+        e.str("ok");
+        let mut bytes = e.finish();
+        bytes[8] = 0xff; // first content byte -> invalid UTF-8 start
+        let mut d = Dec::new(&bytes);
+        assert!(d.str().is_err());
+    }
+
+    #[test]
+    fn payload_length_disagreement_is_rejected() {
+        let mut bytes = sample().encode();
+        bytes.push(0); // trailing garbage after the payload
+        let err = Checkpoint::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("payload length"), "{err}");
+    }
+
+    #[test]
+    fn sink_cadence_and_round_templating() {
+        let sink = CkptSink::new("/tmp/run-{round}.ckpt", 3);
+        assert!(!sink.due(0));
+        assert!(!sink.due(2));
+        assert!(sink.due(3));
+        assert!(sink.due(6));
+        assert_eq!(sink.path_for(6), std::path::PathBuf::from("/tmp/run-6.ckpt"));
+        let plain = CkptSink::new("/tmp/run.ckpt", 1);
+        assert!(plain.due(1));
+        assert_eq!(plain.path_for(5), std::path::PathBuf::from("/tmp/run.ckpt"));
+    }
+}

@@ -37,6 +37,7 @@ use crate::fleet::{DeviceProfile, FleetProfileConfig};
 use crate::manifest::MemCoeffs;
 use crate::memory::{can_train, DeviceMemory, MemoryConfig};
 use crate::rng::Rng;
+use anyhow::{bail, ensure, Result};
 use std::collections::HashMap;
 
 /// One simulated device.
@@ -200,6 +201,66 @@ pub struct PoolStats {
     pub materialized: usize,
     /// High-water mark of simultaneously materialized clients.
     pub peak_materialized: usize,
+}
+
+/// One client's checkpointed mutable residue: everything about the
+/// client that is NOT a pure function of `(seed, id)` — the contention
+/// rng position, the shard batch cursor, and the cached prefix version.
+/// The budget/profile/shard contents are re-derived from the build seed
+/// on import (see `docs/CHECKPOINT.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClientCkpt {
+    /// Stable pool index.
+    pub id: usize,
+    /// Contention rng stream state ([`Rng::state`]).
+    pub mem_rng: u64,
+    /// Shard batch-cycling cursor.
+    pub cursor: usize,
+    /// Cached frozen-prefix version (`u64::MAX` = never downloaded).
+    pub prefix_version: u64,
+}
+
+/// A lazy pool's checkpointed cache state: residues for both resident and
+/// evicted clients, the LRU clock, and the cache telemetry counters.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct LazyCkpt {
+    /// Monotone LRU access counter.
+    pub tick: u64,
+    /// High-water mark of simultaneously materialized clients.
+    pub peak_resident: usize,
+    /// Touches served by a resident client.
+    pub hits: u64,
+    /// Touches that had to (re)materialize the client.
+    pub misses: u64,
+    /// Residents displaced to the residue map.
+    pub evictions: u64,
+    /// Resident clients (sorted by id) with their LRU ticks.
+    pub resident: Vec<(ClientCkpt, u64)>,
+    /// Evicted residues (sorted by id).
+    pub evicted: Vec<ClientCkpt>,
+}
+
+/// Which storage mode a [`PoolCkptState`] snapshotted, plus its per-client
+/// residues. Import rejects a kind that disagrees with the pool being
+/// restored into — the storage mode is part of the resolved config.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolCkptKind {
+    /// Eager pool: one residue per client, in id order.
+    Eager(Vec<ClientCkpt>),
+    /// Lazy pool: cache state + residues for touched clients only.
+    Lazy(LazyCkpt),
+}
+
+/// A [`ClientPool`]'s complete checkpoint image. Everything else about
+/// the pool (budgets, profiles, shard bounds) is a pure function of the
+/// run config and is rebuilt by the normal construction path on resume;
+/// [`ClientPool::import_state`] then repositions the mutable streams.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolCkptState {
+    /// Selection rng stream state ([`Rng::state`]).
+    pub select_rng: u64,
+    /// Storage-mode-specific residues.
+    pub kind: PoolCkptKind,
 }
 
 /// Outcome of one round's selection.
@@ -501,6 +562,114 @@ impl ClientPool {
             }
         }
     }
+
+    /// Snapshot every mutable stream in the pool — the selection rng, each
+    /// client's contention rng / shard cursor / prefix version, and (lazy
+    /// pools) the cache state — in deterministic (id-sorted) order, so two
+    /// snapshots of identical pools are identical values.
+    pub fn export_state(&self) -> PoolCkptState {
+        let client_ckpt = |c: &Client| ClientCkpt {
+            id: c.id,
+            mem_rng: c.memory.rng_state(),
+            cursor: c.shard.cursor(),
+            prefix_version: c.prefix_version,
+        };
+        let kind = match &self.storage {
+            Storage::Eager(v) => PoolCkptKind::Eager(v.iter().map(client_ckpt).collect()),
+            Storage::Lazy(l) => {
+                let mut resident: Vec<(ClientCkpt, u64)> =
+                    l.resident.values().map(|r| (client_ckpt(&r.client), r.tick)).collect();
+                resident.sort_unstable_by_key(|(c, _)| c.id);
+                let mut evicted: Vec<ClientCkpt> = l
+                    .evicted
+                    .iter()
+                    .map(|(&id, res)| ClientCkpt {
+                        id,
+                        mem_rng: res.memory.rng_state(),
+                        cursor: res.cursor,
+                        prefix_version: res.prefix_version,
+                    })
+                    .collect();
+                evicted.sort_unstable_by_key(|c| c.id);
+                PoolCkptKind::Lazy(LazyCkpt {
+                    tick: l.tick,
+                    peak_resident: l.peak_resident,
+                    hits: l.hits,
+                    misses: l.misses,
+                    evictions: l.evictions,
+                    resident,
+                    evicted,
+                })
+            }
+        };
+        PoolCkptState { select_rng: self.rng.state(), kind }
+    }
+
+    /// Reposition a freshly built pool at a checkpointed state. The pool
+    /// must have been built by the same recipe (config + seed + storage
+    /// mode) that produced the snapshot; every subsequent selection /
+    /// contention / shard draw is then bit-identical to the pool the
+    /// snapshot was taken from. Errors (never panics) on a snapshot that
+    /// does not fit this pool's shape.
+    pub fn import_state(&mut self, state: &PoolCkptState) -> Result<()> {
+        let n = self.len();
+        match (&mut self.storage, &state.kind) {
+            (Storage::Eager(v), PoolCkptKind::Eager(list)) => {
+                ensure!(
+                    list.len() == v.len(),
+                    "checkpoint has {} client residues, pool has {} clients",
+                    list.len(),
+                    v.len()
+                );
+                for (i, c) in list.iter().enumerate() {
+                    ensure!(c.id == i, "client residue {i} carries id {} (must be in id order)", c.id);
+                    v[i].memory.set_rng_state(c.mem_rng);
+                    v[i].shard.set_cursor(c.cursor);
+                    v[i].prefix_version = c.prefix_version;
+                }
+            }
+            (Storage::Lazy(l), PoolCkptKind::Lazy(ck)) => {
+                l.resident.clear();
+                l.evicted.clear();
+                let mem_cfg = self.mem_cfg;
+                // Stage every residue (resident + evicted) in the residue
+                // map, then re-materialize the residents through the normal
+                // rebuild path so budgets/profiles/shards come from the
+                // pure recipes.
+                for c in ck.evicted.iter().chain(ck.resident.iter().map(|(c, _)| c)) {
+                    ensure!(c.id < n, "residue for client {} but the fleet has {n} clients", c.id);
+                    let mut mem_rng = Rng::from_state(l.mem_state0);
+                    mem_rng.skip(c.id as u64);
+                    let mut memory = DeviceMemory::sample(&mem_cfg, &mut mem_rng, c.id);
+                    memory.set_rng_state(c.mem_rng);
+                    let res =
+                        Residue { memory, cursor: c.cursor, prefix_version: c.prefix_version };
+                    ensure!(
+                        l.evicted.insert(c.id, res).is_none(),
+                        "duplicate residue for client {}",
+                        c.id
+                    );
+                }
+                for (c, tick) in &ck.resident {
+                    let client = l.rebuild(c.id, &mem_cfg);
+                    l.resident.insert(c.id, Resident { client, tick: *tick });
+                }
+                l.tick = ck.tick;
+                l.peak_resident = ck.peak_resident;
+                l.hits = ck.hits;
+                l.misses = ck.misses;
+                l.evictions = ck.evictions;
+            }
+            (Storage::Eager(_), PoolCkptKind::Lazy(_)) => {
+                bail!("checkpoint snapshotted a lazy pool but the resolved config builds an eager one")
+            }
+            (Storage::Lazy(_), PoolCkptKind::Eager(_)) => {
+                bail!("checkpoint snapshotted an eager pool but the resolved config builds a lazy one")
+            }
+        }
+        self.rng = Rng::from_state(state.select_rng);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -762,6 +931,68 @@ mod tests {
         assert_eq!(s.peak_materialized, 4);
         // Stats reads are pure: repeated reads don't drift.
         assert_eq!(lazy.stats(), s);
+    }
+
+    #[test]
+    fn export_import_resumes_both_storage_modes_bit_for_bit() {
+        // Advance a pool mid-run, snapshot it, import the snapshot into a
+        // freshly built pool, and check the continued selection /
+        // contention streams equal an uninterrupted reference — for both
+        // storage modes. Also: export after import is value-identical
+        // (snapshot idempotence).
+        for lazy in [false, true] {
+            let build = || {
+                if lazy {
+                    lazy_pool_with(13, "mobile", 8)
+                } else {
+                    pool_with(13, "mobile")
+                }
+            };
+            let mut reference = build();
+            let mut live = build();
+            for _ in 0..4 {
+                reference.select(7, &coeffs(400));
+                live.select(7, &coeffs(400));
+            }
+            let state = live.export_state();
+            let mut resumed = build();
+            resumed.import_state(&state).unwrap();
+            assert_eq!(resumed.export_state(), state, "lazy={lazy}: import/export drifted");
+            for round in 0..6 {
+                let busy: Vec<usize> = if round % 2 == 0 { vec![] } else { vec![2, 9] };
+                let a = reference.select_excluding(7, &coeffs(400), &busy);
+                let b = resumed.select_excluding(7, &coeffs(400), &busy);
+                assert_eq!(a.availability, b.availability, "lazy={lazy} round {round}");
+                assert_eq!(a.trainers, b.trainers, "lazy={lazy} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn import_rejects_misshapen_snapshots() {
+        let mut p = pool(14);
+        // Wrong storage kind.
+        let lazy_state = lazy_pool_with(14, "uniform", 4).export_state();
+        assert!(p.import_state(&lazy_state).is_err());
+        // Wrong fleet size.
+        let mut state = p.export_state();
+        if let PoolCkptKind::Eager(list) = &mut state.kind {
+            list.pop();
+        }
+        assert!(p.import_state(&state).is_err());
+        // Out-of-range / duplicate lazy residues.
+        let mut lp = lazy_pool_with(14, "uniform", 4);
+        let mut bad = lazy_state.clone();
+        if let PoolCkptKind::Lazy(l) = &mut bad.kind {
+            l.evicted.push(ClientCkpt { id: 10_000, mem_rng: 1, cursor: 0, prefix_version: 0 });
+        }
+        assert!(lp.import_state(&bad).is_err());
+        let mut dup = lazy_state.clone();
+        if let PoolCkptKind::Lazy(l) = &mut dup.kind {
+            let c = ClientCkpt { id: 1, mem_rng: 1, cursor: 0, prefix_version: 0 };
+            l.evicted = vec![c, c];
+        }
+        assert!(lp.import_state(&dup).is_err());
     }
 
     #[test]

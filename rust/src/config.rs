@@ -58,6 +58,18 @@ pub struct RunConfig {
     /// unset path is bit-for-bit inert. CLI: `--telemetry-jsonl` /
     /// `PROFL_TELEMETRY_JSONL`.
     pub telemetry_jsonl: Option<String>,
+    /// Checkpoint file path (see `docs/CHECKPOINT.md`): when set, the
+    /// run serializes its complete state here at round boundaries; a
+    /// literal `{round}` in the path expands to the round index. `None`
+    /// (the default) disables checkpointing. Like `fleet.threads`, this
+    /// is a wall-clock knob excluded from `telemetry::config_value` and
+    /// therefore from `config_sha256` — checkpointed and plain runs have
+    /// the same fingerprint. CLI: `--checkpoint`.
+    pub checkpoint: Option<String>,
+    /// Checkpoint cadence: write every this many completed rounds
+    /// (default 1 = every round boundary). Inert unless `checkpoint` is
+    /// set; must be >= 1. CLI: `--checkpoint-every`.
+    pub checkpoint_every: usize,
 }
 
 /// Fleet-dynamics section: drives the `fleet` discrete-event simulator
@@ -281,6 +293,8 @@ impl Default for RunConfig {
             acc_tail: 10,
             seed: 42,
             telemetry_jsonl: None,
+            checkpoint: None,
+            checkpoint_every: 1,
         }
     }
 }
@@ -414,6 +428,113 @@ impl RunConfig {
                 }
             }
         }
+    }
+
+    /// Resolve the checkpoint sink knobs: `Ok(Some((path, every)))` when
+    /// `checkpoint` is set, `Ok(None)` when checkpointing is off, and an
+    /// error for a zero cadence (which could never fire). Both knobs are
+    /// wall-clock-only — excluded from `telemetry::config_value` and so
+    /// from `config_sha256` (see `docs/CHECKPOINT.md`).
+    pub fn checkpoint_plan(&self) -> Result<Option<(String, usize)>> {
+        if self.checkpoint_every == 0 {
+            anyhow::bail!("checkpoint-every must be >= 1, got 0");
+        }
+        Ok(self.checkpoint.as_ref().map(|p| (p.clone(), self.checkpoint_every)))
+    }
+
+    /// Reconstruct a `RunConfig` from its canonical JSON image
+    /// (`telemetry::config_value`) — the inverse `profl resume` uses to
+    /// rebuild the run a checkpoint was taken under. Wall-clock knobs
+    /// absent from the image (`fleet.threads`, `checkpoint`,
+    /// `checkpoint_every`) take their defaults; everything the
+    /// `config_sha256` fingerprint covers round-trips exactly
+    /// (`config_value(from_value(config_value(c))) == config_value(c)`,
+    /// pinned by a test below). Strict: missing or mistyped keys error.
+    pub fn from_value(v: &crate::json::Value) -> Result<RunConfig> {
+        use crate::json::Value;
+        fn opt_f64(v: &Value, key: &str) -> Result<Option<f64>> {
+            match v.get(key)? {
+                Value::Null => Ok(None),
+                x => Ok(Some(x.as_f64()?)),
+            }
+        }
+        fn opt_usize(v: &Value, key: &str) -> Result<Option<usize>> {
+            match v.get(key)? {
+                Value::Null => Ok(None),
+                x => Ok(Some(x.as_usize()?)),
+            }
+        }
+        fn opt_str(v: &Value, key: &str) -> Result<Option<String>> {
+            match v.get(key)? {
+                Value::Null => Ok(None),
+                x => Ok(Some(x.as_str()?.to_string())),
+            }
+        }
+        let fz = v.get("freeze")?;
+        let mem = v.get("memory")?;
+        let fl = v.get("fleet")?;
+        let st = v.get("strategy")?;
+        let seed: u64 = v
+            .get("seed")?
+            .as_str()?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad seed string: {e}"))?;
+        Ok(RunConfig {
+            model_tag: v.get("model_tag")?.as_str()?.to_string(),
+            num_clients: v.get("num_clients")?.as_usize()?,
+            per_round: v.get("per_round")?.as_usize()?,
+            total_samples: v.get("total_samples")?.as_usize()?,
+            dirichlet_alpha: opt_f64(v, "dirichlet_alpha")?,
+            lr: v.get("lr")?.as_f64()? as f32,
+            lr_step_decay: v.get("lr_step_decay")?.as_f64()? as f32,
+            eval_every: v.get("eval_every")?.as_usize()?,
+            max_rounds_per_step: v.get("max_rounds_per_step")?.as_usize()?,
+            min_rounds_per_step: v.get("min_rounds_per_step")?.as_usize()?,
+            max_rounds_total: v.get("max_rounds_total")?.as_usize()?,
+            distill_rounds: v.get("distill_rounds")?.as_usize()?,
+            shrinking: v.get("shrinking")?.as_bool()?,
+            freeze: FreezeCfg {
+                window_h: fz.get("window_h")?.as_usize()?,
+                phi: fz.get("phi")?.as_f64()?,
+                patience_w: fz.get("patience_w")?.as_usize()?,
+                fit_points: fz.get("fit_points")?.as_usize()?,
+                min_observations: fz.get("min_observations")?.as_usize()?,
+            },
+            memory: MemCfg {
+                budget_min_mb: mem.get("budget_min_mb")?.as_u64()?,
+                budget_max_mb: mem.get("budget_max_mb")?.as_u64()?,
+                contention_lo: mem.get("contention_lo")?.as_f64()?,
+                accounting_batch: mem.get("accounting_batch")?.as_u64()?,
+            },
+            fleet: FleetCfg {
+                profile: fl.get("profile")?.as_str()?.to_string(),
+                round_policy: fl.get("round_policy")?.as_str()?.to_string(),
+                deadline_s: fl.get("deadline_s")?.as_f64()?,
+                over_select_extra: fl.get("over_select_extra")?.as_usize()?,
+                dropout_p: opt_f64(fl, "dropout_p")?,
+                buffer_k: opt_usize(fl, "buffer_k")?,
+                staleness_alpha: fl.get("staleness_alpha")?.as_f64()?,
+                max_staleness: fl.get("max_staleness")?.as_usize()?,
+                stale_projection: fl.get("stale_projection")?.as_str()?.to_string(),
+                projection_decay: fl.get("projection_decay")?.as_f64()?,
+                churn_policy: fl.get("churn_policy")?.as_str()?.to_string(),
+                churn_epochs: fl.get("churn_epochs")?.as_usize()?,
+                trace_period_s: opt_f64(fl, "trace_period_s")?,
+                trace_duty: opt_f64(fl, "trace_duty")?,
+                lazy_pool: fl.get("lazy_pool")?.as_bool()?,
+                threads: crate::fleet::default_threads(),
+            },
+            strategy: StrategyCfg {
+                name: opt_str(st, "name")?,
+                elastic_phases: opt_usize(st, "elastic_phases")?,
+                freeze_step_cap: opt_usize(st, "freeze_step_cap")?,
+            },
+            acc_tail: v.get("acc_tail")?.as_usize()?,
+            seed,
+            telemetry_jsonl: opt_str(v, "telemetry_jsonl")?,
+            checkpoint: None,
+            checkpoint_every: 1,
+        })
     }
 
     /// A smoke-test profile: tiny rounds, quick everything. Used by
@@ -706,5 +827,77 @@ mod tests {
         assert!(c.fleet_profile().is_err(), "negative dropout");
         c.fleet.dropout_p = Some(0.3);
         assert_eq!(c.fleet_profile().unwrap().dropout_p, 0.3);
+    }
+
+    #[test]
+    fn checkpoint_plan_resolves_and_validates() {
+        let mut c = RunConfig::default();
+        // Backwards-compatible default: checkpointing off.
+        assert_eq!(c.checkpoint_plan().unwrap(), None);
+        c.checkpoint = Some("/tmp/run.ckpt".into());
+        assert_eq!(c.checkpoint_plan().unwrap(), Some(("/tmp/run.ckpt".into(), 1)));
+        c.checkpoint_every = 5;
+        assert_eq!(c.checkpoint_plan().unwrap(), Some(("/tmp/run.ckpt".into(), 5)));
+        c.checkpoint_every = 0;
+        assert!(c.checkpoint_plan().is_err(), "a zero cadence can never fire");
+        // The cadence is validated even with no path — a nonsense value
+        // is a config bug whatever consumes it.
+        c.checkpoint = None;
+        assert!(c.checkpoint_plan().is_err());
+    }
+
+    #[test]
+    fn from_value_inverts_config_value() {
+        // The resume path reconstructs the config from the checkpoint's
+        // embedded canonical JSON; everything config_sha256 covers must
+        // round-trip exactly — including Options in both states and a
+        // seed that does not fit an f64 mantissa.
+        let mut c = RunConfig::default();
+        let rt = RunConfig::from_value(&crate::telemetry::config_value(&c)).unwrap();
+        assert_eq!(
+            crate::telemetry::config_value(&c).to_json(),
+            crate::telemetry::config_value(&rt).to_json()
+        );
+        c.dirichlet_alpha = Some(0.3);
+        c.seed = u64::MAX - 7; // needs the string channel, not f64
+        c.lr = 0.017;
+        c.telemetry_jsonl = Some("t.jsonl".into());
+        c.fleet.round_policy = "async:3".into();
+        c.fleet.buffer_k = Some(6);
+        c.fleet.dropout_p = Some(0.15);
+        c.fleet.trace_period_s = Some(120.0);
+        c.fleet.trace_duty = Some(0.5);
+        c.fleet.lazy_pool = true;
+        c.strategy.name = Some("elastic".into());
+        c.strategy.elastic_phases = Some(3);
+        c.strategy.freeze_step_cap = Some(8);
+        let rt = RunConfig::from_value(&crate::telemetry::config_value(&c)).unwrap();
+        assert_eq!(
+            crate::telemetry::config_value(&c).to_json(),
+            crate::telemetry::config_value(&rt).to_json()
+        );
+        assert_eq!(rt.seed, c.seed);
+        assert_eq!(rt.lr.to_bits(), c.lr.to_bits());
+        // Strictness: a truncated image errors instead of defaulting.
+        let v = crate::json::Value::parse("{\"model_tag\":\"m\"}").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+        let v = crate::json::Value::parse("[1,2]").unwrap();
+        assert!(RunConfig::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn checkpoint_knobs_are_hash_neutral() {
+        // Like threads, the checkpoint sink is a wall-clock knob: turning
+        // it on must not change the run's config fingerprint, or a
+        // resumed run could never verify against a plain run's manifest.
+        let plain = RunConfig::default();
+        let mut ck = RunConfig::default();
+        ck.checkpoint = Some("/tmp/run-{round}.ckpt".into());
+        ck.checkpoint_every = 7;
+        ck.fleet.threads = plain.fleet.threads + 3;
+        assert_eq!(
+            crate::telemetry::config_sha256(&plain),
+            crate::telemetry::config_sha256(&ck)
+        );
     }
 }

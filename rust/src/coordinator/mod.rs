@@ -60,7 +60,9 @@ pub const TEST_BATCHES: usize = 8;
 
 /// A straggler's trained-but-not-yet-merged update, buffered server-side
 /// while its upload is in flight across rounds (async policy). The
-/// version stamps decide mergeability on arrival.
+/// version stamps decide mergeability on arrival. `Clone` exists for the
+/// checkpoint writer, which snapshots the buffer without draining it.
+#[derive(Clone)]
 pub struct PendingUpdate {
     /// Owning client's pool index.
     pub client: usize,

@@ -919,6 +919,15 @@ impl FleetEngine {
         &self.inflight
     }
 
+    /// Replace the cross-round in-flight queue with a checkpointed one
+    /// (in the exact order [`Self::inflight`] reported it). Together with
+    /// the caller's rng stream position this restores the engine's
+    /// complete round-spanning state — the per-round scratch is re-armed
+    /// at the top of every round and carries nothing across rounds.
+    pub fn restore_inflight(&mut self, inflight: Vec<InFlightUpload>) {
+        self.inflight = inflight;
+    }
+
     /// Peak event-queue depth of the most recent [`Self::simulate_round`]
     /// (0 before the first round). Pure observation for the telemetry
     /// stream — the simulation never reads it.

@@ -72,6 +72,17 @@ impl TransitionLog {
         self.entries.push(Transition { version, round, sim_time_s });
     }
 
+    /// Rebuild a log from previously recorded entries (checkpoint
+    /// resume). Entries must be monotone in version/round/time, exactly
+    /// as [`Self::entries`] returned them; debug builds assert it.
+    pub fn from_entries(entries: Vec<Transition>) -> Self {
+        let mut log = TransitionLog::new();
+        for t in entries {
+            log.record(t.version, t.round, t.sim_time_s);
+        }
+        log
+    }
+
     /// All recorded transitions, oldest first.
     pub fn entries(&self) -> &[Transition] {
         &self.entries
@@ -244,6 +255,44 @@ impl FreezeDetector {
     pub fn consecutive(&self) -> usize {
         self.consecutive
     }
+
+    /// The detector's complete mutable state, for checkpointing. The
+    /// [`FreezeConfig`] is *not* part of the snapshot — it is derived
+    /// from the run config and re-supplied to [`Self::restore`].
+    pub fn snapshot(&self) -> DetectorSnapshot {
+        DetectorSnapshot {
+            deltas: self.em.deltas.iter().cloned().collect(),
+            prev: self.em.prev.clone(),
+            history: self.history.clone(),
+            consecutive: self.consecutive,
+        }
+    }
+
+    /// Rebuild a detector mid-phase from a [`Self::snapshot`]. The next
+    /// `observe` of the restored detector is bit-identical to the next
+    /// `observe` of the original.
+    pub fn restore(cfg: FreezeConfig, snap: DetectorSnapshot) -> Self {
+        let mut em = EffectiveMovement::new(cfg.window_h);
+        em.deltas = snap.deltas.into_iter().collect();
+        em.prev = snap.prev;
+        FreezeDetector { cfg, em, history: snap.history, consecutive: snap.consecutive }
+    }
+}
+
+/// A [`FreezeDetector`]'s mutable state at a round boundary — the EM
+/// window deltas, the previous observed vector, the EM series, and the
+/// patience counter. Serialized into checkpoints so a resumed run makes
+/// the same freeze decisions at the same rounds (`docs/CHECKPOINT.md`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DetectorSnapshot {
+    /// The sliding window's retained deltas, oldest first.
+    pub deltas: Vec<Vec<f32>>,
+    /// The last observed block vector (delta base), if any.
+    pub prev: Option<Vec<f32>>,
+    /// The EM series observed so far.
+    pub history: Vec<f64>,
+    /// Consecutive below-threshold slope evaluations.
+    pub consecutive: usize,
 }
 
 #[cfg(test)]
@@ -373,6 +422,41 @@ mod tests {
             assert!(pair[0].sim_time_s <= pair[1].sim_time_s);
         }
         assert_eq!(e[1], Transition { version: 2, round: 12, sim_time_s: 340.5 });
+    }
+
+    #[test]
+    fn detector_snapshot_restore_is_bit_identical() {
+        let cfg = FreezeConfig { window_h: 2, phi: 0.05, patience_w: 2, fit_points: 3, min_observations: 3 };
+        let mut rng = Rng::new(9);
+        let mut a = FreezeDetector::new(cfg);
+        let mut v = vec![0.0f32; 20];
+        for _ in 0..5 {
+            for x in &mut v {
+                *x += 0.1 * rng.normal();
+            }
+            a.observe(&v);
+        }
+        let mut b = FreezeDetector::restore(cfg, a.snapshot());
+        for _ in 0..6 {
+            for x in &mut v {
+                *x += 0.1 * rng.normal();
+            }
+            let va = a.observe(&v);
+            let vb = b.observe(&v);
+            assert_eq!(va.0.map(f64::to_bits), vb.0.map(f64::to_bits));
+            assert_eq!(va.1, vb.1);
+            assert_eq!(a.consecutive(), b.consecutive());
+        }
+    }
+
+    #[test]
+    fn transition_log_from_entries_round_trips() {
+        let mut log = TransitionLog::new();
+        log.record(1, 0, 0.0);
+        log.record(2, 12, 340.5);
+        let copy = TransitionLog::from_entries(log.entries().to_vec());
+        assert_eq!(copy.entries(), log.entries());
+        assert_eq!(copy.current_version(), 2);
     }
 
     #[test]

@@ -76,6 +76,11 @@ pub struct ExpOpts {
     /// Structured-telemetry JSONL stream path (`--telemetry-jsonl`, or
     /// the `PROFL_TELEMETRY_JSONL` env var); `None` = telemetry off.
     pub telemetry_jsonl: Option<String>,
+    /// Checkpoint path template (`--checkpoint`; hash-neutral, see
+    /// `docs/CHECKPOINT.md`); `None` = checkpointing off.
+    pub checkpoint: Option<String>,
+    /// Rounds between checkpoints (`--checkpoint-every`).
+    pub checkpoint_every: Option<usize>,
 }
 
 impl ExpOpts {
@@ -116,6 +121,8 @@ impl ExpOpts {
                 .get("telemetry-jsonl")
                 .map(String::from)
                 .or_else(telemetry_env),
+            checkpoint: args.get("checkpoint").map(String::from),
+            checkpoint_every: args.parse_opt("checkpoint-every")?,
         })
     }
 
@@ -179,6 +186,10 @@ impl ExpOpts {
         cfg.strategy.elastic_phases = self.elastic_phases.or(cfg.strategy.elastic_phases);
         cfg.strategy.freeze_step_cap = self.freeze_step_cap.or(cfg.strategy.freeze_step_cap);
         cfg.telemetry_jsonl = self.telemetry_jsonl.clone();
+        cfg.checkpoint = self.checkpoint.clone();
+        if let Some(e) = self.checkpoint_every {
+            cfg.checkpoint_every = e;
+        }
         cfg
     }
 }
@@ -303,6 +314,8 @@ mod tests {
             elastic_phases: Some(3),
             freeze_step_cap: None,
             telemetry_jsonl: Some("stream.jsonl".into()),
+            checkpoint: Some("run-{round}.ckpt".into()),
+            checkpoint_every: Some(2),
         };
         let c = o.cfg("m");
         assert_eq!(c.seed, 7);
@@ -326,5 +339,7 @@ mod tests {
         assert_eq!(c.strategy.elastic_phases, Some(3));
         assert_eq!(c.strategy.freeze_step_cap, None, "unset knob keeps the default");
         assert_eq!(c.telemetry_jsonl.as_deref(), Some("stream.jsonl"));
+        assert_eq!(c.checkpoint.as_deref(), Some("run-{round}.ckpt"));
+        assert_eq!(c.checkpoint_every, 2);
     }
 }

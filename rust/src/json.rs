@@ -30,7 +30,7 @@ pub enum Value {
 impl Value {
     /// Parse a complete JSON document (rejects trailing garbage).
     pub fn parse(text: &str) -> Result<Value> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -178,9 +178,15 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Nesting cap for untrusted documents (checkpoint-embedded configs are
+/// ~3 levels deep): deeper input gets a clean error instead of blowing
+/// the recursive-descent stack.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -206,8 +212,15 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Value> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(c @ (b'{' | b'[')) => {
+                if self.depth >= MAX_DEPTH {
+                    bail!("nesting deeper than {MAX_DEPTH} at offset {}", self.pos);
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() }?;
+                self.depth -= 1;
+                Ok(v)
+            }
             Some(b'"') => Ok(Value::Str(self.string()?)),
             Some(b't') => self.lit("true", Value::Bool(true)),
             Some(b'f') => self.lit("false", Value::Bool(false)),
@@ -337,6 +350,19 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn depth_bomb_is_a_clean_error_not_a_stack_overflow() {
+        let deep = "[".repeat(100_000);
+        assert!(Value::parse(&deep).is_err());
+        let mixed = format!("{}1{}", "[{\"k\":".repeat(50_000), "}]".repeat(50_000));
+        assert!(Value::parse(&mixed).is_err());
+        // At the cap boundary: MAX_DEPTH nests parse, one more errors.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Value::parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Value::parse(&over).is_err());
+    }
 
     #[test]
     fn parses_scalars() {

@@ -44,6 +44,11 @@
 //!   the [`strategy::MemoryStrategy`] trait contract (layouts, phases,
 //!   advance/freeze semantics), the shipped strategies
 //!   (`profl`/`paramaware`/`layerfreeze`/`elastic`), and how to add one.
+//! * **`docs/CHECKPOINT.md`** — the checkpoint/resume subsystem
+//!   ([`checkpoint`]): the versioned file format and its digest scheme,
+//!   what run state a [`checkpoint::Checkpoint`] captures, the
+//!   bit-for-bit resume contract (`--checkpoint` / `profl resume`), and
+//!   the failure modes a corrupted or mismatched file is rejected with.
 //!
 //! `DESIGN.md` holds the full system inventory and experiment index;
 //! `ROADMAP.md` the north-star and open items.
@@ -91,6 +96,7 @@
 
 pub mod aggregate;
 pub mod bench_util;
+pub mod checkpoint;
 pub mod cli;
 pub mod clients;
 pub mod config;

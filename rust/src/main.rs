@@ -22,6 +22,7 @@ USAGE: profl <SUBCOMMAND> [OPTIONS]
 
 SUBCOMMANDS:
   run       Run one method end-to-end and print its summary
+  resume    Continue a checkpointed run, bit-for-bit (see below)
   compare   Run every Table-1 method on one model/partition
   inspect   Print manifest inventory with the memory model
   blocks    Table 5: per-block parameter quantity/percentage
@@ -83,6 +84,20 @@ OBSERVABILITY (see docs/OBSERVABILITY.md):
                       env fallback: PROFL_TELEMETRY_JSONL). `run` also
                       writes a manifest.json provenance record beside
                       the CSV (or beside the stream when no --csv).
+
+CHECKPOINT/RESUME (strategy-backed methods only; see docs/CHECKPOINT.md):
+  --checkpoint <path> run: write a full-state checkpoint at round
+                      boundaries (`{round}` in the path expands to the
+                      round index). Ignored by non-strategy baselines.
+  --checkpoint-every <n>  Rounds between checkpoints [default: 1];
+                      requires --checkpoint.
+  resume <path>       Reconstruct the run from a checkpoint file and
+                      continue it; the remaining rounds, CSV, and
+                      manifest hashes reproduce the uninterrupted run
+                      bit-for-bit. Only hash-neutral knobs may be
+                      overridden on resume: --threads (defaults to the
+                      checkpoint's), --checkpoint, --checkpoint-every,
+                      --csv, --artifacts.
 ";
 
 fn make_cfg(args: &Args) -> Result<RunConfig> {
@@ -147,12 +162,20 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
         args.parse_opt("elastic-phases")?.or(cfg.strategy.elastic_phases);
     cfg.strategy.freeze_step_cap =
         args.parse_opt("freeze-step-cap")?.or(cfg.strategy.freeze_step_cap);
+    cfg.checkpoint = args.get("checkpoint").map(String::from);
+    if let Some(e) = args.parse_opt("checkpoint-every")? {
+        if cfg.checkpoint.is_none() {
+            bail!("--checkpoint-every requires --checkpoint <path>");
+        }
+        cfg.checkpoint_every = e;
+    }
     // Fail fast on bad fleet/strategy spellings (before artifacts load).
     cfg.round_policy()?;
     cfg.churn_policy()?;
     cfg.stale_projection()?;
     cfg.fleet_profile()?;
     cfg.strategy_name()?;
+    cfg.checkpoint_plan()?;
     Ok(cfg)
 }
 
@@ -174,8 +197,48 @@ fn print_summary(s: &profl::RunSummary) {
     );
 }
 
+/// Shared `run`/`resume` output tail: summary line, optional per-round
+/// CSV, and the run-provenance manifest beside the CSV (else beside the
+/// telemetry stream).
+fn emit_outputs(args: &Args, cfg: &RunConfig, summary: &profl::RunSummary) -> Result<()> {
+    print_summary(summary);
+    if let Some(path) = args.get("csv") {
+        let mut sink = profl::metrics::MetricsSink::new();
+        for r in &summary.history {
+            sink.push(r.clone());
+        }
+        sink.write_csv(std::path::Path::new(path))?;
+        eprintln!("[profl] wrote {path}");
+    }
+    let manifest_dir = args
+        .get("csv")
+        .or_else(|| cfg.telemetry_jsonl.as_deref())
+        .map(|p| std::path::Path::new(p).parent().map(PathBuf::from).unwrap_or_default());
+    if let Some(dir) = manifest_dir {
+        let telemetry = cfg.telemetry_jsonl.as_deref().map(|p| {
+            let path = std::path::Path::new(p);
+            (path, profl::telemetry::count_lines(path))
+        });
+        let argv: Vec<String> = std::env::args().collect();
+        let manifest = profl::telemetry::build_manifest(cfg, &argv, Some(summary), telemetry);
+        let mpath = dir.join("manifest.json");
+        profl::telemetry::write_manifest(&mpath, &manifest)?;
+        eprintln!("[profl] wrote {}", mpath.display());
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1))?;
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // `resume <path>` carries a positional the flag parser rejects;
+    // pull it out before parsing.
+    let mut resume_path: Option<String> = None;
+    if argv.first().map(String::as_str) == Some("resume")
+        && argv.get(1).map_or(false, |a| !a.starts_with('-'))
+    {
+        resume_path = Some(argv.remove(1));
+    }
+    let args = Args::parse(argv.into_iter())?;
     if args.flag("list-methods") {
         println!("{:<16} {:<14} {:<8} {:<10}", "NAME", "ALIASES", "TABLE", "INCLUSIVE");
         for spec in registry() {
@@ -219,34 +282,31 @@ fn main() -> Result<()> {
                 cfg.partition().label()
             );
             let summary = m.run(&rt, &cfg)?;
-            print_summary(&summary);
-            if let Some(path) = args.get("csv") {
-                let mut sink = profl::metrics::MetricsSink::new();
-                for r in &summary.history {
-                    sink.push(r.clone());
+            emit_outputs(&args, &cfg, &summary)?;
+        }
+        "resume" => {
+            let path = resume_path
+                .ok_or_else(|| anyhow::anyhow!("usage: profl resume <checkpoint> [OPTIONS]"))?;
+            let ck = profl::checkpoint::Checkpoint::read(std::path::Path::new(&path))?;
+            let mut cfg = ck.resolve_config()?;
+            // Only hash-neutral knobs may be overridden on resume —
+            // anything hash-relevant would change config_sha256 and be
+            // rejected by the checkpoint's fingerprint check anyway.
+            cfg.fleet.threads = args.parse_opt("threads")?.unwrap_or(ck.threads);
+            cfg.checkpoint = args.get("checkpoint").map(String::from);
+            if let Some(e) = args.parse_opt("checkpoint-every")? {
+                if cfg.checkpoint.is_none() {
+                    bail!("--checkpoint-every requires --checkpoint <path>");
                 }
-                sink.write_csv(std::path::Path::new(path))?;
-                eprintln!("[profl] wrote {path}");
+                cfg.checkpoint_every = e;
             }
-            // Run-provenance manifest: beside the CSV when one was
-            // written, else beside the telemetry stream; skipped when
-            // neither output location exists.
-            let manifest_dir = args
-                .get("csv")
-                .or_else(|| cfg.telemetry_jsonl.as_deref())
-                .map(|p| std::path::Path::new(p).parent().map(PathBuf::from).unwrap_or_default());
-            if let Some(dir) = manifest_dir {
-                let telemetry = cfg.telemetry_jsonl.as_deref().map(|p| {
-                    let path = std::path::Path::new(p);
-                    (path, profl::telemetry::count_lines(path))
-                });
-                let argv: Vec<String> = std::env::args().collect();
-                let manifest =
-                    profl::telemetry::build_manifest(&cfg, &argv, Some(&summary), telemetry);
-                let mpath = dir.join("manifest.json");
-                profl::telemetry::write_manifest(&mpath, &manifest)?;
-                eprintln!("[profl] wrote {}", mpath.display());
-            }
+            cfg.checkpoint_plan()?;
+            eprintln!(
+                "[profl] resuming {} on {} at round {} (from {path})",
+                ck.strategy_name, cfg.model_tag, ck.round
+            );
+            let summary = profl::strategy::resume_strategy(&rt, &ck, &cfg)?;
+            emit_outputs(&args, &cfg, &summary)?;
         }
         "compare" => {
             let cfg = make_cfg(&args)?;

@@ -67,6 +67,17 @@ impl DeviceMemory {
     pub fn fits_static(&self, cfg: &MemoryConfig, mem: &MemCoeffs) -> bool {
         mem.bytes_at(cfg.accounting_batch) <= self.budget
     }
+
+    /// The contention stream's raw rng state (checkpoint image; the
+    /// static budget is re-derived from the build seed on resume).
+    pub(crate) fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    /// Reposition the contention stream at a checkpointed state.
+    pub(crate) fn set_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
+    }
 }
 
 /// Round-level participation decision for a concrete artifact.

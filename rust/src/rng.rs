@@ -29,15 +29,19 @@ impl Rng {
         r
     }
 
-    /// The raw internal state (crate-internal: lazy-pool stream jumping).
-    pub(crate) fn state(&self) -> u64 {
+    /// The raw internal state — the checkpoint image of this stream.
+    /// Persisting this single `u64` and later calling
+    /// [`Self::from_state`] resumes the stream exactly (also used
+    /// internally for lazy-pool stream jumping).
+    pub fn state(&self) -> u64 {
         self.state
     }
 
-    /// Rebuild a stream at a previously observed [`Self::state`]
-    /// (crate-internal: lazy-pool stream jumping). The next draw of the
-    /// rebuilt stream is bit-identical to the next draw of the original.
-    pub(crate) fn from_state(state: u64) -> Rng {
+    /// Rebuild a stream at a previously observed [`Self::state`]. The
+    /// next draw of the rebuilt stream is bit-identical to the next draw
+    /// of the original — the primitive the checkpoint/resume subsystem
+    /// (`docs/CHECKPOINT.md`) and the lazy client pool are built on.
+    pub fn from_state(state: u64) -> Rng {
         Rng { state }
     }
 

@@ -17,12 +17,13 @@
 //! trade-off) and the final evaluation runs at the reached depth.
 
 use super::{run_strategy, BlockLayout, MemoryStrategy, ModelView, Phase, StepFeedback, TrainPhase};
+use crate::checkpoint::{Dec, Enc};
 use crate::config::RunConfig;
 use crate::memory::MB;
 use crate::methods::Method;
 use crate::metrics::RunSummary;
 use crate::runtime::Runtime;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// One planned elastic phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -148,6 +149,49 @@ impl MemoryStrategy for Elastic {
     fn participation_artifact(&self, model: &ModelView) -> String {
         format!("train_op_t{}", model.num_blocks)
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match &self.planned {
+            None => e.u8(0),
+            Some(phases) => {
+                e.u8(1);
+                e.usize(phases.len());
+                for p in phases {
+                    e.usize(p.layout.frozen);
+                    e.usize(p.layout.depth);
+                    e.u64(p.budget_bytes);
+                    e.usize(p.rounds);
+                }
+            }
+        }
+        e.usize(self.idx);
+        e.bool(self.entered);
+        e.finish()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut d = Dec::new(bytes);
+        self.planned = match d.u8()? {
+            0 => None,
+            1 => {
+                let n = d.seq_len(32)?;
+                let mut phases = Vec::with_capacity(n);
+                for _ in 0..n {
+                    phases.push(ElasticPhase {
+                        layout: BlockLayout { frozen: d.usize()?, depth: d.usize()? },
+                        budget_bytes: d.u64()?,
+                        rounds: d.usize()?,
+                    });
+                }
+                Some(phases)
+            }
+            b => bail!("invalid elastic plan tag {b}"),
+        };
+        self.idx = d.usize()?;
+        self.entered = d.bool()?;
+        d.done()
+    }
 }
 
 impl Method for Elastic {
@@ -226,6 +270,35 @@ mod tests {
         assert!(!kinds.is_empty());
         assert!(kinds.len() % 2 == 0);
         assert!(kinds.chunks(2).all(|c| c == ['T', 't']));
+    }
+
+    #[test]
+    fn save_load_round_trips_the_lazy_plan() {
+        let v = ModelView::synthetic(&COUNTS);
+        let cfg = RunConfig::smoke("m");
+        // Cut after 3 emissions (mid phase 2): the resumed strategy must
+        // carry the *materialized* plan, not re-plan.
+        let mut s = Elastic::default();
+        for _ in 0..3 {
+            s.next_phase(&v, &cfg, None);
+        }
+        let mut resumed = Elastic::default();
+        resumed.load_state(&s.save_state()).unwrap();
+        assert_eq!(resumed.save_state(), s.save_state());
+        loop {
+            let a = s.next_phase(&v, &cfg, None);
+            let b = resumed.next_phase(&v, &cfg, None);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        // A fresh (never-planned) strategy round-trips too.
+        let fresh = Elastic::default();
+        let mut r2 = Elastic::default();
+        r2.load_state(&fresh.save_state()).unwrap();
+        assert_eq!(r2.save_state(), fresh.save_state());
+        assert!(r2.load_state(&[2]).is_err(), "garbage blob rejected");
     }
 
     #[test]

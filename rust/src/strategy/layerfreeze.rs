@@ -19,11 +19,12 @@
 //! current front block fall back to the output module (inclusive).
 
 use super::{run_strategy, BlockLayout, MemoryStrategy, ModelView, Phase, StepFeedback, TrainPhase};
+use crate::checkpoint::{Dec, Enc};
 use crate::config::RunConfig;
 use crate::methods::Method;
 use crate::metrics::RunSummary;
 use crate::runtime::Runtime;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Schedule cursor: which block is the front-most unfrozen one.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -113,6 +114,37 @@ impl MemoryStrategy for LayerFreeze {
     fn participation_artifact(&self, model: &ModelView) -> String {
         format!("train_op_t{}", model.num_blocks)
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        let (tag, t) = match self.cursor {
+            Cursor::Start => (0u8, 0usize),
+            Cursor::Enter(t) => (1, t),
+            Cursor::Train(t) => (2, t),
+            Cursor::Done => (3, 0),
+        };
+        e.u8(tag);
+        e.usize(t);
+        e.usize(self.remaining);
+        e.bool(self.awaiting_train);
+        e.finish()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut d = Dec::new(bytes);
+        let tag = d.u8()?;
+        let t = d.usize()?;
+        self.cursor = match tag {
+            0 => Cursor::Start,
+            1 => Cursor::Enter(t),
+            2 => Cursor::Train(t),
+            3 => Cursor::Done,
+            b => bail!("invalid layerfreeze cursor tag {b}"),
+        };
+        self.remaining = d.usize()?;
+        self.awaiting_train = d.bool()?;
+        d.done()
+    }
 }
 
 impl Method for LayerFreeze {
@@ -190,5 +222,45 @@ mod tests {
             }
         };
         assert_eq!(p.max_rounds, 6);
+    }
+
+    #[test]
+    fn save_load_round_trips_mid_schedule() {
+        let v = view();
+        let cfg = RunConfig::smoke("m");
+        let mut s = LayerFreeze::default();
+        let mut last = None;
+        // Advance past the first train phase, then cut.
+        for _ in 0..3 {
+            if let Some(p) = s.next_phase(&v, &cfg, last.as_ref()) {
+                last = match &p {
+                    Phase::Train(t) => {
+                        Some(StepFeedback { rounds_used: 5.min(t.max_rounds), froze: true })
+                    }
+                    _ => None,
+                };
+            }
+        }
+        let mut resumed = LayerFreeze::default();
+        resumed.load_state(&s.save_state()).unwrap();
+        assert_eq!(resumed.save_state(), s.save_state());
+        let mut last2 = last;
+        loop {
+            let a = s.next_phase(&v, &cfg, last.as_ref());
+            let b = resumed.next_phase(&v, &cfg, last2.as_ref());
+            assert_eq!(a, b);
+            match a {
+                Some(Phase::Train(t)) => {
+                    last = Some(StepFeedback { rounds_used: 5.min(t.max_rounds), froze: true });
+                    last2 = last;
+                }
+                Some(_) => {
+                    last = None;
+                    last2 = None;
+                }
+                None => break,
+            }
+        }
+        assert!(resumed.load_state(&[7]).is_err(), "garbage blob rejected");
     }
 }

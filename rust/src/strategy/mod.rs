@@ -40,6 +40,7 @@ pub use elastic::Elastic;
 pub use layerfreeze::LayerFreeze;
 pub use progressive::{FreezePolicy, Progressive};
 
+use crate::checkpoint::{apply_to_ctx, gather, Checkpoint, CkptSink, MidPhase};
 use crate::config::RunConfig;
 use crate::coordinator::ServerCtx;
 use crate::freezing::FreezeDetector;
@@ -253,6 +254,41 @@ pub trait MemoryStrategy {
     /// Artifact whose footprint defines run-level participation (for
     /// inclusive strategies: the output-module fallback).
     fn participation_artifact(&self, model: &ModelView) -> String;
+
+    /// Serialize the schedule position (cursor, budgets, pending
+    /// bookkeeping) into an opaque blob for the checkpoint writer (see
+    /// `docs/CHECKPOINT.md`). A stateless strategy returns an empty
+    /// blob; the blob format is the strategy's own business — only
+    /// [`Self::load_state`] ever reads it back.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore a position previously produced by [`Self::save_state`]
+    /// on a freshly constructed strategy. The default refuses: a
+    /// strategy must opt in to resume by round-tripping its own state,
+    /// so a checkpoint can never silently restart a schedule whose
+    /// cursor it failed to carry.
+    fn load_state(&mut self, _bytes: &[u8]) -> Result<()> {
+        anyhow::bail!("strategy `{}` does not support checkpoint/resume", self.name())
+    }
+}
+
+/// Reconstruct the strategy a checkpoint names
+/// ([`Checkpoint::strategy_name`], a [`MemoryStrategy::name`] display
+/// string), ready for [`MemoryStrategy::load_state`]. Every shipped
+/// strategy resolves; anything else is a readable rejection.
+pub fn strategy_for_resume(name: &str) -> Result<Box<dyn MemoryStrategy>> {
+    match name {
+        "ProFL" => Ok(Box::new(Progressive::new(FreezePolicy::EffectiveMovement))),
+        "ParamAware" => Ok(Box::new(Progressive::new(FreezePolicy::ParamAware))),
+        "LayerFreeze" => Ok(Box::new(LayerFreeze::default())),
+        "Elastic" => Ok(Box::new(Elastic::default())),
+        other => anyhow::bail!(
+            "checkpoint was written by strategy `{other}`, which this build cannot resume \
+             (known: ProFL|ParamAware|LayerFreeze|Elastic)"
+        ),
+    }
 }
 
 /// Execute one [`TrainPhase`] against the coordinator. This is the
@@ -261,11 +297,36 @@ pub trait MemoryStrategy {
 /// `freeze.observe` span + `freeze.em` gauge, now strategy-tagged),
 /// evaluate on the cadence, record, and stop early on an EM freeze once
 /// `min_rounds` have elapsed.
-fn run_train_phase(ctx: &mut ServerCtx, strategy: &'static str, p: &TrainPhase) -> Result<StepFeedback> {
+fn run_train_phase(
+    ctx: &mut ServerCtx,
+    strategy: &dyn MemoryStrategy,
+    p: &TrainPhase,
+    sink: Option<&CkptSink>,
+) -> Result<StepFeedback> {
     let mut det = FreezeDetector::new(ctx.cfg.freeze.into());
-    let mut used = 0;
+    run_train_phase_at(ctx, strategy, p, &mut det, 0, sink)
+}
+
+/// The [`TrainPhase`] loop starting from phase-round `start_r` with an
+/// already-positioned freeze detector — the resume entry point
+/// (`start_r = 0` + a fresh detector is a plain phase run). Per-round
+/// behaviour is byte-identical to the uninterrupted loop: the round
+/// body depends only on the phase-round index `r` and state carried in
+/// `ctx`/`det`, both of which the checkpoint restores exactly. When a
+/// `sink` is armed, a [`Checkpoint`] is written at every due round
+/// boundary *after* the round's record lands (and before an EM-gate
+/// break, so the final boundary of a frozen phase is captured too).
+fn run_train_phase_at(
+    ctx: &mut ServerCtx,
+    strategy: &dyn MemoryStrategy,
+    p: &TrainPhase,
+    det: &mut FreezeDetector,
+    start_r: usize,
+    sink: Option<&CkptSink>,
+) -> Result<StepFeedback> {
+    let mut used = start_r;
     let mut froze = false;
-    for r in 0..p.max_rounds {
+    for r in start_r..p.max_rounds {
         let out =
             ctx.run_train_round(&p.train_artifact, p.fallback_artifact.as_deref(), p.lr, &p.stage, p.step)?;
         let snapshot = ctx.store.flatten(&p.observe_params);
@@ -282,7 +343,7 @@ fn run_train_phase(ctx: &mut ServerCtx, strategy: &'static str, p: &TrainPhase) 
                     ("step", Value::Num(p.step as f64)),
                     ("consecutive", Value::Num(consecutive as f64)),
                     ("freeze", Value::Bool(em_freeze)),
-                    ("strategy", Value::Str(strategy.to_string())),
+                    ("strategy", Value::Str(strategy.name().to_string())),
                 ];
                 tel.span("freeze.observe", round, sim_s, t0.elapsed().as_secs_f64(), &attrs);
                 tel.gauge("freeze.em", round, sim_s, em.unwrap_or(f64::NAN), &attrs);
@@ -297,6 +358,15 @@ fn run_train_phase(ctx: &mut ServerCtx, strategy: &'static str, p: &TrainPhase) 
         used += 1;
         if p.em_gated && em_freeze && r + 1 >= p.min_rounds {
             froze = true;
+        }
+        if let Some(s) = sink {
+            if s.due(ctx.round) {
+                let mid =
+                    MidPhase::Train { phase: p.clone(), detector: det.snapshot(), used, froze };
+                s.write(&gather(ctx, strategy, Some(mid)), ctx.round)?;
+            }
+        }
+        if froze {
             break;
         }
     }
@@ -304,12 +374,35 @@ fn run_train_phase(ctx: &mut ServerCtx, strategy: &'static str, p: &TrainPhase) 
 }
 
 /// Execute one [`DistillPhase`] — the legacy shrink-stage *Map* loop.
-fn run_distill_phase(ctx: &mut ServerCtx, d: &DistillPhase) -> Result<StepFeedback> {
-    let mut used = 0;
-    for _ in 0..d.rounds {
+fn run_distill_phase(
+    ctx: &mut ServerCtx,
+    strategy: &dyn MemoryStrategy,
+    d: &DistillPhase,
+    sink: Option<&CkptSink>,
+) -> Result<StepFeedback> {
+    run_distill_phase_at(ctx, strategy, d, 0, sink)
+}
+
+/// The [`DistillPhase`] loop starting from phase-round `start_r` — the
+/// resume entry point (`start_r = 0` is a plain phase run).
+fn run_distill_phase_at(
+    ctx: &mut ServerCtx,
+    strategy: &dyn MemoryStrategy,
+    d: &DistillPhase,
+    start_r: usize,
+    sink: Option<&CkptSink>,
+) -> Result<StepFeedback> {
+    let mut used = start_r;
+    for _ in start_r..d.rounds {
         let out = ctx.run_distill_round(&d.artifact, d.lr)?;
         ctx.record_round(&d.stage, d.step, &out, f32::NAN, f64::NAN);
         used += 1;
+        if let Some(s) = sink {
+            if s.due(ctx.round) {
+                let mid = MidPhase::Distill { phase: d.clone(), used };
+                s.write(&gather(ctx, strategy, Some(mid)), ctx.round)?;
+            }
+        }
     }
     Ok(StepFeedback { rounds_used: used, froze: false })
 }
@@ -317,29 +410,86 @@ fn run_distill_phase(ctx: &mut ServerCtx, d: &DistillPhase) -> Result<StepFeedba
 /// Drive a [`MemoryStrategy`] end to end against the fleet simulator and
 /// produce its [`RunSummary`]. The caller passes the *final* config
 /// (any method-level overrides already applied) — the driver clones it
-/// into the [`ServerCtx`] exactly as the legacy method loop did.
+/// into the [`ServerCtx`] exactly as the legacy method loop did. When
+/// `cfg.checkpoint` is set, the run writes a [`Checkpoint`] of its
+/// complete state at every due round boundary (see `docs/CHECKPOINT.md`).
 pub fn run_strategy(
     strategy: &mut dyn MemoryStrategy,
     rt: &Runtime,
     cfg: &RunConfig,
 ) -> Result<RunSummary> {
+    let sink = CkptSink::from_cfg(cfg)?;
     let mut ctx = ServerCtx::new(rt, cfg.clone())?;
-    let model = rt.model(&cfg.model_tag)?;
+    drive_strategy(strategy, &mut ctx, sink.as_ref(), None)
+}
+
+/// Reconstruct the run a checkpoint captured and continue it to the end.
+/// The strategy is rebuilt from the checkpoint's name + state blob, the
+/// coordinator from its resolved config + serialized state, the
+/// interrupted phase finishes from its saved round index with its saved
+/// freeze-detector state, and the schedule loop then proceeds normally —
+/// producing the remaining `RoundRecord` history bit-for-bit equal to
+/// the uninterrupted run's, at any thread count. The caller passes the
+/// resolved config (normally [`Checkpoint::resolve_config`]'s output
+/// plus wall-clock overrides like `--threads`); it is re-verified
+/// against the checkpoint's `config_sha256` here.
+pub fn resume_strategy(rt: &Runtime, ck: &Checkpoint, cfg: &RunConfig) -> Result<RunSummary> {
+    ck.verify_config(cfg)?;
+    let mut strategy = strategy_for_resume(&ck.strategy_name)?;
+    strategy.load_state(&ck.strategy_blob)?;
+    let sink = CkptSink::from_cfg(cfg)?;
+    let mut ctx = ServerCtx::new(rt, cfg.clone())?;
+    apply_to_ctx(ck, &mut ctx)?;
+    // Finish the interrupted phase first; its feedback then feeds the
+    // normal schedule loop exactly as the uninterrupted run's would.
+    let first = match &ck.mid {
+        None => None,
+        Some(MidPhase::Train { phase, detector, used, froze }) => {
+            if *froze || *used >= phase.max_rounds {
+                Some(StepFeedback { rounds_used: *used, froze: *froze })
+            } else {
+                let mut det = FreezeDetector::restore(ctx.cfg.freeze.into(), detector.clone());
+                Some(run_train_phase_at(&mut ctx, &*strategy, phase, &mut det, *used, sink.as_ref())?)
+            }
+        }
+        Some(MidPhase::Distill { phase, used }) => {
+            if *used >= phase.rounds {
+                Some(StepFeedback { rounds_used: *used, froze: false })
+            } else {
+                Some(run_distill_phase_at(&mut ctx, &*strategy, phase, *used, sink.as_ref())?)
+            }
+        }
+    };
+    drive_strategy(&mut *strategy, &mut ctx, sink.as_ref(), first)
+}
+
+/// The shared schedule loop + finalization tail behind [`run_strategy`]
+/// and [`resume_strategy`]: pull phases until the strategy is done, then
+/// evaluate and assemble the [`RunSummary`]. `last` carries the feedback
+/// of a phase the caller already executed (the resumed one), or `None`
+/// for a fresh run.
+fn drive_strategy(
+    strategy: &mut dyn MemoryStrategy,
+    ctx: &mut ServerCtx,
+    sink: Option<&CkptSink>,
+    mut last: Option<StepFeedback>,
+) -> Result<RunSummary> {
+    let model = ctx.rt.model(&ctx.cfg.model_tag)?;
     let view = ModelView::of(model);
     let op_mem = model
         .artifact(&strategy.participation_artifact(&view))
         .map(|a| a.participation_mem())
         .unwrap_or_default();
+    let cfg = ctx.cfg.clone();
 
-    let mut last: Option<StepFeedback> = None;
-    while let Some(phase) = strategy.next_phase(&view, cfg, last.as_ref()) {
+    while let Some(phase) = strategy.next_phase(&view, &cfg, last.as_ref()) {
         last = match phase {
             Phase::Transition => {
                 ctx.bump_prefix_version();
                 None
             }
-            Phase::Train(p) => Some(run_train_phase(&mut ctx, strategy.name(), &p)?),
-            Phase::Distill(d) => Some(run_distill_phase(&mut ctx, &d)?),
+            Phase::Train(p) => Some(run_train_phase(ctx, &*strategy, &p, sink)?),
+            Phase::Distill(d) => Some(run_distill_phase(ctx, &*strategy, &d, sink)?),
         };
     }
 
@@ -444,5 +594,22 @@ mod tests {
         assert_eq!(v.num_blocks, 4);
         assert_eq!(v.block_params.len(), 4);
         assert_eq!(v.block_params[2], vec!["block3_w".to_string()]);
+    }
+
+    #[test]
+    fn strategy_for_resume_maps_every_display_name() {
+        for name in ["ProFL", "ParamAware", "LayerFreeze", "Elastic"] {
+            let s = strategy_for_resume(name).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert!(strategy_for_resume("FedAvg").is_err(), "non-strategy methods rejected");
+        assert!(strategy_for_resume("profl").is_err(), "display names, not CLI spellings");
+        // Fresh strategies round-trip their own empty-position blobs.
+        for name in ["ProFL", "ParamAware", "LayerFreeze", "Elastic"] {
+            let blob = strategy_for_resume(name).unwrap().save_state();
+            let mut s = strategy_for_resume(name).unwrap();
+            s.load_state(&blob).unwrap();
+            assert_eq!(s.save_state(), blob);
+        }
     }
 }

@@ -10,7 +10,9 @@
 //! transcription of the legacy schedule).
 
 use super::{BlockLayout, DistillPhase, MemoryStrategy, ModelView, Phase, StepFeedback, TrainPhase};
+use crate::checkpoint::{Dec, Enc};
 use crate::config::RunConfig;
+use anyhow::{bail, Result};
 
 /// How a progressive step decides it is done.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -186,6 +188,56 @@ impl MemoryStrategy for Progressive {
     fn participation_artifact(&self, model: &ModelView) -> String {
         format!("train_op_t{}", model.num_blocks)
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        let (tag, t) = match self.cursor {
+            Cursor::Start => (0u8, 0usize),
+            Cursor::ShrinkEnter(t) => (1, t),
+            Cursor::ShrinkTrain(t) => (2, t),
+            Cursor::ShrinkDistill(t) => (3, t),
+            Cursor::GrowEnter(t) => (4, t),
+            Cursor::GrowTrain(t) => (5, t),
+            Cursor::Done => (6, 0),
+        };
+        e.u8(tag);
+        e.usize(t);
+        e.u8(match self.pending {
+            Pending::None => 0,
+            Pending::ShrinkTrain => 1,
+            Pending::Distill => 2,
+            Pending::GrowTrain => 3,
+        });
+        e.f32(self.lr);
+        e.usize(self.remaining);
+        e.finish()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut d = Dec::new(bytes);
+        let tag = d.u8()?;
+        let t = d.usize()?;
+        self.cursor = match tag {
+            0 => Cursor::Start,
+            1 => Cursor::ShrinkEnter(t),
+            2 => Cursor::ShrinkTrain(t),
+            3 => Cursor::ShrinkDistill(t),
+            4 => Cursor::GrowEnter(t),
+            5 => Cursor::GrowTrain(t),
+            6 => Cursor::Done,
+            b => bail!("invalid progressive cursor tag {b}"),
+        };
+        self.pending = match d.u8()? {
+            0 => Pending::None,
+            1 => Pending::ShrinkTrain,
+            2 => Pending::Distill,
+            3 => Pending::GrowTrain,
+            b => bail!("invalid progressive pending tag {b}"),
+        };
+        self.lr = d.f32()?;
+        self.remaining = d.usize()?;
+        d.done()
+    }
 }
 
 #[cfg(test)]
@@ -306,5 +358,70 @@ mod tests {
             })
             .collect();
         assert_eq!(lrs, vec![0.08, 0.04, 0.02, 0.01]);
+    }
+
+    #[test]
+    fn save_load_resumes_the_schedule_at_any_cut() {
+        // Cut the schedule after every prefix of next_phase calls: a
+        // fresh strategy loaded from the cut's blob must emit exactly
+        // the phases the original emits from there on.
+        let v = view();
+        let cfg = RunConfig::smoke("m");
+        let feedback = |p: &Phase| match p {
+            Phase::Transition => None,
+            Phase::Train(t) => {
+                Some(StepFeedback { rounds_used: 4.min(t.max_rounds), froze: t.em_gated })
+            }
+            Phase::Distill(d) => Some(StepFeedback { rounds_used: d.rounds, froze: false }),
+        };
+        for policy in [FreezePolicy::EffectiveMovement, FreezePolicy::ParamAware] {
+            for cut in 0..24 {
+                let mut original = Progressive::new(policy);
+                let mut last = None;
+                let mut ended_early = false;
+                for _ in 0..cut {
+                    match original.next_phase(&v, &cfg, last.as_ref()) {
+                        Some(p) => last = feedback(&p),
+                        None => {
+                            ended_early = true;
+                            break;
+                        }
+                    }
+                }
+                if ended_early {
+                    break;
+                }
+                let mut resumed = Progressive::new(policy);
+                resumed.load_state(&original.save_state()).unwrap();
+                assert_eq!(
+                    resumed.save_state(),
+                    original.save_state(),
+                    "blob round-trip at cut {cut}"
+                );
+                let mut last2 = last.clone();
+                loop {
+                    let a = original.next_phase(&v, &cfg, last.as_ref());
+                    let b = resumed.next_phase(&v, &cfg, last2.as_ref());
+                    assert_eq!(a, b, "policy {policy:?} diverged after cut {cut}");
+                    match a {
+                        Some(p) => {
+                            last = feedback(&p);
+                            last2 = last.clone();
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage_blobs() {
+        let mut s = Progressive::new(FreezePolicy::EffectiveMovement);
+        assert!(s.load_state(&[]).is_err(), "truncated");
+        assert!(s.load_state(&[9; 22]).is_err(), "bad cursor tag");
+        let mut blob = Progressive::new(FreezePolicy::EffectiveMovement).save_state();
+        blob.push(0);
+        assert!(s.load_state(&blob).is_err(), "trailing bytes");
     }
 }

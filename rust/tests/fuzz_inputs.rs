@@ -1,0 +1,380 @@
+//! Adversarial in-tree fuzzer for every untrusted-input parser.
+//!
+//! The offline image carries no cargo-fuzz/libFuzzer, so this file is a
+//! seeded deterministic mutation fuzzer: each target starts from valid
+//! seed inputs, applies ≥200 rng-driven mutations (bit flips, truncations,
+//! splices, length-field tampering, token shuffles), and asserts that the
+//! parser under attack returns a clean `Err` — it must **never** panic,
+//! abort, or allocate unboundedly. Every run is reproducible from the
+//! fixed seeds; failures print the mutation index for replay.
+//!
+//! Targets:
+//!   * [`Checkpoint::decode`] — raw byte mutations (digest rejects) AND
+//!     payload mutations with the digest recomputed (so the structural
+//!     validators inside `decode_payload` face the hostile bytes).
+//!   * [`crate::json::Value::parse`] + [`RunConfig::from_value`] — the
+//!     config resurrection path `profl resume` trusts.
+//!   * [`cli::Args::parse`] — random token streams.
+//!   * [`RoundPolicy::parse`] / [`ChurnPolicy::parse`] — policy strings.
+//!
+//! A small regression corpus lives in `tests/corpus/`: inputs that once
+//! exercised interesting decoder paths, replayed verbatim before the
+//! random campaign so past near-misses stay covered.
+
+use profl::checkpoint::{Checkpoint, Dec, Enc};
+use profl::cli::Args;
+use profl::clients::{ClientCkpt, PoolCkptKind, PoolCkptState};
+use profl::fleet::{ChurnPolicy, InFlightUpload, PolicyDefaults, RoundPolicy};
+use profl::freezing::Transition;
+use profl::json::Value;
+use profl::rng::Rng;
+use profl::telemetry::sha256_hex;
+use profl::RunConfig;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+/// Mutations per parser target; the issue floor is 200.
+const MUTATIONS: usize = 256;
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("corpus")
+}
+
+/// Replay every corpus file whose name starts with `prefix` through `f`;
+/// returns how many were replayed (the corpus is committed, so zero
+/// means the checkout is broken).
+fn replay_corpus(prefix: &str, mut f: impl FnMut(&str, Vec<u8>)) -> usize {
+    let mut names: Vec<_> = std::fs::read_dir(corpus_dir())
+        .expect("tests/corpus must exist")
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with(prefix))
+        })
+        .collect();
+    names.sort();
+    let n = names.len();
+    for path in names {
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let bytes = std::fs::read(&path).unwrap();
+        f(&name, bytes);
+    }
+    n
+}
+
+/// Run `f` on hostile input `tag`; propagate a clean Err silently, turn
+/// a panic into a test failure that names the case.
+fn must_not_panic<T>(tag: &str, f: impl FnOnce() -> T) -> T {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => v,
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("parser panicked on {tag}: {msg}");
+        }
+    }
+}
+
+/// A structurally valid checkpoint to mutate from: non-trivial values in
+/// every section so mutations land on interesting bytes.
+fn seed_checkpoint() -> Checkpoint {
+    Checkpoint {
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        config_sha256: "c0ffee".repeat(10),
+        config_json: "{\"seed\":7}".to_string(),
+        round: 12,
+        sim_time_s: 512.25,
+        prefix_version: 3,
+        transitions: vec![
+            Transition { version: 1, round: 4, sim_time_s: 96.5 },
+            Transition { version: 2, round: 8, sim_time_s: 256.0 },
+        ],
+        fleet_rng: 0x1234_5678_9abc_def0,
+        threads: 4,
+        inflight: vec![InFlightUpload { client: 3, arrive_s: 530.0, dispatch_round: 11 }],
+        pending: Vec::new(),
+        params: vec![
+            ("block1_w".to_string(), vec![2, 3], vec![0.5; 6]),
+            ("head_w".to_string(), vec![4], vec![-1.25, 0.0, 3.5, f32::NAN]),
+        ],
+        pool: PoolCkptState {
+            select_rng: 99,
+            kind: PoolCkptKind::Eager(vec![
+                ClientCkpt { id: 0, mem_rng: 11, cursor: 2, prefix_version: 3 },
+                ClientCkpt { id: 1, mem_rng: 22, cursor: 0, prefix_version: u64::MAX },
+            ]),
+        },
+        records: Vec::new(),
+        strategy_name: "ProFL".to_string(),
+        strategy_blob: vec![1, 0, 0, 0, 0, 0, 0, 0, 2],
+        mid: None,
+    }
+}
+
+/// One byte-level mutation: flip, splice, overwrite, truncate, extend,
+/// or zero a run — the classic dumb-fuzzer move set.
+fn mutate_bytes(rng: &mut Rng, bytes: &mut Vec<u8>) {
+    if bytes.is_empty() {
+        bytes.push((rng.next_u64() & 0xff) as u8);
+        return;
+    }
+    match rng.below(6) {
+        0 => {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1 << rng.below(8);
+        }
+        1 => {
+            let cut = rng.below(bytes.len());
+            bytes.truncate(cut);
+        }
+        2 => {
+            let i = rng.below(bytes.len());
+            bytes[i] = (rng.next_u64() & 0xff) as u8;
+        }
+        3 => {
+            // Stomp 8 aligned-ish bytes with an extreme length-like value:
+            // the best way to provoke an allocation-amplification bug.
+            let i = rng.below(bytes.len());
+            let v: u64 = [u64::MAX, u64::MAX / 2, 1 << 32, 0][rng.below(4)];
+            for (k, b) in v.to_le_bytes().iter().enumerate() {
+                if i + k < bytes.len() {
+                    bytes[i + k] = *b;
+                }
+            }
+        }
+        4 => {
+            let i = rng.below(bytes.len());
+            let extra = rng.below(16) + 1;
+            for _ in 0..extra {
+                bytes.insert(i, (rng.next_u64() & 0xff) as u8);
+            }
+        }
+        _ => {
+            let i = rng.below(bytes.len());
+            let j = (i + 1 + rng.below(8)).min(bytes.len());
+            for b in &mut bytes[i..j] {
+                *b = 0;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint deserializer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_checkpoint_decode_raw_mutations_never_panic() {
+    let seed = seed_checkpoint().encode();
+    let mut rng = Rng::new(0xfa22_0001);
+    let mut errs = 0usize;
+    for case in 0..MUTATIONS {
+        let mut bytes = seed.clone();
+        for _ in 0..(1 + rng.below(4)) {
+            mutate_bytes(&mut rng, &mut bytes);
+        }
+        let out = must_not_panic(&format!("ckpt raw mutation #{case}"), || {
+            Checkpoint::decode(&bytes).map(drop)
+        });
+        if out.is_err() {
+            errs += 1;
+        }
+    }
+    // Survivors are limited to no-op mutations (zeroing already-zero
+    // bytes) and flips inside the non-digested config_sha256 header
+    // string; anything touching the payload must hit the digest wall.
+    assert!(errs >= MUTATIONS / 2, "only {errs}/{MUTATIONS} mutants were rejected");
+}
+
+/// Split an encoded checkpoint into (header-without-digest-fields, payload):
+/// returns (format_version, crate_version, config_sha256, payload).
+fn split_checkpoint(bytes: &[u8]) -> (u32, String, String, Vec<u8>) {
+    let mut d = Dec::new(&bytes[8..]);
+    let fv = d.u32().unwrap();
+    let cv = d.str().unwrap();
+    let cs = d.str().unwrap();
+    let _digest = d.str().unwrap();
+    let len = d.u64().unwrap() as usize;
+    let start = bytes.len() - d.remaining();
+    (fv, cv, cs, bytes[start..start + len].to_vec())
+}
+
+/// Reassemble a checkpoint file around a (possibly hostile) payload,
+/// recomputing the digest and length so the header checks all pass and
+/// `decode_payload`'s own validators face the mutated bytes.
+fn reassemble(fv: u32, cv: &str, cs: &str, payload: &[u8]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u32(fv);
+    e.str(cv);
+    e.str(cs);
+    e.str(&sha256_hex(payload));
+    e.u64(payload.len() as u64);
+    let mut out = b"PROFLCKP".to_vec();
+    out.extend_from_slice(&e.finish());
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn fuzz_checkpoint_decode_payload_mutations_with_valid_digest_never_panic() {
+    let seed = seed_checkpoint().encode();
+    let (fv, cv, cs, payload) = split_checkpoint(&seed);
+    // Sanity: an untouched reassembly must still decode.
+    Checkpoint::decode(&reassemble(fv, &cv, &cs, &payload)).unwrap();
+    let mut rng = Rng::new(0xfa22_0002);
+    for case in 0..MUTATIONS {
+        let mut p = payload.clone();
+        for _ in 0..(1 + rng.below(4)) {
+            mutate_bytes(&mut rng, &mut p);
+        }
+        let bytes = reassemble(fv, &cv, &cs, &p);
+        // With the digest recomputed the mutant reaches the structural
+        // validators; Ok is possible for no-op-ish mutations, a panic
+        // or runaway allocation is the only failure.
+        let _ = must_not_panic(&format!("ckpt payload mutation #{case}"), || {
+            Checkpoint::decode(&bytes).map(drop)
+        });
+    }
+}
+
+#[test]
+fn fuzz_checkpoint_every_truncation_errs() {
+    let seed = seed_checkpoint().encode();
+    for cut in 0..seed.len() {
+        let out = must_not_panic(&format!("ckpt truncated to {cut} bytes"), || {
+            Checkpoint::decode(&seed[..cut]).map(drop)
+        });
+        assert!(out.is_err(), "strict {cut}-byte prefix decoded");
+    }
+}
+
+#[test]
+fn fuzz_checkpoint_corpus_regressions() {
+    let n = replay_corpus("ckpt_", |name, bytes| {
+        let out = must_not_panic(name, || Checkpoint::decode(&bytes).map(drop));
+        assert!(out.is_err(), "corpus case {name} must be rejected");
+    });
+    assert!(n >= 4, "checkpoint corpus lost files ({n} found)");
+}
+
+// ---------------------------------------------------------------------------
+// Config JSON (the `profl resume` resurrection path)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_config_json_mutations_never_panic() {
+    let cfg = RunConfig::smoke("fuzz");
+    let seed = profl::telemetry::config_value(&cfg).to_json();
+    let mut rng = Rng::new(0xfa22_0003);
+    for case in 0..MUTATIONS {
+        let mut bytes = seed.clone().into_bytes();
+        for _ in 0..(1 + rng.below(4)) {
+            mutate_bytes(&mut rng, &mut bytes);
+        }
+        // Hostile inputs include invalid UTF-8: that must already be a
+        // clean error at the string layer, not a parser panic.
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = must_not_panic(&format!("config json mutation #{case}"), || {
+            Value::parse(&text).and_then(|v| RunConfig::from_value(&v)).map(drop)
+        });
+    }
+}
+
+#[test]
+fn fuzz_json_corpus_regressions() {
+    let n = replay_corpus("json_", |name, bytes| {
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = must_not_panic(name, || {
+            Value::parse(&text).and_then(|v| RunConfig::from_value(&v)).map(drop)
+        });
+    });
+    assert!(n >= 3, "json corpus lost files ({n} found)");
+}
+
+// ---------------------------------------------------------------------------
+// CLI argument parser
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzz_cli_token_streams_never_panic() {
+    let vocab: &[&str] = &[
+        "run", "resume", "sweep", "--", "---", "--=", "--seed", "--seed=", "--seed=9",
+        "--threads", "--checkpoint", "--checkpoint-every", "--csv", "=", "-x", "--model=",
+        "{round}", "checkpoint.ckpt", "-1", "1e309", "NaN", "", " ", "--flag=--flag",
+        "--a=b=c", "über", "💾", "\"", "--round-policy", "async:0", "deadline:-5",
+    ];
+    let mut rng = Rng::new(0xfa22_0004);
+    for case in 0..MUTATIONS {
+        let len = rng.below(10);
+        let mut argv: Vec<String> = (0..len).map(|_| vocab[rng.below(vocab.len())].into()).collect();
+        // Also splice random bytes into one token occasionally.
+        if !argv.is_empty() && rng.below(3) == 0 {
+            let i = rng.below(argv.len());
+            let mut b = argv[i].clone().into_bytes();
+            mutate_bytes(&mut rng, &mut b);
+            argv[i] = String::from_utf8_lossy(&b).into_owned();
+        }
+        let _ = must_not_panic(&format!("cli token stream #{case}"), || {
+            Args::parse(argv.clone().into_iter()).map(drop)
+        });
+    }
+}
+
+#[test]
+fn fuzz_cli_corpus_regressions() {
+    // Each cli_ corpus file holds one newline-separated argv.
+    let n = replay_corpus("cli_", |name, bytes| {
+        let text = String::from_utf8_lossy(&bytes).into_owned();
+        let argv: Vec<String> = text.lines().map(String::from).collect();
+        let _ = must_not_panic(name, || Args::parse(argv.into_iter()).map(drop));
+    });
+    assert!(n >= 2, "cli corpus lost files ({n} found)");
+}
+
+// ---------------------------------------------------------------------------
+// Policy string parsers
+// ---------------------------------------------------------------------------
+
+fn rand_policy_string(rng: &mut Rng) -> String {
+    let heads = [
+        "sync", "deadline", "over-select", "overselect", "async", "none", "off", "abort",
+        "resume", "checkpoint", "", "Sync", "dead line", "asy nc",
+    ];
+    let args = ["", "0", "1", "-1", "4", "1e309", "-0.0", "NaN", "inf", "9999999999999999999",
+        "1.5", "abc", ":", "4:4", "∞"];
+    let mut s = heads[rng.below(heads.len())].to_string();
+    if rng.below(2) == 0 {
+        s.push(':');
+        s.push_str(args[rng.below(args.len())]);
+    }
+    // Occasional raw byte damage.
+    if rng.below(4) == 0 {
+        let mut b = s.into_bytes();
+        mutate_bytes(rng, &mut b);
+        s = String::from_utf8_lossy(&b).into_owned();
+    }
+    s
+}
+
+#[test]
+fn fuzz_policy_parsers_never_panic() {
+    let defaults = PolicyDefaults::default();
+    let mut rng = Rng::new(0xfa22_0005);
+    for case in 0..MUTATIONS {
+        let s = rand_policy_string(&mut rng);
+        let _ = must_not_panic(&format!("round policy #{case} ({s:?})"), || {
+            RoundPolicy::parse(&s, &defaults).map(drop)
+        });
+        let _ = must_not_panic(&format!("churn policy #{case} ({s:?})"), || {
+            ChurnPolicy::parse(&s, 4).map(drop)
+        });
+    }
+    // Known-hostile values must be clean errors, not silent acceptance.
+    assert!(RoundPolicy::parse("deadline:NaN", &defaults).is_err());
+    assert!(RoundPolicy::parse("deadline:-1", &defaults).is_err());
+    assert!(RoundPolicy::parse("async:0", &defaults).is_err());
+    assert!(ChurnPolicy::parse("checkpoint:0", 4).is_err());
+    assert!(ChurnPolicy::parse("abort:3", 4).is_err());
+}

@@ -587,3 +587,137 @@ fn comm_accounting_prefix_cached_after_first_download() {
     assert!(r1.bytes_down > r2.bytes_down, "{} vs {}", r1.bytes_down, r2.bytes_down);
     assert_eq!(r1.bytes_up, r2.bytes_up);
 }
+
+#[test]
+fn checkpoint_resume_reproduces_uninterrupted_run_bit_for_bit() {
+    // The checkpoint/resume tentpole acceptance: a run checkpointed at
+    // EVERY round boundary, then resumed from each file in turn, must
+    // reproduce the uninterrupted run's whole RoundRecord history, CSV
+    // rows, and manifest history_sha256 bit for bit — including resumes
+    // that deliberately change the planner thread count.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = tiny();
+    let base = ProFL::default().run(&rt, &cfg).unwrap();
+    let base_rows = rows(&base);
+    let base_sha = history_sha(&base);
+
+    let tmp = std::env::temp_dir().join(format!("profl_resume_it_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let mut ccfg = cfg.clone();
+    ccfg.checkpoint = Some(tmp.join("r{round}.ckpt").display().to_string());
+    ccfg.checkpoint_every = 1;
+    let with_ckpt = ProFL::default().run(&rt, &ccfg).unwrap();
+    assert_eq!(base_rows, rows(&with_ckpt), "checkpointing must not perturb the run");
+
+    for k in 1..=base.rounds {
+        // Train and distill rounds both advance `ctx.round`, so a file
+        // exists at every boundary.
+        let path = tmp.join(format!("r{k}.ckpt"));
+        assert!(path.exists(), "missing checkpoint at boundary {k}");
+        let ck = profl::checkpoint::Checkpoint::read(&path).unwrap();
+        assert_eq!(ck.round, k);
+        let mut rcfg = ck.resolve_config().unwrap();
+        // Resume at a different thread count on odd boundaries: the
+        // contract holds at any worker count.
+        rcfg.fleet.threads = if k % 2 == 1 { 4 } else { 1 };
+        let resumed = profl::strategy::resume_strategy(&rt, &ck, &rcfg).unwrap();
+        assert_eq!(
+            base_rows,
+            rows(&resumed),
+            "resume from boundary {k} diverged from the uninterrupted run"
+        );
+        assert_eq!(base_sha, history_sha(&resumed), "boundary {k}: history_sha256");
+        assert_eq!(base.final_acc.to_bits(), resumed.final_acc.to_bits(), "boundary {k}");
+        assert_eq!(base.sim_time_s.to_bits(), resumed.sim_time_s.to_bits(), "boundary {k}");
+        assert_eq!(
+            (base.total_bytes_up, base.total_bytes_down),
+            (resumed.total_bytes_up, resumed.total_bytes_down),
+            "boundary {k}: comm totals"
+        );
+    }
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn every_strategy_resumes_bit_for_bit_from_a_mid_run_checkpoint() {
+    // Same contract across the whole strategy zoo (including the lazy
+    // pool and an async round policy, the states with real cross-round
+    // residue), resuming from a mid-run boundary file.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    for (name, lazy, policy) in [
+        ("paramaware", false, "sync"),
+        ("layerfreeze", true, "sync"),
+        ("elastic", false, "async"),
+    ] {
+        let mut cfg = tiny();
+        cfg.fleet.lazy_pool = lazy;
+        cfg.fleet.round_policy = policy.into();
+        let m = by_name(name).unwrap();
+        let base = m.run(&rt, &cfg).unwrap();
+        assert!(base.rounds >= 2, "{name}: need a mid-run boundary");
+
+        let tmp = std::env::temp_dir()
+            .join(format!("profl_resume_zoo_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let mut ccfg = cfg.clone();
+        ccfg.checkpoint = Some(tmp.join("r{round}.ckpt").display().to_string());
+        ccfg.checkpoint_every = 1;
+        m.run(&rt, &ccfg).unwrap();
+
+        let k = base.rounds / 2;
+        let ck = profl::checkpoint::Checkpoint::read(&tmp.join(format!("r{k}.ckpt"))).unwrap();
+        let rcfg = ck.resolve_config().unwrap();
+        let resumed = profl::strategy::resume_strategy(&rt, &ck, &rcfg).unwrap();
+        assert_eq!(rows(&base), rows(&resumed), "{name}: resume from boundary {k} diverged");
+        assert_eq!(
+            base.final_acc.to_bits(),
+            resumed.final_acc.to_bits(),
+            "{name}: final accuracy"
+        );
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}
+
+#[test]
+fn resume_rejects_a_config_that_hashes_differently() {
+    // Mismatch-rejection acceptance: resuming under a config whose
+    // hash-relevant knobs changed must fail with a diagnostic naming
+    // both fingerprints — never silently continue a different run.
+    let dir = require_artifacts!();
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = tiny();
+    let tmp = std::env::temp_dir().join(format!("profl_resume_rej_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let mut ccfg = cfg.clone();
+    ccfg.checkpoint = Some(tmp.join("r{round}.ckpt").display().to_string());
+    ccfg.checkpoint_every = 1;
+    ProFL::default().run(&rt, &ccfg).unwrap();
+    let ck = profl::checkpoint::Checkpoint::read(&tmp.join("r1.ckpt")).unwrap();
+    let mut bad = ck.resolve_config().unwrap();
+    bad.seed ^= 1; // hash-relevant
+    let err = profl::strategy::resume_strategy(&rt, &ck, &bad).unwrap_err().to_string();
+    assert!(err.contains("config fingerprint mismatch"), "got: {err}");
+    assert!(err.contains(&ck.config_sha256), "diagnostic must name the checkpoint hash: {err}");
+    // Hash-neutral knobs (threads) are fine.
+    let mut ok = ck.resolve_config().unwrap();
+    ok.fleet.threads = 8;
+    profl::strategy::resume_strategy(&rt, &ck, &ok).unwrap();
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+fn rows(s: &profl::RunSummary) -> Vec<String> {
+    s.history.iter().map(|r| r.csv_row()).collect()
+}
+
+/// The manifest's `history_sha256` recipe (telemetry::build_manifest):
+/// sha256 over newline-joined CSV rows.
+fn history_sha(s: &profl::RunSummary) -> String {
+    let mut text = String::new();
+    for r in &s.history {
+        text.push_str(&r.csv_row());
+        text.push('\n');
+    }
+    profl::telemetry::sha256_hex(text.as_bytes())
+}

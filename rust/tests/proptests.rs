@@ -9,20 +9,26 @@ use profl::aggregate::{
     staleness_discount, transition_decay, Aggregator, BufferedAggregator, SlicedAggregator,
 };
 use profl::RunConfig;
-use profl::clients::ClientPool;
+use profl::checkpoint::{Checkpoint, Dec, MidPhase};
+use profl::clients::{ClientCkpt, ClientPool, LazyCkpt, PoolCkptKind, PoolCkptState};
 use profl::coordinator::projection::{project_tensors, TrainableLayout};
+use profl::coordinator::PendingUpdate;
 use profl::data::{partition, Partition, SyntheticDataset};
 use profl::fleet::{
     simulate_round, AvailabilityTrace, ChurnPolicy, ClientWork, EventKind, FleetEngine,
     RoundPolicy,
 };
-use profl::freezing::{ls_slope, EffectiveMovement};
+use profl::freezing::{ls_slope, DetectorSnapshot, EffectiveMovement, Transition};
 use profl::json::Value;
 use profl::manifest::MemCoeffs;
 use profl::memory::{can_train, DeviceMemory, MemoryConfig};
+use profl::metrics::RoundRecord;
 use profl::rng::Rng;
 use profl::store::{ParamStore, Tensor};
-use profl::strategy::{depth_cap, elastic, layout_mem, BlockLayout};
+use profl::strategy::{
+    depth_cap, elastic, layout_mem, strategy_for_resume, BlockLayout, DistillPhase, ModelView,
+    Phase, StepFeedback, TrainPhase,
+};
 use std::collections::BTreeMap;
 
 /// Run `f` over `n` seeded cases; panics include the failing seed.
@@ -1029,5 +1035,467 @@ fn prop_elastic_windows_fit_budgets_and_dispatch_respects_fits_static() {
                 }
             }
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint/resume (checkpoint::, docs/CHECKPOINT.md)
+// ---------------------------------------------------------------------------
+
+/// Floats with teeth: specials show up often enough to catch any codec
+/// path that formats instead of preserving bit patterns.
+fn rand_f32x(rng: &mut Rng) -> f32 {
+    match rng.below(8) {
+        0 => f32::NAN,
+        1 => f32::INFINITY,
+        2 => f32::NEG_INFINITY,
+        3 => -0.0,
+        _ => rng.normal(),
+    }
+}
+
+fn rand_f64x(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => -0.0,
+        _ => rng.uniform(-1e9, 1e9),
+    }
+}
+
+/// Strings with quotes, escapes, spaces, and multi-byte code points.
+fn rand_name(rng: &mut Rng) -> String {
+    let set = ["a", "Z", "0", "_", "/", "é", "💾", "\"", "\\", " ", "\n"];
+    (0..rng.below(12)).map(|_| set[rng.below(set.len())]).collect()
+}
+
+fn rand_record(rng: &mut Rng) -> RoundRecord {
+    RoundRecord {
+        round: rng.below(1000),
+        stage: rand_name(rng),
+        step: rng.below(8),
+        train_loss: rand_f32x(rng),
+        train_acc: rand_f32x(rng),
+        test_acc: rand_f32x(rng),
+        effective_movement: rand_f64x(rng),
+        participants: rng.below(100),
+        fallback_participants: rng.below(100),
+        bytes_up: rng.next_u64() >> rng.below(40),
+        bytes_down: rng.next_u64() >> rng.below(40),
+        client_mem_bytes: rng.next_u64() >> rng.below(40),
+        sim_time_s: rand_f64x(rng),
+        stragglers: rng.below(20),
+        dropouts: rng.below(20),
+        late_merged: rng.below(20),
+        late_dropped: rng.below(20),
+        mean_staleness: rand_f64x(rng),
+        projected_merged: rng.below(20),
+        projected_dropped_params: rng.next_u64() >> rng.below(40),
+        transition_staleness: rand_f64x(rng),
+        interrupted: rng.below(20),
+        resumed: rng.below(20),
+        partial_merged: rng.below(20),
+        wasted_compute_s: rand_f64x(rng),
+    }
+}
+
+fn rand_client_ckpt(rng: &mut Rng, id: usize) -> ClientCkpt {
+    ClientCkpt {
+        id,
+        mem_rng: rng.next_u64(),
+        cursor: rng.below(5000),
+        prefix_version: rng.next_u64() >> 32,
+    }
+}
+
+fn rand_pool_state(rng: &mut Rng) -> PoolCkptState {
+    let kind = if rng.below(2) == 0 {
+        PoolCkptKind::Eager((0..rng.below(8)).map(|id| rand_client_ckpt(rng, id)).collect())
+    } else {
+        PoolCkptKind::Lazy(LazyCkpt {
+            tick: rng.next_u64() >> 16,
+            peak_resident: rng.below(64),
+            hits: rng.next_u64() >> 32,
+            misses: rng.next_u64() >> 32,
+            evictions: rng.next_u64() >> 32,
+            resident: (0..rng.below(6))
+                .map(|id| (rand_client_ckpt(rng, id), rng.next_u64() >> 16))
+                .collect(),
+            evicted: (10..10 + rng.below(6)).map(|id| rand_client_ckpt(rng, id)).collect(),
+        })
+    };
+    PoolCkptState { select_rng: rng.next_u64(), kind }
+}
+
+fn rand_train_phase(rng: &mut Rng) -> TrainPhase {
+    TrainPhase {
+        stage: rand_name(rng),
+        step: 1 + rng.below(6),
+        layout: BlockLayout { frozen: rng.below(3), depth: 1 + rng.below(4) },
+        train_artifact: rand_name(rng),
+        fallback_artifact: if rng.below(2) == 0 { None } else { Some(rand_name(rng)) },
+        eval_artifact: rand_name(rng),
+        observe_params: (0..rng.below(5)).map(|_| rand_name(rng)).collect(),
+        lr: rand_f32x(rng),
+        max_rounds: 1 + rng.below(30),
+        min_rounds: 1 + rng.below(5),
+        em_gated: rng.below(2) == 0,
+    }
+}
+
+fn rand_mid(rng: &mut Rng) -> Option<MidPhase> {
+    match rng.below(3) {
+        0 => None,
+        1 => Some(MidPhase::Train {
+            phase: rand_train_phase(rng),
+            detector: DetectorSnapshot {
+                deltas: (0..rng.below(4))
+                    .map(|_| (0..rng.below(6)).map(|_| rand_f32x(rng)).collect())
+                    .collect(),
+                prev: if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some((0..rng.below(6)).map(|_| rand_f32x(rng)).collect())
+                },
+                history: (0..rng.below(6)).map(|_| rand_f64x(rng)).collect(),
+                consecutive: rng.below(4),
+            },
+            used: rng.below(20),
+            froze: rng.below(2) == 0,
+        }),
+        _ => Some(MidPhase::Distill {
+            phase: DistillPhase {
+                stage: rand_name(rng),
+                step: rng.below(6),
+                artifact: rand_name(rng),
+                rounds: 1 + rng.below(10),
+                lr: rand_f32x(rng),
+            },
+            used: rng.below(10),
+        }),
+    }
+}
+
+/// A structurally valid but otherwise adversarially-random checkpoint:
+/// every field exercises the codec, including float specials and hostile
+/// strings. Transitions stay monotone and pending stays id-sorted — the
+/// two structural invariants the decoder enforces.
+fn rand_checkpoint(rng: &mut Rng) -> Checkpoint {
+    let mut transitions = Vec::new();
+    let (mut ver, mut round, mut t) = (0u64, 0usize, 0.0f64);
+    for _ in 0..rng.below(5) {
+        ver += 1 + rng.below(3) as u64;
+        round += rng.below(4);
+        t += rng.uniform(0.0, 50.0);
+        transitions.push(Transition { version: ver, round, sim_time_s: t });
+    }
+    let mut pending = Vec::new();
+    let mut client = 0usize;
+    for _ in 0..rng.below(4) {
+        client += 1 + rng.below(5);
+        pending.push(PendingUpdate {
+            client,
+            artifact: rand_name(rng),
+            prefix_version: rng.next_u64() >> 32,
+            dispatch_round: rng.below(100),
+            weight: rand_f64x(rng),
+            partial: rng.below(2) == 0,
+            bytes_up: rng.next_u64() >> rng.below(40),
+            tensors: (0..rng.below(3))
+                .map(|_| (0..rng.below(20)).map(|_| rand_f32x(rng)).collect())
+                .collect(),
+        });
+    }
+    let params: Vec<(String, Vec<usize>, Vec<f32>)> = (0..rng.below(5))
+        .map(|i| {
+            let shape = rand_shape(rng);
+            let data = rand_tensor(rng, &shape);
+            (format!("p{i:03}/{}", rand_name(rng).replace('\n', "n")), shape, data)
+        })
+        .collect();
+    Checkpoint {
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        config_sha256: rand_name(rng),
+        config_json: rand_name(rng),
+        round: rng.below(500),
+        sim_time_s: rand_f64x(rng),
+        prefix_version: rng.next_u64() >> 32,
+        transitions,
+        fleet_rng: rng.next_u64(),
+        threads: 1 + rng.below(8),
+        inflight: (0..rng.below(5))
+            .map(|_| profl::fleet::InFlightUpload {
+                client: rng.below(100),
+                arrive_s: rng.uniform(0.0, 1e6),
+                dispatch_round: rng.below(100),
+            })
+            .collect(),
+        pending,
+        params,
+        pool: rand_pool_state(rng),
+        records: (0..rng.below(4)).map(|_| rand_record(rng)).collect(),
+        strategy_name: rand_name(rng),
+        strategy_blob: (0..rng.below(40)).map(|_| (rng.next_u64() & 0xff) as u8).collect(),
+        mid: rand_mid(rng),
+    }
+}
+
+/// Where the digested payload begins: walk the header with the public
+/// [`Dec`] primitives (magic, format version, three strings, length).
+fn payload_offset(bytes: &[u8]) -> usize {
+    let mut d = Dec::new(&bytes[8..]);
+    d.u32().unwrap();
+    d.str().unwrap();
+    d.str().unwrap();
+    d.str().unwrap();
+    d.u64().unwrap();
+    bytes.len() - d.remaining()
+}
+
+#[test]
+fn prop_checkpoint_encode_decode_encode_is_byte_idempotent() {
+    cases(60, |rng| {
+        let ck = rand_checkpoint(rng);
+        let bytes = ck.encode();
+        let decoded = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(
+            decoded.encode(),
+            bytes,
+            "serialize→deserialize→serialize must be byte-identical"
+        );
+    });
+}
+
+#[test]
+fn prop_truncated_checkpoints_always_err_cleanly() {
+    cases(30, |rng| {
+        let bytes = rand_checkpoint(rng).encode();
+        for _ in 0..16 {
+            let cut = rng.below(bytes.len());
+            assert!(
+                Checkpoint::decode(&bytes[..cut]).is_err(),
+                "strict prefix of {cut} bytes must be rejected"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_payload_bit_flips_never_survive_the_digest() {
+    cases(30, |rng| {
+        let bytes = rand_checkpoint(rng).encode();
+        let start = payload_offset(&bytes);
+        assert!(start < bytes.len(), "every checkpoint has a payload");
+        for _ in 0..8 {
+            let mut evil = bytes.clone();
+            let i = start + rng.below(evil.len() - start);
+            evil[i] ^= 1 << rng.below(8);
+            assert!(Checkpoint::decode(&evil).is_err(), "flip at byte {i} must be detected");
+        }
+    });
+}
+
+#[test]
+fn prop_header_corruption_is_rejected() {
+    cases(30, |rng| {
+        let bytes = rand_checkpoint(rng).encode();
+        // Magic (8 bytes) + format version (4 bytes): any flip is fatal.
+        let mut evil = bytes.clone();
+        let i = rng.below(12);
+        evil[i] ^= 1 << rng.below(8);
+        assert!(Checkpoint::decode(&evil).is_err(), "header flip at byte {i}");
+    });
+}
+
+#[test]
+fn prop_pool_snapshot_rewinds_every_mutable_stream() {
+    // export_state → draws → import_state(snapshot) → draws again: the
+    // second pass must redraw selection, contention, and availability
+    // identically on both storage modes — the pool residues a resumed
+    // run depends on.
+    cases(10, |rng| {
+        let (mut eager, mut lazy, n) = pool_pair(rng);
+        let probe = MemCoeffs {
+            fixed_bytes: 350 * 1_000_000,
+            per_sample_bytes: 0,
+            params_total: 0,
+            params_trainable: 0,
+        };
+        for pool in [&mut eager, &mut lazy] {
+            for _ in 0..rng.below(4) {
+                let k = 1 + rng.below(n.min(20));
+                let _ = pool.select(k, &probe);
+            }
+            let snap = pool.export_state();
+            let ks: Vec<usize> = (0..5).map(|_| 1 + rng.below(n.min(20))).collect();
+            let first: Vec<_> = ks
+                .iter()
+                .map(|&k| {
+                    let s = pool.select(k, &probe);
+                    (s.trainers, s.fallback, s.availability)
+                })
+                .collect();
+            pool.import_state(&snap).unwrap();
+            let second: Vec<_> = ks
+                .iter()
+                .map(|&k| {
+                    let s = pool.select(k, &probe);
+                    (s.trainers, s.fallback, s.availability)
+                })
+                .collect();
+            assert_eq!(first, second, "rewound pool must redraw identically");
+        }
+        // Storage-mode mismatch is an error, not a corruption.
+        let es = eager.export_state();
+        assert!(lazy.import_state(&es).is_err(), "eager snapshot into lazy pool");
+    });
+}
+
+#[test]
+fn prop_engine_boundary_checkpoint_is_invisible_to_the_next_round() {
+    // Round 0 → checkpoint through the real codec → fresh engine (at a
+    // different thread count) → round 1 must equal the uninterrupted
+    // engine's round 1 exactly, and the fleet rng must land on the same
+    // stream position — across every round policy × churn policy.
+    cases(40, |rng| {
+        let seed = rng.next_u64();
+        let policy = match rng.below(4) {
+            0 => RoundPolicy::Sync,
+            1 => RoundPolicy::Deadline { secs: rng.uniform(5.0, 200.0) },
+            2 => RoundPolicy::OverSelect { extra: rng.below(4) },
+            _ => RoundPolicy::Async { buffer_k: 1 + rng.below(5), max_staleness: rng.below(6) },
+        };
+        let churn = match rng.below(4) {
+            0 => ChurnPolicy::None,
+            1 => ChurnPolicy::Abort,
+            2 => ChurnPolicy::Resume,
+            _ => ChurnPolicy::Checkpoint { epochs: 1 + rng.below(6) },
+        };
+        let works0 = rand_works(rng, true);
+        let works1 = rand_works(rng, true);
+        let keep = match policy {
+            RoundPolicy::OverSelect { .. } => 1 + rng.below(works0.len()),
+            _ => usize::MAX,
+        };
+
+        let mut e1 = FleetEngine::with_threads(1 + rng.below(4));
+        let mut r1 = Rng::new(seed);
+        let p0 = e1.simulate_round(0, 0.0, &works0, policy, keep, churn, &mut r1);
+        let p1 = e1.simulate_round(1, p0.end_s, &works1, policy, keep, churn, &mut r1);
+
+        let mut e2 = FleetEngine::with_threads(1 + rng.below(4));
+        let mut r2 = Rng::new(seed);
+        let q0 = e2.simulate_round(0, 0.0, &works0, policy, keep, churn, &mut r2);
+        assert_eq!(p0, q0, "same inputs, same round 0");
+        let mut ck = rand_checkpoint(rng);
+        ck.fleet_rng = r2.state();
+        ck.inflight = e2.inflight().to_vec();
+        ck.sim_time_s = q0.end_s;
+        let decoded = Checkpoint::decode(&ck.encode()).unwrap();
+        let mut e3 = FleetEngine::with_threads(1 + rng.below(4));
+        e3.restore_inflight(decoded.inflight);
+        let mut r3 = Rng::from_state(decoded.fleet_rng);
+        let q1 = e3.simulate_round(1, decoded.sim_time_s, &works1, policy, keep, churn, &mut r3);
+        assert_eq!(p1, q1, "resume at the boundary must be invisible");
+        assert_eq!(r1.state(), r3.state(), "rng stream positions must match");
+    });
+}
+
+#[test]
+fn prop_strategy_blobs_resume_the_schedule_from_any_cut() {
+    // Every strategy in the zoo, cut at a random point of a randomized
+    // schedule: the blob is save∘load∘save byte-idempotent and the
+    // resumed strategy emits the identical remaining phase stream.
+    cases(60, |rng| {
+        let counts: Vec<u64> =
+            (0..2 + rng.below(5)).map(|_| 1_000_000 + rng.below(4_000_000) as u64).collect();
+        let v = ModelView::synthetic(&counts);
+        let mut cfg = RunConfig::smoke("m");
+        cfg.max_rounds_total = 4 + rng.below(40);
+        cfg.strategy.elastic_phases =
+            if rng.below(2) == 0 { None } else { Some(1 + rng.below(6)) };
+        cfg.strategy.freeze_step_cap =
+            if rng.below(2) == 0 { None } else { Some(1 + rng.below(8)) };
+        let name = ["ProFL", "ParamAware", "LayerFreeze", "Elastic"][rng.below(4)];
+        let mut s = strategy_for_resume(name).unwrap();
+        let mut last: Option<StepFeedback> = None;
+        for _ in 0..rng.below(12) {
+            match s.next_phase(&v, &cfg, last.as_ref()) {
+                Some(Phase::Train(t)) => {
+                    last = Some(StepFeedback {
+                        rounds_used: 1 + rng.below(t.max_rounds.max(1)),
+                        froze: true,
+                    });
+                }
+                Some(_) => last = None,
+                None => break,
+            }
+        }
+        let blob = s.save_state();
+        let mut r = strategy_for_resume(name).unwrap();
+        r.load_state(&blob).unwrap();
+        assert_eq!(r.save_state(), blob, "{name}: save∘load∘save byte-idempotent");
+        let mut last2 = last;
+        let mut guard = 0;
+        loop {
+            let a = s.next_phase(&v, &cfg, last.as_ref());
+            let b = r.next_phase(&v, &cfg, last2.as_ref());
+            assert_eq!(a, b, "{name}: continuation diverged");
+            match a {
+                Some(Phase::Train(t)) => {
+                    let f = StepFeedback {
+                        rounds_used: 1 + rng.below(t.max_rounds.max(1)),
+                        froze: true,
+                    };
+                    last = Some(f);
+                    last2 = Some(f);
+                }
+                Some(_) => {
+                    last = None;
+                    last2 = None;
+                }
+                None => break,
+            }
+            guard += 1;
+            assert!(guard < 200, "{name}: schedule did not terminate");
+        }
+        // A mutated blob may or may not decode — but it must never panic.
+        let mut evil = blob.clone();
+        if !evil.is_empty() {
+            let i = rng.below(evil.len());
+            evil[i] ^= 1 << rng.below(8);
+            let _ = strategy_for_resume(name).unwrap().load_state(&evil);
+        }
+    });
+}
+
+#[test]
+fn prop_config_fingerprint_round_trips_and_detects_tampering() {
+    cases(30, |rng| {
+        let mut cfg = RunConfig::smoke("m");
+        cfg.seed = rng.next_u64();
+        cfg.dirichlet_alpha =
+            if rng.below(2) == 0 { None } else { Some(rng.uniform(0.05, 5.0)) };
+        cfg.fleet.lazy_pool = rng.below(2) == 0;
+        cfg.fleet.round_policy =
+            ["sync", "deadline", "over-select", "async"][rng.below(4)].into();
+        cfg.fleet.churn_policy = ["none", "abort", "resume", "checkpoint"][rng.below(4)].into();
+        let mut ck = rand_checkpoint(rng);
+        ck.config_json = profl::telemetry::config_value(&cfg).to_json();
+        ck.config_sha256 = profl::telemetry::config_sha256(&cfg);
+        let resolved = ck.resolve_config().unwrap();
+        assert_eq!(profl::telemetry::config_sha256(&resolved), ck.config_sha256);
+        // Hash-relevant tampering: rejected, naming the embedded hash.
+        let mut other = resolved.clone();
+        other.seed ^= 1;
+        let err = ck.verify_config(&other).unwrap_err().to_string();
+        assert!(err.contains("config fingerprint mismatch"), "got: {err}");
+        assert!(err.contains(&ck.config_sha256), "must name the embedded hash: {err}");
+        // Hash-neutral knobs: legal to change on resume by construction.
+        let mut neutral = resolved;
+        neutral.fleet.threads += 3;
+        neutral.checkpoint = Some("elsewhere-{round}.ckpt".into());
+        neutral.checkpoint_every = 7;
+        ck.verify_config(&neutral).unwrap();
     });
 }

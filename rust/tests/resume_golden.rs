@@ -1,0 +1,260 @@
+//! Differential resume tests against the committed golden traces.
+//!
+//! For every committed golden-trace configuration (round policy × churn
+//! policy) this suite re-runs the golden fleet, but **interrupts it at
+//! every round boundary k**: the pre-cut rounds run normally, the
+//! engine-relevant state (fleet rng stream, cross-round in-flight queue,
+//! virtual clock, round index) is captured into a real [`Checkpoint`],
+//! round-tripped through the full on-disk codec (encode → write → read →
+//! decode), and a **fresh** engine is reconstructed from the decoded
+//! checkpoint to run the remaining rounds. The merged pre-cut + post-cut
+//! event stream must equal the committed golden file **bit for bit** —
+//! same event order, same seq numbers, same f64 bit patterns — at 1 and
+//! 4 planner threads.
+//!
+//! There is deliberately no `UPDATE_GOLDEN` escape hatch here: this
+//! suite compares against the committed files directly, so a resume
+//! divergence can never be "regenerated away". CI runs the whole test
+//! tree under `PROFL_THREADS=4` as well.
+
+use profl::checkpoint::Checkpoint;
+use profl::clients::{PoolCkptKind, PoolCkptState};
+use profl::fleet::{
+    AvailabilityTrace, ChurnPolicy, ClientWork, EventKind, FleetEngine, RoundPlan, RoundPolicy,
+};
+use profl::rng::Rng;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// The golden fleet (duplicated from `golden_trace.rs` so the two suites
+/// stay independently readable): one always-on fast device, two
+/// duty-cycled devices, one phase-shifted device, one unreachable.
+fn golden_works(start: f64) -> Vec<ClientWork> {
+    let always = AvailabilityTrace::always_on();
+    let b = AvailabilityTrace { period_s: 32.0, duty: 0.5, phase_s: 0.0 };
+    let c = AvailabilityTrace { period_s: 32.0, duty: 0.5, phase_s: 20.0 };
+    let dead = AvailabilityTrace { period_s: 32.0, duty: 0.0, phase_s: 0.0 };
+    let spec: [(usize, AvailabilityTrace, f64, f64, f64); 5] = [
+        (0, always, 1.0, 4.0, 1.0),
+        (1, b, 2.0, 10.0, 5.0),
+        (2, b, 2.0, 20.0, 2.0),
+        (3, c, 1.0, 2.0, 1.0),
+        (4, dead, 1.0, 1.0, 1.0),
+    ];
+    spec.iter()
+        .map(|&(id, trace, down_s, train_s, up_s)| ClientWork {
+            id,
+            ready_s: trace.next_online(start),
+            down_s,
+            train_s,
+            up_s,
+            dropout_p: 0.0,
+            trace,
+        })
+        .collect()
+}
+
+fn fmt_f(t: f64) -> String {
+    format!("0x{:016x} ({:.3})", t.to_bits(), t)
+}
+
+fn fmt_ids(ids: &[usize]) -> String {
+    let parts: Vec<String> = ids.iter().map(|i| i.to_string()).collect();
+    format!("[{}]", parts.join(", "))
+}
+
+fn render_round(round: usize, plan: &RoundPlan) -> String {
+    let mut s = String::new();
+    writeln!(s, "# round {round} start={}", fmt_f(plan.start_s)).unwrap();
+    for e in &plan.events {
+        let (kind, client) = match e.kind {
+            EventKind::Dispatch { client } => ("Dispatch", Some(client)),
+            EventKind::TrainDone { client } => ("TrainDone", Some(client)),
+            EventKind::UploadDone { client } => ("UploadDone", Some(client)),
+            EventKind::LateUpload { client } => ("LateUpload", Some(client)),
+            EventKind::Interrupt { client } => ("Interrupt", Some(client)),
+            EventKind::Resume { client } => ("Resume", Some(client)),
+            EventKind::Deadline => ("Deadline", None),
+        };
+        let who = client.map(|c| format!("c{c}")).unwrap_or_else(|| "-".into());
+        writeln!(s, "ev seq={} t={} {kind} {who}", e.seq, fmt_f(e.time_s)).unwrap();
+    }
+    writeln!(s, "end={}", fmt_f(plan.end_s)).unwrap();
+    writeln!(
+        s,
+        "completers={} stragglers={} dropouts={} aborted={} deferred={}",
+        fmt_ids(&plan.completers),
+        fmt_ids(&plan.stragglers),
+        fmt_ids(&plan.dropouts),
+        fmt_ids(&plan.aborted),
+        fmt_ids(&plan.deferred),
+    )
+    .unwrap();
+    let partials: Vec<String> =
+        plan.partials.iter().map(|(c, f)| format!("({c},{f:.3})")).collect();
+    let late: Vec<String> = plan
+        .late_arrivals
+        .iter()
+        .map(|u| format!("({},{},{})", u.client, u.dispatch_round, fmt_f(u.arrive_s)))
+        .collect();
+    writeln!(
+        s,
+        "partials=[{}] late=[{}] interrupts={} resumes={} wasted={}",
+        partials.join(","),
+        late.join(","),
+        plan.interrupts,
+        plan.resumes,
+        fmt_f(plan.wasted_compute_s),
+    )
+    .unwrap();
+    s
+}
+
+const ROUNDS: usize = 2;
+
+/// Capture the engine-relevant slice of run state into a real
+/// [`Checkpoint`]. Run-level fields that the fleet layer does not own
+/// (params, pool residues, records, strategy blob) are stubbed with
+/// valid empty values — the strategy-level integration is covered by the
+/// `checkpoint`/`strategy` unit tests and the property suite.
+fn fleet_checkpoint(
+    round: usize,
+    start: f64,
+    threads: usize,
+    engine: &FleetEngine,
+    rng: &Rng,
+) -> Checkpoint {
+    Checkpoint {
+        crate_version: env!("CARGO_PKG_VERSION").to_string(),
+        config_sha256: "golden-fleet-slice".to_string(),
+        config_json: "{}".to_string(),
+        round,
+        sim_time_s: start,
+        prefix_version: 0,
+        transitions: Vec::new(),
+        fleet_rng: rng.state(),
+        threads,
+        inflight: engine.inflight().to_vec(),
+        pending: Vec::new(),
+        params: Vec::new(),
+        pool: PoolCkptState { select_rng: 0, kind: PoolCkptKind::Eager(Vec::new()) },
+        records: Vec::new(),
+        strategy_name: "ProFL".to_string(),
+        strategy_blob: Vec::new(),
+        mid: None,
+    }
+}
+
+/// Run the golden fleet with a kill at round boundary `cut`: rounds
+/// `0..cut` on one engine, a real checkpoint file round-trip, rounds
+/// `cut..ROUNDS` on an engine rebuilt from the decoded checkpoint.
+fn trace_with_cut(
+    policy: RoundPolicy,
+    keep: usize,
+    churn: ChurnPolicy,
+    threads: usize,
+    cut: usize,
+    tag: &str,
+) -> String {
+    let mut out = String::new();
+    let mut engine = FleetEngine::with_threads(threads);
+    let mut rng = Rng::new(77);
+    let mut start = 0.0;
+    let mut round = 0;
+    while round < cut {
+        let works = golden_works(start);
+        let plan = engine.simulate_round(round, start, &works, policy, keep, churn, &mut rng);
+        out.push_str(&render_round(round, &plan));
+        start = plan.end_s;
+        round += 1;
+    }
+    // Kill: everything below survives only through the checkpoint file.
+    let ck = fleet_checkpoint(round, start, threads, &engine, &rng);
+    let path = std::env::temp_dir()
+        .join(format!("profl_resume_golden_{}_{tag}_{cut}_{threads}.ckpt", std::process::id()));
+    ck.write(&path).unwrap();
+    let ck = Checkpoint::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    drop(engine);
+    drop(rng);
+    // Resume: fresh engine + rng reconstructed from the decoded file.
+    let mut engine = FleetEngine::with_threads(threads);
+    engine.restore_inflight(ck.inflight.clone());
+    let mut rng = Rng::from_state(ck.fleet_rng);
+    let mut start = ck.sim_time_s;
+    for round in ck.round..ROUNDS {
+        let works = golden_works(start);
+        let plan = engine.simulate_round(round, start, &works, policy, keep, churn, &mut rng);
+        out.push_str(&render_round(round, &plan));
+        start = plan.end_s;
+    }
+    out
+}
+
+const CHURNS: [(&str, ChurnPolicy); 4] = [
+    ("none", ChurnPolicy::None),
+    ("abort", ChurnPolicy::Abort),
+    ("resume", ChurnPolicy::Resume),
+    ("checkpoint", ChurnPolicy::Checkpoint { epochs: 4 }),
+];
+
+const POLICIES: [(&str, RoundPolicy, usize); 4] = [
+    ("sync", RoundPolicy::Sync, usize::MAX),
+    ("deadline", RoundPolicy::Deadline { secs: 21.0 }, usize::MAX),
+    ("overselect", RoundPolicy::OverSelect { extra: 2 }, 3),
+    ("async", RoundPolicy::Async { buffer_k: 2, max_staleness: 8 }, usize::MAX),
+];
+
+#[test]
+fn resume_at_every_boundary_matches_committed_goldens() {
+    let mut checked = 0;
+    for (pn, policy, keep) in POLICIES {
+        for (cn, churn) in CHURNS {
+            let name = format!("{pn}_{cn}");
+            let path = golden_dir().join(format!("{name}.txt"));
+            let want = match std::fs::read_to_string(&path) {
+                Ok(s) => s,
+                Err(_) => panic!("golden `{name}` missing at {path:?}; run the golden_trace suite"),
+            };
+            for threads in [1usize, 4] {
+                // cut=0 resumes from the initial boundary (degenerate full
+                // run through the codec); cut=1.. are genuine mid-run kills.
+                for cut in 0..ROUNDS {
+                    let got = trace_with_cut(policy, keep, churn, threads, cut, &name);
+                    assert_eq!(
+                        got, want,
+                        "{name}: resume at boundary {cut} with {threads} threads diverged \
+                         from the uninterrupted committed golden"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+    }
+    // 4 policies × 4 churns × 2 thread counts × 2 boundaries.
+    assert_eq!(checked, 64);
+}
+
+#[test]
+fn async_inflight_queue_survives_the_cut() {
+    // The async policy is the one with genuine cross-round state: a
+    // straggler's upload is in flight across the boundary. Make sure the
+    // checkpoint actually carries a non-empty queue at the cut (otherwise
+    // the test above would pass vacuously for the interesting case).
+    let (_, policy, keep) = POLICIES[3];
+    let mut engine = FleetEngine::with_threads(1);
+    let mut rng = Rng::new(77);
+    let works = golden_works(0.0);
+    let plan = engine.simulate_round(0, 0.0, &works, policy, keep, ChurnPolicy::None, &mut rng);
+    let ck = fleet_checkpoint(1, plan.end_s, 1, &engine, &rng);
+    assert!(
+        !ck.inflight.is_empty(),
+        "golden async round 0 should leave uploads in flight across the boundary"
+    );
+    let decoded = Checkpoint::decode(&ck.encode()).unwrap();
+    assert_eq!(decoded.inflight, ck.inflight);
+}
