@@ -2,7 +2,7 @@
 # (fmt + clippy + tests); see ROADMAP.md.
 
 .PHONY: check docs artifacts test-golden test-golden-update smoke-examples \
-        bench-json bench-json-smoke telemetry-smoke strategy-smoke \
+        bench-json bench-json-smoke perf-ab telemetry-smoke strategy-smoke \
         resume-smoke test-resume
 
 check:
@@ -72,6 +72,13 @@ bench-json:
 
 bench-json-smoke:
 	cargo bench --bench fleet_scale -- --smoke --json BENCH_fleet.json
+
+# Warmup-pinned A/B report (serial-vs-sharded speedups and the
+# pooled-vs-cloning merge columns) over a fresh bench run; pass
+# BASELINE=FILE to also diff against a prior BENCH_fleet.json via
+# scripts/perf_compare.sh (see docs/PERFORMANCE.md).
+perf-ab:
+	scripts/perf_ab.sh --smoke $(if $(BASELINE),--baseline $(BASELINE))
 
 # AOT-lower the JAX/Pallas models to HLO artifacts consumed by the Rust
 # runtime (L2/L1; see python/compile). The `compile` package lives under

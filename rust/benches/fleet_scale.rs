@@ -11,10 +11,17 @@
 //! stdout and, with `--json PATH`, to a `BENCH_fleet.json` document
 //! (`make bench-json`); see `docs/PERFORMANCE.md` for how to read it.
 //!
+//! A second matrix drives the cohort-merge path itself: `merge-pooled`
+//! vs `merge-cloning` rows × merge threads {1, 4, 8} through
+//! [`Aggregator`], asserting bit-identical stores across every config
+//! and O(1) tensor-buffer allocations per round on the pooled path
+//! (`--warmup N` pins the warm-up for `scripts/perf_ab.sh` A/B runs).
+//!
 //!   cargo bench --bench fleet_scale                    # full sweep (1e3..1e6)
 //!   cargo bench --bench fleet_scale -- --smoke         # CI-sized (1e3, 1e4)
 //!   cargo bench --bench fleet_scale -- --json BENCH_fleet.json
 
+use profl::aggregate::{Aggregator, TensorPool};
 use profl::bench_util::BenchResult;
 use profl::cli::Args;
 use profl::clients::ClientPool;
@@ -23,6 +30,7 @@ use profl::fleet::{ChurnPolicy, ClientWork, FleetEngine, FleetProfileConfig, Rou
 use profl::json::Value;
 use profl::manifest::MemCoeffs;
 use profl::rng::Rng;
+use profl::store::ParamStore;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -218,6 +226,118 @@ fn run_entry(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Cohort-merge workload: serial-vs-sharded × pooled-vs-cloning A/B rows.
+// ---------------------------------------------------------------------------
+
+/// Tensors in the synthetic merge model (fixed: the A/B story varies
+/// merge threads and buffer handling, never the model shape).
+const MERGE_TENSORS: usize = 16;
+/// Cohort updates merged per round.
+const MERGE_CLIENTS: usize = 32;
+
+/// Deterministic per-(round, client) update payload: identical values at
+/// any merge thread count and in both buffer modes, so the store-bit
+/// identity assertion in `main` is meaningful.
+fn fill_update(bufs: &mut Vec<Vec<f32>>, sizes: &[usize], seed: u64, round: usize, c: usize) {
+    let mut rng = Rng::new(seed ^ ((round as u64) << 20) ^ c as u64);
+    bufs.resize_with(sizes.len(), Vec::new);
+    for (buf, &n) in bufs.iter_mut().zip(sizes) {
+        buf.clear();
+        buf.extend((0..n).map(|_| rng.f32() - 0.5));
+    }
+}
+
+/// FNV-1a over the store's f32 bit patterns: the bit-identity witness.
+fn store_bits(store: &ParamStore, names: &[String]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for name in names {
+        for &v in &store.get(name).expect("merge tensor").data {
+            h ^= u64::from(v.to_bits());
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One merge A/B row: `rounds` cohort merges through [`Aggregator`] at
+/// `threads` merge workers, either recycling update buffers through a
+/// [`TensorPool`] (`pooled`) or cloning borrowed slices per client (the
+/// historical path). Unlike the fleet rows, the allocation counters here
+/// cover only the measured rounds, so pool warm-up misses don't pollute
+/// the O(1)-allocs witness. Returns the row plus the final store's bit
+/// hash for the cross-config determinism assertion.
+fn run_merge_entry(
+    elements: usize,
+    rounds: usize,
+    warmup: usize,
+    pooled: bool,
+    threads: usize,
+    seed: u64,
+) -> (EntryResult, u64) {
+    let per = (elements / MERGE_TENSORS).max(1);
+    let names: Vec<String> = (0..MERGE_TENSORS).map(|i| format!("layer{i:02}.w")).collect();
+    let mut shapes = BTreeMap::new();
+    for n in &names {
+        shapes.insert(n.clone(), vec![per]);
+    }
+    let sizes = vec![per; MERGE_TENSORS];
+    let t0 = Instant::now();
+    let mut store = ParamStore::init(&shapes, seed);
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut pool = TensorPool::new(MERGE_CLIENTS + 4);
+    let mut samples = Vec::with_capacity(rounds);
+    reset_peak();
+    let mut before = alloc_snap();
+    for round in 0..warmup + rounds {
+        if round == warmup {
+            before = alloc_snap();
+        }
+        let t = Instant::now();
+        let mut agg = Aggregator::new(&names, &store).expect("merge aggregator");
+        agg.set_merge_threads(threads);
+        for c in 0..MERGE_CLIENTS {
+            let weight = (c + 1) as f64;
+            if pooled {
+                let mut bufs = pool.acquire();
+                fill_update(&mut bufs, &sizes, seed, round, c);
+                agg.add_owned(bufs, weight);
+            } else {
+                let mut bufs = Vec::new();
+                fill_update(&mut bufs, &sizes, seed, round, c);
+                agg.add(&bufs, weight);
+            }
+        }
+        let recycle = if pooled { Some(&mut pool) } else { None };
+        agg.finish_stats(&mut store, recycle).expect("merge finish");
+        let dt = t.elapsed();
+        if round >= warmup {
+            samples.push(dt);
+        }
+    }
+    let after = alloc_snap();
+
+    let policy: &'static str = if pooled { "merge-pooled" } else { "merge-cloning" };
+    let name = format!("merge={elements:>9} {policy:<13} threads={threads}");
+    let result = BenchResult::new(name, samples);
+    result.report();
+    let measured = rounds.max(1) as u64;
+    let entry = EntryResult {
+        fleet: elements,
+        policy,
+        churn: "none",
+        threads,
+        build_ms,
+        stats: result.stats(),
+        alloc_bytes_per_round: (after.bytes - before.bytes) / measured,
+        allocs_per_round: (after.calls - before.calls) / measured,
+        peak_live_bytes: after.peak,
+        peak_materialized: 0,
+    };
+    (entry, store_bits(&store, &names))
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).expect("args");
     let smoke = args.flag("smoke");
@@ -229,6 +349,9 @@ fn main() {
     } else {
         (&[1_000, 100_000, 1_000_000], 8, 2)
     };
+    // Pinned warmup for A/B runs (`scripts/perf_ab.sh`): identical warmup
+    // on both sides keeps cold-path noise out of the comparison.
+    let warmup: usize = args.parse_opt("warmup").expect("warmup").unwrap_or(warmup);
     // Span-planner thread matrix: threads=1 is the inline baseline; the
     // other columns witness the wall-clock win of parallel planning at
     // identical (bit-for-bit) round plans.
@@ -273,6 +396,52 @@ fn main() {
         }
         println!();
     }
+
+    // Cohort-merge A/B matrix: the sharded-replay + buffer-pool rows.
+    // Element count is the same in smoke and full mode so the advisory
+    // perf_compare step always finds intersecting keys.
+    let merge_elements = 160_000;
+    println!(
+        "merge: elements={merge_elements} clients={MERGE_CLIENTS} threads={threads_matrix:?}"
+    );
+    let mut merge_rows = Vec::new();
+    let mut merge_bits = Vec::new();
+    for pooled in [true, false] {
+        for &threads in threads_matrix {
+            let (e, bits) = run_merge_entry(merge_elements, rounds, warmup, pooled, threads, seed);
+            merge_rows.push(e);
+            merge_bits.push(bits);
+        }
+    }
+    // Determinism witness: every merge thread count and both buffer
+    // modes must converge the store to bit-identical values.
+    assert!(
+        merge_bits.iter().all(|&b| b == merge_bits[0]),
+        "sharded/pooled merge diverged from the serial bits: {merge_bits:#x?}"
+    );
+    // The zero-copy witness: with the pool primed, the serial pooled row
+    // allocates O(1) buffers per round — fixed arena/op bookkeeping, not
+    // the O(clients × tensors) buffer churn of the cloning path.
+    let find = |policy: &str| {
+        merge_rows
+            .iter()
+            .find(|e| e.policy == policy && e.threads == 1)
+            .expect("serial merge row")
+    };
+    let (pooled_serial, cloning_serial) = (find("merge-pooled"), find("merge-cloning"));
+    assert!(
+        pooled_serial.allocs_per_round < 64,
+        "pooled merge allocates per-client buffers: {} allocs/round",
+        pooled_serial.allocs_per_round
+    );
+    assert!(
+        pooled_serial.allocs_per_round * 4 < cloning_serial.allocs_per_round,
+        "pooled merge ({} allocs/round) does not beat cloning ({} allocs/round)",
+        pooled_serial.allocs_per_round,
+        cloning_serial.allocs_per_round
+    );
+    entries.extend(merge_rows);
+    println!();
 
     if let Some(path) = json_path {
         let doc = to_json(cohort, rounds, seed, &entries);

@@ -1,11 +1,11 @@
 //! FedAvg aggregation (Eq. 1) — the per-round L3 hot path.
 //!
 //! Standard path: weighted average of same-shape client updates,
-//! accumulated in-place (`Aggregator`). HeteroFL path: width-scaled
-//! updates are corner-scattered into the full tensor with per-position
-//! weight normalization (`SlicedAggregator`) — positions no client
-//! covered keep the previous global value, exactly HeteroFL's rule.
-//! Async path: [`BufferedAggregator`] adds FedBuff-style
+//! accumulated in a contiguous arena (`Aggregator`). HeteroFL path:
+//! width-scaled updates are corner-scattered into the full tensor with
+//! per-position weight normalization (`SlicedAggregator`) — positions no
+//! client covered keep the previous global value, exactly HeteroFL's
+//! rule. Async path: [`BufferedAggregator`] adds FedBuff-style
 //! staleness-discounted merging on top of the standard accumulator and
 //! can `finish` after any `buffer_k` arrivals instead of a fixed cohort.
 //!
@@ -20,9 +20,36 @@
 //! allocation per round and a cache-friendly sweep per client, which is
 //! what keeps aggregation memcpy-bound at 100+-tensor models (see
 //! `docs/PERFORMANCE.md` and `benches/l3_hotpaths.rs`).
+//!
+//! # Deferred, shardable merge
+//!
+//! `add*` calls no longer touch the arena eagerly: each records a
+//! [`MergeOp`] (the update's tensors, by move or `Arc`, plus its weight)
+//! in call order, and `finish` *replays* the whole op list into the
+//! arena. With `merge_threads <= 1` the replay is literally the
+//! historical eager loop — same ops, same tensor order, same f32
+//! rounding. With more threads the arena is split into disjoint
+//! contiguous windows and every worker replays **all** ops restricted to
+//! its window; because the SIMD kernels are strictly elementwise (no
+//! cross-position reassociation), each element still receives exactly
+//! the same additions in exactly the same order, so the result is
+//! bit-identical to serial at any thread count — the same proof shape as
+//! the fleet engine's parallel span planner (`docs/SIMULATION.md`).
+//!
+//! Weight bookkeeping (`total_weight`, per-tensor masked weights) stays
+//! eager so it accumulates in call order, exactly as before.
+//!
+//! The deferred ops also carry the zero-copy story: the round loop hands
+//! its update buffers over by move ([`Aggregator::add_owned`]) or by
+//! refcount bump ([`Aggregator::add_shared`]) instead of cloning, and
+//! [`Aggregator::finish_stats`] can return the spent buffers to a
+//! [`TensorPool`] so steady-state rounds allocate O(1) tensor buffers
+//! (witnessed by the counting-allocator rows in `benches/fleet_scale.rs`).
 
 use crate::store::{ParamStore, Tensor};
 use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// FedBuff-style staleness discount: an update dispatched `staleness`
 /// rounds ago keeps `1 / (1 + staleness)^alpha` of its sample weight.
@@ -53,7 +80,10 @@ pub fn transition_decay(decay: f64, transitions: u64) -> f64 {
 /// reassociates across positions), so each kernel is bit-identical to
 /// the naive scalar loop it replaces — regression-tested against the
 /// pre-SIMD nested-vec reference below and raced in
-/// `benches/l3_hotpaths.rs`.
+/// `benches/l3_hotpaths.rs`. The elementwise property is also what makes
+/// the sharded merge exact: running `axpy` over any sub-slice of the
+/// arena produces the same per-element bits as running it over the whole
+/// slice.
 pub(crate) mod simd {
     /// Chunk width: 8 f32 lanes = one AVX2 register, two NEON registers.
     const LANES: usize = 8;
@@ -104,19 +134,212 @@ pub(crate) mod simd {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Zero-copy update handles + deferred merge ops
+// ---------------------------------------------------------------------------
+
+/// A full update's tensors, held by the aggregator without copying:
+/// either moved in (`Owned`) or shared by refcount (`Shared` — the
+/// pending/in-flight path, where the coordinator's bookkeeping and the
+/// merge both need the same buffers).
+enum UpdateTensors {
+    Owned(Vec<Vec<f32>>),
+    Shared(Arc<Vec<Vec<f32>>>),
+}
+
+impl UpdateTensors {
+    fn tensors(&self) -> &[Vec<f32>] {
+        match self {
+            UpdateTensors::Owned(v) => v,
+            UpdateTensors::Shared(a) => a,
+        }
+    }
+}
+
+/// One deferred client contribution, recorded by `add*` in call order
+/// and replayed by `finish` — serially or sharded, bit-identically.
+enum MergeOp {
+    /// Full-cover update: tensor `i` accumulates at arena offset `i`.
+    Full { tensors: UpdateTensors, weight: f64 },
+    /// Masked (suffix-projected) update: each part pairs a tensor with
+    /// its index into the aggregator's name list.
+    Masked { parts: Vec<(usize, Vec<f32>)>, weight: f64 },
+}
+
+/// Timing report from one merge replay, for the
+/// `fleet.merge_utilization` telemetry gauge and the perf harness.
+/// Mirrors the span planner's worker accounting (`docs/SIMULATION.md`):
+/// wall time and utilization vary run to run, but the merged bits never
+/// do.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeStats {
+    /// Worker threads used for the replay (1 = inline serial merge).
+    pub workers: usize,
+    /// Sum of per-worker busy nanoseconds.
+    pub busy_ns: u64,
+    /// Wall-clock nanoseconds of the whole replay.
+    pub wall_ns: u64,
+}
+
+impl MergeStats {
+    /// Mean worker busy fraction in `[0, 1]`: `busy / (workers * wall)`.
+    /// Exactly `1.0` for the serial path (one worker is busy the whole
+    /// wall time by construction).
+    pub fn utilization(&self) -> f64 {
+        if self.workers <= 1 || self.wall_ns == 0 {
+            1.0
+        } else {
+            (self.busy_ns as f64 / (self.workers as f64 * self.wall_ns as f64)).min(1.0)
+        }
+    }
+}
+
+/// Reusable pool of update-tensor buffers (`Vec<Vec<f32>>`), the
+/// aggregation analogue of the fleet engine's `RoundScratch`: the round
+/// loop `acquire`s a buffer set per client, fills it, moves it into the
+/// aggregator, and `finish_stats` releases the spent buffers back — so
+/// steady-state rounds reuse the same allocations instead of
+/// allocating/freeing one buffer per tensor per client per round.
+///
+/// `acquire` may return a buffer that still holds previous contents;
+/// callers clear or overwrite before use. The free list is capped so a
+/// one-off burst (an over-selected cohort) cannot pin memory forever.
+pub struct TensorPool {
+    free: Vec<Vec<Vec<f32>>>,
+    cap: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl TensorPool {
+    /// Pool retaining at most `cap` free buffer sets.
+    pub fn new(cap: usize) -> Self {
+        TensorPool { free: Vec::new(), cap, hits: 0, misses: 0 }
+    }
+
+    /// Take a buffer set — recycled if one is free (hit), empty
+    /// otherwise (miss). Recycled sets keep their inner capacities, so a
+    /// clear-and-refill pattern allocates nothing at steady state.
+    pub fn acquire(&mut self) -> Vec<Vec<f32>> {
+        match self.free.pop() {
+            Some(b) => {
+                self.hits += 1;
+                b
+            }
+            None => {
+                self.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a spent buffer set to the free list (dropped if the list
+    /// is at capacity).
+    pub fn release(&mut self, bufs: Vec<Vec<f32>>) {
+        if self.free.len() < self.cap {
+            self.free.push(bufs);
+        }
+    }
+
+    /// Acquires served from the free list so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Acquires that had to hand out a fresh (empty) buffer set.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Buffer sets currently parked on the free list.
+    pub fn free_len(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Apply one op to the arena window `[lo, lo + window.len())`,
+/// intersecting each tensor's flat range with the window. With the full
+/// arena as the window this is exactly the historical eager `add` body.
+fn apply_op(op: &MergeOp, offsets: &[usize], window: &mut [f32], lo: usize) {
+    let hi = lo + window.len();
+    match op {
+        MergeOp::Full { tensors, weight } => {
+            let w = *weight as f32;
+            for (i, t) in tensors.tensors().iter().enumerate() {
+                axpy_window(offsets[i], t, w, window, lo, hi);
+            }
+        }
+        MergeOp::Masked { parts, weight } => {
+            let w = *weight as f32;
+            for (idx, t) in parts {
+                axpy_window(offsets[*idx], t, w, window, lo, hi);
+            }
+        }
+    }
+}
+
+/// `axpy` the part of tensor `t` (arena offset `off`) that falls inside
+/// the window `[lo, hi)`. Elementwise, so sub-slicing never changes bits.
+fn axpy_window(off: usize, t: &[f32], w: f32, window: &mut [f32], lo: usize, hi: usize) {
+    let a = off.max(lo);
+    let b = (off + t.len()).min(hi);
+    if a < b {
+        simd::axpy(&mut window[a - lo..b - lo], &t[a - off..b - off], w);
+    }
+}
+
+/// Replay the op list into the arena, serially (`threads <= 1`) or over
+/// `threads` disjoint contiguous windows. Every worker replays all ops
+/// restricted to its window, so each element sees the same additions in
+/// the same order as the serial sweep — bit-identical at any count.
+fn replay_ops(ops: &[MergeOp], offsets: &[usize], acc: &mut [f32], threads: usize) -> MergeStats {
+    let wall = Instant::now();
+    if threads <= 1 || acc.is_empty() || ops.is_empty() {
+        for op in ops {
+            apply_op(op, offsets, acc, 0);
+        }
+        let ns = wall.elapsed().as_nanos() as u64;
+        return MergeStats { workers: 1, busy_ns: ns, wall_ns: ns };
+    }
+    let chunk = acc.len().div_ceil(threads);
+    let busy: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = acc
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(w, slice)| {
+                let lo = w * chunk;
+                s.spawn(move || {
+                    let t0 = Instant::now();
+                    for op in ops {
+                        apply_op(op, offsets, slice, lo);
+                    }
+                    t0.elapsed().as_nanos() as u64
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("merge worker panicked")).collect()
+    });
+    MergeStats {
+        workers: busy.len(),
+        busy_ns: busy.iter().sum(),
+        wall_ns: wall.elapsed().as_nanos() as u64,
+    }
+}
+
 /// Contiguous accumulation arena shared by the aggregators: one flat
 /// `Vec<f32>` holding every tensor's accumulator back to back, addressed
 /// by per-tensor offsets. Compared to the historical `Vec<Vec<f32>>`,
-/// construction is a single allocation and the per-client `add` sweep
-/// walks one contiguous region — at 100+-tensor models the pointer-chase
-/// and allocator overhead dominate, which is exactly where the round hot
+/// construction is a single allocation and the per-client sweep walks
+/// one contiguous region — at 100+-tensor models the pointer-chase and
+/// allocator overhead dominate, which is exactly where the round hot
 /// path lives (see `benches/l3_hotpaths.rs` and `docs/PERFORMANCE.md`).
 /// Element order inside each tensor (and the tensor order itself) is
 /// unchanged, so every accumulation is bit-identical to the nested
-/// layout.
+/// layout. Shapes are *not* stored here: only the sliced path needs
+/// them, so the plain/buffered aggregators no longer clone a shape vec
+/// per tensor per round.
 struct Arena {
     names: Vec<String>,
-    shapes: Vec<Vec<usize>>,
     /// Tensor `i` occupies `acc[offsets[i]..offsets[i + 1]]`.
     offsets: Vec<usize>,
     acc: Vec<f32>,
@@ -125,17 +348,14 @@ struct Arena {
 impl Arena {
     /// Lay out an arena for `names`, sized from the store's tensors.
     fn new(names: &[String], store: &ParamStore) -> Result<Self> {
-        let mut shapes = Vec::with_capacity(names.len());
         let mut offsets = Vec::with_capacity(names.len() + 1);
         let mut total = 0usize;
         offsets.push(0);
         for n in names {
-            let t = store.get(n)?;
-            total += t.len();
+            total += store.get(n)?.len();
             offsets.push(total);
-            shapes.push(t.shape.clone());
         }
-        Ok(Arena { names: names.to_vec(), shapes, offsets, acc: vec![0.0; total] })
+        Ok(Arena { names: names.to_vec(), offsets, acc: vec![0.0; total] })
     }
 
     /// Number of tensors in the layout.
@@ -152,59 +372,107 @@ impl Arena {
     fn slot_ref(&self, i: usize) -> &[f32] {
         &self.acc[self.offsets[i]..self.offsets[i + 1]]
     }
+
+    /// Tensor `i`'s expected element count.
+    fn slot_len(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
 }
 
 /// In-place weighted-average accumulator over a fixed parameter list.
-/// Accumulates into a contiguous arena (same arithmetic, same order —
-/// bit-identical to the historical nested-vec layout, regression-tested).
+/// `add*` records deferred ops; `finish` replays them into a contiguous
+/// arena — serially or sharded, bit-identical either way (see the module
+/// docs for the proof shape).
 pub struct Aggregator {
     arena: Arena,
+    /// Deferred contributions in call order.
+    ops: Vec<MergeOp>,
     total_weight: f64,
     /// Per-tensor weight contributed by masked (suffix-projected) adds;
     /// allocated on the first [`Self::add_masked`] so the full-cover path
     /// is untouched (the bit-for-bit degeneracy contract).
     masked_weight: Option<Vec<f64>>,
+    merge_threads: usize,
 }
 
 impl Aggregator {
     /// Build an accumulator for `names`, sized from the store's tensors.
     pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
-        Ok(Aggregator { arena: Arena::new(names, store)?, total_weight: 0.0, masked_weight: None })
+        Ok(Aggregator {
+            arena: Arena::new(names, store)?,
+            ops: Vec::new(),
+            total_weight: 0.0,
+            masked_weight: None,
+            merge_threads: 1,
+        })
     }
 
-    /// Add one client's update set (tensors in `names` order). Accepts any
-    /// slice-of-slices so the round loop can feed PJRT outputs without
-    /// cloning (EXPERIMENTS.md §Perf iteration 3).
+    /// Worker threads for the `finish` replay (default 1 = the inline
+    /// serial merge). Results are bit-identical at any count; >1 only
+    /// buys wall-clock time on large cohorts.
+    pub fn set_merge_threads(&mut self, threads: usize) {
+        self.merge_threads = threads.max(1);
+    }
+
+    /// Add one client's update set (tensors in `names` order), copying
+    /// the slices into an owned op. Prefer [`Self::add_owned`] /
+    /// [`Self::add_shared`] on the round hot path — this borrowed form
+    /// exists for callers that genuinely only have views.
     pub fn add<T: AsRef<[f32]>>(&mut self, tensors: &[T], weight: f64) {
-        debug_assert_eq!(tensors.len(), self.arena.len());
-        let w = weight as f32;
-        for (i, t) in tensors.iter().enumerate() {
-            let t = t.as_ref();
-            let a = self.arena.slot(i);
-            debug_assert_eq!(a.len(), t.len());
-            simd::axpy(a, t, w);
-        }
+        let owned: Vec<Vec<f32>> = tensors.iter().map(|t| t.as_ref().to_vec()).collect();
+        self.add_owned(owned, weight);
+    }
+
+    /// Add one client's update set by move — no copy; the buffers are
+    /// held until `finish` replays them (and can then be recycled via a
+    /// [`TensorPool`]).
+    pub fn add_owned(&mut self, tensors: Vec<Vec<f32>>, weight: f64) {
+        self.debug_check_full(&tensors);
+        self.ops.push(MergeOp::Full { tensors: UpdateTensors::Owned(tensors), weight });
         self.total_weight += weight;
     }
 
-    /// Add a *masked* update covering only part of the parameter list:
-    /// each entry of `parts` pairs a tensor with its index into the
-    /// aggregator's name list. This is how a stale update projected onto
-    /// the still-trained suffix merges — the frozen-block tensors it used
-    /// to carry are simply absent. Masked weight is tracked per tensor;
-    /// tensors nobody covers keep the previous global value at
-    /// [`Self::finish`] (mirroring [`SlicedAggregator`]'s rule).
+    /// Add one client's update set by `Arc` refcount bump — the
+    /// zero-copy path for version-stamped pending/in-flight updates the
+    /// coordinator also keeps a handle to.
+    pub fn add_shared(&mut self, tensors: Arc<Vec<Vec<f32>>>, weight: f64) {
+        self.debug_check_full(&tensors);
+        self.ops.push(MergeOp::Full { tensors: UpdateTensors::Shared(tensors), weight });
+        self.total_weight += weight;
+    }
+
+    fn debug_check_full(&self, tensors: &[Vec<f32>]) {
+        debug_assert_eq!(tensors.len(), self.arena.len());
+        if cfg!(debug_assertions) {
+            for (i, t) in tensors.iter().enumerate() {
+                debug_assert_eq!(t.len(), self.arena.slot_len(i), "tensor {i} length drifted");
+            }
+        }
+    }
+
+    /// Add a *masked* update covering only part of the parameter list
+    /// (copying the parts): each entry of `parts` pairs a tensor with
+    /// its index into the aggregator's name list. This is how a stale
+    /// update projected onto the still-trained suffix merges — the
+    /// frozen-block tensors it used to carry are simply absent. Masked
+    /// weight is tracked per tensor; tensors nobody covers keep the
+    /// previous global value at [`Self::finish`] (mirroring
+    /// [`SlicedAggregator`]'s rule).
     pub fn add_masked<T: AsRef<[f32]>>(&mut self, parts: &[(usize, T)], weight: f64) {
+        let owned: Vec<(usize, Vec<f32>)> =
+            parts.iter().map(|(i, t)| (*i, t.as_ref().to_vec())).collect();
+        self.add_masked_owned(owned, weight);
+    }
+
+    /// [`Self::add_masked`] by move — no copy of the projected parts.
+    pub fn add_masked_owned(&mut self, parts: Vec<(usize, Vec<f32>)>, weight: f64) {
         let n = self.arena.len();
         let masked = self.masked_weight.get_or_insert_with(|| vec![0.0; n]);
-        let w = weight as f32;
-        for (idx, t) in parts {
-            let t = t.as_ref();
-            let a = self.arena.slot(*idx);
-            debug_assert_eq!(a.len(), t.len(), "projected tensor shape drifted");
-            simd::axpy(a, t, w);
+        for (idx, t) in &parts {
+            debug_assert_eq!(t.len(), self.arena.slot_len(*idx), "projected tensor shape drifted");
             masked[*idx] += weight;
         }
+        self.ops.push(MergeOp::Masked { parts, weight });
     }
 
     /// Normalize and write back into the store. Fails on a zero total
@@ -214,38 +482,74 @@ impl Aggregator {
     /// (`total_weight + masked_weight[i]`) and tensors that received no
     /// weight at all keep their previous store value; without them the
     /// historical single-division path runs unchanged, bit for bit.
-    pub fn finish(mut self, store: &mut ParamStore) -> Result<()> {
-        let Some(masked) = self.masked_weight.take() else {
-            // Full-cover path (every add spanned all tensors): one shared
-            // weight, one shared reciprocal — the pre-projection
-            // arithmetic, unchanged (the flat sweep scales tensors in
-            // exactly the per-tensor order the nested layout did).
-            if self.total_weight <= 0.0 {
-                bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
+    pub fn finish(self, store: &mut ParamStore) -> Result<()> {
+        self.finish_stats(store, None).map(|_| ())
+    }
+
+    /// [`Self::finish`] returning replay timing, optionally recycling
+    /// the spent update buffers into `pool` (owned buffers always;
+    /// shared ones only when the aggregator held the last reference).
+    pub fn finish_stats(
+        mut self,
+        store: &mut ParamStore,
+        pool: Option<&mut TensorPool>,
+    ) -> Result<MergeStats> {
+        let masked = self.masked_weight.take();
+        match &masked {
+            None if self.total_weight <= 0.0 => {
+                bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight)
             }
-            let inv = 1.0 / self.total_weight as f32;
-            simd::scale(&mut self.arena.acc, inv);
-            // Write through the store's existing buffers: no per-tensor
-            // allocation at finish (the pre-arena code moved its nested
-            // vecs; the arena's one memcpy per tensor replaces that).
-            for (i, name) in self.arena.names.iter().enumerate() {
-                store.get_mut(name)?.data.copy_from_slice(self.arena.slot_ref(i));
+            Some(m) if self.total_weight <= 0.0 && m.iter().all(|&w| w <= 0.0) => {
+                bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight)
             }
-            return Ok(());
-        };
-        if self.total_weight <= 0.0 && masked.iter().all(|&w| w <= 0.0) {
-            bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
+            _ => {}
         }
-        for (i, mw) in masked.iter().enumerate() {
-            let w = self.total_weight + mw;
-            if w <= 0.0 {
-                continue; // uncovered tensor: keep the previous global value
+        let stats =
+            replay_ops(&self.ops, &self.arena.offsets, &mut self.arena.acc, self.merge_threads);
+        match masked {
+            None => {
+                // Full-cover path (every add spanned all tensors): one
+                // shared weight, one shared reciprocal — the
+                // pre-projection arithmetic, unchanged (the flat sweep
+                // scales tensors in exactly the per-tensor order the
+                // nested layout did).
+                let inv = 1.0 / self.total_weight as f32;
+                simd::scale(&mut self.arena.acc, inv);
+                // Write through the store's existing buffers: no
+                // per-tensor allocation at finish.
+                for (i, name) in self.arena.names.iter().enumerate() {
+                    store.get_mut(name)?.data.copy_from_slice(self.arena.slot_ref(i));
+                }
             }
-            let inv = 1.0 / w as f32;
-            simd::scale(self.arena.slot(i), inv);
-            store.get_mut(&self.arena.names[i])?.data.copy_from_slice(self.arena.slot_ref(i));
+            Some(masked) => {
+                for (i, mw) in masked.iter().enumerate() {
+                    let w = self.total_weight + mw;
+                    if w <= 0.0 {
+                        continue; // uncovered tensor: keep the previous global value
+                    }
+                    let inv = 1.0 / w as f32;
+                    simd::scale(self.arena.slot(i), inv);
+                    store
+                        .get_mut(&self.arena.names[i])?
+                        .data
+                        .copy_from_slice(self.arena.slot_ref(i));
+                }
+            }
         }
-        Ok(())
+        if let Some(pool) = pool {
+            for op in self.ops.drain(..) {
+                match op {
+                    MergeOp::Full { tensors: UpdateTensors::Owned(b), .. } => pool.release(b),
+                    MergeOp::Full { tensors: UpdateTensors::Shared(a), .. } => {
+                        if let Ok(b) = Arc::try_unwrap(a) {
+                            pool.release(b);
+                        }
+                    }
+                    MergeOp::Masked { .. } => {}
+                }
+            }
+        }
+        Ok(stats)
     }
 
     /// Total sample weight accumulated so far (NOT a client count: `add`
@@ -270,7 +574,8 @@ impl Aggregator {
 ///
 /// Internally this composes the plain [`Aggregator`], so a merge at
 /// staleness 0 (discount exactly 1.0) is arithmetically identical to the
-/// synchronous FedAvg path, bit for bit.
+/// synchronous FedAvg path, bit for bit — and it inherits the deferred
+/// sharded replay and zero-copy add paths unchanged.
 pub struct BufferedAggregator {
     inner: Aggregator,
     alpha: f64,
@@ -286,10 +591,34 @@ impl BufferedAggregator {
         Ok(BufferedAggregator { inner, alpha, merged: 0, staleness_sum: 0 })
     }
 
-    /// Merge one update that was dispatched `staleness` rounds ago.
+    /// Worker threads for the `finish` replay (see
+    /// [`Aggregator::set_merge_threads`]).
+    pub fn set_merge_threads(&mut self, threads: usize) {
+        self.inner.set_merge_threads(threads);
+    }
+
+    /// Merge one update that was dispatched `staleness` rounds ago
+    /// (copying the slices; prefer the owned/shared forms on hot paths).
     pub fn add<T: AsRef<[f32]>>(&mut self, tensors: &[T], weight: f64, staleness: usize) {
         let w = weight * staleness_discount(staleness, self.alpha);
         self.inner.add(tensors, w);
+        self.merged += 1;
+        self.staleness_sum += staleness;
+    }
+
+    /// [`Self::add`] by move — no copy.
+    pub fn add_owned(&mut self, tensors: Vec<Vec<f32>>, weight: f64, staleness: usize) {
+        let w = weight * staleness_discount(staleness, self.alpha);
+        self.inner.add_owned(tensors, w);
+        self.merged += 1;
+        self.staleness_sum += staleness;
+    }
+
+    /// [`Self::add`] by `Arc` refcount bump — the zero-copy path for
+    /// pending updates the coordinator still holds.
+    pub fn add_shared(&mut self, tensors: Arc<Vec<Vec<f32>>>, weight: f64, staleness: usize) {
+        let w = weight * staleness_discount(staleness, self.alpha);
+        self.inner.add_shared(tensors, w);
         self.merged += 1;
         self.staleness_sum += staleness;
     }
@@ -309,6 +638,20 @@ impl BufferedAggregator {
     ) {
         let w = weight * staleness_discount(staleness, self.alpha) * extra_decay;
         self.inner.add_masked(parts, w);
+        self.merged += 1;
+        self.staleness_sum += staleness;
+    }
+
+    /// [`Self::add_projected`] by move — no copy of the projected parts.
+    pub fn add_projected_owned(
+        &mut self,
+        parts: Vec<(usize, Vec<f32>)>,
+        weight: f64,
+        staleness: usize,
+        extra_decay: f64,
+    ) {
+        let w = weight * staleness_discount(staleness, self.alpha) * extra_decay;
+        self.inner.add_masked_owned(parts, w);
         self.merged += 1;
         self.staleness_sum += staleness;
     }
@@ -348,41 +691,89 @@ impl BufferedAggregator {
     pub fn finish(self, store: &mut ParamStore) -> Result<()> {
         self.inner.finish(store)
     }
+
+    /// [`Self::finish`] returning replay timing, optionally recycling
+    /// spent buffers into `pool`.
+    pub fn finish_stats(
+        self,
+        store: &mut ParamStore,
+        pool: Option<&mut TensorPool>,
+    ) -> Result<MergeStats> {
+        self.inner.finish_stats(store, pool)
+    }
+}
+
+/// One deferred width-sliced contribution (HeteroFL path).
+struct SlicedOp {
+    sub_shapes: Vec<Vec<usize>>,
+    tensors: Vec<Vec<f32>>,
+    weight: f64,
 }
 
 /// HeteroFL-style aggregation over width-heterogeneous updates. Value
 /// and per-position weight accumulators live in two flat arenas sharing
 /// one offset table (same contiguity rationale — and bit-identical
 /// arithmetic — as [`Aggregator`]'s arena).
+///
+/// Like [`Aggregator`], adds are deferred and `finish` replays them;
+/// the sharded replay splits at whole-tensor boundaries (corner
+/// scattering walks multi-dimensional strides, so element ranges inside
+/// a tensor are not independently addressable), with each worker
+/// replaying every op restricted to its tensor range — per-position
+/// accumulation order is unchanged, so results are bit-identical to
+/// serial at any thread count.
 pub struct SlicedAggregator {
     arena: Arena,
+    /// Full tensor shapes (only the sliced path needs them — corner
+    /// scattering is shape-aware).
+    shapes: Vec<Vec<usize>>,
     /// Per-position weights, laid out exactly like `arena.acc`.
     wacc: Vec<f32>,
+    /// Deferred contributions in call order.
+    ops: Vec<SlicedOp>,
     total_weight: f64,
+    merge_threads: usize,
 }
 
 impl SlicedAggregator {
     /// Build a sliced accumulator for `names`, sized from the store.
     pub fn new(names: &[String], store: &ParamStore) -> Result<Self> {
         let arena = Arena::new(names, store)?;
+        let mut shapes = Vec::with_capacity(names.len());
+        for n in names {
+            shapes.push(store.get(n)?.shape.clone());
+        }
         let wacc = vec![0.0; arena.acc.len()];
-        Ok(SlicedAggregator { arena, wacc, total_weight: 0.0 })
+        Ok(SlicedAggregator {
+            arena,
+            shapes,
+            wacc,
+            ops: Vec::new(),
+            total_weight: 0.0,
+            merge_threads: 1,
+        })
+    }
+
+    /// Worker threads for the `finish` replay (see
+    /// [`Aggregator::set_merge_threads`]); sharding is at whole-tensor
+    /// granularity here.
+    pub fn set_merge_threads(&mut self, threads: usize) {
+        self.merge_threads = threads.max(1);
     }
 
     /// Add a client's update whose tensors are corner slices of the full
-    /// shapes (sub_shapes[i] element-wise ≤ full_shapes[i]).
+    /// shapes (sub_shapes[i] element-wise ≤ full_shapes[i]), copying
+    /// both. Prefer [`Self::add_owned`] on the round hot path.
     pub fn add(&mut self, sub_shapes: &[Vec<usize>], tensors: &[Vec<f32>], weight: f64) {
-        for i in 0..self.arena.len() {
-            let r = self.arena.offsets[i]..self.arena.offsets[i + 1];
-            Tensor::accumulate_corner(
-                &self.arena.shapes[i],
-                &mut self.arena.acc[r.clone()],
-                &mut self.wacc[r],
-                &sub_shapes[i],
-                &tensors[i],
-                weight as f32,
-            );
-        }
+        self.add_owned(sub_shapes.to_vec(), tensors.to_vec(), weight);
+    }
+
+    /// [`Self::add`] by move — no copy; the update is held until
+    /// `finish` replays it.
+    pub fn add_owned(&mut self, sub_shapes: Vec<Vec<usize>>, tensors: Vec<Vec<f32>>, weight: f64) {
+        debug_assert_eq!(sub_shapes.len(), self.arena.len());
+        debug_assert_eq!(tensors.len(), self.arena.len());
+        self.ops.push(SlicedOp { sub_shapes, tensors, weight });
         self.total_weight += weight;
     }
 
@@ -391,26 +782,115 @@ impl SlicedAggregator {
         self.total_weight
     }
 
+    /// Replay the deferred ops into the value/weight arenas: serially
+    /// (`threads <= 1` — the historical eager loop verbatim) or with
+    /// workers owning disjoint whole-tensor ranges.
+    fn replay(&mut self) -> MergeStats {
+        let threads = self.merge_threads.max(1);
+        let n = self.arena.len();
+        let Self { arena, shapes, wacc, ops, .. } = self;
+        let Arena { offsets, acc, .. } = arena;
+        let wall = Instant::now();
+        if threads <= 1 || n == 0 || ops.is_empty() {
+            for op in ops.iter() {
+                let w = op.weight as f32;
+                for i in 0..n {
+                    let r = offsets[i]..offsets[i + 1];
+                    Tensor::accumulate_corner(
+                        &shapes[i],
+                        &mut acc[r.clone()],
+                        &mut wacc[r],
+                        &op.sub_shapes[i],
+                        &op.tensors[i],
+                        w,
+                    );
+                }
+            }
+            let ns = wall.elapsed().as_nanos() as u64;
+            return MergeStats { workers: 1, busy_ns: ns, wall_ns: ns };
+        }
+        // Partition the tensor list into contiguous index ranges and
+        // split both arenas at the matching flat offsets.
+        let t_chunk = n.div_ceil(threads);
+        let mut groups: Vec<(usize, usize, &mut [f32], &mut [f32])> = Vec::new();
+        let mut acc_rem: &mut [f32] = acc;
+        let mut wacc_rem: &mut [f32] = wacc;
+        let mut t_lo = 0usize;
+        while t_lo < n {
+            let t_hi = (t_lo + t_chunk).min(n);
+            let split = offsets[t_hi] - offsets[t_lo];
+            let (a, ar) = acc_rem.split_at_mut(split);
+            let (wv, wr) = wacc_rem.split_at_mut(split);
+            groups.push((t_lo, t_hi, a, wv));
+            acc_rem = ar;
+            wacc_rem = wr;
+            t_lo = t_hi;
+        }
+        let ops_ref: &[SlicedOp] = ops;
+        let offs: &[usize] = offsets;
+        let shp: &[Vec<usize>] = shapes;
+        let busy: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|(t_lo, t_hi, a, wv)| {
+                    s.spawn(move || {
+                        let t0 = Instant::now();
+                        let base = offs[t_lo];
+                        for op in ops_ref {
+                            let w = op.weight as f32;
+                            for i in t_lo..t_hi {
+                                let r = offs[i] - base..offs[i + 1] - base;
+                                Tensor::accumulate_corner(
+                                    &shp[i],
+                                    &mut a[r.clone()],
+                                    &mut wv[r],
+                                    &op.sub_shapes[i],
+                                    &op.tensors[i],
+                                    w,
+                                );
+                            }
+                        }
+                        t0.elapsed().as_nanos() as u64
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("merge worker panicked")).collect()
+        });
+        MergeStats {
+            workers: busy.len(),
+            busy_ns: busy.iter().sum(),
+            wall_ns: wall.elapsed().as_nanos() as u64,
+        }
+    }
+
     /// Positions with weight keep the normalized average; untouched
     /// positions keep the previous global value. Fails if no weight was
     /// ever added (a zero-weight cohort would silently no-op and mask
     /// the caller's bug).
     pub fn finish(self, store: &mut ParamStore) -> Result<()> {
+        self.finish_stats(store).map(|_| ())
+    }
+
+    /// [`Self::finish`] returning replay timing. Writes through the
+    /// store's existing buffers in place — covered positions get the
+    /// normalized average, uncovered ones simply keep their bytes (no
+    /// `prev` clone, no shape clone, no re-`set`).
+    pub fn finish_stats(mut self, store: &mut ParamStore) -> Result<MergeStats> {
         if self.total_weight <= 0.0 {
             bail!("aggregating a zero-weight cohort (total weight {})", self.total_weight);
         }
+        let stats = self.replay();
         for (i, name) in self.arena.names.iter().enumerate() {
-            let prev = store.get(name)?.clone();
-            let mut out = prev.data;
+            let data = &mut store.get_mut(name)?.data;
             let off = self.arena.offsets[i];
-            for (j, o) in out.iter_mut().enumerate() {
-                if self.wacc[off + j] > 0.0 {
-                    *o = self.arena.acc[off + j] / self.wacc[off + j];
+            for (j, o) in data.iter_mut().enumerate() {
+                let w = self.wacc[off + j];
+                if w > 0.0 {
+                    *o = self.arena.acc[off + j] / w;
                 }
             }
-            store.set(name, Tensor { shape: self.arena.shapes[i].clone(), data: out });
         }
-        Ok(())
+        Ok(stats)
     }
 }
 
@@ -800,5 +1280,227 @@ mod tests {
         for (x, y) in a.iter().zip(b) {
             assert!((x - y).abs() < 1e-6, "{x} vs {y}");
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Sharded-merge + zero-copy contracts
+    // -----------------------------------------------------------------
+
+    /// Deterministic multi-tensor workload straddling the SIMD lane
+    /// width and the shard chunk boundaries.
+    fn merge_workload(
+        seed: u64,
+    ) -> (Vec<(String, Vec<usize>, Vec<f32>)>, Vec<(Vec<Vec<f32>>, f64)>) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let sizes = [5usize, 16, 3, 64, 1, 23, 8, 40];
+        let pairs: Vec<(String, Vec<usize>, Vec<f32>)> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (format!("t{i}"), vec![n], vec![0.0; n]))
+            .collect();
+        let clients: Vec<(Vec<Vec<f32>>, f64)> = (0..9)
+            .map(|_| {
+                let ts: Vec<Vec<f32>> =
+                    sizes.iter().map(|&n| (0..n).map(|_| rng.normal()).collect()).collect();
+                (ts, rng.uniform(0.5, 30.0))
+            })
+            .collect();
+        (pairs, clients)
+    }
+
+    #[test]
+    fn sharded_merge_is_bit_identical_to_serial() {
+        // Full-cover + masked adds mixed, replayed at thread counts
+        // {1, 2, 4, 8, 13}: every count must reproduce the serial bits.
+        let (pairs, clients) = merge_workload(0xa66);
+        let pair_refs: Vec<(&str, Vec<usize>, Vec<f32>)> =
+            pairs.iter().map(|(n, s, d)| (n.as_str(), s.clone(), d.clone())).collect();
+        let names: Vec<String> = pairs.iter().map(|(n, _, _)| n.clone()).collect();
+
+        let run = |threads: usize| {
+            let mut store = store_with(&pair_refs);
+            let mut agg = Aggregator::new(&names, &store).unwrap();
+            agg.set_merge_threads(threads);
+            for (i, (ts, w)) in clients.iter().enumerate() {
+                if i % 3 == 2 {
+                    // A projected (masked) update over a tensor subset.
+                    let parts: Vec<(usize, Vec<f32>)> = ts
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, _)| j % 2 == 0)
+                        .map(|(j, t)| (j, t.clone()))
+                        .collect();
+                    agg.add_masked_owned(parts, *w);
+                } else {
+                    agg.add_owned(ts.clone(), *w);
+                }
+            }
+            let stats = agg.finish_stats(&mut store, None).unwrap();
+            assert_eq!(stats.workers, threads, "one worker per arena chunk");
+            let bits: Vec<Vec<u32>> = names
+                .iter()
+                .map(|n| store.get(n).unwrap().data.iter().map(|x| x.to_bits()).collect())
+                .collect();
+            bits
+        };
+
+        let serial = run(1);
+        for threads in [2usize, 4, 8, 13] {
+            assert_eq!(run(threads), serial, "threads={threads} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn sliced_sharded_merge_is_bit_identical_to_serial() {
+        let mut rng = crate::rng::Rng::new(0x57_1c);
+        let shapes = [vec![4usize, 6], vec![8], vec![2, 2, 3], vec![5, 5], vec![1], vec![7, 3]];
+        let pairs: Vec<(String, Vec<usize>, Vec<f32>)> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let n: usize = s.iter().product();
+                (format!("t{i}"), s.clone(), (0..n).map(|_| rng.normal()).collect())
+            })
+            .collect();
+        let pair_refs: Vec<(&str, Vec<usize>, Vec<f32>)> =
+            pairs.iter().map(|(n, s, d)| (n.as_str(), s.clone(), d.clone())).collect();
+        let names: Vec<String> = pairs.iter().map(|(n, _, _)| n.clone()).collect();
+
+        // Corner-sliced clients at varying widths (including full cover).
+        let clients: Vec<(Vec<Vec<usize>>, Vec<Vec<f32>>, f64)> = (0..7)
+            .map(|c| {
+                let subs: Vec<Vec<usize>> = shapes
+                    .iter()
+                    .map(|s| s.iter().map(|&d| ((d * (c % 3 + 1)).div_ceil(3)).max(1)).collect())
+                    .collect();
+                let ts: Vec<Vec<f32>> = subs
+                    .iter()
+                    .map(|s: &Vec<usize>| {
+                        let n: usize = s.iter().product();
+                        (0..n).map(|_| rng.normal()).collect()
+                    })
+                    .collect();
+                (subs, ts, rng.uniform(0.5, 20.0))
+            })
+            .collect();
+
+        let run = |threads: usize| {
+            let mut store = store_with(&pair_refs);
+            let mut agg = SlicedAggregator::new(&names, &store).unwrap();
+            agg.set_merge_threads(threads);
+            for (subs, ts, w) in &clients {
+                agg.add_owned(subs.clone(), ts.clone(), *w);
+            }
+            agg.finish(&mut store).unwrap();
+            let bits: Vec<Vec<u32>> = names
+                .iter()
+                .map(|n| store.get(n).unwrap().data.iter().map(|x| x.to_bits()).collect())
+                .collect();
+            bits
+        };
+
+        let serial = run(1);
+        for threads in [2usize, 4, 8, 11] {
+            assert_eq!(run(threads), serial, "threads={threads} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn owned_shared_and_borrowed_adds_are_bit_identical() {
+        let (pairs, clients) = merge_workload(0x0c0);
+        let pair_refs: Vec<(&str, Vec<usize>, Vec<f32>)> =
+            pairs.iter().map(|(n, s, d)| (n.as_str(), s.clone(), d.clone())).collect();
+        let names: Vec<String> = pairs.iter().map(|(n, _, _)| n.clone()).collect();
+
+        let mut s1 = store_with(&pair_refs);
+        let mut agg = Aggregator::new(&names, &s1).unwrap();
+        for (ts, w) in &clients {
+            agg.add(ts, *w);
+        }
+        agg.finish(&mut s1).unwrap();
+
+        let mut s2 = store_with(&pair_refs);
+        let mut agg = Aggregator::new(&names, &s2).unwrap();
+        for (i, (ts, w)) in clients.iter().enumerate() {
+            if i % 2 == 0 {
+                agg.add_owned(ts.clone(), *w);
+            } else {
+                let arc = Arc::new(ts.clone());
+                agg.add_shared(Arc::clone(&arc), *w);
+                // The coordinator-side handle stays alive across the
+                // merge, exactly like a pending update.
+                assert_eq!(arc.len(), ts.len());
+            }
+        }
+        agg.finish(&mut s2).unwrap();
+
+        for n in &names {
+            let a = &s1.get(n).unwrap().data;
+            let b = &s2.get(n).unwrap().data;
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_recycles_buffers_and_counts_hits() {
+        let (pairs, clients) = merge_workload(0x900d);
+        let pair_refs: Vec<(&str, Vec<usize>, Vec<f32>)> =
+            pairs.iter().map(|(n, s, d)| (n.as_str(), s.clone(), d.clone())).collect();
+        let names: Vec<String> = pairs.iter().map(|(n, _, _)| n.clone()).collect();
+        let mut store = store_with(&pair_refs);
+        let mut pool = TensorPool::new(clients.len());
+
+        for round in 0..3 {
+            let mut agg = Aggregator::new(&names, &store).unwrap();
+            for (ts, w) in &clients {
+                let mut buf = pool.acquire();
+                buf.clear();
+                buf.extend(ts.iter().cloned());
+                agg.add_owned(buf, *w);
+            }
+            agg.finish_stats(&mut store, Some(&mut pool)).unwrap();
+            if round == 0 {
+                assert_eq!(pool.misses(), clients.len() as u64, "cold pool: all misses");
+            }
+            assert_eq!(pool.free_len(), clients.len(), "finish returned every buffer");
+        }
+        // Rounds 2 and 3 were served entirely from the free list.
+        assert_eq!(pool.hits(), 2 * clients.len() as u64);
+        assert_eq!(pool.misses(), clients.len() as u64);
+
+        // Shared buffers with a live outside handle are NOT recycled...
+        let mut pool = TensorPool::new(8);
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        let held = Arc::new(clients[0].0.clone());
+        agg.add_shared(Arc::clone(&held), 1.0);
+        // ...but a sole-owner shared buffer is.
+        agg.add_shared(Arc::new(clients[1].0.clone()), 1.0);
+        agg.finish_stats(&mut store, Some(&mut pool)).unwrap();
+        assert_eq!(pool.free_len(), 1, "only the sole-owner Arc unwraps into the pool");
+        assert_eq!(held.len(), names.len(), "outside handle still valid");
+    }
+
+    #[test]
+    fn merge_stats_degenerate_cleanly() {
+        let (pairs, clients) = merge_workload(0x57a7);
+        let pair_refs: Vec<(&str, Vec<usize>, Vec<f32>)> =
+            pairs.iter().map(|(n, s, d)| (n.as_str(), s.clone(), d.clone())).collect();
+        let names: Vec<String> = pairs.iter().map(|(n, _, _)| n.clone()).collect();
+
+        let mut store = store_with(&pair_refs);
+        let mut agg = Aggregator::new(&names, &store).unwrap();
+        agg.add_owned(clients[0].0.clone(), clients[0].1);
+        let stats = agg.finish_stats(&mut store, None).unwrap();
+        assert_eq!(stats.workers, 1, "default is the inline serial merge");
+        assert_eq!(stats.utilization(), 1.0, "serial utilization is 1.0 by construction");
+
+        let zero = MergeStats { workers: 4, busy_ns: 0, wall_ns: 0 };
+        assert_eq!(zero.utilization(), 1.0, "zero wall never divides by zero");
+        let half = MergeStats { workers: 2, busy_ns: 100, wall_ns: 100 };
+        assert!((half.utilization() - 0.5).abs() < 1e-12);
+        let capped = MergeStats { workers: 2, busy_ns: 1000, wall_ns: 100 };
+        assert_eq!(capped.utilization(), 1.0, "clock skew clamps at 1.0");
     }
 }

@@ -47,6 +47,7 @@ use crate::strategy::{DistillPhase, MemoryStrategy, TrainPhase};
 use crate::telemetry::{config_sha256, config_value, sha256_hex};
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// The 8-byte file magic.
 pub const MAGIC: [u8; 8] = *b"PROFLCKP";
@@ -373,7 +374,7 @@ impl Checkpoint {
             e.bool(p.partial);
             e.u64(p.bytes_up);
             e.usize(p.tensors.len());
-            for t in &p.tensors {
+            for t in p.tensors.iter() {
                 e.f32s(t);
             }
         }
@@ -536,7 +537,7 @@ impl Checkpoint {
                 dispatch_round,
                 weight,
                 partial,
-                tensors,
+                tensors: Arc::new(tensors),
                 bytes_up,
             });
         }
@@ -1050,7 +1051,7 @@ mod tests {
                 dispatch_round: 6,
                 weight: 41.0,
                 partial: true,
-                tensors: vec![vec![1.0, -2.5], vec![f32::NAN]],
+                tensors: Arc::new(vec![vec![1.0, -2.5], vec![f32::NAN]]),
                 bytes_up: 1024,
             }],
             params: vec![
@@ -1134,6 +1135,29 @@ mod tests {
         let ck2 = Checkpoint::decode(&b1).unwrap();
         let b2 = ck2.encode();
         assert_eq!(b1, b2, "serialize→deserialize→serialize changed bytes");
+    }
+
+    /// Pending tensors are held behind an `Arc`: encoding must follow
+    /// the shared handle (not its refcount), and a clone of the decoded
+    /// update must alias the same buffers rather than deep-copying.
+    #[test]
+    fn pending_arc_handles_round_trip_and_share() {
+        let ck = sample();
+        // Sharing the pending tensors with an outside holder (as the
+        // coordinator's in-flight queue does) must not change the bytes.
+        let held = Arc::clone(&ck.pending[0].tensors);
+        let bytes = ck.encode();
+        assert_eq!(bytes, sample().encode(), "outstanding Arc handle changed the encoding");
+        drop(held);
+
+        let ck2 = Checkpoint::decode(&bytes).unwrap();
+        let p = &ck2.pending[0];
+        assert_eq!(p.tensors.len(), 2);
+        assert_eq!(p.tensors[0], vec![1.0, -2.5]);
+        assert!(p.tensors[1][0].is_nan(), "NaN payload must survive the round trip");
+        // Cloning a decoded PendingUpdate is a refcount bump, not a copy.
+        let c = p.clone();
+        assert!(Arc::ptr_eq(&c.tensors, &p.tensors), "clone must alias the tensor buffers");
     }
 
     #[test]

@@ -58,6 +58,13 @@ pub struct RunConfig {
     /// unset path is bit-for-bit inert. CLI: `--telemetry-jsonl` /
     /// `PROFL_TELEMETRY_JSONL`.
     pub telemetry_jsonl: Option<String>,
+    /// Telemetry stream size cap in MiB: when set (and telemetry is on),
+    /// the live JSONL file rotates to `<stem>.N.jsonl` each time it
+    /// crosses the cap, and the run manifest records every segment.
+    /// `None` (the default) never rotates. Like `fleet.threads`, this is
+    /// a wall-clock knob excluded from `telemetry::config_value` and
+    /// therefore from `config_sha256`. CLI: `--telemetry-max-mb`.
+    pub telemetry_max_mb: Option<u64>,
     /// Checkpoint file path (see `docs/CHECKPOINT.md`): when set, the
     /// run serializes its complete state here at round boundaries; a
     /// literal `{round}` in the path expands to the round index. `None`
@@ -293,6 +300,7 @@ impl Default for RunConfig {
             acc_tail: 10,
             seed: 42,
             telemetry_jsonl: None,
+            telemetry_max_mb: None,
             checkpoint: None,
             checkpoint_every: 1,
         }
@@ -446,7 +454,8 @@ impl RunConfig {
     /// (`telemetry::config_value`) — the inverse `profl resume` uses to
     /// rebuild the run a checkpoint was taken under. Wall-clock knobs
     /// absent from the image (`fleet.threads`, `checkpoint`,
-    /// `checkpoint_every`) take their defaults; everything the
+    /// `checkpoint_every`, `telemetry_max_mb`) take their defaults;
+    /// everything the
     /// `config_sha256` fingerprint covers round-trips exactly
     /// (`config_value(from_value(config_value(c))) == config_value(c)`,
     /// pinned by a test below). Strict: missing or mistyped keys error.
@@ -532,6 +541,7 @@ impl RunConfig {
             acc_tail: v.get("acc_tail")?.as_usize()?,
             seed,
             telemetry_jsonl: opt_str(v, "telemetry_jsonl")?,
+            telemetry_max_mb: None,
             checkpoint: None,
             checkpoint_every: 1,
         })
@@ -895,6 +905,7 @@ mod tests {
         ck.checkpoint = Some("/tmp/run-{round}.ckpt".into());
         ck.checkpoint_every = 7;
         ck.fleet.threads = plain.fleet.threads + 3;
+        ck.telemetry_max_mb = Some(64);
         assert_eq!(
             crate::telemetry::config_sha256(&plain),
             crate::telemetry::config_sha256(&ck)

@@ -47,9 +47,11 @@ use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::store::ParamStore;
 use crate::telemetry::Appender;
+use crate::aggregate::TensorPool;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use projection::{classify_stale, MergeContext, StaleDecision, TrainableLayout};
 
@@ -79,7 +81,10 @@ pub struct PendingUpdate {
     /// Whether this is a checkpoint partial (metrics: `partial_merged`).
     pub partial: bool,
     /// Updated trainable tensors, in the artifact's trainable order.
-    pub tensors: Vec<Vec<f32>>,
+    /// Shared (`Arc`) so the checkpoint writer's snapshot, the merge
+    /// path, and this buffer all reference one allocation — cloning a
+    /// `PendingUpdate` bumps a refcount instead of copying tensor data.
+    pub tensors: Arc<Vec<Vec<f32>>>,
     /// Upload bytes accounted when the update finally lands.
     pub bytes_up: u64,
 }
@@ -149,6 +154,11 @@ pub struct ServerCtx<'rt> {
     /// Scratch buffers reused across rounds (no allocation on the hot path).
     pub(crate) xs_buf: Vec<f32>,
     pub(crate) ys_buf: Vec<i32>,
+    /// Recycled update-tensor buffers: the aggregators' deferred ops are
+    /// released back here at `finish`, so steady-state rounds reuse the
+    /// same allocations (the `RoundScratch` discipline, applied to the
+    /// merge path; gauges `pool.update_*` when telemetry is on).
+    pub(crate) update_pool: TensorPool,
     /// Structured-telemetry JSONL stream (see [`crate::telemetry`]):
     /// `Some` only when `cfg.telemetry_jsonl` is set. Every hook in the
     /// round loop is gated on this option and only *reads* simulator
@@ -198,9 +208,19 @@ impl<'rt> ServerCtx<'rt> {
         // bit-identical (wall-clock knob only).
         let threads = cfg.fleet.threads;
         let telemetry = match cfg.telemetry_jsonl.as_deref() {
-            Some(path) => Some(Appender::create(Path::new(path))?),
+            Some(path) => {
+                // --telemetry-max-mb caps each stream segment; rotation
+                // renames full segments to `<stem>.N.jsonl` (week-long
+                // sweeps; see docs/OBSERVABILITY.md). Hash-neutral.
+                let cap = cfg.telemetry_max_mb.map(|mb| mb.saturating_mul(1024 * 1024));
+                Some(Appender::create_with_cap(Path::new(path), cap)?)
+            }
             None => None,
         };
+        // Free-list cap: a cohort's worth of update buffers (plus async
+        // headroom) is the steady-state working set; anything beyond is
+        // a burst that should be returned to the allocator.
+        let update_pool = TensorPool::new((cfg.per_round + cfg.fleet.over_select_extra) * 2 + 8);
         Ok(ServerCtx {
             rt,
             cfg,
@@ -220,6 +240,7 @@ impl<'rt> ServerCtx<'rt> {
             fleet_rng,
             xs_buf: Vec::new(),
             ys_buf: Vec::new(),
+            update_pool,
             telemetry,
         })
     }

@@ -38,6 +38,7 @@
 //! (see `docs/SIMULATION.md` for the degeneracy contract).
 
 use crate::manifest::Artifact;
+use std::sync::Arc;
 
 /// Layout of one artifact's trainable tensors: ordered names plus flat
 /// element counts, the contract a [`crate::coordinator::PendingUpdate`]'s
@@ -127,10 +128,11 @@ pub struct MergeContext<'a> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum StaleDecision {
     /// Version-exact (same artifact, same prefix version, within the
-    /// staleness window): merge as-is — the tensors ride back untouched.
+    /// staleness window): merge as-is — the tensors ride back untouched
+    /// (the same shared handle the pending buffer holds: no copy).
     Exact {
         /// The update's tensors, returned to the caller unchanged.
-        tensors: Vec<Vec<f32>>,
+        tensors: Arc<Vec<Vec<f32>>>,
         /// Rounds elapsed since dispatch.
         staleness: usize,
     },
@@ -158,12 +160,18 @@ pub enum StaleDecision {
 /// actually attempted (version-exact and dropped updates never pay for
 /// it), and returning `None` forces a drop. Pure: the coordinator and
 /// the artifact-free golden harness share this exact decision procedure.
+///
+/// The tensors arrive as the pending buffer's shared handle: the exact
+/// path hands the same handle back (refcount bump, no copy), and the
+/// projection path unwraps it — cloning only if someone else still holds
+/// a reference, which never happens on the coordinator path (the update
+/// was just removed from the pending map).
 pub fn classify_stale(
     ctx: &MergeContext<'_>,
     update_artifact: &str,
     update_prefix: u64,
     dispatch_round: usize,
-    tensors: Vec<Vec<f32>>,
+    tensors: Arc<Vec<Vec<f32>>>,
     old_layout: impl FnOnce() -> Option<TrainableLayout>,
 ) -> StaleDecision {
     let staleness = ctx.round.saturating_sub(dispatch_round);
@@ -188,6 +196,7 @@ pub fn classify_stale(
     let Some(old) = old_layout() else {
         return StaleDecision::Dropped;
     };
+    let tensors = Arc::try_unwrap(tensors).unwrap_or_else(|a| (*a).clone());
     let (kept, dropped_params) = project_tensors(&old, new_layout, tensors);
     if kept.is_empty() {
         return StaleDecision::Dropped;
@@ -255,7 +264,7 @@ mod tests {
             max_staleness: 8,
             projection: Some(&new),
         };
-        let d = classify_stale(&ctx, "train_t2", 5, 7, fill(&t2(), 1.0), || {
+        let d = classify_stale(&ctx, "train_t2", 5, 7, Arc::new(fill(&t2(), 1.0)), || {
             panic!("exact classification must not resolve the old layout")
         });
         match d {
@@ -278,7 +287,8 @@ mod tests {
             projection: Some(&new),
         };
         let old = t1();
-        let d = classify_stale(&ctx, "train_t1", 5, 8, fill(&old, 3.0), || Some(old.clone()));
+        let d =
+            classify_stale(&ctx, "train_t1", 5, 8, Arc::new(fill(&old, 3.0)), || Some(old.clone()));
         match d {
             StaleDecision::Projected { kept, dropped_params, staleness, transitions } => {
                 assert_eq!(kept.len(), 2);
@@ -302,32 +312,34 @@ mod tests {
             max_staleness: 8,
             projection: None,
         };
-        let d = classify_stale(&off, "train_t1", 5, 8, fill(&old, 1.0), || Some(old.clone()));
+        let d =
+            classify_stale(&off, "train_t1", 5, 8, Arc::new(fill(&old, 1.0)), || Some(old.clone()));
         assert_eq!(d, StaleDecision::Dropped);
 
         // Beyond max_staleness: dropped even with projection on.
         let on = MergeContext { projection: Some(&new), ..off };
-        let d = classify_stale(&on, "train_t1", 5, 0, fill(&old, 1.0), || Some(old.clone()));
+        let d =
+            classify_stale(&on, "train_t1", 5, 0, Arc::new(fill(&old, 1.0)), || Some(old.clone()));
         assert_eq!(d, StaleDecision::Dropped, "staleness cap applies first");
 
         // Artifact mismatch at the *same* prefix version (e.g. a train
         // update landing in a same-step distill round): no transition
         // was crossed, so the historical drop stands — projection never
         // produces an undecayed cross-artifact merge.
-        let d = classify_stale(&on, "train_t1", 6, 9, fill(&old, 1.0), || {
+        let d = classify_stale(&on, "train_t1", 6, 9, Arc::new(fill(&old, 1.0)), || {
             panic!("uncrossed mismatch must not resolve the old layout")
         });
         assert_eq!(d, StaleDecision::Dropped, "zero crossed transitions is a plain drop");
 
         // Disjoint layouts (train vs distill surrogate): nothing survives.
         let distill = TrainableLayout::new(&[("s2/conv/w", 16)]);
-        let d = classify_stale(&on, "distill_t2", 5, 9, vec![vec![0.0; 16]], || {
+        let d = classify_stale(&on, "distill_t2", 5, 9, Arc::new(vec![vec![0.0; 16]]), || {
             Some(distill.clone())
         });
         assert_eq!(d, StaleDecision::Dropped, "empty intersection is a plain drop");
 
         // Unresolvable old layout: drop.
-        let d = classify_stale(&on, "train_t1", 5, 9, fill(&old, 1.0), || None);
+        let d = classify_stale(&on, "train_t1", 5, 9, Arc::new(fill(&old, 1.0)), || None);
         assert_eq!(d, StaleDecision::Dropped);
     }
 

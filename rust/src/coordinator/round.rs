@@ -15,6 +15,7 @@ use crate::metrics::RoundRecord;
 use crate::runtime::{literal_f32, literal_i32, LoadedArtifact, Runtime};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// What a train round produced (before the metrics record is finalized).
 pub struct RoundOutcome {
@@ -68,6 +69,13 @@ pub struct RoundOutcome {
     pub partial_merged: usize,
     /// Compute seconds lost to churn (aborts + partial-epoch remainders).
     pub wasted_compute_s: f64,
+    /// Worker threads the sharded cohort merge replayed on (0 when
+    /// nothing merged this round).
+    pub merge_workers: usize,
+    /// Busy fraction of the sharded merge's worker capacity. Wall-clock
+    /// derived — reported for observability, never part of the
+    /// deterministic trace.
+    pub merge_utilization: f64,
 }
 
 impl Default for RoundOutcome {
@@ -96,6 +104,8 @@ impl Default for RoundOutcome {
             resumed: 0,
             partial_merged: 0,
             wasted_compute_s: 0.0,
+            merge_workers: 0,
+            merge_utilization: 0.0,
         }
     }
 }
@@ -238,6 +248,7 @@ impl<'rt> ServerCtx<'rt> {
                         ("late_dropped", Value::Num(outcome.late_dropped as f64)),
                         ("projected_merged", Value::Num(outcome.projected_merged as f64)),
                         ("partial_merged", Value::Num(outcome.partial_merged as f64)),
+                        ("merge_workers", Value::Num(outcome.merge_workers as f64)),
                     ],
                 );
             }
@@ -441,6 +452,7 @@ impl<'rt> ServerCtx<'rt> {
         let trainable: Vec<String> =
             art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
         let mut agg = Aggregator::new(&trainable, &self.store)?;
+        agg.set_merge_threads(self.engine.threads());
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
 
@@ -455,8 +467,9 @@ impl<'rt> ServerCtx<'rt> {
             if scalars.len() > 1 {
                 acc_sum += scalars[1] as f64 / (scan * batch) as f64 * weight;
             }
-            // No clone: hand the PJRT output buffers to the accumulator.
-            agg.add(&tensors, weight);
+            // No clone: the PJRT output buffers move into the accumulator
+            // and come back out through the update pool after the replay.
+            agg.add_owned(tensors, weight);
             self.account_comm(cid, tr_bytes, fr_bytes, true, outcome);
         }
 
@@ -464,7 +477,9 @@ impl<'rt> ServerCtx<'rt> {
         if total_w <= 0.0 {
             return Ok((f32::NAN, f32::NAN));
         }
-        agg.finish(&mut self.store)?;
+        let stats = agg.finish_stats(&mut self.store, Some(&mut self.update_pool))?;
+        outcome.merge_workers = stats.workers;
+        outcome.merge_utilization = stats.utilization();
         Ok(((loss_sum / total_w) as f32, (acc_sum / total_w) as f32))
     }
 
@@ -503,6 +518,7 @@ impl<'rt> ServerCtx<'rt> {
             art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
         let alpha = self.cfg.fleet.staleness_alpha;
         let mut agg = BufferedAggregator::new(&trainable, &self.store, alpha)?;
+        agg.set_merge_threads(self.engine.threads());
         let mut loss_sum = 0.0f64;
         let mut acc_sum = 0.0f64;
         let mut fresh_w = 0.0f64;
@@ -518,7 +534,7 @@ impl<'rt> ServerCtx<'rt> {
             if with_labels && scalars.len() > 1 {
                 acc_sum += scalars[1] as f64 / (scan * batch) as f64 * weight;
             }
-            agg.add(&tensors, weight, 0);
+            agg.add_owned(tensors, weight, 0);
             fresh_w += weight;
             // Train rounds do prefix-cache accounting; distill rounds ship
             // trainables only — exactly mirroring the sync paths, so the
@@ -557,7 +573,7 @@ impl<'rt> ServerCtx<'rt> {
                     dispatch_round: self.round,
                     weight,
                     partial,
-                    tensors,
+                    tensors: Arc::new(tensors),
                     bytes_up: tr_bytes,
                 },
             );
@@ -566,13 +582,17 @@ impl<'rt> ServerCtx<'rt> {
         // Late arrivals from earlier rounds: staleness-discounted merge.
         let mut staleness_sum = 0usize;
         for (p, staleness) in late {
-            agg.add(&p.tensors, p.weight, staleness);
             outcome.bytes_up += p.bytes_up;
             outcome.late_merged += 1;
             if p.partial {
                 outcome.partial_merged += 1;
             }
             staleness_sum += staleness;
+            // The pending entry was already removed from the buffer, so
+            // this Arc is (usually) the last handle: the merge takes it
+            // without touching the tensor bytes, and `finish` recycles
+            // the buffers into the update pool.
+            agg.add_shared(p.tensors, p.weight, staleness);
         }
         if outcome.late_merged > 0 {
             outcome.mean_staleness = staleness_sum as f64 / outcome.late_merged as f64;
@@ -587,7 +607,7 @@ impl<'rt> ServerCtx<'rt> {
         let n_projected = projected.len();
         for pr in projected {
             let extra = transition_decay(decay, pr.transitions);
-            agg.add_projected(&pr.kept, pr.weight, pr.staleness, extra);
+            agg.add_projected_owned(pr.kept, pr.weight, pr.staleness, extra);
             outcome.bytes_up += pr.bytes_up;
             outcome.projected_merged += 1;
             outcome.projected_dropped_params += pr.dropped_params;
@@ -605,7 +625,9 @@ impl<'rt> ServerCtx<'rt> {
             // untouched.
             return Ok((f32::NAN, f32::NAN));
         }
-        agg.finish(&mut self.store)?;
+        let stats = agg.finish_stats(&mut self.store, Some(&mut self.update_pool))?;
+        outcome.merge_workers = stats.workers;
+        outcome.merge_utilization = stats.utilization();
         let loss = if fresh_w > 0.0 { (loss_sum / fresh_w) as f32 } else { f32::NAN };
         let acc = if fresh_w > 0.0 { (acc_sum / fresh_w) as f32 } else { f32::NAN };
         Ok((loss, acc))
@@ -687,6 +709,7 @@ impl<'rt> ServerCtx<'rt> {
         let trainable: Vec<String> =
             art.meta.trainable_names().iter().map(|s| s.to_string()).collect();
         let mut agg = Aggregator::new(&trainable, &self.store)?;
+        agg.set_merge_threads(self.engine.threads());
         let mut loss_sum = 0.0f64;
 
         for &cid in &completers {
@@ -694,13 +717,15 @@ impl<'rt> ServerCtx<'rt> {
                 self.exec_client(&art, &param_lits, &lr_lit, cid, false)?;
             let weight = partial_scaled(&fractions, cid, weight, &mut outcome.partial_merged);
             loss_sum += scalars[0] as f64 * weight;
-            agg.add(&tensors, weight);
+            agg.add_owned(tensors, weight);
             outcome.bytes_up += tr_bytes;
             outcome.bytes_down += tr_bytes;
         }
         let total_w = agg.total_weight();
         if total_w > 0.0 {
-            agg.finish(&mut self.store)?;
+            let stats = agg.finish_stats(&mut self.store, Some(&mut self.update_pool))?;
+            outcome.merge_workers = stats.workers;
+            outcome.merge_utilization = stats.utilization();
             outcome.mean_loss = (loss_sum / total_w) as f32;
         }
         self.account_lost_downloads(&plan, tr_bytes, 0, false, &mut outcome);
@@ -807,7 +832,7 @@ impl<'rt> ServerCtx<'rt> {
                 ("round.bytes_down", out.bytes_down as f64),
                 ("round.wasted_compute_s", out.wasted_compute_s),
             ];
-            let gauges: [(&str, f64); 7] = [
+            let gauges: [(&str, f64); 11] = [
                 ("round.mean_staleness", out.mean_staleness),
                 ("round.client_mem_bytes", out.client_mem_bytes as f64),
                 ("pool.cache_hits", pool.hits as f64),
@@ -815,6 +840,12 @@ impl<'rt> ServerCtx<'rt> {
                 ("pool.cache_evictions", pool.evictions as f64),
                 ("pool.materialized", pool.materialized as f64),
                 ("pool.peak_materialized", pool.peak_materialized as f64),
+                // Sharded-merge health: busy fraction of the replay
+                // workers plus the update-buffer pool's recycle counters.
+                ("fleet.merge_utilization", out.merge_utilization),
+                ("pool.update_hits", self.update_pool.hits() as f64),
+                ("pool.update_misses", self.update_pool.misses() as f64),
+                ("pool.update_free", self.update_pool.free_len() as f64),
             ];
             if let Some(tel) = self.telemetry.as_mut() {
                 for (name, v) in counters {

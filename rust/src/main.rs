@@ -84,6 +84,10 @@ OBSERVABILITY (see docs/OBSERVABILITY.md):
                       env fallback: PROFL_TELEMETRY_JSONL). `run` also
                       writes a manifest.json provenance record beside
                       the CSV (or beside the stream when no --csv).
+  --telemetry-max-mb <n>  Rotate the telemetry stream to <stem>.N.jsonl
+                      once the live file crosses n MiB (off by default;
+                      the manifest records every segment). Hash-neutral:
+                      does not change config_sha256.
 
 CHECKPOINT/RESUME (strategy-backed methods only; see docs/CHECKPOINT.md):
   --checkpoint <path> run: write a full-state checkpoint at round
@@ -97,7 +101,7 @@ CHECKPOINT/RESUME (strategy-backed methods only; see docs/CHECKPOINT.md):
                       bit-for-bit. Only hash-neutral knobs may be
                       overridden on resume: --threads (defaults to the
                       checkpoint's), --checkpoint, --checkpoint-every,
-                      --csv, --artifacts.
+                      --csv, --artifacts, --telemetry-max-mb.
 ";
 
 fn make_cfg(args: &Args) -> Result<RunConfig> {
@@ -157,6 +161,7 @@ fn make_cfg(args: &Args) -> Result<RunConfig> {
     }
     cfg.telemetry_jsonl =
         args.get("telemetry-jsonl").map(String::from).or_else(profl::harness::telemetry_env);
+    cfg.telemetry_max_mb = args.parse_opt("telemetry-max-mb")?;
     cfg.strategy.name = args.get("strategy").map(String::from).or(cfg.strategy.name);
     cfg.strategy.elastic_phases =
         args.parse_opt("elastic-phases")?.or(cfg.strategy.elastic_phases);
@@ -293,6 +298,7 @@ fn main() -> Result<()> {
             // anything hash-relevant would change config_sha256 and be
             // rejected by the checkpoint's fingerprint check anyway.
             cfg.fleet.threads = args.parse_opt("threads")?.unwrap_or(ck.threads);
+            cfg.telemetry_max_mb = args.parse_opt("telemetry-max-mb")?;
             cfg.checkpoint = args.get("checkpoint").map(String::from);
             if let Some(e) = args.parse_opt("checkpoint-every")? {
                 if cfg.checkpoint.is_none() {

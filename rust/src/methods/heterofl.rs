@@ -168,6 +168,7 @@ impl Method for HeteroFL {
 
             let lr_lit = xla::Literal::scalar(ctx.cfg.lr);
             let mut agg = SlicedAggregator::new(&trainable, &ctx.store)?;
+            agg.set_merge_threads(ctx.engine.threads());
             let mut participants = 0usize;
             let mut partial_merged = 0usize;
             let (mut bytes_up, mut bytes_down) = (0u64, 0u64);
@@ -180,10 +181,11 @@ impl Method for HeteroFL {
                 u.weight = partial_scaled(&fractions, cid, u.weight, &mut partial_merged);
                 loss_sum += u.loss as f64 * u.weight;
                 w_sum += u.weight;
-                agg.add(&u.sub_shapes, &u.tensors, u.weight);
                 bytes_up += u.bytes;
                 bytes_down += u.bytes;
                 mem_peak = mem_peak.max(u.mem_bytes);
+                // No clone: the sliced update moves into the accumulator.
+                agg.add_owned(u.sub_shapes, u.tensors, u.weight);
                 participants += 1;
             }
 
@@ -226,8 +228,8 @@ impl Method for HeteroFL {
                             let w = u.weight
                                 * staleness_discount(staleness, alpha)
                                 * transition_decay(decay, crossed);
-                            agg.add(&u.sub_shapes, &u.tensors, w);
                             bytes_up += u.bytes;
+                            agg.add_owned(u.sub_shapes, u.tensors, w);
                             late_merged += 1;
                             if partial {
                                 partial_merged += 1;
@@ -274,8 +276,11 @@ impl Method for HeteroFL {
                 }
             }
 
+            let (mut merge_workers, mut merge_utilization) = (0usize, 0.0f64);
             if agg.total_weight() > 0.0 {
-                agg.finish(&mut ctx.store)?;
+                let stats = agg.finish_stats(&mut ctx.store)?;
+                merge_workers = stats.workers;
+                merge_utilization = stats.utilization();
             }
             ctx.round += 1;
 
@@ -305,6 +310,8 @@ impl Method for HeteroFL {
                 resumed: plan.resumes,
                 partial_merged,
                 wasted_compute_s: plan.wasted_compute_s,
+                merge_workers,
+                merge_utilization,
                 ..Default::default()
             };
             ctx.record_round("heterofl", 0, &out, test_acc, f64::NAN);

@@ -23,6 +23,10 @@
 //!    modulo the single wall-time field — the reproducibility contract
 //!    the checkpoint/resume roadmap item builds on.
 //!
+//! Week-long sweeps can cap the stream with `--telemetry-max-mb`: the
+//! live file rotates to `<stem>.N.jsonl` when it crosses the cap and
+//! the manifest records every segment (see [`Appender`] docs).
+//!
 //! **Strictly off by default.** The stream only exists when
 //! `--telemetry-jsonl <path>` (or `PROFL_TELEMETRY_JSONL`) is set; every
 //! hook in the round loop is gated on the appender's presence and only
@@ -74,17 +78,40 @@ pub fn fnum(x: f64) -> Value {
 /// on drop, so the stream is complete even when the run ends by falling
 /// out of scope. Write errors never fail the run — telemetry is an
 /// observer, not a participant — they are counted instead.
+///
+/// # Rotation
+///
+/// With a size cap ([`Appender::create_with_cap`], wired to
+/// `--telemetry-max-mb`), the live stream rotates once it crosses the
+/// cap: the current file is renamed to `<stem>.N.jsonl` (N = 1, 2, …)
+/// and a fresh live file opens at the original path. Sequence numbers
+/// stay monotonic across segments, so `sort_by .seq` over every segment
+/// reconstructs the full stream; a segment may exceed the cap by at
+/// most one line (the check runs after each write). Rotation failures
+/// are swallowed like write errors — the stream just keeps growing.
 pub struct Appender {
     out: BufWriter<File>,
     path: PathBuf,
     seq: u64,
     dropped_writes: u64,
+    /// Rotate the live segment once it holds at least this many bytes.
+    max_bytes: Option<u64>,
+    /// Bytes written to the *current* segment.
+    segment_bytes: u64,
+    /// Completed rotations so far (== highest `<stem>.N.jsonl` index).
+    rotations: u64,
 }
 
 impl Appender {
     /// Create (truncate) the JSONL stream at `path`, creating missing
-    /// parent directories.
+    /// parent directories. No size cap: the stream never rotates.
     pub fn create(path: &Path) -> Result<Self> {
+        Self::create_with_cap(path, None)
+    }
+
+    /// [`Self::create`] with an optional size cap in bytes; crossing it
+    /// rotates the live file to `<stem>.N.jsonl` (see the type docs).
+    pub fn create_with_cap(path: &Path, max_bytes: Option<u64>) -> Result<Self> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)
@@ -98,15 +125,19 @@ impl Appender {
             path: path.to_path_buf(),
             seq: 0,
             dropped_writes: 0,
+            max_bytes,
+            segment_bytes: 0,
+            rotations: 0,
         })
     }
 
-    /// The stream's path.
+    /// The live stream's path (rotated segments live next to it).
     pub fn path(&self) -> &Path {
         &self.path
     }
 
-    /// Lines successfully emitted so far (== the next sequence number).
+    /// Lines successfully emitted so far (== the next sequence number),
+    /// across every segment.
     pub fn lines(&self) -> u64 {
         self.seq
     }
@@ -114,6 +145,29 @@ impl Appender {
     /// Lines lost to I/O errors (telemetry never fails the run).
     pub fn dropped_writes(&self) -> u64 {
         self.dropped_writes
+    }
+
+    /// Completed size-cap rotations (0 when uncapped or under the cap).
+    pub fn rotations(&self) -> u64 {
+        self.rotations
+    }
+
+    /// Rename the live file to the next `<stem>.N.jsonl` segment and
+    /// reopen a truncated live file at the original path. Best-effort:
+    /// on any I/O failure the appender keeps writing where it was.
+    fn rotate(&mut self) {
+        let _ = self.out.flush();
+        let seg = segment_path(&self.path, self.rotations + 1);
+        if std::fs::rename(&self.path, &seg).is_err() {
+            return;
+        }
+        // The old handle now points at the renamed segment; only swap
+        // it out if the fresh live file actually opens.
+        if let Ok(f) = File::create(&self.path) {
+            self.out = BufWriter::new(f);
+            self.segment_bytes = 0;
+            self.rotations += 1;
+        }
     }
 
     /// Emit one event line. `payload` and `attrs` keys must not collide
@@ -145,6 +199,12 @@ impl Appender {
         let line = Value::Obj(m).to_json();
         if writeln!(self.out, "{line}").is_ok() {
             self.seq += 1;
+            self.segment_bytes += line.len() as u64 + 1;
+            if let Some(cap) = self.max_bytes {
+                if self.segment_bytes >= cap {
+                    self.rotate();
+                }
+            }
         } else {
             self.dropped_writes += 1;
         }
@@ -434,6 +494,35 @@ pub fn count_lines(path: &Path) -> u64 {
     std::fs::read_to_string(path).map(|s| s.lines().count() as u64).unwrap_or(0)
 }
 
+/// Path of the `n`-th rotated segment of the stream at `base`:
+/// `runs/t.jsonl` → `runs/t.1.jsonl`, `runs/t.2.jsonl`, … (extension-less
+/// bases get `.N.jsonl` appended).
+pub fn segment_path(base: &Path, n: u64) -> PathBuf {
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("telemetry");
+    match base.extension().and_then(|s| s.to_str()) {
+        Some(ext) => base.with_file_name(format!("{stem}.{n}.{ext}")),
+        None => base.with_file_name(format!("{stem}.{n}.jsonl")),
+    }
+}
+
+/// Rotated segments of the stream at `base`, in rotation order: probes
+/// `<stem>.1.jsonl`, `<stem>.2.jsonl`, … until the first gap and returns
+/// each existing segment with its line count. Empty when the stream
+/// never rotated — exactly the case where the manifest must stay
+/// byte-identical to the pre-rotation format.
+pub fn discover_segments(base: &Path) -> Vec<(PathBuf, u64)> {
+    let mut out = Vec::new();
+    for n in 1.. {
+        let seg = segment_path(base, n);
+        if !seg.is_file() {
+            break;
+        }
+        let lines = count_lines(&seg);
+        out.push((seg, lines));
+    }
+    out
+}
+
 /// Per-method telemetry stream path for multi-method runs: `compare`
 /// with `--telemetry-jsonl runs/t.jsonl` writes one stream per method at
 /// `runs/t.<method>.jsonl` instead of truncating a single file five
@@ -488,10 +577,30 @@ pub fn build_manifest(
     };
     let telemetry_value = match telemetry {
         None => Value::Null,
-        Some((path, lines)) => obj(vec![
-            ("path", n_str(&path.display().to_string())),
-            ("lines", n_u64(lines)),
-        ]),
+        Some((path, lines)) => {
+            let mut fields = vec![
+                ("path", n_str(&path.display().to_string())),
+                ("lines", n_u64(lines)),
+            ];
+            // Size-cap rotation: record every rotated segment so no part
+            // of the stream is orphaned from its provenance. Absent when
+            // the stream never rotated, keeping pre-rotation manifests
+            // byte-identical.
+            let segments = discover_segments(path);
+            if !segments.is_empty() {
+                let list: Vec<Value> = segments
+                    .iter()
+                    .map(|(p, l)| {
+                        obj(vec![
+                            ("path", n_str(&p.display().to_string())),
+                            ("lines", n_u64(*l)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("segments", Value::Arr(list)));
+            }
+            obj(fields)
+        }
     };
     obj(vec![
         ("schema", n_u64(MANIFEST_SCHEMA)),
@@ -632,6 +741,61 @@ mod tests {
         assert_eq!(v2.get("value").unwrap(), &Value::Null);
         assert!(v2.get("attrs").unwrap().get("note").unwrap().as_str().unwrap().contains('\n'));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn size_cap_rotates_segments_with_monotonic_seq() {
+        let dir = tmp("rotate");
+        std::fs::remove_dir_all(&dir).ok(); // stale segments from prior runs
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.jsonl");
+        {
+            // ~95-byte lines against a 200-byte cap: rotates every 2-3
+            // lines, so 7 lines span at least 3 files.
+            let mut a = Appender::create_with_cap(&path, Some(200)).unwrap();
+            for i in 0..7 {
+                a.counter("c", i, 0.0, i as f64, &[]);
+            }
+            assert!(a.rotations() >= 2, "200B cap must rotate within 7 lines");
+            assert_eq!(a.lines(), 7, "lines() counts across segments");
+        }
+        let segments = discover_segments(&path);
+        assert!(segments.len() >= 2);
+        assert_eq!(segments[0].0, dir.join("stream.1.jsonl"));
+        // Reassemble rotation order + live file: every line present,
+        // seq strictly monotonic across the whole stream.
+        let mut seqs = Vec::new();
+        let mut files: Vec<PathBuf> = segments.iter().map(|(p, _)| p.clone()).collect();
+        files.push(path.clone());
+        for (i, p) in files.iter().enumerate() {
+            let text = std::fs::read_to_string(p).unwrap();
+            if let Some((_, lines)) = segments.get(i) {
+                assert_eq!(text.lines().count() as u64, *lines, "segment line count");
+            }
+            for line in text.lines() {
+                seqs.push(Value::parse(line).unwrap().get("seq").unwrap().as_u64().unwrap());
+            }
+        }
+        assert_eq!(seqs.len(), 7, "no line lost to rotation");
+        assert!(seqs.windows(2).all(|w| w[1] > w[0]), "seq monotonic: {seqs:?}");
+        // The manifest names every rotated segment...
+        let cfg = RunConfig::default();
+        let m = build_manifest(&cfg, &[], None, Some((&path, count_lines(&path))));
+        let parsed = Value::parse(&m.to_json()).unwrap();
+        match parsed.get("telemetry").unwrap().get("segments").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), segments.len()),
+            other => panic!("segments should be an array, got {other:?}"),
+        }
+        // ...and an unrotated stream's manifest carries no segments key
+        // at all (byte-compatible with the pre-rotation format).
+        let plain = dir.join("plain.jsonl");
+        {
+            let mut a = Appender::create(&plain).unwrap();
+            a.counter("c", 0, 0.0, 0.0, &[]);
+        }
+        let m = build_manifest(&cfg, &[], None, Some((&plain, 1)));
+        assert!(m.get("telemetry").unwrap().get("segments").is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

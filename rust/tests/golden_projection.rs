@@ -33,6 +33,7 @@ use profl::store::{ParamStore, Tensor};
 use std::collections::{BTreeMap, HashMap};
 use std::fmt::Write as _;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Dyadic weights + `powf(x, 0) == 1` keep every merge weight exact.
 const ALPHA: f64 = 0.0;
@@ -112,12 +113,14 @@ fn store_for(l: &TrainableLayout) -> ParamStore {
 }
 
 /// The coordinator's version-stamped pending buffer, minus the runtime.
+/// Tensors ride behind an `Arc` exactly like [`PendingUpdate`]'s — the
+/// zero-copy handle the production pending map hands `classify_stale`.
 struct Pending {
     artifact: &'static str,
     prefix_version: u64,
     dispatch_round: usize,
     weight: f64,
-    tensors: Vec<Vec<f32>>,
+    tensors: Arc<Vec<Vec<f32>>>,
 }
 
 /// Run the scripted async×projection scenario and serialize every fleet
@@ -254,7 +257,7 @@ fn scenario(projection: Option<f64>) -> String {
             }
         }
         for (tensors, weight, staleness) in exact {
-            agg.add(&tensors, weight, staleness);
+            agg.add_shared(tensors, weight, staleness);
         }
         for (kept, weight, staleness, extra) in projected {
             agg.add_projected(&kept, weight, staleness, extra);
@@ -269,7 +272,7 @@ fn scenario(projection: Option<f64>) -> String {
                     prefix_version: pv,
                     dispatch_round: round,
                     weight: *weight,
-                    tensors: fill(&lay, *fillv),
+                    tensors: Arc::new(fill(&lay, *fillv)),
                 };
                 pending.insert(w.id, p);
             }

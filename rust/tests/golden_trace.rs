@@ -21,10 +21,13 @@
 //! dropout so no rng draw influences the trace — the whole text is a
 //! pure function of the engine's event algebra.
 
+use profl::aggregate::{Aggregator, SlicedAggregator};
 use profl::fleet::{
     AvailabilityTrace, ChurnPolicy, ClientWork, EventKind, FleetEngine, RoundPlan, RoundPolicy,
 };
 use profl::rng::Rng;
+use profl::store::ParamStore;
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
@@ -202,6 +205,89 @@ fn async_golden_traces() {
     for (cn, churn) in CHURNS {
         let policy = RoundPolicy::Async { buffer_k: 2, max_staleness: 8 };
         check(&format!("async_{cn}"), &trace_for(policy, usize::MAX, churn));
+    }
+}
+
+/// The merge-golden model: three tensors whose flat lengths (7, 12, 33)
+/// make every sharded window straddle at least one tensor boundary.
+const MERGE_NAMES: [&str; 3] = ["a", "b", "c"];
+const MERGE_SHAPES: [&[usize]; 3] = [&[7], &[3, 4], &[33]];
+
+fn merge_names_store() -> (Vec<String>, ParamStore) {
+    let shapes: BTreeMap<String, Vec<usize>> = MERGE_NAMES
+        .iter()
+        .zip(MERGE_SHAPES)
+        .map(|(n, s)| (n.to_string(), s.to_vec()))
+        .collect();
+    let names: Vec<String> = MERGE_NAMES.iter().map(|n| n.to_string()).collect();
+    (names, ParamStore::init(&shapes, 0))
+}
+
+/// One deterministic update set: a single `Rng` stream drawn across the
+/// tensors in order (so the values are a pure function of the seed).
+fn merge_fill(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    MERGE_SHAPES
+        .iter()
+        .map(|s| (0..s.iter().product()).map(|_| rng.f32() - 0.5).collect())
+        .collect()
+}
+
+fn render_merged(tag: &str, names: &[String], store: &ParamStore, out: &mut String) {
+    for n in names {
+        let words: Vec<String> =
+            store.get(n).unwrap().data.iter().map(|v| format!("0x{:08x}", v.to_bits())).collect();
+        writeln!(out, "{tag} {n}: {}", words.join(" ")).unwrap();
+    }
+}
+
+/// Merge a fixed cohort through the plain (full + masked adds) and
+/// sliced aggregators at `threads` merge workers and serialize the
+/// resulting store bits. Every input is a pure function of fixed seeds,
+/// so the whole string is a deterministic merge fingerprint.
+fn merge_trace(threads: usize) -> String {
+    let mut out = String::from("# merge golden v1\n");
+    let (names, mut store) = merge_names_store();
+    let mut agg = Aggregator::new(&names, &store).unwrap();
+    agg.set_merge_threads(threads);
+    for c in 0..6u64 {
+        agg.add_owned(merge_fill(0xA11CE ^ c), (c + 1) as f64);
+    }
+    for k in 0..2u64 {
+        let vals = merge_fill(0xB0B ^ k);
+        let parts: Vec<(usize, Vec<f32>)> = vec![(1, vals[1].clone()), (2, vals[2].clone())];
+        agg.add_masked_owned(parts, 0.5 + k as f64);
+    }
+    agg.finish(&mut store).unwrap();
+    render_merged("plain", &names, &store, &mut out);
+
+    let (names, mut store) = merge_names_store();
+    let mut agg = SlicedAggregator::new(&names, &store).unwrap();
+    agg.set_merge_threads(threads);
+    let full: Vec<Vec<usize>> = MERGE_SHAPES.iter().map(|s| s.to_vec()).collect();
+    for c in 0..4u64 {
+        agg.add_owned(full.clone(), merge_fill(0x51CED ^ c), (c + 1) as f64);
+    }
+    agg.finish(&mut store).unwrap();
+    render_merged("sliced", &names, &store, &mut out);
+    out
+}
+
+#[test]
+fn merge_golden_identical_at_any_merge_thread_count() {
+    // Companion to the planner-thread sweep below, for the sharded
+    // cohort merge (the PR's tentpole): the merged store bits under
+    // plain (full + masked) and sliced aggregation are pinned by a
+    // committed golden, and merge threads 2/4/8 must reproduce the
+    // serial bits exactly — no UPDATE_GOLDEN escape for the sweep.
+    let reference = merge_trace(1);
+    check("merge_threads", &reference);
+    for threads in [2usize, 4, 8] {
+        assert_eq!(
+            merge_trace(threads),
+            reference,
+            "merge trace at {threads} merge threads diverged from serial"
+        );
     }
 }
 

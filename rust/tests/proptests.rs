@@ -7,6 +7,7 @@
 
 use profl::aggregate::{
     staleness_discount, transition_decay, Aggregator, BufferedAggregator, SlicedAggregator,
+    TensorPool,
 };
 use profl::RunConfig;
 use profl::checkpoint::{Checkpoint, Dec, MidPhase};
@@ -30,6 +31,7 @@ use profl::strategy::{
     Phase, StepFeedback, TrainPhase,
 };
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Run `f` over `n` seeded cases; panics include the failing seed.
 fn cases(n: u64, f: impl Fn(&mut Rng)) {
@@ -199,6 +201,197 @@ fn prop_slice_corner_roundtrip() {
         }
         let covered: f32 = wacc.iter().sum();
         assert_eq!(covered as usize, sub.data.len());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Sharded cohort merge ≡ serial (the aggregation determinism contract)
+// ---------------------------------------------------------------------------
+
+/// Multi-tensor store with rng-varied shapes for the merge properties.
+fn rand_multi_store(rng: &mut Rng) -> (Vec<String>, ParamStore) {
+    let mut shapes = BTreeMap::new();
+    for i in 0..1 + rng.below(6) {
+        shapes.insert(format!("t{i}"), rand_shape(rng));
+    }
+    let names: Vec<String> = shapes.keys().cloned().collect();
+    let store = ParamStore::init(&shapes, rng.next_u64());
+    (names, store)
+}
+
+/// Flattened f32 bit patterns of `names` in `store` (exact comparison).
+fn merged_bits(store: &ParamStore, names: &[String]) -> Vec<u32> {
+    names
+        .iter()
+        .flat_map(|n| store.get(n).unwrap().data.iter().map(|v| v.to_bits()))
+        .collect()
+}
+
+#[test]
+fn prop_sharded_merge_bit_identical_to_serial() {
+    // The sharded-replay contract (tentpole): merging the same cohort at
+    // merge threads {1, 4, 8} — through borrowed, pool-recycled owned,
+    // and Arc-shared adds, with masked (projected) contributions mixed
+    // in — produces bit-identical stores.
+    cases(60, |rng| {
+        let (names, base) = rand_multi_store(rng);
+        let lens: Vec<usize> = names.iter().map(|n| base.get(n).unwrap().data.len()).collect();
+        enum Add {
+            Full(Vec<Vec<f32>>, f64),
+            Masked(Vec<(usize, Vec<f32>)>, f64),
+        }
+        // A randomized add script, fixed up front so every replay sees
+        // the identical op order (op order is part of the contract).
+        let mut script = Vec::new();
+        for _ in 0..1 + rng.below(6) {
+            let tensors: Vec<Vec<f32>> =
+                lens.iter().map(|&l| (0..l).map(|_| rng.normal()).collect()).collect();
+            script.push(Add::Full(tensors, rng.uniform(0.1, 10.0)));
+            if rng.below(3) == 0 {
+                let mut parts = Vec::new();
+                for (i, &l) in lens.iter().enumerate() {
+                    if rng.below(2) == 0 {
+                        parts.push((i, (0..l).map(|_| rng.normal()).collect::<Vec<f32>>()));
+                    }
+                }
+                if !parts.is_empty() {
+                    script.push(Add::Masked(parts, rng.uniform(0.1, 5.0)));
+                }
+            }
+        }
+        // mode 0: borrowed adds; 1: pool-recycled owned; 2: Arc-shared.
+        let run = |threads: usize, mode: usize| -> Vec<u32> {
+            let mut store = base.clone();
+            let mut pool = TensorPool::new(4);
+            let mut agg = Aggregator::new(&names, &store).unwrap();
+            agg.set_merge_threads(threads);
+            for add in &script {
+                match add {
+                    Add::Full(tensors, w) => match mode {
+                        0 => agg.add(tensors, *w),
+                        1 => {
+                            let mut bufs = pool.acquire();
+                            bufs.clear();
+                            bufs.extend(tensors.iter().cloned());
+                            agg.add_owned(bufs, *w);
+                        }
+                        _ => agg.add_shared(Arc::new(tensors.clone()), *w),
+                    },
+                    Add::Masked(parts, w) => agg.add_masked(parts, *w),
+                }
+            }
+            let recycle = if mode == 1 { Some(&mut pool) } else { None };
+            let stats = agg.finish_stats(&mut store, recycle).unwrap();
+            assert!(stats.workers >= 1 && stats.workers <= threads.max(1), "worker count");
+            let u = stats.utilization();
+            assert!((0.0..=1.0).contains(&u), "utilization {u} outside [0, 1]");
+            merged_bits(&store, &names)
+        };
+        let reference = run(1, 0);
+        for threads in [1usize, 4, 8] {
+            for mode in 0..3 {
+                assert_eq!(run(threads, mode), reference, "threads={threads} mode={mode}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_buffered_sharded_merge_bit_identical_to_serial() {
+    // Same contract through the async buffer: staleness discounts and
+    // transition-decayed projected adds do not disturb the sharded
+    // replay's bit identity at any merge thread count.
+    cases(60, |rng| {
+        let (names, base) = rand_multi_store(rng);
+        let alpha = rng.uniform(0.0, 2.0);
+        let lens: Vec<usize> = names.iter().map(|n| base.get(n).unwrap().data.len()).collect();
+        enum Add {
+            Full(Vec<Vec<f32>>, f64, usize),
+            Projected(Vec<(usize, Vec<f32>)>, f64, usize, f64),
+        }
+        let mut script = Vec::new();
+        for _ in 0..1 + rng.below(6) {
+            let tensors: Vec<Vec<f32>> =
+                lens.iter().map(|&l| (0..l).map(|_| rng.normal()).collect()).collect();
+            script.push(Add::Full(tensors, rng.uniform(0.1, 10.0), rng.below(6)));
+            if rng.below(3) == 0 {
+                let mut parts = Vec::new();
+                for (i, &l) in lens.iter().enumerate() {
+                    if rng.below(2) == 0 {
+                        parts.push((i, (0..l).map(|_| rng.normal()).collect::<Vec<f32>>()));
+                    }
+                }
+                if !parts.is_empty() {
+                    let (w, s, d) =
+                        (rng.uniform(0.1, 5.0), rng.below(6), rng.uniform(0.1, 1.0));
+                    script.push(Add::Projected(parts, w, s, d));
+                }
+            }
+        }
+        let run = |threads: usize, shared: bool| -> Vec<u32> {
+            let mut store = base.clone();
+            let mut agg = BufferedAggregator::new(&names, &store, alpha).unwrap();
+            agg.set_merge_threads(threads);
+            for add in &script {
+                match add {
+                    Add::Full(tensors, w, s) => {
+                        if shared {
+                            agg.add_shared(Arc::new(tensors.clone()), *w, *s);
+                        } else {
+                            agg.add(tensors, *w, *s);
+                        }
+                    }
+                    Add::Projected(parts, w, s, d) => agg.add_projected(parts, *w, *s, *d),
+                }
+            }
+            agg.finish_stats(&mut store, None).unwrap();
+            merged_bits(&store, &names)
+        };
+        let reference = run(1, false);
+        for threads in [1usize, 4, 8] {
+            for shared in [false, true] {
+                assert_eq!(run(threads, shared), reference, "threads={threads} shared={shared}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sliced_sharded_merge_bit_identical_to_serial() {
+    // The HeteroFL arena shards at whole-tensor boundaries: rng-varied
+    // corner slices × weights merge to bit-identical stores at any
+    // merge thread count (including counts that don't divide the
+    // tensor list evenly).
+    cases(60, |rng| {
+        let (names, base) = rand_multi_store(rng);
+        let shapes: Vec<Vec<usize>> =
+            names.iter().map(|n| base.get(n).unwrap().shape.clone()).collect();
+        let mut script: Vec<(Vec<Vec<usize>>, Vec<Vec<f32>>, f64)> = Vec::new();
+        for _ in 0..1 + rng.below(6) {
+            let mut subs = Vec::new();
+            let mut tensors = Vec::new();
+            for shape in &shapes {
+                let sub: Vec<usize> = shape.iter().map(|&d| 1 + rng.below(d)).collect();
+                let full = Tensor { shape: shape.clone(), data: rand_tensor(rng, shape) };
+                tensors.push(full.slice_corner(&sub).unwrap().data);
+                subs.push(sub);
+            }
+            script.push((subs, tensors, rng.uniform(0.1, 10.0)));
+        }
+        let run = |threads: usize| -> Vec<u32> {
+            let mut store = base.clone();
+            let mut agg = SlicedAggregator::new(&names, &store).unwrap();
+            agg.set_merge_threads(threads);
+            for (subs, tensors, w) in &script {
+                agg.add_owned(subs.clone(), tensors.clone(), *w);
+            }
+            agg.finish_stats(&mut store).unwrap();
+            merged_bits(&store, &names)
+        };
+        let reference = run(1);
+        for threads in [3usize, 4, 8] {
+            assert_eq!(run(threads), reference, "threads={threads}");
+        }
     });
 }
 

@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Warmup-aware A/B harness around benches/fleet_scale.rs.
+#
+# Runs the bench once with a *pinned* warmup (identical cold-path
+# treatment on every invocation, so two runs of this script are directly
+# comparable), then reports the two A/B matrices the sharded-merge work
+# cares about straight from the fresh JSON document:
+#
+#   serial-vs-sharded : mean-ns speedup of every threads=N row over its
+#                       threads=1 twin, fleet rows and merge rows alike
+#   pooled-vs-cloning : merge-pooled vs merge-cloning per thread column —
+#                       wall-time ratio plus allocs/round reduction
+#
+# With --baseline FILE it finishes by delegating to perf_compare.sh,
+# optionally gated with --max-regress PCT (CI runs this advisory-only).
+#
+# usage: scripts/perf_ab.sh [--smoke] [--warmup N] [--out FILE]
+#                           [--baseline FILE] [--max-regress PCT]
+set -euo pipefail
+
+smoke=""
+warmup=3
+out=BENCH_fleet.json
+baseline=""
+max_regress=""
+while [[ $# -gt 0 ]]; do
+    case $1 in
+        --smoke) smoke=1; shift ;;
+        --warmup) warmup=$2; shift 2 ;;
+        --out) out=$2; shift 2 ;;
+        --baseline) baseline=$2; shift 2 ;;
+        --max-regress) max_regress=$2; shift 2 ;;
+        *) echo "unknown option $1" >&2; exit 2 ;;
+    esac
+done
+
+bench_args=(--warmup "$warmup" --json "$out")
+if [[ -n "$smoke" ]]; then
+    bench_args+=(--smoke)
+fi
+cargo bench --bench fleet_scale -- "${bench_args[@]}"
+
+python3 - "$out" <<'PY'
+import json
+import sys
+
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+if doc.get("bench") != "fleet_scale":
+    sys.exit(f"{sys.argv[1]}: not a fleet_scale document")
+
+entries = {}
+for e in doc["entries"]:
+    key = (int(e["fleet"]), e["policy"], e["churn"], int(e.get("threads", 1)))
+    entries[key] = e
+
+print("\nA/B: serial-vs-sharded (speedup of threads=N over threads=1)")
+for (fleet, policy, churn, threads), e in sorted(entries.items()):
+    if threads == 1:
+        continue
+    base = entries.get((fleet, policy, churn, 1))
+    if not base or not e["mean_ns"]:
+        continue
+    s = base["mean_ns"] / e["mean_ns"]
+    print(f"  fleet={fleet:>9} {policy:<13} {churn:<6} threads={threads}: {s:.2f}x")
+
+merge_threads = sorted(
+    {t for (_, p, _, t) in entries if p == "merge-pooled"}
+)
+if merge_threads:
+    print("\nA/B: pooled-vs-cloning (cohort-merge rows)")
+for t in merge_threads:
+    pooled = next(e for (f, p, c, th), e in entries.items()
+                  if p == "merge-pooled" and th == t)
+    cloning = next(e for (f, p, c, th), e in entries.items()
+                   if p == "merge-cloning" and th == t)
+    ratio = cloning["mean_ns"] / pooled["mean_ns"] if pooled["mean_ns"] else 0.0
+    pa, ca = pooled.get("allocs_per_round"), cloning.get("allocs_per_round")
+    allocs = "-" if pa is None or ca is None else f"{ca:.0f} -> {pa:.0f}"
+    print(f"  threads={t}: cloning/pooled wall {ratio:.2f}x, allocs/round {allocs}")
+PY
+
+if [[ -n "$baseline" ]]; then
+    compare_args=("$baseline" "$out")
+    if [[ -n "$max_regress" ]]; then
+        compare_args+=(--max-regress "$max_regress")
+    fi
+    "$(dirname "$0")/perf_compare.sh" "${compare_args[@]}"
+fi
